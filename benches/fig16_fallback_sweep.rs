@@ -1,0 +1,71 @@
+//! Fig. 16 / Appendix A.1 — fallback-heuristic percentage sweep: MAPE vs
+//! whole-graph ground truth and estimation runtime for 0.1%, 1%, 5% of k.
+use acadl_perf::aidg::{estimate_layer, evaluate_whole, FixedPointConfig};
+use acadl_perf::accel::{Systolic, SystolicConfig};
+use acadl_perf::bench_harness::{fmt_dur, section};
+use acadl_perf::dnn::zoo;
+use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
+use acadl_perf::metrics::mape;
+use acadl_perf::report::{Csv, Table};
+use std::sync::Arc;
+
+fn main() {
+    section("Fig. 16 — fallback percentage sweep (Appendix A.1)");
+    let full = std::env::var_os("ACADL_BENCH_FULL").is_some();
+    let sizes: &[u32] = if full { &[2, 4, 6, 8, 16] } else { &[2, 4, 8] };
+    let net = zoo::tc_resnet8();
+    let mut t = Table::new(
+        "Fig. 16 — MAPE and runtime vs fallback fraction (TC-ResNet8)",
+        &["size", "0.1% MAPE", "0.1% time", "1% MAPE", "1% time", "5% MAPE", "5% time"],
+    );
+    let mut csv = Csv::new("fig16_fallback_sweep", &["size", "frac", "mape", "runtime_us"]);
+    for &s in sizes {
+        let sys = Arc::new(Systolic::new(SystolicConfig::new(s, s)).unwrap());
+        let mapper = ScalarMapper::new(sys);
+        let mapped = mapper.map_network(&net).unwrap();
+        // whole-graph ground truth per layer
+        let mut truth = Vec::new();
+        for ml in &mapped {
+            if ml.fused {
+                truth.push(0.0);
+                continue;
+            }
+            let mut c = 0u64;
+            for k in &ml.kernels {
+                c += evaluate_whole(mapper.diagram(), k).unwrap().cycles;
+            }
+            truth.push(c as f64);
+        }
+        let mut cells = vec![format!("{s}x{s}")];
+        for frac in [0.001, 0.01, 0.05] {
+            let cfg = FixedPointConfig { fallback_frac: frac, keep_trace: false };
+            let t0 = std::time::Instant::now();
+            let mut est = Vec::new();
+            for ml in &mapped {
+                if ml.fused {
+                    est.push(0.0);
+                    continue;
+                }
+                let mut c = 0u64;
+                for k in &ml.kernels {
+                    c += estimate_layer(mapper.diagram(), k, &cfg).unwrap().cycles;
+                }
+                est.push(c as f64);
+            }
+            let dt = t0.elapsed();
+            let m = mape(&truth, &est);
+            cells.push(format!("{m:.2}%"));
+            cells.push(fmt_dur(dt));
+            csv.row(&[
+                s.to_string(),
+                frac.to_string(),
+                format!("{m:.4}"),
+                dt.as_micros().to_string(),
+            ]);
+        }
+        t.row(&cells);
+    }
+    t.emit("fig16_fallback_sweep").unwrap();
+    csv.finish().unwrap();
+    println!("paper: 1% is the accuracy/runtime sweet spot");
+}

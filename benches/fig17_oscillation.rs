@@ -1,0 +1,54 @@
+//! Fig. 17 / Appendix A.2 — Δt_iteration and Δt_overlap traces of selected
+//! TC-ResNet8 layers on 2×2 and 4×4 systolic arrays, with the fixed-point
+//! stop marker k_stop.
+use acadl_perf::bench_harness::section;
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::{dt_iteration_series, dt_overlap_series, systolic_sweep_point};
+use acadl_perf::metrics::sample_variance;
+use acadl_perf::report::{Csv, Table};
+
+fn main() {
+    section("Fig. 17 — Δt_iteration / Δt_overlap traces (Appendix A.2)");
+    let net = zoo::tc_resnet8();
+    let picks = ["conv1", "fc", "clip1", "block1_add", "block3_add"];
+    let mut t = Table::new(
+        "Fig. 17 — per-layer oscillation (variance beyond k_stop)",
+        &["size", "layer", "k", "k_stop", "Var(Δt_iter)", "Var(Δt_overlap)"],
+    );
+    let mut csv = Csv::new("fig17_traces", &["size", "layer", "iter", "dt_iteration", "dt_overlap"]);
+    for s in [2u32, 4] {
+        let p = systolic_sweep_point(s, s, &net, true).unwrap();
+        for l in &p.layers {
+            if l.fused || !picks.contains(&l.name.as_str()) {
+                continue;
+            }
+            // analyze the compute kernel (last trace)
+            let trace = l.traces.last().unwrap();
+            let dt = dt_iteration_series(trace);
+            let ov = dt_overlap_series(trace);
+            let k_stop = *l.k_stops.last().unwrap();
+            let s0 = (k_stop as usize).min(dt.len().saturating_sub(1));
+            t.row(&[
+                format!("{s}x{s}"),
+                l.name.clone(),
+                dt.len().to_string(),
+                k_stop.to_string(),
+                format!("{:.2}", sample_variance(&dt[s0..])),
+                format!("{:.2}", sample_variance(&ov[s0.min(ov.len())..])),
+            ]);
+            let take = dt.len().min(256);
+            for i in 0..take {
+                csv.row(&[
+                    s.to_string(),
+                    l.name.clone(),
+                    i.to_string(),
+                    format!("{}", dt[i]),
+                    if i < ov.len() { format!("{}", ov[i]) } else { String::new() },
+                ]);
+            }
+        }
+    }
+    t.emit("fig17_oscillation").unwrap();
+    csv.finish().unwrap();
+    println!("paper: non-optimal mappings (adds) oscillate more; Δt grows with array depth");
+}

@@ -1,0 +1,46 @@
+//! §Perf — AIDG evaluator throughput and end-to-end estimation latency
+//! microbenchmarks (the EXPERIMENTS.md §Perf numbers).
+use std::sync::Arc;
+
+use acadl_perf::accel::{Systolic, SystolicConfig};
+use acadl_perf::aidg::{estimate_layer, Evaluator, FixedPointConfig};
+use acadl_perf::bench_harness::{bench, section};
+use acadl_perf::dnn::zoo;
+use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
+
+fn main() {
+    section("perf — evaluator throughput (whole-graph sweep)");
+    let sys = Arc::new(Systolic::new(SystolicConfig::new(4, 4)).unwrap());
+    let mapper = ScalarMapper::new(Arc::clone(&sys) as Arc<Systolic>);
+    let net = zoo::tc_resnet8();
+    let mapped = mapper.map_network(&net).unwrap();
+    let kern = mapped
+        .iter()
+        .filter(|m| !m.fused)
+        .flat_map(|m| &m.kernels)
+        .max_by_key(|k| k.total_insts())
+        .unwrap();
+    let iters = kern.k.min(20_000);
+    let insts = iters * kern.insts_per_iter as u64;
+    let st = bench(&format!("evaluator/{}x{} {} insts", 4, 4, insts), 1, 5, || {
+        let mut ev = Evaluator::new(mapper.diagram());
+        ev.run(kern, 0..iters).unwrap();
+    });
+    println!(
+        "  => {:.2} M instructions/s\n",
+        insts as f64 / st.median.as_secs_f64() / 1e6
+    );
+
+    section("perf — end-to-end estimation latency per network");
+    for name in ["tc_resnet8", "efficientnet_reduced"] {
+        let net = zoo::by_name(name).unwrap();
+        let mapped = mapper.map_network(&net).unwrap();
+        bench(&format!("estimate/{name} on systolic4x4"), 1, 5, || {
+            for ml in &mapped {
+                for k in &ml.kernels {
+                    estimate_layer(mapper.diagram(), k, &FixedPointConfig::default()).unwrap();
+                }
+            }
+        });
+    }
+}

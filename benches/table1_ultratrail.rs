@@ -1,0 +1,39 @@
+//! Table 1 — TC-ResNet8 mapped onto UltraTrail: AIDG vs refined roofline vs
+//! regression constant vs the DES ground truth (paper §7.1).
+use std::sync::Arc;
+
+use acadl_perf::accel::{UltraTrail, UltraTrailConfig};
+use acadl_perf::bench_harness::{bench, section};
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::Comparison;
+use acadl_perf::mapping::{tensor_op::TensorOpMapper, Mapper};
+
+fn main() {
+    section("Table 1 — TC-ResNet8 on UltraTrail");
+    let net = zoo::tc_resnet8();
+    let mapper = TensorOpMapper::new(Arc::new(UltraTrail::new(UltraTrailConfig::default()).unwrap()));
+    let mapped = mapper.map_network(&net).unwrap();
+    let c = Comparison::run(&mapper, &net, &mapped, None).unwrap();
+    c.table("Table 1 — latency estimators, TC-ResNet8 on UltraTrail")
+        .emit("table1_ultratrail")
+        .unwrap();
+    println!(
+        "paper: AIDG 22 484 (22 ms) vs Xcelium 22 481; roofline 24 168 (+7.5% PE, 6.37% MAPE)\n"
+    );
+    // estimation-runtime microbenchmark (the paper's 22 ms column)
+    bench("table1/aidg_estimate_runtime", 2, 10, || {
+        let mapper =
+            TensorOpMapper::new(Arc::new(UltraTrail::new(UltraTrailConfig::default()).unwrap()));
+        let mapped = mapper.map_network(&net).unwrap();
+        for ml in &mapped {
+            for k in &ml.kernels {
+                acadl_perf::aidg::estimate_layer(
+                    mapper.diagram(),
+                    k,
+                    &acadl_perf::aidg::FixedPointConfig::default(),
+                )
+                .unwrap();
+            }
+        }
+    });
+}

@@ -1,0 +1,36 @@
+//! Table 4 — EfficientNet on the 16×16 Gemmini (paper §7.2), reduced
+//! variant vs DES plus the full-size AIDG-only estimate.
+use std::sync::Arc;
+
+use acadl_perf::accel::{Gemmini, GemminiConfig};
+use acadl_perf::bench_harness::section;
+use acadl_perf::coordinator::estimate_network;
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::Comparison;
+use acadl_perf::mapping::{gemm_tile::GemmTileMapper, Mapper};
+use acadl_perf::report::fmt_cycles;
+
+fn main() {
+    section("Table 4 — EfficientNet (reduced) on 16×16 Gemmini vs DES");
+    let mapper = GemmTileMapper::new(Arc::new(Gemmini::new(GemminiConfig::default()).unwrap()));
+    let net = zoo::efficientnet_reduced();
+    let mapped = mapper.map_network(&net).unwrap();
+    let c = Comparison::run(&mapper, &net, &mapped, Some(16)).unwrap();
+    c.table("Table 4 — EfficientNet (56×56 reduced) on 16×16 Gemmini")
+        .emit("table4_gemmini_efficientnet")
+        .unwrap();
+    println!("paper (224×224, vs Verilator 11.9 h): AIDG −0.56% PE, 7.51% MAPE in 17.3 s\n");
+
+    section("Table 4b — full-size EfficientNet, AIDG estimate only");
+    let full = zoo::efficientnet();
+    let e = estimate_network(&mapper, &full, &acadl_perf::aidg::FixedPointConfig::default())
+        .unwrap();
+    println!(
+        "efficientnet: {} cycles | {} of {} iterations evaluated ({:.4}%) | {}",
+        fmt_cycles(e.total_cycles()),
+        e.evaluated_iters(),
+        e.total_iters(),
+        100.0 * e.evaluated_iters() as f64 / e.total_iters().max(1) as f64,
+        acadl_perf::bench_harness::fmt_dur(e.runtime),
+    );
+}

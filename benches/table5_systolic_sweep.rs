@@ -1,0 +1,75 @@
+//! Table 5 — AIDG fixed-point evaluation vs refined roofline for varying
+//! systolic array sizes (paper §7.3). As in the paper, the whole-graph AIDG
+//! evaluation is the measured-cycles ground truth.
+//!
+//! Default sweep: TC-ResNet8 on 2×2…16×16 and the reduced EfficientNet /
+//! AlexNet on 4×4. Set `ACADL_BENCH_FULL=1` for the full grid (minutes).
+use acadl_perf::bench_harness::{fmt_dur, section};
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::systolic_sweep_point;
+use acadl_perf::report::{fmt_cycles, Csv, Table};
+
+fn main() {
+    let full = std::env::var_os("ACADL_BENCH_FULL").is_some();
+    section("Table 5 — systolic array sweep (fixed point vs roofline vs whole graph)");
+    let sizes: &[u32] = if full { &[2, 4, 6, 8, 16] } else { &[2, 4, 6, 8, 16] };
+    let mut nets = vec![("tc_resnet8", sizes.to_vec())];
+    if full {
+        nets.push(("alexnet_reduced", sizes.to_vec()));
+        nets.push(("efficientnet_reduced", sizes.to_vec()));
+    } else {
+        nets.push(("efficientnet_reduced", vec![4]));
+        nets.push(("alexnet_reduced", vec![4]));
+    }
+
+    let mut t = Table::new(
+        "Table 5 — AIDG fixed point vs refined roofline, varying systolic sizes",
+        &[
+            "size", "DNN", "Σ iters", "Σ insts", "eval iters", "runtime",
+            "est cycles", "PE", "MAPE", "roofline", "roof PE", "roof MAPE", "meas cycles",
+        ],
+    );
+    let mut csv = Csv::new(
+        "table5_systolic_sweep",
+        &["size", "dnn", "iters", "insts", "eval_iters", "est", "pe", "mape", "roof", "roof_pe", "roof_mape", "measured"],
+    );
+    for (name, sizes) in &nets {
+        let net = zoo::by_name(name).unwrap();
+        for &s in sizes {
+            let p = systolic_sweep_point(s, s, &net, false).unwrap();
+            t.row(&[
+                format!("{s}x{s}"),
+                name.to_string(),
+                p.total_iters().to_string(),
+                p.total_insts().to_string(),
+                format!("{} ({:.4}%)", p.evaluated_iters(),
+                    100.0 * p.evaluated_iters() as f64 / p.total_iters().max(1) as f64),
+                fmt_dur(p.fp_runtime),
+                fmt_cycles(p.total_est()),
+                format!("{:.2}%", p.pe_est()),
+                format!("{:.2}%", p.mape_est()),
+                fmt_cycles(p.total_roofline() as u64),
+                format!("{:.2}%", p.pe_roofline()),
+                format!("{:.2}%", p.mape_roofline()),
+                fmt_cycles(p.total_whole()),
+            ]);
+            csv.row(&[
+                s.to_string(), name.to_string(), p.total_iters().to_string(),
+                p.total_insts().to_string(), p.evaluated_iters().to_string(),
+                p.total_est().to_string(), format!("{:.4}", p.pe_est()),
+                format!("{:.4}", p.mape_est()), format!("{:.0}", p.total_roofline()),
+                format!("{:.4}", p.pe_roofline()), format!("{:.4}", p.mape_roofline()),
+                p.total_whole().to_string(),
+            ]);
+            println!(
+                "  {s}x{s} {name}: est {} vs measured {} (whole-graph {})",
+                fmt_cycles(p.total_est()),
+                fmt_cycles(p.total_whole()),
+                fmt_dur(p.whole_runtime)
+            );
+        }
+    }
+    t.emit("table5_systolic_sweep").unwrap();
+    csv.finish().unwrap();
+    println!("paper best case: 154 evaluated iterations for 4.19e9 instructions (AlexNet, 2×2)");
+}

@@ -1,0 +1,53 @@
+//! Table 6 — mean sample variance of Δt_iteration / Δt_overlap after the
+//! fixed-point stop, and the fallback-heuristic usage rate, per systolic
+//! mapping (paper Appendix A.2).
+use acadl_perf::bench_harness::section;
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::{dt_iteration_series, dt_overlap_series, systolic_sweep_point};
+use acadl_perf::metrics::{mean, sample_variance};
+use acadl_perf::report::Table;
+
+fn main() {
+    section("Table 6 — Δt variance after k_stop + fallback usage");
+    let full = std::env::var_os("ACADL_BENCH_FULL").is_some();
+    let sizes: &[u32] = if full { &[2, 4, 6, 8, 16] } else { &[2, 4, 8] };
+    let nets: &[&str] = if full {
+        &["tc_resnet8", "alexnet_reduced", "efficientnet_reduced"]
+    } else {
+        &["tc_resnet8"]
+    };
+    let mut t = Table::new(
+        "Table 6 — MAPE, mean Var(Δt_iteration), mean Var(Δt_overlap), fallback share",
+        &["size", "DNN", "MAPE", "Var(Δt_iter)", "Var(Δt_overlap)", "fallback layers"],
+    );
+    for name in nets {
+        let net = zoo::by_name(name).unwrap();
+        for &s in sizes {
+            let p = systolic_sweep_point(s, s, &net, true).unwrap();
+            // per-layer variance from k_stop to k, averaged over layers
+            let mut v_it = Vec::new();
+            let mut v_ov = Vec::new();
+            for l in p.layers.iter().filter(|l| !l.fused) {
+                for (trace, &k_stop) in l.traces.iter().zip(&l.k_stops) {
+                    let dt = dt_iteration_series(trace);
+                    let ov = dt_overlap_series(trace);
+                    let s0 = (k_stop as usize).min(dt.len().saturating_sub(1));
+                    v_it.push(sample_variance(&dt[s0..]));
+                    if s0 < ov.len() {
+                        v_ov.push(sample_variance(&ov[s0..]));
+                    }
+                }
+            }
+            t.row(&[
+                format!("{s}x{s}"),
+                name.to_string(),
+                format!("{:.2}%", p.mape_est()),
+                format!("{:.2}", mean(&v_it)),
+                format!("{:.2}", mean(&v_ov)),
+                format!("{:.1}%", p.fallback_pct()),
+            ]);
+        }
+    }
+    t.emit("table6_variance").unwrap();
+    println!("paper: variance grows with array size; fallback share grows with array size");
+}

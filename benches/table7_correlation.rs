@@ -1,0 +1,57 @@
+//! Table 7 — Pearson correlation between the per-mapping MAPE and the mean
+//! Δt variances / fallback share (paper Appendix A.2).
+use acadl_perf::bench_harness::section;
+use acadl_perf::dnn::zoo;
+use acadl_perf::expt::{dt_iteration_series, dt_overlap_series, systolic_sweep_point};
+use acadl_perf::metrics::{mean, pearson, sample_variance};
+use acadl_perf::report::Table;
+
+fn main() {
+    section("Table 7 — ρ(MAPE, variance) per DNN across systolic sizes");
+    let full = std::env::var_os("ACADL_BENCH_FULL").is_some();
+    let sizes: &[u32] = if full { &[2, 4, 6, 8, 16] } else { &[2, 4, 6, 8] };
+    let nets: &[&str] = if full {
+        &["tc_resnet8", "alexnet_reduced", "efficientnet_reduced"]
+    } else {
+        &["tc_resnet8", "efficientnet_reduced"]
+    };
+    let mut t = Table::new(
+        "Table 7 — Pearson ρ",
+        &["DNN", "ρ(MAPE, Var Δt_iter)", "ρ(MAPE, Var Δt_overlap)", "ρ(MAPE, fallback%)"],
+    );
+    for name in nets {
+        let net = zoo::by_name(name).unwrap();
+        let mut mapes = Vec::new();
+        let mut vits = Vec::new();
+        let mut vovs = Vec::new();
+        let mut fbs = Vec::new();
+        for &s in sizes {
+            let p = systolic_sweep_point(s, s, &net, true).unwrap();
+            let mut v_it = Vec::new();
+            let mut v_ov = Vec::new();
+            for l in p.layers.iter().filter(|l| !l.fused) {
+                for (trace, &k_stop) in l.traces.iter().zip(&l.k_stops) {
+                    let dt = dt_iteration_series(trace);
+                    let ov = dt_overlap_series(trace);
+                    let s0 = (k_stop as usize).min(dt.len().saturating_sub(1));
+                    v_it.push(sample_variance(&dt[s0..]));
+                    if s0 < ov.len() {
+                        v_ov.push(sample_variance(&ov[s0..]));
+                    }
+                }
+            }
+            mapes.push(p.mape_est());
+            vits.push(mean(&v_it));
+            vovs.push(mean(&v_ov));
+            fbs.push(p.fallback_pct());
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", pearson(&mapes, &vits)),
+            format!("{:.2}", pearson(&mapes, &vovs)),
+            format!("{:.2}", pearson(&mapes, &fbs)),
+        ]);
+    }
+    t.emit("table7_correlation").unwrap();
+    println!("paper: strong ρ for TC-ResNet8/AlexNet variance; EfficientNet correlates with fallback share");
+}

@@ -1,0 +1,87 @@
+//! Gemmini tiled-GEMM estimation (paper §7.2, Tables 2–4): decoupled
+//! access-execute modeling with the linear DRAM burst latency model.
+//!
+//! Estimates TC-ResNet8 and the reduced EfficientNet on a 16×16 Gemmini,
+//! with the DES cross-check on TC-ResNet8 and the Timeloop-like +
+//! refined-roofline baselines (including the simplex bandwidth fit the
+//! paper performed against Verilator measurements).
+//!
+//! ```text
+//! cargo run --release --example gemmini_estimate
+//! ```
+
+use std::sync::Arc;
+
+use acadl_perf::accel::{Gemmini, GemminiConfig};
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::baselines::{fit_bandwidths, roofline_network};
+use acadl_perf::coordinator::estimate_network;
+use acadl_perf::dnn::zoo;
+use acadl_perf::mapping::{gemm_tile::GemmTileMapper, Mapper};
+use acadl_perf::metrics::{mape, percentage_error};
+use acadl_perf::report::{fmt_cycles, Table};
+use acadl_perf::{sim, Result};
+
+fn main() -> Result<()> {
+    let g = Arc::new(Gemmini::new(GemminiConfig::default())?);
+    let mapper = GemmTileMapper::new(Arc::clone(&g));
+
+    // ---- TC-ResNet8: full estimator comparison -----------------------------
+    let net = zoo::tc_resnet8();
+    let est = estimate_network(&mapper, &net, &FixedPointConfig::default())?;
+    let mapped = mapper.map_network(&net)?;
+
+    let mut des_layers = Vec::new();
+    for ml in &mapped {
+        if ml.fused {
+            des_layers.push(0.0);
+        } else {
+            des_layers.push(sim::simulate_layer(mapper.diagram(), &ml.kernels)?.cycles as f64);
+        }
+    }
+    let des_total: f64 = des_layers.iter().sum();
+
+    // Timeloop-like model with simplex-fitted bandwidths (paper §7.2)
+    let tl = fit_bandwidths(g.cfg.dim, &net.layers, &des_layers)?;
+    let tl_layers = tl.network_cycles(&net.layers);
+    let roof = roofline_network(&net.layers, &mapped, &mapper.hw_features());
+
+    let mut t = Table::new(
+        "Table 2 — TC-ResNet8 on 16×16 Gemmini",
+        &["estimator", "estimated cycles", "PE", "MAPE"],
+    );
+    let rows: [(&str, &[f64]); 3] = [
+        ("AIDG fixed point", &est.layer_cycles()),
+        ("Refined roofline [28]", &roof),
+        ("Timeloop-like [21] (simplex-fit)", &tl_layers),
+    ];
+    for (name, layers) in rows {
+        let total: f64 = layers.iter().sum();
+        t.row(&[
+            name.into(),
+            fmt_cycles(total as u64),
+            format!("{:.2}%", percentage_error(total, des_total)),
+            format!("{:.2}%", mape(&des_layers, layers)),
+        ]);
+    }
+    t.row(&[
+        "DES (RTL stand-in)".into(),
+        fmt_cycles(des_total as u64),
+        "ground truth".into(),
+        "".into(),
+    ]);
+    println!("{}", t.to_markdown());
+
+    // ---- EfficientNet (reduced): estimate-only ------------------------------
+    let eff = zoo::efficientnet_reduced();
+    let e2 = estimate_network(&mapper, &eff, &FixedPointConfig::default())?;
+    println!(
+        "{}: {} cycles | {} of {} iterations evaluated | {:.1} ms",
+        e2.network,
+        fmt_cycles(e2.total_cycles()),
+        e2.evaluated_iters(),
+        e2.total_iters(),
+        e2.runtime.as_secs_f64() * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Plasticine-derived design-space exploration (paper §7.4, Fig. 15).
+//!
+//! Sweeps grid rows × cols × PCU GEMM tile size for TC-ResNet8, pre-filters
+//! with the AOT-compiled XLA roofline estimator (falling back to the native
+//! mirror when `make artifacts` hasn't run), and ranks survivors with the
+//! accurate AIDG pass on the worker pool.
+//!
+//! ```text
+//! cargo run --release --example plasticine_dse
+//! ```
+
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{explore, DseSpec, Pool, RooflineBackend};
+use acadl_perf::report::{fmt_cycles, Table};
+use acadl_perf::Result;
+
+fn main() -> Result<()> {
+    let spec = DseSpec {
+        rows: vec![2, 3, 4],
+        cols: vec![2, 4, 6],
+        tiles: vec![4, 8, 16],
+        network: "tc_resnet8".into(),
+        keep_frac: 0.5,
+        fp: FixedPointConfig::default(),
+    };
+    let backend = RooflineBackend::auto();
+    println!(
+        "roofline pre-filter backend: {}",
+        match &backend {
+            RooflineBackend::Xla(_) => "XLA (AOT artifact)",
+            RooflineBackend::Native => "native mirror (run `make artifacts` for XLA)",
+        }
+    );
+    let mut pool = Pool::new(0);
+    let t0 = std::time::Instant::now();
+    let points = explore(&spec, &mut pool, &backend)?;
+    let mut t = Table::new(
+        format!(
+            "Fig. 15 DSE — {} over {} design points ({:.1} s)",
+            spec.network,
+            points.len(),
+            t0.elapsed().as_secs_f64()
+        ),
+        &["rows", "cols", "tile", "roofline cycles", "AIDG cycles"],
+    );
+    for p in &points {
+        t.row(&[
+            p.rows.to_string(),
+            p.cols.to_string(),
+            p.tile.to_string(),
+            fmt_cycles(p.roofline_cycles as u64),
+            p.aidg_cycles.map(fmt_cycles).unwrap_or_else(|| "filtered out".into()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    if let Some(best) = points.first() {
+        println!(
+            "best design: {}x{} grid, tile {} — {} cycles",
+            best.rows,
+            best.cols,
+            best.tile,
+            best.aidg_cycles.map(fmt_cycles).unwrap_or_default()
+        );
+    }
+    Ok(())
+}

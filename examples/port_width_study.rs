@@ -1,0 +1,63 @@
+//! Memory port-width case study (paper §7.3, Fig. 13): a 12×12 systolic
+//! array with varying data-memory port width, mapping
+//!
+//! - (a) a *divisible* convolution (C=12, K=72): all rows/columns utilized;
+//! - (b) a *non-divisible* convolution (C=20, K=70): the mapper unrolls
+//!   10×10, leaving two idle rows and columns.
+//!
+//! The AIDG fixed-point evaluation captures the stepwise latency plateaus
+//! (7..11 port widths need the same two transactions for 12 weights) and
+//! the sub-optimal-mapping behavior the refined roofline misses.
+//!
+//! ```text
+//! cargo run --release --example port_width_study
+//! ```
+
+use std::sync::Arc;
+
+use acadl_perf::accel::{Systolic, SystolicConfig};
+use acadl_perf::aidg::{estimate_layer, FixedPointConfig};
+use acadl_perf::baselines::roofline::{roofline_cycles, LayerFeatures};
+use acadl_perf::dnn::{Layer, LayerKind};
+use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
+use acadl_perf::report::{Csv, Table};
+use acadl_perf::Result;
+
+fn conv(c: u32, k: u32) -> Layer {
+    // short spatial extent + wide filter: the weight-column loads (whose
+    // transaction count is ⌈rows/port_width⌉) are a visible fraction of the
+    // layer, as in the paper's case study
+    Layer::new(
+        format!("conv_c{c}_k{k}"),
+        LayerKind::Conv1d { c_in: c, l_in: 12, c_out: k, kernel: 9, stride: 1, pad: true },
+    )
+}
+
+fn main() -> Result<()> {
+    let mut csv = Csv::new("fig13_port_width", &["case", "port_width", "aidg", "roofline"]);
+    for (case, layer) in [("divisible", conv(12, 72)), ("non-divisible", conv(20, 70))] {
+        let mut t = Table::new(
+            format!("Fig. 13{} — 12×12 systolic array, {case} conv",
+                if case == "divisible" { "(a)" } else { "(b)" }),
+            &["port width", "AIDG cycles", "roofline cycles"],
+        );
+        for pw in 1..=13u32 {
+            let sys = Arc::new(Systolic::new(SystolicConfig::new(12, 12).with_port_width(pw))?);
+            let mapper = ScalarMapper::new(sys);
+            let ml = mapper.map_layer(&layer)?;
+            let mut aidg = 0u64;
+            for kern in &ml.kernels {
+                aidg += estimate_layer(mapper.diagram(), kern, &FixedPointConfig::default())?
+                    .cycles;
+            }
+            let roof =
+                roofline_cycles(&LayerFeatures::from_mapping(&layer, &ml), &mapper.hw_features());
+            t.row(&[pw.to_string(), aidg.to_string(), format!("{roof:.0}")]);
+            csv.row(&[case.into(), pw.to_string(), aidg.to_string(), format!("{roof:.0}")]);
+        }
+        println!("{}", t.to_markdown());
+    }
+    let path = csv.finish()?;
+    println!("series written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,61 @@
+"""AOT pipeline: lower the L2 model entry points to HLO *text* artifacts.
+
+HLO text (not ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md and gen_hlo.py there.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Python runs only here, at build time; the Rust binary is self-contained
+once artifacts/ exists (``make artifacts`` is incremental).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ENTRY_POINTS = {
+    # artifact stem -> (callable, example args factory)
+    "roofline": (model.batched_roofline, model.roofline_example_args),
+    "gemm": (model.model_gemm, model.gemm_example_args),
+}
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for stem, (fn, args_fn) in ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*args_fn())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{stem}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="unused compat alias")
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out:  # legacy single-file interface: treat as directory of file
+        out_dir = os.path.dirname(args.out) or "."
+    build(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Feature vector layout shared between the JAX/Pallas estimator and the Rust
+coordinator (rust/src/runtime/roofline_exec.rs mirrors these indices).
+
+A *design point* is (layer features, hardware features). The batched refined
+roofline estimator consumes `layers[B, LF]` (f64) and `hw[HF]` (f64) and
+returns `cycles[B]` (f64). f64 keeps cycle counts exact up to 2^53 (paper
+workloads reach 4.19e9 instructions, beyond f32's 2^24 integer range).
+"""
+
+# --- layer features -------------------------------------------------------
+LF = 8
+L_MACS = 0       # total multiply-accumulate operations in the layer
+L_IN_WORDS = 1   # input activation words streamed from memory
+L_W_WORDS = 2    # weight words streamed from memory
+L_OUT_WORDS = 3  # output words written back
+L_UR_C = 4       # achieved unroll along input channels (rows occupied)
+L_UR_K = 5       # achieved unroll along output channels (cols occupied)
+L_K_ITERS = 6    # loop-kernel iterations k of the mapped layer
+L_RESERVED = 7
+
+# --- hardware features ----------------------------------------------------
+HF = 8
+H_ROWS = 0        # PE rows
+H_COLS = 1        # PE cols
+H_PORT_WIDTH = 2  # words per memory transaction
+H_READ_LAT = 3    # cycles per read transaction
+H_WRITE_LAT = 4   # cycles per write transaction
+H_MAC_LAT = 5     # cycles per (vectorized) MAC wave
+H_FETCH_OVERHEAD = 6  # non-overlapped fetch/issue cycles per iteration
+H_RESERVED = 7
+
+# Batch block size for the Pallas roofline kernel; AOT batch is a multiple.
+ROOFLINE_BLOCK = 128
+ROOFLINE_BATCH = 1024  # fixed AOT batch; Rust pads/splits to this
+
+# Tiled GEMM AOT shape (functional check of the im2col mapping path).
+GEMM_M = 256
+GEMM_N = 256
+GEMM_K = 256
+GEMM_BM = 128
+GEMM_BN = 128
+GEMM_BK = 128

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: weight-stationary tiled GEMM.
+
+This is the functional model of the systolic-array / Gemmini mapping path:
+the im2col-transformed layer is computed as C = A @ B with (BM, BN, BK)
+tiling. The BlockSpec schedule expresses the same dataflow the paper's
+systolic array realizes spatially — the B (weight) tile is held while A
+streams through, with accumulation over the K grid dimension — i.e. the
+HBM<->VMEM schedule plays the role of the weight-stationary PE array.
+
+Tile defaults (128x128x128 f32) keep the working set at 3 * 64 KiB, MXU
+aligned (multiples of 8x128). interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import features as F
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    # Grid is (M/BM, N/BN, K/BK) with K innermost: zero the accumulator tile
+    # on the first K step, then accumulate partial products.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = F.GEMM_BM,
+    bn: int = F.GEMM_BN,
+    bk: int = F.GEMM_BK,
+) -> jnp.ndarray:
+    """Tiled matmul a[M,K] @ b[K,N] -> [M,N], f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tile ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

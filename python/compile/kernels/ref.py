@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(interpret=True) match these references exactly (roofline, integer-valued
+f64 arithmetic) or to float tolerance (GEMM).
+"""
+
+import jax.numpy as jnp
+
+from .. import features as F
+
+
+def roofline_ref(layers: jnp.ndarray, hw: jnp.ndarray) -> jnp.ndarray:
+    """Refined roofline cycles for a batch of design points.
+
+    layers: [B, LF] f64, hw: [HF] f64 -> [B] f64.
+
+    The *refined* roofline (after Wess et al. [28]) replaces peak compute by
+    the compute rate achievable with the layer's actual unroll factors
+    (UR_C x UR_K PEs active out of ROWS x COLS) and models memory as
+    transaction-granular (ceil(words / port_width) * latency). Compute and
+    memory streams overlap (max), the pipeline fill does not (additive).
+    """
+    macs = layers[:, F.L_MACS]
+    in_w = layers[:, F.L_IN_WORDS]
+    w_w = layers[:, F.L_W_WORDS]
+    out_w = layers[:, F.L_OUT_WORDS]
+    ur_c = jnp.maximum(layers[:, F.L_UR_C], 1.0)
+    ur_k = jnp.maximum(layers[:, F.L_UR_K], 1.0)
+    k_iters = jnp.maximum(layers[:, F.L_K_ITERS], 1.0)
+
+    pw = jnp.maximum(hw[F.H_PORT_WIDTH], 1.0)
+    read_lat = hw[F.H_READ_LAT]
+    write_lat = hw[F.H_WRITE_LAT]
+    mac_lat = jnp.maximum(hw[F.H_MAC_LAT], 1.0)
+    fetch = hw[F.H_FETCH_OVERHEAD]
+
+    compute = jnp.ceil(macs / (ur_c * ur_k)) * mac_lat
+    reads = (jnp.ceil(in_w / pw) + jnp.ceil(w_w / pw)) * read_lat
+    writes = jnp.ceil(out_w / pw) * write_lat
+    mem = reads + writes
+    # pipeline fill: one read + one mac + one write wave, plus fetch overhead
+    prolog = read_lat + mac_lat + write_lat + fetch * k_iters
+    return jnp.maximum(compute, mem) + prolog
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle, f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: batched refined-roofline latency estimation.
+
+One grid step processes a ROOFLINE_BLOCK-sized slab of design points that is
+fully VMEM-resident (BLOCK x LF f64 = 8 KiB per operand slab); the hardware
+feature vector is broadcast to every block. The kernel is element-wise over
+the batch, so on a real TPU it is VPU work with a trivially double-buffered
+HBM->VMEM stream; interpret=True is mandatory here (CPU PJRT cannot execute
+Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import features as F
+
+
+def _roofline_kernel(layers_ref, hw_ref, out_ref):
+    layers = layers_ref[...]
+    hw = hw_ref[...]
+
+    macs = layers[:, F.L_MACS]
+    in_w = layers[:, F.L_IN_WORDS]
+    w_w = layers[:, F.L_W_WORDS]
+    out_w = layers[:, F.L_OUT_WORDS]
+    ur_c = jnp.maximum(layers[:, F.L_UR_C], 1.0)
+    ur_k = jnp.maximum(layers[:, F.L_UR_K], 1.0)
+    k_iters = jnp.maximum(layers[:, F.L_K_ITERS], 1.0)
+
+    pw = jnp.maximum(hw[F.H_PORT_WIDTH], 1.0)
+    read_lat = hw[F.H_READ_LAT]
+    write_lat = hw[F.H_WRITE_LAT]
+    mac_lat = jnp.maximum(hw[F.H_MAC_LAT], 1.0)
+    fetch = hw[F.H_FETCH_OVERHEAD]
+
+    compute = jnp.ceil(macs / (ur_c * ur_k)) * mac_lat
+    reads = (jnp.ceil(in_w / pw) + jnp.ceil(w_w / pw)) * read_lat
+    writes = jnp.ceil(out_w / pw) * write_lat
+    mem = reads + writes
+    prolog = read_lat + mac_lat + write_lat + fetch * k_iters
+    out_ref[...] = jnp.maximum(compute, mem) + prolog
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def roofline_batch(layers: jnp.ndarray, hw: jnp.ndarray, *, block: int = F.ROOFLINE_BLOCK) -> jnp.ndarray:
+    """Pallas-blocked refined roofline over a padded batch.
+
+    layers: [B, LF] f64 with B % block == 0; hw: [HF] f64 -> cycles [B] f64.
+    """
+    b, lf = layers.shape
+    assert lf == F.LF, f"layer feature width {lf} != {F.LF}"
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    return pl.pallas_call(
+        _roofline_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, F.LF), lambda i: (i, 0)),
+            pl.BlockSpec((F.HF,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), layers.dtype),
+        interpret=True,
+    )(layers, hw)

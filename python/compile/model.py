@@ -1,0 +1,48 @@
+"""L2: the JAX compute graph lowered to the AOT artifacts.
+
+Two entry points, both calling the L1 Pallas kernels:
+
+- ``batched_roofline(layers[B,LF], hw[HF]) -> (cycles[B],)``
+  The refined-roofline estimator evaluated for a whole batch of design
+  points in one call. The Rust coordinator uses it (a) for every
+  "Refined roofline" baseline column and (b) as the cheap pre-filter in
+  Plasticine design-space exploration, padding requests to ROOFLINE_BATCH.
+
+- ``model_gemm(a[M,K], b[K,N]) -> (c[M,N],)``
+  The weight-stationary tiled GEMM functional model used to validate the
+  im2col mapping path's numerics end-to-end from Rust.
+
+Both return 1-tuples: the AOT pipeline lowers with ``return_tuple=True`` and
+the Rust side unwraps with ``to_tuple1()`` (see /opt/xla-example).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import features as F
+from .kernels import gemm as gemm_kernel
+from .kernels import roofline as roofline_kernel
+
+# f64 keeps cycle counts exact up to 2^53; must be enabled before tracing.
+jax.config.update("jax_enable_x64", True)
+
+
+def batched_roofline(layers: jnp.ndarray, hw: jnp.ndarray):
+    cycles = roofline_kernel.roofline_batch(layers, hw)
+    return (cycles,)
+
+
+def model_gemm(a: jnp.ndarray, b: jnp.ndarray):
+    return (gemm_kernel.gemm(a, b),)
+
+
+def roofline_example_args():
+    layers = jax.ShapeDtypeStruct((F.ROOFLINE_BATCH, F.LF), jnp.float64)
+    hw = jax.ShapeDtypeStruct((F.HF,), jnp.float64)
+    return layers, hw
+
+
+def gemm_example_args():
+    a = jax.ShapeDtypeStruct((F.GEMM_M, F.GEMM_K), jnp.float32)
+    b = jax.ShapeDtypeStruct((F.GEMM_K, F.GEMM_N), jnp.float32)
+    return a, b

@@ -1,0 +1,143 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+The Pallas kernels run under interpret=True (CPU); references are pure jnp.
+Hypothesis sweeps shapes/values; fixed cases pin the paper-relevant regimes
+(compute-bound, memory-bound, unroll underutilization, huge f64 counts).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import features as F
+from compile.kernels.gemm import gemm
+from compile.kernels.ref import gemm_ref, roofline_ref
+from compile.kernels.roofline import roofline_batch
+
+
+def mk_hw(rows=4, cols=4, pw=2, rl=4, wl=4, mac=1, fetch=0):
+    return jnp.array([rows, cols, pw, rl, wl, mac, fetch, 0.0], dtype=jnp.float64)
+
+
+def mk_layer(macs, in_w, w_w, out_w, ur_c, ur_k, k_iters=1):
+    v = np.zeros(F.LF)
+    v[F.L_MACS] = macs
+    v[F.L_IN_WORDS] = in_w
+    v[F.L_W_WORDS] = w_w
+    v[F.L_OUT_WORDS] = out_w
+    v[F.L_UR_C] = ur_c
+    v[F.L_UR_K] = ur_k
+    v[F.L_K_ITERS] = k_iters
+    return v
+
+
+class TestRooflineFixed:
+    def _run(self, layers_np, hw):
+        layers = jnp.asarray(layers_np, dtype=jnp.float64)
+        got = roofline_batch(layers, hw, block=layers.shape[0])
+        want = roofline_ref(layers, hw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        return np.asarray(got)
+
+    def test_compute_bound(self):
+        # many MACs, little data -> compute term dominates
+        layers = np.stack([mk_layer(1e6, 10, 10, 10, 2, 2)])
+        hw = mk_hw(pw=8, rl=1, wl=1)
+        out = self._run(layers, hw)
+        assert out[0] >= 1e6 / 4
+
+    def test_memory_bound(self):
+        # little compute, lots of data, narrow port -> memory term dominates
+        layers = np.stack([mk_layer(10, 1e6, 1e6, 1e6, 4, 4)])
+        hw = mk_hw(pw=1, rl=4, wl=4)
+        out = self._run(layers, hw)
+        assert out[0] >= 2e6 * 4
+
+    def test_underutilization_increases_cycles(self):
+        # ur 2x2 vs 4x4 on the same layer: fewer active PEs -> more cycles
+        full = np.stack([mk_layer(1e6, 10, 10, 10, 4, 4)])
+        under = np.stack([mk_layer(1e6, 10, 10, 10, 2, 2)])
+        hw = mk_hw()
+        assert self._run(under, hw)[0] > self._run(full, hw)[0]
+
+    def test_huge_counts_exact_f64(self):
+        # 4.19e9 instructions regime: f64 must represent counts exactly
+        layers = np.stack([mk_layer(4.19e9, 1e9, 1e9, 1e9, 1, 1)])
+        out = self._run(layers, mk_hw(pw=1, rl=1, wl=1))
+        assert out[0] == float(int(out[0]))  # integral
+
+    def test_zero_unroll_clamped(self):
+        layers = np.stack([mk_layer(100, 10, 10, 10, 0, 0)])
+        self._run(layers, mk_hw())
+
+    def test_multi_block_grid(self):
+        # batch spanning several grid blocks agrees with single-block ref
+        rng = np.random.default_rng(0)
+        layers = rng.integers(1, 10**6, size=(F.ROOFLINE_BATCH, F.LF)).astype(float)
+        hw = mk_hw()
+        got = roofline_batch(jnp.asarray(layers), hw)
+        want = roofline_ref(jnp.asarray(layers), hw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    macs=st.integers(0, 10**12),
+    words=st.integers(0, 10**9),
+    ur=st.integers(0, 64),
+    pw=st.integers(1, 16),
+    lat=st.integers(1, 16),
+)
+def test_roofline_property(b, macs, words, ur, pw, lat):
+    layers = np.tile(mk_layer(macs, words, words // 2, words // 3, ur, ur, 7), (b, 1))
+    hw = mk_hw(pw=pw, rl=lat, wl=lat, mac=1, fetch=1)
+    got = roofline_batch(jnp.asarray(layers, dtype=jnp.float64), hw, block=b)
+    want = roofline_ref(jnp.asarray(layers, dtype=jnp.float64), hw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # cycles are nonnegative and monotone in macs
+    assert (np.asarray(got) >= 0).all()
+
+
+class TestGemmFixed:
+    def test_aot_shape(self):
+        rng = np.random.default_rng(1)
+        a = rng.standard_normal((F.GEMM_M, F.GEMM_K)).astype(np.float32)
+        b = rng.standard_normal((F.GEMM_K, F.GEMM_N)).astype(np.float32)
+        got = gemm(jnp.asarray(a), jnp.asarray(b))
+        want = gemm_ref(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+    def test_identity(self):
+        eye = jnp.eye(F.GEMM_BM, dtype=jnp.float32)
+        a = jnp.arange(F.GEMM_BM * F.GEMM_BM, dtype=jnp.float32).reshape(F.GEMM_BM, -1)
+        got = gemm(a, eye, bm=F.GEMM_BM, bn=F.GEMM_BM, bk=F.GEMM_BM)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a), rtol=0, atol=0)
+
+    def test_bad_shapes_rejected(self):
+        a = jnp.zeros((100, 128), dtype=jnp.float32)
+        b = jnp.zeros((128, 128), dtype=jnp.float32)
+        with pytest.raises(AssertionError):
+            gemm(a, b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    tile=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_property(mi, ni, ki, tile, seed):
+    m, n, k = mi * tile, ni * tile, ki * tile
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = gemm(jnp.asarray(a), jnp.asarray(b), bm=tile, bn=tile, bk=tile)
+    want = gemm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)

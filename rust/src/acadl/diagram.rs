@@ -1,0 +1,715 @@
+//! The ACADL object diagram: instantiated objects plus their associations
+//! (forward, containment, register/memory access), a fluent builder, and
+//! instruction routing.
+//!
+//! Routing computes the order `o⃗(i)` of objects an instruction passes
+//! through (paper §6.1): merged instruction-memory fetch → instruction fetch
+//! stage → (intermediate pipeline stages) → the first functional unit that
+//! supports the operation *and* has access to all read/write registers and
+//! memories → memory objects for reads → `writeBack` (if the instruction
+//! reads memory) → memory objects for writes.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::acadl::latency::Latency;
+use crate::acadl::object::{Lock, Object, ObjectKind};
+use crate::ids::{Addr, Interner, ObjId, OpId, RegId};
+use crate::isa::Instruction;
+
+/// Fetch-path configuration extracted from the instruction memory, the
+/// InstructionMemoryAccessUnit, and the InstructionFetchStage.
+#[derive(Debug, Clone, Copy)]
+pub struct FetchConfig {
+    /// Merged fetch node object (the instruction memory).
+    pub instr_mem: ObjId,
+    /// Instructions fetched per transaction (instruction memory port width).
+    pub port_width: u32,
+    /// Instruction memory read latency (fixed: instruction fetches carry no
+    /// immediates).
+    pub read_latency: u64,
+    /// The InstructionFetchStage object.
+    pub fetch_stage: ObjId,
+    /// IFS residence latency.
+    pub ifs_latency: u64,
+    /// Issue buffer capacity (max instructions entering/issuing per cycle).
+    pub issue_buffer_size: u32,
+}
+
+/// The route of one instruction through the diagram.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Route {
+    /// Intermediate pipeline stages between the IFS and the FU (often none).
+    pub stages: Vec<ObjId>,
+    /// The functional unit that processes the instruction.
+    pub fu: ObjId,
+    /// Memory objects serving the instruction's read addresses (deduped, in
+    /// first-occurrence order).
+    pub read_mems: Vec<ObjId>,
+    /// Memory objects serving the write addresses.
+    pub write_mems: Vec<ObjId>,
+    /// Whether a `writeBack` node follows the read-memory nodes.
+    pub has_writeback: bool,
+}
+
+impl Route {
+    /// Number of AIDG nodes this route contributes after the merged fetch
+    /// node and the IFS node.
+    pub fn tail_len(&self) -> usize {
+        self.stages.len()
+            + 1
+            + self.read_mems.len()
+            + usize::from(self.has_writeback)
+            + self.write_mems.len()
+    }
+}
+
+#[derive(Debug, PartialEq, Eq, Hash)]
+struct RouteKey {
+    op: OpId,
+    read_regs: Vec<RegId>,
+    write_regs: Vec<RegId>,
+    read_mems: Vec<ObjId>,
+    write_mems: Vec<ObjId>,
+}
+
+/// An accelerator architecture modeled in ACADL.
+#[derive(Debug)]
+pub struct Diagram {
+    pub name: String,
+    objects: Vec<Object>,
+    ops: Interner,
+    regs: Interner,
+
+    // associations
+    forward: Vec<Vec<ObjId>>,   // pipeline forwarding graph
+    contains: Vec<Vec<ObjId>>,  // ExecuteStage -> FUs
+    fu_read_rf: Vec<Vec<ObjId>>,
+    fu_write_rf: Vec<Vec<ObjId>>,
+    fu_read_mem: Vec<Vec<ObjId>>,
+    fu_write_mem: Vec<Vec<ObjId>>,
+
+    // derived (finalize)
+    reg_home: Vec<ObjId>,                  // RegId -> RegisterFile
+    op_fus: HashMap<OpId, Vec<ObjId>>,     // candidates per op
+    locks: Vec<Lock>,                      // per object
+    addr_map: Vec<(Addr, Addr, ObjId)>,    // sorted address ranges
+    stage_path: Vec<Vec<ObjId>>,           // per-FU: stages IFS -> FU's ES
+    fetch: Option<FetchConfig>,
+    writeback: Option<ObjId>,
+    finalized: bool,
+
+    route_cache: Mutex<HashMap<RouteKey, std::sync::Arc<Route>>>,
+}
+
+impl Diagram {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            objects: Vec::new(),
+            ops: Interner::new(),
+            regs: Interner::new(),
+            forward: Vec::new(),
+            contains: Vec::new(),
+            fu_read_rf: Vec::new(),
+            fu_write_rf: Vec::new(),
+            fu_read_mem: Vec::new(),
+            fu_write_mem: Vec::new(),
+            reg_home: Vec::new(),
+            op_fus: HashMap::new(),
+            locks: Vec::new(),
+            addr_map: Vec::new(),
+            stage_path: Vec::new(),
+            fetch: None,
+            writeback: None,
+            finalized: false,
+            route_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    // ---- interning ------------------------------------------------------
+
+    /// Intern an operation mnemonic.
+    pub fn op(&mut self, name: &str) -> OpId {
+        OpId(self.ops.intern(name))
+    }
+
+    pub fn op_name(&self, op: OpId) -> &str {
+        self.ops.name(op.0)
+    }
+
+    pub fn lookup_op(&self, name: &str) -> Option<OpId> {
+        self.ops.get(name).map(OpId)
+    }
+
+    /// Number of interned registers.
+    pub fn num_regs(&self) -> usize {
+        self.regs.len()
+    }
+
+    pub fn reg_name(&self, r: RegId) -> &str {
+        self.regs.name(r.0)
+    }
+
+    // ---- object construction --------------------------------------------
+
+    fn push(&mut self, name: &str, kind: ObjectKind) -> ObjId {
+        let id = ObjId(self.objects.len() as u32);
+        self.objects.push(Object { name: name.to_string(), kind });
+        self.forward.push(Vec::new());
+        self.contains.push(Vec::new());
+        self.fu_read_rf.push(Vec::new());
+        self.fu_write_rf.push(Vec::new());
+        self.fu_read_mem.push(Vec::new());
+        self.fu_write_mem.push(Vec::new());
+        self.finalized = false;
+        id
+    }
+
+    /// Add the fetch front-end: instruction memory (+ implicit
+    /// InstructionMemoryAccessUnit) and the InstructionFetchStage.
+    pub fn add_fetch(
+        &mut self,
+        imem_name: &str,
+        read_latency: u64,
+        port_width: u32,
+        ifs_name: &str,
+        ifs_latency: u64,
+        issue_buffer_size: u32,
+    ) -> (ObjId, ObjId) {
+        assert!(port_width >= 1 && issue_buffer_size >= 1);
+        let imem = self.push(
+            imem_name,
+            ObjectKind::Memory {
+                read_latency: Latency::Fixed(read_latency),
+                write_latency: Latency::Fixed(0),
+                data_width: 32,
+                port_width,
+                max_concurrent_requests: 1,
+                address_ranges: Vec::new(),
+            },
+        );
+        let ifs = self.push(
+            ifs_name,
+            ObjectKind::InstructionFetchStage {
+                latency: Latency::Fixed(ifs_latency),
+                issue_buffer_size,
+            },
+        );
+        self.fetch = Some(FetchConfig {
+            instr_mem: imem,
+            port_width,
+            read_latency,
+            fetch_stage: ifs,
+            ifs_latency,
+            issue_buffer_size,
+        });
+        (imem, ifs)
+    }
+
+    pub fn add_stage(&mut self, name: &str, latency: impl Into<Latency>) -> ObjId {
+        self.push(name, ObjectKind::PipelineStage { latency: latency.into() })
+    }
+
+    pub fn add_execute_stage(&mut self, name: &str) -> ObjId {
+        self.push(name, ObjectKind::ExecuteStage)
+    }
+
+    /// Add a FunctionalUnit contained in `es`, supporting `ops`.
+    pub fn add_fu(
+        &mut self,
+        es: ObjId,
+        name: &str,
+        latency: Latency,
+        ops: &[&str],
+    ) -> ObjId {
+        let to_process: Vec<OpId> = ops.iter().map(|o| self.op(o)).collect();
+        let fu = self.push(name, ObjectKind::FunctionalUnit { latency, to_process });
+        self.contains[es.idx()].push(fu);
+        fu
+    }
+
+    /// Add a RegisterFile with `count` registers named `{prefix}{i}`;
+    /// returns their ids.
+    pub fn add_regfile(&mut self, name: &str, prefix: &str, count: u32) -> (ObjId, Vec<RegId>) {
+        let mut reg_ids = Vec::with_capacity(count as usize);
+        for i in 0..count {
+            let rid = RegId(self.regs.intern(&format!("{prefix}{i}")));
+            reg_ids.push(rid);
+        }
+        let rf = self.push(
+            name,
+            ObjectKind::RegisterFile { data_width: 32, regs: reg_ids.clone() },
+        );
+        (rf, reg_ids)
+    }
+
+    /// Add a data memory claiming `[base, base+words)` of the global address
+    /// space.
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_memory(
+        &mut self,
+        name: &str,
+        read_latency: impl Into<Latency>,
+        write_latency: impl Into<Latency>,
+        port_width: u32,
+        max_concurrent_requests: u32,
+        base: Addr,
+        words: u64,
+    ) -> ObjId {
+        assert!(port_width >= 1 && max_concurrent_requests >= 1);
+        self.push(
+            name,
+            ObjectKind::Memory {
+                read_latency: read_latency.into(),
+                write_latency: write_latency.into(),
+                data_width: 32,
+                port_width,
+                max_concurrent_requests,
+                address_ranges: vec![(base, base + words)],
+            },
+        )
+    }
+
+    // ---- associations ----------------------------------------------------
+
+    /// Forward association between pipeline stages / execute stages.
+    pub fn forward(&mut self, from: ObjId, to: ObjId) {
+        self.forward[from.idx()].push(to);
+    }
+
+    pub fn fu_reads(&mut self, fu: ObjId, rf: ObjId) {
+        self.fu_read_rf[fu.idx()].push(rf);
+    }
+
+    pub fn fu_writes(&mut self, fu: ObjId, rf: ObjId) {
+        self.fu_write_rf[fu.idx()].push(rf);
+    }
+
+    pub fn mem_reads(&mut self, fu: ObjId, mem: ObjId) {
+        self.fu_read_mem[fu.idx()].push(mem);
+    }
+
+    pub fn mem_writes(&mut self, fu: ObjId, mem: ObjId) {
+        self.fu_write_mem[fu.idx()].push(mem);
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn object(&self, id: ObjId) -> &Object {
+        &self.objects[id.idx()]
+    }
+
+    pub fn num_objects(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn fetch_config(&self) -> &FetchConfig {
+        self.fetch.as_ref().expect("diagram has no fetch front-end")
+    }
+
+    pub fn writeback_obj(&self) -> ObjId {
+        self.writeback.expect("diagram not finalized")
+    }
+
+    pub fn lock(&self, id: ObjId) -> Lock {
+        self.locks[id.idx()]
+    }
+
+    /// Resolve an address to its Memory object.
+    #[inline]
+    pub fn memory_of(&self, addr: Addr) -> Option<ObjId> {
+        // addr_map is sorted by range start; ranges are disjoint
+        match self.addr_map.binary_search_by(|&(s, _, _)| s.cmp(&addr)) {
+            Ok(i) => Some(self.addr_map[i].2),
+            Err(0) => None,
+            Err(i) => {
+                let (s, e, m) = self.addr_map[i - 1];
+                (addr >= s && addr < e).then_some(m)
+            }
+        }
+    }
+
+    pub fn objects_iter(&self) -> impl Iterator<Item = (ObjId, &Object)> {
+        self.objects
+            .iter()
+            .enumerate()
+            .map(|(i, o)| (ObjId(i as u32), o))
+    }
+
+    // ---- finalize ----------------------------------------------------------
+
+    /// Build derived tables and validate the diagram. Must be called after
+    /// construction and before routing/evaluation.
+    pub fn finalize(&mut self) -> Result<()> {
+        let n = self.objects.len();
+        self.fetch.context("diagram must declare a fetch front-end (add_fetch)")?;
+
+        // writeBack pseudo-object
+        let wb = self.push("writeBack", ObjectKind::WriteBack);
+        self.writeback = Some(wb);
+
+        // register homes
+        let mut homes = vec![ObjId(u32::MAX); self.regs.len()];
+        for (i, o) in self.objects.iter().enumerate() {
+            if let ObjectKind::RegisterFile { regs, .. } = &o.kind {
+                for r in regs {
+                    if homes[r.0 as usize] != ObjId(u32::MAX) {
+                        bail!("register {} homed in two register files", self.regs.name(r.0));
+                    }
+                    homes[r.0 as usize] = ObjId(i as u32);
+                }
+            }
+        }
+        for (r, h) in homes.iter().enumerate() {
+            if *h == ObjId(u32::MAX) {
+                bail!("register {} has no register file", self.regs.name(r as u32));
+            }
+        }
+        self.reg_home = homes;
+
+        // candidate FUs per op
+        self.op_fus.clear();
+        for (i, o) in self.objects.iter().enumerate() {
+            if let ObjectKind::FunctionalUnit { to_process, .. } = &o.kind {
+                for op in to_process {
+                    self.op_fus.entry(*op).or_default().push(ObjId(i as u32));
+                }
+            }
+        }
+
+        // structural locks: FU inside an ES locks the ES; memory capacity =
+        // max_concurrent_requests; writeBack exempt (capacity u32::MAX).
+        let mut locks: Vec<Lock> = (0..self.objects.len())
+            .map(|i| Lock { owner: ObjId(i as u32), capacity: 1 })
+            .collect();
+        for (es, fus) in self.contains.iter().enumerate().take(n) {
+            for fu in fus {
+                locks[fu.idx()].owner = ObjId(es as u32);
+            }
+        }
+        for (i, o) in self.objects.iter().enumerate() {
+            match &o.kind {
+                ObjectKind::Memory { max_concurrent_requests, .. } => {
+                    locks[i].capacity = *max_concurrent_requests;
+                }
+                // the issue buffer holds issue_buffer_size instructions: the
+                // i-th instruction enters once the (i - size)-th left (§4.1
+                // "fetch as long as the issue buffer is not full")
+                ObjectKind::InstructionFetchStage { issue_buffer_size, .. } => {
+                    locks[i].capacity = *issue_buffer_size;
+                }
+                ObjectKind::WriteBack => locks[i].capacity = u32::MAX,
+                _ => {}
+            }
+        }
+        self.locks = locks;
+
+        // address map
+        let mut ranges = Vec::new();
+        for (i, o) in self.objects.iter().enumerate() {
+            if let ObjectKind::Memory { address_ranges, .. } = &o.kind {
+                for &(s, e) in address_ranges {
+                    if e > s {
+                        ranges.push((s, e, ObjId(i as u32)));
+                    }
+                }
+            }
+        }
+        ranges.sort_by_key(|&(s, _, _)| s);
+        for w in ranges.windows(2) {
+            if w[0].1 > w[1].0 {
+                bail!(
+                    "overlapping address ranges: {} and {}",
+                    self.objects[w[0].2.idx()].name,
+                    self.objects[w[1].2.idx()].name
+                );
+            }
+        }
+        self.addr_map = ranges;
+
+        // per-FU stage path: BFS from the IFS through forward edges to the
+        // FU's containing ExecuteStage, collecting intermediate
+        // PipelineStages (ES latency is not accumulated; paper §4.1).
+        let ifs = self.fetch.unwrap().fetch_stage;
+        let mut es_of_fu: HashMap<ObjId, ObjId> = HashMap::new();
+        for (es, fus) in self.contains.iter().enumerate() {
+            for fu in fus {
+                es_of_fu.insert(*fu, ObjId(es as u32));
+            }
+        }
+        let mut stage_path = vec![Vec::new(); self.objects.len()];
+        for (&fu, &es) in &es_of_fu {
+            let path = self.bfs_stages(ifs, es).with_context(|| {
+                format!(
+                    "no forward path from fetch stage to execute stage {}",
+                    self.objects[es.idx()].name
+                )
+            })?;
+            stage_path[fu.idx()] = path;
+        }
+        self.stage_path = stage_path;
+
+        self.route_cache.lock().unwrap().clear();
+        self.finalized = true;
+        Ok(())
+    }
+
+    /// BFS over forward edges from `from` to `to`, returning intermediate
+    /// PipelineStage objects (excluding endpoints, skipping ExecuteStages).
+    fn bfs_stages(&self, from: ObjId, to: ObjId) -> Option<Vec<ObjId>> {
+        if from == to {
+            return Some(Vec::new());
+        }
+        let mut prev: HashMap<ObjId, ObjId> = HashMap::new();
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(from);
+        while let Some(cur) = queue.pop_front() {
+            for &nxt in &self.forward[cur.idx()] {
+                if nxt != from && !prev.contains_key(&nxt) {
+                    prev.insert(nxt, cur);
+                    if nxt == to {
+                        // reconstruct, keep only PipelineStages strictly
+                        // between the endpoints
+                        let mut path = Vec::new();
+                        let mut n = to;
+                        while let Some(&p) = prev.get(&n) {
+                            if p != from {
+                                if matches!(
+                                    self.objects[p.idx()].kind,
+                                    ObjectKind::PipelineStage { .. }
+                                ) {
+                                    path.push(p);
+                                }
+                            }
+                            n = p;
+                            if n == from {
+                                break;
+                            }
+                        }
+                        path.reverse();
+                        return Some(path);
+                    }
+                    queue.push_back(nxt);
+                }
+            }
+        }
+        None
+    }
+
+    // ---- routing -----------------------------------------------------------
+
+    /// Memory objects serving `addrs`, deduped in first-occurrence order.
+    fn mems_for(&self, addrs: &[Addr]) -> Result<Vec<ObjId>> {
+        let mut mems: Vec<ObjId> = Vec::new();
+        for &a in addrs {
+            let m = self
+                .memory_of(a)
+                .with_context(|| format!("address {a:#x} not claimed by any memory"))?;
+            if !mems.contains(&m) {
+                mems.push(m);
+            }
+        }
+        Ok(mems)
+    }
+
+    fn fu_can_access(&self, fu: ObjId, instr: &Instruction, rmems: &[ObjId], wmems: &[ObjId]) -> bool {
+        let readable = &self.fu_read_rf[fu.idx()];
+        let writable = &self.fu_write_rf[fu.idx()];
+        for r in &instr.read_regs {
+            if !readable.contains(&self.reg_home[r.0 as usize]) {
+                return false;
+            }
+        }
+        for r in &instr.write_regs {
+            if !writable.contains(&self.reg_home[r.0 as usize]) {
+                return false;
+            }
+        }
+        for m in rmems {
+            if !self.fu_read_mem[fu.idx()].contains(m) {
+                return false;
+            }
+        }
+        for m in wmems {
+            if !self.fu_write_mem[fu.idx()].contains(m) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Route `instr` through the diagram: find the supporting FU and the
+    /// object order `o⃗(i)`. Cached by (op, registers, memories) — the
+    /// template signature that stays constant across loop iterations.
+    pub fn route(&self, instr: &Instruction) -> Result<std::sync::Arc<Route>> {
+        assert!(self.finalized, "diagram not finalized");
+        let read_mems = self.mems_for(&instr.read_addrs)?;
+        let write_mems = self.mems_for(&instr.write_addrs)?;
+        let key = RouteKey {
+            op: instr.op,
+            read_regs: instr.read_regs.clone(),
+            write_regs: instr.write_regs.clone(),
+            read_mems: read_mems.clone(),
+            write_mems: write_mems.clone(),
+        };
+        if let Some(r) = self.route_cache.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        let cands = self
+            .op_fus
+            .get(&instr.op)
+            .with_context(|| format!("no functional unit supports op {}", self.op_name(instr.op)))?;
+        let fu = cands
+            .iter()
+            .copied()
+            .find(|&fu| self.fu_can_access(fu, instr, &read_mems, &write_mems))
+            .with_context(|| {
+                format!(
+                    "no functional unit supporting {} can access the instruction's registers/memories",
+                    self.op_name(instr.op)
+                )
+            })?;
+        let route = std::sync::Arc::new(Route {
+            stages: self.stage_path[fu.idx()].clone(),
+            fu,
+            has_writeback: !read_mems.is_empty(),
+            read_mems,
+            write_mems,
+        });
+        self.route_cache.lock().unwrap().insert(key, route.clone());
+        Ok(route)
+    }
+
+    /// Latency of a memory transaction on `mem` covering `n_addrs` words:
+    /// `ceil(n_addrs / port_width)` transactions of `latency` each.
+    #[inline]
+    pub fn mem_latency(&self, mem: ObjId, n_addrs: usize, write: bool, instr: &Instruction) -> u64 {
+        if let ObjectKind::Memory { read_latency, write_latency, port_width, .. } =
+            &self.objects[mem.idx()].kind
+        {
+            let per = if write { write_latency } else { read_latency }.eval(instr);
+            let txns = (n_addrs as u64).div_ceil(*port_width as u64).max(1);
+            per * txns
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal diagram: fetch + one ES with one FU reading/writing one RF
+    /// and accessing one memory.
+    fn tiny() -> (Diagram, OpId, Vec<RegId>) {
+        let mut d = Diagram::new("tiny");
+        let (_imem, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+        let es = d.add_execute_stage("es0");
+        let (rf, regs) = d.add_regfile("rf0", "r", 4);
+        let mem = d.add_memory("dmem", 4, 4, 2, 1, 0, 1024);
+        let alu = d.add_fu(es, "alu0", Latency::Fixed(1), &["add", "load"]);
+        d.forward(ifs, es);
+        d.fu_reads(alu, rf);
+        d.fu_writes(alu, rf);
+        d.mem_reads(alu, mem);
+        d.mem_writes(alu, mem);
+        let op = d.op("add");
+        d.finalize().unwrap();
+        (d, op, regs)
+    }
+
+    #[test]
+    fn finalize_builds_tables() {
+        let (d, _, _) = tiny();
+        assert!(d.memory_of(0).is_some());
+        assert!(d.memory_of(1023).is_some());
+        assert_eq!(d.memory_of(1024), None);
+        assert_eq!(d.fetch_config().port_width, 2);
+    }
+
+    #[test]
+    fn route_compute_instruction() {
+        let (d, op, regs) = tiny();
+        let i = Instruction::new(op).reads(&[regs[0]]).writes(&[regs[1]]);
+        let r = d.route(&i).unwrap();
+        assert!(r.read_mems.is_empty() && r.write_mems.is_empty());
+        assert!(!r.has_writeback);
+        assert_eq!(d.object(r.fu).name, "alu0");
+    }
+
+    #[test]
+    fn route_load_has_writeback() {
+        let (mut d, _, regs) = tiny();
+        let load = d.op("load");
+        let i = Instruction::new(load).writes(&[regs[0]]).read_mem(&[16]);
+        let r = d.route(&i).unwrap();
+        assert_eq!(r.read_mems.len(), 1);
+        assert!(r.has_writeback);
+    }
+
+    #[test]
+    fn route_cache_hit_is_same_arc() {
+        let (d, op, regs) = tiny();
+        let i1 = Instruction::new(op).reads(&[regs[0]]).writes(&[regs[1]]);
+        let i2 = i1.clone();
+        let r1 = d.route(&i1).unwrap();
+        let r2 = d.route(&i2).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&r1, &r2));
+    }
+
+    #[test]
+    fn unknown_op_fails() {
+        let (mut d, _, _) = tiny();
+        let mul = d.op("mul");
+        d.finalize().unwrap();
+        assert!(d.route(&Instruction::new(mul)).is_err());
+    }
+
+    #[test]
+    fn unclaimed_address_fails() {
+        let (d, op, regs) = tiny();
+        let i = Instruction::new(op).reads(&[regs[0]]).read_mem(&[99999]);
+        assert!(d.route(&i).is_err());
+    }
+
+    #[test]
+    fn inaccessible_register_fails() {
+        let (mut d, op, _) = tiny();
+        // a second RF nobody reads
+        let (_rf2, regs2) = d.add_regfile("rf1", "s", 2);
+        d.finalize().unwrap();
+        let i = Instruction::new(op).reads(&[regs2[0]]);
+        assert!(d.route(&i).is_err());
+    }
+
+    #[test]
+    fn mem_latency_transactions() {
+        let (d, op, _) = tiny();
+        let mem = d.memory_of(0).unwrap();
+        let i = Instruction::new(op);
+        // port_width 2, read latency 4: 3 addrs -> 2 txns -> 8 cycles
+        assert_eq!(d.mem_latency(mem, 3, false, &i), 8);
+        assert_eq!(d.mem_latency(mem, 1, false, &i), 4);
+        assert_eq!(d.mem_latency(mem, 0, true, &i), 4); // clamped min 1 txn
+    }
+
+    #[test]
+    fn sibling_fus_share_lock() {
+        let mut d = Diagram::new("sib");
+        let (_im, ifs) = d.add_fetch("imem", 1, 1, "ifs", 1, 2);
+        let es = d.add_execute_stage("es");
+        let (rf, _regs) = d.add_regfile("rf", "r", 2);
+        let a = d.add_fu(es, "a", Latency::Fixed(1), &["x"]);
+        let b = d.add_fu(es, "b", Latency::Fixed(1), &["y"]);
+        d.fu_reads(a, rf);
+        d.fu_reads(b, rf);
+        d.forward(ifs, es);
+        d.finalize().unwrap();
+        assert_eq!(d.lock(a).owner, d.lock(b).owner);
+        assert_eq!(d.lock(a).capacity, 1);
+    }
+}

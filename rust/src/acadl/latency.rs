@@ -1,0 +1,338 @@
+//! Latency semantics: fixed cycle counts or *expressions* evaluated at
+//! estimation time against an instruction's immediates.
+//!
+//! The paper (§4.1 "latency") allows a latency to be "an integer value or a
+//! string containing a function that is evaluated during the performance
+//! estimation". This is how coarse models fold analytical sub-models into a
+//! single FunctionalUnit: UltraTrail's `macArrayAndOPU` carries the CONV-EXT
+//! analytical model parameterized by the instruction's immediates (paper
+//! Fig. 5/6), and Gemmini's DRAM uses a linear burst model over the accessed
+//! data volume and start address (paper §7.2).
+//!
+//! Expression grammar (integer arithmetic, i64):
+//! ```text
+//! expr  := term (('+'|'-') term)*
+//! term  := unary (('*'|'/'|'%') unary)*
+//! unary := '-' unary | atom
+//! atom  := INT | VAR | FN '(' expr (',' expr)* ')' | '(' expr ')'
+//! VAR   := imm0 | imm1 | ...           (instruction immediates)
+//! FN    := cdiv | max | min            (ceil-div, maximum, minimum)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ids::Cycle;
+use crate::isa::Instruction;
+
+/// A module latency: constant cycles or an expression over immediates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Latency {
+    Fixed(Cycle),
+    Expr(Expr),
+}
+
+impl Latency {
+    /// Parse either an integer literal or an expression.
+    pub fn parse(src: &str) -> Result<Self> {
+        let src = src.trim();
+        if let Ok(v) = src.parse::<u64>() {
+            return Ok(Latency::Fixed(v));
+        }
+        Ok(Latency::Expr(Expr::parse(src)?))
+    }
+
+    /// Evaluate against `instr`'s immediates; negative results clamp to 0.
+    #[inline]
+    pub fn eval(&self, instr: &Instruction) -> Cycle {
+        match self {
+            Latency::Fixed(c) => *c,
+            Latency::Expr(e) => e.eval(&instr.imms).max(0) as Cycle,
+        }
+    }
+
+    /// True if the latency does not depend on the instruction.
+    pub fn is_fixed(&self) -> bool {
+        matches!(self, Latency::Fixed(_))
+    }
+}
+
+impl From<u64> for Latency {
+    fn from(v: u64) -> Self {
+        Latency::Fixed(v)
+    }
+}
+
+/// Parsed latency expression AST.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Const(i64),
+    /// `immN` — index into [`Instruction::imms`]; missing entries read 0.
+    Imm(usize),
+    Neg(Box<Expr>),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    /// Floor division; division by zero yields 0.
+    Div(Box<Expr>, Box<Expr>),
+    Rem(Box<Expr>, Box<Expr>),
+    /// Ceil division; division by zero yields 0.
+    Cdiv(Box<Expr>, Box<Expr>),
+    Max(Box<Expr>, Box<Expr>),
+    Min(Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut p = Parser { toks: lex(src)?, pos: 0 };
+        let e = p.expr()?;
+        if p.pos != p.toks.len() {
+            bail!("trailing tokens in latency expression {src:?}");
+        }
+        Ok(e)
+    }
+
+    pub fn eval(&self, imms: &[i64]) -> i64 {
+        match self {
+            Expr::Const(v) => *v,
+            Expr::Imm(i) => imms.get(*i).copied().unwrap_or(0),
+            Expr::Neg(a) => -a.eval(imms),
+            Expr::Add(a, b) => a.eval(imms).wrapping_add(b.eval(imms)),
+            Expr::Sub(a, b) => a.eval(imms).wrapping_sub(b.eval(imms)),
+            Expr::Mul(a, b) => a.eval(imms).wrapping_mul(b.eval(imms)),
+            Expr::Div(a, b) => {
+                let d = b.eval(imms);
+                if d == 0 { 0 } else { a.eval(imms).div_euclid(d) }
+            }
+            Expr::Rem(a, b) => {
+                let d = b.eval(imms);
+                if d == 0 { 0 } else { a.eval(imms).rem_euclid(d) }
+            }
+            Expr::Cdiv(a, b) => {
+                let d = b.eval(imms);
+                if d == 0 { 0 } else { (a.eval(imms) + d - 1).div_euclid(d) }
+            }
+            Expr::Max(a, b) => a.eval(imms).max(b.eval(imms)),
+            Expr::Min(a, b) => a.eval(imms).min(b.eval(imms)),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Int(i64),
+    Ident(String),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    LParen,
+    RParen,
+    Comma,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let mut toks = Vec::new();
+    let bytes = src.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' | '\t' | '\n' => i += 1,
+            '+' => { toks.push(Tok::Plus); i += 1 }
+            '-' => { toks.push(Tok::Minus); i += 1 }
+            '*' => { toks.push(Tok::Star); i += 1 }
+            '/' => { toks.push(Tok::Slash); i += 1 }
+            '%' => { toks.push(Tok::Percent); i += 1 }
+            '(' => { toks.push(Tok::LParen); i += 1 }
+            ')' => { toks.push(Tok::RParen); i += 1 }
+            ',' => { toks.push(Tok::Comma); i += 1 }
+            '0'..='9' => {
+                let s = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                toks.push(Tok::Int(src[s..i].parse()?));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let s = i;
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push(Tok::Ident(src[s..i].to_string()));
+            }
+            _ => bail!("unexpected character {c:?} in latency expression"),
+        }
+    }
+    Ok(toks)
+}
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<()> {
+        match self.next() {
+            Some(got) if got == t => Ok(()),
+            got => bail!("expected {t:?}, got {got:?}"),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.term()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Plus) => {
+                    self.pos += 1;
+                    lhs = Expr::Add(Box::new(lhs), Box::new(self.term()?));
+                }
+                Some(Tok::Minus) => {
+                    self.pos += 1;
+                    lhs = Expr::Sub(Box::new(lhs), Box::new(self.term()?));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            match self.peek() {
+                Some(Tok::Star) => {
+                    self.pos += 1;
+                    lhs = Expr::Mul(Box::new(lhs), Box::new(self.unary()?));
+                }
+                Some(Tok::Slash) => {
+                    self.pos += 1;
+                    lhs = Expr::Div(Box::new(lhs), Box::new(self.unary()?));
+                }
+                Some(Tok::Percent) => {
+                    self.pos += 1;
+                    lhs = Expr::Rem(Box::new(lhs), Box::new(self.unary()?));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        if matches!(self.peek(), Some(Tok::Minus)) {
+            self.pos += 1;
+            return Ok(Expr::Neg(Box::new(self.unary()?)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<Expr> {
+        match self.next() {
+            Some(Tok::Int(v)) => Ok(Expr::Const(v)),
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Some(Tok::Ident(name)) => {
+                if let Some(idx) = name.strip_prefix("imm") {
+                    if let Ok(i) = idx.parse::<usize>() {
+                        return Ok(Expr::Imm(i));
+                    }
+                }
+                // two-argument builtin functions
+                self.expect(Tok::LParen)?;
+                let a = self.expr()?;
+                self.expect(Tok::Comma)?;
+                let b = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let (a, b) = (Box::new(a), Box::new(b));
+                match name.as_str() {
+                    "cdiv" => Ok(Expr::Cdiv(a, b)),
+                    "max" => Ok(Expr::Max(a, b)),
+                    "min" => Ok(Expr::Min(a, b)),
+                    other => Err(anyhow!("unknown function {other:?} in latency expression")),
+                }
+            }
+            got => bail!("unexpected token {got:?} in latency expression"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::OpId;
+
+    fn instr(imms: &[i64]) -> Instruction {
+        Instruction::new(OpId(0)).imms(imms)
+    }
+
+    #[test]
+    fn fixed_roundtrip() {
+        let l = Latency::parse("42").unwrap();
+        assert_eq!(l, Latency::Fixed(42));
+        assert_eq!(l.eval(&instr(&[])), 42);
+        assert!(l.is_fixed());
+    }
+
+    #[test]
+    fn arithmetic_precedence() {
+        let l = Latency::parse("1 + 2 * 3").unwrap();
+        assert_eq!(l.eval(&instr(&[])), 7);
+        let l = Latency::parse("(1 + 2) * 3").unwrap();
+        assert_eq!(l.eval(&instr(&[])), 9);
+    }
+
+    #[test]
+    fn immediates_and_functions() {
+        // ceil(C/8) * ceil(K/8) * F * Cw  — a CONV-EXT-like model
+        let l = Latency::parse("cdiv(imm0, 8) * cdiv(imm1, 8) * imm2 * imm3").unwrap();
+        let i = instr(&[16, 12, 3, 25]);
+        assert_eq!(l.eval(&i), 2 * 2 * 3 * 25);
+    }
+
+    #[test]
+    fn max_min_neg() {
+        let l = Latency::parse("max(imm0, imm1) + min(imm0, imm1) - imm0").unwrap();
+        assert_eq!(l.eval(&instr(&[3, 9])), 9);
+        // negative clamps to zero as a latency
+        let l = Latency::parse("0 - 5").unwrap();
+        assert_eq!(l.eval(&instr(&[])), 0);
+    }
+
+    #[test]
+    fn div_by_zero_is_zero() {
+        let l = Latency::parse("imm0 / imm1 + cdiv(imm0, imm1) + imm0 % imm1").unwrap();
+        assert_eq!(l.eval(&instr(&[5, 0])), 0);
+    }
+
+    #[test]
+    fn missing_imm_reads_zero() {
+        let l = Latency::parse("imm7 + 3").unwrap();
+        assert_eq!(l.eval(&instr(&[1])), 3);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Latency::parse("foo(1,2)").is_err());
+        assert!(Latency::parse("1 +").is_err());
+        assert!(Latency::parse("(1").is_err());
+        assert!(Latency::parse("1 2").is_err());
+        assert!(Latency::parse("$").is_err());
+    }
+}

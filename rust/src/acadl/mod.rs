@@ -1,0 +1,18 @@
+//! The Abstract Computer Architecture Description Language (ACADL).
+//!
+//! ACADL models computer architectures as object diagrams of a small set of
+//! classes (paper §4, Fig. 2). Architectures are *instruction-centric*: any
+//! architectural state change is triggered by an instruction propagating
+//! from the instruction memory through pipeline stages to a functional unit.
+//! Latencies are attached to the modules an instruction occupies, either as
+//! integers or as expressions over the instruction's immediates
+//! ([`latency::Latency`]), which is what lets a single diagram span
+//! abstraction levels from scalar `mac`s to fused `conv_ext` tensor ops.
+
+pub mod diagram;
+pub mod latency;
+pub mod object;
+
+pub use diagram::{Diagram, FetchConfig, Route};
+pub use latency::{Expr, Latency};
+pub use object::{Lock, Object, ObjectKind};

@@ -1,0 +1,99 @@
+//! ACADL objects: the basic building blocks of computer architectures.
+//!
+//! Mirrors the paper's class diagram (Fig. 2) with the classes that carry
+//! timing semantics. Pure-container classes (`Data`) and virtual bases
+//! (`ACADLObject`, `DataStorage`, `MemoryInterface`) have no runtime
+//! representation of their own; `MemoryAccessUnit` /
+//! `InstructionMemoryAccessUnit` are functional units distinguished by their
+//! memory associations, exactly as in the object diagrams of §4.3.
+
+use crate::acadl::latency::Latency;
+use crate::ids::{Addr, Cycle, ObjId, OpId, RegId};
+
+/// Kind + attributes of one ACADL object.
+#[derive(Debug, Clone)]
+pub enum ObjectKind {
+    /// Forwards instructions; an instruction resides `latency` cycles inside
+    /// before being forwarded (paper: PipelineStage).
+    PipelineStage { latency: Latency },
+
+    /// Receives instructions and dispatches them to a contained
+    /// FunctionalUnit; its own latency is *not* accumulated when a contained
+    /// FU accepts the instruction (paper: ExecuteStage). Acts as the
+    /// structural lock domain for its sibling FUs.
+    ExecuteStage,
+
+    /// Fetches from the instruction memory into an issue buffer and can
+    /// issue multiple instructions per cycle up to `issue_buffer_size`
+    /// (paper: InstructionFetchStage).
+    InstructionFetchStage { latency: Latency, issue_buffer_size: u32 },
+
+    /// Executes instructions whose operation is in `to_process`, taking
+    /// `latency` cycles after data dependencies resolve (paper:
+    /// FunctionalUnit; also MemoryAccessUnit when it has memory
+    /// associations).
+    FunctionalUnit { latency: Latency, to_process: Vec<OpId> },
+
+    /// Maps unique register names to values; access latency is implicit in
+    /// the FUs that read/write it (paper: RegisterFile).
+    RegisterFile { data_width: u32, regs: Vec<RegId> },
+
+    /// Data storage with per-transaction latencies. `port_width` is the
+    /// number of words per transaction; `max_concurrent_requests` bounds
+    /// simultaneous transactions (paper: Memory + MemoryInterface).
+    Memory {
+        read_latency: Latency,
+        write_latency: Latency,
+        data_width: u32,
+        port_width: u32,
+        max_concurrent_requests: u32,
+        address_ranges: Vec<(Addr, Addr)>, // half-open [start, end)
+    },
+
+    /// The pseudo-object anchoring load write-backs (§6.1): zero latency and
+    /// exempt from structural dependencies.
+    WriteBack,
+}
+
+/// One instantiated ACADL object.
+#[derive(Debug, Clone)]
+pub struct Object {
+    pub name: String,
+    pub kind: ObjectKind,
+}
+
+impl Object {
+    /// Static latency if the object's latency is instruction-independent.
+    pub fn fixed_latency(&self) -> Option<Cycle> {
+        match &self.kind {
+            ObjectKind::PipelineStage { latency }
+            | ObjectKind::InstructionFetchStage { latency, .. }
+            | ObjectKind::FunctionalUnit { latency, .. } => match latency {
+                Latency::Fixed(c) => Some(*c),
+                Latency::Expr(_) => None,
+            },
+            ObjectKind::WriteBack => Some(0),
+            _ => None,
+        }
+    }
+
+    pub fn is_memory(&self) -> bool {
+        matches!(self.kind, ObjectKind::Memory { .. })
+    }
+
+    pub fn is_functional_unit(&self) -> bool {
+        matches!(self.kind, ObjectKind::FunctionalUnit { .. })
+    }
+}
+
+/// Structural-capacity descriptor: which object arbitrates occupancy for a
+/// node, and how many concurrent occupants it allows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lock {
+    /// Lock owner (an ExecuteStage for sibling FUs, the object itself
+    /// otherwise).
+    pub owner: ObjId,
+    /// Concurrent occupancy (1 except memories with
+    /// `max_concurrent_requests > 1`).
+    pub capacity: u32,
+}

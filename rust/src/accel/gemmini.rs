@@ -1,0 +1,320 @@
+//! Gemmini — UC Berkeley's parameterizable GEMM accelerator modeled at the
+//! tiled-GEMM level (paper §7.2, Fig. 10).
+//!
+//! Architecture captured from the block diagram:
+//!
+//! - a DIM×DIM systolic MAC array fed by a **scratchpad** (banked SRAM,
+//!   GEMM inputs A/B/D) and an **accumulator** SRAM (output C),
+//! - a **DMA engine** between DRAM (the SoC L2 in the real system) and the
+//!   SRAMs,
+//! - a **decoupled access-execute** split: the reorder buffer issues
+//!   `mvin`/`mvout` to the DMA controller and `preload`/`compute` to the
+//!   array controller as soon as their dependencies resolve.
+//!
+//! The decoupling is modeled as two parallel ExecuteStages (`dma_engine0`,
+//! `gemmini0`) whose sibling-FU structural locks serialize DMA transfers
+//! against each other and array ops against each other — while DMA and
+//! compute overlap freely, dependency-limited, exactly like the ROB. Hazards
+//! between instructions are the AIDG's data dependencies over scratchpad /
+//! accumulator *tile tokens* (one address per DIM×DIM tile).
+//!
+//! The DRAM read latency is a *linear burst model* over the accessed data
+//! volume and start address (paper §7.2): `mvin` carries
+//! `imm0 = volume (words)` and `imm1 = start address` and the memory's
+//! latency expression charges `base + volume/words-per-beat + row-open`
+//! cycles.
+
+use anyhow::Result;
+
+use crate::acadl::{Diagram, Latency};
+use crate::ids::{Addr, ObjId, OpId};
+
+/// DRAM token space (one token per DIM×DIM tile of each operand).
+pub const DRAM_BASE: Addr = 0;
+/// Scratchpad token space.
+pub const SPAD_BASE: Addr = 1 << 40;
+/// Accumulator token space.
+pub const ACC_BASE: Addr = 2 << 40;
+const REGION_WORDS: u64 = 1 << 40;
+
+/// Gemmini instance configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct GemminiConfig {
+    /// Systolic array dimension (the paper instantiates DIM = 16).
+    pub dim: u32,
+    /// DRAM burst-model parameters: fixed cost per transaction.
+    pub dram_base_latency: u64,
+    /// Words transferred per DRAM beat.
+    pub dram_words_per_beat: u64,
+    /// Row-open granularity for the start-address term.
+    pub dram_row_words: u64,
+    /// Instruction memory port width (RoCC command queue width).
+    pub imem_port_width: u32,
+    /// Issue buffer (reorder buffer) size.
+    pub issue_buffer: u32,
+}
+
+impl Default for GemminiConfig {
+    fn default() -> Self {
+        Self {
+            dim: 16,
+            dram_base_latency: 12,
+            dram_words_per_beat: 8,
+            dram_row_words: 256,
+            imem_port_width: 2,
+            issue_buffer: 8,
+        }
+    }
+}
+
+impl GemminiConfig {
+    pub fn with_dim(mut self, dim: u32) -> Self {
+        self.dim = dim;
+        self
+    }
+}
+
+/// Interned Gemmini ISA ops (named after the real `gemmini_*` intrinsics).
+#[derive(Debug, Clone, Copy)]
+pub struct GemminiOps {
+    pub config_ex: OpId,
+    pub config_ld: OpId,
+    pub config_st: OpId,
+    /// DRAM → scratchpad tile move.
+    pub mvin: OpId,
+    /// DRAM → accumulator tile move (bias / residual operand).
+    pub mvin_acc: OpId,
+    /// Accumulator → DRAM tile move (applies activation/pooling on the way
+    /// out when configured — the fusion path).
+    pub mvout: OpId,
+    /// Load the B tile into the array.
+    pub preload: OpId,
+    /// A·B into a fresh accumulator tile.
+    pub compute_preloaded: OpId,
+    /// A·B accumulated onto an existing accumulator tile.
+    pub compute_accumulated: OpId,
+}
+
+/// The instantiated Gemmini model.
+pub struct Gemmini {
+    pub diagram: Diagram,
+    pub cfg: GemminiConfig,
+    pub ops: GemminiOps,
+    pub dram: ObjId,
+    pub spad: ObjId,
+    pub acc: ObjId,
+    /// Array state register written by `preload`, read by `compute_*`.
+    pub b_tile_reg: crate::ids::RegId,
+    /// Config register written by `config_*`, read by array + DMA ops.
+    pub cfg_reg: crate::ids::RegId,
+}
+
+impl Gemmini {
+    /// Mirror of the DRAM burst read-latency expression (tests + baselines).
+    pub fn dram_read_cycles(cfg: &GemminiConfig, volume_words: u64, start_addr: u64) -> u64 {
+        cfg.dram_base_latency
+            + volume_words.div_ceil(cfg.dram_words_per_beat)
+            + (start_addr % cfg.dram_row_words) / cfg.dram_words_per_beat
+    }
+
+    /// Array occupancy of one DIM×DIM×DIM compute: DIM rows streamed through
+    /// a pipeline ~2·DIM deep.
+    pub fn compute_cycles(dim: u32) -> u64 {
+        3 * dim as u64 + 2
+    }
+
+    /// Array occupancy of a preload (B tile streamed in column-wise).
+    pub fn preload_cycles(dim: u32) -> u64 {
+        dim as u64 + 2
+    }
+
+    /// Build the Fig. 10 ACADL object diagram.
+    pub fn new(cfg: GemminiConfig) -> Result<Self> {
+        assert!(cfg.dim >= 1);
+        let mut d = Diagram::new(format!("gemmini{}x{}", cfg.dim, cfg.dim));
+        let (_imem, ifs) = d.add_fetch(
+            "instructionMemory",
+            1,
+            cfg.imem_port_width,
+            "reorderBuffer",
+            1,
+            cfg.issue_buffer,
+        );
+
+        // DRAM with the linear burst model over (volume, start address)
+        let read_expr = format!(
+            "{base} + cdiv(imm0, {beat}) + (imm1 % {row}) / {beat}",
+            base = cfg.dram_base_latency,
+            beat = cfg.dram_words_per_beat,
+            row = cfg.dram_row_words,
+        );
+        let dram = d.add_memory(
+            "dram0",
+            Latency::Expr(crate::acadl::Expr::parse(&read_expr)?),
+            Latency::Expr(crate::acadl::Expr::parse(&read_expr)?),
+            1,
+            1,
+            DRAM_BASE,
+            REGION_WORDS,
+        );
+        // banked scratchpad + accumulator: token latency 1, two banks each
+        let spad = d.add_memory("scratchpad", 1, 1, 1, 2, SPAD_BASE, REGION_WORDS);
+        let acc = d.add_memory("accumulator", 1, 1, 1, 2, ACC_BASE, REGION_WORDS);
+
+        let (state_rf, state_regs) = d.add_regfile("arrayState", "st", 2);
+        let b_tile_reg = state_regs[0];
+        let cfg_reg = state_regs[1];
+
+        // decoupled access-execute: DMA engine stage
+        let dma_es = d.add_execute_stage("dma_engine0");
+        let mvin_fu = d.add_fu(dma_es, "mvinUnit", Latency::Fixed(1), &["mvin", "mvin_acc"]);
+        let mvout_fu = d.add_fu(dma_es, "mvoutUnit", Latency::Fixed(1), &["mvout"]);
+        d.forward(ifs, dma_es);
+
+        // array stage
+        let arr_es = d.add_execute_stage("gemmini0");
+        let preload_fu = d.add_fu(
+            arr_es,
+            "preloadUnit",
+            Latency::Fixed(Self::preload_cycles(cfg.dim)),
+            &["preload"],
+        );
+        let compute_fu = d.add_fu(
+            arr_es,
+            "computeUnit",
+            Latency::Fixed(Self::compute_cycles(cfg.dim)),
+            &["compute_preloaded", "compute_accumulated"],
+        );
+        let config_fu = d.add_fu(
+            arr_es,
+            "configUnit",
+            Latency::Fixed(2),
+            &["config_ex", "config_ld", "config_st"],
+        );
+        d.forward(ifs, arr_es);
+
+        // associations
+        d.mem_reads(mvin_fu, dram);
+        d.mem_writes(mvin_fu, spad);
+        d.mem_writes(mvin_fu, acc); // mvin_acc targets the accumulator
+        d.fu_reads(mvin_fu, state_rf); // config dependency
+        d.mem_reads(mvout_fu, acc);
+        d.mem_writes(mvout_fu, dram);
+        d.fu_reads(mvout_fu, state_rf);
+
+        d.mem_reads(preload_fu, spad);
+        d.fu_writes(preload_fu, state_rf);
+        d.fu_reads(preload_fu, state_rf);
+        d.mem_reads(compute_fu, spad);
+        d.mem_reads(compute_fu, acc);
+        d.mem_writes(compute_fu, acc);
+        d.fu_reads(compute_fu, state_rf);
+        d.fu_writes(config_fu, state_rf);
+        d.fu_reads(config_fu, state_rf);
+
+        let ops = GemminiOps {
+            config_ex: d.op("config_ex"),
+            config_ld: d.op("config_ld"),
+            config_st: d.op("config_st"),
+            mvin: d.op("mvin"),
+            mvin_acc: d.op("mvin_acc"),
+            mvout: d.op("mvout"),
+            preload: d.op("preload"),
+            compute_preloaded: d.op("compute_preloaded"),
+            compute_accumulated: d.op("compute_accumulated"),
+        };
+        d.finalize()?;
+        Ok(Self { diagram: d, cfg, ops, dram, spad, acc, b_tile_reg, cfg_reg })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+
+    fn g() -> Gemmini {
+        Gemmini::new(GemminiConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn dram_burst_model() {
+        let cfg = GemminiConfig::default();
+        // 256 words from aligned start: 12 + 32 + 0
+        assert_eq!(Gemmini::dram_read_cycles(&cfg, 256, 0), 44);
+        // unaligned start pays the row-open term
+        assert!(Gemmini::dram_read_cycles(&cfg, 256, 128) > 44);
+        // volume dominates asymptotically
+        assert!(Gemmini::dram_read_cycles(&cfg, 4096, 0) > Gemmini::dram_read_cycles(&cfg, 256, 0));
+    }
+
+    #[test]
+    fn dram_expr_matches_mirror() {
+        let g = g();
+        let i = Instruction::new(g.ops.mvin)
+            .imms(&[256, 128])
+            .read_mem(&[DRAM_BASE + 17])
+            .write_mem(&[SPAD_BASE + 3]);
+        let lat = g.diagram.mem_latency(g.dram, 1, false, &i);
+        assert_eq!(lat, Gemmini::dram_read_cycles(&g.cfg, 256, 128));
+    }
+
+    #[test]
+    fn mvin_routes_to_dma() {
+        let g = g();
+        let i = Instruction::new(g.ops.mvin)
+            .imms(&[256, 0])
+            .read_mem(&[DRAM_BASE])
+            .write_mem(&[SPAD_BASE]);
+        let r = g.diagram.route(&i).unwrap();
+        assert_eq!(g.diagram.object(r.fu).name, "mvinUnit");
+        assert!(r.has_writeback);
+    }
+
+    #[test]
+    fn compute_routes_to_array() {
+        let g = g();
+        let i = Instruction::new(g.ops.compute_accumulated)
+            .reads(&[g.b_tile_reg])
+            .read_mem(&[SPAD_BASE])
+            .write_mem(&[ACC_BASE]);
+        let r = g.diagram.route(&i).unwrap();
+        assert_eq!(g.diagram.object(r.fu).name, "computeUnit");
+    }
+
+    #[test]
+    fn dma_and_array_have_separate_locks() {
+        // the decoupled access-execute property: mvin and compute can
+        // overlap, mvin and mvout cannot
+        let g = g();
+        let mvin = Instruction::new(g.ops.mvin)
+            .imms(&[1, 0])
+            .read_mem(&[DRAM_BASE])
+            .write_mem(&[SPAD_BASE]);
+        let mvout = Instruction::new(g.ops.mvout)
+            .imms(&[1, 0])
+            .read_mem(&[ACC_BASE])
+            .write_mem(&[DRAM_BASE + 1]);
+        let comp = Instruction::new(g.ops.compute_preloaded)
+            .reads(&[g.b_tile_reg])
+            .read_mem(&[SPAD_BASE])
+            .write_mem(&[ACC_BASE]);
+        let (ri, ro, rc) = (
+            g.diagram.route(&mvin).unwrap(),
+            g.diagram.route(&mvout).unwrap(),
+            g.diagram.route(&comp).unwrap(),
+        );
+        assert_eq!(g.diagram.lock(ri.fu).owner, g.diagram.lock(ro.fu).owner);
+        assert_ne!(g.diagram.lock(ri.fu).owner, g.diagram.lock(rc.fu).owner);
+    }
+
+    #[test]
+    fn preload_feeds_compute_via_register() {
+        let g = g();
+        let preload = Instruction::new(g.ops.preload)
+            .writes(&[g.b_tile_reg])
+            .read_mem(&[SPAD_BASE + 1]);
+        let r = g.diagram.route(&preload).unwrap();
+        assert_eq!(g.diagram.object(r.fu).name, "preloadUnit");
+    }
+}

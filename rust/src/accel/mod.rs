@@ -1,0 +1,19 @@
+//! ACADL object-diagram builders for the paper's four accelerator
+//! architectures (§4.3, §7), each at its own abstraction level:
+//!
+//! | Model | Level | Paper section |
+//! |---|---|---|
+//! | [`systolic`] | scalar `load`/`mac`/`store` | §4.3 Fig. 3/4, §7.3 |
+//! | [`ultratrail`] | fused `conv_ext` tensor ops | §4.3 Fig. 5/6, §7.1 |
+//! | [`gemmini`] | tiled-GEMM `mvin`/`preload`/`compute`/`mvout` | §7.2 Fig. 10 |
+//! | [`plasticine`] | parallel tiled GEMM across PCUs | §7.4 Fig. 14 |
+
+pub mod gemmini;
+pub mod plasticine;
+pub mod systolic;
+pub mod ultratrail;
+
+pub use gemmini::{Gemmini, GemminiConfig};
+pub use plasticine::{Plasticine, PlasticineConfig};
+pub use systolic::{Systolic, SystolicConfig};
+pub use ultratrail::{UltraTrail, UltraTrailConfig};

@@ -1,0 +1,349 @@
+//! Plasticine-derived reconfigurable architecture modeled at the matrix
+//! operation level (paper §7.4, Fig. 14).
+//!
+//! A rows×cols checkerboard of **Pattern Compute Units** (PCUs) and
+//! **Pattern Memory Units** (PMUs) connected by a switch-box interconnect:
+//!
+//! - each PCU is an ExecuteStage + FunctionalUnit executing tiled GEMM /
+//!   matrix-add instructions (with fused activation/pooling) on its SIMD
+//!   pipeline, plus input/output RegisterFiles for the staged tiles;
+//! - each PMU is a scratchpad Memory;
+//! - each PCU's switch port is an ExecuteStage + FunctionalUnit moving
+//!   tiles PMU → PCU input registers (`route_in`) and PCU output register →
+//!   PMU (`route_out`); the per-instruction immediate `imm1` carries the
+//!   Manhattan hop distance of the route, charged one cycle per hop per
+//!   multi-word beat.
+//!
+//! Tile-op immediates: `imm0` = tile dimension T (latency is evaluated per
+//! instruction so one diagram serves every tile size ≤ the configured
+//! maximum), `imm1` = hop count (routing ops only).
+
+use anyhow::Result;
+
+use crate::acadl::{Diagram, Latency};
+use crate::ids::{Addr, ObjId, OpId, RegId};
+
+/// PMU token-address region size.
+pub const PMU_REGION_WORDS: u64 = 1 << 24;
+/// Base of the PMU token address space (PMU `i` claims
+/// `[PMU_BASE + i·REGION, …)`).
+pub const PMU_BASE: Addr = 0;
+
+/// Plasticine-derived instance configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PlasticineConfig {
+    /// Checkerboard rows.
+    pub rows: u32,
+    /// Checkerboard columns.
+    pub cols: u32,
+    /// PCU GEMM tile dimension T (the Fig. 15 DSE axis).
+    pub tile: u32,
+    /// SIMD lanes per PCU pipeline.
+    pub simd_lanes: u32,
+    /// PCU pipeline depth (fill cycles per tile op).
+    pub pipe_depth: u32,
+    /// Words moved per switch-hop cycle.
+    pub switch_width: u32,
+    /// Instruction memory port width.
+    pub imem_port_width: u32,
+    pub issue_buffer: u32,
+}
+
+impl PlasticineConfig {
+    pub fn new(rows: u32, cols: u32, tile: u32) -> Self {
+        Self {
+            rows,
+            cols,
+            tile,
+            simd_lanes: 16,
+            pipe_depth: 6,
+            switch_width: 4,
+            imem_port_width: 2,
+            issue_buffer: 8,
+        }
+    }
+}
+
+/// Interned Plasticine ISA ops.
+#[derive(Debug, Clone, Copy)]
+pub struct PlasticineOps {
+    /// T×T×T GEMM tile (fused activation on the SIMD tail).
+    pub gemm_tile: OpId,
+    /// T×T element-wise add tile.
+    pub add_tile: OpId,
+    /// PMU → PCU input-register tile move.
+    pub route_in: OpId,
+    /// PCU output register → PMU tile move.
+    pub route_out: OpId,
+}
+
+/// One instantiated PCU's handles.
+#[derive(Debug, Clone, Copy)]
+pub struct Pcu {
+    /// Grid position (row, col) for hop-distance computation.
+    pub pos: (u32, u32),
+    pub r_a: RegId,
+    pub r_b: RegId,
+    pub r_out: RegId,
+}
+
+/// One instantiated PMU's handles.
+#[derive(Debug, Clone, Copy)]
+pub struct Pmu {
+    pub pos: (u32, u32),
+    pub mem: ObjId,
+    /// Token-address base of this PMU.
+    pub base: Addr,
+}
+
+/// The instantiated Plasticine-derived model.
+pub struct Plasticine {
+    pub diagram: Diagram,
+    pub cfg: PlasticineConfig,
+    pub ops: PlasticineOps,
+    pub pcus: Vec<Pcu>,
+    pub pmus: Vec<Pmu>,
+}
+
+impl Plasticine {
+    /// Mirror of the PCU tile-GEMM latency expression.
+    pub fn gemm_tile_cycles(cfg: &PlasticineConfig, t: u32) -> u64 {
+        (t as u64 * t as u64 * t as u64).div_ceil(cfg.simd_lanes as u64) + cfg.pipe_depth as u64
+    }
+
+    /// Mirror of the tile-add latency expression.
+    pub fn add_tile_cycles(cfg: &PlasticineConfig, t: u32) -> u64 {
+        (t as u64 * t as u64).div_ceil(cfg.simd_lanes as u64) + cfg.pipe_depth as u64
+    }
+
+    /// Mirror of the switch-route latency expression (tile of T² words over
+    /// `hops` switch hops, `switch_width` words per beat).
+    pub fn route_cycles(cfg: &PlasticineConfig, t: u32, hops: u32) -> u64 {
+        let beats = (t as u64 * t as u64).div_ceil(cfg.switch_width as u64);
+        beats + hops as u64
+    }
+
+    /// Manhattan distance between two grid positions.
+    pub fn hops(a: (u32, u32), b: (u32, u32)) -> u32 {
+        a.0.abs_diff(b.0) + a.1.abs_diff(b.1)
+    }
+
+    /// Build the Fig. 14 ACADL object diagram.
+    pub fn new(cfg: PlasticineConfig) -> Result<Self> {
+        if cfg.rows < 1 || cfg.cols < 1 || cfg.rows * cfg.cols < 2 {
+            anyhow::bail!("grid {}x{} too small (need at least one PCU and one PMU)", cfg.rows, cfg.cols);
+        }
+        assert!(cfg.tile >= 1);
+        let mut d = Diagram::new(format!(
+            "plasticine{}x{}t{}",
+            cfg.rows, cfg.cols, cfg.tile
+        ));
+        let (_imem, ifs) = d.add_fetch(
+            "instructionMemory",
+            1,
+            cfg.imem_port_width,
+            "instructionFetchStage",
+            1,
+            cfg.issue_buffer,
+        );
+
+        let ops = PlasticineOps {
+            gemm_tile: d.op("gemm_tile"),
+            add_tile: d.op("add_tile"),
+            route_in: d.op("route_in"),
+            route_out: d.op("route_out"),
+        };
+
+        // PMUs first (memories must exist before switch FU associations)
+        let mut pmus = Vec::new();
+        for r in 0..cfg.rows {
+            for c in 0..cfg.cols {
+                if (r + c) % 2 == 1 {
+                    let i = pmus.len();
+                    let base = PMU_BASE + i as u64 * PMU_REGION_WORDS;
+                    // banked scratchpad: serves several switch transactions
+                    // concurrently (capacity-1 objects would serialize the
+                    // parallel PCU streams in program order — the paper's
+                    // "last structure user" rule — where real banked PMUs
+                    // arbitrate by arrival)
+                    let mem = d.add_memory(
+                        &format!("pmu[{r}][{c}]"),
+                        1,
+                        1,
+                        cfg.switch_width,
+                        4,
+                        base,
+                        PMU_REGION_WORDS,
+                    );
+                    pmus.push(Pmu { pos: (r, c), mem, base });
+                }
+            }
+        }
+        if pmus.is_empty() {
+            anyhow::bail!("grid {}x{} yields no PMUs", cfg.rows, cfg.cols);
+        }
+
+        let gemm_expr = format!(
+            "cdiv(imm0 * imm0 * imm0, {lanes}) + {depth}",
+            lanes = cfg.simd_lanes,
+            depth = cfg.pipe_depth
+        );
+        let add_expr = format!(
+            "cdiv(imm0 * imm0, {lanes}) + {depth}",
+            lanes = cfg.simd_lanes,
+            depth = cfg.pipe_depth
+        );
+        let route_expr = format!("cdiv(imm0 * imm0, {w}) + imm1", w = cfg.switch_width);
+
+        let mut pcus = Vec::new();
+        for r in 0..cfg.rows {
+            for c in 0..cfg.cols {
+                if (r + c) % 2 == 0 {
+                    let i = pcus.len();
+                    let (rf_in, in_regs) =
+                        d.add_regfile(&format!("pcu[{r}][{c}].in"), &format!("pcu{i}.in"), 2);
+                    let (rf_out, out_regs) =
+                        d.add_regfile(&format!("pcu[{r}][{c}].out"), &format!("pcu{i}.out"), 1);
+
+                    let es = d.add_execute_stage(&format!("pcu[{r}][{c}].es"));
+                    let fu = d.add_fu(
+                        es,
+                        &format!("pcu[{r}][{c}].simd"),
+                        Latency::Expr(crate::acadl::Expr::parse(&gemm_expr)?),
+                        &["gemm_tile"],
+                    );
+                    let add_fu = d.add_fu(
+                        es,
+                        &format!("pcu[{r}][{c}].simd.add"),
+                        Latency::Expr(crate::acadl::Expr::parse(&add_expr)?),
+                        &["add_tile"],
+                    );
+                    d.forward(ifs, es);
+                    for f in [fu, add_fu] {
+                        d.fu_reads(f, rf_in);
+                        d.fu_reads(f, rf_out); // accumulate onto own output
+                        d.fu_writes(f, rf_out);
+                    }
+
+                    // switch port: PMU <-> PCU tile moves
+                    let sw_es = d.add_execute_stage(&format!("switch[{r}][{c}].es"));
+                    let sw = d.add_fu(
+                        sw_es,
+                        &format!("switch[{r}][{c}]"),
+                        Latency::Expr(crate::acadl::Expr::parse(&route_expr)?),
+                        &["route_in", "route_out"],
+                    );
+                    d.forward(ifs, sw_es);
+                    d.fu_writes(sw, rf_in);
+                    d.fu_reads(sw, rf_out);
+                    for pmu in &pmus {
+                        d.mem_reads(sw, pmu.mem);
+                        d.mem_writes(sw, pmu.mem);
+                    }
+
+                    pcus.push(Pcu {
+                        pos: (r, c),
+                        r_a: in_regs[0],
+                        r_b: in_regs[1],
+                        r_out: out_regs[0],
+                    });
+                }
+            }
+        }
+        if pcus.is_empty() {
+            anyhow::bail!("grid {}x{} yields no PCUs", cfg.rows, cfg.cols);
+        }
+
+        d.finalize()?;
+        Ok(Self { diagram: d, cfg, ops, pcus, pmus })
+    }
+
+    /// Nearest PMU (by hop distance) to PCU `p`, with the distance.
+    pub fn nearest_pmu(&self, p: usize) -> (usize, u32) {
+        let pos = self.pcus[p].pos;
+        self.pmus
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (i, Self::hops(pos, m.pos)))
+            .min_by_key(|&(_, h)| h)
+            .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+
+    #[test]
+    fn checkerboard_split() {
+        let p = Plasticine::new(PlasticineConfig::new(3, 6, 16)).unwrap();
+        assert_eq!(p.pcus.len(), 9);
+        assert_eq!(p.pmus.len(), 9);
+        let p2 = Plasticine::new(PlasticineConfig::new(2, 2, 8)).unwrap();
+        assert_eq!(p2.pcus.len(), 2);
+        assert_eq!(p2.pmus.len(), 2);
+    }
+
+    #[test]
+    fn latency_mirrors() {
+        let cfg = PlasticineConfig::new(2, 2, 16);
+        assert_eq!(Plasticine::gemm_tile_cycles(&cfg, 16), 4096 / 16 + 6);
+        assert_eq!(Plasticine::add_tile_cycles(&cfg, 16), 16 + 6);
+        assert_eq!(Plasticine::route_cycles(&cfg, 16, 3), 64 + 3);
+    }
+
+    #[test]
+    fn gemm_expr_matches_mirror() {
+        let p = Plasticine::new(PlasticineConfig::new(2, 2, 16)).unwrap();
+        let pcu = p.pcus[0];
+        let i = Instruction::new(p.ops.gemm_tile)
+            .reads(&[pcu.r_a, pcu.r_b])
+            .writes(&[pcu.r_out])
+            .imms(&[16]);
+        let r = p.diagram.route(&i).unwrap();
+        if let crate::acadl::ObjectKind::FunctionalUnit { latency, .. } =
+            &p.diagram.object(r.fu).kind
+        {
+            assert_eq!(latency.eval(&i), Plasticine::gemm_tile_cycles(&p.cfg, 16));
+        } else {
+            panic!("not an FU");
+        }
+    }
+
+    #[test]
+    fn route_in_reads_pmu_writes_pcu() {
+        let p = Plasticine::new(PlasticineConfig::new(3, 6, 8)).unwrap();
+        let pcu = p.pcus[2];
+        let (pm, hops) = p.nearest_pmu(2);
+        let i = Instruction::new(p.ops.route_in)
+            .writes(&[pcu.r_a])
+            .read_mem(&[p.pmus[pm].base + 7])
+            .imms(&[8, hops as i64]);
+        let r = p.diagram.route(&i).unwrap();
+        assert!(p.diagram.object(r.fu).name.starts_with("switch"));
+        assert!(r.has_writeback);
+    }
+
+    #[test]
+    fn pcus_have_independent_locks() {
+        let p = Plasticine::new(PlasticineConfig::new(2, 2, 8)).unwrap();
+        let (a, b) = (p.pcus[0], p.pcus[1]);
+        let ia = Instruction::new(p.ops.gemm_tile).reads(&[a.r_a, a.r_b]).writes(&[a.r_out]).imms(&[8]);
+        let ib = Instruction::new(p.ops.gemm_tile).reads(&[b.r_a, b.r_b]).writes(&[b.r_out]).imms(&[8]);
+        let ra = p.diagram.route(&ia).unwrap();
+        let rb = p.diagram.route(&ib).unwrap();
+        assert_ne!(p.diagram.lock(ra.fu).owner, p.diagram.lock(rb.fu).owner);
+    }
+
+    #[test]
+    fn hops_manhattan() {
+        assert_eq!(Plasticine::hops((0, 0), (2, 3)), 5);
+        assert_eq!(Plasticine::hops((1, 1), (1, 1)), 0);
+    }
+
+    #[test]
+    fn degenerate_grids_rejected() {
+        assert!(Plasticine::new(PlasticineConfig::new(1, 1, 8)).is_err());
+    }
+}

@@ -1,0 +1,335 @@
+//! Parameterizable systolic array (paper §4.3, Figs. 3/4; evaluated in §7.3).
+//!
+//! An R×C grid of processing elements (PEs), each an ExecuteStage +
+//! FunctionalUnit + RegisterFile (`in`, `in2`, `w`, `acc`). Load units sit on
+//! the top row and leftmost column, store units on the bottom row, all
+//! connected to a shared data memory:
+//!
+//! - left load unit `r`: scalar activation loads into `pe[r][0].in`
+//! - top load unit `c`: weight-column loads (`loadw`, one transaction per
+//!   `port_width` words — the Fig. 13 knob) and element-wise operand loads
+//!   into column `c`'s registers
+//! - PE (r,c): `mac` (reads `in`,`w` and the psum `acc` of the PE above,
+//!   weight-stationary with psums flowing down), `mov_r` / `mov_d` data
+//!   movement to the right/below neighbor, and the element-wise ops
+//! - bottom store unit `c`: `store` (plain write) and `store_acc`
+//!   (read-modify-write accumulation into the psum address)
+//!
+//! The instruction-memory port width merges fetch nodes in the AIDG (§6.1)
+//! and determines `k_block` (eq. 3).
+
+use anyhow::Result;
+
+use crate::acadl::{Diagram, Latency};
+use crate::ids::{Addr, ObjId, OpId, RegId};
+
+/// Address-space bases within the single data memory.
+pub const ACT_BASE: Addr = 0;
+pub const WEIGHT_BASE: Addr = 1 << 32;
+pub const PSUM_BASE: Addr = 2 << 32;
+pub const OUT_BASE: Addr = 3 << 32;
+const MEM_WORDS: u64 = 4 << 32;
+
+/// Configuration of a systolic array instance.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicConfig {
+    pub rows: u32,
+    pub cols: u32,
+    /// Data-memory port width (words per transaction) — the Fig. 13 sweep.
+    pub port_width: u32,
+    /// Data-memory transaction latencies.
+    pub mem_read_latency: u64,
+    pub mem_write_latency: u64,
+    /// Concurrent memory transactions (banked SRAM ports).
+    pub mem_concurrency: u32,
+    /// Instruction-memory port width (instructions per fetch).
+    pub imem_port_width: u32,
+    /// Issue buffer size of the fetch stage.
+    pub issue_buffer: u32,
+}
+
+impl SystolicConfig {
+    pub fn new(rows: u32, cols: u32) -> Self {
+        Self {
+            rows,
+            cols,
+            port_width: 2,
+            mem_read_latency: 4,
+            mem_write_latency: 4,
+            // one port per peripheral unit: left loads + top loads + stores
+            mem_concurrency: rows + 2 * cols,
+            imem_port_width: 2,
+            issue_buffer: 4,
+        }
+    }
+
+    pub fn with_port_width(mut self, pw: u32) -> Self {
+        self.port_width = pw;
+        self
+    }
+}
+
+/// Per-PE register ids.
+#[derive(Debug, Clone, Copy)]
+pub struct PeRegs {
+    pub r_in: RegId,
+    pub r_in2: RegId,
+    pub r_w: RegId,
+    pub r_acc: RegId,
+}
+
+/// Interned operation ids of the systolic ISA.
+#[derive(Debug, Clone, Copy)]
+pub struct SystolicOps {
+    pub load: OpId,
+    pub loadw: OpId,
+    pub loade: OpId,
+    pub loade2: OpId,
+    pub mov_r: OpId,
+    pub mov_d: OpId,
+    pub mac: OpId,
+    pub ew_relu: OpId,
+    pub ew_clip: OpId,
+    pub ew_add: OpId,
+    pub ew_mul: OpId,
+    pub ew_acc: OpId,
+    pub ew_mac: OpId,
+    pub store: OpId,
+    pub store_acc: OpId,
+}
+
+/// The instantiated model: diagram + handles the mapper needs.
+pub struct Systolic {
+    pub diagram: Diagram,
+    pub cfg: SystolicConfig,
+    pub ops: SystolicOps,
+    /// `pe[r][c]` register ids.
+    pub pe: Vec<Vec<PeRegs>>,
+}
+
+impl Systolic {
+    /// Build the ACADL object diagram for an R×C systolic array.
+    pub fn new(cfg: SystolicConfig) -> Result<Self> {
+        assert!(cfg.rows >= 1 && cfg.cols >= 1);
+        let mut d = Diagram::new(format!("systolic{}x{}", cfg.rows, cfg.cols));
+        let (_imem, ifs) = d.add_fetch(
+            "instructionMemory",
+            1,
+            cfg.imem_port_width,
+            "instructionFetchStage",
+            1,
+            cfg.issue_buffer,
+        );
+        let dmem = d.add_memory(
+            "dataMemory",
+            cfg.mem_read_latency,
+            cfg.mem_write_latency,
+            cfg.port_width,
+            cfg.mem_concurrency,
+            0,
+            MEM_WORDS,
+        );
+
+        let ops = SystolicOps {
+            load: d.op("load"),
+            loadw: d.op("loadw"),
+            loade: d.op("loade"),
+            loade2: d.op("loade2"),
+            mov_r: d.op("mov_r"),
+            mov_d: d.op("mov_d"),
+            mac: d.op("mac"),
+            ew_relu: d.op("ew_relu"),
+            ew_clip: d.op("ew_clip"),
+            ew_add: d.op("ew_add"),
+            ew_mul: d.op("ew_mul"),
+            ew_acc: d.op("ew_acc"),
+            ew_mac: d.op("ew_mac"),
+            store: d.op("store"),
+            store_acc: d.op("store_acc"),
+        };
+
+        // PE grid: regfile + execute stage + functional unit each
+        let mut pe_regs: Vec<Vec<PeRegs>> = Vec::new();
+        let mut pe_rf: Vec<Vec<ObjId>> = Vec::new();
+        let mut pe_fu: Vec<Vec<ObjId>> = Vec::new();
+        for r in 0..cfg.rows {
+            let mut regs_row = Vec::new();
+            let mut rf_row = Vec::new();
+            let mut fu_row = Vec::new();
+            for c in 0..cfg.cols {
+                let (rf, regs) =
+                    d.add_regfile(&format!("pe[{r}][{c}].rf"), &format!("pe[{r}][{c}]."), 4);
+                let es = d.add_execute_stage(&format!("pe[{r}][{c}].es"));
+                let fu = d.add_fu(
+                    es,
+                    &format!("pe[{r}][{c}].alu"),
+                    Latency::Fixed(1),
+                    &[
+                        "mac", "mov_r", "mov_d", "ew_relu", "ew_clip", "ew_add", "ew_mul",
+                        "ew_acc", "ew_mac",
+                    ],
+                );
+                d.forward(ifs, es);
+                regs_row.push(PeRegs {
+                    r_in: regs[0],
+                    r_in2: regs[1],
+                    r_w: regs[2],
+                    r_acc: regs[3],
+                });
+                rf_row.push(rf);
+                fu_row.push(fu);
+            }
+            pe_regs.push(regs_row);
+            pe_rf.push(rf_row);
+            pe_fu.push(fu_row);
+        }
+
+        // PE register access: own RF read+write; read the PE above (psum
+        // chain); write the right neighbor (mov_r) and the PE below (mov_d).
+        for r in 0..cfg.rows as usize {
+            for c in 0..cfg.cols as usize {
+                let fu = pe_fu[r][c];
+                d.fu_reads(fu, pe_rf[r][c]);
+                d.fu_writes(fu, pe_rf[r][c]);
+                if r > 0 {
+                    d.fu_reads(fu, pe_rf[r - 1][c]);
+                }
+                if c + 1 < cfg.cols as usize {
+                    d.fu_writes(fu, pe_rf[r][c + 1]);
+                }
+                if r + 1 < cfg.rows as usize {
+                    d.fu_writes(fu, pe_rf[r + 1][c]);
+                }
+            }
+        }
+
+        // left load units (one per row): scalar activation loads
+        for r in 0..cfg.rows as usize {
+            let es = d.add_execute_stage(&format!("memoryLoadUnit[{r}][left].es"));
+            let fu = d.add_fu(
+                es,
+                &format!("memoryLoadUnit[{r}][left]"),
+                Latency::Fixed(1),
+                &["load"],
+            );
+            d.forward(ifs, es);
+            d.fu_writes(fu, pe_rf[r][0]);
+            d.mem_reads(fu, dmem);
+        }
+
+        // top load units (one per column): weight-column + element-wise loads
+        for c in 0..cfg.cols as usize {
+            let es = d.add_execute_stage(&format!("memoryLoadUnit[top][{c}].es"));
+            let fu = d.add_fu(
+                es,
+                &format!("memoryLoadUnit[top][{c}]"),
+                Latency::Fixed(1),
+                &["loadw", "loade", "loade2"],
+            );
+            d.forward(ifs, es);
+            for rf_row in pe_rf.iter() {
+                d.fu_writes(fu, rf_row[c]);
+            }
+            d.mem_reads(fu, dmem);
+        }
+
+        // bottom store units (one per column)
+        for c in 0..cfg.cols as usize {
+            let es = d.add_execute_stage(&format!("memoryStoreUnit[{c}].es"));
+            let fu = d.add_fu(
+                es,
+                &format!("memoryStoreUnit[{c}]"),
+                Latency::Fixed(1),
+                &["store", "store_acc"],
+            );
+            d.forward(ifs, es);
+            d.fu_reads(fu, pe_rf[cfg.rows as usize - 1][c]);
+            d.mem_reads(fu, dmem); // store_acc reads the psum before accumulating
+            d.mem_writes(fu, dmem);
+        }
+
+        d.finalize()?;
+        Ok(Self { diagram: d, cfg, ops, pe: pe_regs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+
+    #[test]
+    fn builds_2x2() {
+        let s = Systolic::new(SystolicConfig::new(2, 2)).unwrap();
+        // fetch(2) + 4 PEs × 3 + 2 left + 2 top + 2 stores (×2 objs each) +
+        // dmem + writeBack
+        assert!(s.diagram.num_objects() > 20);
+        assert_eq!(s.pe.len(), 2);
+        assert_eq!(s.pe[0].len(), 2);
+    }
+
+    #[test]
+    fn mac_routes_to_its_pe() {
+        let s = Systolic::new(SystolicConfig::new(2, 2)).unwrap();
+        let p = s.pe[1][1];
+        let above = s.pe[0][1];
+        let i = Instruction::new(s.ops.mac)
+            .reads(&[p.r_in, p.r_w, above.r_acc])
+            .writes(&[p.r_acc]);
+        let r = s.diagram.route(&i).unwrap();
+        assert_eq!(s.diagram.object(r.fu).name, "pe[1][1].alu");
+    }
+
+    #[test]
+    fn load_routes_to_left_unit() {
+        let s = Systolic::new(SystolicConfig::new(2, 2)).unwrap();
+        let i = Instruction::new(s.ops.load).writes(&[s.pe[1][0].r_in]).read_mem(&[ACT_BASE + 5]);
+        let r = s.diagram.route(&i).unwrap();
+        assert_eq!(s.diagram.object(r.fu).name, "memoryLoadUnit[1][left]");
+        assert!(r.has_writeback);
+    }
+
+    #[test]
+    fn loadw_routes_to_top_unit_of_column() {
+        let s = Systolic::new(SystolicConfig::new(3, 3)).unwrap();
+        let col = 2usize;
+        let writes: Vec<RegId> = (0..3).map(|r| s.pe[r][col].r_w).collect();
+        let addrs: Vec<Addr> = (0..3).map(|r| WEIGHT_BASE + r as u64).collect();
+        let i = Instruction::new(s.ops.loadw).writes(&writes).read_mem(&addrs);
+        let r = s.diagram.route(&i).unwrap();
+        assert_eq!(s.diagram.object(r.fu).name, "memoryLoadUnit[top][2]");
+    }
+
+    #[test]
+    fn store_acc_reads_and_writes_memory() {
+        let s = Systolic::new(SystolicConfig::new(2, 2)).unwrap();
+        let i = Instruction::new(s.ops.store_acc)
+            .reads(&[s.pe[1][0].r_acc])
+            .read_mem(&[PSUM_BASE + 7])
+            .write_mem(&[PSUM_BASE + 7]);
+        let r = s.diagram.route(&i).unwrap();
+        assert_eq!(s.diagram.object(r.fu).name, "memoryStoreUnit[0]");
+        assert_eq!(r.read_mems.len(), 1);
+        assert_eq!(r.write_mems.len(), 1);
+    }
+
+    #[test]
+    fn mov_r_crosses_pe_boundary() {
+        let s = Systolic::new(SystolicConfig::new(2, 2)).unwrap();
+        let i = Instruction::new(s.ops.mov_r)
+            .reads(&[s.pe[0][0].r_in])
+            .writes(&[s.pe[0][1].r_in]);
+        let r = s.diagram.route(&i).unwrap();
+        assert_eq!(s.diagram.object(r.fu).name, "pe[0][0].alu");
+    }
+
+    #[test]
+    fn rightmost_pe_cannot_move_right() {
+        let s = Systolic::new(SystolicConfig::new(2, 2)).unwrap();
+        // no PE has write access beyond the grid; routing must fail
+        let i = Instruction::new(s.ops.mov_r)
+            .reads(&[s.pe[0][1].r_in])
+            .writes(&[s.pe[0][0].r_in]); // wrong direction: no FU writes left
+        assert!(s.diagram.route(&i).is_err());
+    }
+}

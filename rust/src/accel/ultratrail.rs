@@ -1,0 +1,249 @@
+//! UltraTrail — ultra-low-power 1D accelerator modeled at the fused-tensor
+//! level (paper §4.3, Figs. 5/6; evaluated in §7.1).
+//!
+//! The 8×8 combinational MAC array *and* the output processing unit (OPU:
+//! bias add, ReLU/clip, average pooling) are a **single FunctionalUnit**
+//! (`macArrayAndOPU`) whose latency is the CONV-EXT analytical model of [4],
+//! evaluated against each `conv_ext` instruction's immediates — the paper's
+//! showcase of latency *expressions* spanning abstraction levels.
+//!
+//! CONV-EXT immediates (mapper contract, [`crate::mapping::tensor_op`]):
+//!
+//! | imm | meaning                                  |
+//! |-----|------------------------------------------|
+//! | 0   | C — input channels                       |
+//! | 1   | C_w — input channel width                |
+//! | 2   | K — output channels                      |
+//! | 3   | F — filter width                         |
+//! | 4   | S — stride                               |
+//! | 5   | P — padding enabled (0/1)                |
+//! | 6   | C_w^out — output width (precomputed)     |
+//!
+//! Analytical model (per [4], an N×N array computes N input × N output
+//! channels per tap and cycle, the OPU pipes outputs through afterwards):
+//!
+//! ```text
+//! t_conv_ext = ⌈C/N⌉·⌈K/N⌉·F·C_w^out + C_w^out + N
+//! ```
+//!
+//! Memories follow Fig. 5: ping-pong feature memories FMEM0/FMEM1, FMEM2 for
+//! residual operands, WMEM (weights), BMEM (bias), LMEM (partial sums, local
+//! to the array). Their streaming time is *inside* the analytical model, so
+//! the memory objects carry token latencies (1 cycle) — they exist to give
+//! the AIDG the inter-layer data dependencies that serialize the layer
+//! pipeline, exactly like the original model.
+
+use anyhow::Result;
+
+use crate::acadl::{Diagram, Latency};
+use crate::ids::{Addr, ObjId, OpId};
+
+/// FMEM0 base (layer inputs/outputs ping-pong between FMEM0/FMEM1).
+pub const FMEM0_BASE: Addr = 0;
+pub const FMEM1_BASE: Addr = 1 << 20;
+/// FMEM2: second operands of residual adds.
+pub const FMEM2_BASE: Addr = 2 << 20;
+pub const WMEM_BASE: Addr = 3 << 20;
+pub const BMEM_BASE: Addr = 4 << 20;
+pub const LMEM_BASE: Addr = 5 << 20;
+const MEM_WORDS: u64 = 1 << 20;
+
+/// UltraTrail configuration (the shipped accelerator is 8×8).
+#[derive(Debug, Clone, Copy)]
+pub struct UltraTrailConfig {
+    /// MAC array dimension N (N×N array, N in/out channels per cycle).
+    pub array_dim: u32,
+    /// Instruction memory port width.
+    pub imem_port_width: u32,
+    /// Issue buffer size of the fetch stage.
+    pub issue_buffer: u32,
+}
+
+impl Default for UltraTrailConfig {
+    fn default() -> Self {
+        Self { array_dim: 8, imem_port_width: 1, issue_buffer: 2 }
+    }
+}
+
+/// Interned UltraTrail tensor-ISA ops.
+#[derive(Debug, Clone, Copy)]
+pub struct UltraTrailOps {
+    /// Fused conv + bias + activation + pooling (CONV-EXT).
+    pub conv_ext: OpId,
+    /// Fused fully-connected (+ activation): CONV-EXT with F=1, C_w=1.
+    pub dense_ext: OpId,
+    /// Element-wise residual addition on the MAC array.
+    pub add_ext: OpId,
+}
+
+/// The instantiated UltraTrail model.
+pub struct UltraTrail {
+    pub diagram: Diagram,
+    pub cfg: UltraTrailConfig,
+    pub ops: UltraTrailOps,
+    pub fmem: [ObjId; 3],
+    pub wmem: ObjId,
+    pub bmem: ObjId,
+    pub lmem: ObjId,
+}
+
+impl UltraTrail {
+    /// CONV-EXT analytical latency (the Latency::Expr evaluated per
+    /// instruction; this mirror is used by tests and the roofline feature
+    /// extraction).
+    pub fn conv_ext_cycles(n: u32, c: u32, k: u32, f: u32, cw_out: u32) -> u64 {
+        let n = n as u64;
+        (c as u64).div_ceil(n) * (k as u64).div_ceil(n) * f as u64 * cw_out as u64
+            + cw_out as u64
+            + n
+    }
+
+    /// Element-wise add latency: ⌈C/N⌉ · C_w^out + N (one array row wave per
+    /// channel tile).
+    pub fn add_ext_cycles(n: u32, c: u32, cw_out: u32) -> u64 {
+        (c as u64).div_ceil(n as u64) * cw_out as u64 + n as u64
+    }
+
+    /// Build the Fig. 6 ACADL object diagram.
+    pub fn new(cfg: UltraTrailConfig) -> Result<Self> {
+        assert!(cfg.array_dim >= 1);
+        let n = cfg.array_dim;
+        let mut d = Diagram::new(format!("ultratrail{n}x{n}"));
+        let (_imem, ifs) = d.add_fetch(
+            "instructionMemory",
+            1,
+            cfg.imem_port_width,
+            "instructionFetchStage",
+            1,
+            cfg.issue_buffer,
+        );
+
+        let fmem0 = d.add_memory("fmem0", 1, 1, 8, 1, FMEM0_BASE, MEM_WORDS);
+        let fmem1 = d.add_memory("fmem1", 1, 1, 8, 1, FMEM1_BASE, MEM_WORDS);
+        let fmem2 = d.add_memory("fmem2", 1, 1, 8, 1, FMEM2_BASE, MEM_WORDS);
+        let wmem = d.add_memory("wmem", 1, 1, 8, 1, WMEM_BASE, MEM_WORDS);
+        let bmem = d.add_memory("bmem", 1, 1, 8, 1, BMEM_BASE, MEM_WORDS);
+        let lmem = d.add_memory("lmem", 1, 1, 8, 1, LMEM_BASE, MEM_WORDS);
+
+        // the MAC array's configuration register (written per layer by the
+        // instruction stream, read by the array — models the layer config)
+        let (cfg_rf, _cfg_regs) = d.add_regfile("configRegisters", "cfg", 1);
+
+        let es = d.add_execute_stage("macArrayAndOPU.es");
+        let conv_expr = format!(
+            "cdiv(imm0, {n}) * cdiv(imm2, {n}) * imm3 * imm6 + imm6 + {n}"
+        );
+        let add_expr = format!("cdiv(imm0, {n}) * imm6 + {n}");
+        let mac_fu = d.add_fu(
+            es,
+            "macArrayAndOPU",
+            Latency::Expr(crate::acadl::Expr::parse(&conv_expr)?),
+            &["conv_ext", "dense_ext"],
+        );
+        // element-wise adds run on the same array (sibling FU => shared
+        // structural lock, exactly one tensor op in flight)
+        let add_fu = d.add_fu(
+            es,
+            "macArrayOPU.addPath",
+            Latency::Expr(crate::acadl::Expr::parse(&add_expr)?),
+            &["add_ext"],
+        );
+        d.forward(ifs, es);
+
+        for fu in [mac_fu, add_fu] {
+            d.fu_reads(fu, cfg_rf);
+            d.fu_writes(fu, cfg_rf);
+            for m in [fmem0, fmem1, fmem2] {
+                d.mem_reads(fu, m);
+                d.mem_writes(fu, m);
+            }
+            d.mem_reads(fu, wmem);
+            d.mem_reads(fu, bmem);
+            d.mem_reads(fu, lmem);
+            d.mem_writes(fu, lmem);
+        }
+
+        let ops = UltraTrailOps {
+            conv_ext: d.op("conv_ext"),
+            dense_ext: d.op("dense_ext"),
+            add_ext: d.op("add_ext"),
+        };
+        d.finalize()?;
+        Ok(Self { diagram: d, cfg, ops, fmem: [fmem0, fmem1, fmem2], wmem, bmem, lmem })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+
+    #[test]
+    fn builds_default() {
+        let u = UltraTrail::new(UltraTrailConfig::default()).unwrap();
+        assert_eq!(u.cfg.array_dim, 8);
+        // imem, ifs, 6 memories, cfg rf, es, 2 FUs, writeBack
+        assert!(u.diagram.num_objects() >= 12);
+    }
+
+    #[test]
+    fn conv_ext_model_hand_calc() {
+        // C=40, K=16, F=3, Cw_out=100 on 8x8: 5*2*3*100 + 100 + 8 = 3108
+        assert_eq!(UltraTrail::conv_ext_cycles(8, 40, 16, 3, 100), 3108);
+        // degenerate dense: C=48, K=12, F=1, out=1: 6*2*1*1 + 1 + 8 = 21
+        assert_eq!(UltraTrail::conv_ext_cycles(8, 48, 12, 1, 1), 21);
+    }
+
+    #[test]
+    fn conv_ext_latency_expr_matches_mirror() {
+        let u = UltraTrail::new(UltraTrailConfig::default()).unwrap();
+        let i = Instruction::new(u.ops.conv_ext)
+            .imms(&[40, 100, 16, 3, 1, 1, 100])
+            .read_mem(&[FMEM0_BASE, WMEM_BASE])
+            .write_mem(&[FMEM1_BASE]);
+        let route = u.diagram.route(&i).unwrap();
+        let fu_obj = u.diagram.object(route.fu);
+        if let crate::acadl::ObjectKind::FunctionalUnit { latency, .. } = &fu_obj.kind {
+            assert_eq!(latency.eval(&i), UltraTrail::conv_ext_cycles(8, 40, 16, 3, 100));
+        } else {
+            panic!("route did not end at a functional unit");
+        }
+    }
+
+    #[test]
+    fn conv_ext_routes_to_mac_array() {
+        let u = UltraTrail::new(UltraTrailConfig::default()).unwrap();
+        let i = Instruction::new(u.ops.conv_ext)
+            .imms(&[16, 50, 24, 9, 2, 1, 25])
+            .read_mem(&[FMEM0_BASE + 4, WMEM_BASE + 9])
+            .write_mem(&[FMEM1_BASE + 4]);
+        let r = u.diagram.route(&i).unwrap();
+        assert_eq!(u.diagram.object(r.fu).name, "macArrayAndOPU");
+        assert_eq!(r.read_mems.len(), 2);
+        assert!(r.has_writeback);
+    }
+
+    #[test]
+    fn add_shares_structural_lock_with_conv() {
+        let u = UltraTrail::new(UltraTrailConfig::default()).unwrap();
+        let conv = Instruction::new(u.ops.conv_ext)
+            .imms(&[8, 10, 8, 3, 1, 1, 10])
+            .read_mem(&[FMEM0_BASE])
+            .write_mem(&[FMEM1_BASE]);
+        let add = Instruction::new(u.ops.add_ext)
+            .imms(&[8, 10, 8, 0, 0, 0, 10])
+            .read_mem(&[FMEM1_BASE, FMEM2_BASE])
+            .write_mem(&[FMEM0_BASE]);
+        let rc = u.diagram.route(&conv).unwrap();
+        let ra = u.diagram.route(&add).unwrap();
+        assert_ne!(rc.fu, ra.fu);
+        assert_eq!(u.diagram.lock(rc.fu).owner, u.diagram.lock(ra.fu).owner);
+    }
+
+    #[test]
+    fn bigger_array_is_faster() {
+        let c8 = UltraTrail::conv_ext_cycles(8, 48, 48, 9, 13);
+        let c16 = UltraTrail::conv_ext_cycles(16, 48, 48, 9, 13);
+        assert!(c16 < c8);
+    }
+}

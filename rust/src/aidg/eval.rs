@@ -1,0 +1,532 @@
+//! Streaming AIDG construction + Algorithm-1 evaluation.
+//!
+//! Construction (§6.1) and evaluation (§6.2) are fused: nodes are created in
+//! instruction order, and because every edge type (forward, structural,
+//! data, buffer fill) points from an earlier-created node to a later one,
+//! creation order *is* a topological order. Each node's `t_enter`/`t_leave`
+//! can therefore be computed the moment it is created, after which only the
+//! frontier state ([`super::state::EvalState`]) is needed — the node itself
+//! is never stored. This gives O(|N|) evaluation (paper §6.2) with memory
+//! bounded by the frontier.
+//!
+//! Node sequence per instruction (the object order `o⃗(i)`):
+//!
+//! ```text
+//! [merged fetch: instrMemory+IMAU] → IFS → stages… → FU
+//!        → read-memory nodes… → writeBack (if reads memory) → write-memory nodes…
+//! ```
+//!
+//! Timing rules per Algorithm 1:
+//! - merged fetch node: structural chain on the instruction-memory port;
+//!   `p = port_width` forward slots allocated against `b_forward`.
+//! - IFS node: `t_enter` = earliest slot `>= fetch_leave` with issue-buffer
+//!   entry capacity (`b_enter`); `t_leave` stalls until the next object in
+//!   the route frees (lines 32–35 — the n₆₃ worked example).
+//! - FU node: data dependencies over registers; memory nodes: data
+//!   dependencies over addresses; `t_stop = max(t_enter, deps) + latency`.
+//! - every node's `t_leave = max(t_stop, structural-free time of the next
+//!   object in the route)` — an instruction occupies a module until the
+//!   next module accepts it.
+
+use crate::acadl::{Diagram, ObjectKind};
+use crate::ids::Cycle;
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+use super::state::EvalState;
+
+/// Debug tracing flags, resolved once (env lookups are process-global locks
+/// — far too slow for the per-node hot path).
+static TRACE: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| std::env::var_os("ACADL_TRACE").is_some());
+static TRACE_NODES: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| std::env::var_os("ACADL_TRACE_NODES").is_some());
+
+/// Per-iteration timing record: `Δt_iteration = max_leave - min_enter`
+/// (eq. 4); overlap/stride derive from consecutive records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IterStat {
+    pub min_enter: Cycle,
+    pub max_leave: Cycle,
+}
+
+impl IterStat {
+    #[inline]
+    pub fn span(&self) -> Cycle {
+        self.max_leave - self.min_enter
+    }
+}
+
+/// Node kind within an instruction's route tail.
+#[derive(Debug, Clone, Copy)]
+enum Tag {
+    Stage,
+    Fu,
+    ReadMem,
+    WriteBack,
+    WriteMem,
+}
+
+/// Streaming evaluator over one diagram + one loop kernel's instruction
+/// stream.
+pub struct Evaluator<'d> {
+    d: &'d Diagram,
+    pub st: EvalState,
+    /// (min_enter, max_leave) per evaluated iteration, in order.
+    pub iter_stats: Vec<IterStat>,
+    buf: Vec<Instruction>,
+    /// Reused tail-node scratch buffer (avoids a per-instruction alloc).
+    tail: Vec<(crate::ids::ObjId, Tag)>,
+    /// Route per iteration offset: consecutive iterations execute the same
+    /// instruction template (only addresses change — §6.3), so the route of
+    /// the j-th instruction of an iteration is invariant. Verified against a
+    /// full routing pass on the first iteration of each offset.
+    routes: Vec<std::sync::Arc<crate::acadl::Route>>,
+    // fetch constants
+    p: u64,
+    imem_read_lat: Cycle,
+    ifs_lat: Cycle,
+    issue_buf: u32,
+    // current-iteration accumulation
+    cur_min_enter: Cycle,
+    cur_max_leave: Cycle,
+}
+
+impl<'d> Evaluator<'d> {
+    pub fn new(d: &'d Diagram) -> Self {
+        let f = d.fetch_config();
+        let st = EvalState::new(d.num_objects(), d.num_regs(), |i| {
+            d.lock(crate::ids::ObjId(i as u32)).capacity
+        });
+        Self {
+            d,
+            st,
+            iter_stats: Vec::new(),
+            buf: Vec::new(),
+            tail: Vec::new(),
+            routes: Vec::new(),
+            p: f.port_width as u64,
+            imem_read_lat: f.read_latency,
+            ifs_lat: f.ifs_latency,
+            issue_buf: f.issue_buffer_size,
+            cur_min_enter: Cycle::MAX,
+            cur_max_leave: 0,
+        }
+    }
+
+    /// Evaluate iterations `range` of `kernel`, appending to the carried
+    /// state and per-iteration stats.
+    pub fn run(&mut self, kernel: &LoopKernel, range: std::ops::Range<u64>) -> Result<()> {
+        for it in range {
+            self.buf.clear();
+            kernel.emit(it, &mut self.buf);
+            self.cur_min_enter = Cycle::MAX;
+            self.cur_max_leave = 0;
+            // take() the buffer to appease the borrow checker; instructions
+            // are processed one at a time.
+            let buf = std::mem::take(&mut self.buf);
+            let mut res = Ok(());
+            for (j, instr) in buf.iter().enumerate() {
+                res = self.process(instr, j);
+                if res.is_err() {
+                    break;
+                }
+            }
+            self.buf = buf;
+            res?;
+            self.iter_stats.push(IterStat {
+                min_enter: self.cur_min_enter,
+                max_leave: self.cur_max_leave,
+            });
+            self.st.note_peak(self.iter_stats.len() * std::mem::size_of::<IterStat>());
+        }
+        Ok(())
+    }
+
+    /// Whole-graph end-to-end latency so far (eq. 1).
+    pub fn dt_aidg(&self) -> Cycle {
+        let min = self.iter_stats.first().map_or(0, |s| s.min_enter);
+        let max = self.iter_stats.iter().map(|s| s.max_leave).max().unwrap_or(0);
+        max - min
+    }
+
+    /// Fetch-path handling: merged instruction-memory node (port_width
+    /// instructions per transaction, Algorithm 1 lines 36–42). Returns this
+    /// instruction's fetch-leave time.
+    fn fetch_leave(&mut self) -> Cycle {
+        let within = (self.st.instr_index % self.p) as usize;
+        if within == 0 {
+            // New merged fetch node: structural chain on the memory port,
+            // paced by the previous group's issue-buffer entry (the paper's
+            // "fetch as long as the issue buffer is not full" backpressure —
+            // in-flight instructions stay bounded by the buffer size).
+            let t_enter = self.st.next_fetch_start.max(self.st.last_ifs_enter);
+            if t_enter < self.cur_min_enter {
+                self.cur_min_enter = t_enter;
+            }
+            self.st.horizon = t_enter;
+            let t_stop = t_enter + self.imem_read_lat;
+            self.st.group_slots.clear();
+            for _ in 0..self.p {
+                let slot = self.st.b_forward.alloc(t_stop, self.issue_buf);
+                self.st.group_slots.push(slot);
+            }
+            self.st.next_fetch_start = t_stop;
+            self.st.b_forward.prune_below(t_enter);
+            self.st.nodes += 1;
+        }
+        self.st.instr_index += 1;
+        self.st.group_slots[within]
+    }
+
+    /// Process one instruction: walk its route, computing `t_enter`/`t_leave`
+    /// for every node per Algorithm 1, and update the frontier.
+    ///
+    /// `offset` is the instruction's position within its iteration; routes
+    /// are resolved once per offset and reused (same template, different
+    /// addresses).
+    fn process(&mut self, instr: &Instruction, offset: usize) -> Result<()> {
+        let route = if let Some(r) = self.routes.get(offset) {
+            debug_assert_eq!(**r, *self.d.route(instr)?, "route template changed at offset {offset}");
+            r.clone()
+        } else {
+            debug_assert_eq!(offset, self.routes.len(), "offsets must arrive in order");
+            let r = self.d.route(instr)?;
+            self.routes.push(r.clone());
+            r
+        };
+        let fetch_leave = self.fetch_leave();
+
+        // Build the tail object sequence: IFS, stages…, FU, read mems…,
+        // writeBack?, write mems…
+        let f = self.d.fetch_config();
+        let wb = self.d.writeback_obj();
+
+        // --- IFS node (in-forward from fetch + buffer fill edge) ----------
+        // entry requires a free issue-buffer slot (interval occupancy on the
+        // IFS lock, capacity = issue_buffer_size) AND a per-cycle entry slot
+        // (Algorithm 1's b_enter); iterate the two monotone constraints to a
+        // common fixpoint
+        let ifs_lock = self.d.lock(f.fetch_stage).owner;
+        let mut t_enter = fetch_leave;
+        loop {
+            let tg = self.st.obj_ring[ifs_lock.idx()].gate(t_enter);
+            let tb = self.st.b_enter.probe(tg, self.issue_buf);
+            if tb == t_enter {
+                break;
+            }
+            t_enter = tb;
+        }
+        self.st.b_enter.commit(t_enter);
+        if t_enter < self.cur_min_enter {
+            self.cur_min_enter = t_enter;
+        }
+        self.st.last_ifs_enter = t_enter;
+        self.st.b_enter.prune_below(fetch_leave.saturating_sub(1));
+        let mut t_stop = t_enter + self.ifs_lat;
+        self.st.nodes += 1;
+
+        // Assemble the remaining object order once (reused scratch buffer);
+        // the IFS `t_leave` then stalls on the first tail object's
+        // structural availability.
+        let mut tail = std::mem::take(&mut self.tail);
+        tail.clear();
+        for &s in &route.stages {
+            tail.push((s, Tag::Stage));
+        }
+        tail.push((route.fu, Tag::Fu));
+        for &m in &route.read_mems {
+            tail.push((m, Tag::ReadMem));
+        }
+        if route.has_writeback {
+            tail.push((wb, Tag::WriteBack));
+        }
+        for &m in &route.write_mems {
+            tail.push((m, Tag::WriteMem));
+        }
+
+        // t_leave of the IFS node: stall until the first tail object frees
+        // (worked example n63: the store waits in the IFS for the store
+        // unit).
+        let first_lock = self.d.lock(tail[0].0).owner;
+        let horizon = self.st.horizon;
+        let mut t_leave = self.st.obj_ring[first_lock.idx()].gate(t_stop);
+        self.st.obj_ring[ifs_lock.idx()].insert(t_enter, t_leave, horizon);
+        let mut prev_leave = t_leave;
+
+        // --- tail nodes ----------------------------------------------------
+        for j in 0..tail.len() {
+            let (obj, ref tag) = tail[j];
+            let lock = self.d.lock(obj);
+            t_enter = self.st.obj_ring[lock.owner.idx()].gate(prev_leave);
+
+            // data dependencies + latency per node kind
+            let mut deps: Cycle = 0;
+            let lat: Cycle = match tag {
+                Tag::Stage => match &self.d.object(obj).kind {
+                    ObjectKind::PipelineStage { latency } => latency.eval(instr),
+                    _ => 0,
+                },
+                Tag::Fu => {
+                    for r in instr.read_regs.iter().chain(instr.write_regs.iter()) {
+                        deps = deps.max(self.st.reg_last[r.0 as usize]);
+                    }
+                    match &self.d.object(obj).kind {
+                        ObjectKind::FunctionalUnit { latency, .. } => latency.eval(instr),
+                        _ => 0,
+                    }
+                }
+                Tag::ReadMem => {
+                    let mut n = 0usize;
+                    for &a in &instr.read_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            n += 1;
+                            deps = deps.max(
+                                self.st.addr_last.get(&a).copied().unwrap_or(0),
+                            );
+                        }
+                    }
+                    self.d.mem_latency(obj, n, false, instr)
+                }
+                Tag::WriteBack => 0,
+                Tag::WriteMem => {
+                    let mut n = 0usize;
+                    for &a in &instr.write_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            n += 1;
+                            deps = deps.max(
+                                self.st.addr_last.get(&a).copied().unwrap_or(0),
+                            );
+                        }
+                    }
+                    self.d.mem_latency(obj, n, true, instr)
+                }
+            };
+
+            t_stop = t_enter.max(deps) + lat;
+            t_leave = if j + 1 < tail.len() {
+                let next_lock = self.d.lock(tail[j + 1].0).owner;
+                self.st.obj_ring[next_lock.idx()].gate(t_stop)
+            } else {
+                t_stop
+            };
+            if *TRACE_NODES {
+                eprintln!(
+                    "AIDG i{} node {} enter={} deps={} stop={} leave={}",
+                    self.st.instr_index - 1,
+                    self.d.object(obj).name,
+                    t_enter,
+                    deps,
+                    t_stop,
+                    t_leave
+                );
+            }
+            self.st.obj_ring[lock.owner.idx()].insert(t_enter, t_leave, horizon);
+            self.st.nodes += 1;
+
+            // frontier updates (last accessor maps)
+            match tag {
+                Tag::Fu => {
+                    // read registers anchor here; write registers anchor here
+                    // too unless a writeBack node follows (§6.1)
+                    for r in &instr.read_regs {
+                        self.st.reg_last[r.0 as usize] = t_leave;
+                    }
+                    if !route.has_writeback {
+                        for r in &instr.write_regs {
+                            self.st.reg_last[r.0 as usize] = t_leave;
+                        }
+                    }
+                }
+                Tag::ReadMem => {
+                    for &a in &instr.read_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            self.st.addr_last.insert(a, t_leave);
+                        }
+                    }
+                }
+                Tag::WriteBack => {
+                    for r in &instr.write_regs {
+                        self.st.reg_last[r.0 as usize] = t_leave;
+                    }
+                }
+                Tag::WriteMem => {
+                    for &a in &instr.write_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            self.st.addr_last.insert(a, t_leave);
+                        }
+                    }
+                }
+                Tag::Stage => {}
+            }
+            prev_leave = t_leave;
+        }
+
+        self.tail = tail;
+        if prev_leave > self.cur_max_leave {
+            self.cur_max_leave = prev_leave;
+        }
+        if *TRACE {
+            eprintln!(
+                "AIDG i{} op={} leave={}",
+                self.st.instr_index - 1,
+                self.d.op_name(instr.op),
+                prev_leave
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl::Latency;
+    use crate::ids::{ObjId, RegId};
+
+    /// 1-FU scalar machine: fetch(p=2) → es{alu} with one RF and one memory.
+    fn machine() -> (Diagram, TestOps) {
+        let mut d = Diagram::new("m");
+        let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+        let es = d.add_execute_stage("es");
+        let (rf, regs) = d.add_regfile("rf", "r", 4);
+        let mem = d.add_memory("dmem", 4, 4, 1, 1, 0, 4096);
+        let load = d.add_fu(es, "lsu", Latency::Fixed(1), &["load", "store"]);
+        let alu = d.add_fu(es, "alu", Latency::Fixed(1), &["mac"]);
+        d.forward(ifs, es);
+        d.fu_writes(load, rf);
+        d.fu_reads(load, rf);
+        d.fu_reads(alu, rf);
+        d.fu_writes(alu, rf);
+        d.mem_reads(load, mem);
+        d.mem_writes(load, mem);
+        let ops = TestOps { load: d.op("load"), mac: d.op("mac"), store: d.op("store"), regs };
+        d.finalize().unwrap();
+        (d, ops)
+    }
+
+    struct TestOps {
+        load: crate::ids::OpId,
+        mac: crate::ids::OpId,
+        store: crate::ids::OpId,
+        regs: Vec<RegId>,
+    }
+
+    fn lk(ops: &TestOps) -> LoopKernel {
+        let (load, mac, store) = (ops.load, ops.mac, ops.store);
+        let (r0, r1, r2) = (ops.regs[0], ops.regs[1], ops.regs[2]);
+        LoopKernel::new(
+            "t",
+            16,
+            4,
+            Box::new(move |it, buf| {
+                buf.push(Instruction::new(load).writes(&[r0]).read_mem(&[it]));
+                buf.push(Instruction::new(load).writes(&[r1]).read_mem(&[256 + it]));
+                buf.push(Instruction::new(mac).reads(&[r0, r1]).writes(&[r2]));
+                buf.push(Instruction::new(store).reads(&[r2]).write_mem(&[512 + it]));
+            }),
+        )
+    }
+
+    #[test]
+    fn evaluator_monotone_iterations() {
+        let (d, ops) = machine();
+        let kernel = lk(&ops);
+        let mut ev = Evaluator::new(&d);
+        ev.run(&kernel, 0..16).unwrap();
+        assert_eq!(ev.iter_stats.len(), 16);
+        // leave times strictly increase: RAW over r2 + store serialization
+        for w in ev.iter_stats.windows(2) {
+            assert!(w[1].max_leave > w[0].max_leave);
+            assert!(w[1].min_enter >= w[0].min_enter);
+        }
+        assert!(ev.dt_aidg() > 0);
+        assert!(ev.st.nodes > 16 * 4);
+    }
+
+    #[test]
+    fn spans_stabilize() {
+        let (d, ops) = machine();
+        let kernel = lk(&ops);
+        let mut ev = Evaluator::new(&d);
+        ev.run(&kernel, 0..16).unwrap();
+        // after warmup the per-iteration stride must become constant (no
+        // oscillation in this simple serializing kernel)
+        let strides: Vec<u64> = ev
+            .iter_stats
+            .windows(2)
+            .map(|w| w[1].max_leave - w[0].max_leave)
+            .collect();
+        let tail = &strides[strides.len() - 4..];
+        assert!(tail.iter().all(|&s| s == tail[0]), "strides: {strides:?}");
+    }
+
+    #[test]
+    fn chunked_equals_whole() {
+        // appending chunks must be bit-identical to one big run
+        let (d, ops) = machine();
+        let kernel = lk(&ops);
+        let mut whole = Evaluator::new(&d);
+        whole.run(&kernel, 0..16).unwrap();
+        let mut chunked = Evaluator::new(&d);
+        chunked.run(&kernel, 0..4).unwrap();
+        chunked.run(&kernel, 4..10).unwrap();
+        chunked.run(&kernel, 10..16).unwrap();
+        assert_eq!(whole.iter_stats, chunked.iter_stats);
+        assert_eq!(whole.dt_aidg(), chunked.dt_aidg());
+    }
+
+    #[test]
+    fn data_dependency_stalls() {
+        // mac depends on both loads; with read latency 4 the mac cannot
+        // finish before the second load's writeback
+        let (d, ops) = machine();
+        let kernel = lk(&ops);
+        let mut ev = Evaluator::new(&d);
+        ev.run(&kernel, 0..1).unwrap();
+        // lower bound: fetch(1) + ifs(1) + lsu(1) + mem(4) for each load
+        // serialized on the single LSU; mac after writeback; store after mac
+        assert!(ev.iter_stats[0].max_leave >= 12);
+    }
+
+    #[test]
+    fn memory_concurrency_relaxes_serialization() {
+        // same machine but dual-ported memory: the two loads' transactions
+        // overlap, shortening the first iteration
+        let build = |ports: u32| {
+            let mut d = Diagram::new("m");
+            let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+            let es0 = d.add_execute_stage("es0");
+            let es1 = d.add_execute_stage("es1");
+            let (rf, regs) = d.add_regfile("rf", "r", 4);
+            let mem = d.add_memory("dmem", 4, 4, 1, ports, 0, 4096);
+            let l0 = d.add_fu(es0, "lsu0", Latency::Fixed(1), &["load"]);
+            let l1 = d.add_fu(es1, "lsu1", Latency::Fixed(1), &["load2"]);
+            d.forward(ifs, es0);
+            d.forward(ifs, es1);
+            d.fu_writes(l0, rf);
+            d.fu_writes(l1, rf);
+            d.mem_reads(l0, mem);
+            d.mem_reads(l1, mem);
+            let load = d.op("load");
+            let load2 = d.op("load2");
+            d.finalize().unwrap();
+            let (r0, r1) = (regs[0], regs[1]);
+            let kernel = LoopKernel::new(
+                "t",
+                8,
+                2,
+                Box::new(move |it, buf| {
+                    buf.push(Instruction::new(load).writes(&[r0]).read_mem(&[it]));
+                    buf.push(Instruction::new(load2).writes(&[r1]).read_mem(&[256 + it]));
+                }),
+            );
+            let mut ev = Evaluator::new(&d);
+            ev.run(&kernel, 0..8).unwrap();
+            ev.dt_aidg()
+        };
+        let single = build(1);
+        let dual = build(2);
+        assert!(dual < single, "dual {dual} should beat single {single}");
+    }
+}

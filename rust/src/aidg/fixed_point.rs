@@ -1,0 +1,357 @@
+//! §6.3 — end-to-end latency of a whole DNN layer from a few evaluated
+//! iterations.
+//!
+//! Consecutive loop iterations overlap in the pipeline, and loop-carried
+//! dependencies make the first iterations atypical; after a *prolog* the
+//! per-iteration end-to-end latency stabilizes. The estimator evaluates the
+//! AIDG in `k_block`-sized chunks (eq. 3: the smallest iteration count whose
+//! instruction total is divisible by the instruction memory port width, so
+//! merged fetch nodes stay aligned), checks the fixed-point criterion
+//! (eq. 5) between consecutive chunks, and extrapolates with
+//!
+//! ```text
+//! Δt = Δt_prolog + (k − k_prolog) · (Δt_iteration − Δt_overlap)      (eq. 2)
+//! ```
+//!
+//! If `Δt_iteration` oscillates and eq. 5 is never satisfied within
+//! `fallback_frac` (default 1 %) of all iterations, the fallback heuristic
+//! (eqs. 9–13) averages the per-iteration latency over the evaluated window
+//! instead. Appendix A.1 motivates the 1 % default; Appendix A.2 analyzes
+//! the residual error — reproduced by `benches/fig16_fallback_sweep.rs` and
+//! `benches/fig17_oscillation.rs`.
+
+use std::time::{Duration, Instant};
+
+use crate::acadl::Diagram;
+use crate::ids::Cycle;
+use crate::isa::LoopKernel;
+use crate::Result;
+
+use super::eval::{Evaluator, IterStat};
+
+/// Tunables of the fixed-point evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedPointConfig {
+    /// Fraction of `k` after which the fallback heuristic fires (paper: 1 %).
+    pub fallback_frac: f64,
+    /// Record the full per-iteration trace (Fig. 17 / Table 6 analyses).
+    pub keep_trace: bool,
+}
+
+impl Default for FixedPointConfig {
+    fn default() -> Self {
+        Self { fallback_frac: 0.01, keep_trace: false }
+    }
+}
+
+/// Result of estimating one mapped layer.
+#[derive(Debug, Clone)]
+pub struct LayerEstimate {
+    pub label: String,
+    /// Total loop iterations of the layer.
+    pub k: u64,
+    pub insts_per_iter: usize,
+    /// Estimated end-to-end cycles `Δt̂`.
+    pub cycles: Cycle,
+    /// Iterations actually evaluated in the AIDG.
+    pub evaluated_iters: u64,
+    pub k_block: u64,
+    pub k_prolog: u64,
+    pub dt_iteration: Cycle,
+    pub dt_overlap: i64,
+    /// eq. 5 never satisfied; eqs. 9–13 used.
+    pub used_fallback: bool,
+    /// All iterations were evaluated (k too small for fixed point).
+    pub whole_graph: bool,
+    /// AIDG nodes processed.
+    pub nodes: u64,
+    /// Peak tracked evaluator state (bytes) — the Fig. 11/12 metric.
+    pub peak_state_bytes: u64,
+    pub runtime: Duration,
+    /// Per-iteration (min_enter, max_leave) when `keep_trace` is set.
+    pub trace: Option<Vec<IterStat>>,
+}
+
+impl LayerEstimate {
+    pub fn total_insts(&self) -> u64 {
+        self.k * self.insts_per_iter as u64
+    }
+}
+
+/// Greatest common divisor.
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+/// eq. 3: minimal iterations whose instruction count is divisible by the
+/// instruction-memory port width.
+pub fn k_block(insts_per_iter: u64, port_width: u64) -> u64 {
+    let l = insts_per_iter / gcd(insts_per_iter, port_width) * port_width; // lcm
+    l / insts_per_iter
+}
+
+/// Δt_overlap between the last two evaluated iterations (Fig. 9 semantics:
+/// how far iteration `j` starts before iteration `j−1` ends).
+fn overlap(stats: &[IterStat]) -> i64 {
+    if stats.len() < 2 {
+        return 0;
+    }
+    let prev = stats[stats.len() - 2];
+    let last = stats[stats.len() - 1];
+    prev.max_leave as i64 - last.min_enter as i64
+}
+
+/// Estimate the end-to-end latency of `kernel` on `diagram` (§6.3).
+pub fn estimate_layer(
+    diagram: &Diagram,
+    kernel: &LoopKernel,
+    cfg: &FixedPointConfig,
+) -> Result<LayerEstimate> {
+    let start = Instant::now();
+    let k = kernel.k;
+    let p = diagram.fetch_config().port_width as u64;
+    let kb = k_block(kernel.insts_per_iter as u64, p);
+    let mut ev = Evaluator::new(diagram);
+
+    let finish = |ev: Evaluator,
+                  cycles: Cycle,
+                  k_prolog: u64,
+                  dt_iteration: Cycle,
+                  dt_overlap: i64,
+                  used_fallback: bool,
+                  whole_graph: bool,
+                  start: Instant,
+                  cfg: &FixedPointConfig| {
+        LayerEstimate {
+            label: kernel.label.clone(),
+            k,
+            insts_per_iter: kernel.insts_per_iter,
+            cycles,
+            evaluated_iters: ev.iter_stats.len() as u64,
+            k_block: kb,
+            k_prolog,
+            dt_iteration,
+            dt_overlap,
+            used_fallback,
+            whole_graph,
+            nodes: ev.st.nodes,
+            peak_state_bytes: ev.st.peak_bytes as u64,
+            runtime: start.elapsed(),
+            trace: cfg.keep_trace.then_some(ev.iter_stats),
+        }
+    };
+
+    // k_block >= k or too few blocks for a fixed point: whole graph (§6.3).
+    if kb >= k || 3 * kb > k {
+        ev.run(kernel, 0..k)?;
+        let cycles = ev.dt_aidg();
+        let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
+        let ov = overlap(&ev.iter_stats);
+        return Ok(finish(ev, cycles, k, dt_it, ov, false, true, start, cfg));
+    }
+
+    // Evaluate chunk by chunk until eq. 5 (two consecutive chunks whose last
+    // iterations have equal spans) or the fallback budget is exhausted.
+    let budget = ((k as f64 * cfg.fallback_frac) as u64).max(3 * kb);
+    let mut evaluated: u64 = 0;
+    let mut prev_span: Option<Cycle> = None;
+    let mut stable_at: Option<u64> = None; // iterations evaluated when eq.5 hit
+    while evaluated < k {
+        let next = (evaluated + kb).min(k);
+        ev.run(kernel, evaluated..next)?;
+        evaluated = next;
+        let span = ev.iter_stats.last().unwrap().span();
+        // The first k_block has no in-going structural dependencies from a
+        // previous block, so its span is unrepresentative (§6.3): only start
+        // comparing from the second block on.
+        if evaluated >= 2 * kb {
+            if let Some(prev) = prev_span {
+                if prev == span && evaluated >= 3 * kb {
+                    stable_at = Some(evaluated);
+                    break;
+                }
+            }
+        }
+        prev_span = Some(span);
+        if evaluated >= budget {
+            break;
+        }
+    }
+
+    if evaluated >= k {
+        // ran through everything: exact result
+        let cycles = ev.dt_aidg();
+        let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
+        let ov = overlap(&ev.iter_stats);
+        return Ok(finish(ev, cycles, k, dt_it, ov, false, true, start, cfg));
+    }
+
+    if let Some(k_prolog) = stable_at {
+        // eqs. 6–8 + eq. 2
+        let dt_prolog = ev.iter_stats.iter().map(|s| s.max_leave).max().unwrap();
+        let dt_iteration = ev.iter_stats.last().unwrap().span();
+        let ov = overlap(&ev.iter_stats);
+        let stride = dt_iteration as i64 - ov;
+        let cycles =
+            (dt_prolog as i64 + (k - k_prolog) as i64 * stride).max(dt_prolog as i64) as Cycle;
+        return Ok(finish(ev, cycles, k_prolog, dt_iteration, ov, false, false, start, cfg));
+    }
+
+    // Fallback heuristic (eqs. 9–13): Δt_iteration oscillates. Average the
+    // per-iteration latency between k_prolog = ⌊k01/4⌋ and k01 = evaluated
+    // iterations (1 % of k).
+    let k01 = evaluated;
+    let k_prolog = (k01 / 4).max(1);
+    let leave_at = |it: u64| ev.iter_stats[(it - 1) as usize].max_leave;
+    let dt_window = leave_at(k01) - leave_at(k_prolog);
+    let dt_iteration = ((dt_window as f64) / ((k01 - k_prolog) as f64)).round() as Cycle;
+    let dt_prolog = leave_at(k_prolog);
+    let cycles = dt_prolog + (k - k_prolog) * dt_iteration; // eq. 2 with overlap 0
+    Ok(finish(ev, cycles, k_prolog, dt_iteration, 0, true, false, start, cfg))
+}
+
+/// Whole-graph evaluation of all `k` iterations (the Table 5 ground truth).
+pub fn evaluate_whole(diagram: &Diagram, kernel: &LoopKernel) -> Result<LayerEstimate> {
+    let start = Instant::now();
+    let mut ev = Evaluator::new(diagram);
+    ev.run(kernel, 0..kernel.k)?;
+    let cycles = ev.dt_aidg();
+    let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
+    let ov = overlap(&ev.iter_stats);
+    Ok(LayerEstimate {
+        label: kernel.label.clone(),
+        k: kernel.k,
+        insts_per_iter: kernel.insts_per_iter,
+        cycles,
+        evaluated_iters: kernel.k,
+        k_block: k_block(
+            kernel.insts_per_iter as u64,
+            diagram.fetch_config().port_width as u64,
+        ),
+        k_prolog: kernel.k,
+        dt_iteration: dt_it,
+        dt_overlap: ov,
+        used_fallback: false,
+        whole_graph: true,
+        nodes: ev.st.nodes,
+        peak_state_bytes: ev.st.peak_bytes as u64,
+        runtime: start.elapsed(),
+        trace: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl::Latency;
+    use crate::ids::RegId;
+    use crate::isa::Instruction;
+
+    fn machine() -> (Diagram, Ops) {
+        let mut d = Diagram::new("m");
+        let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+        let es = d.add_execute_stage("es");
+        let (rf, regs) = d.add_regfile("rf", "r", 4);
+        let mem = d.add_memory("dmem", 4, 4, 1, 1, 0, 1 << 20);
+        let lsu = d.add_fu(es, "lsu", Latency::Fixed(1), &["load", "store"]);
+        let alu = d.add_fu(es, "alu", Latency::Fixed(1), &["mac"]);
+        d.forward(ifs, es);
+        d.fu_writes(lsu, rf);
+        d.fu_reads(lsu, rf);
+        d.fu_reads(alu, rf);
+        d.fu_writes(alu, rf);
+        d.mem_reads(lsu, mem);
+        d.mem_writes(lsu, mem);
+        let ops =
+            Ops { load: d.op("load"), mac: d.op("mac"), store: d.op("store"), regs };
+        d.finalize().unwrap();
+        (d, ops)
+    }
+
+    struct Ops {
+        load: crate::ids::OpId,
+        mac: crate::ids::OpId,
+        store: crate::ids::OpId,
+        regs: Vec<RegId>,
+    }
+
+    fn lk(ops: &Ops, k: u64) -> LoopKernel {
+        let (load, mac, store) = (ops.load, ops.mac, ops.store);
+        let (r0, r1, r2) = (ops.regs[0], ops.regs[1], ops.regs[2]);
+        LoopKernel::new(
+            "t",
+            k,
+            4,
+            Box::new(move |it, buf| {
+                buf.push(Instruction::new(load).writes(&[r0]).read_mem(&[it]));
+                buf.push(Instruction::new(load).writes(&[r1]).read_mem(&[1000 + it]));
+                buf.push(Instruction::new(mac).reads(&[r0, r1]).writes(&[r2]));
+                buf.push(Instruction::new(store).reads(&[r2]).write_mem(&[2000 + it]));
+            }),
+        )
+    }
+
+    #[test]
+    fn k_block_lcm() {
+        assert_eq!(k_block(4, 2), 1); // 4 insts, port 2: already divisible
+        assert_eq!(k_block(3, 2), 2); // lcm(3,2)=6 -> 2 iterations
+        assert_eq!(k_block(5, 4), 4);
+        assert_eq!(k_block(8, 8), 1);
+        assert_eq!(k_block(1, 3), 3);
+    }
+
+    #[test]
+    fn fixed_point_matches_whole_graph() {
+        // the paper's headline property: extrapolating from the prolog must
+        // equal evaluating every iteration when Δt_iteration is stable
+        let (d, ops) = machine();
+        let kernel = lk(&ops, 2000);
+        let fp = estimate_layer(&d, &kernel, &FixedPointConfig::default()).unwrap();
+        let whole = evaluate_whole(&d, &kernel).unwrap();
+        assert!(!fp.whole_graph);
+        assert!(fp.evaluated_iters < 100, "evaluated {}", fp.evaluated_iters);
+        assert_eq!(fp.cycles, whole.cycles, "fp={fp:?}");
+    }
+
+    #[test]
+    fn small_k_goes_whole_graph() {
+        let (d, ops) = machine();
+        let kernel = lk(&ops, 2);
+        let e = estimate_layer(&d, &kernel, &FixedPointConfig::default()).unwrap();
+        assert!(e.whole_graph);
+        assert_eq!(e.evaluated_iters, 2);
+    }
+
+    #[test]
+    fn trace_recorded_when_requested() {
+        let (d, ops) = machine();
+        let kernel = lk(&ops, 50);
+        let cfg = FixedPointConfig { keep_trace: true, ..Default::default() };
+        let e = estimate_layer(&d, &kernel, &cfg).unwrap();
+        let t = e.trace.as_ref().unwrap();
+        assert_eq!(t.len() as u64, e.evaluated_iters);
+    }
+
+    #[test]
+    fn estimate_scales_linearly_in_k() {
+        let (d, ops) = machine();
+        let e1 = estimate_layer(&d, &lk(&ops, 1000), &FixedPointConfig::default()).unwrap();
+        let e2 = estimate_layer(&d, &lk(&ops, 2000), &FixedPointConfig::default()).unwrap();
+        let stride = e1.dt_iteration as i64 - e1.dt_overlap;
+        assert_eq!(e2.cycles as i64 - e1.cycles as i64, 1000 * stride);
+    }
+
+    #[test]
+    fn fallback_fires_on_tiny_budget() {
+        // force the fallback by shrinking the budget below stabilization
+        let (d, ops) = machine();
+        let kernel = lk(&ops, 100_000);
+        let cfg = FixedPointConfig { fallback_frac: 0.0001, keep_trace: false };
+        let e = estimate_layer(&d, &kernel, &cfg).unwrap();
+        // either it stabilized within 10 iterations (k_block=1 machine) or
+        // fell back; both must stay close to the whole-graph result
+        let whole = evaluate_whole(&d, &kernel).unwrap();
+        let err = (e.cycles as f64 - whole.cycles as f64).abs() / whole.cycles as f64;
+        assert!(err < 0.05, "err {err}: fp {} vs whole {}", e.cycles, whole.cycles);
+    }
+}

@@ -1,0 +1,19 @@
+//! The Architectural Instruction Dependency Graph (AIDG) — the paper's
+//! performance model (§6).
+//!
+//! An AIDG's nodes are (instruction, ACADL object) pairs; edges are forward
+//! (`f`), structural (`s`), data (`d`), and buffer-fill (`b`) dependencies.
+//! This implementation fuses construction (§6.1) and Algorithm-1 evaluation
+//! (§6.2) into one streaming topological sweep ([`eval::Evaluator`]), and
+//! layers the §6.3 fixed-point estimator with its 1 % fallback heuristic on
+//! top ([`fixed_point::estimate_layer`]).
+
+pub mod eval;
+pub mod fixed_point;
+pub mod state;
+
+pub use eval::{Evaluator, IterStat};
+pub use fixed_point::{
+    estimate_layer, evaluate_whole, k_block, FixedPointConfig, LayerEstimate,
+};
+pub use state::EvalState;

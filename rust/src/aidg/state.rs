@@ -1,0 +1,359 @@
+//! Carried evaluation state (the AIDG "frontier").
+//!
+//! Dependencies in an AIDG only ever point backwards to the *last* user of a
+//! resource: the last structure user per object (§6.1), the last accessor
+//! per register and memory address, the previous InstructionFetchStage node
+//! (buffer fill level chain), and the per-time issue-buffer fill counters of
+//! Algorithm 1. Holding exactly that state lets us construct and evaluate
+//! the graph in a single streaming pass, appending `k_block` iterations at a
+//! time (§6.3) with memory bounded by the *live* frontier instead of the
+//! whole graph — the whole-graph evaluation of Table 5 is the same sweep run
+//! to `k`.
+
+
+
+use crate::ids::{Addr, Cycle, FxHashMap};
+
+/// Occupancy tracker of one structural lock (ACADL object or ExecuteStage
+/// lock domain) holding at most `capacity` instructions.
+///
+/// Occupants may depart **out of order** (two stores parked in the issue
+/// buffer waiting on slow data deps leave after later loads that flowed
+/// straight through) and may *enter* far in the future relative to earlier
+/// claims, so neither a FIFO of leave times nor an order statistic over
+/// leave times is correct. The exact model is interval occupancy: each
+/// occupant holds the object over `[enter, leave)`; the next claimant ready
+/// at `t0` enters at the earliest `t ≥ t0` where fewer than `capacity`
+/// intervals are active. Stored as a time-sorted delta map (+1 at entry,
+/// −1 at leave), pruned below the evaluation horizon (the current fetch
+/// time — no future claim can be gated earlier), so the live window stays
+/// tiny.
+#[derive(Debug, Clone)]
+enum RingRepr {
+    /// capacity == 1: claims serialize, the last leave time is the gate.
+    Serial { last: Cycle },
+    /// 1 < capacity < ∞: full interval-occupancy delta map.
+    Concurrent {
+        /// Time-sorted occupancy deltas at or after the horizon.
+        events: std::collections::BTreeMap<Cycle, i64>,
+        /// Active count just below the first retained event.
+        base_active: i64,
+    },
+    /// writeBack: exempt from structural dependencies.
+    Unbounded,
+}
+
+#[derive(Debug, Clone)]
+pub struct SlotRing {
+    repr: RingRepr,
+    capacity: u32,
+}
+
+impl Default for SlotRing {
+    fn default() -> Self {
+        Self::new(1)
+    }
+}
+
+impl SlotRing {
+    pub fn new(capacity: u32) -> Self {
+        let repr = match capacity {
+            u32::MAX => RingRepr::Unbounded,
+            1 => RingRepr::Serial { last: 0 },
+            _ => RingRepr::Concurrent {
+                events: std::collections::BTreeMap::new(),
+                base_active: 0,
+            },
+        };
+        Self { repr, capacity }
+    }
+
+    /// Earliest `t >= t0` at which a free slot exists.
+    #[inline]
+    pub fn gate(&self, t0: Cycle) -> Cycle {
+        match &self.repr {
+            RingRepr::Unbounded => t0,
+            RingRepr::Serial { last } => t0.max(*last),
+            RingRepr::Concurrent { events, base_active } => {
+                let cap = self.capacity as i64;
+                let mut active =
+                    base_active + events.range(..=t0).map(|(_, d)| *d).sum::<i64>();
+                if active < cap {
+                    return t0;
+                }
+                for (&t, &d) in
+                    events.range((std::ops::Bound::Excluded(t0), std::ops::Bound::Unbounded))
+                {
+                    active += d;
+                    if active < cap {
+                        return t;
+                    }
+                }
+                unreachable!("occupancy never drains: every interval carries its leave event")
+            }
+        }
+    }
+
+    /// Record an occupant over `[enter, leave)` and prune events below
+    /// `horizon` (no future gate query can start earlier).
+    #[inline]
+    pub fn insert(&mut self, enter: Cycle, leave: Cycle, horizon: Cycle) {
+        match &mut self.repr {
+            RingRepr::Unbounded => {}
+            RingRepr::Serial { last } => {
+                if leave > *last {
+                    *last = leave;
+                }
+            }
+            RingRepr::Concurrent { events, base_active } => {
+                if leave <= enter {
+                    return;
+                }
+                *events.entry(enter).or_insert(0) += 1;
+                *events.entry(leave).or_insert(0) -= 1;
+                while let Some((&t, _)) = events.first_key_value() {
+                    if t >= horizon {
+                        break;
+                    }
+                    let d = events.remove(&t).unwrap();
+                    *base_active += d;
+                }
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match &self.repr {
+            RingRepr::Concurrent { events, .. } => events.len() * 2 * std::mem::size_of::<Cycle>(),
+            _ => 0,
+        }
+    }
+}
+
+/// Per-cycle fill counters for the issue buffer (Algorithm 1's `b_enter` /
+/// `b_forward` hashmaps): at most `cap` instructions may claim the same
+/// cycle; `alloc` finds the earliest cycle `>= t0` with a free slot.
+#[derive(Debug, Default)]
+pub struct BufferFill {
+    counts: FxHashMap<Cycle, u32>,
+    /// Times strictly below this can no longer be allocated (monotonic
+    /// frontier) and are pruned.
+    watermark: Cycle,
+}
+
+impl BufferFill {
+    /// Earliest `t >= t0` with fewer than `cap` occupants; increments it.
+    #[inline]
+    pub fn alloc(&mut self, t0: Cycle, cap: u32) -> Cycle {
+        let t = self.probe(t0, cap);
+        *self.counts.entry(t).or_insert(0) += 1;
+        t
+    }
+
+    /// Earliest `t >= t0` with a free slot, without claiming it.
+    #[inline]
+    pub fn probe(&self, t0: Cycle, cap: u32) -> Cycle {
+        let mut t = t0.max(self.watermark);
+        loop {
+            if self.counts.get(&t).copied().unwrap_or(0) < cap {
+                return t;
+            }
+            t += 1;
+        }
+    }
+
+    /// Claim a slot at `t` (previously validated with [`Self::probe`]).
+    #[inline]
+    pub fn commit(&mut self, t: Cycle) {
+        *self.counts.entry(t).or_insert(0) += 1;
+    }
+
+    /// Advance the frontier: allocations below `t` can no longer occur, so
+    /// their counters are dropped. Called with the oldest time still
+    /// reachable (e.g. the previous fetch-group start).
+    pub fn prune_below(&mut self, t: Cycle) {
+        if t > self.watermark {
+            self.watermark = t;
+            if self.counts.len() > 4096 {
+                self.counts.retain(|&k, _| k >= t);
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.counts.len() * (std::mem::size_of::<Cycle>() + std::mem::size_of::<u32>())
+    }
+}
+
+/// Full carried state of a streaming AIDG evaluation.
+#[derive(Debug)]
+pub struct EvalState {
+    /// Structural rings, indexed by lock-owner object id.
+    pub obj_ring: Vec<SlotRing>,
+    /// Last-accessor leave time per register id.
+    pub reg_last: Vec<Cycle>,
+    /// Last-accessor leave time per memory address.
+    pub addr_last: FxHashMap<Addr, Cycle>,
+    /// Issue-buffer entry fill (Algorithm 1 `b_enter`).
+    pub b_enter: BufferFill,
+    /// Issue-buffer forward fill (Algorithm 1 `b_forward`).
+    pub b_forward: BufferFill,
+    /// Global instruction counter (drives merged-fetch grouping).
+    pub instr_index: u64,
+    /// Fetch-leave slots of the current fetch group, consumed in order.
+    pub group_slots: Vec<Cycle>,
+    /// Structural chain of the instruction memory port: next fetch
+    /// transaction may start at this time.
+    pub next_fetch_start: Cycle,
+    /// Issue-buffer entry time of the most recent instruction — paces the
+    /// next fetch transaction ("fetch as long as the buffer is not full").
+    pub last_ifs_enter: Cycle,
+    /// Evaluation horizon: the current merged-fetch t_enter. No future gate
+    /// query starts earlier, so rings prune their event windows below it.
+    pub horizon: Cycle,
+    /// Peak tracked-state footprint (bytes) seen so far.
+    pub peak_bytes: usize,
+    /// Total AIDG nodes processed.
+    pub nodes: u64,
+}
+
+impl EvalState {
+    pub fn new(num_objects: usize, num_regs: usize, capacities: impl Fn(usize) -> u32) -> Self {
+        Self {
+            obj_ring: (0..num_objects).map(|i| SlotRing::new(capacities(i))).collect(),
+            reg_last: vec![0; num_regs],
+            addr_last: FxHashMap::default(),
+            b_enter: BufferFill::default(),
+            b_forward: BufferFill::default(),
+            instr_index: 0,
+            group_slots: Vec::new(),
+            next_fetch_start: 0,
+            last_ifs_enter: 0,
+            horizon: 0,
+            peak_bytes: 0,
+            nodes: 0,
+        }
+    }
+
+    /// Current tracked-state footprint in bytes (the Fig. 11/12 metric; see
+    /// DESIGN.md — tracked evaluator state, not process RSS).
+    pub fn live_bytes(&self) -> usize {
+        let rings: usize = self.obj_ring.iter().map(|r| r.bytes()).sum();
+        rings
+            + self.reg_last.len() * std::mem::size_of::<Cycle>()
+            + self.addr_last.len() * (std::mem::size_of::<Addr>() + std::mem::size_of::<Cycle>() + 8)
+            + self.b_enter.bytes()
+            + self.b_forward.bytes()
+    }
+
+    pub fn note_peak(&mut self, extra: usize) {
+        let b = self.live_bytes() + extra;
+        if b > self.peak_bytes {
+            self.peak_bytes = b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_capacity_one_serializes() {
+        let mut r = SlotRing::new(1);
+        assert_eq!(r.gate(0), 0);
+        r.insert(2, 10, 0);
+        assert_eq!(r.gate(3), 10);
+        assert_eq!(r.gate(10), 10); // interval is half-open
+        r.insert(10, 25, 0);
+        assert_eq!(r.gate(11), 25);
+        assert_eq!(r.gate(30), 30);
+    }
+
+    #[test]
+    fn ring_capacity_two_allows_overlap() {
+        let mut r = SlotRing::new(2);
+        r.insert(0, 10, 0);
+        assert_eq!(r.gate(0), 0); // one slot still free
+        r.insert(0, 20, 0);
+        assert_eq!(r.gate(5), 10); // first departure frees a slot
+        r.insert(10, 30, 0);
+        assert_eq!(r.gate(12), 20);
+    }
+
+    #[test]
+    fn ring_out_of_order_departures() {
+        // occupant A [0, 100), occupant B [0, 4): B departs first, so a
+        // capacity-2 object is free again at 4 — not at 100
+        let mut r = SlotRing::new(2);
+        r.insert(0, 100, 0);
+        r.insert(0, 4, 0);
+        assert_eq!(r.gate(0), 4);
+    }
+
+    #[test]
+    fn ring_future_intervals_do_not_block_the_past() {
+        // an occupant far in the future must not constrain earlier times
+        // (capacity > 1 uses the interval model; capacity 1 keeps the
+        // paper's last-structure-user program-order serialization)
+        let mut r = SlotRing::new(2);
+        r.insert(50, 60, 0);
+        r.insert(52, 58, 0);
+        assert_eq!(r.gate(0), 0);
+        assert_eq!(r.gate(55), 58);
+    }
+
+    #[test]
+    fn ring_prunes_below_horizon() {
+        let mut r = SlotRing::new(1);
+        for i in 0..100 {
+            r.insert(i * 10, i * 10 + 5, i * 10);
+        }
+        assert!(r.bytes() <= 64, "bytes {}", r.bytes());
+        // still correct after pruning
+        assert_eq!(r.gate(992), 995);
+    }
+
+    #[test]
+    fn ring_unbounded_never_constrains() {
+        let mut r = SlotRing::new(u32::MAX);
+        r.insert(0, 10, 0);
+        r.insert(0, 20, 0);
+        assert_eq!(r.gate(0), 0);
+        assert_eq!(r.bytes(), 0);
+    }
+
+    #[test]
+    fn buffer_fill_respects_capacity() {
+        let mut b = BufferFill::default();
+        assert_eq!(b.alloc(5, 2), 5);
+        assert_eq!(b.alloc(5, 2), 5);
+        assert_eq!(b.alloc(5, 2), 6); // cycle 5 full
+        assert_eq!(b.alloc(4, 2), 4); // cycle 4 still free
+        assert_eq!(b.alloc(4, 2), 4);
+        assert_eq!(b.alloc(4, 2), 6); // 4 and 5 full, 6 has one slot left
+        assert_eq!(b.alloc(4, 2), 7);
+    }
+
+    #[test]
+    fn buffer_fill_prunes() {
+        let mut b = BufferFill::default();
+        for t in 0..10_000 {
+            b.alloc(t, 1);
+        }
+        b.prune_below(9_000);
+        assert!(b.counts.len() <= 10_000);
+        // allocations below the watermark snap up to it
+        assert!(b.alloc(0, 1) >= 9_000);
+    }
+
+    #[test]
+    fn state_tracks_peak() {
+        let mut s = EvalState::new(4, 8, |_| 1);
+        let base = s.live_bytes();
+        s.addr_last.insert(1, 1);
+        s.addr_last.insert(2, 1);
+        s.note_peak(0);
+        assert!(s.peak_bytes > base);
+    }
+}

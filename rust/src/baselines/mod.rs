@@ -1,0 +1,14 @@
+//! Baseline estimators the paper compares against (§7): the refined
+//! roofline model [28], a Timeloop-like analytical model [21] with
+//! simplex-fitted bandwidths, and literature-reported regression constants
+//! [5].
+
+pub mod regression;
+pub mod roofline;
+pub mod simplex;
+pub mod timeloop_like;
+
+pub use regression::BOUZIDI_SVR_MAPE;
+pub use roofline::{roofline_cycles, roofline_network, HwFeatures, LayerFeatures};
+pub use simplex::nelder_mead;
+pub use timeloop_like::{fit_bandwidths, TimeloopModel};

@@ -1,0 +1,192 @@
+//! Refined roofline model (after Wess et al. [28]; the paper's analytical
+//! baseline in every results table).
+//!
+//! The *refined* roofline replaces the classic model's peak compute rate by
+//! the rate achievable with the layer's **actual unroll factors** (UR_C ×
+//! UR_K PEs active) and models memory transaction-granularly
+//! (`⌈words / port_width⌉ · latency`). Compute and memory streams overlap
+//! (`max`), the pipeline fill does not (additive). It still assumes a
+//! *constant* utilization efficiency — the blind spot the paper exploits:
+//! pipeline stalls, loop-carried dependencies, and oscillating iteration
+//! latencies are invisible to it (§7.3, Fig. 13b).
+//!
+//! This module is the native mirror of `python/compile/kernels/ref.py`; the
+//! AOT-compiled JAX/Pallas estimator in `artifacts/roofline.hlo.txt`
+//! evaluates the same formula batched (see [`crate::runtime`]), and
+//! `python/tests/test_kernel.py` pins the two against each other.
+
+use crate::dnn::Layer;
+use crate::mapping::MappedLayer;
+
+/// Layer feature vector (mirror of python/compile/features.py, indices
+/// L_MACS..L_K_ITERS).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerFeatures {
+    pub macs: f64,
+    pub in_words: f64,
+    pub w_words: f64,
+    pub out_words: f64,
+    pub ur_c: f64,
+    pub ur_k: f64,
+    pub k_iters: f64,
+}
+
+impl LayerFeatures {
+    /// Extract features from a layer + its mapping.
+    pub fn from_mapping(layer: &Layer, mapped: &MappedLayer) -> Self {
+        let (in_w, w_w, out_w) = mapped.traffic.unwrap_or((
+            layer.in_words(),
+            layer.weight_words(),
+            layer.out_words(),
+        ));
+        Self {
+            macs: layer.macs() as f64,
+            in_words: in_w as f64,
+            w_words: w_w as f64,
+            out_words: out_w as f64,
+            ur_c: mapped.ur_c.max(1) as f64,
+            ur_k: mapped.ur_k.max(1) as f64,
+            k_iters: mapped.total_iters().max(1) as f64,
+        }
+    }
+
+    /// Row layout of the AOT roofline artifact (features.py `LF`).
+    pub fn to_row(self) -> [f64; 8] {
+        [
+            self.macs,
+            self.in_words,
+            self.w_words,
+            self.out_words,
+            self.ur_c,
+            self.ur_k,
+            self.k_iters,
+            0.0,
+        ]
+    }
+}
+
+/// Hardware feature vector (features.py `HF`): `[rows, cols, port_width,
+/// read_lat, write_lat, mac_lat, fetch_overhead, reserved]` — produced by
+/// [`crate::mapping::Mapper::hw_features`].
+pub type HwFeatures = [f64; 8];
+
+/// Refined-roofline cycle estimate of one layer (must match ref.py /
+/// kernels/roofline.py bit-for-bit on integer-valued f64 inputs).
+pub fn roofline_cycles(l: &LayerFeatures, hw: &HwFeatures) -> f64 {
+    let pw = hw[2].max(1.0);
+    let read_lat = hw[3];
+    let write_lat = hw[4];
+    let mac_lat = hw[5].max(1.0);
+    let fetch = hw[6];
+
+    let compute = (l.macs / (l.ur_c.max(1.0) * l.ur_k.max(1.0))).ceil() * mac_lat;
+    let reads = ((l.in_words / pw).ceil() + (l.w_words / pw).ceil()) * read_lat;
+    let writes = (l.out_words / pw).ceil() * write_lat;
+    let mem = reads + writes;
+    let prolog = read_lat + mac_lat + write_lat + fetch * l.k_iters.max(1.0);
+    compute.max(mem) + prolog
+}
+
+/// Whole-network roofline: per-layer estimates (fused layers cost 0).
+pub fn roofline_network(
+    layers: &[Layer],
+    mapped: &[MappedLayer],
+    hw: &HwFeatures,
+) -> Vec<f64> {
+    layers
+        .iter()
+        .zip(mapped)
+        .map(|(l, m)| {
+            if m.fused {
+                0.0
+            } else {
+                roofline_cycles(&LayerFeatures::from_mapping(l, m), hw)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::LayerKind;
+
+    fn feats() -> LayerFeatures {
+        LayerFeatures {
+            macs: 10_000.0,
+            in_words: 400.0,
+            w_words: 1_200.0,
+            out_words: 240.0,
+            ur_c: 4.0,
+            ur_k: 4.0,
+            k_iters: 100.0,
+        }
+    }
+
+    #[test]
+    fn compute_bound_layer() {
+        let hw: HwFeatures = [4.0, 4.0, 8.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let l = feats();
+        // compute = ceil(10000/16) = 625; mem = (50+150)*1 + 30*1 = 230
+        let c = roofline_cycles(&l, &hw);
+        assert_eq!(c, 625.0 + 3.0);
+    }
+
+    #[test]
+    fn memory_bound_layer() {
+        let hw: HwFeatures = [4.0, 4.0, 1.0, 4.0, 4.0, 1.0, 0.0, 0.0];
+        let l = feats();
+        // mem = (400+1200)*4 + 240*4 = 7360 > compute 625
+        let c = roofline_cycles(&l, &hw);
+        assert_eq!(c, 7360.0 + 9.0);
+    }
+
+    #[test]
+    fn port_width_monotone() {
+        // the Fig. 13 property: wider ports never increase the estimate
+        let l = feats();
+        let mut prev = f64::INFINITY;
+        for pw in 1..=13 {
+            let hw: HwFeatures = [12.0, 12.0, pw as f64, 4.0, 4.0, 1.0, 0.0, 0.0];
+            let c = roofline_cycles(&l, &hw);
+            assert!(c <= prev, "pw={pw}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn underutilization_raises_estimate() {
+        // wide port => compute bound, so utilization dominates
+        let hw: HwFeatures = [12.0, 12.0, 64.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let full = LayerFeatures { ur_c: 12.0, ur_k: 12.0, ..feats() };
+        let under = LayerFeatures { ur_c: 10.0, ur_k: 10.0, ..feats() };
+        assert!(roofline_cycles(&under, &hw) > roofline_cycles(&full, &hw));
+    }
+
+    #[test]
+    fn network_skips_fused() {
+        let layers = vec![
+            Layer::new("c", LayerKind::Dense { c_in: 64, c_out: 64 }),
+            Layer::new("a", LayerKind::Act {
+                kind: crate::dnn::ActKind::Relu,
+                c: 64,
+                spatial: 1,
+            }),
+        ];
+        let mapped = vec![
+            MappedLayer {
+                layer_name: "c".into(),
+                kernels: vec![],
+                fused: false,
+                ur_c: 8,
+                ur_k: 8,
+                traffic: None,
+            },
+            crate::mapping::MappedLayer::fused("a"),
+        ];
+        let hw: HwFeatures = [8.0, 8.0, 2.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let v = roofline_network(&layers, &mapped, &hw);
+        assert!(v[0] > 0.0);
+        assert_eq!(v[1], 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Nelder–Mead downhill simplex [19] — used exactly as in the paper:
+//! fitting the Timeloop-like model's per-memory bandwidths against
+//! simulator measurements (§7.2: "we used the simplex method using
+//! Verilator measurements as input in order to find the best read and write
+//! bandwidths for each memory").
+
+/// Minimize `f` over `x0.len()` dimensions. Returns (argmin, min).
+pub fn nelder_mead(
+    f: impl Fn(&[f64]) -> f64,
+    x0: &[f64],
+    initial_step: f64,
+    max_iters: usize,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    assert!(n >= 1);
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    // initial simplex: x0 plus a step along each axis
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    simplex.push((x0.to_vec(), f(x0)));
+    for i in 0..n {
+        let mut x = x0.to_vec();
+        x[i] += if x[i].abs() > 1e-12 { initial_step * x[i].abs() } else { initial_step };
+        let fx = f(&x);
+        simplex.push((x, fx));
+    }
+
+    for _ in 0..max_iters {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let best = simplex[0].1;
+        let worst = simplex[n].1;
+        let diameter: f64 = (0..n)
+            .map(|i| {
+                simplex
+                    .iter()
+                    .map(|(x, _)| (x[i] - simplex[0].0[i]).abs())
+                    .fold(0.0, f64::max)
+            })
+            .fold(0.0, f64::max);
+        if (worst - best).abs() <= 1e-12 * (1.0 + best.abs()) && diameter <= 1e-9 {
+            break;
+        }
+
+        // centroid of all but the worst
+        let mut c = vec![0.0; n];
+        for (x, _) in simplex.iter().take(n) {
+            for i in 0..n {
+                c[i] += x[i] / n as f64;
+            }
+        }
+
+        let xw = simplex[n].0.clone();
+        let refl: Vec<f64> = (0..n).map(|i| c[i] + alpha * (c[i] - xw[i])).collect();
+        let f_refl = f(&refl);
+
+        if f_refl < simplex[0].1 {
+            // expansion
+            let exp: Vec<f64> = (0..n).map(|i| c[i] + gamma * (refl[i] - c[i])).collect();
+            let f_exp = f(&exp);
+            simplex[n] = if f_exp < f_refl { (exp, f_exp) } else { (refl, f_refl) };
+        } else if f_refl < simplex[n - 1].1 {
+            simplex[n] = (refl, f_refl);
+        } else {
+            // contraction
+            let con: Vec<f64> = (0..n).map(|i| c[i] + rho * (xw[i] - c[i])).collect();
+            let f_con = f(&con);
+            if f_con < simplex[n].1 {
+                simplex[n] = (con, f_con);
+            } else {
+                // shrink toward the best point
+                let xb = simplex[0].0.clone();
+                for item in simplex.iter_mut().skip(1) {
+                    for i in 0..n {
+                        item.0[i] = xb[i] + sigma * (item.0[i] - xb[i]);
+                    }
+                    item.1 = f(&item.0);
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_bowl() {
+        let (x, fx) = nelder_mead(|v| (v[0] - 3.0).powi(2) + (v[1] + 1.0).powi(2), &[0.0, 0.0], 1.0, 500);
+        assert!((x[0] - 3.0).abs() < 1e-4, "{x:?}");
+        assert!((x[1] + 1.0).abs() < 1e-4);
+        assert!(fx < 1e-6);
+    }
+
+    #[test]
+    fn rosenbrock_2d() {
+        let rb = |v: &[f64]| (1.0 - v[0]).powi(2) + 100.0 * (v[1] - v[0] * v[0]).powi(2);
+        let (x, fx) = nelder_mead(rb, &[-1.0, 1.0], 0.5, 5_000);
+        assert!(fx < 1e-4, "fx={fx} at {x:?}");
+    }
+
+    #[test]
+    fn one_dimensional() {
+        let (x, _) = nelder_mead(|v| (v[0] - 42.0).abs(), &[1.0], 1.0, 2_000);
+        assert!((x[0] - 42.0).abs() < 1e-3, "{x:?}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal benchmark harness (criterion is not vendored in this offline
+//! image; see DESIGN.md). `cargo bench` targets use `harness = false` and
+//! drive this module: warmup, N timed samples, median/mean/min reporting in
+//! criterion-style rows, plus helpers to print the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub samples: usize,
+}
+
+/// Run `f` `samples` times after `warmup` unmeasured runs and report.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let stats = Stats {
+        median,
+        mean,
+        min: *times.first().unwrap(),
+        max: *times.last().unwrap(),
+        samples: times.len(),
+    };
+    println!(
+        "{name:<48} time: [{} {} {}]  ({} samples)",
+        fmt_dur(stats.min),
+        fmt_dur(stats.median),
+        fmt_dur(stats.max),
+        stats.samples
+    );
+    stats
+}
+
+/// Time a single invocation (for long end-to-end runs where repeated
+/// sampling is impractical — e.g. whole-graph ground truth).
+pub fn time_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    let dt = t0.elapsed();
+    println!("{name:<48} time: {}", fmt_dur(dt));
+    (v, dt)
+}
+
+/// Human duration: ns/µs/ms/s with 3 significant figures.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Group separator for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0u64;
+        let s = bench("noop", 1, 5, || n += 1);
+        assert_eq!(s.samples, 5);
+        assert_eq!(n, 6);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(12)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(12)).ends_with('s'));
+    }
+}

@@ -1,0 +1,191 @@
+//! Design-space exploration driver (paper §7.4, Fig. 15).
+//!
+//! Sweeps Plasticine-derived architecture parameters (rows × cols × PCU
+//! GEMM tile size) against a set of networks in two phases:
+//!
+//! 1. **Roofline pre-filter** — every design point's per-layer refined
+//!    roofline estimate, batched through the AOT-compiled XLA estimator
+//!    ([`crate::runtime::RooflineExec`]) when available (native mirror
+//!    otherwise). Milliseconds for thousands of points.
+//! 2. **Accurate pass** — the surviving fraction gets full AIDG fixed-point
+//!    estimates on the worker pool.
+//!
+//! This is the loop the paper motivates: exclude designs that cannot win
+//! *before* paying for accurate estimation, and never write RTL for any of
+//! them.
+
+use crate::accel::PlasticineConfig;
+use crate::aidg::FixedPointConfig;
+use crate::baselines::roofline::{roofline_cycles, LayerFeatures};
+use crate::dnn::zoo;
+
+use crate::Result;
+
+use super::job::{Arch, EstimateRequest};
+use super::pool::Pool;
+
+/// The swept parameter grid.
+#[derive(Debug, Clone)]
+pub struct DseSpec {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub tiles: Vec<u32>,
+    pub network: String,
+    /// Fraction of designs surviving the roofline pre-filter into the
+    /// accurate pass (1.0 = estimate everything, as Fig. 15 plots).
+    pub keep_frac: f64,
+    pub fp: FixedPointConfig,
+}
+
+/// One explored design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub rows: u32,
+    pub cols: u32,
+    pub tile: u32,
+    /// Whole-network refined-roofline cycles (phase 1).
+    pub roofline_cycles: f64,
+    /// Whole-network AIDG cycles (phase 2; None if filtered out).
+    pub aidg_cycles: Option<u64>,
+}
+
+/// Roofline batch source: XLA executable or the native mirror.
+pub enum RooflineBackend {
+    Xla(crate::runtime::RooflineExec),
+    Native,
+}
+
+impl RooflineBackend {
+    /// Load the XLA backend, falling back to the native mirror when the
+    /// artifacts are not built.
+    pub fn auto() -> Self {
+        match crate::runtime::RooflineExec::load() {
+            Ok(x) => RooflineBackend::Xla(x),
+            Err(_) => RooflineBackend::Native,
+        }
+    }
+
+    fn estimate(
+        &self,
+        layers: &[LayerFeatures],
+        hw: &crate::baselines::roofline::HwFeatures,
+    ) -> Result<Vec<f64>> {
+        match self {
+            RooflineBackend::Xla(x) => x.estimate(layers, hw),
+            RooflineBackend::Native => {
+                Ok(layers.iter().map(|l| roofline_cycles(l, hw)).collect())
+            }
+        }
+    }
+}
+
+/// Run the exploration. Returns every grid point with its roofline estimate
+/// and (for survivors) its AIDG estimate, sorted best-AIDG-first where
+/// available.
+pub fn explore(spec: &DseSpec, pool: &mut Pool, backend: &RooflineBackend) -> Result<Vec<DsePoint>> {
+    let net = zoo::by_name(&spec.network)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", spec.network))?;
+
+    // ---- phase 1: roofline everything --------------------------------------
+    let mut points: Vec<DsePoint> = Vec::new();
+    let mut configs: Vec<PlasticineConfig> = Vec::new();
+    for &r in &spec.rows {
+        for &c in &spec.cols {
+            for &t in &spec.tiles {
+                let cfg = PlasticineConfig::new(r, c, t);
+                let arch = Arch::Plasticine(cfg);
+                let mapper = match arch.mapper() {
+                    Ok(m) => m,
+                    Err(_) => continue, // degenerate grid (e.g. 1×1)
+                };
+                let mapped = mapper.map_network(&net)?;
+                let feats: Vec<LayerFeatures> = net
+                    .layers
+                    .iter()
+                    .zip(&mapped)
+                    .filter(|(_, m)| !m.fused)
+                    .map(|(l, m)| LayerFeatures::from_mapping(l, m))
+                    .collect();
+                let hw = mapper.hw_features();
+                let cycles = backend.estimate(&feats, &hw)?;
+                points.push(DsePoint {
+                    rows: r,
+                    cols: c,
+                    tile: t,
+                    roofline_cycles: cycles.iter().sum(),
+                    aidg_cycles: None,
+                });
+                configs.push(cfg);
+            }
+        }
+    }
+
+    // ---- phase 2: accurate AIDG on the survivors ----------------------------
+    let keep = ((points.len() as f64 * spec.keep_frac).ceil() as usize).clamp(1, points.len());
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| points[a].roofline_cycles.total_cmp(&points[b].roofline_cycles));
+    let survivors: Vec<usize> = order.into_iter().take(keep).collect();
+
+    let reqs: Vec<EstimateRequest> = survivors
+        .iter()
+        .map(|&i| EstimateRequest {
+            arch: Arch::Plasticine(configs[i]),
+            network: spec.network.clone(),
+            fp: spec.fp,
+        })
+        .collect();
+    let results = pool.run_all(reqs);
+    for (&i, r) in survivors.iter().zip(results) {
+        points[i].aidg_cycles = Some(r?.total_cycles());
+    }
+
+    points.sort_by(|a, b| match (a.aidg_cycles, b.aidg_cycles) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => a.roofline_cycles.total_cmp(&b.roofline_cycles),
+    });
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_dse_runs_and_ranks() {
+        let spec = DseSpec {
+            rows: vec![2, 3],
+            cols: vec![2, 4],
+            tiles: vec![8, 16],
+            network: "tc_resnet8".into(),
+            keep_frac: 0.5,
+            fp: FixedPointConfig::default(),
+        };
+        let mut pool = Pool::new(4);
+        let backend = RooflineBackend::Native;
+        let points = explore(&spec, &mut pool, &backend).unwrap();
+        assert_eq!(points.len(), 8);
+        let with_aidg = points.iter().filter(|p| p.aidg_cycles.is_some()).count();
+        assert_eq!(with_aidg, 4); // keep_frac 0.5
+        // results sorted: survivors first, by AIDG cycles ascending
+        let cycles: Vec<u64> = points.iter().filter_map(|p| p.aidg_cycles).collect();
+        assert!(cycles.windows(2).all(|w| w[0] <= w[1]));
+        assert!(points.iter().all(|p| p.roofline_cycles > 0.0));
+    }
+
+    #[test]
+    fn keep_all_estimates_everything() {
+        let spec = DseSpec {
+            rows: vec![2],
+            cols: vec![2, 3],
+            tiles: vec![8],
+            network: "tc_resnet8".into(),
+            keep_frac: 1.0,
+            fp: FixedPointConfig::default(),
+        };
+        let mut pool = Pool::new(2);
+        let points = explore(&spec, &mut pool, &RooflineBackend::Native).unwrap();
+        assert!(points.iter().all(|p| p.aidg_cycles.is_some()));
+    }
+}

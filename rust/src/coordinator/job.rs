@@ -1,0 +1,217 @@
+//! Estimation jobs and results — the coordinator's request/response types.
+
+use std::time::Duration;
+
+use crate::accel::{
+    Gemmini, GemminiConfig, Plasticine, PlasticineConfig, Systolic, SystolicConfig, UltraTrail,
+    UltraTrailConfig,
+};
+use crate::aidg::{estimate_layer, FixedPointConfig, LayerEstimate};
+use crate::dnn::Network;
+use crate::mapping::{
+    gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper,
+    tensor_op::TensorOpMapper, MappedLayer, Mapper,
+};
+use crate::Result;
+
+/// Which accelerator model to instantiate.
+#[derive(Debug, Clone, Copy)]
+pub enum Arch {
+    Systolic(SystolicConfig),
+    UltraTrail(UltraTrailConfig),
+    Gemmini(GemminiConfig),
+    Plasticine(PlasticineConfig),
+}
+
+impl Arch {
+    pub fn name(&self) -> String {
+        match self {
+            Arch::Systolic(c) => format!("systolic{}x{}", c.rows, c.cols),
+            Arch::UltraTrail(c) => format!("ultratrail{0}x{0}", c.array_dim),
+            Arch::Gemmini(c) => format!("gemmini{0}x{0}", c.dim),
+            Arch::Plasticine(c) => format!("plasticine{}x{}t{}", c.rows, c.cols, c.tile),
+        }
+    }
+
+    /// Instantiate the model + mapper pair.
+    pub fn mapper(&self) -> Result<Box<dyn Mapper + Send + Sync>> {
+        Ok(match self {
+            Arch::Systolic(c) => {
+                Box::new(ScalarMapper::new(std::sync::Arc::new(Systolic::new(*c)?)))
+            }
+            Arch::UltraTrail(c) => {
+                Box::new(TensorOpMapper::new(std::sync::Arc::new(UltraTrail::new(*c)?)))
+            }
+            Arch::Gemmini(c) => {
+                Box::new(GemmTileMapper::new(std::sync::Arc::new(Gemmini::new(*c)?)))
+            }
+            Arch::Plasticine(c) => {
+                Box::new(PlasticineMapper::new(std::sync::Arc::new(Plasticine::new(*c)?)))
+            }
+        })
+    }
+}
+
+/// One network-on-architecture estimation request.
+#[derive(Debug, Clone)]
+pub struct EstimateRequest {
+    pub arch: Arch,
+    /// Model-zoo name ([`crate::dnn::zoo::by_name`]).
+    pub network: String,
+    pub fp: FixedPointConfig,
+}
+
+/// Per-layer outcome within a network estimate.
+#[derive(Debug, Clone)]
+pub struct LayerOutcome {
+    pub layer_name: String,
+    /// None for layers fused into their predecessor (zero cycles).
+    pub estimate: Option<Vec<LayerEstimate>>,
+}
+
+impl LayerOutcome {
+    pub fn cycles(&self) -> u64 {
+        self.estimate
+            .as_ref()
+            .map(|es| es.iter().map(|e| e.cycles).sum())
+            .unwrap_or(0)
+    }
+
+    pub fn evaluated_iters(&self) -> u64 {
+        self.estimate
+            .as_ref()
+            .map(|es| es.iter().map(|e| e.evaluated_iters).sum())
+            .unwrap_or(0)
+    }
+
+    pub fn total_iters(&self) -> u64 {
+        self.estimate.as_ref().map(|es| es.iter().map(|e| e.k).sum()).unwrap_or(0)
+    }
+
+    pub fn total_insts(&self) -> u64 {
+        self.estimate
+            .as_ref()
+            .map(|es| es.iter().map(|e| e.total_insts()).sum())
+            .unwrap_or(0)
+    }
+
+    pub fn peak_state_bytes(&self) -> u64 {
+        self.estimate
+            .as_ref()
+            .map(|es| es.iter().map(|e| e.peak_state_bytes).max().unwrap_or(0))
+            .unwrap_or(0)
+    }
+}
+
+/// Whole-network estimation result (eq. 14: `T̂ = Σ Δt̂_i`).
+#[derive(Debug, Clone)]
+pub struct NetworkEstimate {
+    pub network: String,
+    pub arch: String,
+    pub layers: Vec<LayerOutcome>,
+    pub runtime: Duration,
+}
+
+impl NetworkEstimate {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles()).sum()
+    }
+
+    pub fn total_iters(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_iters()).sum()
+    }
+
+    pub fn evaluated_iters(&self) -> u64 {
+        self.layers.iter().map(|l| l.evaluated_iters()).sum()
+    }
+
+    pub fn total_insts(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_insts()).sum()
+    }
+
+    /// Per-layer cycle vector (fused layers are 0), for MAPE computations.
+    pub fn layer_cycles(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.cycles() as f64).collect()
+    }
+}
+
+/// Estimate a whole network on a mapper (AIDG fixed-point per layer; a
+/// layer's latency is the sum of its kernels' estimates — §6.3 applied per
+/// uniform loop kernel).
+pub fn estimate_network(
+    mapper: &(impl Mapper + ?Sized),
+    net: &Network,
+    fp: &FixedPointConfig,
+) -> Result<NetworkEstimate> {
+    let t0 = std::time::Instant::now();
+    let mapped: Vec<MappedLayer> = mapper.map_network(net)?;
+    let d = mapper.diagram();
+    let mut layers = Vec::with_capacity(mapped.len());
+    for ml in &mapped {
+        if ml.fused {
+            layers.push(LayerOutcome { layer_name: ml.layer_name.clone(), estimate: None });
+            continue;
+        }
+        let mut ests = Vec::with_capacity(ml.kernels.len());
+        for k in &ml.kernels {
+            ests.push(estimate_layer(d, k, fp)?);
+        }
+        layers.push(LayerOutcome { layer_name: ml.layer_name.clone(), estimate: Some(ests) });
+    }
+    Ok(NetworkEstimate {
+        network: net.name.clone(),
+        arch: d.name.clone(),
+        layers,
+        runtime: t0.elapsed(),
+    })
+}
+
+/// Run one request end-to-end (build arch, map, estimate).
+pub fn run_request(req: &EstimateRequest) -> Result<NetworkEstimate> {
+    let net = crate::dnn::zoo::by_name(&req.network)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", req.network))?;
+    let mapper = req.arch.mapper()?;
+    estimate_network(mapper.as_ref(), &net, &req.fp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ultratrail_request_runs() {
+        let req = EstimateRequest {
+            arch: Arch::UltraTrail(UltraTrailConfig::default()),
+            network: "tc_resnet8".into(),
+            fp: FixedPointConfig::default(),
+        };
+        let e = run_request(&req).unwrap();
+        assert_eq!(e.layers.len(), 22);
+        assert!(e.total_cycles() > 10_000, "cycles {}", e.total_cycles());
+        assert!(e.total_cycles() < 100_000, "cycles {}", e.total_cycles());
+    }
+
+    #[test]
+    fn unknown_network_fails() {
+        let req = EstimateRequest {
+            arch: Arch::UltraTrail(UltraTrailConfig::default()),
+            network: "vgg".into(),
+            fp: FixedPointConfig::default(),
+        };
+        assert!(run_request(&req).is_err());
+    }
+
+    #[test]
+    fn systolic_estimate_has_sensible_iteration_reduction() {
+        let req = EstimateRequest {
+            arch: Arch::Systolic(SystolicConfig::new(2, 2)),
+            network: "tc_resnet8".into(),
+            fp: FixedPointConfig::default(),
+        };
+        let e = run_request(&req).unwrap();
+        // fixed-point evaluation must evaluate far fewer iterations than k
+        assert!(e.evaluated_iters() < e.total_iters() / 10,
+            "evaluated {} of {}", e.evaluated_iters(), e.total_iters());
+        assert!(e.total_cycles() > 0);
+    }
+}

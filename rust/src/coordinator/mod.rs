@@ -1,0 +1,13 @@
+//! The estimation coordinator: request/response types, the worker pool,
+//! the design-space-exploration driver (roofline pre-filter through the AOT
+//! XLA estimator → accurate AIDG pass), and the line-based request server.
+
+pub mod dse;
+pub mod job;
+pub mod pool;
+pub mod server;
+
+pub use dse::{explore, DsePoint, DseSpec, RooflineBackend};
+pub use job::{estimate_network, run_request, Arch, EstimateRequest, NetworkEstimate};
+pub use pool::Pool;
+pub use server::{parse_arch, serve};

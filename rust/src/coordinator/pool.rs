@@ -1,0 +1,170 @@
+//! Worker pool: estimation jobs fan out over std threads (tokio is not
+//! vendored in this offline image — the workload is CPU-bound, so a plain
+//! thread pool over an MPMC queue is the right tool anyway; see DESIGN.md).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::Result;
+
+use super::job::{run_request, EstimateRequest, NetworkEstimate};
+
+type Job = (usize, EstimateRequest, Sender<(usize, Result<NetworkEstimate>)>);
+
+/// Shared MPMC queue (Mutex + Condvar; no crossbeam offline).
+struct Queue {
+    jobs: Mutex<(std::collections::VecDeque<Job>, bool)>, // (queue, closed)
+    cv: Condvar,
+}
+
+impl Queue {
+    fn push(&self, j: Job) {
+        let mut g = self.jobs.lock().unwrap();
+        assert!(!g.1, "pool already shut down");
+        g.0.push_back(j);
+        self.cv.notify_one();
+    }
+
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.jobs.lock().unwrap();
+        loop {
+            if let Some(j) = g.0.pop_front() {
+                return Some(j);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        self.jobs.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// A pool of estimation workers.
+pub struct Pool {
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: usize,
+}
+
+impl Pool {
+    /// Spawn `n` workers (defaults to available parallelism when 0).
+    pub fn new(n: usize) -> Self {
+        let n = if n == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        } else {
+            n
+        };
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new((std::collections::VecDeque::new(), false)),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("acadl-worker-{i}"))
+                    .spawn(move || {
+                        while let Some((id, req, tx)) = q.pop() {
+                            let r = run_request(&req);
+                            // receiver may be gone if the caller bailed
+                            let _ = tx.send((id, r));
+                        }
+                    })
+                    .expect("spawning worker")
+            })
+            .collect();
+        Self { queue, workers, next_id: 0 }
+    }
+
+    /// Submit a batch of requests; returns a receiver yielding
+    /// `(submission index, result)` in completion order.
+    pub fn submit_all(
+        &mut self,
+        reqs: Vec<EstimateRequest>,
+    ) -> Receiver<(usize, Result<NetworkEstimate>)> {
+        let (tx, rx) = channel();
+        for req in reqs {
+            let id = self.next_id;
+            self.next_id += 1;
+            self.queue.push((id, req, tx.clone()));
+        }
+        rx
+    }
+
+    /// Submit and wait for everything, results in submission order.
+    pub fn run_all(&mut self, reqs: Vec<EstimateRequest>) -> Vec<Result<NetworkEstimate>> {
+        let n = reqs.len();
+        let base = self.next_id;
+        let rx = self.submit_all(reqs);
+        let mut out: Vec<Option<Result<NetworkEstimate>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (id, r) = rx.recv().expect("worker pool hung up");
+            out[id - base] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("missing result")).collect()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{SystolicConfig, UltraTrailConfig};
+    use crate::aidg::FixedPointConfig;
+    use crate::coordinator::job::Arch;
+
+    #[test]
+    fn pool_runs_jobs_in_parallel_and_in_order() {
+        let mut pool = Pool::new(4);
+        let reqs: Vec<EstimateRequest> = (0..6)
+            .map(|i| EstimateRequest {
+                arch: if i % 2 == 0 {
+                    Arch::UltraTrail(UltraTrailConfig::default())
+                } else {
+                    Arch::Systolic(SystolicConfig::new(2, 2))
+                },
+                network: "tc_resnet8".into(),
+                fp: FixedPointConfig::default(),
+            })
+            .collect();
+        let results = pool.run_all(reqs);
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            let e = r.as_ref().unwrap();
+            if i % 2 == 0 {
+                assert!(e.arch.starts_with("ultratrail"), "{i}: {}", e.arch);
+            } else {
+                assert!(e.arch.starts_with("systolic"), "{i}: {}", e.arch);
+            }
+        }
+        // identical requests give identical results (determinism across
+        // threads)
+        assert_eq!(results[0].as_ref().unwrap().total_cycles(),
+                   results[2].as_ref().unwrap().total_cycles());
+    }
+
+    #[test]
+    fn errors_are_reported_not_panicked() {
+        let mut pool = Pool::new(2);
+        let results = pool.run_all(vec![EstimateRequest {
+            arch: Arch::UltraTrail(UltraTrailConfig::default()),
+            network: "alexnet".into(), // 2D: unmappable on UltraTrail
+            fp: FixedPointConfig::default(),
+        }]);
+        assert!(results[0].is_err());
+    }
+}

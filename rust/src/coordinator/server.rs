@@ -1,0 +1,145 @@
+//! Request-loop front-end: parses architecture specs and serves estimation
+//! requests line-by-line (the `acadl-perf serve` mode and the CLI's shared
+//! argument grammar).
+//!
+//! Architecture spec grammar:
+//!
+//! ```text
+//! systolic:<rows>x<cols>[:pw<port_width>]
+//! ultratrail[:<dim>]
+//! gemmini[:<dim>]
+//! plasticine:<rows>x<cols>:<tile>
+//! ```
+
+use std::io::{BufRead, Write};
+
+use anyhow::{bail, Context};
+
+use crate::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailConfig};
+use crate::aidg::FixedPointConfig;
+use crate::Result;
+
+use super::job::{run_request, Arch, EstimateRequest};
+
+/// Parse an architecture spec string.
+pub fn parse_arch(spec: &str) -> Result<Arch> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    match parts[0] {
+        "systolic" => {
+            let dims = parts.get(1).context("systolic needs <rows>x<cols>")?;
+            let (r, c) = parse_dims(dims)?;
+            let mut cfg = SystolicConfig::new(r, c);
+            if let Some(pw) = parts.get(2) {
+                let pw = pw
+                    .strip_prefix("pw")
+                    .context("third field must be pw<N>")?
+                    .parse::<u32>()?;
+                cfg = cfg.with_port_width(pw);
+            }
+            Ok(Arch::Systolic(cfg))
+        }
+        "ultratrail" => {
+            let mut cfg = UltraTrailConfig::default();
+            if let Some(d) = parts.get(1) {
+                cfg.array_dim = d.parse()?;
+            }
+            Ok(Arch::UltraTrail(cfg))
+        }
+        "gemmini" => {
+            let mut cfg = GemminiConfig::default();
+            if let Some(d) = parts.get(1) {
+                cfg.dim = d.parse()?;
+            }
+            Ok(Arch::Gemmini(cfg))
+        }
+        "plasticine" => {
+            let dims = parts.get(1).context("plasticine needs <rows>x<cols>:<tile>")?;
+            let (r, c) = parse_dims(dims)?;
+            let tile = parts.get(2).context("plasticine needs a tile size")?.parse()?;
+            Ok(Arch::Plasticine(PlasticineConfig::new(r, c, tile)))
+        }
+        other => bail!("unknown architecture {other:?} (systolic|ultratrail|gemmini|plasticine)"),
+    }
+}
+
+fn parse_dims(s: &str) -> Result<(u32, u32)> {
+    let (r, c) = s.split_once('x').context("expected <rows>x<cols>")?;
+    Ok((r.parse()?, c.parse()?))
+}
+
+/// Serve `estimate <arch> <network>` requests from `input`, writing one
+/// result line per request to `output`. Returns the number served.
+pub fn serve(input: impl BufRead, mut output: impl Write) -> Result<usize> {
+    let mut served = 0;
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "quit" {
+            break;
+        }
+        match serve_line(line) {
+            Ok(msg) => writeln!(output, "{msg}")?,
+            Err(e) => writeln!(output, "error: {e:#}")?,
+        }
+        served += 1;
+    }
+    Ok(served)
+}
+
+fn serve_line(line: &str) -> Result<String> {
+    let mut it = line.split_whitespace();
+    match it.next() {
+        Some("estimate") => {
+            let arch = parse_arch(it.next().context("estimate <arch> <network>")?)?;
+            let network = it.next().context("estimate <arch> <network>")?.to_string();
+            let e = run_request(&EstimateRequest { arch, network, fp: FixedPointConfig::default() })?;
+            Ok(format!(
+                "{} {} cycles={} evaluated_iters={} total_iters={} runtime_ms={}",
+                e.arch,
+                e.network,
+                e.total_cycles(),
+                e.evaluated_iters(),
+                e.total_iters(),
+                e.runtime.as_millis()
+            ))
+        }
+        Some(cmd) => bail!("unknown command {cmd:?} (estimate|quit)"),
+        None => bail!("empty command"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_arch_specs() {
+        assert!(matches!(parse_arch("systolic:4x4").unwrap(), Arch::Systolic(c) if c.rows == 4));
+        let pw = parse_arch("systolic:12x12:pw7").unwrap();
+        assert!(matches!(pw, Arch::Systolic(c) if c.port_width == 7));
+        assert!(matches!(parse_arch("ultratrail").unwrap(), Arch::UltraTrail(c) if c.array_dim == 8));
+        assert!(matches!(parse_arch("gemmini:32").unwrap(), Arch::Gemmini(c) if c.dim == 32));
+        assert!(
+            matches!(parse_arch("plasticine:3x6:16").unwrap(), Arch::Plasticine(c) if c.tile == 16)
+        );
+        assert!(parse_arch("tpu").is_err());
+        assert!(parse_arch("systolic").is_err());
+        assert!(parse_arch("plasticine:3x6").is_err());
+    }
+
+    #[test]
+    fn serve_estimates_and_reports_errors() {
+        let input = "# comment\nestimate ultratrail tc_resnet8\nestimate ultratrail alexnet\nbogus\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 3);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("cycles="), "{}", lines[0]);
+        assert!(lines[1].starts_with("error:"));
+        assert!(lines[2].starts_with("error:"));
+    }
+}

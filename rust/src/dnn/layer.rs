@@ -1,0 +1,292 @@
+//! DNN layer IR.
+//!
+//! Only layer *hyper-parameters* matter for performance estimation: the
+//! instruction streams of the paper's mappings are data independent (§6.3),
+//! so the IR carries shapes, channels, kernels, and strides — never weights.
+//! Covered layer types (paper §7): 1D/2D/depth-wise convolution,
+//! fully-connected, average/max pooling, ReLU/clip activation, element-wise
+//! add/mul (residual connections appear as Add layers).
+
+/// Activation function of an [`LayerKind::Act`] layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActKind {
+    Relu,
+    /// Clipping activation (UltraTrail / TC-ResNet style).
+    Clip,
+}
+
+/// Pooling operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Layer hyper-parameters. Spatial sizes are *output-producing* inputs
+/// (already padded where `pad` says so).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 1D convolution over (c_in, l_in) producing (c_out, l_out).
+    Conv1d { c_in: u32, l_in: u32, c_out: u32, kernel: u32, stride: u32, pad: bool },
+    /// 2D convolution over (c_in, h, w).
+    Conv2d {
+        c_in: u32,
+        h: u32,
+        w: u32,
+        c_out: u32,
+        kh: u32,
+        kw: u32,
+        stride: u32,
+        pad: bool,
+    },
+    /// Depth-wise 2D convolution (one filter per channel).
+    DwConv2d { c: u32, h: u32, w: u32, kh: u32, kw: u32, stride: u32, pad: bool },
+    /// Fully connected: c_in → c_out.
+    Dense { c_in: u32, c_out: u32 },
+    /// 2D pooling over (c, h, w).
+    Pool2d { kind: PoolKind, c: u32, h: u32, w: u32, k: u32, stride: u32 },
+    /// 1D pooling over (c, l).
+    Pool1d { kind: PoolKind, c: u32, l: u32, k: u32, stride: u32 },
+    /// Element-wise activation over `c` channels × `spatial` positions.
+    Act { kind: ActKind, c: u32, spatial: u32 },
+    /// Element-wise addition of two (c, spatial) tensors (residual join).
+    Add { c: u32, spatial: u32 },
+    /// Element-wise multiplication (e.g. squeeze-excite scaling).
+    Mul { c: u32, spatial: u32 },
+}
+
+/// A named layer instance.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// Output length of a conv/pool window along one axis.
+pub fn out_dim(i: u32, k: u32, stride: u32, pad: bool) -> u32 {
+    let eff = if pad { i + (k - 1) } else { i };
+    if eff < k {
+        return 0;
+    }
+    (eff - k) / stride + 1
+}
+
+impl Layer {
+    pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
+        Self { name: name.into(), kind }
+    }
+
+    /// Multiply-accumulate operations (element-wise ops count one op per
+    /// element; pooling counts one op per covered input element).
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv1d { c_in, l_in, c_out, kernel, stride, pad } => {
+                let lo = out_dim(*l_in, *kernel, *stride, *pad) as u64;
+                *c_in as u64 * *c_out as u64 * *kernel as u64 * lo
+            }
+            LayerKind::Conv2d { c_in, h, w, c_out, kh, kw, stride, pad } => {
+                let ho = out_dim(*h, *kh, *stride, *pad) as u64;
+                let wo = out_dim(*w, *kw, *stride, *pad) as u64;
+                *c_in as u64 * *c_out as u64 * *kh as u64 * *kw as u64 * ho * wo
+            }
+            LayerKind::DwConv2d { c, h, w, kh, kw, stride, pad } => {
+                let ho = out_dim(*h, *kh, *stride, *pad) as u64;
+                let wo = out_dim(*w, *kw, *stride, *pad) as u64;
+                *c as u64 * *kh as u64 * *kw as u64 * ho * wo
+            }
+            LayerKind::Dense { c_in, c_out } => *c_in as u64 * *c_out as u64,
+            LayerKind::Pool2d { c, h, w, k, stride, .. } => {
+                let ho = out_dim(*h, *k, *stride, false) as u64;
+                let wo = out_dim(*w, *k, *stride, false) as u64;
+                *c as u64 * ho * wo * (*k as u64 * *k as u64)
+            }
+            LayerKind::Pool1d { c, l, k, stride, .. } => {
+                let lo = out_dim(*l, *k, *stride, false) as u64;
+                *c as u64 * lo * *k as u64
+            }
+            LayerKind::Act { c, spatial, .. }
+            | LayerKind::Add { c, spatial }
+            | LayerKind::Mul { c, spatial } => *c as u64 * *spatial as u64,
+        }
+    }
+
+    /// Input activation words.
+    pub fn in_words(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv1d { c_in, l_in, .. } => *c_in as u64 * *l_in as u64,
+            LayerKind::Conv2d { c_in, h, w, .. } => *c_in as u64 * *h as u64 * *w as u64,
+            LayerKind::DwConv2d { c, h, w, .. } => *c as u64 * *h as u64 * *w as u64,
+            LayerKind::Dense { c_in, .. } => *c_in as u64,
+            LayerKind::Pool2d { c, h, w, .. } => *c as u64 * *h as u64 * *w as u64,
+            LayerKind::Pool1d { c, l, .. } => *c as u64 * *l as u64,
+            LayerKind::Act { c, spatial, .. } => *c as u64 * *spatial as u64,
+            // two operands
+            LayerKind::Add { c, spatial } | LayerKind::Mul { c, spatial } => {
+                2 * *c as u64 * *spatial as u64
+            }
+        }
+    }
+
+    /// Weight words (0 for weight-less layers).
+    pub fn weight_words(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv1d { c_in, c_out, kernel, .. } => {
+                *c_in as u64 * *c_out as u64 * *kernel as u64
+            }
+            LayerKind::Conv2d { c_in, c_out, kh, kw, .. } => {
+                *c_in as u64 * *c_out as u64 * *kh as u64 * *kw as u64
+            }
+            LayerKind::DwConv2d { c, kh, kw, .. } => *c as u64 * *kh as u64 * *kw as u64,
+            LayerKind::Dense { c_in, c_out } => *c_in as u64 * *c_out as u64,
+            _ => 0,
+        }
+    }
+
+    /// Output words.
+    pub fn out_words(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv1d { l_in, c_out, kernel, stride, pad, .. } => {
+                *c_out as u64 * out_dim(*l_in, *kernel, *stride, *pad) as u64
+            }
+            LayerKind::Conv2d { h, w, c_out, kh, kw, stride, pad, .. } => {
+                let ho = out_dim(*h, *kh, *stride, *pad) as u64;
+                let wo = out_dim(*w, *kw, *stride, *pad) as u64;
+                *c_out as u64 * ho * wo
+            }
+            LayerKind::DwConv2d { c, h, w, kh, kw, stride, pad } => {
+                let ho = out_dim(*h, *kh, *stride, *pad) as u64;
+                let wo = out_dim(*w, *kw, *stride, *pad) as u64;
+                *c as u64 * ho * wo
+            }
+            LayerKind::Dense { c_out, .. } => *c_out as u64,
+            LayerKind::Pool2d { c, h, w, k, stride, .. } => {
+                let ho = out_dim(*h, *k, *stride, false) as u64;
+                let wo = out_dim(*w, *k, *stride, false) as u64;
+                *c as u64 * ho * wo
+            }
+            LayerKind::Pool1d { c, l, k, stride, .. } => {
+                *c as u64 * out_dim(*l, *k, *stride, false) as u64
+            }
+            LayerKind::Act { c, spatial, .. }
+            | LayerKind::Add { c, spatial }
+            | LayerKind::Mul { c, spatial } => *c as u64 * *spatial as u64,
+        }
+    }
+
+    /// True for layers that lower to a GEMM (conv via im2col, dense
+    /// directly).
+    pub fn is_gemm_like(&self) -> bool {
+        matches!(
+            self.kind,
+            LayerKind::Conv1d { .. } | LayerKind::Conv2d { .. } | LayerKind::Dense { .. }
+        )
+    }
+
+    /// GEMM dimensions (M, K, N) after im2col: M = output positions,
+    /// K = c_in × kernel volume, N = output channels. Depth-wise conv maps
+    /// per-channel (M = positions, K = kernel volume, N = 1) × c channels.
+    pub fn gemm_dims(&self) -> Option<(u64, u64, u64)> {
+        match &self.kind {
+            LayerKind::Conv1d { c_in, l_in, c_out, kernel, stride, pad } => {
+                let m = out_dim(*l_in, *kernel, *stride, *pad) as u64;
+                Some((m, *c_in as u64 * *kernel as u64, *c_out as u64))
+            }
+            LayerKind::Conv2d { c_in, h, w, c_out, kh, kw, stride, pad } => {
+                let m = out_dim(*h, *kh, *stride, *pad) as u64
+                    * out_dim(*w, *kw, *stride, *pad) as u64;
+                Some((m, *c_in as u64 * *kh as u64 * *kw as u64, *c_out as u64))
+            }
+            LayerKind::Dense { c_in, c_out } => Some((1, *c_in as u64, *c_out as u64)),
+            _ => None,
+        }
+    }
+}
+
+/// An ordered network of layers. Residual topology is already flattened:
+/// joins appear as `Add` layers with their operand shapes.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), layers: Vec::new() }
+    }
+
+    pub fn push(&mut self, layer: Layer) -> &mut Self {
+        self.layers.push(layer);
+        self
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_dim_padding_and_stride() {
+        assert_eq!(out_dim(32, 3, 1, true), 32); // same-pad
+        assert_eq!(out_dim(32, 3, 1, false), 30);
+        assert_eq!(out_dim(224, 11, 4, false), 54);
+        assert_eq!(out_dim(2, 3, 1, false), 0); // too small
+    }
+
+    #[test]
+    fn conv2d_macs_hand_calc() {
+        // AlexNet conv1 (no pad): 3*96*11*11*54*54
+        let l = Layer::new(
+            "conv1",
+            LayerKind::Conv2d { c_in: 3, h: 224, w: 224, c_out: 96, kh: 11, kw: 11, stride: 4, pad: false },
+        );
+        assert_eq!(l.macs(), 3 * 96 * 11 * 11 * 54 * 54);
+        assert_eq!(l.out_words(), 96 * 54 * 54);
+        assert_eq!(l.weight_words(), 3 * 96 * 11 * 11);
+        assert_eq!(l.gemm_dims(), Some((54 * 54, 3 * 11 * 11, 96)));
+    }
+
+    #[test]
+    fn dense_is_degenerate_gemm() {
+        let l = Layer::new("fc", LayerKind::Dense { c_in: 256, c_out: 10 });
+        assert_eq!(l.macs(), 2560);
+        assert_eq!(l.gemm_dims(), Some((1, 256, 10)));
+        assert!(l.is_gemm_like());
+    }
+
+    #[test]
+    fn dwconv_macs() {
+        let l = Layer::new(
+            "dw",
+            LayerKind::DwConv2d { c: 32, h: 16, w: 16, kh: 3, kw: 3, stride: 1, pad: true },
+        );
+        assert_eq!(l.macs(), 32 * 9 * 16 * 16);
+        assert_eq!(l.gemm_dims(), None);
+    }
+
+    #[test]
+    fn elementwise_words() {
+        let a = Layer::new("add", LayerKind::Add { c: 24, spatial: 13 });
+        assert_eq!(a.macs(), 24 * 13);
+        assert_eq!(a.in_words(), 2 * 24 * 13);
+        assert_eq!(a.out_words(), 24 * 13);
+        assert!(!a.is_gemm_like());
+    }
+
+    #[test]
+    fn network_aggregates() {
+        let mut n = Network::new("n");
+        n.push(Layer::new("a", LayerKind::Dense { c_in: 4, c_out: 4 }));
+        n.push(Layer::new("b", LayerKind::Dense { c_in: 4, c_out: 2 }));
+        assert_eq!(n.total_macs(), 16 + 8);
+        assert_eq!(n.num_layers(), 2);
+    }
+}

@@ -1,0 +1,6 @@
+//! DNN layer IR + model zoo (paper §5/§7 workloads).
+
+pub mod layer;
+pub mod zoo;
+
+pub use layer::{ActKind, Layer, LayerKind, Network, PoolKind};

@@ -1,0 +1,345 @@
+//! The model zoo: the paper's three edge-AI workloads (§7) plus reduced
+//! variants used where whole-graph ground truth must fit the session budget
+//! (see DESIGN.md §3 scaling note).
+//!
+//! - **TC-ResNet8** [10]: 1D temporal convolutions for keyword spotting —
+//!   the UltraTrail workload.
+//! - **AlexNet** [15]: classic 2D CNN with large conv + FC layers.
+//! - **EfficientNet(-B0-style)** [24]: MBConv blocks with depth-wise convs,
+//!   squeeze-excite multiplies, and residual adds.
+//!
+//! Activation/add layers are explicit (the paper's Appendix A.2 analyzes
+//! clip/add mappings of TC-ResNet8 separately).
+
+use super::layer::{ActKind, Layer, LayerKind, Network, PoolKind};
+
+/// TC-ResNet8 for keyword spotting: conv1 + 3 residual blocks
+/// (k=9 temporal convs) + avg-pool + FC. Input: 40 MFCC channels × 100
+/// frames (channels-as-features 1D layout, as in the TC-ResNet paper).
+pub fn tc_resnet8() -> Network {
+    let mut n = Network::new("tc_resnet8");
+    let mut t = 100u32; // frames
+    let mut c = 40u32; // channels
+
+    n.push(Layer::new(
+        "conv1",
+        LayerKind::Conv1d { c_in: c, l_in: t, c_out: 16, kernel: 3, stride: 1, pad: true },
+    ));
+    c = 16;
+    n.push(Layer::new("clip1", LayerKind::Act { kind: ActKind::Clip, c, spatial: t }));
+
+    for (b, c_out) in [(1u32, 24u32), (2, 32), (3, 48)] {
+        let t_in = t;
+        let c_in = c;
+        let t_out = (t_in + 1) / 2; // stride-2 same-pad
+        n.push(Layer::new(
+            format!("block{b}_conv1"),
+            LayerKind::Conv1d { c_in, l_in: t_in, c_out, kernel: 9, stride: 2, pad: true },
+        ));
+        n.push(Layer::new(
+            format!("block{b}_clip1"),
+            LayerKind::Act { kind: ActKind::Clip, c: c_out, spatial: t_out },
+        ));
+        n.push(Layer::new(
+            format!("block{b}_conv2"),
+            LayerKind::Conv1d { c_in: c_out, l_in: t_out, c_out, kernel: 9, stride: 1, pad: true },
+        ));
+        // residual 1×1 conv on the skip path (stride 2)
+        n.push(Layer::new(
+            format!("block{b}_res"),
+            LayerKind::Conv1d { c_in, l_in: t_in, c_out, kernel: 1, stride: 2, pad: false },
+        ));
+        n.push(Layer::new(format!("block{b}_add"), LayerKind::Add { c: c_out, spatial: t_out }));
+        n.push(Layer::new(
+            format!("block{b}_clip2"),
+            LayerKind::Act { kind: ActKind::Clip, c: c_out, spatial: t_out },
+        ));
+        t = t_out;
+        c = c_out;
+    }
+
+    n.push(Layer::new("avgpool", LayerKind::Pool1d { kind: PoolKind::Avg, c, l: t, k: t, stride: 1 }));
+    n.push(Layer::new("fc", LayerKind::Dense { c_in: c, c_out: 12 }));
+    n
+}
+
+/// Full-size AlexNet (227×227 input, the canonical 9216-wide fc6). LRN
+/// layers are omitted (negligible and unsupported by all four modeled
+/// accelerators, as in the paper's mappings).
+pub fn alexnet() -> Network {
+    alexnet_at(227)
+}
+
+/// Reduced-resolution AlexNet used where whole-graph / DES ground truth
+/// must fit the session budget. Same layer structure, 67×67 input.
+pub fn alexnet_reduced() -> Network {
+    alexnet_at(67)
+}
+
+fn alexnet_at(input: u32) -> Network {
+    let name = if input == 227 { "alexnet".to_string() } else { format!("alexnet_{input}") };
+    let mut n = Network::new(name);
+    let mut s = input;
+
+    n.push(Layer::new(
+        "conv1",
+        LayerKind::Conv2d { c_in: 3, h: s, w: s, c_out: 96, kh: 11, kw: 11, stride: 4, pad: false },
+    ));
+    s = (s - 11) / 4 + 1;
+    n.push(Layer::new("relu1", LayerKind::Act { kind: ActKind::Relu, c: 96, spatial: s * s }));
+    n.push(Layer::new("pool1", LayerKind::Pool2d { kind: PoolKind::Max, c: 96, h: s, w: s, k: 3, stride: 2 }));
+    s = (s - 3) / 2 + 1;
+
+    n.push(Layer::new(
+        "conv2",
+        LayerKind::Conv2d { c_in: 96, h: s, w: s, c_out: 256, kh: 5, kw: 5, stride: 1, pad: true },
+    ));
+    n.push(Layer::new("relu2", LayerKind::Act { kind: ActKind::Relu, c: 256, spatial: s * s }));
+    n.push(Layer::new("pool2", LayerKind::Pool2d { kind: PoolKind::Max, c: 256, h: s, w: s, k: 3, stride: 2 }));
+    s = (s - 3) / 2 + 1;
+
+    n.push(Layer::new(
+        "conv3",
+        LayerKind::Conv2d { c_in: 256, h: s, w: s, c_out: 384, kh: 3, kw: 3, stride: 1, pad: true },
+    ));
+    n.push(Layer::new("relu3", LayerKind::Act { kind: ActKind::Relu, c: 384, spatial: s * s }));
+    n.push(Layer::new(
+        "conv4",
+        LayerKind::Conv2d { c_in: 384, h: s, w: s, c_out: 384, kh: 3, kw: 3, stride: 1, pad: true },
+    ));
+    n.push(Layer::new("relu4", LayerKind::Act { kind: ActKind::Relu, c: 384, spatial: s * s }));
+    n.push(Layer::new(
+        "conv5",
+        LayerKind::Conv2d { c_in: 384, h: s, w: s, c_out: 256, kh: 3, kw: 3, stride: 1, pad: true },
+    ));
+    n.push(Layer::new("relu5", LayerKind::Act { kind: ActKind::Relu, c: 256, spatial: s * s }));
+    n.push(Layer::new("pool5", LayerKind::Pool2d { kind: PoolKind::Max, c: 256, h: s, w: s, k: 3, stride: 2 }));
+    s = (s - 3) / 2 + 1;
+
+    let flat = 256 * s * s;
+    n.push(Layer::new("fc6", LayerKind::Dense { c_in: flat, c_out: 4096 }));
+    n.push(Layer::new("relu6", LayerKind::Act { kind: ActKind::Relu, c: 4096, spatial: 1 }));
+    n.push(Layer::new("fc7", LayerKind::Dense { c_in: 4096, c_out: 4096 }));
+    n.push(Layer::new("relu7", LayerKind::Act { kind: ActKind::Relu, c: 4096, spatial: 1 }));
+    n.push(Layer::new("fc8", LayerKind::Dense { c_in: 4096, c_out: 1000 }));
+    n
+}
+
+/// One MBConv block: expand (1×1) → dwconv → squeeze-excite (two small
+/// dense + mul) → project (1×1) (+ residual add when shapes match).
+#[allow(clippy::too_many_arguments)]
+fn mbconv(
+    n: &mut Network,
+    idx: u32,
+    c_in: u32,
+    c_out: u32,
+    s_in: u32,
+    expand: u32,
+    k: u32,
+    stride: u32,
+    se: bool,
+) -> u32 {
+    let c_mid = c_in * expand;
+    let s_out = if stride == 1 { s_in } else { s_in.div_ceil(stride) };
+    if expand != 1 {
+        n.push(Layer::new(
+            format!("mb{idx}_expand"),
+            LayerKind::Conv2d { c_in, h: s_in, w: s_in, c_out: c_mid, kh: 1, kw: 1, stride: 1, pad: false },
+        ));
+        n.push(Layer::new(
+            format!("mb{idx}_expand_act"),
+            LayerKind::Act { kind: ActKind::Relu, c: c_mid, spatial: s_in * s_in },
+        ));
+    }
+    n.push(Layer::new(
+        format!("mb{idx}_dw"),
+        LayerKind::DwConv2d { c: c_mid, h: s_in, w: s_in, kh: k, kw: k, stride, pad: true },
+    ));
+    n.push(Layer::new(
+        format!("mb{idx}_dw_act"),
+        LayerKind::Act { kind: ActKind::Relu, c: c_mid, spatial: s_out * s_out },
+    ));
+    if se {
+        let c_se = (c_in / 4).max(1);
+        n.push(Layer::new(format!("mb{idx}_se_reduce"), LayerKind::Dense { c_in: c_mid, c_out: c_se }));
+        n.push(Layer::new(format!("mb{idx}_se_expand"), LayerKind::Dense { c_in: c_se, c_out: c_mid }));
+        n.push(Layer::new(
+            format!("mb{idx}_se_scale"),
+            LayerKind::Mul { c: c_mid, spatial: s_out * s_out },
+        ));
+    }
+    n.push(Layer::new(
+        format!("mb{idx}_project"),
+        LayerKind::Conv2d { c_in: c_mid, h: s_out, w: s_out, c_out, kh: 1, kw: 1, stride: 1, pad: false },
+    ));
+    if stride == 1 && c_in == c_out {
+        n.push(Layer::new(
+            format!("mb{idx}_add"),
+            LayerKind::Add { c: c_out, spatial: s_out * s_out },
+        ));
+    }
+    s_out
+}
+
+/// EfficientNet-B0-style edge network (full size, 224×224).
+pub fn efficientnet() -> Network {
+    efficientnet_cfg("efficientnet", 224, &B0_BLOCKS)
+}
+
+/// Reduced EfficientNet (56×56 input, half the block repeats) for
+/// ground-truth-bounded experiments.
+pub fn efficientnet_reduced() -> Network {
+    efficientnet_cfg("efficientnet_56", 56, &TINY_BLOCKS)
+}
+
+/// (expand, c_out, repeats, stride, kernel, se)
+type BlockCfg = (u32, u32, u32, u32, u32, bool);
+
+const B0_BLOCKS: [BlockCfg; 7] = [
+    (1, 16, 1, 1, 3, true),
+    (6, 24, 2, 2, 3, true),
+    (6, 40, 2, 2, 5, true),
+    (6, 80, 3, 2, 3, true),
+    (6, 112, 3, 1, 5, true),
+    (6, 192, 4, 2, 5, true),
+    (6, 320, 1, 1, 3, true),
+];
+
+const TINY_BLOCKS: [BlockCfg; 5] = [
+    (1, 16, 1, 1, 3, true),
+    (6, 24, 1, 2, 3, true),
+    (6, 40, 1, 2, 5, true),
+    (6, 80, 2, 2, 3, true),
+    (6, 112, 1, 1, 5, true),
+];
+
+fn efficientnet_cfg(name: &str, input: u32, blocks: &[BlockCfg]) -> Network {
+    let mut n = Network::new(name);
+    let mut s = input;
+    // stem
+    n.push(Layer::new(
+        "stem",
+        LayerKind::Conv2d { c_in: 3, h: s, w: s, c_out: 32, kh: 3, kw: 3, stride: 2, pad: true },
+    ));
+    s = s.div_ceil(2);
+    n.push(Layer::new("stem_act", LayerKind::Act { kind: ActKind::Relu, c: 32, spatial: s * s }));
+
+    let mut c = 32u32;
+    let mut idx = 0u32;
+    for &(expand, c_out, repeats, stride, k, se) in blocks {
+        for r in 0..repeats {
+            let st = if r == 0 { stride } else { 1 };
+            s = mbconv(&mut n, idx, c, c_out, s, expand, k, st, se);
+            c = c_out;
+            idx += 1;
+        }
+    }
+
+    // head
+    n.push(Layer::new(
+        "head",
+        LayerKind::Conv2d { c_in: c, h: s, w: s, c_out: 1280, kh: 1, kw: 1, stride: 1, pad: false },
+    ));
+    n.push(Layer::new("head_act", LayerKind::Act { kind: ActKind::Relu, c: 1280, spatial: s * s }));
+    n.push(Layer::new(
+        "avgpool",
+        LayerKind::Pool2d { kind: PoolKind::Avg, c: 1280, h: s, w: s, k: s, stride: 1 },
+    ));
+    n.push(Layer::new("fc", LayerKind::Dense { c_in: 1280, c_out: 1000 }));
+    n
+}
+
+/// Look up a network by name (CLI / coordinator interface).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "tc_resnet8" | "tc-resnet8" => Some(tc_resnet8()),
+        "alexnet" => Some(alexnet()),
+        "alexnet_reduced" | "alexnet_67" => Some(alexnet_reduced()),
+        "efficientnet" => Some(efficientnet()),
+        "efficientnet_reduced" | "efficientnet_56" => Some(efficientnet_reduced()),
+        _ => None,
+    }
+}
+
+/// All zoo entries (full + reduced).
+pub fn all_names() -> &'static [&'static str] {
+    &["tc_resnet8", "alexnet", "alexnet_reduced", "efficientnet", "efficientnet_reduced"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::LayerKind;
+
+    #[test]
+    fn tc_resnet8_structure() {
+        let n = tc_resnet8();
+        // conv1 + clip + 3 blocks × 6 + pool + fc = 22
+        assert_eq!(n.num_layers(), 22);
+        // all 1D / elementwise / dense
+        assert!(n.layers.iter().all(|l| !matches!(l.kind, LayerKind::Conv2d { .. })));
+        // ~1-10 MMACs: keyword-spotting scale
+        let m = n.total_macs();
+        assert!(m > 500_000 && m < 20_000_000, "macs {m}");
+    }
+
+    #[test]
+    fn alexnet_matches_reference_macs() {
+        let n = alexnet();
+        // canonical AlexNet ≈ 0.7-1.2 GMACs (54×54 conv1 variant)
+        let m = n.total_macs();
+        assert!(m > 600_000_000 && m < 1_500_000_000, "macs {m}");
+        // fc6 dominates the FC part: 9216×4096
+        let fc6 = n.layers.iter().find(|l| l.name == "fc6").unwrap();
+        assert_eq!(fc6.macs(), 9216 * 4096);
+    }
+
+    #[test]
+    fn alexnet_reduced_is_much_smaller() {
+        assert!(alexnet_reduced().total_macs() < alexnet().total_macs() / 5);
+        // same structure
+        assert_eq!(alexnet_reduced().num_layers(), alexnet().num_layers());
+    }
+
+    #[test]
+    fn efficientnet_has_dw_and_se() {
+        let n = efficientnet();
+        assert!(n.layers.iter().any(|l| matches!(l.kind, LayerKind::DwConv2d { .. })));
+        assert!(n.layers.iter().any(|l| matches!(l.kind, LayerKind::Mul { .. })));
+        assert!(n.layers.iter().any(|l| matches!(l.kind, LayerKind::Add { .. })));
+        // B0 ≈ 0.39 GMACs; our variant should be same order
+        let m = n.total_macs();
+        assert!(m > 100_000_000 && m < 1_000_000_000, "macs {m}");
+        assert!(n.num_layers() > 60, "layers {}", n.num_layers());
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for name in all_names() {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("vgg").is_none());
+    }
+
+    #[test]
+    fn shapes_chain_consistently() {
+        // every consecutive (conv → act) pair must agree on element count
+        for net in [tc_resnet8(), alexnet(), efficientnet()] {
+            for w in net.layers.windows(2) {
+                if let (l, Layer { kind: LayerKind::Act { c, spatial, .. }, .. }) = (&w[0], &w[1])
+                {
+                    if l.is_gemm_like() || matches!(l.kind, LayerKind::DwConv2d { .. }) {
+                        assert_eq!(
+                            l.out_words(),
+                            *c as u64 * *spatial as u64,
+                            "{}/{} mismatch in {}",
+                            w[0].name,
+                            w[1].name,
+                            net.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Integer ids + string interning.
+//!
+//! All hot-path structures (routing, AIDG state, the cycle simulator) key by
+//! dense integer ids instead of strings: `OpId` for instruction mnemonics,
+//! `RegId` for register names, `ObjId` for ACADL objects. Interners live in
+//! the [`crate::acadl::Diagram`] so ids are stable per architecture model.
+
+use std::collections::HashMap;
+
+/// Instruction mnemonic id (e.g. `load`, `mac`, `conv_ext`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub u32);
+
+/// Register name id (e.g. `pe[0][1].acc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegId(pub u32);
+
+/// ACADL object id (index into the diagram's object table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjId(pub u32);
+
+impl ObjId {
+    #[inline]
+    pub fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Memory address (single global address space per diagram; each `Memory`
+/// object claims disjoint `address_ranges` within it).
+pub type Addr = u64;
+
+/// Clock cycle count.
+pub type Cycle = u64;
+
+/// Fast non-cryptographic hasher for integer keys on the evaluation hot
+/// path (FxHash-style multiply-xor; SipHash dominates the profile on the
+/// address scoreboards otherwise).
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl std::hash::Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ n).wrapping_mul(0x517CC1B727220A95);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.write_u64(n as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.write_u64(n as u64);
+    }
+}
+
+/// `HashMap` with [`FxHasher`] (hot-path integer keys).
+pub type FxHashMap<K, V> = HashMap<K, V, std::hash::BuildHasherDefault<FxHasher>>;
+
+/// A simple string interner mapping names to dense u32 ids.
+#[derive(Debug, Default, Clone)]
+pub struct Interner {
+    names: Vec<String>,
+    map: HashMap<String, u32>,
+}
+
+impl Interner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `name`, returning its id (existing or fresh).
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.map.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.map.insert(name.to_string(), id);
+        id
+    }
+
+    /// Look up an already-interned name.
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.map.get(name).copied()
+    }
+
+    /// Resolve an id back to its name.
+    pub fn name(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut i = Interner::new();
+        let a = i.intern("mac");
+        let b = i.intern("load");
+        let a2 = i.intern("mac");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(i.name(a), "mac");
+        assert_eq!(i.name(b), "load");
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn get_without_intern() {
+        let mut i = Interner::new();
+        assert_eq!(i.get("x"), None);
+        let id = i.intern("x");
+        assert_eq!(i.get("x"), Some(id));
+    }
+}

@@ -1,0 +1,181 @@
+//! Abstract instructions and loop kernels.
+//!
+//! ACADL is instruction-centric: any architectural state change is triggered
+//! by an instruction. Instructions are *not* limited to fine-grained
+//! operations — a single instruction may be a scalar `mac`, a tiled-GEMM
+//! `compute`, or a whole fused `conv_ext` layer; the abstraction level of the
+//! instruction stream must match the abstraction level of the ACADL model
+//! (paper §4/§5).
+//!
+//! A DNN layer maps to a [`LoopKernel`]: a fixed instruction *template*
+//! executed `k` times where consecutive iterations differ only in memory
+//! addresses (dataflow-driven, no control flow — paper §6.3). The kernel
+//! therefore carries a generator closure producing the concrete instructions
+//! of iteration `it`.
+
+use crate::ids::{Addr, OpId, RegId};
+
+/// One abstract instruction occupying hardware modules as it propagates
+/// through an ACADL object diagram.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Instruction {
+    /// Mnemonic (interned in the diagram the stream targets).
+    pub op: OpId,
+    /// Registers read when the instruction executes.
+    pub read_regs: Vec<RegId>,
+    /// Registers written when the instruction executes.
+    pub write_regs: Vec<RegId>,
+    /// Memory addresses read (word granular).
+    pub read_addrs: Vec<Addr>,
+    /// Memory addresses written.
+    pub write_addrs: Vec<Addr>,
+    /// Immediate values; also the latency-expression inputs (`imm0`, ...).
+    pub imms: Vec<i64>,
+}
+
+impl Instruction {
+    pub fn new(op: OpId) -> Self {
+        Self {
+            op,
+            read_regs: Vec::new(),
+            write_regs: Vec::new(),
+            read_addrs: Vec::new(),
+            write_addrs: Vec::new(),
+            imms: Vec::new(),
+        }
+    }
+
+    pub fn reads(mut self, regs: &[RegId]) -> Self {
+        self.read_regs.extend_from_slice(regs);
+        self
+    }
+
+    pub fn writes(mut self, regs: &[RegId]) -> Self {
+        self.write_regs.extend_from_slice(regs);
+        self
+    }
+
+    pub fn read_mem(mut self, addrs: &[Addr]) -> Self {
+        self.read_addrs.extend_from_slice(addrs);
+        self
+    }
+
+    pub fn write_mem(mut self, addrs: &[Addr]) -> Self {
+        self.write_addrs.extend_from_slice(addrs);
+        self
+    }
+
+    pub fn imm(mut self, v: i64) -> Self {
+        self.imms.push(v);
+        self
+    }
+
+    pub fn imms(mut self, vs: &[i64]) -> Self {
+        self.imms.extend_from_slice(vs);
+        self
+    }
+
+    /// True if the instruction touches memory at all.
+    pub fn accesses_memory(&self) -> bool {
+        !self.read_addrs.is_empty() || !self.write_addrs.is_empty()
+    }
+}
+
+/// Generator of the concrete instructions of iteration `it` of a loop kernel.
+pub type IterGen = Box<dyn Fn(u64, &mut Vec<Instruction>) + Send + Sync>;
+
+/// A mapped DNN layer: `k` iterations of a fixed instruction template.
+pub struct LoopKernel {
+    /// Human-readable label (layer name + mapping info).
+    pub label: String,
+    /// Total loop iterations `k` for the full layer.
+    pub k: u64,
+    /// Instructions per iteration `|I|` (constant across iterations).
+    pub insts_per_iter: usize,
+    /// Produces iteration `it`'s instructions (appends to the buffer).
+    gen: IterGen,
+}
+
+impl LoopKernel {
+    pub fn new(label: impl Into<String>, k: u64, insts_per_iter: usize, gen: IterGen) -> Self {
+        Self { label: label.into(), k, insts_per_iter, gen }
+    }
+
+    /// Append iteration `it`'s instructions to `buf`.
+    pub fn emit(&self, it: u64, buf: &mut Vec<Instruction>) {
+        let before = buf.len();
+        (self.gen)(it, buf);
+        debug_assert_eq!(
+            buf.len() - before,
+            self.insts_per_iter,
+            "kernel {} emitted wrong instruction count at iter {}",
+            self.label,
+            it
+        );
+    }
+
+    /// Materialize a range of iterations (mostly for tests / the simulator).
+    pub fn materialize(&self, iters: std::ops::Range<u64>) -> Vec<Instruction> {
+        let mut buf = Vec::with_capacity(self.insts_per_iter * (iters.end - iters.start) as usize);
+        for it in iters {
+            self.emit(it, &mut buf);
+        }
+        buf
+    }
+
+    /// Total instructions over all `k` iterations.
+    pub fn total_insts(&self) -> u64 {
+        self.k * self.insts_per_iter as u64
+    }
+}
+
+impl std::fmt::Debug for LoopKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LoopKernel")
+            .field("label", &self.label)
+            .field("k", &self.k)
+            .field("insts_per_iter", &self.insts_per_iter)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let i = Instruction::new(OpId(3))
+            .reads(&[RegId(1)])
+            .writes(&[RegId(2)])
+            .read_mem(&[10])
+            .write_mem(&[20])
+            .imm(7);
+        assert_eq!(i.op, OpId(3));
+        assert_eq!(i.read_regs, vec![RegId(1)]);
+        assert_eq!(i.write_regs, vec![RegId(2)]);
+        assert_eq!(i.read_addrs, vec![10]);
+        assert_eq!(i.write_addrs, vec![20]);
+        assert_eq!(i.imms, vec![7]);
+        assert!(i.accesses_memory());
+        assert!(!Instruction::new(OpId(0)).accesses_memory());
+    }
+
+    #[test]
+    fn kernel_materializes_iterations() {
+        let k = LoopKernel::new(
+            "t",
+            4,
+            2,
+            Box::new(|it, buf| {
+                buf.push(Instruction::new(OpId(0)).read_mem(&[it * 8]));
+                buf.push(Instruction::new(OpId(1)).write_mem(&[100 + it * 8]));
+            }),
+        );
+        let insts = k.materialize(0..4);
+        assert_eq!(insts.len(), 8);
+        assert_eq!(insts[0].read_addrs, vec![0]);
+        assert_eq!(insts[6].read_addrs, vec![24]);
+        assert_eq!(k.total_insts(), 8);
+    }
+}

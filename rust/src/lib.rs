@@ -1,0 +1,57 @@
+//! # acadl-perf
+//!
+//! Reproduction of *Automatic Generation of Fast and Accurate Performance
+//! Models for Deep Neural Network Accelerators* (Lübeck et al., 2024,
+//! DOI 10.1145/3715122) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate implements:
+//!
+//! - [`acadl`] — the Abstract Computer Architecture Description Language:
+//!   an object model of accelerator architectures (pipeline stages, execute
+//!   stages, functional units, register files, memories) with a precise,
+//!   instruction-centric latency semantic, including latency *expressions*
+//!   evaluated against instruction immediates (UltraTrail's CONV-EXT
+//!   analytical model, Gemmini's DRAM burst model).
+//! - [`isa`] — abstract instructions and loop kernels at any abstraction
+//!   level (scalar `load`/`mac`/`store`, tiled-GEMM `mvin`/`compute`,
+//!   fused-tensor `conv_ext`).
+//! - [`dnn`] — the DNN layer IR and the model zoo (TC-ResNet8, AlexNet,
+//!   EfficientNet-edge and reduced variants).
+//! - [`mapping`] — DNN-layer → loop-kernel lowering per abstraction level
+//!   (weight-stationary scalar unrolling, im2col + tiled GEMM, fused tensor
+//!   ops, Plasticine parallel-GEMM partitioning).
+//! - [`aidg`] — the Architectural Instruction Dependency Graph: streaming
+//!   construction (§6.1), Algorithm-1 evaluation (§6.2), and the §6.3
+//!   fixed-point layer estimator with the 1 % fallback heuristic.
+//! - [`sim`] — an independent cycle-accurate discrete-event simulator over
+//!   the same ACADL diagrams (the in-repo stand-in for the paper's
+//!   Verilator/Xcelium RTL ground truth).
+//! - [`accel`] — object-diagram builders for the four paper architectures.
+//! - [`baselines`] — refined roofline (native mirror of the AOT-compiled
+//!   JAX/Pallas estimator) and a Timeloop-like analytical model.
+//! - [`runtime`] — PJRT loader executing the AOT artifacts from Rust.
+//! - [`coordinator`] — the estimation service: job queue, worker pool, and
+//!   the design-space-exploration driver that batches roofline queries
+//!   through the XLA executable.
+//! - [`metrics`] / [`report`] — PE/MAPE/variance/Pearson and the paper's
+//!   table/figure renderers.
+
+pub mod acadl;
+pub mod accel;
+pub mod aidg;
+pub mod baselines;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod dnn;
+pub mod expt;
+pub mod ids;
+pub mod isa;
+pub mod mapping;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,261 @@
+//! `acadl-perf` — CLI leader for the estimation service.
+//!
+//! ```text
+//! acadl-perf estimate <arch> <network>             per-layer AIDG estimate
+//! acadl-perf simulate <arch> <network>             cycle-accurate DES (slow)
+//! acadl-perf compare <arch> <network>              AIDG vs roofline vs DES
+//! acadl-perf dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]
+//! acadl-perf serve                                 line-based request loop
+//! acadl-perf info                                  platform + model zoo
+//! ```
+//!
+//! Architecture specs: `systolic:4x4[:pw2]`, `ultratrail[:8]`,
+//! `gemmini[:16]`, `plasticine:3x6:16`.
+
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{self, Arch, DseSpec, EstimateRequest, Pool, RooflineBackend};
+use acadl_perf::report::{fmt_bytes, fmt_cycles, Table};
+use acadl_perf::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("estimate") => estimate(&args[1..]),
+        Some("simulate") => simulate(&args[1..]),
+        Some("compare") => compare(&args[1..]),
+        Some("dse") => dse(&args[1..]),
+        Some("serve") => {
+            let stdin = std::io::stdin();
+            let n = coordinator::serve(stdin.lock(), std::io::stdout())?;
+            eprintln!("served {n} requests");
+            Ok(())
+        }
+        Some("info") => info(),
+        _ => {
+            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|serve|info> ...");
+            eprintln!("  architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
+            Ok(())
+        }
+    }
+}
+
+fn arch_and_net(args: &[String]) -> Result<(Arch, String)> {
+    anyhow::ensure!(args.len() >= 2, "expected <arch> <network>");
+    Ok((coordinator::parse_arch(&args[0])?, args[1].clone()))
+}
+
+fn estimate(args: &[String]) -> Result<()> {
+    let (arch, network) = arch_and_net(args)?;
+    let e = coordinator::run_request(&EstimateRequest {
+        arch,
+        network,
+        fp: FixedPointConfig::default(),
+    })?;
+    let mut t = Table::new(
+        format!("{} on {}", e.network, e.arch),
+        &["layer", "cycles", "eval iters", "total iters", "fallback", "peak state"],
+    );
+    for l in &e.layers {
+        match &l.estimate {
+            None => t.row(&[
+                l.layer_name.clone(),
+                "fused".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+            Some(es) => t.row(&[
+                l.layer_name.clone(),
+                fmt_cycles(l.cycles()),
+                l.evaluated_iters().to_string(),
+                l.total_iters().to_string(),
+                es.iter().any(|e| e.used_fallback).to_string(),
+                fmt_bytes(l.peak_state_bytes()),
+            ]),
+        };
+    }
+    println!("{}", t.to_markdown());
+    println!(
+        "total: {} cycles | {} of {} iterations evaluated ({:.4}%) | {} instructions | {:.1} ms",
+        fmt_cycles(e.total_cycles()),
+        e.evaluated_iters(),
+        e.total_iters(),
+        100.0 * e.evaluated_iters() as f64 / e.total_iters().max(1) as f64,
+        e.total_insts(),
+        e.runtime.as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+fn simulate(args: &[String]) -> Result<()> {
+    let (arch, network) = arch_and_net(args)?;
+    let net = acadl_perf::dnn::zoo::by_name(&network)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {network:?}"))?;
+    let mapper = arch.mapper()?;
+    let t0 = std::time::Instant::now();
+    let mut total = 0u64;
+    let mut insts = 0u64;
+    for ml in mapper.map_network(&net)? {
+        if ml.fused {
+            continue;
+        }
+        let r = acadl_perf::sim::simulate_layer(mapper.diagram(), &ml.kernels)?;
+        println!(
+            "{:<28} {:>14} cycles  {:>12} instructions",
+            ml.layer_name, r.cycles, r.instructions
+        );
+        total += r.cycles;
+        insts += r.instructions;
+    }
+    println!(
+        "total: {} cycles | {} instructions | {:.1} s wall",
+        fmt_cycles(total),
+        insts,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn compare(args: &[String]) -> Result<()> {
+    let (arch, network) = arch_and_net(args)?;
+    let net = acadl_perf::dnn::zoo::by_name(&network)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {network:?}"))?;
+    let mapper = arch.mapper()?;
+
+    // AIDG fixed-point estimate
+    let t0 = std::time::Instant::now();
+    let aidg =
+        coordinator::estimate_network(mapper.as_ref(), &net, &FixedPointConfig::default())?;
+    let aidg_rt = t0.elapsed();
+
+    // refined roofline (native mirror; the XLA path is exercised in benches)
+    let t1 = std::time::Instant::now();
+    let mapped = mapper.map_network(&net)?;
+    let roof =
+        acadl_perf::baselines::roofline_network(&net.layers, &mapped, &mapper.hw_features());
+    let roof_rt = t1.elapsed();
+
+    // DES ground truth (executes everything — slow on big nets)
+    let t2 = std::time::Instant::now();
+    let mut des_total = 0u64;
+    let mut des_layers = Vec::new();
+    for ml in &mapped {
+        if ml.fused {
+            des_layers.push(0.0);
+            continue;
+        }
+        let r = acadl_perf::sim::simulate_layer(mapper.diagram(), &ml.kernels)?;
+        des_total += r.cycles;
+        des_layers.push(r.cycles as f64);
+    }
+    let des_rt = t2.elapsed();
+
+    let pe = |est: f64| acadl_perf::metrics::percentage_error(est, des_total as f64);
+    let mut t = Table::new(
+        format!("Estimator comparison — {} on {}", net.name, aidg.arch),
+        &["estimator", "runtime", "estimated cycles", "PE", "MAPE"],
+    );
+    let aidg_cycles: Vec<f64> = aidg.layer_cycles();
+    t.row(&[
+        "AIDG fixed point".into(),
+        format!("{:.1} ms", aidg_rt.as_secs_f64() * 1e3),
+        fmt_cycles(aidg.total_cycles()),
+        format!("{:.2}%", pe(aidg.total_cycles() as f64)),
+        format!("{:.2}%", acadl_perf::metrics::mape(&des_layers, &aidg_cycles)),
+    ]);
+    t.row(&[
+        "Refined roofline [28]".into(),
+        format!("{:.1} ms", roof_rt.as_secs_f64() * 1e3),
+        fmt_cycles(roof.iter().sum::<f64>() as u64),
+        format!("{:.2}%", pe(roof.iter().sum())),
+        format!("{:.2}%", acadl_perf::metrics::mape(&des_layers, &roof)),
+    ]);
+    t.row(&[
+        "Regression model [5]".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.2}%", acadl_perf::baselines::BOUZIDI_SVR_MAPE),
+    ]);
+    t.row(&[
+        "DES (ground truth)".into(),
+        format!("{:.2} s", des_rt.as_secs_f64()),
+        fmt_cycles(des_total),
+        "0.00%".into(),
+        "0.00%".into(),
+    ]);
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn dse(args: &[String]) -> Result<()> {
+    anyhow::ensure!(!args.is_empty(), "dse <network> --rows R,.. --cols C,.. --tiles T,..");
+    let network = args[0].clone();
+    let mut rows = vec![2u32, 3, 4];
+    let mut cols = vec![2u32, 4, 6];
+    let mut tiles = vec![8u32, 16];
+    let mut keep = 1.0f64;
+    let mut i = 1;
+    while i < args.len() {
+        anyhow::ensure!(i + 1 < args.len(), "flag {} needs a value", args[i]);
+        let parse_list =
+            |s: &str| -> Result<Vec<u32>> { s.split(',').map(|v| Ok(v.parse()?)).collect() };
+        match args[i].as_str() {
+            "--rows" => rows = parse_list(&args[i + 1])?,
+            "--cols" => cols = parse_list(&args[i + 1])?,
+            "--tiles" => tiles = parse_list(&args[i + 1])?,
+            "--keep" => keep = args[i + 1].parse()?,
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+        i += 2;
+    }
+    let spec =
+        DseSpec { rows, cols, tiles, network, keep_frac: keep, fp: FixedPointConfig::default() };
+    let mut pool = Pool::new(0);
+    let backend = RooflineBackend::auto();
+    let t0 = std::time::Instant::now();
+    let points = coordinator::explore(&spec, &mut pool, &backend)?;
+    let mut t = Table::new(
+        format!("DSE — {} ({} design points, {:.1} s)", spec.network, points.len(), t0.elapsed().as_secs_f64()),
+        &["rows", "cols", "tile", "roofline cycles", "AIDG cycles"],
+    );
+    for p in points.iter().take(20) {
+        t.row(&[
+            p.rows.to_string(),
+            p.cols.to_string(),
+            p.tile.to_string(),
+            fmt_cycles(p.roofline_cycles as u64),
+            p.aidg_cycles.map(fmt_cycles).unwrap_or_else(|| "filtered".into()),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("acadl-perf — ACADL + AIDG performance-model generator");
+    match acadl_perf::runtime::platform_info() {
+        Ok(p) => println!("PJRT: {p}"),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    println!(
+        "artifacts: {} ({})",
+        acadl_perf::runtime::artifacts_dir().display(),
+        if acadl_perf::runtime::artifacts_dir().join("roofline.hlo.txt").exists() {
+            "built"
+        } else {
+            "missing — run `make artifacts`"
+        }
+    );
+    println!("networks: {}", acadl_perf::dnn::zoo::all_names().join(", "));
+    println!("architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
+    Ok(())
+}

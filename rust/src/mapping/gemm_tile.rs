@@ -1,0 +1,376 @@
+//! Tiled-GEMM mapping onto Gemmini (paper §5, §7.2).
+//!
+//! Convolutional layers are turned into GEMM via the im2col transformation
+//! and split into DIM×DIM tiles matching the array; fully-connected layers
+//! tile directly. The per-(m,n)-output-tile loop kernel mirrors the paper's
+//! tiled-GEMM implementation built from the public `gemmini_*` intrinsics:
+//!
+//! ```text
+//! iteration (m, n):
+//!   mvin_acc D(m,n)                       # bias / zero the accumulator tile
+//!   for kk in 0..nk:
+//!     mvin A(m,kk)    DRAM → scratchpad   # linear burst latency
+//!     mvin B(kk,n)    DRAM → scratchpad
+//!     preload B(kk,n)       → array       # writes the array-state register
+//!     compute_accumulated A·B → acc(m,n)  # WAW chain over the acc token
+//!   mvout C(m,n)      acc → DRAM          # fused activation/pooling
+//! ```
+//!
+//! Scratchpad tiles live in a bounded pool of slot tokens; slot reuse
+//! produces the structural serialization the real scratchpad capacity
+//! enforces. Activation and pooling layers following a GEMM-like layer are
+//! fused into `mvout` (Gemmini's on-device layer fusion); element-wise
+//! add/mul layers lower to accumulator moves.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::accel::gemmini::{Gemmini, ACC_BASE, DRAM_BASE, SPAD_BASE};
+use crate::acadl::Diagram;
+use crate::dnn::{Layer, LayerKind};
+use crate::ids::Addr;
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+use super::{MappedLayer, Mapper};
+
+/// Scratchpad capacity in DIM×DIM tile slots (256 KiB @ DIM=16, 1 KiB/tile
+/// in the shipped configuration; split between the A and B streams).
+const SPAD_SLOTS: u64 = 128;
+
+/// DRAM token-region offsets per operand.
+const DRAM_A_OFF: Addr = 0;
+const DRAM_B_OFF: Addr = 1 << 32;
+const DRAM_C_OFF: Addr = 2 << 32;
+const DRAM_D_OFF: Addr = 3 << 32;
+
+/// The Gemmini tiled-GEMM mapper.
+pub struct GemmTileMapper {
+    g: Arc<Gemmini>,
+}
+
+impl GemmTileMapper {
+    pub fn new(g: Arc<Gemmini>) -> Self {
+        Self { g }
+    }
+
+    /// Per-layer `config_ex`/`config_ld`/`config_st` preamble.
+    fn config_kernel(&self, layer: &Layer) -> LoopKernel {
+        let g = Arc::clone(&self.g);
+        LoopKernel::new(
+            format!("{}::config", layer.name),
+            1,
+            3,
+            Box::new(move |_it, buf| {
+                for op in [g.ops.config_ex, g.ops.config_ld, g.ops.config_st] {
+                    buf.push(Instruction::new(op).reads(&[g.cfg_reg]).writes(&[g.cfg_reg]));
+                }
+            }),
+        )
+    }
+
+    /// Tiled GEMM of (M, K, N), repeated `reps` times (depth-wise convs run
+    /// one small GEMM per channel).
+    fn gemm_kernels(&self, layer: &Layer, m: u64, k: u64, n: u64, reps: u64) -> MappedLayer {
+        let g = &self.g;
+        let dim = g.cfg.dim as u64;
+        let words = dim * dim;
+        let nm = m.div_ceil(dim);
+        let nk = k.div_ceil(dim);
+        let nn = n.div_ceil(dim);
+        let iters = reps * nm * nn;
+        let insts = (4 * nk + 2) as usize;
+
+        let g2 = Arc::clone(g);
+        let kernel = LoopKernel::new(
+            format!("{}::gemm", layer.name),
+            iters,
+            insts,
+            Box::new(move |it, buf| {
+                let ops = &g2.ops;
+                let nmnn = nm * nn;
+                let rep = it / nmnn;
+                let within = it % nmnn;
+                let mt = within / nn;
+                let nt = within % nn;
+                // operand tile ids (globally unique per rep so DRAM burst
+                // start addresses vary like a real layout)
+                let a_row_base = rep * nm * nk + mt * nk;
+                let b_col_base = rep * nk * nn + nt;
+                let c_id = rep * nmnn + within;
+
+                // accumulator token of the output tile
+                let acc_tok = ACC_BASE + (c_id % 64);
+                // bias / zero the tile
+                buf.push(
+                    Instruction::new(ops.mvin_acc)
+                        .imms(&[words as i64, ((c_id * words) % 4096) as i64])
+                        .reads(&[g2.cfg_reg])
+                        .read_mem(&[DRAM_BASE + DRAM_D_OFF + c_id])
+                        .write_mem(&[acc_tok]),
+                );
+                for kk in 0..nk {
+                    let a_id = a_row_base + kk;
+                    let b_id = b_col_base + kk * nn;
+                    let a_slot = SPAD_BASE + (a_id % SPAD_SLOTS);
+                    let b_slot = SPAD_BASE + SPAD_SLOTS + (b_id % SPAD_SLOTS);
+                    buf.push(
+                        Instruction::new(ops.mvin)
+                            .imms(&[words as i64, ((a_id * words) % 4096) as i64])
+                            .reads(&[g2.cfg_reg])
+                            .read_mem(&[DRAM_BASE + DRAM_A_OFF + a_id])
+                            .write_mem(&[a_slot]),
+                    );
+                    buf.push(
+                        Instruction::new(ops.mvin)
+                            .imms(&[words as i64, ((b_id * words) % 4096) as i64])
+                            .reads(&[g2.cfg_reg])
+                            .read_mem(&[DRAM_BASE + DRAM_B_OFF + b_id])
+                            .write_mem(&[b_slot]),
+                    );
+                    buf.push(
+                        Instruction::new(ops.preload)
+                            .reads(&[g2.cfg_reg])
+                            .writes(&[g2.b_tile_reg])
+                            .read_mem(&[b_slot]),
+                    );
+                    buf.push(
+                        Instruction::new(ops.compute_accumulated)
+                            .reads(&[g2.b_tile_reg, g2.cfg_reg])
+                            .read_mem(&[a_slot, acc_tok])
+                            .write_mem(&[acc_tok]),
+                    );
+                }
+                buf.push(
+                    Instruction::new(ops.mvout)
+                        .imms(&[words as i64, ((c_id * words) % 4096) as i64])
+                        .reads(&[g2.cfg_reg])
+                        .read_mem(&[acc_tok])
+                        .write_mem(&[DRAM_BASE + DRAM_C_OFF + c_id]),
+                );
+            }),
+        );
+
+        // streamed DRAM traffic including tile re-reads: per output tile,
+        // nk A-tiles + nk B-tiles in, a D tile in, a C tile out
+        let traffic = (
+            iters * nk * words + iters * words, // A stream + D bias
+            iters * nk * words,                 // B stream
+            iters * words,                      // C write-back
+        );
+        MappedLayer {
+            layer_name: layer.name.clone(),
+            kernels: vec![self.config_kernel(layer), kernel],
+            fused: false,
+            ur_c: (k.min(dim)) as u32,
+            ur_k: (n.min(dim)) as u32,
+            traffic: Some(traffic),
+        }
+    }
+
+    /// Element-wise layers via accumulator moves: `mvin_acc` both operands
+    /// (the second accumulates on device), `mvout` the result.
+    fn elementwise(&self, layer: &Layer, elems: u64, two_operand: bool) -> MappedLayer {
+        let g = &self.g;
+        let dim = g.cfg.dim as u64;
+        let words = dim * dim;
+        let tiles = elems.div_ceil(words);
+        let insts = if two_operand { 3 } else { 2 };
+        let g2 = Arc::clone(g);
+        let kernel = LoopKernel::new(
+            format!("{}::ew", layer.name),
+            tiles,
+            insts,
+            Box::new(move |it, buf| {
+                let ops = &g2.ops;
+                let acc_tok = ACC_BASE + (it % 64);
+                buf.push(
+                    Instruction::new(ops.mvin_acc)
+                        .imms(&[words as i64, ((it * words) % 4096) as i64])
+                        .reads(&[g2.cfg_reg])
+                        .read_mem(&[DRAM_BASE + DRAM_A_OFF + it])
+                        .write_mem(&[acc_tok]),
+                );
+                if two_operand {
+                    buf.push(
+                        Instruction::new(ops.mvin_acc)
+                            .imms(&[words as i64, ((it * words) % 4096) as i64])
+                            .reads(&[g2.cfg_reg])
+                            .read_mem(&[DRAM_BASE + DRAM_B_OFF + it])
+                            .write_mem(&[acc_tok]),
+                    );
+                }
+                buf.push(
+                    Instruction::new(ops.mvout)
+                        .imms(&[words as i64, ((it * words) % 4096) as i64])
+                        .reads(&[g2.cfg_reg])
+                        .read_mem(&[acc_tok])
+                        .write_mem(&[DRAM_BASE + DRAM_C_OFF + it]),
+                );
+            }),
+        );
+        MappedLayer {
+            layer_name: layer.name.clone(),
+            kernels: vec![self.config_kernel(layer), kernel],
+            fused: false,
+            ur_c: dim as u32,
+            ur_k: dim as u32,
+            traffic: Some((tiles * words * if two_operand { 2 } else { 1 }, 0, tiles * words)),
+        }
+    }
+}
+
+impl Mapper for GemmTileMapper {
+    fn diagram(&self) -> &Diagram {
+        &self.g.diagram
+    }
+
+    fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
+        if let Some((m, k, n)) = layer.gemm_dims() {
+            if m == 0 {
+                bail!("layer {} has empty output", layer.name);
+            }
+            return Ok(self.gemm_kernels(layer, m, k, n, 1));
+        }
+        match layer.kind {
+            LayerKind::DwConv2d { c, h, w, kh, kw, stride, pad } => {
+                let ho = crate::dnn::layer::out_dim(h, kh, stride, pad) as u64;
+                let wo = crate::dnn::layer::out_dim(w, kw, stride, pad) as u64;
+                // one (pos × taps × 1) GEMM per channel
+                Ok(self.gemm_kernels(layer, ho * wo, (kh * kw) as u64, 1, c as u64))
+            }
+            // fused into the preceding GEMM's mvout (activation / pooling
+            // configured via config_st — Gemmini's on-device fusion)
+            LayerKind::Act { .. } | LayerKind::Pool2d { .. } | LayerKind::Pool1d { .. } => {
+                Ok(MappedLayer::fused(layer.name.clone()))
+            }
+            LayerKind::Add { c, spatial } | LayerKind::Mul { c, spatial } => {
+                Ok(self.elementwise(layer, c as u64 * spatial as u64, true))
+            }
+            _ => unreachable!("gemm-like layers handled above"),
+        }
+    }
+
+    fn hw_features(&self) -> [f64; 8] {
+        let c = &self.g.cfg;
+        let words = c.dim as f64 * c.dim as f64;
+        // effective per-transaction DRAM latency of the burst model at tile
+        // granularity, normalized per port-width beat
+        let tile_lat = c.dram_base_latency as f64 + words / c.dram_words_per_beat as f64;
+        let per_beat = tile_lat / (words / c.dram_words_per_beat as f64);
+        [
+            c.dim as f64,
+            c.dim as f64,
+            c.dram_words_per_beat as f64,
+            per_beat,
+            per_beat,
+            // array occupancy per DIM-wide MAC wave: a DIM³ tile takes
+            // compute_cycles(DIM) for DIM waves
+            Gemmini::compute_cycles(c.dim) as f64 / c.dim as f64,
+            2.0,
+            0.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::GemminiConfig;
+    use crate::dnn::zoo;
+
+    fn mapper() -> GemmTileMapper {
+        GemmTileMapper::new(Arc::new(Gemmini::new(GemminiConfig::default()).unwrap()))
+    }
+
+    #[test]
+    fn conv_tiling_counts() {
+        let m = mapper();
+        // 16×16 GEMM tiles: conv with M=100, K=360, N=24 -> nm=7, nk=23, nn=2
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv1d { c_in: 40, l_in: 100, c_out: 24, kernel: 9, stride: 1, pad: true },
+        );
+        let ml = m.map_layer(&l).unwrap();
+        let gemm = &ml.kernels[1];
+        assert_eq!(gemm.k, 7 * 2);
+        assert_eq!(gemm.insts_per_iter, (4 * 23 + 2) as usize);
+    }
+
+    #[test]
+    fn all_networks_map() {
+        let m = mapper();
+        for net in [zoo::tc_resnet8(), zoo::alexnet(), zoo::efficientnet()] {
+            let mapped = m.map_network(&net).unwrap();
+            assert_eq!(mapped.len(), net.num_layers());
+            assert!(mapped.iter().any(|l| !l.fused));
+        }
+    }
+
+    #[test]
+    fn instructions_route() {
+        let m = mapper();
+        for ml in m.map_network(&zoo::tc_resnet8()).unwrap() {
+            for k in &ml.kernels {
+                for i in k.materialize(0..2.min(k.k)) {
+                    m.diagram().route(&i).unwrap_or_else(|e| panic!("{}: {e}", k.label));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn act_and_pool_fuse() {
+        let m = mapper();
+        let act = Layer::new("a", LayerKind::Act {
+            kind: crate::dnn::ActKind::Relu,
+            c: 8,
+            spatial: 8,
+        });
+        assert!(m.map_layer(&act).unwrap().fused);
+        let pool = Layer::new("p", LayerKind::Pool2d {
+            kind: crate::dnn::PoolKind::Max,
+            c: 8,
+            h: 8,
+            w: 8,
+            k: 2,
+            stride: 2,
+        });
+        assert!(m.map_layer(&pool).unwrap().fused);
+    }
+
+    #[test]
+    fn add_uses_accumulator_path() {
+        let m = mapper();
+        let l = Layer::new("add", LayerKind::Add { c: 32, spatial: 100 });
+        let ml = m.map_layer(&l).unwrap();
+        // 3200 elements / 256 words per tile = 13 tiles
+        assert_eq!(ml.kernels[1].k, 13);
+        assert_eq!(ml.kernels[1].insts_per_iter, 3);
+    }
+
+    #[test]
+    fn dwconv_repeats_per_channel() {
+        let m = mapper();
+        let l = Layer::new(
+            "dw",
+            LayerKind::DwConv2d { c: 32, h: 16, w: 16, kh: 3, kw: 3, stride: 1, pad: true },
+        );
+        let ml = m.map_layer(&l).unwrap();
+        // per channel: M=256 -> nm=16, nk=1, nn=1; × 32 channels
+        assert_eq!(ml.kernels[1].k, 32 * 16);
+    }
+
+    #[test]
+    fn bigger_dim_needs_fewer_iterations() {
+        let small = mapper();
+        let big = GemmTileMapper::new(Arc::new(
+            Gemmini::new(GemminiConfig::default().with_dim(32)).unwrap(),
+        ));
+        let l = Layer::new("fc", LayerKind::Dense { c_in: 256, c_out: 256 });
+        let ks = small.map_layer(&l).unwrap().kernels[1].total_insts();
+        let kb = big.map_layer(&l).unwrap().kernels[1].total_insts();
+        assert!(kb < ks);
+    }
+}

@@ -1,0 +1,126 @@
+//! DNN → loop-kernel lowering (paper §5).
+//!
+//! The granularity of the instruction stream must match the abstraction
+//! level of the ACADL model: scalar `load`/`mac`/`store` streams for the
+//! systolic array ([`scalar`]), im2col + DIM×DIM-tiled GEMM streams for
+//! Gemmini ([`gemm_tile`]), fused `conv_ext` tensor instructions for
+//! UltraTrail ([`tensor_op`]), and parallel tiled GEMM across PCUs for the
+//! Plasticine-derived architecture ([`plasticine_map`]).
+//!
+//! Every mapper returns [`MappedLayer`]s: one or more uniform
+//! [`LoopKernel`]s per DNN layer plus the achieved unroll factors (the
+//! refined-roofline features). Layers an architecture executes fused into
+//! their predecessor (e.g. activations in UltraTrail's OPU) come back with
+//! `fused = true` and no kernels.
+
+pub mod gemm_tile;
+pub mod plasticine_map;
+pub mod scalar;
+pub mod tensor_op;
+
+use crate::acadl::Diagram;
+use crate::dnn::{Layer, Network};
+use crate::isa::LoopKernel;
+use crate::Result;
+
+/// A DNN layer lowered onto one architecture.
+pub struct MappedLayer {
+    pub layer_name: String,
+    /// Uniform loop kernels; the layer's latency is the sum of their
+    /// estimates (e.g. weight-load kernel + compute kernel).
+    pub kernels: Vec<LoopKernel>,
+    /// Executed fused into the preceding layer (zero additional cost).
+    pub fused: bool,
+    /// Achieved unroll along input channels (refined-roofline feature).
+    pub ur_c: u32,
+    /// Achieved unroll along output channels.
+    pub ur_k: u32,
+    /// Streamed memory traffic of the mapping `(in, weights, out)` in words,
+    /// *including tile re-reads* (im2col/tiling amplification). `None` means
+    /// the mapping streams each word once (use the layer's tensor sizes).
+    pub traffic: Option<(u64, u64, u64)>,
+}
+
+impl MappedLayer {
+    pub fn fused(layer_name: impl Into<String>) -> Self {
+        Self {
+            layer_name: layer_name.into(),
+            kernels: Vec::new(),
+            fused: true,
+            ur_c: 1,
+            ur_k: 1,
+            traffic: None,
+        }
+    }
+
+    /// Total loop iterations over all kernels.
+    pub fn total_iters(&self) -> u64 {
+        self.kernels.iter().map(|k| k.k).sum()
+    }
+
+    /// Total instructions over all kernels.
+    pub fn total_insts(&self) -> u64 {
+        self.kernels.iter().map(|k| k.total_insts()).sum()
+    }
+}
+
+impl std::fmt::Debug for MappedLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedLayer")
+            .field("layer_name", &self.layer_name)
+            .field("kernels", &self.kernels)
+            .field("fused", &self.fused)
+            .field("ur", &(self.ur_c, self.ur_k))
+            .finish()
+    }
+}
+
+/// Architecture-specific DNN lowering.
+pub trait Mapper {
+    /// The ACADL object diagram instructions are routed through.
+    fn diagram(&self) -> &Diagram;
+
+    /// Lower one layer.
+    fn map_layer(&self, layer: &Layer) -> Result<MappedLayer>;
+
+    /// Lower a whole network in order.
+    fn map_network(&self, net: &Network) -> Result<Vec<MappedLayer>> {
+        net.layers.iter().map(|l| self.map_layer(l)).collect()
+    }
+
+    /// Hardware feature vector for the refined-roofline baseline
+    /// (mirrors python/compile/features.py HW_FEATS).
+    fn hw_features(&self) -> [f64; 8];
+}
+
+/// Largest unroll factor `u <= limit` that divides `dim` (the paper's
+/// underutilization rule: a 12×12 array runs a C=20 layer at u=10, leaving
+/// rows idle — Appendix A.2 / Fig. 13b).
+pub fn unroll_factor(dim: u32, limit: u32) -> u32 {
+    if dim == 0 {
+        return 1;
+    }
+    let mut best = 1;
+    for u in 1..=limit.min(dim) {
+        if dim % u == 0 {
+            best = u;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unroll_divisor_rule() {
+        assert_eq!(unroll_factor(12, 12), 12); // divisible: full array
+        assert_eq!(unroll_factor(20, 12), 10); // paper's Fig.13b case
+        assert_eq!(unroll_factor(70, 12), 10);
+        assert_eq!(unroll_factor(7, 4), 1); // prime > limit: single PE
+        assert_eq!(unroll_factor(16, 4), 4);
+        assert_eq!(unroll_factor(0, 4), 1);
+        assert_eq!(unroll_factor(3, 8), 3); // dim smaller than array
+    }
+}

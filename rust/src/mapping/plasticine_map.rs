@@ -1,0 +1,294 @@
+//! Parallel tiled-GEMM mapping onto the Plasticine-derived architecture
+//! (paper §7.4).
+//!
+//! Convolutional layers run as im2col GEMM, tiled T×T to the PCU GEMM tile
+//! size; fully-connected layers tile directly. The mapper *maximizes the
+//! amount of parallel GEMM and matrix additions* (the paper's DNN mapper):
+//! output tiles (m, n) are distributed round-robin over all PCUs, and each
+//! loop-kernel iteration is one **wave** — every PCU processes one output
+//! tile, streaming its nk reduction steps:
+//!
+//! ```text
+//! per PCU and wave:            route_in A(kk) ┐
+//!                              route_in B(kk) ├ × nk   (switch hops paid
+//!                              gemm_tile      ┘         per move)
+//!                              route_out C
+//! ```
+//!
+//! Operand tiles live in PMUs round-robin; the hop count of each move is the
+//! Manhattan distance between the PCU and the PMU holding the tile, so
+//! *larger grids pay more communication* — the effect that makes small
+//! TC-ResNet8 layers prefer small grids in Fig. 15.
+//!
+//! A remainder wave (fewer active PCUs) becomes a second kernel so every
+//! kernel keeps a constant instruction count per iteration.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::accel::plasticine::Plasticine;
+use crate::acadl::Diagram;
+use crate::dnn::{Layer, LayerKind};
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+use super::{MappedLayer, Mapper};
+
+/// The Plasticine parallel-GEMM mapper.
+pub struct PlasticineMapper {
+    p: Arc<Plasticine>,
+}
+
+impl PlasticineMapper {
+    pub fn new(p: Arc<Plasticine>) -> Self {
+        Self { p }
+    }
+
+    /// Wave kernels over `items` output tiles with `nk` reduction steps
+    /// each. Returns (full-waves kernel, remainder kernel).
+    fn wave_kernels(
+        &self,
+        layer: &Layer,
+        items: u64,
+        nk: u64,
+        gemm: bool,
+    ) -> Vec<LoopKernel> {
+        let p = &self.p;
+        let n_pcus = p.pcus.len() as u64;
+        let t = p.cfg.tile as i64;
+        let full_waves = items / n_pcus;
+        let rem = items % n_pcus;
+        let insts_per_pcu = (3 * nk + 1) as usize;
+
+        let emit_wave = {
+            let p = Arc::clone(p);
+            move |wave: u64, active: u64, buf: &mut Vec<Instruction>| {
+                let ops = &p.ops;
+                let n_pmus = p.pmus.len() as u64;
+                for pc in 0..active as usize {
+                    let pcu = p.pcus[pc];
+                    let item = wave * (p.pcus.len() as u64) + pc as u64;
+                    for kk in 0..nk {
+                        // operand tokens round-robin over PMUs
+                        let a_id = item * nk + kk;
+                        let b_id = item + kk * 7919; // distinct stream
+                        let a_pmu = (a_id % n_pmus) as usize;
+                        let b_pmu = (b_id % n_pmus) as usize;
+                        let a_hops =
+                            Plasticine::hops(pcu.pos, p.pmus[a_pmu].pos) as i64;
+                        let b_hops =
+                            Plasticine::hops(pcu.pos, p.pmus[b_pmu].pos) as i64;
+                        buf.push(
+                            Instruction::new(ops.route_in)
+                                .writes(&[pcu.r_a])
+                                .read_mem(&[p.pmus[a_pmu].base
+                                    + (a_id / n_pmus) % 1024])
+                                .imms(&[t, a_hops]),
+                        );
+                        buf.push(
+                            Instruction::new(ops.route_in)
+                                .writes(&[pcu.r_b])
+                                .read_mem(&[p.pmus[b_pmu].base + 1024
+                                    + (b_id / n_pmus) % 1024])
+                                .imms(&[t, b_hops]),
+                        );
+                        let op = if gemm { ops.gemm_tile } else { ops.add_tile };
+                        buf.push(
+                            Instruction::new(op)
+                                .reads(&[pcu.r_a, pcu.r_b, pcu.r_out])
+                                .writes(&[pcu.r_out])
+                                .imms(&[t]),
+                        );
+                    }
+                    let c_pmu = (item % n_pmus) as usize;
+                    let c_hops = Plasticine::hops(pcu.pos, p.pmus[c_pmu].pos) as i64;
+                    buf.push(
+                        Instruction::new(ops.route_out)
+                            .reads(&[pcu.r_out])
+                            .write_mem(&[p.pmus[c_pmu].base + 2048 + (item / n_pmus) % 1024])
+                            .imms(&[t, c_hops]),
+                    );
+                }
+            }
+        };
+
+        let mut kernels = Vec::new();
+        if full_waves > 0 {
+            let ew = emit_wave.clone();
+            kernels.push(LoopKernel::new(
+                format!("{}::waves", layer.name),
+                full_waves,
+                insts_per_pcu * n_pcus as usize,
+                Box::new(move |it, buf| ew(it, n_pcus, buf)),
+            ));
+        }
+        if rem > 0 {
+            kernels.push(LoopKernel::new(
+                format!("{}::rem", layer.name),
+                1,
+                insts_per_pcu * rem as usize,
+                Box::new(move |_it, buf| emit_wave(full_waves, rem, buf)),
+            ));
+        }
+        kernels
+    }
+
+    fn gemm_layer(&self, layer: &Layer, m: u64, k: u64, n: u64, reps: u64) -> MappedLayer {
+        let t = self.p.cfg.tile as u64;
+        let nm = m.div_ceil(t);
+        let nk = k.div_ceil(t);
+        let nn = n.div_ceil(t);
+        let items = reps * nm * nn;
+        MappedLayer {
+            layer_name: layer.name.clone(),
+            kernels: self.wave_kernels(layer, items, nk, true),
+            fused: false,
+            ur_c: (k.min(t)) as u32,
+            ur_k: (n.min(t)) as u32,
+            traffic: Some((items * nk * t * t, items * nk * t * t, items * t * t)),
+        }
+    }
+
+    fn add_layer(&self, layer: &Layer, elems: u64) -> MappedLayer {
+        let t = self.p.cfg.tile as u64;
+        let items = elems.div_ceil(t * t);
+        MappedLayer {
+            layer_name: layer.name.clone(),
+            kernels: self.wave_kernels(layer, items, 1, false),
+            fused: false,
+            ur_c: 1,
+            ur_k: t as u32,
+            traffic: Some((2 * items * t * t, 0, items * t * t)),
+        }
+    }
+}
+
+impl Mapper for PlasticineMapper {
+    fn diagram(&self) -> &Diagram {
+        &self.p.diagram
+    }
+
+    fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
+        if let Some((m, k, n)) = layer.gemm_dims() {
+            if m == 0 {
+                bail!("layer {} has empty output", layer.name);
+            }
+            return Ok(self.gemm_layer(layer, m, k, n, 1));
+        }
+        match layer.kind {
+            LayerKind::DwConv2d { c, h, w, kh, kw, stride, pad } => {
+                let ho = crate::dnn::layer::out_dim(h, kh, stride, pad) as u64;
+                let wo = crate::dnn::layer::out_dim(w, kw, stride, pad) as u64;
+                Ok(self.gemm_layer(layer, ho * wo, (kh * kw) as u64, 1, c as u64))
+            }
+            // SIMD-tail fusion on the producing PCU
+            LayerKind::Act { .. } => Ok(MappedLayer::fused(layer.name.clone())),
+            LayerKind::Add { c, spatial } | LayerKind::Mul { c, spatial } => {
+                Ok(self.add_layer(layer, c as u64 * spatial as u64))
+            }
+            // pooling reduces tiles element-wise on the SIMD pipeline
+            LayerKind::Pool2d { c, h, w, k, stride, .. } => {
+                let ho = crate::dnn::layer::out_dim(h, k, stride, false) as u64;
+                let wo = crate::dnn::layer::out_dim(w, k, stride, false) as u64;
+                Ok(self.add_layer(layer, c as u64 * ho * wo * (k as u64 * k as u64)))
+            }
+            LayerKind::Pool1d { c, l, k, stride, .. } => {
+                let lo = crate::dnn::layer::out_dim(l, k, stride, false) as u64;
+                Ok(self.add_layer(layer, c as u64 * lo * k as u64))
+            }
+            _ => unreachable!("gemm-like layers handled above"),
+        }
+    }
+
+    fn hw_features(&self) -> [f64; 8] {
+        let c = &self.p.cfg;
+        let n_pcus = self.p.pcus.len() as f64;
+        let t = c.tile as f64;
+        [
+            // the roofline sees T×T-parallel MACs (the ur features cap at T)
+            t,
+            t,
+            c.switch_width as f64,
+            1.0,
+            1.0,
+            // per-wave rate: one T×T×T tile costs gemm_tile_cycles over T
+            // waves on one PCU, divided across all PCUs — communication
+            // (switch hops) is invisible to the roofline, which is why it
+            // misses the small-layer-on-big-grid penalty of Fig. 15
+            Plasticine::gemm_tile_cycles(c, c.tile) as f64 / (t * n_pcus),
+            c.pipe_depth as f64,
+            0.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::plasticine::PlasticineConfig;
+    use crate::dnn::zoo;
+
+    fn mapper(rows: u32, cols: u32, tile: u32) -> PlasticineMapper {
+        PlasticineMapper::new(Arc::new(
+            Plasticine::new(PlasticineConfig::new(rows, cols, tile)).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn wave_partitioning() {
+        let m = mapper(3, 6, 16); // 9 PCUs
+        // GEMM 100×360×24 @ T=16: nm=7, nk=23, nn=2 -> 14 tiles = 1 full
+        // wave + remainder 5
+        let l = Layer::new(
+            "c",
+            LayerKind::Conv1d { c_in: 40, l_in: 100, c_out: 24, kernel: 9, stride: 1, pad: true },
+        );
+        let ml = m.map_layer(&l).unwrap();
+        assert_eq!(ml.kernels.len(), 2);
+        assert_eq!(ml.kernels[0].k, 1);
+        assert_eq!(ml.kernels[0].insts_per_iter, (3 * 23 + 1) * 9);
+        assert_eq!(ml.kernels[1].k, 1);
+        assert_eq!(ml.kernels[1].insts_per_iter, (3 * 23 + 1) * 5);
+    }
+
+    #[test]
+    fn all_networks_map() {
+        let m = mapper(3, 6, 16);
+        for net in [zoo::tc_resnet8(), zoo::alexnet_reduced(), zoo::efficientnet_reduced()] {
+            let mapped = m.map_network(&net).unwrap();
+            assert_eq!(mapped.len(), net.num_layers());
+        }
+    }
+
+    #[test]
+    fn instructions_route() {
+        let m = mapper(2, 3, 8);
+        for ml in m.map_network(&zoo::tc_resnet8()).unwrap() {
+            for k in &ml.kernels {
+                for i in k.materialize(0..2.min(k.k)) {
+                    m.diagram().route(&i).unwrap_or_else(|e| panic!("{}: {e}", k.label));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_pcus_fewer_waves() {
+        let l = Layer::new("fc", LayerKind::Dense { c_in: 512, c_out: 512 });
+        let small = mapper(2, 2, 16).map_layer(&l).unwrap(); // 2 PCUs
+        let big = mapper(4, 6, 16).map_layer(&l).unwrap(); // 12 PCUs
+        let waves = |ml: &MappedLayer| ml.kernels.iter().map(|k| k.k).sum::<u64>();
+        assert!(waves(&big) < waves(&small));
+    }
+
+    #[test]
+    fn act_fuses() {
+        let m = mapper(2, 2, 8);
+        let act = Layer::new(
+            "a",
+            LayerKind::Act { kind: crate::dnn::ActKind::Relu, c: 8, spatial: 64 },
+        );
+        assert!(m.map_layer(&act).unwrap().fused);
+    }
+}

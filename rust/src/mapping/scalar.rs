@@ -1,0 +1,620 @@
+//! Scalar mapping onto the parameterizable systolic array (paper §5, §7.3).
+//!
+//! Convolutions and fully-connected layers lower to a weight-stationary
+//! dataflow: input channels unroll over PE rows, output channels over PE
+//! columns (the paper's TVM-TIR partial unrolling — here a native loop-nest
+//! unroller with the unroll factors extracted from the ACADL diagram).
+//! Each layer yields two uniform loop kernels:
+//!
+//! 1. a *weight-load* kernel (`loadw` column transactions — the Fig. 13
+//!    port-width knob) executed once per (c-tile, k-tile, tap), and
+//! 2. a *compute* kernel per output position: row activation loads,
+//!    `mov_r` operand propagation, a `mac` wave with psums flowing down the
+//!    columns, `mov_d` pass-through over idle rows, and a read-modify-write
+//!    `store_acc` per column accumulating into the psum address (the
+//!    loop-carried dependency that produces the paper's pipeline effects).
+//!
+//! Element-wise layers (act/add/mul), pooling, and depth-wise convolutions
+//! use only the first PE row (no data reuse — paper Appendix A.2), with the
+//! unroll factor limited to divisors of the channel dimension: non-divisible
+//! channels underutilize the array exactly as the paper describes.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::accel::systolic::{Systolic, ACT_BASE, OUT_BASE, PSUM_BASE, WEIGHT_BASE};
+use crate::acadl::Diagram;
+use crate::dnn::{Layer, LayerKind};
+use crate::ids::Addr;
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+use super::{unroll_factor, MappedLayer, Mapper};
+
+/// Geometry of a conv-like / windowed layer (1D layers use `in_h = 1`).
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    c: u32,
+    k: u32,
+    kh: u32,
+    kw: u32,
+    stride: u32,
+    pad_h: i64,
+    pad_w: i64,
+    in_h: u32,
+    in_w: u32,
+    out_h: u32,
+    out_w: u32,
+}
+
+impl Geom {
+    fn taps(&self) -> u32 {
+        self.kh * self.kw
+    }
+
+    fn out_pos(&self) -> u32 {
+        self.out_h * self.out_w
+    }
+
+    /// Input activation address for (channel, tap, output position);
+    /// padded positions clamp to the tensor edge (timing-equivalent).
+    fn act_addr(&self, ch: u32, tap: u32, o: u32) -> Addr {
+        let (fh, fw) = (tap / self.kw, tap % self.kw);
+        let (oh, ow) = (o / self.out_w, o % self.out_w);
+        let ih = ((oh * self.stride + fh) as i64 - self.pad_h)
+            .clamp(0, self.in_h as i64 - 1) as u64;
+        let iw = ((ow * self.stride + fw) as i64 - self.pad_w)
+            .clamp(0, self.in_w as i64 - 1) as u64;
+        ACT_BASE + (ch as u64 * self.in_h as u64 + ih) * self.in_w as u64 + iw
+    }
+
+    fn w_addr(&self, ch: u32, kout: u32, tap: u32) -> Addr {
+        WEIGHT_BASE
+            + ((kout as u64 * self.c as u64 + ch as u64) * self.taps() as u64 + tap as u64)
+    }
+
+    fn psum_addr(&self, kout: u32, o: u32) -> Addr {
+        PSUM_BASE + kout as u64 * self.out_pos() as u64 + o as u64
+    }
+}
+
+fn conv_geom(layer: &Layer) -> Option<Geom> {
+    match layer.kind {
+        LayerKind::Conv1d { c_in, l_in, c_out, kernel, stride, pad } => Some(Geom {
+            c: c_in,
+            k: c_out,
+            kh: 1,
+            kw: kernel,
+            stride,
+            pad_h: 0,
+            pad_w: if pad { (kernel / 2) as i64 } else { 0 },
+            in_h: 1,
+            in_w: l_in,
+            out_h: 1,
+            out_w: crate::dnn::layer::out_dim(l_in, kernel, stride, pad),
+        }),
+        LayerKind::Conv2d { c_in, h, w, c_out, kh, kw, stride, pad } => Some(Geom {
+            c: c_in,
+            k: c_out,
+            kh,
+            kw,
+            stride,
+            pad_h: if pad { (kh / 2) as i64 } else { 0 },
+            pad_w: if pad { (kw / 2) as i64 } else { 0 },
+            in_h: h,
+            in_w: w,
+            out_h: crate::dnn::layer::out_dim(h, kh, stride, pad),
+            out_w: crate::dnn::layer::out_dim(w, kw, stride, pad),
+        }),
+        LayerKind::Dense { c_in, c_out } => Some(Geom {
+            c: c_in,
+            k: c_out,
+            kh: 1,
+            kw: 1,
+            stride: 1,
+            pad_h: 0,
+            pad_w: 0,
+            in_h: 1,
+            in_w: c_in, // activations laid out linearly; ch indexes them
+            out_h: 1,
+            out_w: 1,
+        }),
+        _ => None,
+    }
+}
+
+/// The systolic-array mapper.
+pub struct ScalarMapper {
+    sys: Arc<Systolic>,
+}
+
+impl ScalarMapper {
+    pub fn new(sys: Arc<Systolic>) -> Self {
+        Self { sys }
+    }
+
+    fn conv_like(&self, layer: &Layer, g: Geom) -> MappedLayer {
+        let sys = &self.sys;
+        let rows = sys.cfg.rows;
+        let cols = sys.cfg.cols;
+        let ur_c = unroll_factor(g.c, rows);
+        let ur_k = unroll_factor(g.k, cols);
+        let c_tiles = g.c / ur_c;
+        let k_tiles = g.k / ur_k;
+        let taps = g.taps();
+        let out_pos = g.out_pos();
+
+        // ---- weight-load kernel ----
+        let k_w = c_tiles as u64 * k_tiles as u64 * taps as u64;
+        let s1 = Arc::clone(sys);
+        let weight_kernel = LoopKernel::new(
+            format!("{}::weights", layer.name),
+            k_w,
+            ur_k as usize,
+            Box::new(move |it, buf| {
+                let tap = (it % taps as u64) as u32;
+                let k_tile = ((it / taps as u64) % k_tiles as u64) as u32;
+                let c_tile = (it / (taps as u64 * k_tiles as u64)) as u32;
+                for j in 0..ur_k {
+                    let addrs: Vec<Addr> = (0..ur_c)
+                        .map(|r| g.w_addr(c_tile * ur_c + r, k_tile * ur_k + j, tap))
+                        .collect();
+                    let writes: Vec<_> =
+                        (0..ur_c).map(|r| s1.pe[r as usize][j as usize].r_w).collect();
+                    buf.push(Instruction::new(s1.ops.loadw).writes(&writes).read_mem(&addrs));
+                }
+            }),
+        );
+
+        // ---- compute kernel ----
+        let k_c = k_w * out_pos as u64;
+        let insts = (ur_c // loads
+            + ur_c * (ur_k - 1) // mov_r
+            + ur_c * ur_k // mac
+            + (rows - ur_c) * ur_k // mov_d pass-through over idle rows
+            + ur_k) as usize; // store_acc
+        let s2 = Arc::clone(sys);
+        let compute_kernel = LoopKernel::new(
+            format!("{}::compute", layer.name),
+            k_c,
+            insts,
+            Box::new(move |it, buf| {
+                let o = (it % out_pos as u64) as u32;
+                let rest = it / out_pos as u64;
+                let tap = (rest % taps as u64) as u32;
+                let k_tile = ((rest / taps as u64) % k_tiles as u64) as u32;
+                let c_tile = (rest / (taps as u64 * k_tiles as u64)) as u32;
+                let pe = &s2.pe;
+                let ops = &s2.ops;
+                // activation loads down the left edge
+                for r in 0..ur_c as usize {
+                    buf.push(
+                        Instruction::new(ops.load)
+                            .writes(&[pe[r][0].r_in])
+                            .read_mem(&[g.act_addr(c_tile * ur_c + r as u32, tap, o)]),
+                    );
+                }
+                // operand propagation to the right
+                for j in 1..ur_k as usize {
+                    for r in 0..ur_c as usize {
+                        buf.push(
+                            Instruction::new(ops.mov_r)
+                                .reads(&[pe[r][j - 1].r_in])
+                                .writes(&[pe[r][j].r_in]),
+                        );
+                    }
+                }
+                // mac wave: psums flow down the columns
+                for r in 0..ur_c as usize {
+                    for j in 0..ur_k as usize {
+                        let mut i = Instruction::new(ops.mac)
+                            .reads(&[pe[r][j].r_in, pe[r][j].r_w]);
+                        if r > 0 {
+                            i = i.reads(&[pe[r - 1][j].r_acc]);
+                        }
+                        buf.push(i.writes(&[pe[r][j].r_acc]));
+                    }
+                }
+                // pass psums through idle rows to the store units
+                for rr in ur_c as usize..s2.cfg.rows as usize {
+                    for j in 0..ur_k as usize {
+                        buf.push(
+                            Instruction::new(ops.mov_d)
+                                .reads(&[pe[rr - 1][j].r_acc])
+                                .writes(&[pe[rr][j].r_acc]),
+                        );
+                    }
+                }
+                // accumulate into psum memory (read-modify-write)
+                let last = s2.cfg.rows as usize - 1;
+                for j in 0..ur_k as usize {
+                    let a = g.psum_addr(k_tile * ur_k + j as u32, o);
+                    buf.push(
+                        Instruction::new(ops.store_acc)
+                            .reads(&[pe[last][j].r_acc])
+                            .read_mem(&[a])
+                            .write_mem(&[a]),
+                    );
+                }
+            }),
+        );
+
+        MappedLayer {
+            layer_name: layer.name.clone(),
+            kernels: vec![weight_kernel, compute_kernel],
+            fused: false,
+            ur_c,
+            ur_k,
+            traffic: None,
+        }
+    }
+
+    /// Element-wise / pooling / depth-wise mapping on the first PE row.
+    /// `window` = input elements reduced per output (1 for act/add/mul),
+    /// `two_operand` adds a second operand load, `weighted` loads a weight
+    /// per channel (depth-wise conv).
+    #[allow(clippy::too_many_arguments)]
+    fn row_mapped(
+        &self,
+        layer: &Layer,
+        op: crate::ids::OpId,
+        c: u32,
+        out_elems: u32,
+        window: u32,
+        two_operand: bool,
+        weighted: bool,
+        geom: Option<Geom>,
+    ) -> MappedLayer {
+        let sys = &self.sys;
+        let rows = sys.cfg.rows;
+        let u = unroll_factor(c, sys.cfg.cols);
+        let c_tiles = c / u;
+        let k = c_tiles as u64 * out_elems as u64;
+        let spatial = out_elems;
+
+        let mut kernels = Vec::new();
+        if weighted {
+            // per-channel weight kernel (taps words per column transaction)
+            let s0 = Arc::clone(sys);
+            let g = geom.expect("weighted row mapping needs geometry");
+            kernels.push(LoopKernel::new(
+                format!("{}::weights", layer.name),
+                c_tiles as u64,
+                u as usize,
+                Box::new(move |it, buf| {
+                    let c_tile = it as u32;
+                    for j in 0..u {
+                        let ch = c_tile * u + j;
+                        let addrs: Vec<Addr> =
+                            (0..g.taps()).map(|t| g.w_addr(0, ch, t)).collect();
+                        buf.push(
+                            Instruction::new(s0.ops.loadw)
+                                .writes(&[s0.pe[0][j as usize].r_w])
+                                .read_mem(&addrs),
+                        );
+                    }
+                }),
+            ));
+        }
+
+        let insts = (u * window // loads
+            + if two_operand { u } else { 0 } // second operand
+            + u * window // the op per loaded element
+            + (rows - 1) * u // mov_d chain to the store row
+            + u) as usize; // stores
+        let s1 = Arc::clone(sys);
+        kernels.push(LoopKernel::new(
+            format!("{}::compute", layer.name),
+            k,
+            insts,
+            Box::new(move |it, buf| {
+                let o = (it % spatial as u64) as u32;
+                let c_tile = (it / spatial as u64) as u32;
+                let pe = &s1.pe;
+                let ops = &s1.ops;
+                for j in 0..u as usize {
+                    let ch = c_tile * u + j as u32;
+                    for t in 0..window {
+                        let a = match geom {
+                            Some(g) => g.act_addr(ch, t, o),
+                            None => ACT_BASE + ch as u64 * spatial as u64 + o as u64,
+                        };
+                        buf.push(
+                            Instruction::new(ops.loade)
+                                .writes(&[pe[0][j].r_in])
+                                .read_mem(&[a]),
+                        );
+                        if two_operand && t == 0 {
+                            let b = ACT_BASE
+                                + (c_tiles * u) as u64 * spatial as u64
+                                + ch as u64 * spatial as u64
+                                + o as u64;
+                            buf.push(
+                                Instruction::new(ops.loade2)
+                                    .writes(&[pe[0][j].r_in2])
+                                    .read_mem(&[b]),
+                            );
+                        }
+                        // the op consumes the loaded element (accumulating
+                        // ops chain through r_acc)
+                        let mut i = Instruction::new(op).reads(&[pe[0][j].r_in]);
+                        if two_operand {
+                            i = i.reads(&[pe[0][j].r_in2]);
+                        }
+                        if window > 1 || op == ops.ew_mac {
+                            i = i.reads(&[pe[0][j].r_acc]); // self-accumulate
+                        }
+                        if op == ops.ew_mac {
+                            i = i.reads(&[pe[0][j].r_w]);
+                        }
+                        buf.push(i.writes(&[pe[0][j].r_acc]));
+                    }
+                }
+                // results flow down to the bottom store row
+                for rr in 1..s1.cfg.rows as usize {
+                    for j in 0..u as usize {
+                        buf.push(
+                            Instruction::new(ops.mov_d)
+                                .reads(&[pe[rr - 1][j].r_acc])
+                                .writes(&[pe[rr][j].r_acc]),
+                        );
+                    }
+                }
+                let last = s1.cfg.rows as usize - 1;
+                for j in 0..u as usize {
+                    let ch = c_tile * u + j as u32;
+                    buf.push(
+                        Instruction::new(ops.store)
+                            .reads(&[pe[last][j].r_acc])
+                            .write_mem(&[OUT_BASE + ch as u64 * spatial as u64 + o as u64]),
+                    );
+                }
+            }),
+        ));
+
+        MappedLayer { layer_name: layer.name.clone(), kernels, fused: false, ur_c: 1, ur_k: u, traffic: None }
+    }
+}
+
+impl Mapper for ScalarMapper {
+    fn diagram(&self) -> &Diagram {
+        &self.sys.diagram
+    }
+
+    fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
+        if let Some(g) = conv_geom(layer) {
+            if g.out_pos() == 0 {
+                bail!("layer {} has empty output", layer.name);
+            }
+            return Ok(self.conv_like(layer, g));
+        }
+        let ops = self.sys.ops;
+        match layer.kind {
+            LayerKind::Act { kind, c, spatial } => {
+                let op = match kind {
+                    crate::dnn::ActKind::Relu => ops.ew_relu,
+                    crate::dnn::ActKind::Clip => ops.ew_clip,
+                };
+                Ok(self.row_mapped(layer, op, c, spatial, 1, false, false, None))
+            }
+            LayerKind::Add { c, spatial } => {
+                Ok(self.row_mapped(layer, ops.ew_add, c, spatial, 1, true, false, None))
+            }
+            LayerKind::Mul { c, spatial } => {
+                Ok(self.row_mapped(layer, ops.ew_mul, c, spatial, 1, true, false, None))
+            }
+            LayerKind::Pool1d { c, l, k, stride, .. } => {
+                let g = Geom {
+                    c,
+                    k: c,
+                    kh: 1,
+                    kw: k,
+                    stride,
+                    pad_h: 0,
+                    pad_w: 0,
+                    in_h: 1,
+                    in_w: l,
+                    out_h: 1,
+                    out_w: crate::dnn::layer::out_dim(l, k, stride, false),
+                };
+                Ok(self.row_mapped(layer, ops.ew_acc, c, g.out_pos(), k, false, false, Some(g)))
+            }
+            LayerKind::Pool2d { c, h, w, k, stride, .. } => {
+                let g = Geom {
+                    c,
+                    k: c,
+                    kh: k,
+                    kw: k,
+                    stride,
+                    pad_h: 0,
+                    pad_w: 0,
+                    in_h: h,
+                    in_w: w,
+                    out_h: crate::dnn::layer::out_dim(h, k, stride, false),
+                    out_w: crate::dnn::layer::out_dim(w, k, stride, false),
+                };
+                Ok(self.row_mapped(
+                    layer,
+                    ops.ew_acc,
+                    c,
+                    g.out_pos(),
+                    k * k,
+                    false,
+                    false,
+                    Some(g),
+                ))
+            }
+            LayerKind::DwConv2d { c, h, w, kh, kw, stride, pad } => {
+                let g = Geom {
+                    c: 1,
+                    k: c,
+                    kh,
+                    kw,
+                    stride,
+                    pad_h: if pad { (kh / 2) as i64 } else { 0 },
+                    pad_w: if pad { (kw / 2) as i64 } else { 0 },
+                    in_h: h,
+                    in_w: w,
+                    out_h: crate::dnn::layer::out_dim(h, kh, stride, pad),
+                    out_w: crate::dnn::layer::out_dim(w, kw, stride, pad),
+                };
+                // per-channel windowed MAC with a stationary channel weight
+                Ok(self.row_mapped(
+                    layer,
+                    ops.ew_mac,
+                    c,
+                    g.out_pos(),
+                    kh * kw,
+                    false,
+                    true,
+                    Some(g),
+                ))
+            }
+            _ => unreachable!("conv-like handled above"),
+        }
+    }
+
+    fn hw_features(&self) -> [f64; 8] {
+        let c = &self.sys.cfg;
+        [
+            c.rows as f64,
+            c.cols as f64,
+            c.port_width as f64,
+            c.mem_read_latency as f64,
+            c.mem_write_latency as f64,
+            // per-wave latency of one unrolled MAC step: the psum chain down
+            // the rows plus load/mov_r/store_acc overhead — the "utilization
+            // efficiency" knob of the refined roofline. It assumes this is
+            // CONSTANT per design point, which is exactly the blind spot the
+            // paper exploits (§7.3: oscillation, underutilized mappings).
+            (c.rows + 5) as f64,
+            0.0, // fetch overhead folded into the pipeline
+            0.0,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::systolic::SystolicConfig;
+    use crate::dnn::{ActKind, Layer, LayerKind};
+
+    fn mapper(rows: u32, cols: u32) -> ScalarMapper {
+        ScalarMapper::new(Arc::new(Systolic::new(SystolicConfig::new(rows, cols)).unwrap()))
+    }
+
+    fn conv1d(c: u32, l: u32, k: u32, f: u32) -> Layer {
+        Layer::new(
+            "conv",
+            LayerKind::Conv1d { c_in: c, l_in: l, c_out: k, kernel: f, stride: 1, pad: false },
+        )
+    }
+
+    #[test]
+    fn conv_kernel_counts() {
+        let m = mapper(2, 2);
+        let ml = m.map_layer(&conv1d(4, 10, 4, 3)).unwrap();
+        assert_eq!(ml.kernels.len(), 2);
+        assert_eq!(ml.ur_c, 2);
+        assert_eq!(ml.ur_k, 2);
+        // weights: c_tiles(2) * k_tiles(2) * taps(3) = 12 iterations
+        assert_eq!(ml.kernels[0].k, 12);
+        // compute: 12 * out_pos(8)
+        assert_eq!(ml.kernels[1].k, 96);
+        // per-iter: 2 loads + 2 mov_r + 4 mac + 0 mov_d + 2 store = 10
+        assert_eq!(ml.kernels[1].insts_per_iter, 10);
+    }
+
+    #[test]
+    fn kernel_instructions_route() {
+        // every emitted instruction must route through the diagram
+        let m = mapper(4, 4);
+        for layer in [
+            conv1d(8, 16, 8, 3),
+            Layer::new("act", LayerKind::Act { kind: ActKind::Clip, c: 8, spatial: 16 }),
+            Layer::new("add", LayerKind::Add { c: 7, spatial: 16 }),
+            Layer::new(
+                "dw",
+                LayerKind::DwConv2d { c: 8, h: 8, w: 8, kh: 3, kw: 3, stride: 1, pad: true },
+            ),
+            Layer::new(
+                "pool",
+                LayerKind::Pool2d {
+                    kind: crate::dnn::PoolKind::Max,
+                    c: 8,
+                    h: 8,
+                    w: 8,
+                    k: 2,
+                    stride: 2,
+                },
+            ),
+            Layer::new("fc", LayerKind::Dense { c_in: 16, c_out: 8 }),
+        ] {
+            let ml = m.map_layer(&layer).unwrap();
+            for kernel in &ml.kernels {
+                for instr in kernel.materialize(0..2.min(kernel.k)) {
+                    m.diagram().route(&instr).unwrap_or_else(|e| {
+                        panic!("{} kernel {}: {e}", layer.name, kernel.label)
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn underutilized_mapping_uses_divisor() {
+        // the Fig. 13b case: C=20, K=70 on 12×12 -> 10×10 active
+        let m = mapper(12, 12);
+        let ml = m.map_layer(&conv1d(20, 30, 70, 3)).unwrap();
+        assert_eq!(ml.ur_c, 10);
+        assert_eq!(ml.ur_k, 10);
+        // idle rows add mov_d pass-through work
+        assert_eq!(
+            ml.kernels[1].insts_per_iter,
+            (10 + 10 * 9 + 100 + 2 * 10 + 10) as usize
+        );
+    }
+
+    #[test]
+    fn add_with_prime_channels_uses_one_pe() {
+        let m = mapper(4, 4);
+        let ml = m
+            .map_layer(&Layer::new("add", LayerKind::Add { c: 13, spatial: 10 }))
+            .unwrap();
+        assert_eq!(ml.ur_k, 1); // 13 prime, > 4
+        assert_eq!(ml.kernels[0].k, 13 * 10);
+    }
+
+    #[test]
+    fn iterations_shrink_with_array_size() {
+        let small = mapper(2, 2).map_layer(&conv1d(16, 32, 16, 3)).unwrap();
+        let big = mapper(4, 4).map_layer(&conv1d(16, 32, 16, 3)).unwrap();
+        assert_eq!(small.kernels[1].k, big.kernels[1].k * 4);
+    }
+
+    #[test]
+    fn addresses_stay_in_regions() {
+        let m = mapper(2, 2);
+        let ml = m.map_layer(&conv1d(4, 10, 4, 3)).unwrap();
+        for instr in ml.kernels[1].materialize(0..ml.kernels[1].k) {
+            for &a in &instr.read_addrs {
+                assert!(a < PSUM_BASE + (1 << 32));
+            }
+            for &a in &instr.write_addrs {
+                assert!((PSUM_BASE..OUT_BASE + (1 << 32)).contains(&a));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_maps_as_degenerate_conv() {
+        let m = mapper(4, 4);
+        let ml = m.map_layer(&Layer::new("fc", LayerKind::Dense { c_in: 16, c_out: 8 })).unwrap();
+        assert_eq!(ml.ur_c, 4);
+        assert_eq!(ml.ur_k, 4);
+        // compute iterations = (16/4)*(8/4)*1*1 = 8
+        assert_eq!(ml.kernels[1].k, 8);
+    }
+}

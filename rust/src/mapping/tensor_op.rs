@@ -1,0 +1,226 @@
+//! Fused-tensor mapping onto UltraTrail (paper §4.3 Fig. 5, §5, §7.1).
+//!
+//! Each convolutional / fully-connected layer lowers to a **single**
+//! `conv_ext` / `dense_ext` instruction whose immediates parameterize the
+//! analytical latency model of the `macArrayAndOPU` FunctionalUnit.
+//! Activation and pooling layers are executed by the OPU *fused* into the
+//! preceding tensor op (zero additional instructions — the paper's CONV-EXT
+//! semantics); residual additions lower to `add_ext` on the MAC array.
+//!
+//! Layer operands ping-pong between FMEM0 and FMEM1 through per-layer token
+//! addresses, giving the AIDG the read-after-write chain that serializes
+//! consecutive layers exactly like the real accelerator's memory reuse.
+//! UltraTrail processes 1-dimensional data only: 2D layers are rejected
+//! (the paper runs only TC-ResNet8 on it for the same reason).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::bail;
+
+use crate::accel::ultratrail::{UltraTrail, BMEM_BASE, FMEM0_BASE, FMEM1_BASE, FMEM2_BASE, WMEM_BASE};
+use crate::acadl::Diagram;
+use crate::dnn::{Layer, LayerKind};
+use crate::ids::Addr;
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+use super::{MappedLayer, Mapper};
+
+/// The UltraTrail tensor-op mapper. Holds a layer sequence counter so the
+/// per-layer FMEM ping-pong tokens chain across `map_network` calls.
+pub struct TensorOpMapper {
+    ut: Arc<UltraTrail>,
+    seq: AtomicU64,
+}
+
+impl TensorOpMapper {
+    pub fn new(ut: Arc<UltraTrail>) -> Self {
+        Self { ut, seq: AtomicU64::new(0) }
+    }
+
+    /// Feature-memory token of sequence step `j` (ping-pong FMEM0/FMEM1).
+    fn fmem_token(j: u64) -> Addr {
+        if j % 2 == 0 {
+            FMEM0_BASE + j
+        } else {
+            FMEM1_BASE + j
+        }
+    }
+
+    /// One tensor instruction as a k=1 loop kernel.
+    fn tensor_kernel(
+        &self,
+        layer: &Layer,
+        op: crate::ids::OpId,
+        imms: [i64; 7],
+        extra_read: Option<Addr>,
+        weighted: bool,
+    ) -> MappedLayer {
+        let j = self.seq.fetch_add(1, Ordering::Relaxed);
+        let seq_in = Self::fmem_token(j);
+        let seq_out = Self::fmem_token(j + 1);
+        let w_token = WMEM_BASE + j;
+        let b_token = BMEM_BASE + j;
+        let label = format!("{}::tensor", layer.name);
+        let kernel = LoopKernel::new(
+            label,
+            1,
+            1,
+            Box::new(move |_it, buf| {
+                let mut i = Instruction::new(op).imms(&imms).read_mem(&[seq_in]);
+                if weighted {
+                    i = i.read_mem(&[w_token, b_token]);
+                }
+                if let Some(a) = extra_read {
+                    i = i.read_mem(&[a]);
+                }
+                buf.push(i.write_mem(&[seq_out]));
+            }),
+        );
+        let n = self.ut.cfg.array_dim;
+        MappedLayer {
+            layer_name: layer.name.clone(),
+            kernels: vec![kernel],
+            fused: false,
+            ur_c: n.min(imms[0].max(1) as u32),
+            ur_k: n.min(imms[2].max(1) as u32),
+            traffic: None,
+        }
+    }
+}
+
+impl Mapper for TensorOpMapper {
+    fn diagram(&self) -> &Diagram {
+        &self.ut.diagram
+    }
+
+    fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
+        let ops = self.ut.ops;
+        match layer.kind {
+            LayerKind::Conv1d { c_in, l_in, c_out, kernel, stride, pad } => {
+                let out = crate::dnn::layer::out_dim(l_in, kernel, stride, pad);
+                if out == 0 {
+                    bail!("layer {} has empty output", layer.name);
+                }
+                Ok(self.tensor_kernel(
+                    layer,
+                    ops.conv_ext,
+                    [
+                        c_in as i64,
+                        l_in as i64,
+                        c_out as i64,
+                        kernel as i64,
+                        stride as i64,
+                        pad as i64,
+                        out as i64,
+                    ],
+                    None,
+                    true,
+                ))
+            }
+            LayerKind::Dense { c_in, c_out } => Ok(self.tensor_kernel(
+                layer,
+                ops.dense_ext,
+                [c_in as i64, 1, c_out as i64, 1, 1, 0, 1],
+                None,
+                true,
+            )),
+            LayerKind::Add { c, spatial } => Ok(self.tensor_kernel(
+                layer,
+                ops.add_ext,
+                [c as i64, spatial as i64, c as i64, 0, 0, 0, spatial as i64],
+                Some(FMEM2_BASE + c as u64), // the skip-path operand
+                false,
+            )),
+            // OPU work: fused into the preceding tensor op (CONV-EXT)
+            LayerKind::Act { .. } | LayerKind::Pool1d { .. } => {
+                Ok(MappedLayer::fused(layer.name.clone()))
+            }
+            // UltraTrail is 1-D only (paper §7.1)
+            LayerKind::Conv2d { .. }
+            | LayerKind::DwConv2d { .. }
+            | LayerKind::Pool2d { .. }
+            | LayerKind::Mul { .. } => {
+                bail!(
+                    "layer {} ({:?}-like) is not executable on UltraTrail (1-D architecture)",
+                    layer.name,
+                    std::mem::discriminant(&layer.kind)
+                )
+            }
+        }
+    }
+
+    fn hw_features(&self) -> [f64; 8] {
+        let n = self.ut.cfg.array_dim as f64;
+        // rows=cols=N; 8-word fmem ports; 1-cycle memories; 1-cycle MAC wave;
+        // fetch overhead ~2 cycles/instruction (imem + IFS)
+        [n, n, 8.0, 1.0, 1.0, 1.0, 2.0, 0.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::ultratrail::UltraTrailConfig;
+    use crate::dnn::zoo;
+
+    fn mapper() -> TensorOpMapper {
+        TensorOpMapper::new(Arc::new(UltraTrail::new(UltraTrailConfig::default()).unwrap()))
+    }
+
+    #[test]
+    fn tc_resnet8_maps_fully() {
+        let m = mapper();
+        let net = zoo::tc_resnet8();
+        let mapped = m.map_network(&net).unwrap();
+        assert_eq!(mapped.len(), net.num_layers());
+        // clips and the avgpool fuse into the OPU
+        let fused = mapped.iter().filter(|l| l.fused).count();
+        assert_eq!(fused, 8); // 7 clips + 1 avgpool
+        // everything else is exactly one instruction
+        for ml in mapped.iter().filter(|l| !l.fused) {
+            assert_eq!(ml.total_insts(), 1, "{}", ml.layer_name);
+        }
+    }
+
+    #[test]
+    fn layers_chain_through_fmem_tokens() {
+        let m = mapper();
+        let net = zoo::tc_resnet8();
+        let mapped = m.map_network(&net).unwrap();
+        let actual: Vec<&MappedLayer> = mapped.iter().filter(|l| !l.fused).collect();
+        // the write token of layer i is the read token of layer i+1
+        let insts_of = |ml: &MappedLayer| ml.kernels[0].materialize(0..1);
+        for w in actual.windows(2) {
+            let a = insts_of(w[0]);
+            let b = insts_of(w[1]);
+            assert!(
+                b[0].read_addrs.contains(&a[0].write_addrs[0]),
+                "{} -> {} not chained",
+                w[0].layer_name,
+                w[1].layer_name
+            );
+        }
+    }
+
+    #[test]
+    fn two_d_layers_rejected() {
+        let m = mapper();
+        for net in [zoo::alexnet(), zoo::efficientnet()] {
+            assert!(m.map_network(&net).is_err(), "{} should not map", net.name);
+        }
+    }
+
+    #[test]
+    fn instructions_route() {
+        let m = mapper();
+        for ml in m.map_network(&zoo::tc_resnet8()).unwrap() {
+            for k in &ml.kernels {
+                for i in k.materialize(0..k.k) {
+                    m.diagram().route(&i).unwrap();
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Estimation-accuracy metrics (paper §7, eqs. 14–18) and summary
+//! statistics for the figures.
+
+/// Percentage error of a whole-DNN estimate (eq. 15).
+pub fn percentage_error(estimated: f64, measured: f64) -> f64 {
+    if measured == 0.0 {
+        return 0.0;
+    }
+    (estimated - measured) / measured * 100.0
+}
+
+/// Mean absolute percentage error over per-layer latencies (eq. 16).
+pub fn mape(measured: &[f64], estimated: &[f64]) -> f64 {
+    assert_eq!(measured.len(), estimated.len());
+    if measured.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&m, &e) in measured.iter().zip(estimated) {
+        if m != 0.0 {
+            acc += ((m - e) / m).abs();
+            n += 1;
+        }
+    }
+    if n == 0 { 0.0 } else { acc / n as f64 * 100.0 }
+}
+
+/// Sample variance (unbiased, n-1 denominator) — eqs. 17/18 operate on the
+/// per-iteration Δt traces.
+pub fn sample_variance(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Pearson correlation coefficient ρ (Table 7).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx2 = 0.0;
+    let mut dy2 = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        num += dx * dy;
+        dx2 += dx * dx;
+        dy2 += dy * dy;
+    }
+    if dx2 == 0.0 || dy2 == 0.0 {
+        return 0.0;
+    }
+    num / (dx2 * dy2).sqrt()
+}
+
+/// Five-number summary + outliers for the memory box plots (Figs. 11/12).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+    pub mean: f64,
+    /// Points outside 1.5 × IQR whiskers.
+    pub outliers: Vec<f64>,
+}
+
+/// Linear-interpolated quantile of a sorted slice.
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+    }
+}
+
+pub fn box_stats(xs: &[f64]) -> BoxStats {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = quantile(&sorted, 0.25);
+    let q3 = quantile(&sorted, 0.75);
+    let iqr = q3 - q1;
+    let lo_w = q1 - 1.5 * iqr;
+    let hi_w = q3 + 1.5 * iqr;
+    let outliers: Vec<f64> =
+        sorted.iter().copied().filter(|&x| x < lo_w || x > hi_w).collect();
+    BoxStats {
+        min: sorted.first().copied().unwrap_or(0.0),
+        q1,
+        median: quantile(&sorted, 0.5),
+        q3,
+        max: sorted.last().copied().unwrap_or(0.0),
+        mean: mean(&sorted),
+        outliers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_signs() {
+        assert!((percentage_error(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert!((percentage_error(90.0, 100.0) + 10.0).abs() < 1e-12);
+        assert_eq!(percentage_error(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn mape_basic() {
+        let m = vec![100.0, 200.0];
+        let e = vec![110.0, 180.0];
+        assert!((mape(&m, &e) - 10.0).abs() < 1e-12);
+        assert_eq!(mape(&[], &[]), 0.0);
+        // exact estimates: zero error
+        assert_eq!(mape(&m, &m.clone()), 0.0);
+    }
+
+    #[test]
+    fn variance_matches_hand_calc() {
+        let xs = vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        // mean 5, sum sq dev 32, n-1 = 7
+        assert!((sample_variance(&xs) - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(sample_variance(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let ys = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let yneg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &yneg) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn box_stats_detects_outliers() {
+        let mut xs: Vec<f64> = (0..100).map(|i| 50.0 + (i % 10) as f64).collect();
+        xs.push(1e6);
+        let b = box_stats(&xs);
+        assert_eq!(b.outliers, vec![1e6]);
+        assert!(b.q1 <= b.median && b.median <= b.q3);
+        assert_eq!(b.max, 1e6);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let b = box_stats(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((b.median - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! Table and figure renderers: markdown tables matching the paper's rows
+//! and CSV series for the figures. Benches write both to stdout and to
+//! `target/reports/`.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// A simple column-aligned markdown table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render as a column-aligned markdown table.
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut l = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(l, " {:<width$} |", cells[i], width = w[i]);
+            }
+            l
+        };
+        let _ = writeln!(s, "{}", line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<width$}|", "", width = w + 2);
+        }
+        let _ = writeln!(s, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", line(r, &widths));
+        }
+        s
+    }
+
+    /// Print to stdout and persist under `target/reports/<stem>.md`.
+    pub fn emit(&self, stem: &str) -> Result<()> {
+        let md = self.to_markdown();
+        println!("{md}");
+        let path = reports_dir().join(format!("{stem}.md"));
+        std::fs::write(&path, md)?;
+        Ok(())
+    }
+}
+
+/// CSV series writer for figure data.
+pub struct Csv {
+    path: PathBuf,
+    buf: String,
+}
+
+impl Csv {
+    pub fn new(stem: &str, headers: &[&str]) -> Self {
+        let mut buf = String::new();
+        let _ = writeln!(buf, "{}", headers.join(","));
+        Self { path: reports_dir().join(format!("{stem}.csv")), buf }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        let _ = writeln!(self.buf, "{}", cells.join(","));
+        self
+    }
+
+    pub fn finish(self) -> Result<PathBuf> {
+        std::fs::write(&self.path, self.buf)?;
+        Ok(self.path)
+    }
+}
+
+/// `target/reports/`, created on demand.
+pub fn reports_dir() -> PathBuf {
+    let p = Path::new("target").join("reports");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Thousands-separated cycle counts (matches the paper's table style).
+pub fn fmt_cycles(c: u64) -> String {
+    let s = c.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(' ');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+pub fn fmt_pct(v: f64) -> String {
+    format!("{v:.2}%")
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2} MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2} KiB", b as f64 / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_is_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines[1].len(), lines[2].len());
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_cycles(22484), "22 484");
+        assert_eq!(fmt_cycles(7), "7");
+        assert_eq!(fmt_cycles(1_866_213_921), "1 866 213 921");
+        assert_eq!(fmt_pct(7.5), "7.50%");
+        assert_eq!(fmt_bytes(146 * 1024 * 1024), "146.00 MiB");
+        assert_eq!(fmt_bytes(512), "512 B");
+    }
+
+    #[test]
+    fn csv_writes() {
+        let mut c = Csv::new("test_csv", &["x", "y"]);
+        c.row(&["1".into(), "2".into()]);
+        let p = c.finish().unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "x,y\n1,2\n");
+    }
+}

@@ -1,0 +1,101 @@
+//! AOT artifact loading: HLO *text* → PJRT executable.
+//!
+//! HLO text (not serialized `HloModuleProto`) is the interchange format —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the bundled
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and `python/compile/aot.py`). Artifacts are
+//! produced once by `make artifacts`; Python never runs at estimation time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::Result;
+
+use super::client::with_client;
+
+/// A compiled AOT artifact.
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load `<dir>/<stem>.hlo.txt` and compile it on the shared CPU client.
+    pub fn load(dir: impl AsRef<Path>, stem: &str) -> Result<Self> {
+        let path = dir.as_ref().join(format!("{stem}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| {
+            c.compile(&comp)
+                .with_context(|| format!("compiling artifact {stem}"))
+        })?;
+        Ok(Self { name: stem.to_string(), path, exe })
+    }
+
+    /// Execute with literals; the AOT pipeline lowers with
+    /// `return_tuple=True`, so the single output is a 1-tuple that is
+    /// unwrapped here.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+}
+
+/// Default artifacts directory: `$ACADL_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("ACADL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("gemm.hlo.txt").exists()
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let e = match Artifact::load(artifacts_dir(), "nonexistent") {
+            Err(e) => e,
+            Ok(_) => panic!("loading a nonexistent artifact must fail"),
+        };
+        assert!(e.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn gemm_artifact_round_trips() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let art = Artifact::load(artifacts_dir(), "gemm").unwrap();
+        // identity × A = A on the AOT shape (256×256 f32)
+        let n = 256usize;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let a: Vec<f32> = (0..n * n).map(|i| (i % 17) as f32).collect();
+        let lit_eye = xla::Literal::vec1(&eye).reshape(&[n as i64, n as i64]).unwrap();
+        let lit_a = xla::Literal::vec1(&a).reshape(&[n as i64, n as i64]).unwrap();
+        let out = art.execute(&[lit_eye, lit_a]).unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), n * n);
+        for i in (0..n * n).step_by(n * 37 + 1) {
+            assert!((v[i] - a[i]).abs() < 1e-4, "i={i}: {} vs {}", v[i], a[i]);
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT CPU client (the `xla` crate wrapper).
+//!
+//! `PjRtClient` is reference-counted internally (`Rc`) and therefore
+//! thread-confined; each thread that touches XLA gets one lazily-created
+//! client. The coordinator keeps all XLA work on a single service thread
+//! ([`crate::coordinator`]), so in practice one client exists.
+
+use once_cell::unsync::OnceCell;
+
+use crate::Result;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with this thread's PJRT CPU client.
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|c| {
+        let client = c.get_or_try_init(|| xla::PjRtClient::cpu().map_err(anyhow::Error::from))?;
+        f(client)
+    })
+}
+
+/// Platform info string for diagnostics.
+pub fn platform_info() -> Result<String> {
+    with_client(|c| Ok(format!("{} ({} devices)", c.platform_name(), c.device_count())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_cpu_platform() {
+        assert!(platform_info().unwrap().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn client_is_reused_within_thread() {
+        let a = with_client(|c| Ok(c as *const _ as usize)).unwrap();
+        let b = with_client(|c| Ok(c as *const _ as usize)).unwrap();
+        assert_eq!(a, b);
+    }
+}

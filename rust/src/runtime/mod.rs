@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO text lowered from the L2 JAX model / L1 Pallas kernels) and runs
+//! them from the estimation hot path. Python never executes at runtime.
+
+pub mod artifact;
+pub mod client;
+pub mod roofline_exec;
+
+pub use artifact::{artifacts_dir, Artifact};
+pub use client::{platform_info, with_client};
+pub use roofline_exec::{RooflineExec, ROOFLINE_BATCH};

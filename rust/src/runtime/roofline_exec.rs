@@ -1,0 +1,116 @@
+//! Typed wrapper over the AOT roofline artifact: `[B, LF]` layer features ×
+//! `[HF]` hardware features → `[B]` cycles, padding/splitting arbitrary
+//! batch sizes to the fixed AOT batch (features.py `ROOFLINE_BATCH`).
+//!
+//! The coordinator's design-space-exploration driver pushes whole sweeps
+//! through this executable (one XLA call covers `ROOFLINE_BATCH` design
+//! points); the native mirror in [`crate::baselines::roofline`] computes the
+//! same formula and the two are pinned against each other in tests.
+
+use anyhow::Context;
+
+use crate::baselines::roofline::{HwFeatures, LayerFeatures};
+use crate::Result;
+
+use super::artifact::{artifacts_dir, Artifact};
+
+/// Fixed AOT batch (mirror of features.py ROOFLINE_BATCH).
+pub const ROOFLINE_BATCH: usize = 1024;
+/// Layer-feature width (features.py LF).
+pub const LF: usize = 8;
+/// Hardware-feature width (features.py HF).
+pub const HF: usize = 8;
+
+/// The loaded roofline estimator.
+pub struct RooflineExec {
+    art: Artifact,
+}
+
+impl RooflineExec {
+    /// Load `artifacts/roofline.hlo.txt` (or `$ACADL_ARTIFACTS`).
+    pub fn load() -> Result<Self> {
+        Ok(Self { art: Artifact::load(artifacts_dir(), "roofline")? })
+    }
+
+    pub fn load_from(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self { art: Artifact::load(dir, "roofline")? })
+    }
+
+    /// Estimate cycles for `layers` under `hw`, batching through the AOT
+    /// executable in ROOFLINE_BATCH chunks (the tail is zero-padded).
+    pub fn estimate(&self, layers: &[LayerFeatures], hw: &HwFeatures) -> Result<Vec<f64>> {
+        let hw_lit = xla::Literal::vec1(&hw[..]);
+        let mut out = Vec::with_capacity(layers.len());
+        for chunk in layers.chunks(ROOFLINE_BATCH) {
+            let mut rows = vec![0f64; ROOFLINE_BATCH * LF];
+            for (i, lf) in chunk.iter().enumerate() {
+                rows[i * LF..(i + 1) * LF].copy_from_slice(&lf.to_row());
+            }
+            let layers_lit = xla::Literal::vec1(&rows)
+                .reshape(&[ROOFLINE_BATCH as i64, LF as i64])
+                .context("reshaping roofline batch")?;
+            let result = self.art.execute(&[layers_lit, hw_lit.clone()])?;
+            let cycles = result.to_vec::<f64>()?;
+            out.extend_from_slice(&cycles[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::roofline::roofline_cycles;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("roofline.hlo.txt").exists()
+    }
+
+    fn lf(i: u64) -> LayerFeatures {
+        LayerFeatures {
+            macs: 1_000.0 + i as f64 * 97.0,
+            in_words: 100.0 + i as f64,
+            w_words: 300.0 + i as f64 * 3.0,
+            out_words: 60.0,
+            ur_c: 1.0 + (i % 8) as f64,
+            ur_k: 1.0 + (i % 4) as f64,
+            k_iters: 10.0 + i as f64,
+        }
+    }
+
+    #[test]
+    fn xla_matches_native_mirror() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let exec = RooflineExec::load().unwrap();
+        let hw: HwFeatures = [8.0, 8.0, 4.0, 2.0, 3.0, 1.0, 1.0, 0.0];
+        let layers: Vec<LayerFeatures> = (0..100).map(lf).collect();
+        let xla_cycles = exec.estimate(&layers, &hw).unwrap();
+        assert_eq!(xla_cycles.len(), 100);
+        for (l, &x) in layers.iter().zip(&xla_cycles) {
+            let native = roofline_cycles(l, &hw);
+            assert!(
+                (x - native).abs() < 1e-9,
+                "xla {x} vs native {native} for {l:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn batches_beyond_aot_size_split() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let exec = RooflineExec::load().unwrap();
+        let hw: HwFeatures = [4.0, 4.0, 2.0, 1.0, 1.0, 1.0, 0.0, 0.0];
+        let layers: Vec<LayerFeatures> = (0..(ROOFLINE_BATCH as u64 + 100)).map(lf).collect();
+        let cycles = exec.estimate(&layers, &hw).unwrap();
+        assert_eq!(cycles.len(), ROOFLINE_BATCH + 100);
+        // chunk boundary must be seamless: same formula everywhere
+        let native = roofline_cycles(&layers[ROOFLINE_BATCH + 1], &hw);
+        assert!((cycles[ROOFLINE_BATCH + 1] - native).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,673 @@
+//! Cycle-accurate discrete-event simulation of ACADL object diagrams — the
+//! in-repo stand-in for the paper's Verilator / Cadence Xcelium RTL ground
+//! truth (see DESIGN.md §3).
+//!
+//! The simulator executes the *same* instruction streams on the *same*
+//! diagrams as the AIDG estimator, but as an actual time-stepped machine:
+//! instructions are tokens that occupy objects, objects hold live occupancy
+//! counts, and hazards are resolved through a ticket scoreboard that
+//! serializes accesses to each register and memory address in program order
+//! (the reorder-buffer/interlock behavior real hardware implements).
+//! Nothing is extrapolated — every instruction is executed and every stall
+//! cycle stepped. Agreement between this machine and the analytical AIDG
+//! sweep is the repo's accuracy check; the runtime gap between them
+//! reproduces the paper's estimator-vs-RTL-simulation gap.
+//!
+//! Semantics per the paper (§4.1, Algorithm 1):
+//! - one instruction-memory transaction at a time, `port_width` instructions
+//!   each, the next transaction starting once the previous group has been
+//!   forwarded into the issue buffer (fetch backpressure);
+//! - at most `issue_buffer_size` instructions forwarded from fetch and
+//!   entering the fetch stage per cycle;
+//! - an instruction resides `latency` cycles in each pipeline stage /
+//!   functional unit after its data dependencies resolve, and continues to
+//!   occupy the module until the next module in its route has capacity;
+//! - register and memory accesses serialize in program order: a module
+//!   starts processing only after the previous accessor of every register /
+//!   address the instruction touches has moved on (RAW/WAR/WAW/RAR, the
+//!   "last node that accessed" semantics of §6.1).
+
+use std::collections::HashMap;
+
+
+use anyhow::{bail, Context};
+
+use crate::acadl::{Diagram, ObjectKind};
+use crate::ids::{Addr, Cycle, ObjId, RegId};
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+static TRACE: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| std::env::var_os("ACADL_TRACE").is_some());
+static TRACE_NODES: once_cell::sync::Lazy<bool> =
+    once_cell::sync::Lazy::new(|| std::env::var_os("ACADL_TRACE_NODES").is_some());
+
+/// Result of one simulation run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    /// End-to-end latency: last token's leave time minus first fetch start.
+    pub cycles: Cycle,
+    /// Instructions executed.
+    pub instructions: u64,
+    /// Distinct simulation times visited (diagnostic).
+    pub ticks: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tag {
+    Fu,
+    Stage,
+    ReadMem,
+    WriteBack,
+    WriteMem,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TState {
+    /// Fetched at `ready`, awaiting a forward slot out of the fetch group.
+    AwaitForward { ready: Cycle },
+    /// Forwarded at `ready`, awaiting an issue-buffer entry slot.
+    AwaitIssue { ready: Cycle },
+    /// Residing in the fetch stage until `finish`.
+    Ifs { finish: Cycle },
+    /// Fetch-stage residency over, waiting for the first route object.
+    IfsStalled,
+    /// Occupying tail node `idx`; `finish` is None while the scoreboard
+    /// still blocks the node's data dependencies.
+    Node { idx: usize, finish: Option<Cycle> },
+    /// Done in node `idx`, waiting for node `idx + 1` to have capacity.
+    NodeStalled { idx: usize },
+    Done,
+}
+
+/// Program-order access serialization for one resource (register/address):
+/// accesses take tickets at token creation; an access may observe the
+/// resource once all earlier tickets are served.
+#[derive(Debug, Clone, Copy, Default)]
+struct ResState {
+    next_ticket: u64,
+    served: u64,
+    last_leave: Cycle,
+}
+
+impl ResState {
+    #[inline]
+    fn take(&mut self) -> u64 {
+        let t = self.next_ticket;
+        self.next_ticket += 1;
+        t
+    }
+
+    /// Predecessors all served?
+    #[inline]
+    fn ready(&self, ticket: u64) -> bool {
+        self.served >= ticket
+    }
+
+    #[inline]
+    fn serve(&mut self, t: Cycle) {
+        self.served += 1;
+        self.last_leave = self.last_leave.max(t);
+    }
+}
+
+struct Token {
+    instr: Instruction,
+    tail: Vec<(ObjId, Tag)>,
+    /// Unique registers the instruction accesses, with their tickets and
+    /// whether the access is served at the WriteBack node (written regs of
+    /// memory-reading instructions) or the FU node.
+    reg_tickets: Vec<(RegId, u64, bool)>,
+    /// (addr, ticket) per read address, served at its ReadMem node.
+    raddr_tickets: Vec<(Addr, u64)>,
+    /// (addr, ticket) per write address, served at its WriteMem node.
+    waddr_tickets: Vec<(Addr, u64)>,
+}
+
+/// The simulation machine over one diagram.
+pub struct CycleSim<'d> {
+    d: &'d Diagram,
+    /// Live occupancy per lock owner.
+    occupancy: Vec<u32>,
+    reg_res: Vec<ResState>,
+    addr_res: HashMap<Addr, ResState>,
+    now: Cycle,
+    next_fetch_start: Cycle,
+    /// Group instructions not yet forwarded (backpressures fetch).
+    group_pending: usize,
+    /// Per-cycle forward/enter counters (reset when time advances).
+    fwd_count: u32,
+    enter_count: u32,
+    max_leave: Cycle,
+    ticks: u64,
+    instructions: u64,
+}
+
+impl<'d> CycleSim<'d> {
+    pub fn new(d: &'d Diagram) -> Self {
+        Self {
+            d,
+            occupancy: vec![0; d.num_objects()],
+            reg_res: vec![ResState::default(); d.num_regs()],
+            addr_res: HashMap::new(),
+            now: 0,
+            next_fetch_start: 0,
+            group_pending: 0,
+            fwd_count: 0,
+            enter_count: 0,
+            max_leave: 0,
+            ticks: 0,
+            instructions: 0,
+        }
+    }
+
+    /// Route + take scoreboard tickets (program order = creation order).
+    fn make_token(&mut self, instr: Instruction) -> Result<Token> {
+        let route = self.d.route(&instr)?;
+        let wb = self.d.writeback_obj();
+        let mut tail = Vec::with_capacity(route.tail_len());
+        for &s in &route.stages {
+            tail.push((s, Tag::Stage));
+        }
+        tail.push((route.fu, Tag::Fu));
+        for &m in &route.read_mems {
+            tail.push((m, Tag::ReadMem));
+        }
+        if route.has_writeback {
+            tail.push((wb, Tag::WriteBack));
+        }
+        for &m in &route.write_mems {
+            tail.push((m, Tag::WriteMem));
+        }
+
+        // one ticket per unique register; written regs of memory-reading
+        // instructions are served at the writeBack node
+        let mut reg_tickets: Vec<(RegId, u64, bool)> = Vec::new();
+        for r in instr.read_regs.iter().chain(instr.write_regs.iter()) {
+            if !reg_tickets.iter().any(|&(rr, _, _)| rr == *r) {
+                let at_wb = route.has_writeback && instr.write_regs.contains(r);
+                let ticket = self.reg_res[r.0 as usize].take();
+                reg_tickets.push((*r, ticket, at_wb));
+            }
+        }
+        let mut raddr_tickets = Vec::with_capacity(instr.read_addrs.len());
+        for &a in &instr.read_addrs {
+            raddr_tickets.push((a, self.addr_res.entry(a).or_default().take()));
+        }
+        let mut waddr_tickets = Vec::with_capacity(instr.write_addrs.len());
+        for &a in &instr.write_addrs {
+            waddr_tickets.push((a, self.addr_res.entry(a).or_default().take()));
+        }
+
+        Ok(Token { instr, tail, reg_tickets, raddr_tickets, waddr_tickets })
+    }
+
+    #[inline]
+    fn has_capacity(&self, obj: ObjId) -> bool {
+        let lock = self.d.lock(obj);
+        lock.capacity == u32::MAX || self.occupancy[lock.owner.idx()] < lock.capacity
+    }
+
+    #[inline]
+    fn occupy(&mut self, obj: ObjId) {
+        let lock = self.d.lock(obj);
+        if lock.capacity != u32::MAX {
+            self.occupancy[lock.owner.idx()] += 1;
+        }
+    }
+
+    #[inline]
+    fn release_obj(&mut self, obj: ObjId) {
+        let lock = self.d.lock(obj);
+        if lock.capacity != u32::MAX {
+            self.occupancy[lock.owner.idx()] -= 1;
+        }
+    }
+
+    /// Scoreboard gate + dependency time + latency for tail node `idx`.
+    /// Returns None while a predecessor access is still pending.
+    fn node_ready(&self, tok: &Token, idx: usize) -> Option<(Cycle, Cycle)> {
+        let (obj, tag) = tok.tail[idx];
+        let instr = &tok.instr;
+        let mut deps = 0;
+        let lat = match tag {
+            Tag::Stage => match &self.d.object(obj).kind {
+                ObjectKind::PipelineStage { latency } => latency.eval(instr),
+                _ => 0,
+            },
+            Tag::Fu => {
+                for &(r, ticket, _) in &tok.reg_tickets {
+                    let st = &self.reg_res[r.0 as usize];
+                    if !st.ready(ticket) {
+                        return None;
+                    }
+                    deps = deps.max(st.last_leave);
+                }
+                match &self.d.object(obj).kind {
+                    ObjectKind::FunctionalUnit { latency, .. } => latency.eval(instr),
+                    _ => 0,
+                }
+            }
+            Tag::ReadMem => {
+                let mut n = 0usize;
+                for &(a, ticket) in &tok.raddr_tickets {
+                    if self.d.memory_of(a) == Some(obj) {
+                        n += 1;
+                        let st = &self.addr_res[&a];
+                        if !st.ready(ticket) {
+                            return None;
+                        }
+                        deps = deps.max(st.last_leave);
+                    }
+                }
+                self.d.mem_latency(obj, n, false, instr)
+            }
+            Tag::WriteBack => 0,
+            Tag::WriteMem => {
+                let mut n = 0usize;
+                for &(a, ticket) in &tok.waddr_tickets {
+                    if self.d.memory_of(a) == Some(obj) {
+                        n += 1;
+                        let st = &self.addr_res[&a];
+                        if !st.ready(ticket) {
+                            return None;
+                        }
+                        deps = deps.max(st.last_leave);
+                    }
+                }
+                self.d.mem_latency(obj, n, true, instr)
+            }
+        };
+        Some((deps, lat))
+    }
+
+    /// Scoreboard updates when a token leaves tail node `idx` at `t`.
+    fn on_release(&mut self, tok: &Token, idx: usize, t: Cycle) {
+        let (obj, tag) = tok.tail[idx];
+        match tag {
+            Tag::Fu => {
+                for &(r, _, at_wb) in &tok.reg_tickets {
+                    if !at_wb {
+                        self.reg_res[r.0 as usize].serve(t);
+                    }
+                }
+            }
+            Tag::WriteBack => {
+                for &(r, _, at_wb) in &tok.reg_tickets {
+                    if at_wb {
+                        self.reg_res[r.0 as usize].serve(t);
+                    }
+                }
+            }
+            Tag::ReadMem => {
+                for &(a, _) in &tok.raddr_tickets {
+                    if self.d.memory_of(a) == Some(obj) {
+                        self.addr_res.get_mut(&a).unwrap().serve(t);
+                    }
+                }
+            }
+            Tag::WriteMem => {
+                for &(a, _) in &tok.waddr_tickets {
+                    if self.d.memory_of(a) == Some(obj) {
+                        self.addr_res.get_mut(&a).unwrap().serve(t);
+                    }
+                }
+            }
+            Tag::Stage => {}
+        }
+    }
+
+    /// Run `range` iterations of `kernel` to completion.
+    pub fn run(&mut self, kernel: &LoopKernel, range: std::ops::Range<u64>) -> Result<SimResult> {
+        let f = *self.d.fetch_config();
+        let issue_cap = f.issue_buffer_size;
+        let ifs_lat = f.ifs_latency;
+        let ifs_obj = f.fetch_stage;
+        let p = f.port_width as usize;
+
+        // instruction stream, materialized one iteration at a time
+        let mut stream: Vec<Instruction> = Vec::new();
+        let mut stream_pos = 0usize;
+        let mut next_iter = range.start;
+
+        let mut tokens: Vec<Token> = Vec::new();
+        let mut states: Vec<TState> = Vec::new();
+        // live token ids in program order (tokens/states are never shrunk;
+        // `base` tracks how many leading entries were retired)
+        let mut live: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+
+        loop {
+            // ---- fixpoint: fetch + advance tokens in program order ----------
+            let mut cap_denied = false;
+            loop {
+                let mut progressed = false;
+
+                // fetch a new group when the port is free and the previous
+                // group has drained into the issue buffer
+                if self.group_pending == 0 && self.now >= self.next_fetch_start {
+                    if stream_pos >= stream.len() && next_iter < range.end {
+                        stream.clear();
+                        stream_pos = 0;
+                        kernel.emit(next_iter, &mut stream);
+                        next_iter += 1;
+                    }
+                    if stream_pos < stream.len() {
+                        let finish = self.now + f.read_latency;
+                        let n = p.min(stream.len() - stream_pos);
+                        for _ in 0..n {
+                            let tok = self
+                                .make_token(stream[stream_pos].clone())
+                                .context("routing failed during simulation")?;
+                            stream_pos += 1;
+                            tokens.push(tok);
+                            states.push(TState::AwaitForward { ready: finish });
+                            live.push_back(tokens.len() - 1);
+                            self.instructions += 1;
+                        }
+                        self.group_pending = n;
+                        self.next_fetch_start = finish;
+                        progressed = true;
+                    }
+                }
+
+                for &ti in &live {
+                    let st = states[ti];
+                    match st {
+                        TState::AwaitForward { ready } => {
+                            if self.now >= ready {
+                                if self.fwd_count < issue_cap {
+                                    self.fwd_count += 1;
+                                    states[ti] = TState::AwaitIssue { ready: self.now };
+                                    progressed = true;
+                                } else {
+                                    cap_denied = true;
+                                }
+                            }
+                        }
+                        TState::AwaitIssue { ready } => {
+                            // entering the fetch stage requires a free
+                            // issue-buffer slot (IFS occupancy) plus the
+                            // per-cycle entry cap
+                            if self.now >= ready && self.has_capacity(ifs_obj) {
+                                if self.enter_count < issue_cap {
+                                    self.enter_count += 1;
+                                    self.occupy(ifs_obj);
+                                    self.group_pending -= 1;
+                                    states[ti] = TState::Ifs { finish: self.now + ifs_lat };
+                                    progressed = true;
+                                } else {
+                                    cap_denied = true;
+                                }
+                            }
+                        }
+                        TState::Ifs { finish } => {
+                            if self.now >= finish {
+                                states[ti] = TState::IfsStalled;
+                                progressed = true;
+                            }
+                        }
+                        TState::IfsStalled => {
+                            let first = tokens[ti].tail[0].0;
+                            if self.has_capacity(first) {
+                                self.release_obj(ifs_obj);
+                                self.occupy(first);
+                                let finish = self
+                                    .node_ready(&tokens[ti], 0)
+                                    .map(|(deps, lat)| self.now.max(deps) + lat);
+                                states[ti] = TState::Node { idx: 0, finish };
+                                progressed = true;
+                            }
+                        }
+                        TState::Node { idx, finish: None } => {
+                            if let Some((deps, lat)) = self.node_ready(&tokens[ti], idx) {
+                                states[ti] =
+                                    TState::Node { idx, finish: Some(self.now.max(deps) + lat) };
+                                progressed = true;
+                            }
+                        }
+                        TState::Node { idx, finish: Some(finish) } => {
+                            if self.now >= finish {
+                                if *TRACE_NODES {
+                                    eprintln!(
+                                        "DES  i{} node {} stop={}",
+                                        ti,
+                                        self.d.object(tokens[ti].tail[idx].0).name,
+                                        finish
+                                    );
+                                }
+                                states[ti] = TState::NodeStalled { idx };
+                                progressed = true;
+                            }
+                        }
+                        TState::NodeStalled { idx } => {
+                            if idx + 1 < tokens[ti].tail.len() {
+                                let next = tokens[ti].tail[idx + 1].0;
+                                if self.has_capacity(next) {
+                                    let cur = tokens[ti].tail[idx].0;
+                                    self.release_obj(cur);
+                                    self.occupy(next);
+                                    let now = self.now;
+                                    // scoreboard updates at the leave time
+                                    let tok = &tokens[ti];
+                                    self.on_release(tok, idx, now);
+                                    let finish = self
+                                        .node_ready(&tokens[ti], idx + 1)
+                                        .map(|(deps, lat)| now.max(deps) + lat);
+                                    states[ti] = TState::Node { idx: idx + 1, finish };
+                                    progressed = true;
+                                }
+                            } else {
+                                let cur = tokens[ti].tail[idx].0;
+                                self.release_obj(cur);
+                                let now = self.now;
+                                self.on_release(&tokens[ti], idx, now);
+                                self.max_leave = self.max_leave.max(now);
+                                states[ti] = TState::Done;
+                                progressed = true;
+                                if *TRACE {
+                                    eprintln!(
+                                        "DES  i{} op={} leave={}",
+                                        ti,
+                                        self.d.op_name(tokens[ti].instr.op),
+                                        now
+                                    );
+                                }
+                            }
+                        }
+                        TState::Done => {}
+                    }
+                }
+                // retire completed tokens from the front of the window
+                while let Some(&front) = live.front() {
+                    if states[front] == TState::Done {
+                        live.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+
+            // ---- termination -------------------------------------------------
+            let stream_done = stream_pos >= stream.len() && next_iter >= range.end;
+            if stream_done && live.is_empty() {
+                break;
+            }
+
+            // ---- advance time to the next event ------------------------------
+            let mut next_t = Cycle::MAX;
+            for &ti in &live {
+                match states[ti] {
+                    TState::AwaitForward { ready } | TState::AwaitIssue { ready } => {
+                        if ready > self.now {
+                            next_t = next_t.min(ready);
+                        }
+                    }
+                    TState::Ifs { finish } | TState::Node { finish: Some(finish), .. } => {
+                        if finish > self.now {
+                            next_t = next_t.min(finish);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if self.group_pending == 0 && !stream_done && self.next_fetch_start > self.now {
+                next_t = next_t.min(self.next_fetch_start);
+            }
+            if cap_denied {
+                next_t = next_t.min(self.now + 1);
+            }
+            if next_t == Cycle::MAX {
+                bail!(
+                    "simulation deadlock at cycle {} with {} live tokens",
+                    self.now,
+                    live.len()
+                );
+            }
+            self.now = next_t;
+            self.fwd_count = 0;
+            self.enter_count = 0;
+            self.ticks += 1;
+        }
+
+        Ok(SimResult {
+            cycles: self.max_leave,
+            instructions: self.instructions,
+            ticks: self.ticks,
+        })
+    }
+}
+
+/// Simulate iterations `range` of `kernel` on `d`.
+pub fn simulate(d: &Diagram, kernel: &LoopKernel, range: std::ops::Range<u64>) -> Result<SimResult> {
+    CycleSim::new(d).run(kernel, range)
+}
+
+/// Simulate a whole mapped layer (kernels in sequence, fresh machine each —
+/// matches how [`crate::aidg::fixed_point`] chains per-kernel estimates).
+pub fn simulate_layer(d: &Diagram, kernels: &[LoopKernel]) -> Result<SimResult> {
+    let mut total_cycles = 0;
+    let mut insts = 0;
+    let mut ticks = 0;
+    for k in kernels {
+        let r = simulate(d, k, 0..k.k)?;
+        total_cycles += r.cycles;
+        insts += r.instructions;
+        ticks += r.ticks;
+    }
+    Ok(SimResult { cycles: total_cycles, instructions: insts, ticks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl::Latency;
+    use crate::aidg;
+    use crate::ids::RegId;
+
+    fn machine() -> (Diagram, Ops) {
+        let mut d = Diagram::new("m");
+        let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+        let es = d.add_execute_stage("es");
+        let (rf, regs) = d.add_regfile("rf", "r", 4);
+        let mem = d.add_memory("dmem", 4, 4, 1, 1, 0, 1 << 20);
+        let lsu = d.add_fu(es, "lsu", Latency::Fixed(1), &["load", "store"]);
+        let alu = d.add_fu(es, "alu", Latency::Fixed(1), &["mac"]);
+        d.forward(ifs, es);
+        d.fu_writes(lsu, rf);
+        d.fu_reads(lsu, rf);
+        d.fu_reads(alu, rf);
+        d.fu_writes(alu, rf);
+        d.mem_reads(lsu, mem);
+        d.mem_writes(lsu, mem);
+        let ops = Ops { load: d.op("load"), mac: d.op("mac"), store: d.op("store"), regs };
+        d.finalize().unwrap();
+        (d, ops)
+    }
+
+    struct Ops {
+        load: crate::ids::OpId,
+        mac: crate::ids::OpId,
+        store: crate::ids::OpId,
+        regs: Vec<RegId>,
+    }
+
+    fn lk(ops: &Ops, k: u64) -> LoopKernel {
+        let (load, mac, store) = (ops.load, ops.mac, ops.store);
+        let (r0, r1, r2) = (ops.regs[0], ops.regs[1], ops.regs[2]);
+        LoopKernel::new(
+            "t",
+            k,
+            4,
+            Box::new(move |it, buf| {
+                buf.push(Instruction::new(load).writes(&[r0]).read_mem(&[it]));
+                buf.push(Instruction::new(load).writes(&[r1]).read_mem(&[1000 + it]));
+                buf.push(Instruction::new(mac).reads(&[r0, r1]).writes(&[r2]));
+                buf.push(Instruction::new(store).reads(&[r2]).write_mem(&[2000 + it]));
+            }),
+        )
+    }
+
+    #[test]
+    fn des_matches_aidg_whole_graph() {
+        // the repo's central accuracy check: independent DES == AIDG sweep
+        let (d, ops) = machine();
+        for k in [1u64, 2, 8, 64] {
+            let kernel = lk(&ops, k);
+            let aidg = aidg::evaluate_whole(&d, &kernel).unwrap();
+            let des = simulate(&d, &kernel, 0..k).unwrap();
+            assert_eq!(des.cycles, aidg.cycles, "k={k}");
+            assert_eq!(des.instructions, 4 * k);
+        }
+    }
+
+    #[test]
+    fn des_executes_every_instruction() {
+        let (d, ops) = machine();
+        let kernel = lk(&ops, 10);
+        let r = simulate(&d, &kernel, 0..10).unwrap();
+        assert_eq!(r.instructions, 40);
+        assert!(r.ticks > 10);
+    }
+
+    #[test]
+    fn empty_range_is_zero() {
+        let (d, ops) = machine();
+        let kernel = lk(&ops, 4);
+        let r = simulate(&d, &kernel, 0..0).unwrap();
+        assert_eq!(r.cycles, 0);
+        assert_eq!(r.instructions, 0);
+    }
+
+    #[test]
+    fn throughput_scales_with_memory_latency() {
+        let build = |mem_lat: u64| {
+            let mut d = Diagram::new("m");
+            let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+            let es = d.add_execute_stage("es");
+            let (rf, regs) = d.add_regfile("rf", "r", 2);
+            let mem = d.add_memory("dmem", mem_lat, mem_lat, 1, 1, 0, 1 << 20);
+            let lsu = d.add_fu(es, "lsu", Latency::Fixed(1), &["load"]);
+            d.forward(ifs, es);
+            d.fu_writes(lsu, rf);
+            d.mem_reads(lsu, mem);
+            let load = d.op("load");
+            d.finalize().unwrap();
+            let r0 = regs[0];
+            let kernel = LoopKernel::new(
+                "t",
+                32,
+                1,
+                Box::new(move |it, buf| {
+                    buf.push(Instruction::new(load).writes(&[r0]).read_mem(&[it]));
+                }),
+            );
+            simulate(&d, &kernel, 0..32).unwrap().cycles
+        };
+        let fast = build(1);
+        let slow = build(8);
+        assert!(slow > fast + 32, "slow {slow} fast {fast}");
+    }
+}

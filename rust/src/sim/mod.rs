@@ -1,0 +1,7 @@
+//! Cycle-accurate discrete-event simulation over ACADL diagrams — the
+//! repo's ground-truth substitute for the paper's RTL simulators (see
+//! DESIGN.md §3 substitution table).
+
+pub mod cycle;
+
+pub use cycle::{simulate, simulate_layer, CycleSim, SimResult};

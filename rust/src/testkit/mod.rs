@@ -1,0 +1,6 @@
+//! Test utilities: a small deterministic property-testing helper (proptest
+//! is not vendored in this offline image) and shared fixtures.
+
+pub mod prop;
+
+pub use prop::{Prop, Rng};

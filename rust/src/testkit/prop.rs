@@ -1,0 +1,140 @@
+//! Mini property-testing: seeded xorshift64* case generation with
+//! failure-case reporting. Stands in for proptest (not vendored offline);
+//! the API is intentionally tiny — generate random cases, run the property,
+//! report the seed + case index on failure so runs are reproducible.
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.next_u64() % (hi - lo + 1)
+    }
+
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
+        self.range_u64(lo as u64, hi as u64) as u32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range_usize(0, xs.len() - 1)]
+    }
+}
+
+/// Property runner: `Prop::new(seed).cases(n).run(|rng| ...)`.
+pub struct Prop {
+    seed: u64,
+    cases: usize,
+}
+
+impl Prop {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, cases: 64 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run the property for each case; panics with the seed and case index
+    /// on the first failure (the closure should itself assert/panic).
+    pub fn run(&self, mut prop: impl FnMut(&mut Rng)) {
+        for case in 0..self.cases {
+            let mut rng = Rng::new(self.seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15)));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut rng);
+            }));
+            if let Err(e) = result {
+                eprintln!(
+                    "property failed: seed={} case={case} (re-run with Prop::new({}).cases(1))",
+                    self.seed,
+                    self.seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15))
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.range_u64(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        // degenerate range
+        assert_eq!(r.range_u64(5, 5), 5);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn prop_runs_all_cases() {
+        let mut n = 0;
+        Prop::new(1).cases(10).run(|_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn prop_propagates_failure() {
+        Prop::new(1).cases(5).run(|rng| {
+            assert!(rng.range_u64(0, 10) <= 10); // fine
+            panic!("boom");
+        });
+    }
+}

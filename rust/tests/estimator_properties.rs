@@ -1,0 +1,208 @@
+//! Property suites over the estimator stack: fixed-point extrapolation,
+//! streaming-evaluation, mapper, and baseline invariants.
+
+use std::sync::Arc;
+
+use acadl_perf::accel::{
+    Gemmini, GemminiConfig, Plasticine, PlasticineConfig, Systolic, SystolicConfig,
+};
+use acadl_perf::aidg::{estimate_layer, evaluate_whole, Evaluator, FixedPointConfig};
+use acadl_perf::baselines::roofline::{roofline_cycles, LayerFeatures};
+use acadl_perf::dnn::{ActKind, Layer, LayerKind};
+use acadl_perf::mapping::{
+    gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper, Mapper,
+};
+use acadl_perf::testkit::{Prop, Rng};
+
+fn random_layer(rng: &mut Rng) -> Layer {
+    match rng.range_u32(0, 5) {
+        0 => Layer::new(
+            "c1",
+            LayerKind::Conv1d {
+                c_in: rng.range_u32(1, 24),
+                l_in: rng.range_u32(4, 40),
+                c_out: rng.range_u32(1, 24),
+                kernel: rng.range_u32(1, 5),
+                stride: rng.range_u32(1, 2),
+                pad: rng.bool(),
+            },
+        ),
+        1 => Layer::new(
+            "c2",
+            LayerKind::Conv2d {
+                c_in: rng.range_u32(1, 8),
+                h: rng.range_u32(4, 12),
+                w: rng.range_u32(4, 12),
+                c_out: rng.range_u32(1, 12),
+                kh: rng.range_u32(1, 3),
+                kw: rng.range_u32(1, 3),
+                stride: 1,
+                pad: rng.bool(),
+            },
+        ),
+        2 => Layer::new(
+            "fc",
+            LayerKind::Dense { c_in: rng.range_u32(1, 64), c_out: rng.range_u32(1, 32) },
+        ),
+        3 => Layer::new(
+            "act",
+            LayerKind::Act {
+                kind: if rng.bool() { ActKind::Relu } else { ActKind::Clip },
+                c: rng.range_u32(1, 32),
+                spatial: rng.range_u32(1, 64),
+            },
+        ),
+        4 => Layer::new(
+            "add",
+            LayerKind::Add { c: rng.range_u32(1, 32), spatial: rng.range_u32(1, 64) },
+        ),
+        _ => Layer::new(
+            "dw",
+            LayerKind::DwConv2d {
+                c: rng.range_u32(1, 12),
+                h: rng.range_u32(4, 10),
+                w: rng.range_u32(4, 10),
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: true,
+            },
+        ),
+    }
+}
+
+/// Every instruction every mapper emits must route through its diagram,
+/// with the declared constant per-iteration instruction count.
+#[test]
+fn property_mapped_instructions_route() {
+    let sys = ScalarMapper::new(Arc::new(Systolic::new(SystolicConfig::new(3, 4)).unwrap()));
+    let gem = GemmTileMapper::new(Arc::new(Gemmini::new(GemminiConfig::default()).unwrap()));
+    let pls =
+        PlasticineMapper::new(Arc::new(Plasticine::new(PlasticineConfig::new(2, 3, 8)).unwrap()));
+    let mappers: [&dyn Mapper; 3] = [&sys, &gem, &pls];
+    Prop::new(0x11AD).cases(30).run(|rng| {
+        let layer = random_layer(rng);
+        for mapper in mappers {
+            let Ok(ml) = mapper.map_layer(&layer) else { continue };
+            for k in &ml.kernels {
+                assert!(k.k >= 1, "{}: empty kernel", k.label);
+                // sample iterations incl. first and last
+                for it in [0, k.k / 2, k.k - 1] {
+                    let mut buf = Vec::new();
+                    k.emit(it, &mut buf);
+                    assert_eq!(buf.len(), k.insts_per_iter, "{} iter {it}", k.label);
+                    for i in &buf {
+                        mapper.diagram().route(i).unwrap_or_else(|e| {
+                            panic!("{} iter {it}: {e}", k.label);
+                        });
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Chunked streaming evaluation must be bit-identical to one pass, at
+/// arbitrary chunk boundaries.
+#[test]
+fn property_chunked_evaluation_identical() {
+    let sys = Arc::new(Systolic::new(SystolicConfig::new(2, 3)).unwrap());
+    let mapper = ScalarMapper::new(sys);
+    Prop::new(0xC41C).cases(20).run(|rng| {
+        let layer = random_layer(rng);
+        let Ok(ml) = mapper.map_layer(&layer) else { return };
+        let Some(kern) = ml.kernels.last() else { return };
+        let k = kern.k.min(60);
+        let mut whole = Evaluator::new(mapper.diagram());
+        whole.run(kern, 0..k).unwrap();
+        let mut chunked = Evaluator::new(mapper.diagram());
+        let mut at = 0;
+        while at < k {
+            let step = rng.range_u64(1, 7).min(k - at);
+            chunked.run(kern, at..at + step).unwrap();
+            at += step;
+        }
+        assert_eq!(whole.iter_stats, chunked.iter_stats, "{}", kern.label);
+    });
+}
+
+/// The fixed-point estimate stays within the fallback accuracy envelope of
+/// the whole-graph evaluation on random layers.
+#[test]
+fn property_fixed_point_accuracy_envelope() {
+    let sys = Arc::new(Systolic::new(SystolicConfig::new(4, 4)).unwrap());
+    let mapper = ScalarMapper::new(sys);
+    Prop::new(0xF1F0).cases(20).run(|rng| {
+        let layer = random_layer(rng);
+        let Ok(ml) = mapper.map_layer(&layer) else { return };
+        for kern in &ml.kernels {
+            if kern.total_insts() > 200_000 {
+                continue;
+            }
+            let e = estimate_layer(mapper.diagram(), kern, &FixedPointConfig::default()).unwrap();
+            let w = evaluate_whole(mapper.diagram(), kern).unwrap();
+            assert!(e.evaluated_iters <= w.k);
+            let err = (e.cycles as f64 - w.cycles as f64).abs() / w.cycles.max(1) as f64;
+            assert!(err < 0.15, "{}: {} vs {} ({err:.4})", kern.label, e.cycles, w.cycles);
+            if e.whole_graph {
+                assert_eq!(e.cycles, w.cycles, "{}", kern.label);
+            }
+        }
+    });
+}
+
+/// eq. 2 linearity: doubling k adds exactly (k·stride) cycles once the
+/// iteration latency stabilized.
+#[test]
+fn property_estimate_linear_in_k() {
+    let sys = Arc::new(Systolic::new(SystolicConfig::new(2, 2)).unwrap());
+    let mapper = ScalarMapper::new(sys);
+    Prop::new(0x11EA).cases(12).run(|rng| {
+        let c = rng.range_u32(2, 8) * 2;
+        let k_out = rng.range_u32(2, 8) * 2;
+        let mk = |l: u32| {
+            Layer::new(
+                "c",
+                LayerKind::Conv1d { c_in: c, l_in: l, c_out: k_out, kernel: 3, stride: 1, pad: true },
+            )
+        };
+        let m1 = mapper.map_layer(&mk(64)).unwrap();
+        let m2 = mapper.map_layer(&mk(128)).unwrap();
+        let e1 =
+            estimate_layer(mapper.diagram(), &m1.kernels[1], &FixedPointConfig::default()).unwrap();
+        let e2 =
+            estimate_layer(mapper.diagram(), &m2.kernels[1], &FixedPointConfig::default()).unwrap();
+        if e1.used_fallback || e2.used_fallback {
+            return; // linearity asserted only for stabilized estimates
+        }
+        let stride1 = e1.dt_iteration as i64 - e1.dt_overlap;
+        let extra = (m2.kernels[1].k - m1.kernels[1].k) as i64;
+        assert_eq!(e2.cycles as i64 - e1.cycles as i64, extra * stride1);
+    });
+}
+
+/// Roofline sanity: non-negative, monotone in port width, decreasing with
+/// more parallelism.
+#[test]
+fn property_roofline_monotonicity() {
+    Prop::new(0x800F).cases(50).run(|rng| {
+        let lf = LayerFeatures {
+            macs: rng.range_u64(1, 1 << 20) as f64,
+            in_words: rng.range_u64(1, 1 << 14) as f64,
+            w_words: rng.range_u64(1, 1 << 14) as f64,
+            out_words: rng.range_u64(1, 1 << 12) as f64,
+            ur_c: rng.range_u64(1, 16) as f64,
+            ur_k: rng.range_u64(1, 16) as f64,
+            k_iters: rng.range_u64(1, 1 << 12) as f64,
+        };
+        let base: [f64; 8] =
+            [16.0, 16.0, 4.0, rng.range_u64(1, 8) as f64, rng.range_u64(1, 8) as f64, 1.0, 0.0, 0.0];
+        let c0 = roofline_cycles(&lf, &base);
+        assert!(c0 > 0.0);
+        let mut wider = base;
+        wider[2] = 8.0;
+        assert!(roofline_cycles(&lf, &wider) <= c0, "wider port must not slow down");
+        let more_ur = LayerFeatures { ur_c: lf.ur_c * 2.0, ur_k: lf.ur_k, ..lf };
+        assert!(roofline_cycles(&more_ur, &base) <= c0, "more parallelism must not slow down");
+    });
+}
