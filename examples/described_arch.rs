@@ -1,0 +1,49 @@
+//! Described architectures: estimate TC-ResNet8 on a systolic array loaded
+//! from a textual ACADL description, and show it is cycle-identical to the
+//! hand-built builder.
+//!
+//! ```text
+//! cargo run --release --example described_arch
+//! ```
+
+use acadl_perf::accel::SystolicConfig;
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{estimate_network, Arch, DescribedArch};
+use acadl_perf::dnn::zoo;
+use acadl_perf::report::fmt_cycles;
+use acadl_perf::Result;
+
+fn main() -> Result<()> {
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+
+    // 1. The textual description: parsed, validated, compiled to an ACADL
+    //    object diagram, and bound to the scalar mapper family. Compiled
+    //    models are cached by content, so re-running a request against an
+    //    unchanged file never recompiles it.
+    let described = Arch::Described(DescribedArch::file("arch/systolic_16x16.toml"));
+    let dm = described.mapper()?;
+    let de = estimate_network(dm.as_ref(), &net, &fp)?;
+
+    // 2. The same architecture from the hardcoded Rust builder.
+    let hand = Arch::Systolic(SystolicConfig::new(16, 16));
+    let hm = hand.mapper()?;
+    let he = estimate_network(hm.as_ref(), &net, &fp)?;
+
+    println!("TC-ResNet8 on {}:", de.arch);
+    println!(
+        "  described  (arch/systolic_16x16.toml): {:>14} cycles  ({} of {} iterations evaluated)",
+        fmt_cycles(de.total_cycles()),
+        de.evaluated_iters(),
+        de.total_iters(),
+    );
+    println!(
+        "  hand-built (accel::Systolic)         : {:>14} cycles  ({} of {} iterations evaluated)",
+        fmt_cycles(he.total_cycles()),
+        he.evaluated_iters(),
+        he.total_iters(),
+    );
+    assert_eq!(de.total_cycles(), he.total_cycles(), "estimates must be cycle-identical");
+    println!("  => cycle-identical");
+    Ok(())
+}

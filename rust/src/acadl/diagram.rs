@@ -153,6 +153,47 @@ impl Diagram {
         self.regs.name(r.0)
     }
 
+    /// Look up an already-interned register by name (used to rebind
+    /// description-compiled diagrams to mapper handles).
+    pub fn lookup_reg(&self, name: &str) -> Option<RegId> {
+        self.regs.get(name).map(RegId)
+    }
+
+    /// Look up an object by name (first match; names are unique in
+    /// builder- and description-compiled diagrams).
+    pub fn lookup_object(&self, name: &str) -> Option<ObjId> {
+        self.objects
+            .iter()
+            .position(|o| o.name == name)
+            .map(|i| ObjId(i as u32))
+    }
+
+    // Binder-friendly lookups: the `accel::*::from_described` constructors
+    // resolve their mapper handles through these, so missing-name errors
+    // read uniformly (`what` names the diagram being bound).
+
+    /// [`lookup_op`](Self::lookup_op), erroring when absent.
+    pub fn require_op(&self, name: &str, what: &str) -> Result<OpId> {
+        self.lookup_op(name).with_context(|| format!("{what} has no op `{name}`"))
+    }
+
+    /// [`lookup_reg`](Self::lookup_reg), erroring when absent.
+    pub fn require_reg(&self, name: &str, what: &str) -> Result<RegId> {
+        self.lookup_reg(name).with_context(|| format!("{what} has no register `{name}`"))
+    }
+
+    /// [`lookup_object`](Self::lookup_object) restricted to memories,
+    /// erroring when absent or of the wrong kind.
+    pub fn require_memory(&self, name: &str, what: &str) -> Result<ObjId> {
+        let id = self
+            .lookup_object(name)
+            .with_context(|| format!("{what} has no memory `{name}`"))?;
+        if !self.objects[id.idx()].is_memory() {
+            bail!("{what}: object `{name}` must be a memory");
+        }
+        Ok(id)
+    }
+
     // ---- object construction --------------------------------------------
 
     fn push(&mut self, name: &str, kind: ObjectKind) -> ObjId {

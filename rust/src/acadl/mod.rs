@@ -12,6 +12,7 @@
 pub mod diagram;
 pub mod latency;
 pub mod object;
+pub mod text;
 
 pub use diagram::{Diagram, FetchConfig, Route};
 pub use latency::{Expr, Latency};

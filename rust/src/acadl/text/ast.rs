@@ -1,0 +1,674 @@
+//! AST of the textual ACADL description language.
+//!
+//! A description is a TOML-flavored document (see `arch/README.md`) whose
+//! declarations may be *templates*: replicated over integer index ranges
+//! (`foreach`), filtered by guards (`when`), with `${expr}` interpolation in
+//! names and latency strings. [`PExpr`] is the integer expression language of
+//! parameters, loop indices, and the per-declaration ordinal `idx`;
+//! instruction-immediates (`immN`) never appear here — they stay inside
+//! latency strings and are parsed by [`crate::acadl::latency::Expr`] after
+//! `${}` substitution.
+//!
+//! Every node that can produce a diagnostic carries a [`Span`]. Spans are
+//! deliberately **ignored by equality** (`Span::eq` is always true) so the
+//! pretty-print → parse round-trip property can compare whole ASTs
+//! structurally.
+
+use std::fmt::{self, Write as _};
+
+/// A source position (1-based line and column). Equality is vacuous: two
+/// spans always compare equal so AST comparisons ignore positions.
+#[derive(Debug, Clone, Copy, Default, Eq)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl PartialEq for Span {
+    fn eq(&self, _other: &Self) -> bool {
+        true
+    }
+}
+
+impl Span {
+    pub fn new(line: u32, col: u32) -> Self {
+        Self { line, col }
+    }
+}
+
+impl fmt::Display for Span {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// A value plus the source span it came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spanned<T> {
+    pub node: T,
+    pub span: Span,
+}
+
+impl<T> Spanned<T> {
+    pub fn new(node: T, span: Span) -> Self {
+        Self { node, span }
+    }
+
+    /// Span-less wrapper (used by generators and tests).
+    pub fn bare(node: T) -> Self {
+        Self { node, span: Span::default() }
+    }
+}
+
+/// Binary operators of the parameter expression language.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+        }
+    }
+
+    /// Binding strength (higher binds tighter).
+    fn precedence(self) -> u8 {
+        match self {
+            BinOp::Or => 1,
+            BinOp::And => 2,
+            BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge => 3,
+            BinOp::Add | BinOp::Sub => 4,
+            BinOp::Mul | BinOp::Div | BinOp::Rem => 5,
+        }
+    }
+}
+
+/// Two-argument builtin functions (same set as the latency language).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Func {
+    Cdiv,
+    Max,
+    Min,
+}
+
+impl Func {
+    pub fn name(self) -> &'static str {
+        match self {
+            Func::Cdiv => "cdiv",
+            Func::Max => "max",
+            Func::Min => "min",
+        }
+    }
+}
+
+/// Integer parameter expression: constants, parameter/loop-variable
+/// references, arithmetic, comparisons (0/1), and `cdiv`/`max`/`min`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PExpr {
+    Const(i64),
+    Var(String),
+    Neg(Box<PExpr>),
+    Bin(BinOp, Box<PExpr>, Box<PExpr>),
+    Call(Func, Box<PExpr>, Box<PExpr>),
+}
+
+impl PExpr {
+    /// Evaluate against a variable-lookup function. Division-family
+    /// operators error on a zero divisor (a description bug, unlike the
+    /// latency language's saturating semantics).
+    pub fn eval(&self, lookup: &dyn Fn(&str) -> Option<i64>) -> Result<i64, String> {
+        match self {
+            PExpr::Const(v) => Ok(*v),
+            PExpr::Var(name) => {
+                lookup(name).ok_or_else(|| format!("unknown parameter `{name}`"))
+            }
+            PExpr::Neg(a) => Ok(a.eval(lookup)?.wrapping_neg()),
+            PExpr::Bin(op, a, b) => {
+                let (x, y) = (a.eval(lookup)?, b.eval(lookup)?);
+                Ok(match op {
+                    BinOp::Add => x.wrapping_add(y),
+                    BinOp::Sub => x.wrapping_sub(y),
+                    BinOp::Mul => x.wrapping_mul(y),
+                    BinOp::Div => {
+                        if y == 0 {
+                            return Err("division by zero".into());
+                        }
+                        x.div_euclid(y)
+                    }
+                    BinOp::Rem => {
+                        if y == 0 {
+                            return Err("remainder by zero".into());
+                        }
+                        x.rem_euclid(y)
+                    }
+                    BinOp::Eq => i64::from(x == y),
+                    BinOp::Ne => i64::from(x != y),
+                    BinOp::Lt => i64::from(x < y),
+                    BinOp::Le => i64::from(x <= y),
+                    BinOp::Gt => i64::from(x > y),
+                    BinOp::Ge => i64::from(x >= y),
+                    BinOp::And => i64::from(x != 0 && y != 0),
+                    BinOp::Or => i64::from(x != 0 || y != 0),
+                })
+            }
+            PExpr::Call(f, a, b) => {
+                let (x, y) = (a.eval(lookup)?, b.eval(lookup)?);
+                Ok(match f {
+                    Func::Cdiv => {
+                        if y == 0 {
+                            return Err("cdiv by zero".into());
+                        }
+                        // widen: x + y - 1 can overflow i64 (the other
+                        // operators wrap; stay consistent on the way back)
+                        ((x as i128 + y as i128 - 1).div_euclid(y as i128)) as i64
+                    }
+                    Func::Max => x.max(y),
+                    Func::Min => x.min(y),
+                })
+            }
+        }
+    }
+
+    /// Canonical printing with minimal parentheses; reparsing the output
+    /// yields a structurally identical tree.
+    fn print(&self, out: &mut String, parent_prec: u8) {
+        match self {
+            PExpr::Const(v) => {
+                let _ = write!(out, "{v}");
+            }
+            PExpr::Var(name) => out.push_str(name),
+            PExpr::Neg(a) => {
+                if parent_prec > 6 {
+                    out.push('(');
+                    out.push('-');
+                    a.print(out, 6);
+                    out.push(')');
+                } else {
+                    out.push('-');
+                    a.print(out, 6);
+                }
+            }
+            PExpr::Bin(op, a, b) => {
+                let p = op.precedence();
+                let parens = parent_prec > p;
+                if parens {
+                    out.push('(');
+                }
+                // comparisons are non-associative in the grammar (at most
+                // one per level), so both children must bind strictly
+                // tighter; other operators are left-associative and only
+                // need that on the right.
+                let is_cmp = matches!(
+                    op,
+                    BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge
+                );
+                a.print(out, if is_cmp { p + 1 } else { p });
+                let _ = write!(out, " {} ", op.symbol());
+                b.print(out, p + 1);
+                if parens {
+                    out.push(')');
+                }
+            }
+            PExpr::Call(f, a, b) => {
+                out.push_str(f.name());
+                out.push('(');
+                a.print(out, 0);
+                out.push_str(", ");
+                b.print(out, 0);
+                out.push(')');
+            }
+        }
+    }
+}
+
+impl fmt::Display for PExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.print(&mut s, 0);
+        f.write_str(&s)
+    }
+}
+
+/// One segment of an interpolated string.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Segment {
+    Lit(String),
+    Expr(PExpr),
+}
+
+/// An interpolated string: literal text with `${expr}` holes. Used for
+/// object names and latency strings (where the substituted result is parsed
+/// by the latency language).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Template {
+    pub segments: Vec<Segment>,
+    pub span: Span,
+}
+
+impl Template {
+    pub fn lit(text: impl Into<String>) -> Self {
+        let text = text.into();
+        let segments = if text.is_empty() { Vec::new() } else { vec![Segment::Lit(text)] };
+        Self { segments, span: Span::default() }
+    }
+
+    /// True if the template has no `${}` holes.
+    pub fn is_literal(&self) -> bool {
+        self.segments.iter().all(|s| matches!(s, Segment::Lit(_)))
+    }
+
+    /// Render with `${expr}` holes evaluated through `lookup`.
+    pub fn render(&self, lookup: &dyn Fn(&str) -> Option<i64>) -> Result<String, String> {
+        let mut out = String::new();
+        for seg in &self.segments {
+            match seg {
+                Segment::Lit(s) => out.push_str(s),
+                Segment::Expr(e) => {
+                    let _ = write!(out, "{}", e.eval(lookup)?);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical source form (unquoted, `${}`-interpolated).
+    pub fn source(&self) -> String {
+        let mut out = String::new();
+        for seg in &self.segments {
+            match seg {
+                Segment::Lit(s) => out.push_str(s),
+                Segment::Expr(e) => {
+                    let _ = write!(out, "${{{e}}}");
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One `var in lo..hi` range of a `foreach` clause (half-open).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForRange {
+    pub var: Spanned<String>,
+    pub lo: Spanned<PExpr>,
+    pub hi: Spanned<PExpr>,
+}
+
+/// The fetch front-end section (`[fetch]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fetch {
+    pub imem: Template,
+    pub imem_read_latency: Spanned<PExpr>,
+    pub imem_port_width: Spanned<PExpr>,
+    pub ifs: Template,
+    pub ifs_latency: Spanned<PExpr>,
+    pub issue_buffer: Spanned<PExpr>,
+    pub span: Span,
+}
+
+/// A replicable declaration: the body plus its `foreach`/`when` clauses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decl {
+    pub body: DeclBody,
+    pub foreach: Vec<ForRange>,
+    pub when: Option<Spanned<PExpr>>,
+    pub span: Span,
+}
+
+/// The body of one declaration (object or association edge).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeclBody {
+    Stage {
+        name: Template,
+        latency: Template,
+    },
+    ExecuteStage {
+        name: Template,
+    },
+    FunctionalUnit {
+        name: Template,
+        /// Containing execute stage (optional here; may instead come from an
+        /// explicit `[[contains]]` edge).
+        container: Option<Template>,
+        latency: Template,
+        ops: Vec<Spanned<String>>,
+    },
+    RegisterFile {
+        name: Template,
+        prefix: Template,
+        count: Spanned<PExpr>,
+    },
+    Memory {
+        name: Template,
+        read_latency: Template,
+        write_latency: Template,
+        port_width: Spanned<PExpr>,
+        max_concurrent: Spanned<PExpr>,
+        base: Spanned<PExpr>,
+        words: Spanned<PExpr>,
+    },
+    Forward {
+        from: Template,
+        to: Template,
+    },
+    Contains {
+        parent: Template,
+        child: Template,
+    },
+    Reads {
+        fu: Template,
+        rf: Template,
+    },
+    Writes {
+        fu: Template,
+        rf: Template,
+    },
+    MemRead {
+        fu: Template,
+        mem: Template,
+    },
+    MemWrite {
+        fu: Template,
+        mem: Template,
+    },
+}
+
+impl DeclBody {
+    /// The `[[section]]` name of this declaration kind.
+    pub fn section(&self) -> &'static str {
+        match self {
+            DeclBody::Stage { .. } => "stage",
+            DeclBody::ExecuteStage { .. } => "execute_stage",
+            DeclBody::FunctionalUnit { .. } => "functional_unit",
+            DeclBody::RegisterFile { .. } => "register_file",
+            DeclBody::Memory { .. } => "memory",
+            DeclBody::Forward { .. } => "forward",
+            DeclBody::Contains { .. } => "contains",
+            DeclBody::Reads { .. } => "reads",
+            DeclBody::Writes { .. } => "writes",
+            DeclBody::MemRead { .. } => "mem_read",
+            DeclBody::MemWrite { .. } => "mem_write",
+        }
+    }
+}
+
+/// One `name = value` parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: Spanned<String>,
+    pub value: Spanned<i64>,
+}
+
+/// A parsed architecture description (template form; see
+/// [`crate::acadl::text::compile::expand`] for the flattened form).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Description {
+    /// Architecture name template (`[arch] name = "..."`).
+    pub name: Option<Template>,
+    /// `[params]` in declaration order.
+    pub params: Vec<Param>,
+    /// `[isa] ops = [...]`: the declared instruction set. `None` when the
+    /// section is absent (op checking is then skipped).
+    pub isa: Option<Vec<Spanned<String>>>,
+    /// `[fetch]` front-end.
+    pub fetch: Option<Fetch>,
+    /// `[mapper] family = "..."`.
+    pub mapper: Option<Spanned<String>>,
+    /// Object and edge declarations in file order.
+    pub decls: Vec<Decl>,
+}
+
+impl Description {
+    /// Canonical TOML pretty-printer. The output reparses to an AST equal to
+    /// `self` (spans excepted — they compare vacuously).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        if let Some(name) = &self.name {
+            let _ = writeln!(out, "[arch]");
+            let _ = writeln!(out, "name = {}", quote(&name.source()));
+            out.push('\n');
+        }
+        if !self.params.is_empty() {
+            let _ = writeln!(out, "[params]");
+            for p in &self.params {
+                let _ = writeln!(out, "{} = {}", p.name.node, p.value.node);
+            }
+            out.push('\n');
+        }
+        if let Some(isa) = &self.isa {
+            let _ = writeln!(out, "[isa]");
+            let _ = writeln!(out, "ops = {}", quote_list(isa));
+            out.push('\n');
+        }
+        if let Some(f) = &self.fetch {
+            let _ = writeln!(out, "[fetch]");
+            let _ = writeln!(out, "imem = {}", quote(&f.imem.source()));
+            let _ = writeln!(out, "imem_read_latency = {}", pexpr_value(&f.imem_read_latency.node));
+            let _ = writeln!(out, "imem_port_width = {}", pexpr_value(&f.imem_port_width.node));
+            let _ = writeln!(out, "ifs = {}", quote(&f.ifs.source()));
+            let _ = writeln!(out, "ifs_latency = {}", pexpr_value(&f.ifs_latency.node));
+            let _ = writeln!(out, "issue_buffer = {}", pexpr_value(&f.issue_buffer.node));
+            out.push('\n');
+        }
+        if let Some(m) = &self.mapper {
+            let _ = writeln!(out, "[mapper]");
+            let _ = writeln!(out, "family = {}", quote(&m.node));
+            out.push('\n');
+        }
+        for d in &self.decls {
+            let _ = writeln!(out, "[[{}]]", d.body.section());
+            match &d.body {
+                DeclBody::Stage { name, latency } => {
+                    let _ = writeln!(out, "name = {}", quote(&name.source()));
+                    let _ = writeln!(out, "latency = {}", quote(&latency.source()));
+                }
+                DeclBody::ExecuteStage { name } => {
+                    let _ = writeln!(out, "name = {}", quote(&name.source()));
+                }
+                DeclBody::FunctionalUnit { name, container, latency, ops } => {
+                    let _ = writeln!(out, "name = {}", quote(&name.source()));
+                    if let Some(c) = container {
+                        let _ = writeln!(out, "in = {}", quote(&c.source()));
+                    }
+                    let _ = writeln!(out, "latency = {}", quote(&latency.source()));
+                    let _ = writeln!(out, "ops = {}", quote_list(ops));
+                }
+                DeclBody::RegisterFile { name, prefix, count } => {
+                    let _ = writeln!(out, "name = {}", quote(&name.source()));
+                    let _ = writeln!(out, "prefix = {}", quote(&prefix.source()));
+                    let _ = writeln!(out, "count = {}", pexpr_value(&count.node));
+                }
+                DeclBody::Memory {
+                    name,
+                    read_latency,
+                    write_latency,
+                    port_width,
+                    max_concurrent,
+                    base,
+                    words,
+                } => {
+                    let _ = writeln!(out, "name = {}", quote(&name.source()));
+                    let _ = writeln!(out, "read_latency = {}", quote(&read_latency.source()));
+                    let _ = writeln!(out, "write_latency = {}", quote(&write_latency.source()));
+                    let _ = writeln!(out, "port_width = {}", pexpr_value(&port_width.node));
+                    let _ = writeln!(out, "max_concurrent = {}", pexpr_value(&max_concurrent.node));
+                    let _ = writeln!(out, "base = {}", pexpr_value(&base.node));
+                    let _ = writeln!(out, "words = {}", pexpr_value(&words.node));
+                }
+                DeclBody::Forward { from, to } => {
+                    let _ = writeln!(out, "from = {}", quote(&from.source()));
+                    let _ = writeln!(out, "to = {}", quote(&to.source()));
+                }
+                DeclBody::Contains { parent, child } => {
+                    let _ = writeln!(out, "parent = {}", quote(&parent.source()));
+                    let _ = writeln!(out, "child = {}", quote(&child.source()));
+                }
+                DeclBody::Reads { fu, rf } | DeclBody::Writes { fu, rf } => {
+                    let _ = writeln!(out, "fu = {}", quote(&fu.source()));
+                    let _ = writeln!(out, "rf = {}", quote(&rf.source()));
+                }
+                DeclBody::MemRead { fu, mem } | DeclBody::MemWrite { fu, mem } => {
+                    let _ = writeln!(out, "fu = {}", quote(&fu.source()));
+                    let _ = writeln!(out, "mem = {}", quote(&mem.source()));
+                }
+            }
+            if !d.foreach.is_empty() {
+                let ranges: Vec<String> = d
+                    .foreach
+                    .iter()
+                    .map(|r| format!("{} in {}..{}", r.var.node, r.lo.node, r.hi.node))
+                    .collect();
+                let _ = writeln!(out, "foreach = {}", quote(&ranges.join(", ")));
+            }
+            if let Some(w) = &d.when {
+                let _ = writeln!(out, "when = {}", quote(&w.node.to_string()));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Print a `PExpr` as a TOML value: bare integer for constants, quoted
+/// expression string otherwise.
+fn pexpr_value(e: &PExpr) -> String {
+    match e {
+        PExpr::Const(v) => v.to_string(),
+        other => quote(&other.to_string()),
+    }
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn quote_list(items: &[Spanned<String>]) -> String {
+    let quoted: Vec<String> = items.iter().map(|s| quote(&s.node)).collect();
+    format!("[{}]", quoted.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lookup_none(_: &str) -> Option<i64> {
+        None
+    }
+
+    #[test]
+    fn pexpr_eval_arithmetic_and_compare() {
+        let vars = |name: &str| match name {
+            "r" => Some(3i64),
+            "c" => Some(5),
+            _ => None,
+        };
+        let e = PExpr::Bin(
+            BinOp::Add,
+            Box::new(PExpr::Var("r".into())),
+            Box::new(PExpr::Bin(
+                BinOp::Mul,
+                Box::new(PExpr::Const(2)),
+                Box::new(PExpr::Var("c".into())),
+            )),
+        );
+        assert_eq!(e.eval(&vars).unwrap(), 13);
+        let cmp = PExpr::Bin(
+            BinOp::Eq,
+            Box::new(PExpr::Bin(
+                BinOp::Rem,
+                Box::new(PExpr::Var("r".into())),
+                Box::new(PExpr::Const(2)),
+            )),
+            Box::new(PExpr::Const(1)),
+        );
+        assert_eq!(cmp.eval(&vars).unwrap(), 1);
+    }
+
+    #[test]
+    fn pexpr_division_by_zero_errors() {
+        let e = PExpr::Bin(
+            BinOp::Div,
+            Box::new(PExpr::Const(4)),
+            Box::new(PExpr::Const(0)),
+        );
+        assert!(e.eval(&lookup_none).is_err());
+        let e = PExpr::Call(
+            Func::Cdiv,
+            Box::new(PExpr::Const(4)),
+            Box::new(PExpr::Const(0)),
+        );
+        assert!(e.eval(&lookup_none).is_err());
+    }
+
+    #[test]
+    fn pexpr_unknown_var_errors() {
+        assert!(PExpr::Var("nope".into()).eval(&lookup_none).is_err());
+    }
+
+    #[test]
+    fn template_renders_holes() {
+        let t = Template {
+            segments: vec![
+                Segment::Lit("pe[".into()),
+                Segment::Expr(PExpr::Var("r".into())),
+                Segment::Lit("][".into()),
+                Segment::Expr(PExpr::Bin(
+                    BinOp::Add,
+                    Box::new(PExpr::Var("c".into())),
+                    Box::new(PExpr::Const(1)),
+                )),
+                Segment::Lit("]".into()),
+            ],
+            span: Span::default(),
+        };
+        let vars = |name: &str| match name {
+            "r" => Some(2i64),
+            "c" => Some(0),
+            _ => None,
+        };
+        assert_eq!(t.render(&vars).unwrap(), "pe[2][1]");
+        assert_eq!(t.source(), "pe[${r}][${c + 1}]");
+    }
+
+    #[test]
+    fn spans_compare_vacuously() {
+        assert_eq!(Span::new(1, 2), Span::new(9, 9));
+        assert_eq!(Spanned::new(5, Span::new(1, 1)), Spanned::bare(5));
+    }
+}

@@ -1,0 +1,828 @@
+//! Expansion and compilation: template AST → [`Flat`] instance list →
+//! [`crate::acadl::Diagram`] → [`CompiledModel`] (diagram bound to a mapper
+//! family so described architectures drop into the existing estimation
+//! stack).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use anyhow::{bail, Context as _};
+
+use crate::acadl::latency::Latency;
+use crate::acadl::Diagram;
+use crate::accel::{
+    Gemmini, GemminiConfig, Plasticine, PlasticineConfig, Systolic, SystolicConfig, UltraTrail,
+    UltraTrailConfig,
+};
+use crate::ids::ObjId;
+use crate::mapping::{
+    gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper,
+    tensor_op::TensorOpMapper, Mapper,
+};
+use crate::Result;
+
+use super::ast::{Decl, DeclBody, Description, Span, Spanned, Template};
+use super::validate::validate;
+use super::{parse, Diagnostic};
+
+/// Replication safety cap: instances per declaration.
+const MAX_INSTANCES_PER_DECL: usize = 1 << 20;
+
+/// A fully expanded description: concrete objects and edges, no templates.
+#[derive(Debug, Clone, Default)]
+pub struct Flat {
+    pub name: String,
+    pub params: BTreeMap<String, i64>,
+    pub isa: Option<Vec<Spanned<String>>>,
+    pub mapper: Option<Spanned<String>>,
+    pub fetch: Option<FlatFetch>,
+    pub objects: Vec<FlatObject>,
+    pub edges: Vec<FlatEdge>,
+}
+
+#[derive(Debug, Clone)]
+pub struct FlatFetch {
+    pub imem: String,
+    pub read_latency: i64,
+    pub port_width: i64,
+    pub ifs: String,
+    pub ifs_latency: i64,
+    pub issue_buffer: i64,
+    pub span: Span,
+}
+
+#[derive(Debug, Clone)]
+pub struct FlatObject {
+    pub name: Spanned<String>,
+    pub kind: FlatObjKind,
+}
+
+#[derive(Debug, Clone)]
+pub enum FlatObjKind {
+    Stage {
+        latency: Latency,
+    },
+    ExecuteStage,
+    FunctionalUnit {
+        container: Option<Spanned<String>>,
+        latency: Latency,
+        ops: Vec<Spanned<String>>,
+    },
+    RegisterFile {
+        prefix: String,
+        count: i64,
+    },
+    Memory {
+        read_latency: Latency,
+        write_latency: Latency,
+        port_width: i64,
+        max_concurrent: i64,
+        base: i64,
+        words: i64,
+    },
+}
+
+impl FlatObjKind {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            FlatObjKind::Stage { .. } => "pipeline stage",
+            FlatObjKind::ExecuteStage => "execute stage",
+            FlatObjKind::FunctionalUnit { .. } => "functional unit",
+            FlatObjKind::RegisterFile { .. } => "register file",
+            FlatObjKind::Memory { .. } => "memory",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    Forward,
+    Contains,
+    Reads,
+    Writes,
+    MemRead,
+    MemWrite,
+}
+
+#[derive(Debug, Clone)]
+pub struct FlatEdge {
+    pub kind: EdgeKind,
+    /// Source / container / functional-unit endpoint.
+    pub a: Spanned<String>,
+    /// Target / contained / storage endpoint.
+    pub b: Spanned<String>,
+}
+
+// ---- expansion -------------------------------------------------------------
+
+/// Expand `foreach`/`when`/`${}` templates into a [`Flat`] description.
+/// Collects diagnostics instead of failing fast; on errors the returned
+/// `Flat` is best-effort (do not compile it).
+pub fn expand(desc: &Description) -> (Flat, Vec<Diagnostic>) {
+    let mut flat = Flat::default();
+    let mut diags = Vec::new();
+
+    for p in &desc.params {
+        if flat.params.insert(p.name.node.clone(), p.value.node).is_some() {
+            diags.push(Diagnostic::error(
+                p.name.span,
+                format!("duplicate parameter `{}`", p.name.node),
+            ));
+        }
+    }
+    flat.isa = desc.isa.clone();
+    flat.mapper = desc.mapper.clone();
+
+    let params = flat.params.clone();
+    let env0 = Env { params: &params, vars: Vec::new(), idx: 0 };
+
+    match &desc.name {
+        Some(t) => match render(t, &env0) {
+            Ok(n) => flat.name = n,
+            Err(d) => diags.push(d),
+        },
+        None => {
+            diags.push(Diagnostic::error(
+                Span::default(),
+                "missing [arch] section with `name = \"...\"`",
+            ));
+            flat.name = "described".into();
+        }
+    }
+
+    if let Some(f) = &desc.fetch {
+        let fetch = (|| -> std::result::Result<FlatFetch, Diagnostic> {
+            Ok(FlatFetch {
+                imem: render(&f.imem, &env0)?,
+                read_latency: eval(&f.imem_read_latency, &env0)?,
+                port_width: eval(&f.imem_port_width, &env0)?,
+                ifs: render(&f.ifs, &env0)?,
+                ifs_latency: eval(&f.ifs_latency, &env0)?,
+                issue_buffer: eval(&f.issue_buffer, &env0)?,
+                span: f.span,
+            })
+        })();
+        match fetch {
+            Ok(fc) => flat.fetch = Some(fc),
+            Err(d) => diags.push(d),
+        }
+    }
+
+    for decl in &desc.decls {
+        expand_decl(decl, &params, &mut flat, &mut diags);
+    }
+    (flat, diags)
+}
+
+/// Variable environment: loop variables shadow `idx`, which shadows params.
+struct Env<'a> {
+    params: &'a BTreeMap<String, i64>,
+    vars: Vec<(String, i64)>,
+    idx: i64,
+}
+
+impl Env<'_> {
+    fn lookup(&self, name: &str) -> Option<i64> {
+        if let Some(&(_, v)) = self.vars.iter().rev().find(|(n, _)| n == name) {
+            return Some(v);
+        }
+        if name == "idx" {
+            return Some(self.idx);
+        }
+        self.params.get(name).copied()
+    }
+}
+
+fn render(t: &Template, env: &Env<'_>) -> std::result::Result<String, Diagnostic> {
+    t.render(&|n| env.lookup(n)).map_err(|e| Diagnostic::error(t.span, e))
+}
+
+fn eval(
+    e: &Spanned<super::ast::PExpr>,
+    env: &Env<'_>,
+) -> std::result::Result<i64, Diagnostic> {
+    e.node.eval(&|n| env.lookup(n)).map_err(|msg| Diagnostic::error(e.span, msg))
+}
+
+fn expand_decl(
+    decl: &Decl,
+    params: &BTreeMap<String, i64>,
+    flat: &mut Flat,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let mut env = Env { params, vars: Vec::new(), idx: 0 };
+    let mut emitted = 0usize;
+    let mut visited = 0usize;
+    expand_ranges(decl, 0, &mut env, &mut emitted, &mut visited, flat, diags);
+}
+
+fn expand_ranges(
+    decl: &Decl,
+    depth: usize,
+    env: &mut Env<'_>,
+    emitted: &mut usize,
+    visited: &mut usize,
+    flat: &mut Flat,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if depth == decl.foreach.len() {
+        // the cap bounds *loop iterations*, not just guard-passing
+        // instances — a huge range with a narrow `when` must still
+        // terminate. Report once; the sentinel stops the range loops.
+        *visited += 1;
+        if *visited > MAX_INSTANCES_PER_DECL {
+            if *visited == MAX_INSTANCES_PER_DECL + 1 {
+                diags.push(Diagnostic::error(
+                    decl.span,
+                    format!(
+                        "declaration iterates more than {MAX_INSTANCES_PER_DECL} times"
+                    ),
+                ));
+            }
+            return;
+        }
+        if let Some(w) = &decl.when {
+            match eval(w, env) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(d) => {
+                    // a guard that errors once errors for every iteration;
+                    // report it once and stop expanding this declaration
+                    diags.push(d);
+                    *visited = MAX_INSTANCES_PER_DECL + 2;
+                    return;
+                }
+            }
+        }
+        env.idx = *emitted as i64;
+        *emitted += 1;
+        if let Err(d) = emit_instance(decl, env, flat) {
+            diags.push(d);
+        }
+        return;
+    }
+    let range = &decl.foreach[depth];
+    let (lo, hi) = match (eval(&range.lo, env), eval(&range.hi, env)) {
+        (Ok(lo), Ok(hi)) => (lo, hi),
+        (Err(d), _) | (_, Err(d)) => {
+            // bounds that error once error for every surrounding iteration;
+            // report once and halt this declaration's expansion
+            diags.push(d);
+            *visited = MAX_INSTANCES_PER_DECL + 2;
+            return;
+        }
+    };
+    for v in lo..hi {
+        // count every loop iteration, not just leaf visits — an enormous
+        // outer range over an empty inner range must still terminate
+        *visited += 1;
+        if *visited > MAX_INSTANCES_PER_DECL {
+            if *visited == MAX_INSTANCES_PER_DECL + 1 {
+                diags.push(Diagnostic::error(
+                    decl.span,
+                    format!(
+                        "declaration iterates more than {MAX_INSTANCES_PER_DECL} times"
+                    ),
+                ));
+            }
+            return;
+        }
+        env.vars.push((range.var.node.clone(), v));
+        expand_ranges(decl, depth + 1, env, emitted, visited, flat, diags);
+        env.vars.pop();
+        if *visited > MAX_INSTANCES_PER_DECL {
+            return; // capped; error already reported
+        }
+    }
+}
+
+fn emit_instance(
+    decl: &Decl,
+    env: &Env<'_>,
+    flat: &mut Flat,
+) -> std::result::Result<(), Diagnostic> {
+    let name_of = |t: &Template| -> std::result::Result<Spanned<String>, Diagnostic> {
+        Ok(Spanned::new(render(t, env)?, t.span))
+    };
+    let latency_of = |t: &Template| -> std::result::Result<Latency, Diagnostic> {
+        let rendered = render(t, env)?;
+        Latency::parse(&rendered).map_err(|e| {
+            Diagnostic::error(t.span, format!("bad latency expression {rendered:?}: {e:#}"))
+        })
+    };
+    match &decl.body {
+        DeclBody::Stage { name, latency } => flat.objects.push(FlatObject {
+            name: name_of(name)?,
+            kind: FlatObjKind::Stage { latency: latency_of(latency)? },
+        }),
+        DeclBody::ExecuteStage { name } => flat
+            .objects
+            .push(FlatObject { name: name_of(name)?, kind: FlatObjKind::ExecuteStage }),
+        DeclBody::FunctionalUnit { name, container, latency, ops } => {
+            let container = match container {
+                Some(c) => Some(name_of(c)?),
+                None => None,
+            };
+            flat.objects.push(FlatObject {
+                name: name_of(name)?,
+                kind: FlatObjKind::FunctionalUnit {
+                    container,
+                    latency: latency_of(latency)?,
+                    ops: ops.clone(),
+                },
+            });
+        }
+        DeclBody::RegisterFile { name, prefix, count } => flat.objects.push(FlatObject {
+            name: name_of(name)?,
+            kind: FlatObjKind::RegisterFile {
+                prefix: render(prefix, env)?,
+                count: eval(count, env)?,
+            },
+        }),
+        DeclBody::Memory {
+            name,
+            read_latency,
+            write_latency,
+            port_width,
+            max_concurrent,
+            base,
+            words,
+        } => flat.objects.push(FlatObject {
+            name: name_of(name)?,
+            kind: FlatObjKind::Memory {
+                read_latency: latency_of(read_latency)?,
+                write_latency: latency_of(write_latency)?,
+                port_width: eval(port_width, env)?,
+                max_concurrent: eval(max_concurrent, env)?,
+                base: eval(base, env)?,
+                words: eval(words, env)?,
+            },
+        }),
+        DeclBody::Forward { from, to } => flat.edges.push(FlatEdge {
+            kind: EdgeKind::Forward,
+            a: name_of(from)?,
+            b: name_of(to)?,
+        }),
+        DeclBody::Contains { parent, child } => flat.edges.push(FlatEdge {
+            kind: EdgeKind::Contains,
+            a: name_of(parent)?,
+            b: name_of(child)?,
+        }),
+        DeclBody::Reads { fu, rf } => flat.edges.push(FlatEdge {
+            kind: EdgeKind::Reads,
+            a: name_of(fu)?,
+            b: name_of(rf)?,
+        }),
+        DeclBody::Writes { fu, rf } => flat.edges.push(FlatEdge {
+            kind: EdgeKind::Writes,
+            a: name_of(fu)?,
+            b: name_of(rf)?,
+        }),
+        DeclBody::MemRead { fu, mem } => flat.edges.push(FlatEdge {
+            kind: EdgeKind::MemRead,
+            a: name_of(fu)?,
+            b: name_of(mem)?,
+        }),
+        DeclBody::MemWrite { fu, mem } => flat.edges.push(FlatEdge {
+            kind: EdgeKind::MemWrite,
+            a: name_of(fu)?,
+            b: name_of(mem)?,
+        }),
+    }
+    Ok(())
+}
+
+// ---- diagram construction --------------------------------------------------
+
+/// Build the ACADL object diagram from a validated [`Flat`] description.
+/// Call [`validate`] first: this function assumes names resolve, kinds
+/// match, and numeric attributes are in range.
+pub fn build_diagram(flat: &Flat) -> Result<Diagram> {
+    let mut d = Diagram::new(flat.name.clone());
+    if let Some(isa) = &flat.isa {
+        for op in isa {
+            d.op(&op.node);
+        }
+    }
+    let fetch = flat.fetch.as_ref().context("description has no [fetch] section")?;
+    let (imem, ifs) = d.add_fetch(
+        &fetch.imem,
+        fetch.read_latency as u64,
+        fetch.port_width as u32,
+        &fetch.ifs,
+        fetch.ifs_latency as u64,
+        fetch.issue_buffer as u32,
+    );
+
+    let mut ids: HashMap<&str, ObjId> = HashMap::new();
+    ids.insert(fetch.imem.as_str(), imem);
+    ids.insert(fetch.ifs.as_str(), ifs);
+
+    // container of each functional unit: `in = "..."` merged with explicit
+    // [[contains]] edges (validate guarantees exactly one per FU)
+    let mut containers: HashMap<&str, &str> = HashMap::new();
+    for o in &flat.objects {
+        if let FlatObjKind::FunctionalUnit { container: Some(c), .. } = &o.kind {
+            containers.insert(o.name.node.as_str(), c.node.as_str());
+        }
+    }
+    for e in &flat.edges {
+        if e.kind == EdgeKind::Contains {
+            containers.insert(e.b.node.as_str(), e.a.node.as_str());
+        }
+    }
+
+    for o in &flat.objects {
+        let id = match &o.kind {
+            FlatObjKind::Stage { latency } => d.add_stage(&o.name.node, latency.clone()),
+            FlatObjKind::ExecuteStage => d.add_execute_stage(&o.name.node),
+            FlatObjKind::FunctionalUnit { latency, ops, .. } => {
+                let es_name = containers
+                    .get(o.name.node.as_str())
+                    .with_context(|| format!("functional unit {} has no container", o.name.node))?;
+                let es = *ids
+                    .get(es_name)
+                    .with_context(|| format!("container {es_name} not declared before {}", o.name.node))?;
+                let op_names: Vec<&str> = ops.iter().map(|s| s.node.as_str()).collect();
+                d.add_fu(es, &o.name.node, latency.clone(), &op_names)
+            }
+            FlatObjKind::RegisterFile { prefix, count } => {
+                let (rf, _regs) = d.add_regfile(&o.name.node, prefix, *count as u32);
+                rf
+            }
+            FlatObjKind::Memory {
+                read_latency,
+                write_latency,
+                port_width,
+                max_concurrent,
+                base,
+                words,
+            } => d.add_memory(
+                &o.name.node,
+                read_latency.clone(),
+                write_latency.clone(),
+                *port_width as u32,
+                *max_concurrent as u32,
+                *base as u64,
+                *words as u64,
+            ),
+        };
+        ids.insert(o.name.node.as_str(), id);
+    }
+
+    for e in &flat.edges {
+        let a = *ids
+            .get(e.a.node.as_str())
+            .with_context(|| format!("unknown object {} in edge", e.a.node))?;
+        let b = *ids
+            .get(e.b.node.as_str())
+            .with_context(|| format!("unknown object {} in edge", e.b.node))?;
+        match e.kind {
+            EdgeKind::Forward => d.forward(a, b),
+            EdgeKind::Contains => {} // consumed by add_fu above
+            EdgeKind::Reads => d.fu_reads(a, b),
+            EdgeKind::Writes => d.fu_writes(a, b),
+            EdgeKind::MemRead => d.mem_reads(a, b),
+            EdgeKind::MemWrite => d.mem_writes(a, b),
+        }
+    }
+
+    d.finalize().with_context(|| format!("finalizing described diagram {}", flat.name))?;
+    Ok(d)
+}
+
+// ---- mapper binding --------------------------------------------------------
+
+/// A compiled description bound to its mapper family.
+#[derive(Clone)]
+pub enum CompiledModel {
+    Systolic(Arc<Systolic>),
+    UltraTrail(Arc<UltraTrail>),
+    Gemmini(Arc<Gemmini>),
+    Plasticine(Arc<Plasticine>),
+}
+
+// the accel structs carry closures/interners and derive no Debug; a short
+// summary is enough for diagnostics
+impl std::fmt::Debug for CompiledModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CompiledModel::{} ({})", self.family(), self.diagram().name)
+    }
+}
+
+impl CompiledModel {
+    pub fn family(&self) -> &'static str {
+        match self {
+            CompiledModel::Systolic(_) => "scalar",
+            CompiledModel::UltraTrail(_) => "tensor_op",
+            CompiledModel::Gemmini(_) => "gemm_tile",
+            CompiledModel::Plasticine(_) => "plasticine",
+        }
+    }
+
+    pub fn diagram(&self) -> &Diagram {
+        match self {
+            CompiledModel::Systolic(m) => &m.diagram,
+            CompiledModel::UltraTrail(m) => &m.diagram,
+            CompiledModel::Gemmini(m) => &m.diagram,
+            CompiledModel::Plasticine(m) => &m.diagram,
+        }
+    }
+
+    /// Instantiate the family's DNN mapper over the compiled diagram.
+    pub fn mapper(&self) -> Box<dyn Mapper + Send + Sync> {
+        match self {
+            CompiledModel::Systolic(m) => Box::new(ScalarMapper::new(Arc::clone(m))),
+            CompiledModel::UltraTrail(m) => Box::new(TensorOpMapper::new(Arc::clone(m))),
+            CompiledModel::Gemmini(m) => Box::new(GemmTileMapper::new(Arc::clone(m))),
+            CompiledModel::Plasticine(m) => Box::new(PlasticineMapper::new(Arc::clone(m))),
+        }
+    }
+}
+
+/// The result of compiling one description.
+#[derive(Debug, Clone)]
+pub struct CompiledArch {
+    // CompiledModel has a manual Debug impl (see above)
+    /// Architecture name (from `[arch] name`).
+    pub name: String,
+    pub model: CompiledModel,
+}
+
+fn param_i64(flat: &Flat, name: &str) -> Option<i64> {
+    flat.params.get(name).copied()
+}
+
+fn param_u32(flat: &Flat, name: &str) -> Option<u32> {
+    param_i64(flat, name).and_then(|v| u32::try_from(v).ok())
+}
+
+fn param_u64(flat: &Flat, name: &str) -> Option<u64> {
+    param_i64(flat, name).and_then(|v| u64::try_from(v).ok())
+}
+
+fn required_u32(flat: &Flat, name: &str) -> Result<u32> {
+    param_u32(flat, name)
+        .with_context(|| format!("mapper family needs positive integer parameter `{name}`"))
+}
+
+/// Bind a built diagram to the description's mapper family, reconstructing
+/// the family's op/register/memory handles by name.
+pub fn bind(flat: &Flat, diagram: Diagram) -> Result<CompiledModel> {
+    let fetch = flat.fetch.as_ref().context("description has no [fetch] section")?;
+    let family = flat
+        .mapper
+        .as_ref()
+        .context("description has no [mapper] section (family = scalar|tensor_op|gemm_tile|plasticine)")?;
+    match family.node.as_str() {
+        "scalar" => {
+            let mut cfg = SystolicConfig::new(
+                required_u32(flat, "rows")?,
+                required_u32(flat, "cols")?,
+            );
+            if let Some(v) = param_u32(flat, "port_width") {
+                cfg.port_width = v;
+            }
+            if let Some(v) = param_u64(flat, "mem_read_latency") {
+                cfg.mem_read_latency = v;
+            }
+            if let Some(v) = param_u64(flat, "mem_write_latency") {
+                cfg.mem_write_latency = v;
+            }
+            if let Some(v) = param_u32(flat, "mem_concurrency") {
+                cfg.mem_concurrency = v;
+            }
+            cfg.imem_port_width = fetch.port_width as u32;
+            cfg.issue_buffer = fetch.issue_buffer as u32;
+            Ok(CompiledModel::Systolic(Arc::new(Systolic::from_described(diagram, cfg)?)))
+        }
+        "tensor_op" => {
+            let cfg = UltraTrailConfig {
+                array_dim: required_u32(flat, "array_dim")?,
+                imem_port_width: fetch.port_width as u32,
+                issue_buffer: fetch.issue_buffer as u32,
+            };
+            Ok(CompiledModel::UltraTrail(Arc::new(UltraTrail::from_described(diagram, cfg)?)))
+        }
+        "gemm_tile" => {
+            let dflt = GemminiConfig::default();
+            let cfg = GemminiConfig {
+                dim: required_u32(flat, "dim")?,
+                dram_base_latency: param_u64(flat, "dram_base_latency")
+                    .unwrap_or(dflt.dram_base_latency),
+                dram_words_per_beat: param_u64(flat, "dram_words_per_beat")
+                    .unwrap_or(dflt.dram_words_per_beat),
+                dram_row_words: param_u64(flat, "dram_row_words").unwrap_or(dflt.dram_row_words),
+                imem_port_width: fetch.port_width as u32,
+                issue_buffer: fetch.issue_buffer as u32,
+            };
+            Ok(CompiledModel::Gemmini(Arc::new(Gemmini::from_described(diagram, cfg)?)))
+        }
+        "plasticine" => {
+            let mut cfg = PlasticineConfig::new(
+                required_u32(flat, "rows")?,
+                required_u32(flat, "cols")?,
+                required_u32(flat, "tile")?,
+            );
+            if let Some(v) = param_u32(flat, "simd_lanes") {
+                cfg.simd_lanes = v;
+            }
+            if let Some(v) = param_u32(flat, "pipe_depth") {
+                cfg.pipe_depth = v;
+            }
+            if let Some(v) = param_u32(flat, "switch_width") {
+                cfg.switch_width = v;
+            }
+            cfg.imem_port_width = fetch.port_width as u32;
+            cfg.issue_buffer = fetch.issue_buffer as u32;
+            Ok(CompiledModel::Plasticine(Arc::new(Plasticine::from_described(diagram, cfg)?)))
+        }
+        other => bail!(
+            "unknown mapper family {other:?} (scalar|tensor_op|gemm_tile|plasticine)"
+        ),
+    }
+}
+
+// ---- front doors -----------------------------------------------------------
+
+/// Parse + expand + validate, returning the flat form (when parseable) and
+/// every diagnostic. This is what `acadl-perf check` drives.
+pub fn check_source(src: &str) -> (Option<Flat>, Vec<Diagnostic>) {
+    let desc = match parse(src) {
+        Ok(d) => d,
+        Err(diag) => return (None, vec![diag]),
+    };
+    let (flat, mut diags) = expand(&desc);
+    diags.extend(validate(&flat));
+    (Some(flat), diags)
+}
+
+/// Compile a description source to a mapper-bound model, failing with the
+/// first diagnostics formatted into the error message.
+pub fn compile_source(src: &str, origin: &str) -> Result<CompiledArch> {
+    let (flat, diags) = check_source(src);
+    let errors: Vec<&Diagnostic> = diags.iter().filter(|d| d.is_error()).collect();
+    if !errors.is_empty() {
+        let shown: Vec<String> = errors.iter().take(5).map(|d| d.render(origin)).collect();
+        bail!(
+            "{} error(s) in architecture description:\n{}",
+            errors.len(),
+            shown.join("\n")
+        );
+    }
+    let flat = flat.context("description did not parse")?;
+    let diagram = build_diagram(&flat)?;
+    let model = bind(&flat, diagram)?;
+    Ok(CompiledArch { name: flat.name.clone(), model })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::isa::Instruction;
+
+    /// A tiny but complete description (mirror of diagram.rs `tiny()`).
+    pub(crate) const TINY: &str = r#"
+[arch]
+name = "tiny"
+
+[params]
+n_regs = 4
+
+[isa]
+ops = ["add", "load"]
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = 2
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 4
+
+[[execute_stage]]
+name = "es0"
+
+[[register_file]]
+name = "rf0"
+prefix = "r"
+count = "n_regs"
+
+[[memory]]
+name = "dmem"
+read_latency = 4
+write_latency = 4
+port_width = 2
+max_concurrent = 1
+base = 0
+words = 1024
+
+[[functional_unit]]
+name = "alu0"
+in = "es0"
+latency = 1
+ops = ["add", "load"]
+
+[[forward]]
+from = "ifs"
+to = "es0"
+
+[[reads]]
+fu = "alu0"
+rf = "rf0"
+
+[[writes]]
+fu = "alu0"
+rf = "rf0"
+
+[[mem_read]]
+fu = "alu0"
+mem = "dmem"
+
+[[mem_write]]
+fu = "alu0"
+mem = "dmem"
+"#;
+
+    #[test]
+    fn tiny_description_compiles_and_routes() {
+        let (flat, diags) = check_source(TINY);
+        assert!(diags.iter().all(|d| !d.is_error()), "{diags:?}");
+        let d = build_diagram(&flat.unwrap()).unwrap();
+        assert_eq!(d.name, "tiny");
+        assert_eq!(d.fetch_config().port_width, 2);
+        let add = d.lookup_op("add").unwrap();
+        let r0 = d.lookup_reg("r0").unwrap();
+        let r1 = d.lookup_reg("r1").unwrap();
+        let i = Instruction::new(add).reads(&[r0]).writes(&[r1]);
+        let route = d.route(&i).unwrap();
+        assert_eq!(d.object(route.fu).name, "alu0");
+        let load = d.lookup_op("load").unwrap();
+        let li = Instruction::new(load).writes(&[r0]).read_mem(&[16]);
+        assert!(d.route(&li).unwrap().has_writeback);
+    }
+
+    #[test]
+    fn foreach_when_and_idx_expand() {
+        let src = r#"
+[arch]
+name = "grid${rows}x${cols}"
+
+[params]
+rows = 2
+cols = 3
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = 1
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 1
+
+[[memory]]
+name = "pmu[${r}][${c}]"
+read_latency = 1
+write_latency = 1
+port_width = 1
+max_concurrent = 1
+base = "idx * 100"
+words = 100
+foreach = "r in 0..rows, c in 0..cols"
+when = "(r + c) % 2 == 1"
+"#;
+        let desc = parse(src).unwrap();
+        let (flat, diags) = expand(&desc);
+        assert!(diags.is_empty(), "{diags:?}");
+        assert_eq!(flat.name, "grid2x3");
+        // checkerboard of a 2x3 grid: (0,1), (1,0), (1,2)
+        let names: Vec<&str> = flat.objects.iter().map(|o| o.name.node.as_str()).collect();
+        assert_eq!(names, vec!["pmu[0][1]", "pmu[1][0]", "pmu[1][2]"]);
+        let bases: Vec<i64> = flat
+            .objects
+            .iter()
+            .map(|o| match &o.kind {
+                FlatObjKind::Memory { base, .. } => *base,
+                _ => panic!("expected memory"),
+            })
+            .collect();
+        assert_eq!(bases, vec![0, 100, 200]);
+    }
+
+    #[test]
+    fn expansion_errors_carry_spans() {
+        let src = "[arch]\nname = \"x${missing}\"\n";
+        let desc = parse(src).unwrap();
+        let (_, diags) = expand(&desc);
+        assert!(diags.iter().any(|d| d.message.contains("unknown parameter `missing`")));
+        assert_eq!(diags[0].span.line, 2);
+    }
+
+    #[test]
+    fn compile_source_reports_diagnostics() {
+        let e = compile_source("[arch]\nname = \"x${missing}\"\n", "inline").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("inline:2:"), "{msg}");
+        assert!(msg.contains("unknown parameter"), "{msg}");
+    }
+}

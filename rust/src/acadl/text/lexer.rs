@@ -1,0 +1,233 @@
+//! Line-oriented tokenizer for the TOML-flavored description format.
+//!
+//! Produces a flat token stream with 1-based line/column [`Span`]s. The
+//! subset of TOML covered: `[section]` / `[[array-section]]` headers, bare
+//! keys, `=`, integers, double-quoted strings (escapes: `\"` and `\\`),
+//! single-line arrays, `#` comments, and significant newlines (one
+//! key/value or header per line).
+
+use super::ast::Span;
+use super::Diagnostic;
+
+/// One token with its source span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub span: Span,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    /// `[`
+    LBracket,
+    /// `]`
+    RBracket,
+    /// `=`
+    Equals,
+    /// `,`
+    Comma,
+    /// Bare key / identifier (letters, digits, `_`).
+    Ident(String),
+    /// Integer literal (sign handled by the parser where legal).
+    Int(i64),
+    /// Double-quoted string contents (unescaped).
+    Str(String),
+    /// End of line (collapsed; comments and blank lines produce one).
+    Newline,
+}
+
+impl TokenKind {
+    /// Human-readable token description for diagnostics.
+    pub fn describe(&self) -> String {
+        match self {
+            TokenKind::LBracket => "`[`".into(),
+            TokenKind::RBracket => "`]`".into(),
+            TokenKind::Equals => "`=`".into(),
+            TokenKind::Comma => "`,`".into(),
+            TokenKind::Ident(s) => format!("identifier `{s}`"),
+            TokenKind::Int(v) => format!("integer `{v}`"),
+            TokenKind::Str(_) => "string".into(),
+            TokenKind::Newline => "end of line".into(),
+        }
+    }
+}
+
+/// Tokenize `src`. Errors (with spans) are returned as diagnostics; the
+/// token stream is best-effort up to the first error.
+pub fn lex(src: &str) -> Result<Vec<Token>, Diagnostic> {
+    let mut toks = Vec::new();
+    for (line_idx, line) in src.lines().enumerate() {
+        let line_no = line_idx as u32 + 1;
+        lex_line(line, line_no, &mut toks)?;
+        // collapse: only emit a newline if the line produced tokens
+        if toks.last().map(|t| t.kind != TokenKind::Newline).unwrap_or(false) {
+            toks.push(Token {
+                kind: TokenKind::Newline,
+                span: Span::new(line_no, line.chars().count() as u32 + 1),
+            });
+        }
+    }
+    Ok(toks)
+}
+
+fn lex_line(line: &str, line_no: u32, toks: &mut Vec<Token>) -> Result<(), Diagnostic> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0usize;
+    while i < chars.len() {
+        let col = i as u32 + 1;
+        let span = Span::new(line_no, col);
+        match chars[i] {
+            ' ' | '\t' => i += 1,
+            '#' => break, // comment to end of line
+            '[' => {
+                toks.push(Token { kind: TokenKind::LBracket, span });
+                i += 1;
+            }
+            ']' => {
+                toks.push(Token { kind: TokenKind::RBracket, span });
+                i += 1;
+            }
+            '=' => {
+                toks.push(Token { kind: TokenKind::Equals, span });
+                i += 1;
+            }
+            ',' => {
+                toks.push(Token { kind: TokenKind::Comma, span });
+                i += 1;
+            }
+            '"' => {
+                let mut s = String::new();
+                i += 1;
+                loop {
+                    match chars.get(i) {
+                        None => {
+                            return Err(Diagnostic::error(span, "unterminated string"));
+                        }
+                        Some('"') => {
+                            i += 1;
+                            break;
+                        }
+                        Some('\\') => match chars.get(i + 1) {
+                            Some('"') => {
+                                s.push('"');
+                                i += 2;
+                            }
+                            Some('\\') => {
+                                s.push('\\');
+                                i += 2;
+                            }
+                            other => {
+                                return Err(Diagnostic::error(
+                                    Span::new(line_no, i as u32 + 2),
+                                    format!(
+                                        "unsupported escape `\\{}` (only \\\" and \\\\)",
+                                        other.map(|c| c.to_string()).unwrap_or_default()
+                                    ),
+                                ));
+                            }
+                        },
+                        Some(&c) => {
+                            s.push(c);
+                            i += 1;
+                        }
+                    }
+                }
+                toks.push(Token { kind: TokenKind::Str(s), span });
+            }
+            c if c.is_ascii_digit()
+                || (c == '-' && chars.get(i + 1).is_some_and(|n| n.is_ascii_digit())) =>
+            {
+                let start = i;
+                i += 1; // sign or first digit
+                while i < chars.len() && chars[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                let v: i64 = text.parse().map_err(|_| {
+                    Diagnostic::error(span, format!("integer `{text}` out of range"))
+                })?;
+                toks.push(Token { kind: TokenKind::Int(v), span });
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < chars.len() && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                let text: String = chars[start..i].iter().collect();
+                toks.push(Token { kind: TokenKind::Ident(text), span });
+            }
+            c => {
+                return Err(Diagnostic::error(span, format!("unexpected character `{c}`")));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn lexes_headers_and_pairs() {
+        let ks = kinds("[arch]\nname = \"x\"\n");
+        assert_eq!(
+            ks,
+            vec![
+                TokenKind::LBracket,
+                TokenKind::Ident("arch".into()),
+                TokenKind::RBracket,
+                TokenKind::Newline,
+                TokenKind::Ident("name".into()),
+                TokenKind::Equals,
+                TokenKind::Str("x".into()),
+                TokenKind::Newline,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_arrays_comments_blank_lines() {
+        let ks = kinds("# header comment\n\nops = [\"a\", \"b\"]  # trailing\n");
+        assert_eq!(
+            ks,
+            vec![
+                TokenKind::Ident("ops".into()),
+                TokenKind::Equals,
+                TokenKind::LBracket,
+                TokenKind::Str("a".into()),
+                TokenKind::Comma,
+                TokenKind::Str("b".into()),
+                TokenKind::RBracket,
+                TokenKind::Newline,
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_negative_ints_and_escapes() {
+        let ks = kinds("x = -12\ny = \"a\\\"b\\\\c\"\n");
+        assert!(ks.contains(&TokenKind::Int(-12)));
+        assert!(ks.contains(&TokenKind::Str("a\"b\\c".into())));
+    }
+
+    #[test]
+    fn spans_are_one_based() {
+        let toks = lex("  key = 1").unwrap();
+        assert_eq!(toks[0].span, Span::new(1, 3));
+        // vacuous Eq on Span: check fields directly
+        assert_eq!((toks[0].span.line, toks[0].span.col), (1, 3));
+        assert_eq!((toks[2].span.line, toks[2].span.col), (1, 9));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(lex("key = @").is_err());
+        assert!(lex("s = \"unterminated").is_err());
+        assert!(lex("s = \"bad \\n escape\"").is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Textual ACADL frontend: parse, validate, and compile architecture
+//! descriptions from TOML-flavored files (see `arch/README.md` for the
+//! grammar and `arch/*.toml` for the four paper architectures).
+//!
+//! Pipeline:
+//!
+//! ```text
+//! source ──parser──▶ Description (template AST)
+//!        ──expand──▶ Flat (objects/edges after foreach/when/${} expansion)
+//!        ──validate▶ Vec<Diagnostic> (unknown ops, dangling routes,
+//!                    containment cycles, ... with file/line spans)
+//!        ──build───▶ acadl::Diagram
+//!        ──bind────▶ CompiledModel (diagram + mapper-family handles)
+//! ```
+//!
+//! [`registry::ArchRegistry`] caches compiled models keyed by description
+//! content, so `serve` loops and DSE sweeps never recompile an unchanged
+//! description.
+
+pub mod ast;
+pub mod compile;
+pub mod lexer;
+pub mod parser;
+pub mod registry;
+pub mod validate;
+
+pub use ast::{Description, PExpr, Span, Spanned, Template};
+pub use compile::{check_source, compile_source, CompiledArch, CompiledModel, Flat};
+pub use parser::parse;
+pub use registry::ArchRegistry;
+pub use validate::validate;
+
+/// How bad a diagnostic is. Errors block compilation; warnings do not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+/// One message tied to a source location.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    pub span: Span,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(span: Span, message: impl Into<String>) -> Self {
+        Self { severity: Severity::Error, span, message: message.into() }
+    }
+
+    pub fn warning(span: Span, message: impl Into<String>) -> Self {
+        Self { severity: Severity::Warning, span, message: message.into() }
+    }
+
+    pub fn is_error(&self) -> bool {
+        self.severity == Severity::Error
+    }
+
+    /// Render as `origin:line:col: severity: message` (the `acadl-perf
+    /// check` output format).
+    pub fn render(&self, origin: &str) -> String {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        format!("{origin}:{}:{}: {sev}: {}", self.span.line, self.span.col, self.message)
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let sev = match self.severity {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        };
+        write!(f, "{}:{}: {sev}: {}", self.span.line, self.span.col, self.message)
+    }
+}

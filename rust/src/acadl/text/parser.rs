@@ -1,0 +1,915 @@
+//! Parser: token stream → [`Description`] AST, plus the two string-level
+//! sub-parsers — `${}`-interpolated [`Template`]s and [`PExpr`] parameter
+//! expressions (with comparisons and `&&`/`||` for `when` guards).
+
+use super::ast::{
+    BinOp, Decl, DeclBody, Description, Fetch, ForRange, Func, PExpr, Param, Segment, Span,
+    Spanned, Template,
+};
+use super::lexer::{lex, Token, TokenKind};
+use super::Diagnostic;
+
+/// Parse a description source file.
+pub fn parse(src: &str) -> Result<Description, Diagnostic> {
+    let toks = lex(src)?;
+    Parser { toks, pos: 0 }.description()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+/// A raw `key = value` pair within one section.
+#[derive(Debug, Clone)]
+struct RawPair {
+    key: String,
+    key_span: Span,
+    value: Val,
+}
+
+#[derive(Debug, Clone)]
+enum Val {
+    Int(i64, Span),
+    Str(String, Span),
+    List(Vec<(String, Span)>, Span),
+}
+
+impl Val {
+    fn span(&self) -> Span {
+        match self {
+            Val::Int(_, s) | Val::Str(_, s) | Val::List(_, s) => *s,
+        }
+    }
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn here(&self) -> Span {
+        self.peek().map(|t| t.span).unwrap_or_else(|| {
+            self.toks.last().map(|t| t.span).unwrap_or_default()
+        })
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek().map(|t| &t.kind), Some(TokenKind::Newline)) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, kind: &TokenKind, what: &str) -> Result<Span, Diagnostic> {
+        match self.next() {
+            Some(t) if t.kind == *kind => Ok(t.span),
+            Some(t) => Err(Diagnostic::error(
+                t.span,
+                format!("expected {what}, found {}", t.kind.describe()),
+            )),
+            None => Err(Diagnostic::error(self.here(), format!("expected {what}, found end of file"))),
+        }
+    }
+
+    /// `[name]` or `[[name]]` header; returns (name, is_array, span).
+    fn header(&mut self) -> Result<(String, bool, Span), Diagnostic> {
+        let span = self.expect(&TokenKind::LBracket, "`[`")?;
+        let is_array = matches!(self.peek().map(|t| &t.kind), Some(TokenKind::LBracket));
+        if is_array {
+            self.pos += 1;
+        }
+        let name = match self.next() {
+            Some(Token { kind: TokenKind::Ident(n), .. }) => n,
+            Some(t) => {
+                return Err(Diagnostic::error(
+                    t.span,
+                    format!("expected section name, found {}", t.kind.describe()),
+                ))
+            }
+            None => return Err(Diagnostic::error(span, "expected section name")),
+        };
+        self.expect(&TokenKind::RBracket, "`]`")?;
+        if is_array {
+            self.expect(&TokenKind::RBracket, "`]]`")?;
+        }
+        self.expect(&TokenKind::Newline, "end of line after section header")?;
+        Ok((name, is_array, span))
+    }
+
+    /// Key-value pairs up to the next section header or end of file.
+    fn pairs(&mut self) -> Result<Vec<RawPair>, Diagnostic> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_newlines();
+            match self.peek().map(|t| &t.kind) {
+                None | Some(TokenKind::LBracket) => return Ok(out),
+                Some(TokenKind::Ident(_)) => {}
+                Some(k) => {
+                    let span = self.here();
+                    return Err(Diagnostic::error(
+                        span,
+                        format!("expected `key = value`, found {}", k.describe()),
+                    ));
+                }
+            }
+            let (key, key_span) = match self.next() {
+                Some(Token { kind: TokenKind::Ident(k), span }) => (k, span),
+                _ => unreachable!("peeked an identifier"),
+            };
+            self.expect(&TokenKind::Equals, "`=`")?;
+            let value = self.value()?;
+            self.expect(&TokenKind::Newline, "end of line after value")?;
+            out.push(RawPair { key, key_span, value });
+        }
+    }
+
+    fn value(&mut self) -> Result<Val, Diagnostic> {
+        match self.next() {
+            Some(Token { kind: TokenKind::Int(v), span }) => Ok(Val::Int(v, span)),
+            Some(Token { kind: TokenKind::Str(s), span }) => Ok(Val::Str(s, span)),
+            Some(Token { kind: TokenKind::LBracket, span }) => {
+                let mut items = Vec::new();
+                loop {
+                    match self.next() {
+                        Some(Token { kind: TokenKind::RBracket, .. }) => break,
+                        Some(Token { kind: TokenKind::Str(s), span }) => {
+                            items.push((s, span));
+                            match self.peek().map(|t| &t.kind) {
+                                Some(TokenKind::Comma) => {
+                                    self.pos += 1;
+                                }
+                                Some(TokenKind::RBracket) => {}
+                                _ => {
+                                    let at = self.here();
+                                    return Err(Diagnostic::error(
+                                        at,
+                                        "expected `,` or `]` in array",
+                                    ));
+                                }
+                            }
+                        }
+                        Some(t) => {
+                            return Err(Diagnostic::error(
+                                t.span,
+                                format!("expected string in array, found {}", t.kind.describe()),
+                            ))
+                        }
+                        None => return Err(Diagnostic::error(span, "unterminated array")),
+                    }
+                }
+                Ok(Val::List(items, span))
+            }
+            Some(t) => Err(Diagnostic::error(
+                t.span,
+                format!("expected a value, found {}", t.kind.describe()),
+            )),
+            None => Err(Diagnostic::error(self.here(), "expected a value, found end of file")),
+        }
+    }
+
+    fn description(&mut self) -> Result<Description, Diagnostic> {
+        let mut desc = Description::default();
+        loop {
+            self.skip_newlines();
+            if self.peek().is_none() {
+                return Ok(desc);
+            }
+            let (section, is_array, span) = self.header()?;
+            let pairs = self.pairs()?;
+            // singleton sections may appear at most once (last-wins would
+            // silently discard the earlier one)
+            if !is_array {
+                let already = match section.as_str() {
+                    "arch" => desc.name.is_some(),
+                    "params" => !desc.params.is_empty(),
+                    "isa" => desc.isa.is_some(),
+                    "fetch" => desc.fetch.is_some(),
+                    "mapper" => desc.mapper.is_some(),
+                    _ => false,
+                };
+                if already {
+                    return Err(Diagnostic::error(
+                        span,
+                        format!("duplicate section [{section}]"),
+                    ));
+                }
+            }
+            match (section.as_str(), is_array) {
+                ("arch", false) => {
+                    let mut p = PairSet::new(pairs, span, "arch")?;
+                    desc.name = Some(p.template("name")?);
+                    p.finish()?;
+                }
+                ("params", false) => {
+                    for pair in pairs {
+                        match pair.value {
+                            Val::Int(v, vspan) => desc.params.push(Param {
+                                name: Spanned::new(pair.key, pair.key_span),
+                                value: Spanned::new(v, vspan),
+                            }),
+                            other => {
+                                return Err(Diagnostic::error(
+                                    other.span(),
+                                    "parameters must be integers",
+                                ))
+                            }
+                        }
+                    }
+                }
+                ("isa", false) => {
+                    let mut p = PairSet::new(pairs, span, "isa")?;
+                    desc.isa = Some(p.str_list("ops")?);
+                    p.finish()?;
+                }
+                ("fetch", false) => {
+                    let mut p = PairSet::new(pairs, span, "fetch")?;
+                    desc.fetch = Some(Fetch {
+                        imem: p.template("imem")?,
+                        imem_read_latency: p.pexpr("imem_read_latency")?,
+                        imem_port_width: p.pexpr("imem_port_width")?,
+                        ifs: p.template("ifs")?,
+                        ifs_latency: p.pexpr("ifs_latency")?,
+                        issue_buffer: p.pexpr("issue_buffer")?,
+                        span,
+                    });
+                    p.finish()?;
+                }
+                ("mapper", false) => {
+                    let mut p = PairSet::new(pairs, span, "mapper")?;
+                    desc.mapper = Some(p.string("family")?);
+                    p.finish()?;
+                }
+                (name, true) => {
+                    desc.decls.push(self.decl(name, span, pairs)?);
+                }
+                (other, false) => {
+                    return Err(Diagnostic::error(
+                        span,
+                        format!(
+                            "unknown section `[{other}]` (arch|params|isa|fetch|mapper, or a \
+                             `[[...]]` declaration)"
+                        ),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn decl(&mut self, section: &str, span: Span, pairs: Vec<RawPair>) -> Result<Decl, Diagnostic> {
+        let mut p = PairSet::new(pairs, span, section)?;
+        let body = match section {
+            "stage" => DeclBody::Stage { name: p.template("name")?, latency: p.template("latency")? },
+            "execute_stage" => DeclBody::ExecuteStage { name: p.template("name")? },
+            "functional_unit" => DeclBody::FunctionalUnit {
+                name: p.template("name")?,
+                container: p.template_opt("in")?,
+                latency: p.template("latency")?,
+                ops: p.str_list("ops")?,
+            },
+            "register_file" => DeclBody::RegisterFile {
+                name: p.template("name")?,
+                prefix: p.template("prefix")?,
+                count: p.pexpr("count")?,
+            },
+            "memory" => DeclBody::Memory {
+                name: p.template("name")?,
+                read_latency: p.template("read_latency")?,
+                write_latency: p.template("write_latency")?,
+                port_width: p.pexpr("port_width")?,
+                max_concurrent: p.pexpr("max_concurrent")?,
+                base: p.pexpr("base")?,
+                words: p.pexpr("words")?,
+            },
+            "forward" => DeclBody::Forward { from: p.template("from")?, to: p.template("to")? },
+            "contains" => {
+                DeclBody::Contains { parent: p.template("parent")?, child: p.template("child")? }
+            }
+            "reads" => DeclBody::Reads { fu: p.template("fu")?, rf: p.template("rf")? },
+            "writes" => DeclBody::Writes { fu: p.template("fu")?, rf: p.template("rf")? },
+            "mem_read" => DeclBody::MemRead { fu: p.template("fu")?, mem: p.template("mem")? },
+            "mem_write" => DeclBody::MemWrite { fu: p.template("fu")?, mem: p.template("mem")? },
+            other => {
+                return Err(Diagnostic::error(
+                    span,
+                    format!(
+                        "unknown declaration `[[{other}]]` (stage|execute_stage|functional_unit|\
+                         register_file|memory|forward|contains|reads|writes|mem_read|mem_write)"
+                    ),
+                ))
+            }
+        };
+        let foreach = match p.take("foreach") {
+            Some(pair) => match pair.value {
+                Val::Str(s, vspan) => parse_foreach(&s, vspan)?,
+                other => return Err(Diagnostic::error(other.span(), "foreach must be a string")),
+            },
+            None => Vec::new(),
+        };
+        let when = match p.take("when") {
+            Some(pair) => match pair.value {
+                Val::Str(s, vspan) => Some(Spanned::new(parse_pexpr(&s, vspan)?, vspan)),
+                other => return Err(Diagnostic::error(other.span(), "when must be a string")),
+            },
+            None => None,
+        };
+        p.finish()?;
+        Ok(Decl { body, foreach, when, span })
+    }
+}
+
+/// Typed accessor over one section's raw pairs, with duplicate/unknown-key
+/// detection.
+struct PairSet {
+    pairs: Vec<Option<RawPair>>,
+    section_span: Span,
+    section: String,
+}
+
+impl PairSet {
+    fn new(pairs: Vec<RawPair>, section_span: Span, section: &str) -> Result<Self, Diagnostic> {
+        for (i, a) in pairs.iter().enumerate() {
+            if pairs[..i].iter().any(|b| b.key == a.key) {
+                return Err(Diagnostic::error(
+                    a.key_span,
+                    format!("duplicate key `{}` in [{section}]", a.key),
+                ));
+            }
+        }
+        Ok(Self { pairs: pairs.into_iter().map(Some).collect(), section_span, section: section.into() })
+    }
+
+    fn take(&mut self, key: &str) -> Option<RawPair> {
+        self.pairs
+            .iter_mut()
+            .find(|p| p.as_ref().is_some_and(|p| p.key == key))
+            .and_then(Option::take)
+    }
+
+    fn required(&mut self, key: &str) -> Result<RawPair, Diagnostic> {
+        self.take(key).ok_or_else(|| {
+            Diagnostic::error(
+                self.section_span,
+                format!("[{}] is missing required key `{key}`", self.section),
+            )
+        })
+    }
+
+    fn template(&mut self, key: &str) -> Result<Template, Diagnostic> {
+        let pair = self.required(key)?;
+        val_template(pair.value)
+    }
+
+    fn template_opt(&mut self, key: &str) -> Result<Option<Template>, Diagnostic> {
+        match self.take(key) {
+            Some(pair) => Ok(Some(val_template(pair.value)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn pexpr(&mut self, key: &str) -> Result<Spanned<PExpr>, Diagnostic> {
+        let pair = self.required(key)?;
+        match pair.value {
+            Val::Int(v, span) => Ok(Spanned::new(PExpr::Const(v), span)),
+            Val::Str(s, span) => Ok(Spanned::new(parse_pexpr(&s, span)?, span)),
+            Val::List(_, span) => {
+                Err(Diagnostic::error(span, format!("`{key}` must be an integer or expression")))
+            }
+        }
+    }
+
+    fn string(&mut self, key: &str) -> Result<Spanned<String>, Diagnostic> {
+        let pair = self.required(key)?;
+        match pair.value {
+            Val::Str(s, span) => Ok(Spanned::new(s, span)),
+            other => Err(Diagnostic::error(other.span(), format!("`{key}` must be a string"))),
+        }
+    }
+
+    fn str_list(&mut self, key: &str) -> Result<Vec<Spanned<String>>, Diagnostic> {
+        let pair = self.required(key)?;
+        match pair.value {
+            Val::List(items, _) => {
+                Ok(items.into_iter().map(|(s, span)| Spanned::new(s, span)).collect())
+            }
+            other => {
+                Err(Diagnostic::error(other.span(), format!("`{key}` must be a string array")))
+            }
+        }
+    }
+
+    fn finish(self) -> Result<(), Diagnostic> {
+        if let Some(extra) = self.pairs.into_iter().flatten().next() {
+            return Err(Diagnostic::error(
+                extra.key_span,
+                format!("unknown key `{}` in [{}]", extra.key, self.section),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn val_template(val: Val) -> Result<Template, Diagnostic> {
+    match val {
+        Val::Str(s, span) => parse_template(&s, span),
+        Val::Int(v, span) => {
+            let mut t = Template::lit(v.to_string());
+            t.span = span;
+            Ok(t)
+        }
+        Val::List(_, span) => Err(Diagnostic::error(span, "expected a string, found array")),
+    }
+}
+
+/// Parse a `${}`-interpolated template string.
+pub fn parse_template(src: &str, span: Span) -> Result<Template, Diagnostic> {
+    let mut segments = Vec::new();
+    let mut lit = String::new();
+    let mut rest = src;
+    while let Some(start) = rest.find("${") {
+        lit.push_str(&rest[..start]);
+        let after = &rest[start + 2..];
+        let end = after.find('}').ok_or_else(|| {
+            Diagnostic::error(span, format!("unclosed `${{` in template {src:?}"))
+        })?;
+        if !lit.is_empty() {
+            segments.push(Segment::Lit(std::mem::take(&mut lit)));
+        }
+        segments.push(Segment::Expr(parse_pexpr(&after[..end], span)?));
+        rest = &after[end + 1..];
+    }
+    lit.push_str(rest);
+    if !lit.is_empty() {
+        segments.push(Segment::Lit(lit));
+    }
+    Ok(Template { segments, span })
+}
+
+/// Parse a `foreach` clause: `var in lo..hi, var2 in lo2..hi2, ...`.
+pub fn parse_foreach(src: &str, span: Span) -> Result<Vec<ForRange>, Diagnostic> {
+    let mut out = Vec::new();
+    for clause in src.split(',') {
+        let clause = clause.trim();
+        if clause.is_empty() {
+            continue;
+        }
+        let (var, range) = clause.split_once(" in ").ok_or_else(|| {
+            Diagnostic::error(span, format!("foreach clause {clause:?} must be `var in lo..hi`"))
+        })?;
+        let var = var.trim();
+        if var.is_empty() || !var.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(Diagnostic::error(span, format!("bad foreach variable {var:?}")));
+        }
+        let (lo, hi) = range.split_once("..").ok_or_else(|| {
+            Diagnostic::error(span, format!("foreach range {range:?} must be `lo..hi`"))
+        })?;
+        out.push(ForRange {
+            var: Spanned::new(var.to_string(), span),
+            lo: Spanned::new(parse_pexpr(lo, span)?, span),
+            hi: Spanned::new(parse_pexpr(hi, span)?, span),
+        });
+    }
+    if out.is_empty() {
+        return Err(Diagnostic::error(span, "empty foreach clause"));
+    }
+    Ok(out)
+}
+
+// ---- parameter expression sub-parser ---------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum PTok {
+    Int(i64),
+    Ident(String),
+    Op(BinOp),
+    Minus,
+    LParen,
+    RParen,
+    Comma,
+}
+
+fn pexpr_lex(src: &str, span: Span) -> Result<Vec<PTok>, Diagnostic> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            ' ' | '\t' => i += 1,
+            '+' => {
+                toks.push(PTok::Op(BinOp::Add));
+                i += 1;
+            }
+            '-' => {
+                toks.push(PTok::Minus);
+                i += 1;
+            }
+            '*' => {
+                toks.push(PTok::Op(BinOp::Mul));
+                i += 1;
+            }
+            '/' => {
+                toks.push(PTok::Op(BinOp::Div));
+                i += 1;
+            }
+            '%' => {
+                toks.push(PTok::Op(BinOp::Rem));
+                i += 1;
+            }
+            '(' => {
+                toks.push(PTok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(PTok::RParen);
+                i += 1;
+            }
+            ',' => {
+                toks.push(PTok::Comma);
+                i += 1;
+            }
+            '=' | '!' | '<' | '>' | '&' | '|' => {
+                // get() is None when i+2 overruns or splits a multi-byte
+                // char; both fall through to the single-char/error arms
+                let two = src.get(i..i + 2).unwrap_or("");
+                let (op, len) = match two {
+                    "==" => (BinOp::Eq, 2),
+                    "!=" => (BinOp::Ne, 2),
+                    "<=" => (BinOp::Le, 2),
+                    ">=" => (BinOp::Ge, 2),
+                    "&&" => (BinOp::And, 2),
+                    "||" => (BinOp::Or, 2),
+                    _ if c == '<' => (BinOp::Lt, 1),
+                    _ if c == '>' => (BinOp::Gt, 1),
+                    _ => {
+                        return Err(Diagnostic::error(
+                            span,
+                            format!("unexpected `{c}` in expression {src:?}"),
+                        ))
+                    }
+                };
+                toks.push(PTok::Op(op));
+                i += len;
+            }
+            '0'..='9' => {
+                let s = i;
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let v = src[s..i].parse().map_err(|_| {
+                    Diagnostic::error(span, format!("integer out of range in {src:?}"))
+                })?;
+                toks.push(PTok::Int(v));
+            }
+            'a'..='z' | 'A'..='Z' | '_' => {
+                let s = i;
+                while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                    i += 1;
+                }
+                toks.push(PTok::Ident(src[s..i].to_string()));
+            }
+            _ => {
+                return Err(Diagnostic::error(
+                    span,
+                    format!("unexpected character `{c}` in expression {src:?}"),
+                ))
+            }
+        }
+    }
+    Ok(toks)
+}
+
+/// Parse a parameter expression string.
+pub fn parse_pexpr(src: &str, span: Span) -> Result<PExpr, Diagnostic> {
+    let toks = pexpr_lex(src, span)?;
+    let mut p = PParser { toks, pos: 0, span, src: src.to_string() };
+    let e = p.or_expr()?;
+    if p.pos != p.toks.len() {
+        return Err(Diagnostic::error(span, format!("trailing tokens in expression {src:?}")));
+    }
+    Ok(e)
+}
+
+struct PParser {
+    toks: Vec<PTok>,
+    pos: usize,
+    span: Span,
+    src: String,
+}
+
+impl PParser {
+    fn err(&self, msg: &str) -> Diagnostic {
+        Diagnostic::error(self.span, format!("{msg} in expression {:?}", self.src))
+    }
+
+    fn peek(&self) -> Option<&PTok> {
+        self.toks.get(self.pos)
+    }
+
+    fn eat_op(&mut self, ops: &[BinOp]) -> Option<BinOp> {
+        if let Some(PTok::Op(op)) = self.peek() {
+            if ops.contains(op) {
+                let op = *op;
+                self.pos += 1;
+                return Some(op);
+            }
+        }
+        None
+    }
+
+    fn or_expr(&mut self) -> Result<PExpr, Diagnostic> {
+        let mut lhs = self.and_expr()?;
+        while self.eat_op(&[BinOp::Or]).is_some() {
+            lhs = PExpr::Bin(BinOp::Or, Box::new(lhs), Box::new(self.and_expr()?));
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<PExpr, Diagnostic> {
+        let mut lhs = self.cmp_expr()?;
+        while self.eat_op(&[BinOp::And]).is_some() {
+            lhs = PExpr::Bin(BinOp::And, Box::new(lhs), Box::new(self.cmp_expr()?));
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<PExpr, Diagnostic> {
+        let lhs = self.sum()?;
+        if let Some(op) =
+            self.eat_op(&[BinOp::Eq, BinOp::Ne, BinOp::Lt, BinOp::Le, BinOp::Gt, BinOp::Ge])
+        {
+            let rhs = self.sum()?;
+            return Ok(PExpr::Bin(op, Box::new(lhs), Box::new(rhs)));
+        }
+        Ok(lhs)
+    }
+
+    fn sum(&mut self) -> Result<PExpr, Diagnostic> {
+        let mut lhs = self.term()?;
+        loop {
+            if self.eat_op(&[BinOp::Add]).is_some() {
+                lhs = PExpr::Bin(BinOp::Add, Box::new(lhs), Box::new(self.term()?));
+            } else if matches!(self.peek(), Some(PTok::Minus)) {
+                self.pos += 1;
+                lhs = PExpr::Bin(BinOp::Sub, Box::new(lhs), Box::new(self.term()?));
+            } else {
+                return Ok(lhs);
+            }
+        }
+    }
+
+    fn term(&mut self) -> Result<PExpr, Diagnostic> {
+        let mut lhs = self.unary()?;
+        while let Some(op) = self.eat_op(&[BinOp::Mul, BinOp::Div, BinOp::Rem]) {
+            lhs = PExpr::Bin(op, Box::new(lhs), Box::new(self.unary()?));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<PExpr, Diagnostic> {
+        if matches!(self.peek(), Some(PTok::Minus)) {
+            self.pos += 1;
+            let inner = self.unary()?;
+            // fold so `-3` round-trips as Const(-3), not Neg(Const(3))
+            if let PExpr::Const(v) = inner {
+                return Ok(PExpr::Const(v.wrapping_neg()));
+            }
+            return Ok(PExpr::Neg(Box::new(inner)));
+        }
+        self.atom()
+    }
+
+    fn atom(&mut self) -> Result<PExpr, Diagnostic> {
+        match self.toks.get(self.pos).cloned() {
+            Some(PTok::Int(v)) => {
+                self.pos += 1;
+                Ok(PExpr::Const(v))
+            }
+            Some(PTok::LParen) => {
+                self.pos += 1;
+                let e = self.or_expr()?;
+                match self.toks.get(self.pos) {
+                    Some(PTok::RParen) => {
+                        self.pos += 1;
+                        Ok(e)
+                    }
+                    _ => Err(self.err("expected `)`")),
+                }
+            }
+            Some(PTok::Ident(name)) => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(PTok::LParen)) {
+                    let func = match name.as_str() {
+                        "cdiv" => Func::Cdiv,
+                        "max" => Func::Max,
+                        "min" => Func::Min,
+                        other => return Err(self.err(&format!("unknown function `{other}`"))),
+                    };
+                    self.pos += 1; // (
+                    let a = self.or_expr()?;
+                    if !matches!(self.toks.get(self.pos), Some(PTok::Comma)) {
+                        return Err(self.err("expected `,`"));
+                    }
+                    self.pos += 1;
+                    let b = self.or_expr()?;
+                    if !matches!(self.toks.get(self.pos), Some(PTok::RParen)) {
+                        return Err(self.err("expected `)`"));
+                    }
+                    self.pos += 1;
+                    return Ok(PExpr::Call(func, Box::new(a), Box::new(b)));
+                }
+                Ok(PExpr::Var(name))
+            }
+            _ => Err(self.err("expected a value")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pe(src: &str) -> PExpr {
+        parse_pexpr(src, Span::default()).unwrap()
+    }
+
+    #[test]
+    fn pexpr_precedence_and_roundtrip() {
+        for src in [
+            "1 + 2 * 3",
+            "(1 + 2) * 3",
+            "rows + 2 * cols",
+            "(r + c) % 2 == 1",
+            "r > 0 && c < cols - 1",
+            "cdiv(x, 8) * cdiv(y, 8) + max(a, b) - min(a, b)",
+            "-x + -3",
+            "a / b % c",
+            "idx * 16777216",
+        ] {
+            let ast = pe(src);
+            let printed = ast.to_string();
+            let reparsed = pe(&printed);
+            assert_eq!(ast, reparsed, "{src} -> {printed}");
+        }
+    }
+
+    #[test]
+    fn pexpr_negative_literal_folds() {
+        assert_eq!(pe("-3"), PExpr::Const(-3));
+        assert_eq!(pe("-3").to_string(), "-3");
+    }
+
+    #[test]
+    fn pexpr_errors() {
+        assert!(parse_pexpr("1 +", Span::default()).is_err());
+        assert!(parse_pexpr("foo(1, 2)", Span::default()).is_err());
+        assert!(parse_pexpr("(1", Span::default()).is_err());
+        assert!(parse_pexpr("1 2", Span::default()).is_err());
+        assert!(parse_pexpr("a ? b", Span::default()).is_err());
+    }
+
+    #[test]
+    fn template_parses_holes() {
+        let t = parse_template("pe[${r}][${c + 1}]", Span::default()).unwrap();
+        assert_eq!(t.source(), "pe[${r}][${c + 1}]");
+        assert_eq!(t.segments.len(), 5);
+        assert!(parse_template("bad ${r", Span::default()).is_err());
+    }
+
+    #[test]
+    fn foreach_parses_ranges() {
+        let f = parse_foreach("r in 0..rows, c in 0..cols", Span::default()).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].var.node, "r");
+        assert_eq!(f[1].hi.node, PExpr::Var("cols".into()));
+        assert!(parse_foreach("r over 0..4", Span::default()).is_err());
+        assert!(parse_foreach("", Span::default()).is_err());
+    }
+
+    #[test]
+    fn parses_minimal_description() {
+        let src = r#"
+[arch]
+name = "tiny${n}"
+
+[params]
+n = 2
+
+[isa]
+ops = ["add", "load"]
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = 2
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 4
+
+[mapper]
+family = "scalar"
+
+[[execute_stage]]
+name = "es[${i}]"
+foreach = "i in 0..n"
+
+[[functional_unit]]
+name = "fu[${i}]"
+in = "es[${i}]"
+latency = 1
+ops = ["add"]
+foreach = "i in 0..n"
+when = "i >= 0"
+
+[[forward]]
+from = "ifs"
+to = "es[${i}]"
+foreach = "i in 0..n"
+"#;
+        let d = parse(src).unwrap();
+        assert_eq!(d.params.len(), 1);
+        assert_eq!(d.isa.as_ref().unwrap().len(), 2);
+        assert_eq!(d.decls.len(), 3);
+        assert!(d.fetch.is_some());
+        assert_eq!(d.mapper.as_ref().unwrap().node, "scalar");
+        assert_eq!(d.decls[1].foreach.len(), 1);
+        assert!(d.decls[1].when.is_some());
+    }
+
+    #[test]
+    fn duplicate_and_unknown_keys_error() {
+        assert!(parse("[arch]\nname = \"a\"\nname = \"b\"\n").is_err());
+        assert!(parse("[arch]\nname = \"a\"\nbogus = 1\n").is_err());
+        assert!(parse("[bogus_section]\nx = 1\n").is_err());
+        assert!(parse("[arch]\n").is_err()); // missing required key
+    }
+
+    #[test]
+    fn description_roundtrips_through_pretty_printer() {
+        let src = r#"
+[arch]
+name = "sys${rows}x${cols}"
+
+[params]
+rows = 2
+cols = 3
+
+[isa]
+ops = ["mac", "load", "store"]
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = "rows"
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 4
+
+[mapper]
+family = "scalar"
+
+[[register_file]]
+name = "pe[${r}][${c}].rf"
+prefix = "pe[${r}][${c}]."
+count = 4
+foreach = "r in 0..rows, c in 0..cols"
+
+[[memory]]
+name = "dmem"
+read_latency = "4"
+write_latency = "imm0 + 4"
+port_width = 2
+max_concurrent = "rows + 2 * cols"
+base = 0
+words = 17179869184
+
+[[execute_stage]]
+name = "pe[${r}][${c}].es"
+foreach = "r in 0..rows, c in 0..cols"
+
+[[functional_unit]]
+name = "pe[${r}][${c}].alu"
+in = "pe[${r}][${c}].es"
+latency = 1
+ops = ["mac"]
+foreach = "r in 0..rows, c in 0..cols"
+when = "(r + c) % 2 == 0"
+
+[[forward]]
+from = "ifs"
+to = "pe[${r}][${c}].es"
+foreach = "r in 0..rows, c in 0..cols"
+"#;
+        let ast = parse(src).unwrap();
+        let printed = ast.to_toml();
+        let reparsed = parse(&printed).unwrap_or_else(|e| panic!("reparse failed: {e}\n{printed}"));
+        assert_eq!(ast, reparsed, "pretty-printed form:\n{printed}");
+    }
+}

@@ -1,0 +1,98 @@
+//! The architecture registry: a content-keyed cache of compiled
+//! descriptions, so hot paths (`acadl-perf serve` request loops, DSE sweeps
+//! re-estimating the same described architecture) never re-lex, re-expand,
+//! or re-finalize an unchanged description.
+//!
+//! Keys are the full description source (the map's hash is over the
+//! content, and equality on the content rules out collisions). Compiled
+//! models are shared as `Arc`s — the underlying `Diagram`'s route cache is
+//! internally synchronized, so one compiled architecture can serve the
+//! whole worker pool.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::Result;
+
+use super::compile::{compile_source, CompiledArch};
+
+/// Content-keyed cache of compiled architecture descriptions.
+#[derive(Default)]
+pub struct ArchRegistry {
+    cache: Mutex<HashMap<Arc<str>, Arc<CompiledArch>>>,
+    compiles: AtomicU64,
+}
+
+impl ArchRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry used by the coordinator.
+    pub fn global() -> &'static ArchRegistry {
+        static GLOBAL: OnceLock<ArchRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(ArchRegistry::new)
+    }
+
+    /// Compile `source` (or return the cached model for identical content).
+    /// `origin` labels diagnostics, e.g. a file path or `<inline>`.
+    /// Failed compiles are not cached.
+    pub fn get_or_compile(&self, source: &str, origin: &str) -> Result<Arc<CompiledArch>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(source) {
+            return Ok(Arc::clone(hit));
+        }
+        // compile outside the lock: a slow description must not stall
+        // unrelated requests. Two racing misses both compile; the first
+        // insert wins and both results are equivalent (compilation is
+        // deterministic).
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        let compiled = Arc::new(compile_source(source, origin)?);
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache
+            .entry(Arc::from(source))
+            .or_insert_with(|| Arc::clone(&compiled));
+        Ok(Arc::clone(entry))
+    }
+
+    /// Number of actual compilations performed (cache misses). The
+    /// cache-hit test asserts this stays flat across repeated requests.
+    pub fn compile_count(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached descriptions.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached models (tests; memory pressure).
+    pub fn clear(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::tests::TINY;
+    use super::*;
+
+    #[test]
+    fn failed_compiles_are_not_cached() {
+        // TINY has no [mapper], so compile_source fails at bind; errors
+        // are never cached, so the counter moves on every attempt. (The
+        // positive cache-hit path is covered by the described_archs
+        // integration test against the shipped arch files.)
+        let reg = ArchRegistry::new();
+        assert!(reg.get_or_compile(TINY, "tiny").is_err());
+        assert_eq!(reg.compile_count(), 1);
+        assert!(reg.get_or_compile(TINY, "tiny").is_err());
+        assert_eq!(reg.compile_count(), 2);
+        assert!(reg.is_empty());
+    }
+
+}

@@ -1,0 +1,615 @@
+//! Semantic validation of expanded descriptions: every check reports a
+//! [`Diagnostic`] with the span of the offending declaration, so
+//! `acadl-perf check` can print `file:line:col: error: ...` lines.
+//!
+//! Checked here (errors unless noted):
+//! - unknown ops: functional-unit `ops` not declared in `[isa]`, and
+//!   (warning) declared ops no functional unit processes;
+//! - dangling routes: edges naming objects that do not exist, and edges
+//!   whose endpoint kinds are wrong (`reads` to a memory, `forward` into a
+//!   register file, ...);
+//! - containment: cycles, functional units with zero or multiple
+//!   containers, non-ES containers, containers declared after the unit;
+//! - structure: duplicate object/register names, overlapping memory address
+//!   ranges, out-of-range numeric attributes, execute stages unreachable
+//!   from the fetch stage, (warning) cyclic forward graphs;
+//! - the `[mapper]` binding: unknown family, missing family parameters.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use super::ast::Span;
+use super::compile::{EdgeKind, Flat, FlatObjKind};
+use super::Diagnostic;
+
+/// Validate an expanded description. Returns all diagnostics (errors and
+/// warnings); compilation is safe iff none is an error.
+pub fn validate(flat: &Flat) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let fetch_names: Vec<&str> = match &flat.fetch {
+        Some(f) => vec![f.imem.as_str(), f.ifs.as_str()],
+        None => {
+            diags.push(Diagnostic::error(
+                Span::default(),
+                "missing [fetch] section (imem/ifs front-end is required)",
+            ));
+            Vec::new()
+        }
+    };
+
+    // compilation narrows these to u32; out-of-range must be a diagnostic,
+    // not a silent truncation
+    const U32_MAX: i64 = u32::MAX as i64;
+    if let Some(f) = &flat.fetch {
+        if f.imem == f.ifs {
+            diags.push(Diagnostic::error(
+                f.span,
+                format!("imem and ifs must have distinct names (both are `{}`)", f.imem),
+            ));
+        }
+        if f.read_latency < 0 {
+            diags.push(Diagnostic::error(f.span, "imem_read_latency must be >= 0"));
+        }
+        if !(1..=U32_MAX).contains(&f.port_width) {
+            diags.push(Diagnostic::error(f.span, "imem_port_width must be in 1..=2^32-1"));
+        }
+        if f.ifs_latency < 0 {
+            diags.push(Diagnostic::error(f.span, "ifs_latency must be >= 0"));
+        }
+        if !(1..=U32_MAX).contains(&f.issue_buffer) {
+            diags.push(Diagnostic::error(f.span, "issue_buffer must be in 1..=2^32-1"));
+        }
+    }
+
+    // ---- object table + duplicates ------------------------------------------
+    let mut kind_of: HashMap<&str, &FlatObjKind> = HashMap::new();
+    let mut order_of: HashMap<&str, usize> = HashMap::new();
+    for (i, o) in flat.objects.iter().enumerate() {
+        let name = o.name.node.as_str();
+        if fetch_names.contains(&name) {
+            diags.push(Diagnostic::error(
+                o.name.span,
+                format!("object `{name}` clashes with a [fetch] object name"),
+            ));
+            continue;
+        }
+        if name == "writeBack" {
+            diags.push(Diagnostic::warning(
+                o.name.span,
+                "`writeBack` shadows the implicit write-back pseudo-object",
+            ));
+        }
+        if kind_of.insert(name, &o.kind).is_some() {
+            diags.push(Diagnostic::error(
+                o.name.span,
+                format!("duplicate object name `{name}`"),
+            ));
+        } else {
+            order_of.insert(name, i);
+        }
+    }
+
+    // ---- numeric attribute ranges -------------------------------------------
+    for o in &flat.objects {
+        match &o.kind {
+            FlatObjKind::Memory { port_width, max_concurrent, base, words, .. } => {
+                if !(1..=U32_MAX).contains(port_width) {
+                    diags.push(Diagnostic::error(
+                        o.name.span,
+                        "memory port_width must be in 1..=2^32-1",
+                    ));
+                }
+                if !(1..=U32_MAX).contains(max_concurrent) {
+                    diags.push(Diagnostic::error(
+                        o.name.span,
+                        "memory max_concurrent must be in 1..=2^32-1",
+                    ));
+                }
+                if *base < 0 || *words < 0 {
+                    diags.push(Diagnostic::error(
+                        o.name.span,
+                        "memory base/words must be >= 0",
+                    ));
+                }
+            }
+            FlatObjKind::RegisterFile { count, .. } => {
+                if *count < 0 || *count > (1 << 20) {
+                    diags.push(Diagnostic::error(
+                        o.name.span,
+                        format!("register file count {count} out of range"),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ---- register name collisions across register files ---------------------
+    let mut reg_names: HashMap<String, &str> = HashMap::new();
+    for o in &flat.objects {
+        if let FlatObjKind::RegisterFile { prefix, count } = &o.kind {
+            for i in 0..(*count).clamp(0, 1 << 20) {
+                let reg = format!("{prefix}{i}");
+                if let Some(other) = reg_names.insert(reg.clone(), o.name.node.as_str()) {
+                    if other != o.name.node.as_str() {
+                        diags.push(Diagnostic::error(
+                            o.name.span,
+                            format!(
+                                "register `{reg}` of `{}` is also declared by `{other}`",
+                                o.name.node
+                            ),
+                        ));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- isa / op checks ----------------------------------------------------
+    if let Some(isa) = &flat.isa {
+        let mut declared: HashSet<&str> = HashSet::new();
+        for op in isa {
+            if !declared.insert(op.node.as_str()) {
+                diags.push(Diagnostic::warning(
+                    op.span,
+                    format!("op `{}` declared twice in [isa]", op.node),
+                ));
+            }
+        }
+        let mut processed: HashSet<&str> = HashSet::new();
+        for o in &flat.objects {
+            if let FlatObjKind::FunctionalUnit { ops, .. } = &o.kind {
+                for op in ops {
+                    if !declared.contains(op.node.as_str()) {
+                        diags.push(Diagnostic::error(
+                            op.span,
+                            format!("unknown op `{}` (not declared in [isa])", op.node),
+                        ));
+                    }
+                    processed.insert(op.node.as_str());
+                }
+            }
+        }
+        for op in isa {
+            if !processed.contains(op.node.as_str()) {
+                diags.push(Diagnostic::warning(
+                    op.span,
+                    format!("op `{}` is not processed by any functional unit", op.node),
+                ));
+            }
+        }
+    }
+    for o in &flat.objects {
+        if let FlatObjKind::FunctionalUnit { ops, .. } = &o.kind {
+            if ops.is_empty() {
+                diags.push(Diagnostic::warning(
+                    o.name.span,
+                    format!("functional unit `{}` processes no ops", o.name.node),
+                ));
+            }
+        }
+    }
+
+    // ---- edge endpoint resolution + kind checks -----------------------------
+    let resolve = |name: &str| -> bool {
+        kind_of.contains_key(name) || fetch_names.contains(&name)
+    };
+    let is_forwardable = |name: &str| -> bool {
+        // the IFS plus pipeline/execute stages can appear in forward edges
+        fetch_names.get(1).is_some_and(|ifs| *ifs == name)
+            || matches!(
+                kind_of.get(name),
+                Some(FlatObjKind::Stage { .. }) | Some(FlatObjKind::ExecuteStage)
+            )
+    };
+    for e in &flat.edges {
+        for end in [&e.a, &e.b] {
+            if !resolve(&end.node) {
+                diags.push(Diagnostic::error(
+                    end.span,
+                    format!("dangling route: no object named `{}`", end.node),
+                ));
+            }
+        }
+        if !resolve(&e.a.node) || !resolve(&e.b.node) {
+            continue; // kind checks need both endpoints
+        }
+        match e.kind {
+            EdgeKind::Forward => {
+                for end in [&e.a, &e.b] {
+                    if !is_forwardable(&end.node) {
+                        diags.push(Diagnostic::error(
+                            end.span,
+                            format!(
+                                "forward edge endpoint `{}` must be the fetch stage, a pipeline \
+                                 stage, or an execute stage",
+                                end.node
+                            ),
+                        ));
+                    }
+                }
+            }
+            EdgeKind::Contains => {} // containment checks below
+            EdgeKind::Reads | EdgeKind::Writes => {
+                if !matches!(kind_of.get(e.a.node.as_str()), Some(FlatObjKind::FunctionalUnit { .. }))
+                {
+                    diags.push(Diagnostic::error(
+                        e.a.span,
+                        format!("`{}` must be a functional unit", e.a.node),
+                    ));
+                }
+                if !matches!(kind_of.get(e.b.node.as_str()), Some(FlatObjKind::RegisterFile { .. }))
+                {
+                    diags.push(Diagnostic::error(
+                        e.b.span,
+                        format!("`{}` must be a register file", e.b.node),
+                    ));
+                }
+            }
+            EdgeKind::MemRead | EdgeKind::MemWrite => {
+                if !matches!(kind_of.get(e.a.node.as_str()), Some(FlatObjKind::FunctionalUnit { .. }))
+                {
+                    diags.push(Diagnostic::error(
+                        e.a.span,
+                        format!("`{}` must be a functional unit", e.a.node),
+                    ));
+                }
+                if !matches!(kind_of.get(e.b.node.as_str()), Some(FlatObjKind::Memory { .. })) {
+                    diags.push(Diagnostic::error(
+                        e.b.span,
+                        format!("`{}` must be a memory", e.b.node),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- containment: build the graph, find cycles, then kind-check ---------
+    // edges parent -> child, from both `in = "..."` attributes and explicit
+    // [[contains]] declarations
+    let mut contain_edges: Vec<(&str, &str, Span)> = Vec::new();
+    for o in &flat.objects {
+        if let FlatObjKind::FunctionalUnit { container: Some(c), .. } = &o.kind {
+            contain_edges.push((c.node.as_str(), o.name.node.as_str(), c.span));
+        }
+    }
+    for e in &flat.edges {
+        if e.kind == EdgeKind::Contains {
+            contain_edges.push((e.a.node.as_str(), e.b.node.as_str(), e.a.span));
+        }
+    }
+    if let Some((cycle, span)) = find_cycle(&contain_edges) {
+        diags.push(Diagnostic::error(
+            span,
+            format!("containment cycle: {}", cycle.join(" -> ")),
+        ));
+    } else {
+        // acyclic: per-edge kind checks and per-FU container counts
+        for &(parent, child, span) in &contain_edges {
+            if !resolve(parent) {
+                diags.push(Diagnostic::error(
+                    span,
+                    format!("dangling route: no object named `{parent}`"),
+                ));
+                continue;
+            }
+            if !matches!(kind_of.get(parent), Some(FlatObjKind::ExecuteStage)) {
+                diags.push(Diagnostic::error(
+                    span,
+                    format!("container `{parent}` must be an execute stage"),
+                ));
+            }
+            if resolve(child)
+                && !matches!(kind_of.get(child), Some(FlatObjKind::FunctionalUnit { .. }))
+            {
+                diags.push(Diagnostic::error(
+                    span,
+                    format!("contained object `{child}` must be a functional unit"),
+                ));
+            }
+            // compilation creates objects in declaration order
+            if let (Some(&pi), Some(&ci)) = (order_of.get(parent), order_of.get(child)) {
+                if pi > ci {
+                    diags.push(Diagnostic::error(
+                        span,
+                        format!(
+                            "execute stage `{parent}` must be declared before the functional \
+                             unit `{child}` it contains"
+                        ),
+                    ));
+                }
+            }
+        }
+        for o in &flat.objects {
+            if let FlatObjKind::FunctionalUnit { .. } = &o.kind {
+                let n = contain_edges
+                    .iter()
+                    .filter(|(_, c, _)| *c == o.name.node.as_str())
+                    .count();
+                if n == 0 {
+                    diags.push(Diagnostic::error(
+                        o.name.span,
+                        format!(
+                            "functional unit `{}` is not contained in any execute stage (set \
+                             `in = ...` or add a [[contains]] edge)",
+                            o.name.node
+                        ),
+                    ));
+                } else if n > 1 {
+                    diags.push(Diagnostic::error(
+                        o.name.span,
+                        format!("functional unit `{}` has {n} containers (needs exactly 1)", o.name.node),
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- overlapping memory address ranges ----------------------------------
+    let mut ranges: Vec<(i64, i64, &str, Span)> = flat
+        .objects
+        .iter()
+        .filter_map(|o| match &o.kind {
+            FlatObjKind::Memory { base, words, .. } if *words > 0 => {
+                Some((*base, base.saturating_add(*words), o.name.node.as_str(), o.name.span))
+            }
+            _ => None,
+        })
+        .collect();
+    ranges.sort_by_key(|r| r.0);
+    for w in ranges.windows(2) {
+        if w[0].1 > w[1].0 {
+            diags.push(Diagnostic::error(
+                w[1].3,
+                format!("memory `{}` overlaps the address range of `{}`", w[1].2, w[0].2),
+            ));
+        }
+    }
+
+    // ---- forward reachability + cycles --------------------------------------
+    if let Some(f) = &flat.fetch {
+        let fwd: Vec<(&str, &str, Span)> = flat
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::Forward)
+            .map(|e| (e.a.node.as_str(), e.b.node.as_str(), e.a.span))
+            .collect();
+        let mut reach: HashSet<&str> = HashSet::new();
+        let mut queue: VecDeque<&str> = VecDeque::new();
+        reach.insert(f.ifs.as_str());
+        queue.push_back(f.ifs.as_str());
+        while let Some(cur) = queue.pop_front() {
+            for &(a, b, _) in &fwd {
+                if a == cur && reach.insert(b) {
+                    queue.push_back(b);
+                }
+            }
+        }
+        let contained_es: HashSet<&str> =
+            contain_edges.iter().map(|(parent, _, _)| *parent).collect();
+        for o in &flat.objects {
+            if matches!(o.kind, FlatObjKind::ExecuteStage)
+                && contained_es.contains(o.name.node.as_str())
+                && !reach.contains(o.name.node.as_str())
+            {
+                diags.push(Diagnostic::error(
+                    o.name.span,
+                    format!(
+                        "no forward path from fetch stage `{}` to execute stage `{}`",
+                        f.ifs, o.name.node
+                    ),
+                ));
+            }
+        }
+        if let Some((cycle, span)) = find_cycle(&fwd) {
+            diags.push(Diagnostic::warning(
+                span,
+                format!("forward graph contains a cycle: {}", cycle.join(" -> ")),
+            ));
+        }
+    }
+
+    // ---- mapper binding -----------------------------------------------------
+    match &flat.mapper {
+        None => diags.push(Diagnostic::warning(
+            Span::default(),
+            "no [mapper] section; the description can be checked but not estimated",
+        )),
+        Some(family) => {
+            let required: &[&str] = match family.node.as_str() {
+                "scalar" => &["rows", "cols"],
+                "tensor_op" => &["array_dim"],
+                "gemm_tile" => &["dim"],
+                "plasticine" => &["rows", "cols", "tile"],
+                other => {
+                    diags.push(Diagnostic::error(
+                        family.span,
+                        format!(
+                            "unknown mapper family `{other}` \
+                             (scalar|tensor_op|gemm_tile|plasticine)"
+                        ),
+                    ));
+                    &[]
+                }
+            };
+            for p in required {
+                match flat.params.get(*p) {
+                    Some(v) if *v >= 1 => {}
+                    Some(v) => diags.push(Diagnostic::error(
+                        family.span,
+                        format!("mapper family `{}` needs parameter `{p}` >= 1 (got {v})", family.node),
+                    )),
+                    None => diags.push(Diagnostic::error(
+                        family.span,
+                        format!("mapper family `{}` needs parameter `{p}`", family.node),
+                    )),
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+/// Find a cycle in a name graph; returns the cycle path (first node
+/// repeated at the end) and the span of one participating edge.
+fn find_cycle(edges: &[(&str, &str, Span)]) -> Option<(Vec<String>, Span)> {
+    let mut adj: HashMap<&str, Vec<(&str, Span)>> = HashMap::new();
+    for (a, b, s) in edges {
+        adj.entry(a).or_default().push((b, *s));
+    }
+    let mut state: HashMap<&str, u8> = HashMap::new(); // 1 = on stack, 2 = done
+    for &start in adj.keys() {
+        if state.contains_key(start) {
+            continue;
+        }
+        // iterative DFS keeping the path for cycle reporting
+        let mut path: Vec<(&str, usize)> = vec![(start, 0)];
+        state.insert(start, 1);
+        while let Some(top) = path.last_mut() {
+            let node = top.0;
+            let succs = adj.get(node).map(Vec::as_slice).unwrap_or(&[]);
+            if top.1 >= succs.len() {
+                state.insert(node, 2);
+                path.pop();
+                continue;
+            }
+            let (succ, span) = succs[top.1];
+            top.1 += 1;
+            match state.get(succ) {
+                Some(1) => {
+                    // found: slice the path from succ onward
+                    let pos = path.iter().position(|(n, _)| *n == succ).unwrap_or(0);
+                    let mut cycle: Vec<String> =
+                        path[pos..].iter().map(|(n, _)| n.to_string()).collect();
+                    cycle.push(succ.to_string());
+                    return Some((cycle, span));
+                }
+                Some(_) => {}
+                None => {
+                    state.insert(succ, 1);
+                    path.push((succ, 0));
+                }
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::check_source;
+    use super::super::Severity;
+
+    fn errors_of(src: &str) -> Vec<String> {
+        let (_, diags) = check_source(src);
+        diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| format!("{}:{} {}", d.span.line, d.span.col, d.message))
+            .collect()
+    }
+
+    const HEAD: &str = r#"
+[arch]
+name = "t"
+
+[isa]
+ops = ["add"]
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = 1
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 1
+"#;
+
+    #[test]
+    fn unknown_op_is_reported_with_span() {
+        let src = format!(
+            "{HEAD}\n[[execute_stage]]\nname = \"es\"\n\n[[functional_unit]]\nname = \"fu\"\n\
+             in = \"es\"\nlatency = 1\nops = [\"add\", \"frobnicate\"]\n\n\
+             [[forward]]\nfrom = \"ifs\"\nto = \"es\"\n"
+        );
+        let errs = errors_of(&src);
+        assert!(
+            errs.iter().any(|e| e.contains("unknown op `frobnicate`")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn dangling_route_is_reported() {
+        let src = format!("{HEAD}\n[[forward]]\nfrom = \"ifs\"\nto = \"nowhere\"\n");
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("dangling route: no object named `nowhere`")), "{errs:?}");
+    }
+
+    #[test]
+    fn containment_cycle_is_reported() {
+        let src = format!(
+            "{HEAD}\n[[execute_stage]]\nname = \"a\"\n\n[[execute_stage]]\nname = \"b\"\n\n\
+             [[contains]]\nparent = \"a\"\nchild = \"b\"\n\n\
+             [[contains]]\nparent = \"b\"\nchild = \"a\"\n"
+        );
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("containment cycle")), "{errs:?}");
+    }
+
+    #[test]
+    fn uncontained_fu_and_wrong_kinds_are_reported() {
+        let src = format!(
+            "{HEAD}\n[[functional_unit]]\nname = \"orphan\"\nlatency = 1\nops = [\"add\"]\n\n\
+             [[register_file]]\nname = \"rf\"\nprefix = \"r\"\ncount = 1\n\n\
+             [[reads]]\nfu = \"rf\"\nrf = \"orphan\"\n"
+        );
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("`orphan` is not contained")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("`rf` must be a functional unit")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("`orphan` must be a register file")), "{errs:?}");
+    }
+
+    #[test]
+    fn overlapping_memories_and_duplicates_are_reported() {
+        let src = format!(
+            "{HEAD}\n[[memory]]\nname = \"m1\"\nread_latency = 1\nwrite_latency = 1\n\
+             port_width = 1\nmax_concurrent = 1\nbase = 0\nwords = 100\n\n\
+             [[memory]]\nname = \"m2\"\nread_latency = 1\nwrite_latency = 1\n\
+             port_width = 1\nmax_concurrent = 1\nbase = 50\nwords = 100\n\n\
+             [[memory]]\nname = \"m1\"\nread_latency = 1\nwrite_latency = 1\n\
+             port_width = 0\nmax_concurrent = 1\nbase = 500\nwords = 10\n"
+        );
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("overlaps")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("duplicate object name `m1`")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("port_width must be in 1..=2^32-1")), "{errs:?}");
+    }
+
+    #[test]
+    fn unreachable_execute_stage_is_reported() {
+        let src = format!(
+            "{HEAD}\n[[execute_stage]]\nname = \"es\"\n\n[[functional_unit]]\nname = \"fu\"\n\
+             in = \"es\"\nlatency = 1\nops = [\"add\"]\n"
+        );
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("no forward path")), "{errs:?}");
+    }
+
+    #[test]
+    fn mapper_family_checks() {
+        let src = format!("{HEAD}\n[mapper]\nfamily = \"warp_drive\"\n");
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("unknown mapper family")), "{errs:?}");
+        let src = format!("{HEAD}\n[mapper]\nfamily = \"scalar\"\n");
+        let errs = errors_of(&src);
+        assert!(errs.iter().any(|e| e.contains("needs parameter `rows`")), "{errs:?}");
+    }
+
+    #[test]
+    fn clean_description_has_no_errors() {
+        let (_, diags) = check_source(super::super::compile::tests::TINY);
+        assert!(diags.iter().all(|d| d.severity != Severity::Error), "{diags:?}");
+    }
+}

@@ -226,6 +226,33 @@ impl Gemmini {
         d.finalize()?;
         Ok(Self { diagram: d, cfg, ops, dram, spad, acc, b_tile_reg, cfg_reg })
     }
+
+    /// Bind a description-compiled diagram (see [`crate::acadl::text`]) to
+    /// the tiled-GEMM-mapper handles, resolving ops, the three memories
+    /// (`dram0`, `scratchpad`, `accumulator`), and the array-state
+    /// registers (`st0` = B tile, `st1` = config) by name — see
+    /// `arch/gemmini_16.toml`.
+    pub fn from_described(diagram: Diagram, cfg: GemminiConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.dim >= 1, "dim must be >= 1");
+        let what = "described gemmini diagram";
+        let op = |name: &str| diagram.require_op(name, what);
+        let ops = GemminiOps {
+            config_ex: op("config_ex")?,
+            config_ld: op("config_ld")?,
+            config_st: op("config_st")?,
+            mvin: op("mvin")?,
+            mvin_acc: op("mvin_acc")?,
+            mvout: op("mvout")?,
+            preload: op("preload")?,
+            compute_preloaded: op("compute_preloaded")?,
+            compute_accumulated: op("compute_accumulated")?,
+        };
+        let mem = |name: &str| diagram.require_memory(name, what);
+        let (dram, spad, acc) = (mem("dram0")?, mem("scratchpad")?, mem("accumulator")?);
+        let (b_tile_reg, cfg_reg) =
+            (diagram.require_reg("st0", what)?, diagram.require_reg("st1", what)?);
+        Ok(Self { diagram, cfg, ops, dram, spad, acc, b_tile_reg, cfg_reg })
+    }
 }
 
 #[cfg(test)]

@@ -258,6 +258,67 @@ impl Plasticine {
         Ok(Self { diagram: d, cfg, ops, pcus, pmus })
     }
 
+    /// Bind a description-compiled diagram (see [`crate::acadl::text`]) to
+    /// the Plasticine-mapper handles. The checkerboard is re-walked in the
+    /// builder's row-major order, so PCU ordinals (register prefixes
+    /// `pcu{i}.in` / `pcu{i}.out`) line up with [`Plasticine::new`]; PMU
+    /// token bases are taken from the address range each compiled memory
+    /// actually claims — see `arch/plasticine_3x6.toml`.
+    pub fn from_described(diagram: Diagram, cfg: PlasticineConfig) -> Result<Self> {
+        if cfg.rows < 1 || cfg.cols < 1 || cfg.rows * cfg.cols < 2 {
+            anyhow::bail!(
+                "grid {}x{} too small (need at least one PCU and one PMU)",
+                cfg.rows,
+                cfg.cols
+            );
+        }
+        anyhow::ensure!(cfg.tile >= 1, "tile must be >= 1");
+        let what = "described plasticine diagram";
+        let op = |name: &str| diagram.require_op(name, what);
+        let ops = PlasticineOps {
+            gemm_tile: op("gemm_tile")?,
+            add_tile: op("add_tile")?,
+            route_in: op("route_in")?,
+            route_out: op("route_out")?,
+        };
+        let reg = |name: String| diagram.require_reg(&name, what);
+        let mut pcus = Vec::new();
+        let mut pmus = Vec::new();
+        for r in 0..cfg.rows {
+            for c in 0..cfg.cols {
+                if (r + c) % 2 == 1 {
+                    let name = format!("pmu[{r}][{c}]");
+                    let mem = diagram.require_memory(&name, what)?;
+                    // the token base is whatever address range the compiled
+                    // description actually claims for this PMU — assuming
+                    // the builder's row-major numbering here would silently
+                    // mis-route traffic for reordered descriptions
+                    let base = match &diagram.object(mem).kind {
+                        crate::acadl::ObjectKind::Memory { address_ranges, .. } => {
+                            use anyhow::Context as _;
+                            address_ranges.first().map(|r| r.0).with_context(|| {
+                                format!("{what}: memory `{name}` claims no address range")
+                            })?
+                        }
+                        _ => unreachable!("require_memory checked the kind"),
+                    };
+                    pmus.push(Pmu { pos: (r, c), mem, base });
+                } else {
+                    let i = pcus.len();
+                    pcus.push(Pcu {
+                        pos: (r, c),
+                        r_a: reg(format!("pcu{i}.in0"))?,
+                        r_b: reg(format!("pcu{i}.in1"))?,
+                        r_out: reg(format!("pcu{i}.out0"))?,
+                    });
+                }
+            }
+        }
+        anyhow::ensure!(!pcus.is_empty(), "grid {}x{} yields no PCUs", cfg.rows, cfg.cols);
+        anyhow::ensure!(!pmus.is_empty(), "grid {}x{} yields no PMUs", cfg.rows, cfg.cols);
+        Ok(Self { diagram, cfg, ops, pcus, pmus })
+    }
+
     /// Nearest PMU (by hop distance) to PCU `p`, with the distance.
     pub fn nearest_pmu(&self, p: usize) -> (usize, u32) {
         let pos = self.pcus[p].pos;

@@ -251,6 +251,44 @@ impl Systolic {
         d.finalize()?;
         Ok(Self { diagram: d, cfg, ops, pe: pe_regs })
     }
+
+    /// Bind a description-compiled diagram (see [`crate::acadl::text`]) to
+    /// the scalar-mapper handles, resolving ops and per-PE registers by
+    /// name. The description must follow the builder's naming scheme
+    /// (`pe[r][c].rf` register files with prefix `pe[r][c].`, ops
+    /// `load`/`mac`/... — see `arch/systolic_16x16.toml`).
+    pub fn from_described(diagram: Diagram, cfg: SystolicConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.rows >= 1 && cfg.cols >= 1, "systolic grid must be at least 1x1");
+        let what = "described systolic diagram";
+        let op = |name: &str| diagram.require_op(name, what);
+        let ops = SystolicOps {
+            load: op("load")?,
+            loadw: op("loadw")?,
+            loade: op("loade")?,
+            loade2: op("loade2")?,
+            mov_r: op("mov_r")?,
+            mov_d: op("mov_d")?,
+            mac: op("mac")?,
+            ew_relu: op("ew_relu")?,
+            ew_clip: op("ew_clip")?,
+            ew_add: op("ew_add")?,
+            ew_mul: op("ew_mul")?,
+            ew_acc: op("ew_acc")?,
+            ew_mac: op("ew_mac")?,
+            store: op("store")?,
+            store_acc: op("store_acc")?,
+        };
+        let mut pe_regs: Vec<Vec<PeRegs>> = Vec::with_capacity(cfg.rows as usize);
+        for r in 0..cfg.rows {
+            let mut row = Vec::with_capacity(cfg.cols as usize);
+            for c in 0..cfg.cols {
+                let reg = |i: u32| diagram.require_reg(&format!("pe[{r}][{c}].{i}"), what);
+                row.push(PeRegs { r_in: reg(0)?, r_in2: reg(1)?, r_w: reg(2)?, r_acc: reg(3)? });
+            }
+            pe_regs.push(row);
+        }
+        Ok(Self { diagram, cfg, ops, pe: pe_regs })
+    }
 }
 
 #[cfg(test)]

@@ -171,6 +171,24 @@ impl UltraTrail {
         d.finalize()?;
         Ok(Self { diagram: d, cfg, ops, fmem: [fmem0, fmem1, fmem2], wmem, bmem, lmem })
     }
+
+    /// Bind a description-compiled diagram (see [`crate::acadl::text`]) to
+    /// the tensor-op-mapper handles, resolving ops and memories by name
+    /// (`fmem0`..`fmem2`, `wmem`, `bmem`, `lmem` — see
+    /// `arch/ultratrail_8x8.toml`).
+    pub fn from_described(diagram: Diagram, cfg: UltraTrailConfig) -> Result<Self> {
+        anyhow::ensure!(cfg.array_dim >= 1, "array_dim must be >= 1");
+        let what = "described ultratrail diagram";
+        let ops = UltraTrailOps {
+            conv_ext: diagram.require_op("conv_ext", what)?,
+            dense_ext: diagram.require_op("dense_ext", what)?,
+            add_ext: diagram.require_op("add_ext", what)?,
+        };
+        let mem = |name: &str| diagram.require_memory(name, what);
+        let fmem = [mem("fmem0")?, mem("fmem1")?, mem("fmem2")?];
+        let (wmem, bmem, lmem) = (mem("wmem")?, mem("bmem")?, mem("lmem")?);
+        Ok(Self { diagram, cfg, ops, fmem, wmem, bmem, lmem })
+    }
 }
 
 #[cfg(test)]

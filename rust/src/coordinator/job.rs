@@ -1,7 +1,12 @@
 //! Estimation jobs and results — the coordinator's request/response types.
 
+use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
+use anyhow::Context as _;
+
+use crate::acadl::text::{compile::CompiledArch, ArchRegistry};
 use crate::accel::{
     Gemmini, GemminiConfig, Plasticine, PlasticineConfig, Systolic, SystolicConfig, UltraTrail,
     UltraTrailConfig,
@@ -14,13 +19,67 @@ use crate::mapping::{
 };
 use crate::Result;
 
+/// Where a described architecture's source text lives.
+#[derive(Debug, Clone)]
+pub enum ArchSource {
+    /// Read (and re-read per request — the registry dedupes unchanged
+    /// content) from a description file.
+    File(PathBuf),
+    /// Inline source, e.g. registered through the server's `describe`
+    /// command.
+    Inline { label: String, text: Arc<str> },
+}
+
+/// An architecture defined by a textual ACADL description instead of a
+/// hardcoded builder.
+#[derive(Debug, Clone)]
+pub struct DescribedArch {
+    pub source: ArchSource,
+}
+
+impl DescribedArch {
+    pub fn file(path: impl Into<PathBuf>) -> Self {
+        Self { source: ArchSource::File(path.into()) }
+    }
+
+    pub fn inline(label: impl Into<String>, text: impl Into<Arc<str>>) -> Self {
+        Self { source: ArchSource::Inline { label: label.into(), text: text.into() } }
+    }
+
+    /// Diagnostic label: the file path or the inline registration name.
+    pub fn label(&self) -> String {
+        match &self.source {
+            ArchSource::File(p) => p.display().to_string(),
+            ArchSource::Inline { label, .. } => label.clone(),
+        }
+    }
+
+    /// Compile (or fetch from the global [`ArchRegistry`] cache) the
+    /// description's model.
+    pub fn model(&self) -> Result<Arc<CompiledArch>> {
+        match &self.source {
+            ArchSource::File(p) => {
+                let text = std::fs::read_to_string(p).with_context(|| {
+                    format!("reading architecture description {}", p.display())
+                })?;
+                ArchRegistry::global().get_or_compile(&text, &p.display().to_string())
+            }
+            ArchSource::Inline { label, text } => {
+                ArchRegistry::global().get_or_compile(text, label)
+            }
+        }
+    }
+}
+
 /// Which accelerator model to instantiate.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub enum Arch {
     Systolic(SystolicConfig),
     UltraTrail(UltraTrailConfig),
     Gemmini(GemminiConfig),
     Plasticine(PlasticineConfig),
+    /// Compiled from a textual ACADL description ([`crate::acadl::text`]).
+    Described(DescribedArch),
 }
 
 impl Arch {
@@ -30,24 +89,28 @@ impl Arch {
             Arch::UltraTrail(c) => format!("ultratrail{0}x{0}", c.array_dim),
             Arch::Gemmini(c) => format!("gemmini{0}x{0}", c.dim),
             Arch::Plasticine(c) => format!("plasticine{}x{}t{}", c.rows, c.cols, c.tile),
+            Arch::Described(d) => match &d.source {
+                ArchSource::File(p) => p
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| d.label()),
+                ArchSource::Inline { label, .. } => label.clone(),
+            },
         }
     }
 
     /// Instantiate the model + mapper pair.
     pub fn mapper(&self) -> Result<Box<dyn Mapper + Send + Sync>> {
         Ok(match self {
-            Arch::Systolic(c) => {
-                Box::new(ScalarMapper::new(std::sync::Arc::new(Systolic::new(*c)?)))
-            }
+            Arch::Systolic(c) => Box::new(ScalarMapper::new(Arc::new(Systolic::new(*c)?))),
             Arch::UltraTrail(c) => {
-                Box::new(TensorOpMapper::new(std::sync::Arc::new(UltraTrail::new(*c)?)))
+                Box::new(TensorOpMapper::new(Arc::new(UltraTrail::new(*c)?)))
             }
-            Arch::Gemmini(c) => {
-                Box::new(GemmTileMapper::new(std::sync::Arc::new(Gemmini::new(*c)?)))
-            }
+            Arch::Gemmini(c) => Box::new(GemmTileMapper::new(Arc::new(Gemmini::new(*c)?))),
             Arch::Plasticine(c) => {
-                Box::new(PlasticineMapper::new(std::sync::Arc::new(Plasticine::new(*c)?)))
+                Box::new(PlasticineMapper::new(Arc::new(Plasticine::new(*c)?)))
             }
+            Arch::Described(d) => d.model()?.model.mapper(),
         })
     }
 }

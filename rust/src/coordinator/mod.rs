@@ -8,6 +8,9 @@ pub mod pool;
 pub mod server;
 
 pub use dse::{explore, DsePoint, DseSpec, RooflineBackend};
-pub use job::{estimate_network, run_request, Arch, EstimateRequest, NetworkEstimate};
+pub use job::{
+    estimate_network, run_request, Arch, ArchSource, DescribedArch, EstimateRequest,
+    NetworkEstimate,
+};
 pub use pool::Pool;
 pub use server::{parse_arch, serve};

@@ -9,8 +9,24 @@
 //! ultratrail[:<dim>]
 //! gemmini[:<dim>]
 //! plasticine:<rows>x<cols>:<tile>
+//! file:<path>                    textual ACADL description file
+//! @<name>                        inline description registered via `describe`
 //! ```
+//!
+//! Server protocol (one command per line):
+//!
+//! ```text
+//! estimate <arch> <network>      run one estimate, print one result line
+//! describe <name>                read description lines until `end`, then
+//!                                register it as `@<name>`
+//! quit                           stop serving
+//! ```
+//!
+//! Inline and file descriptions are compiled through the global
+//! [`ArchRegistry`](crate::acadl::text::ArchRegistry), so repeated requests
+//! against an unchanged description never recompile it.
 
+use std::collections::HashMap;
 use std::io::{BufRead, Write};
 
 use anyhow::{bail, Context};
@@ -19,12 +35,23 @@ use crate::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailCo
 use crate::aidg::FixedPointConfig;
 use crate::Result;
 
-use super::job::{run_request, Arch, EstimateRequest};
+use super::job::{run_request, Arch, DescribedArch, EstimateRequest};
 
 /// Parse an architecture spec string.
 pub fn parse_arch(spec: &str) -> Result<Arch> {
+    let spec = spec.trim();
+    if spec.is_empty() {
+        bail!("empty architecture spec");
+    }
+    if let Some(path) = spec.strip_prefix("file:") {
+        if path.is_empty() {
+            bail!("file: spec needs a path, e.g. file:arch/systolic_16x16.toml");
+        }
+        return Ok(Arch::Described(DescribedArch::file(path)));
+    }
     let parts: Vec<&str> = spec.split(':').collect();
-    match parts[0] {
+    let head = parts.first().copied().unwrap_or_default();
+    match head {
         "systolic" => {
             let dims = parts.get(1).context("systolic needs <rows>x<cols>")?;
             let (r, c) = parse_dims(dims)?;
@@ -33,7 +60,8 @@ pub fn parse_arch(spec: &str) -> Result<Arch> {
                 let pw = pw
                     .strip_prefix("pw")
                     .context("third field must be pw<N>")?
-                    .parse::<u32>()?;
+                    .parse::<u32>()
+                    .with_context(|| format!("bad port width in {spec:?}"))?;
                 cfg = cfg.with_port_width(pw);
             }
             Ok(Arch::Systolic(cfg))
@@ -41,37 +69,52 @@ pub fn parse_arch(spec: &str) -> Result<Arch> {
         "ultratrail" => {
             let mut cfg = UltraTrailConfig::default();
             if let Some(d) = parts.get(1) {
-                cfg.array_dim = d.parse()?;
+                cfg.array_dim = d
+                    .parse()
+                    .with_context(|| format!("bad array dimension in {spec:?}"))?;
             }
             Ok(Arch::UltraTrail(cfg))
         }
         "gemmini" => {
             let mut cfg = GemminiConfig::default();
             if let Some(d) = parts.get(1) {
-                cfg.dim = d.parse()?;
+                cfg.dim = d
+                    .parse()
+                    .with_context(|| format!("bad array dimension in {spec:?}"))?;
             }
             Ok(Arch::Gemmini(cfg))
         }
         "plasticine" => {
             let dims = parts.get(1).context("plasticine needs <rows>x<cols>:<tile>")?;
             let (r, c) = parse_dims(dims)?;
-            let tile = parts.get(2).context("plasticine needs a tile size")?.parse()?;
+            let tile = parts
+                .get(2)
+                .context("plasticine needs a tile size (plasticine:<rows>x<cols>:<tile>)")?
+                .parse()
+                .with_context(|| format!("bad tile size in {spec:?}"))?;
             Ok(Arch::Plasticine(PlasticineConfig::new(r, c, tile)))
         }
-        other => bail!("unknown architecture {other:?} (systolic|ultratrail|gemmini|plasticine)"),
+        other => bail!(
+            "unknown architecture {other:?} (systolic|ultratrail|gemmini|plasticine|file:<path>)"
+        ),
     }
 }
 
 fn parse_dims(s: &str) -> Result<(u32, u32)> {
     let (r, c) = s.split_once('x').context("expected <rows>x<cols>")?;
-    Ok((r.parse()?, c.parse()?))
+    let r = r.parse().with_context(|| format!("bad row count {r:?}"))?;
+    let c = c.parse().with_context(|| format!("bad column count {c:?}"))?;
+    Ok((r, c))
 }
 
-/// Serve `estimate <arch> <network>` requests from `input`, writing one
-/// result line per request to `output`. Returns the number served.
+/// Serve requests from `input`, writing one result line per request to
+/// `output`. Returns the number of commands served (including failed ones
+/// and `describe` registrations).
 pub fn serve(input: impl BufRead, mut output: impl Write) -> Result<usize> {
     let mut served = 0;
-    for line in input.lines() {
+    let mut inline: HashMap<String, DescribedArch> = HashMap::new();
+    let mut lines = input.lines();
+    while let Some(line) = lines.next() {
         let line = line?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -80,7 +123,18 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> Result<usize> {
         if line == "quit" {
             break;
         }
-        match serve_line(line) {
+        if let Some(name) = line.strip_prefix("describe ") {
+            match read_description(name.trim(), &mut lines) {
+                Ok((name, arch)) => {
+                    writeln!(output, "described @{name}")?;
+                    inline.insert(name, arch);
+                }
+                Err(e) => writeln!(output, "error: {e:#}")?,
+            }
+            served += 1;
+            continue;
+        }
+        match serve_line(line, &inline) {
             Ok(msg) => writeln!(output, "{msg}")?,
             Err(e) => writeln!(output, "error: {e:#}")?,
         }
@@ -89,11 +143,50 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> Result<usize> {
     Ok(served)
 }
 
-fn serve_line(line: &str) -> Result<String> {
+/// Read a `describe <name>` body: raw description lines until `end`. The
+/// body is always consumed, even when the name is invalid — otherwise its
+/// lines would be executed as server commands.
+fn read_description(
+    name: &str,
+    lines: &mut impl Iterator<Item = std::io::Result<String>>,
+) -> Result<(String, DescribedArch)> {
+    let bad_name = name.is_empty() || name.split_whitespace().count() != 1;
+    let mut body = String::new();
+    let mut terminated = false;
+    for line in lines {
+        let line = line?;
+        if line.trim() == "end" {
+            terminated = true;
+            break;
+        }
+        body.push_str(&line);
+        body.push('\n');
+    }
+    if bad_name {
+        bail!("describe needs a single name (describe <name>)");
+    }
+    if !terminated {
+        bail!("describe {name:?} not terminated with `end` before end of input");
+    }
+    Ok((name.to_string(), DescribedArch::inline(format!("@{name}"), body)))
+}
+
+fn serve_line(line: &str, inline: &HashMap<String, DescribedArch>) -> Result<String> {
     let mut it = line.split_whitespace();
     match it.next() {
         Some("estimate") => {
-            let arch = parse_arch(it.next().context("estimate <arch> <network>")?)?;
+            let spec = it.next().context("estimate <arch> <network>")?;
+            let arch = match spec.strip_prefix('@') {
+                Some(name) => Arch::Described(
+                    inline
+                        .get(name)
+                        .with_context(|| {
+                            format!("no described architecture @{name} (use `describe {name}`)")
+                        })?
+                        .clone(),
+                ),
+                None => parse_arch(spec)?,
+            };
             let network = it.next().context("estimate <arch> <network>")?.to_string();
             let e = run_request(&EstimateRequest { arch, network, fp: FixedPointConfig::default() })?;
             Ok(format!(
@@ -106,7 +199,7 @@ fn serve_line(line: &str) -> Result<String> {
                 e.runtime.as_millis()
             ))
         }
-        Some(cmd) => bail!("unknown command {cmd:?} (estimate|quit)"),
+        Some(cmd) => bail!("unknown command {cmd:?} (estimate|describe|quit)"),
         None => bail!("empty command"),
     }
 }
@@ -131,6 +224,38 @@ mod tests {
     }
 
     #[test]
+    fn malformed_specs_are_errors_not_panics() {
+        for bad in [
+            "",
+            " ",
+            ":",
+            "::",
+            "systolic:",
+            "systolic:x",
+            "systolic:4x",
+            "systolic:x4",
+            "systolic:4x4:7",
+            "systolic:4x4:pwx",
+            "ultratrail:big",
+            "gemmini:-1",
+            "plasticine:",
+            "plasticine:4x4",
+            "plasticine:4x4:t",
+            "file:",
+        ] {
+            assert!(parse_arch(bad).is_err(), "spec {bad:?} should fail to parse");
+        }
+    }
+
+    #[test]
+    fn file_spec_parses_to_described_arch() {
+        match parse_arch("file:arch/systolic_16x16.toml").unwrap() {
+            Arch::Described(d) => assert_eq!(d.label(), "arch/systolic_16x16.toml"),
+            other => panic!("expected described arch, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn serve_estimates_and_reports_errors() {
         let input = "# comment\nestimate ultratrail tc_resnet8\nestimate ultratrail alexnet\nbogus\nquit\n";
         let mut out = Vec::new();
@@ -141,5 +266,32 @@ mod tests {
         assert!(lines[0].contains("cycles="), "{}", lines[0]);
         assert!(lines[1].starts_with("error:"));
         assert!(lines[2].starts_with("error:"));
+    }
+
+    #[test]
+    fn serve_unknown_inline_arch_is_an_error() {
+        let input = "estimate @nope tc_resnet8\nquit\n";
+        let mut out = Vec::new();
+        serve(std::io::Cursor::new(input), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("no described architecture @nope"), "{text}");
+    }
+
+    #[test]
+    fn serve_describe_registers_inline_archs() {
+        // a body that parses but fails validation exercises the protocol
+        // without needing a full architecture in the test
+        let input = "describe broken\n[arch]\nname = \"x\"\nend\nestimate @broken tc_resnet8\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 2);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("described @broken"), "{text}");
+        // the estimate against the incomplete description must fail cleanly
+        assert!(text.contains("error:"), "{text}");
+        // unterminated describe is an error
+        let mut out = Vec::new();
+        serve(std::io::Cursor::new("describe x\n[arch]\n"), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().contains("not terminated"));
     }
 }

@@ -5,15 +5,20 @@
 //! acadl-perf simulate <arch> <network>             cycle-accurate DES (slow)
 //! acadl-perf compare <arch> <network>              AIDG vs roofline vs DES
 //! acadl-perf dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]
+//! acadl-perf check <file.toml>                     validate a description
 //! acadl-perf serve                                 line-based request loop
 //! acadl-perf info                                  platform + model zoo
 //! ```
 //!
 //! Architecture specs: `systolic:4x4[:pw2]`, `ultratrail[:8]`,
-//! `gemmini[:16]`, `plasticine:3x6:16`.
+//! `gemmini[:16]`, `plasticine:3x6:16`, or a textual ACADL description via
+//! `file:<path>` / `--arch-file <path>` (see `arch/README.md`).
 
+use acadl_perf::acadl::text::{check_source, Severity};
 use acadl_perf::aidg::FixedPointConfig;
-use acadl_perf::coordinator::{self, Arch, DseSpec, EstimateRequest, Pool, RooflineBackend};
+use acadl_perf::coordinator::{
+    self, Arch, DescribedArch, DseSpec, EstimateRequest, Pool, RooflineBackend,
+};
 use acadl_perf::report::{fmt_bytes, fmt_cycles, Table};
 use acadl_perf::Result;
 
@@ -31,6 +36,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("simulate") => simulate(&args[1..]),
         Some("compare") => compare(&args[1..]),
         Some("dse") => dse(&args[1..]),
+        Some("check") => check(&args[1..]),
         Some("serve") => {
             let stdin = std::io::stdin();
             let n = coordinator::serve(stdin.lock(), std::io::stdout())?;
@@ -39,16 +45,41 @@ fn dispatch(args: &[String]) -> Result<()> {
         }
         Some("info") => info(),
         _ => {
-            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|serve|info> ...");
+            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|serve|info> ...");
             eprintln!("  architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
+            eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
             Ok(())
         }
     }
 }
 
 fn arch_and_net(args: &[String]) -> Result<(Arch, String)> {
+    if args.first().map(String::as_str) == Some("--arch-file") {
+        anyhow::ensure!(args.len() >= 3, "--arch-file <path> <network>");
+        return Ok((Arch::Described(DescribedArch::file(&args[1])), args[2].clone()));
+    }
     anyhow::ensure!(args.len() >= 2, "expected <arch> <network>");
     Ok((coordinator::parse_arch(&args[0])?, args[1].clone()))
+}
+
+/// `acadl-perf check <file>`: parse + expand + validate a description and
+/// print every diagnostic as `file:line:col: severity: message`.
+fn check(args: &[String]) -> Result<()> {
+    anyhow::ensure!(!args.is_empty(), "check <description.toml>");
+    let path = &args[0];
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let (_, diags) = check_source(&src);
+    for d in &diags {
+        println!("{}", d.render(path));
+    }
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    let warnings = diags.len() - errors;
+    if errors > 0 {
+        anyhow::bail!("{path}: {errors} error(s), {warnings} warning(s)");
+    }
+    println!("{path}: ok ({warnings} warning(s))");
+    Ok(())
 }
 
 fn estimate(args: &[String]) -> Result<()> {
@@ -256,6 +287,6 @@ fn info() -> Result<()> {
         }
     );
     println!("networks: {}", acadl_perf::dnn::zoo::all_names().join(", "));
-    println!("architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
+    println!("architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T> | file:<path>");
     Ok(())
 }

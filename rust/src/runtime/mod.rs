@@ -1,11 +1,29 @@
 //! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
 //! (HLO text lowered from the L2 JAX model / L1 Pallas kernels) and runs
 //! them from the estimation hot path. Python never executes at runtime.
+//!
+//! The PJRT path needs the `xla` bindings, which are not vendored in this
+//! offline image: it is gated behind the off-by-default `xla` cargo feature.
+//! Without the feature, [`stub`] provides the same surface — `load()` fails
+//! cleanly and callers (e.g. `RooflineBackend::auto`) fall back to the
+//! native roofline mirror in [`crate::baselines::roofline`].
 
+#[cfg(feature = "xla")]
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod roofline_exec;
 
+#[cfg(feature = "xla")]
 pub use artifact::{artifacts_dir, Artifact};
+#[cfg(feature = "xla")]
 pub use client::{platform_info, with_client};
+#[cfg(feature = "xla")]
 pub use roofline_exec::{RooflineExec, ROOFLINE_BATCH};
+
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{artifacts_dir, platform_info, RooflineExec, ROOFLINE_BATCH};

@@ -1,0 +1,44 @@
+//! No-`xla` stand-ins for the PJRT runtime surface.
+//!
+//! Everything here fails softly: `RooflineExec::load()` returns an error, so
+//! `RooflineBackend::auto()` selects the native mirror, and the CLI's `info`
+//! command reports the runtime as unavailable instead of dying.
+
+use std::path::{Path, PathBuf};
+
+use crate::baselines::roofline::{HwFeatures, LayerFeatures};
+use crate::Result;
+
+/// Mirror of `roofline_exec::ROOFLINE_BATCH` (features.py `ROOFLINE_BATCH`).
+pub const ROOFLINE_BATCH: usize = 1024;
+
+/// Default artifacts directory: `$ACADL_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("ACADL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Platform info string for diagnostics.
+pub fn platform_info() -> Result<String> {
+    anyhow::bail!("built without the `xla` feature (PJRT runtime disabled)")
+}
+
+/// Stub of the AOT roofline executable; never loads.
+pub struct RooflineExec {
+    _private: (),
+}
+
+impl RooflineExec {
+    pub fn load() -> Result<Self> {
+        anyhow::bail!("built without the `xla` feature (PJRT runtime disabled)")
+    }
+
+    pub fn load_from(_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::load()
+    }
+
+    pub fn estimate(&self, _layers: &[LayerFeatures], _hw: &HwFeatures) -> Result<Vec<f64>> {
+        unreachable!("stub RooflineExec cannot be constructed")
+    }
+}

@@ -1,0 +1,210 @@
+//! Random [`Description`] AST generation for the textual-ACADL round-trip
+//! property: AST → pretty-print → parse → same AST. Uses the in-repo
+//! [`Prop`]/[`Rng`] harness (proptest is not vendored offline).
+//!
+//! Generated trees stay inside the canonical-printable subset: literal
+//! segments avoid `$`, negations never wrap constants directly (the parser
+//! folds `-3` to `Const(-3)`), and `foreach` bounds avoid function calls
+//! (the clause splitter treats `,` as a separator).
+
+use crate::acadl::text::ast::{
+    BinOp, Decl, DeclBody, Description, Fetch, ForRange, Func, PExpr, Param, Segment, Span,
+    Spanned, Template,
+};
+
+use super::prop::Rng;
+
+const VARS: &[&str] = &["r", "c", "rows", "cols", "idx", "n", "depth_x"];
+const OPS: &[&str] = &["mac", "load", "store", "conv_ext", "mvin", "route_in", "add"];
+const LIT_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_.[]";
+
+fn ident(rng: &mut Rng) -> String {
+    let mut s = String::new();
+    s.push((b'a' + rng.range_u32(0, 25) as u8) as char);
+    for _ in 0..rng.range_usize(0, 6) {
+        let pool = b"abcdefghijklmnopqrstuvwxyz0123456789_";
+        s.push(pool[rng.range_usize(0, pool.len() - 1)] as char);
+    }
+    s
+}
+
+fn lit_text(rng: &mut Rng) -> String {
+    (0..rng.range_usize(1, 6))
+        .map(|_| LIT_CHARS[rng.range_usize(0, LIT_CHARS.len() - 1)] as char)
+        .collect()
+}
+
+/// A random parameter expression. `calls` gates `cdiv`/`max`/`min`.
+pub fn arbitrary_pexpr(rng: &mut Rng, depth: usize, calls: bool) -> PExpr {
+    if depth == 0 || rng.range_u32(0, 3) == 0 {
+        return if rng.bool() {
+            PExpr::Const(rng.range_u64(0, 99) as i64)
+        } else {
+            PExpr::Var(rng.pick(VARS).to_string())
+        };
+    }
+    match rng.range_u32(0, if calls { 5 } else { 4 }) {
+        0 => PExpr::Neg(Box::new(PExpr::Var(rng.pick(VARS).to_string()))),
+        1 | 2 | 3 => {
+            let op = *rng.pick(&[
+                BinOp::Add,
+                BinOp::Sub,
+                BinOp::Mul,
+                BinOp::Div,
+                BinOp::Rem,
+                BinOp::Eq,
+                BinOp::Ne,
+                BinOp::Lt,
+                BinOp::Le,
+                BinOp::Gt,
+                BinOp::Ge,
+                BinOp::And,
+                BinOp::Or,
+            ]);
+            PExpr::Bin(
+                op,
+                Box::new(arbitrary_pexpr(rng, depth - 1, calls)),
+                Box::new(arbitrary_pexpr(rng, depth - 1, calls)),
+            )
+        }
+        _ => PExpr::Call(
+            *rng.pick(&[Func::Cdiv, Func::Max, Func::Min]),
+            Box::new(arbitrary_pexpr(rng, depth - 1, calls)),
+            Box::new(arbitrary_pexpr(rng, depth - 1, calls)),
+        ),
+    }
+}
+
+/// A random interpolated template (alternating literal and `${}` segments).
+pub fn arbitrary_template(rng: &mut Rng) -> Template {
+    let mut segments = Vec::new();
+    let mut want_lit = rng.bool();
+    for _ in 0..rng.range_usize(1, 4) {
+        if want_lit {
+            segments.push(Segment::Lit(lit_text(rng)));
+        } else {
+            segments.push(Segment::Expr(arbitrary_pexpr(rng, 2, true)));
+        }
+        want_lit = !want_lit;
+    }
+    Template { segments, span: Span::default() }
+}
+
+fn sp<T>(node: T) -> Spanned<T> {
+    Spanned::bare(node)
+}
+
+fn spanned_pexpr(rng: &mut Rng, calls: bool) -> Spanned<PExpr> {
+    sp(arbitrary_pexpr(rng, 2, calls))
+}
+
+fn ops_list(rng: &mut Rng) -> Vec<Spanned<String>> {
+    (0..rng.range_usize(0, 3)).map(|_| sp(rng.pick(OPS).to_string())).collect()
+}
+
+fn arbitrary_body(rng: &mut Rng) -> DeclBody {
+    match rng.range_u32(0, 10) {
+        0 => DeclBody::Stage { name: arbitrary_template(rng), latency: arbitrary_template(rng) },
+        1 => DeclBody::ExecuteStage { name: arbitrary_template(rng) },
+        2 => DeclBody::FunctionalUnit {
+            name: arbitrary_template(rng),
+            container: if rng.bool() { Some(arbitrary_template(rng)) } else { None },
+            latency: arbitrary_template(rng),
+            ops: ops_list(rng),
+        },
+        3 => DeclBody::RegisterFile {
+            name: arbitrary_template(rng),
+            prefix: arbitrary_template(rng),
+            count: spanned_pexpr(rng, true),
+        },
+        4 => DeclBody::Memory {
+            name: arbitrary_template(rng),
+            read_latency: arbitrary_template(rng),
+            write_latency: arbitrary_template(rng),
+            port_width: spanned_pexpr(rng, true),
+            max_concurrent: spanned_pexpr(rng, true),
+            base: spanned_pexpr(rng, true),
+            words: spanned_pexpr(rng, true),
+        },
+        5 => DeclBody::Forward { from: arbitrary_template(rng), to: arbitrary_template(rng) },
+        6 => DeclBody::Contains { parent: arbitrary_template(rng), child: arbitrary_template(rng) },
+        7 => DeclBody::Reads { fu: arbitrary_template(rng), rf: arbitrary_template(rng) },
+        8 => DeclBody::Writes { fu: arbitrary_template(rng), rf: arbitrary_template(rng) },
+        9 => DeclBody::MemRead { fu: arbitrary_template(rng), mem: arbitrary_template(rng) },
+        _ => DeclBody::MemWrite { fu: arbitrary_template(rng), mem: arbitrary_template(rng) },
+    }
+}
+
+fn arbitrary_decl(rng: &mut Rng) -> Decl {
+    let foreach = (0..rng.range_usize(0, 2))
+        .map(|_| ForRange {
+            var: sp(rng.pick(VARS).to_string()),
+            // no calls: the foreach splitter treats `,` as a separator
+            lo: sp(arbitrary_pexpr(rng, 1, false)),
+            hi: sp(arbitrary_pexpr(rng, 1, false)),
+        })
+        .collect();
+    let when = if rng.bool() { Some(spanned_pexpr(rng, true)) } else { None };
+    Decl { body: arbitrary_body(rng), foreach, when, span: Span::default() }
+}
+
+/// A random description: always named with a fetch section, plus random
+/// params, isa, mapper, and declarations.
+pub fn arbitrary_description(rng: &mut Rng) -> Description {
+    let n_params = rng.range_usize(0, 4);
+    let mut params = Vec::new();
+    for i in 0..n_params {
+        params.push(Param {
+            name: sp(format!("{}{i}", ident(rng))),
+            value: sp(rng.range_u64(0, 1 << 40) as i64),
+        });
+    }
+    Description {
+        name: Some(arbitrary_template(rng)),
+        params,
+        isa: if rng.bool() { Some(ops_list(rng)) } else { None },
+        fetch: Some(Fetch {
+            imem: arbitrary_template(rng),
+            imem_read_latency: spanned_pexpr(rng, true),
+            imem_port_width: spanned_pexpr(rng, true),
+            ifs: arbitrary_template(rng),
+            ifs_latency: spanned_pexpr(rng, true),
+            issue_buffer: spanned_pexpr(rng, true),
+            span: Span::default(),
+        }),
+        mapper: if rng.bool() { Some(sp(ident(rng))) } else { None },
+        decls: (0..rng.range_usize(0, 6)).map(|_| arbitrary_decl(rng)).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::acadl::text::parse;
+    use crate::testkit::Prop;
+
+    #[test]
+    fn description_roundtrips_through_pretty_printer() {
+        Prop::new(0xACAD1).cases(256).run(|rng| {
+            let ast = arbitrary_description(rng);
+            let printed = ast.to_toml();
+            let reparsed =
+                parse(&printed).unwrap_or_else(|e| panic!("reparse failed: {e}\n---\n{printed}"));
+            assert_eq!(ast, reparsed, "pretty-printed form:\n{printed}");
+        });
+    }
+
+    #[test]
+    fn pexpr_roundtrips_through_display() {
+        Prop::new(0xACAD2).cases(512).run(|rng| {
+            let e = arbitrary_pexpr(rng, 4, true);
+            let printed = e.to_string();
+            let reparsed = crate::acadl::text::parser::parse_pexpr(
+                &printed,
+                crate::acadl::text::Span::default(),
+            )
+            .unwrap_or_else(|d| panic!("reparse failed: {d}\n{printed}"));
+            assert_eq!(e, reparsed, "printed: {printed}");
+        });
+    }
+}

@@ -1,6 +1,9 @@
 //! Test utilities: a small deterministic property-testing helper (proptest
-//! is not vendored in this offline image) and shared fixtures.
+//! is not vendored in this offline image), random textual-ACADL AST
+//! generation for the frontend round-trip property, and shared fixtures.
 
+pub mod arch_gen;
 pub mod prop;
 
+pub use arch_gen::{arbitrary_description, arbitrary_pexpr, arbitrary_template};
 pub use prop::{Prop, Rng};

@@ -1,0 +1,170 @@
+//! Round-trip fidelity of the textual ACADL frontend: each shipped
+//! `arch/*.toml` description must compile to a diagram whose fixed-point
+//! AIDG estimates are **cycle-identical** to the hand-built `accel::*`
+//! builder on a paper workload, the registry cache must skip recompilation
+//! on unchanged content, and the validator must report the documented error
+//! classes with file/line spans.
+
+use acadl_perf::acadl::text::{check_source, ArchRegistry, Severity};
+use acadl_perf::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailConfig};
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{estimate_network, serve, Arch, DescribedArch};
+use acadl_perf::dnn::zoo;
+
+/// Estimate `network` on both the description-compiled and the hand-built
+/// architecture and require identical results, layer by layer.
+fn assert_cycle_identical(file: &str, hand: Arch, network: &str) {
+    let net = zoo::by_name(network).expect("workload in zoo");
+    let fp = FixedPointConfig::default();
+
+    let described = Arch::Described(DescribedArch::file(file));
+    let dm = described.mapper().unwrap_or_else(|e| panic!("compiling {file}: {e:#}"));
+    let hm = hand.mapper().unwrap();
+
+    let de = estimate_network(dm.as_ref(), &net, &fp).unwrap();
+    let he = estimate_network(hm.as_ref(), &net, &fp).unwrap();
+
+    assert_eq!(de.arch, he.arch, "{file}: architecture names differ");
+    assert_eq!(
+        de.layer_cycles(),
+        he.layer_cycles(),
+        "{file}: per-layer cycles differ from the hand-built builder"
+    );
+    assert_eq!(de.total_cycles(), he.total_cycles(), "{file}: total cycles differ");
+    assert_eq!(
+        de.evaluated_iters(),
+        he.evaluated_iters(),
+        "{file}: fixed-point evaluation took a different path"
+    );
+    assert_eq!(de.total_iters(), he.total_iters());
+}
+
+#[test]
+fn systolic_description_matches_builder() {
+    assert_cycle_identical(
+        "arch/systolic_16x16.toml",
+        Arch::Systolic(SystolicConfig::new(16, 16)),
+        "tc_resnet8",
+    );
+}
+
+#[test]
+fn ultratrail_description_matches_builder() {
+    assert_cycle_identical(
+        "arch/ultratrail_8x8.toml",
+        Arch::UltraTrail(UltraTrailConfig::default()),
+        "tc_resnet8",
+    );
+}
+
+#[test]
+fn gemmini_description_matches_builder() {
+    assert_cycle_identical(
+        "arch/gemmini_16.toml",
+        Arch::Gemmini(GemminiConfig::default()),
+        "tc_resnet8",
+    );
+}
+
+#[test]
+fn plasticine_description_matches_builder() {
+    assert_cycle_identical(
+        "arch/plasticine_3x6.toml",
+        Arch::Plasticine(PlasticineConfig::new(3, 6, 16)),
+        "tc_resnet8",
+    );
+}
+
+#[test]
+fn shipped_descriptions_validate_cleanly() {
+    for file in [
+        "arch/systolic_16x16.toml",
+        "arch/ultratrail_8x8.toml",
+        "arch/gemmini_16.toml",
+        "arch/plasticine_3x6.toml",
+    ] {
+        let src = std::fs::read_to_string(file).unwrap();
+        let (flat, diags) = check_source(&src);
+        assert!(flat.is_some(), "{file} did not parse");
+        let errors: Vec<_> = diags.iter().filter(|d| d.is_error()).collect();
+        assert!(errors.is_empty(), "{file}: {errors:?}");
+    }
+}
+
+#[test]
+fn registry_cache_hit_skips_recompilation() {
+    let src = std::fs::read_to_string("arch/ultratrail_8x8.toml").unwrap();
+    let reg = ArchRegistry::new();
+
+    let a = reg.get_or_compile(&src, "ultratrail").unwrap();
+    assert_eq!(reg.compile_count(), 1);
+    assert_eq!(reg.len(), 1);
+
+    // identical content: cache hit, no recompilation, same shared model
+    let b = reg.get_or_compile(&src, "ultratrail").unwrap();
+    assert_eq!(reg.compile_count(), 1, "cache hit must not recompile");
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "cache hit must return the shared model");
+
+    // changed content (even just a comment) is a different architecture key
+    let changed = format!("{src}\n# tweaked\n");
+    reg.get_or_compile(&changed, "ultratrail").unwrap();
+    assert_eq!(reg.compile_count(), 2);
+    assert_eq!(reg.len(), 2);
+}
+
+#[test]
+fn described_estimates_flow_through_the_server() {
+    let src = std::fs::read_to_string("arch/ultratrail_8x8.toml").unwrap();
+    let input = format!("describe ut\n{src}end\nestimate @ut tc_resnet8\nquit\n");
+    let mut out = Vec::new();
+    let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+    assert_eq!(served, 2);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines[0], "described @ut");
+    assert!(
+        lines[1].starts_with("ultratrail8x8 tc_resnet8 cycles="),
+        "unexpected server reply: {}",
+        lines[1]
+    );
+}
+
+#[test]
+fn check_reports_spanned_errors_for_broken_descriptions() {
+    let src = std::fs::read_to_string("arch/ultratrail_8x8.toml").unwrap();
+    // break it three ways: an op outside [isa], a dangling edge target, and
+    // a containment cycle via explicit [[contains]] edges
+    let broken = format!(
+        "{src}\n[[mem_read]]\nfu = \"macArrayAndOPU\"\nmem = \"ghost_mem\"\n\n\
+         [[execute_stage]]\nname = \"esA\"\n\n[[execute_stage]]\nname = \"esB\"\n\n\
+         [[contains]]\nparent = \"esA\"\nchild = \"esB\"\n\n\
+         [[contains]]\nparent = \"esB\"\nchild = \"esA\"\n"
+    );
+    let broken = broken.replace("ops = [\"add_ext\"]", "ops = [\"warp_ext\"]");
+    let (_, diags) = check_source(&broken);
+    let errors: Vec<String> = diags
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(|d| d.render("arch.toml"))
+        .collect();
+    assert!(
+        errors.iter().any(|e| e.contains("unknown op `warp_ext`")),
+        "missing unknown-op error: {errors:?}"
+    );
+    assert!(
+        errors.iter().any(|e| e.contains("dangling route: no object named `ghost_mem`")),
+        "missing dangling-route error: {errors:?}"
+    );
+    assert!(
+        errors.iter().any(|e| e.contains("containment cycle")),
+        "missing containment-cycle error: {errors:?}"
+    );
+    // every rendered diagnostic carries file:line:col
+    for e in &errors {
+        let rest = e.strip_prefix("arch.toml:").unwrap_or_else(|| panic!("no origin in {e}"));
+        let mut parts = rest.splitn(3, ':');
+        let line: u32 = parts.next().unwrap().parse().unwrap();
+        let _col: u32 = parts.next().unwrap().parse().unwrap();
+        assert!(line >= 1, "bad line in {e}");
+    }
+}

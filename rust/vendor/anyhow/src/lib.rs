@@ -1,0 +1,233 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate.
+//!
+//! The container image this repo builds in has no crates.io registry, so the
+//! subset of `anyhow` the codebase actually uses is vendored here: [`Error`]
+//! (a boxed context chain), [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror upstream where it matters to callers:
+//! - `Display` shows the outermost message only;
+//! - `{:#}` (alternate) shows the whole chain joined with `": "`;
+//! - `Debug` shows the outermost message plus a `Caused by:` list;
+//! - `Error` deliberately does **not** implement `std::error::Error`, so the
+//!   blanket `From<E: std::error::Error>` conversion can coexist with the
+//!   reflexive `From<Error>`.
+
+use std::fmt::{self, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost context, `chain.last()` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(message: impl Display) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error in an additional layer of context.
+    pub fn context(mut self, context: impl Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The chain of messages, outermost first (mirror of upstream
+    /// `Error::chain`, as strings).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+// Coherent with the impl above because `Error` is a local type that is
+// guaranteed (orphan rules) never to implement `std::error::Error`.
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: `", stringify!($cond), "`")));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_u32(s: &str) -> Result<u32> {
+        let v = s.parse::<u32>().context("parsing a u32")?;
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = parse_u32("x").unwrap_err();
+        assert_eq!(e.to_string(), "parsing a u32");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("parsing a u32: "), "{full}");
+        assert!(format!("{e:?}").contains("Caused by"), "{e:?}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7).context("missing").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+    }
+
+    #[test]
+    fn from_walks_source_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e = Error::from(io).context("outer");
+        assert_eq!(e.root_cause(), "inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

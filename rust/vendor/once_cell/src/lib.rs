@@ -1,0 +1,119 @@
+//! Minimal, API-compatible stand-in for the `once_cell` crate.
+//!
+//! The container image this repo builds in has no crates.io registry, so the
+//! two types the codebase uses are vendored here: [`sync::Lazy`] (built on
+//! `std::sync::OnceLock`) and [`unsync::OnceCell`] (single-threaded, with
+//! `get_or_try_init`, which is still unstable on `std::cell::OnceCell`).
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access. For `static` use the init
+    /// closure must be capture-less (it coerces to the `fn() -> T` default).
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Self {
+            Self { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        /// Force evaluation and return a reference to the value.
+        pub fn force(this: &Self) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+pub mod unsync {
+    use std::cell::UnsafeCell;
+
+    /// A single-threaded write-once cell.
+    ///
+    /// Safety model: `!Sync` (via `UnsafeCell`), and the value slot is only
+    /// written while no `&T` has ever been handed out (it transitions
+    /// `None -> Some` exactly once and is never overwritten), so returned
+    /// references stay valid for the cell's lifetime. The init closure must
+    /// not reentrantly initialize the same cell.
+    pub struct OnceCell<T> {
+        value: UnsafeCell<Option<T>>,
+    }
+
+    impl<T> OnceCell<T> {
+        pub const fn new() -> Self {
+            Self { value: UnsafeCell::new(None) }
+        }
+
+        pub fn get(&self) -> Option<&T> {
+            // SAFETY: !Sync; the slot is never overwritten once Some.
+            unsafe { (*self.value.get()).as_ref() }
+        }
+
+        /// Set the value; errors with it if already initialized.
+        pub fn set(&self, value: T) -> Result<(), T> {
+            if self.get().is_some() {
+                return Err(value);
+            }
+            // SAFETY: slot is None, no outstanding &T can exist.
+            unsafe { *self.value.get() = Some(value) };
+            Ok(())
+        }
+
+        pub fn get_or_init(&self, f: impl FnOnce() -> T) -> &T {
+            match self.get_or_try_init(|| Ok::<T, std::convert::Infallible>(f())) {
+                Ok(v) => v,
+                Err(never) => match never {},
+            }
+        }
+
+        pub fn get_or_try_init<E>(&self, f: impl FnOnce() -> Result<T, E>) -> Result<&T, E> {
+            if let Some(v) = self.get() {
+                return Ok(v);
+            }
+            let value = f()?;
+            // SAFETY: still single-threaded; f() must not have initialized
+            // the cell reentrantly (per the type's contract).
+            unsafe { *self.value.get() = Some(value) };
+            Ok(self.get().expect("just initialized"))
+        }
+    }
+
+    impl<T> Default for OnceCell<T> {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn lazy_static_initializes_once() {
+        static N: super::sync::Lazy<u32> = super::sync::Lazy::new(|| 41 + 1);
+        assert_eq!(*N, 42);
+        assert_eq!(*N, 42);
+    }
+
+    #[test]
+    fn unsync_once_cell() {
+        let c = super::unsync::OnceCell::new();
+        assert!(c.get().is_none());
+        assert_eq!(c.get_or_try_init(|| Ok::<_, ()>(7)).unwrap(), &7);
+        assert_eq!(c.get(), Some(&7));
+        assert!(c.set(9).is_err());
+        assert_eq!(c.get_or_init(|| 11), &7);
+    }
+}
