@@ -20,7 +20,7 @@ fn main() {
             RooflineBackend::Native => "native mirror (artifacts not built)",
         }
     );
-    let mut pool = Pool::new(0);
+    let pool = Pool::new(0);
     let mut csv = Csv::new(
         "fig15_plasticine_dse",
         &["dnn", "rows", "cols", "tile", "roofline", "aidg"],
@@ -35,7 +35,7 @@ fn main() {
             fp: FixedPointConfig::default(),
         };
         let t0 = std::time::Instant::now();
-        let points = explore(&spec, &mut pool, &backend).unwrap();
+        let points = explore(&spec, &pool, &backend).unwrap();
         let mut t = Table::new(
             format!("Fig. 15 — {} ({} design points, {:.1}s)", name, points.len(),
                 t0.elapsed().as_secs_f64()),

@@ -1,11 +1,15 @@
-//! §Perf — AIDG evaluator throughput and end-to-end estimation latency
-//! microbenchmarks (the EXPERIMENTS.md §Perf numbers).
+//! §Perf — AIDG evaluator throughput, end-to-end estimation latency, and
+//! unified-engine cold/warm microbenchmarks (the EXPERIMENTS.md §Perf
+//! numbers). Emits `BENCH_engine.json` with machine-readable cold/warm
+//! wall-times and the warm hit rate so future PRs have a perf trajectory.
 use std::sync::Arc;
 
 use acadl_perf::accel::{Systolic, SystolicConfig};
 use acadl_perf::aidg::{estimate_layer, Evaluator, FixedPointConfig};
-use acadl_perf::bench_harness::{bench, section};
+use acadl_perf::bench_harness::{bench, section, time_once};
+use acadl_perf::coordinator::Arch;
 use acadl_perf::dnn::zoo;
+use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
 use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
 
 fn main() {
@@ -43,4 +47,36 @@ fn main() {
             }
         });
     }
+
+    section("perf — unified engine: cold vs warm (content-addressed cache)");
+    let arch = Arch::Systolic(SystolicConfig::new(4, 4));
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let (cold, cold_dt) =
+        time_once("engine/tc_resnet8 on systolic4x4 (cold)", || {
+            engine.estimate_network(&arch, &net, &fp).unwrap()
+        });
+    let (warm, warm_dt) =
+        time_once("engine/tc_resnet8 on systolic4x4 (warm)", || {
+            engine.estimate_network(&arch, &net, &fp).unwrap()
+        });
+    assert_eq!(cold.total_cycles(), warm.total_cycles(), "cache must be cycle-identical");
+    let hit_rate = (warm.stats.cache_hits + warm.stats.deduped) as f64
+        / warm.stats.total_kernels.max(1) as f64;
+    let json = format!(
+        "{{\n  \"bench\": \"engine_cold_warm\",\n  \"network\": \"tc_resnet8\",\n  \
+         \"arch\": \"systolic4x4\",\n  \"cold_ms\": {:.3},\n  \"warm_ms\": {:.3},\n  \
+         \"speedup\": {:.2},\n  \"total_kernels\": {},\n  \"unique_kernels\": {},\n  \
+         \"deduped\": {},\n  \"warm_hit_rate\": {:.4}\n}}\n",
+        cold_dt.as_secs_f64() * 1e3,
+        warm_dt.as_secs_f64() * 1e3,
+        cold_dt.as_secs_f64() / warm_dt.as_secs_f64().max(1e-9),
+        cold.stats.total_kernels,
+        cold.stats.unique_kernels,
+        cold.stats.deduped,
+        hit_rate,
+    );
+    std::fs::write("BENCH_engine.json", &json).expect("writing BENCH_engine.json");
+    println!("  => warm hit rate {:.1}% — wrote BENCH_engine.json", hit_rate * 100.0);
 }

@@ -9,8 +9,9 @@ use std::sync::Arc;
 
 use acadl_perf::accel::{Gemmini, GemminiConfig};
 use acadl_perf::bench_harness::section;
-use acadl_perf::coordinator::estimate_network;
+use acadl_perf::coordinator::Arch;
 use acadl_perf::dnn::zoo;
+use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
 use acadl_perf::expt::Comparison;
 use acadl_perf::mapping::{gemm_tile::GemmTileMapper, Mapper};
 use acadl_perf::report::fmt_cycles;
@@ -26,9 +27,15 @@ fn main() {
         .unwrap();
     println!("paper (227×227, vs Verilator 43.5 h): AIDG −2.02% PE, 9.78% MAPE in 37.9 s\n");
 
-    section("Table 3b — full-size AlexNet, AIDG estimate only");
+    section("Table 3b — full-size AlexNet, AIDG estimate only (cold engine)");
     let full = zoo::alexnet();
-    let e = estimate_network(&mapper, &full, &acadl_perf::aidg::FixedPointConfig::default())
+    let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let e = engine
+        .estimate_network(
+            &Arch::Gemmini(GemminiConfig::default()),
+            &full,
+            &acadl_perf::aidg::FixedPointConfig::default(),
+        )
         .unwrap();
     println!(
         "alexnet: {} cycles | {} of {} iterations evaluated ({:.4}%) | {} instructions | {}",
@@ -38,5 +45,9 @@ fn main() {
         100.0 * e.evaluated_iters() as f64 / e.total_iters().max(1) as f64,
         e.total_insts(),
         acadl_perf::bench_harness::fmt_dur(e.runtime),
+    );
+    println!(
+        "engine: {} kernels, {} unique, {} deduped",
+        e.stats.total_kernels, e.stats.unique_kernels, e.stats.deduped,
     );
 }

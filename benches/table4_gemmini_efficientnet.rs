@@ -4,8 +4,9 @@ use std::sync::Arc;
 
 use acadl_perf::accel::{Gemmini, GemminiConfig};
 use acadl_perf::bench_harness::section;
-use acadl_perf::coordinator::estimate_network;
+use acadl_perf::coordinator::Arch;
 use acadl_perf::dnn::zoo;
+use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
 use acadl_perf::expt::Comparison;
 use acadl_perf::mapping::{gemm_tile::GemmTileMapper, Mapper};
 use acadl_perf::report::fmt_cycles;
@@ -21,9 +22,15 @@ fn main() {
         .unwrap();
     println!("paper (224×224, vs Verilator 11.9 h): AIDG −0.56% PE, 7.51% MAPE in 17.3 s\n");
 
-    section("Table 4b — full-size EfficientNet, AIDG estimate only");
+    section("Table 4b — full-size EfficientNet, AIDG estimate only (cold engine)");
     let full = zoo::efficientnet();
-    let e = estimate_network(&mapper, &full, &acadl_perf::aidg::FixedPointConfig::default())
+    let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let e = engine
+        .estimate_network(
+            &Arch::Gemmini(GemminiConfig::default()),
+            &full,
+            &acadl_perf::aidg::FixedPointConfig::default(),
+        )
         .unwrap();
     println!(
         "efficientnet: {} cycles | {} of {} iterations evaluated ({:.4}%) | {}",
@@ -32,5 +39,9 @@ fn main() {
         e.total_iters(),
         100.0 * e.evaluated_iters() as f64 / e.total_iters().max(1) as f64,
         acadl_perf::bench_harness::fmt_dur(e.runtime),
+    );
+    println!(
+        "engine: {} kernels, {} unique, {} deduped (MBConv blocks repeat)",
+        e.stats.total_kernels, e.stats.unique_kernels, e.stats.deduped,
     );
 }

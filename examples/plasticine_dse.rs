@@ -31,9 +31,9 @@ fn main() -> Result<()> {
             RooflineBackend::Native => "native mirror (run `make artifacts` for XLA)",
         }
     );
-    let mut pool = Pool::new(0);
+    let pool = Pool::new(0);
     let t0 = std::time::Instant::now();
-    let points = explore(&spec, &mut pool, &backend)?;
+    let points = explore(&spec, &pool, &backend)?;
     let mut t = Table::new(
         format!(
             "Fig. 15 DSE — {} over {} design points ({:.1} s)",

@@ -540,6 +540,43 @@ impl Diagram {
         None
     }
 
+    /// Structural content digest of a finalized diagram: a hash over every
+    /// primitive table that can influence routing or timing — object kinds
+    /// (with latencies, port widths, capacities, address ranges), all
+    /// association edges, and the fetch front-end. Object and register
+    /// *names* are deliberately excluded: estimation only sees interned ids,
+    /// so two structurally identical diagrams (e.g. a hand builder and its
+    /// textual description) digest equally and can share cached kernel
+    /// estimates (`crate::engine`). Derived tables (locks, address map,
+    /// stage paths) are functions of the hashed primitives and need not be
+    /// hashed themselves.
+    pub fn content_digest(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        assert!(self.finalized, "content_digest requires a finalized diagram");
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        self.objects.len().hash(&mut h);
+        for o in &self.objects {
+            o.kind.hash(&mut h);
+        }
+        for assoc in [
+            &self.forward,
+            &self.contains,
+            &self.fu_read_rf,
+            &self.fu_write_rf,
+            &self.fu_read_mem,
+            &self.fu_write_mem,
+        ] {
+            for edges in assoc.iter() {
+                edges.hash(&mut h);
+            }
+        }
+        let f = self.fetch.as_ref().expect("finalized diagram has fetch");
+        (f.instr_mem, f.port_width, f.read_latency, f.fetch_stage, f.ifs_latency)
+            .hash(&mut h);
+        f.issue_buffer_size.hash(&mut h);
+        h.finish()
+    }
+
     // ---- routing -----------------------------------------------------------
 
     /// Memory objects serving `addrs`, deduped in first-occurrence order.
@@ -736,6 +773,32 @@ mod tests {
         assert_eq!(d.mem_latency(mem, 3, false, &i), 8);
         assert_eq!(d.mem_latency(mem, 1, false, &i), 4);
         assert_eq!(d.mem_latency(mem, 0, true, &i), 4); // clamped min 1 txn
+    }
+
+    #[test]
+    fn content_digest_is_structural() {
+        let (d1, _, _) = tiny();
+        let (d2, _, _) = tiny();
+        // independently built but identical structures digest equally
+        assert_eq!(d1.content_digest(), d2.content_digest());
+        // any timing-relevant knob moves the digest
+        let variant = |mem_ports: u32| {
+            let mut d = Diagram::new("tiny");
+            let (_imem, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+            let es = d.add_execute_stage("es0");
+            let (rf, _regs) = d.add_regfile("rf0", "r", 4);
+            let mem = d.add_memory("dmem", 4, 4, 2, mem_ports, 0, 1024);
+            let alu = d.add_fu(es, "alu0", Latency::Fixed(1), &["add", "load"]);
+            d.forward(ifs, es);
+            d.fu_reads(alu, rf);
+            d.fu_writes(alu, rf);
+            d.mem_reads(alu, mem);
+            d.mem_writes(alu, mem);
+            d.finalize().unwrap();
+            d.content_digest()
+        };
+        assert_eq!(variant(1), d1.content_digest());
+        assert_ne!(variant(2), d1.content_digest());
     }
 
     #[test]

@@ -25,7 +25,9 @@ use crate::ids::Cycle;
 use crate::isa::Instruction;
 
 /// A module latency: constant cycles or an expression over immediates.
-#[derive(Debug, Clone, PartialEq)]
+/// (`Hash` feeds [`crate::acadl::Diagram::content_digest`] — the engine's
+/// architecture fingerprint.)
+#[derive(Debug, Clone, PartialEq, Hash)]
 pub enum Latency {
     Fixed(Cycle),
     Expr(Expr),
@@ -63,7 +65,7 @@ impl From<u64> for Latency {
 }
 
 /// Parsed latency expression AST.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Hash)]
 pub enum Expr {
     Const(i64),
     /// `immN` — index into [`Instruction::imms`]; missing entries read 0.

@@ -11,7 +11,9 @@ use crate::acadl::latency::Latency;
 use crate::ids::{Addr, Cycle, ObjId, OpId, RegId};
 
 /// Kind + attributes of one ACADL object.
-#[derive(Debug, Clone)]
+/// (`Hash` feeds [`crate::acadl::Diagram::content_digest`] — the engine's
+/// architecture fingerprint.)
+#[derive(Debug, Clone, Hash)]
 pub enum ObjectKind {
     /// Forwards instructions; an instruction resides `latency` cycles inside
     /// before being forwarded (paper: PipelineStage).

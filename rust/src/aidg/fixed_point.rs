@@ -44,6 +44,23 @@ impl Default for FixedPointConfig {
     }
 }
 
+/// Where a [`LayerEstimate`] came from — provenance stamped by the unified
+/// estimation engine ([`crate::engine`]). Direct `estimate_layer` calls
+/// always produce [`Provenance::Computed`]; the engine re-stamps clones it
+/// hands out from its cache or from intra-request deduplication. Provenance
+/// never affects the numeric fields: a reused estimate is cycle-identical
+/// to recomputing it (the cache key covers everything the estimator reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Provenance {
+    /// Evaluated through the AIDG in this request.
+    #[default]
+    Computed,
+    /// Reused from an identical kernel earlier in the same request.
+    Deduped,
+    /// Served from the cross-request estimate cache.
+    CacheHit,
+}
+
 /// Result of estimating one mapped layer.
 #[derive(Debug, Clone)]
 pub struct LayerEstimate {
@@ -68,6 +85,8 @@ pub struct LayerEstimate {
     /// Peak tracked evaluator state (bytes) — the Fig. 11/12 metric.
     pub peak_state_bytes: u64,
     pub runtime: Duration,
+    /// How this estimate was obtained (see [`Provenance`]).
+    pub provenance: Provenance,
     /// Per-iteration (min_enter, max_leave) when `keep_trace` is set.
     pub trace: Option<Vec<IterStat>>,
 }
@@ -137,6 +156,7 @@ pub fn estimate_layer(
             nodes: ev.st.nodes,
             peak_state_bytes: ev.st.peak_bytes as u64,
             runtime: start.elapsed(),
+            provenance: Provenance::Computed,
             trace: cfg.keep_trace.then_some(ev.iter_stats),
         }
     };
@@ -236,6 +256,7 @@ pub fn evaluate_whole(diagram: &Diagram, kernel: &LoopKernel) -> Result<LayerEst
         nodes: ev.st.nodes,
         peak_state_bytes: ev.st.peak_bytes as u64,
         runtime: start.elapsed(),
+        provenance: Provenance::Computed,
         trace: None,
     })
 }

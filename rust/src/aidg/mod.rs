@@ -14,6 +14,6 @@ pub mod state;
 
 pub use eval::{Evaluator, IterStat};
 pub use fixed_point::{
-    estimate_layer, evaluate_whole, k_block, FixedPointConfig, LayerEstimate,
+    estimate_layer, evaluate_whole, k_block, FixedPointConfig, LayerEstimate, Provenance,
 };
 pub use state::EvalState;

@@ -81,8 +81,10 @@ impl RooflineBackend {
 
 /// Run the exploration. Returns every grid point with its roofline estimate
 /// and (for survivors) its AIDG estimate, sorted best-AIDG-first where
-/// available.
-pub fn explore(spec: &DseSpec, pool: &mut Pool, backend: &RooflineBackend) -> Result<Vec<DsePoint>> {
+/// available. The accurate pass runs through the worker pool and the global
+/// estimation engine, so repeated kernel shapes within each design point's
+/// network are priced once per point.
+pub fn explore(spec: &DseSpec, pool: &Pool, backend: &RooflineBackend) -> Result<Vec<DsePoint>> {
     let net = zoo::by_name(&spec.network)
         .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", spec.network))?;
 
@@ -162,9 +164,9 @@ mod tests {
             keep_frac: 0.5,
             fp: FixedPointConfig::default(),
         };
-        let mut pool = Pool::new(4);
+        let pool = Pool::new(4);
         let backend = RooflineBackend::Native;
-        let points = explore(&spec, &mut pool, &backend).unwrap();
+        let points = explore(&spec, &pool, &backend).unwrap();
         assert_eq!(points.len(), 8);
         let with_aidg = points.iter().filter(|p| p.aidg_cycles.is_some()).count();
         assert_eq!(with_aidg, 4); // keep_frac 0.5
@@ -184,8 +186,8 @@ mod tests {
             keep_frac: 1.0,
             fp: FixedPointConfig::default(),
         };
-        let mut pool = Pool::new(2);
-        let points = explore(&spec, &mut pool, &RooflineBackend::Native).unwrap();
+        let pool = Pool::new(2);
+        let points = explore(&spec, &pool, &RooflineBackend::Native).unwrap();
         assert!(points.iter().all(|p| p.aidg_cycles.is_some()));
     }
 }

@@ -166,6 +166,36 @@ impl LayerOutcome {
     }
 }
 
+/// Kernel-level accounting of how a network estimate was assembled by the
+/// unified engine ([`crate::engine`]). The uncached reference path
+/// ([`estimate_network`]) evaluates everything, so it reports
+/// `evaluated == unique_kernels == total_kernels` and zero hits/dedup.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EstimateStats {
+    /// Kernel slots in the request (every kernel of every non-fused layer).
+    pub total_kernels: u64,
+    /// Distinct kernel fingerprints among those slots.
+    pub unique_kernels: u64,
+    /// Slots served from the cross-request estimate cache.
+    pub cache_hits: u64,
+    /// Slots reusing an identical kernel evaluated earlier in this request.
+    pub deduped: u64,
+    /// Kernels actually evaluated through the AIDG.
+    pub evaluated: u64,
+}
+
+impl EstimateStats {
+    /// Account one kernel slot by its estimate's provenance.
+    pub fn count(&mut self, p: crate::aidg::Provenance) {
+        self.total_kernels += 1;
+        match p {
+            crate::aidg::Provenance::Computed => self.evaluated += 1,
+            crate::aidg::Provenance::Deduped => self.deduped += 1,
+            crate::aidg::Provenance::CacheHit => self.cache_hits += 1,
+        }
+    }
+}
+
 /// Whole-network estimation result (eq. 14: `T̂ = Σ Δt̂_i`).
 #[derive(Debug, Clone)]
 pub struct NetworkEstimate {
@@ -173,6 +203,8 @@ pub struct NetworkEstimate {
     pub arch: String,
     pub layers: Vec<LayerOutcome>,
     pub runtime: Duration,
+    /// How the engine assembled this estimate (hit/miss/dedup accounting).
+    pub stats: EstimateStats,
 }
 
 impl NetworkEstimate {
@@ -201,6 +233,12 @@ impl NetworkEstimate {
 /// Estimate a whole network on a mapper (AIDG fixed-point per layer; a
 /// layer's latency is the sum of its kernels' estimates — §6.3 applied per
 /// uniform loop kernel).
+///
+/// This is the **uncached reference path**: every kernel is evaluated,
+/// nothing is reused. The production hot path is the unified engine
+/// ([`crate::engine::EstimationEngine`]), which `run_request`, the serve
+/// loop, and the CLI route through; `rust/tests/engine_cache.rs` pins the
+/// two cycle-identical.
 pub fn estimate_network(
     mapper: &(impl Mapper + ?Sized),
     net: &Network,
@@ -210,6 +248,7 @@ pub fn estimate_network(
     let mapped: Vec<MappedLayer> = mapper.map_network(net)?;
     let d = mapper.diagram();
     let mut layers = Vec::with_capacity(mapped.len());
+    let mut kernels = 0u64;
     for ml in &mapped {
         if ml.fused {
             layers.push(LayerOutcome { layer_name: ml.layer_name.clone(), estimate: None });
@@ -218,6 +257,7 @@ pub fn estimate_network(
         let mut ests = Vec::with_capacity(ml.kernels.len());
         for k in &ml.kernels {
             ests.push(estimate_layer(d, k, fp)?);
+            kernels += 1;
         }
         layers.push(LayerOutcome { layer_name: ml.layer_name.clone(), estimate: Some(ests) });
     }
@@ -226,15 +266,36 @@ pub fn estimate_network(
         arch: d.name.clone(),
         layers,
         runtime: t0.elapsed(),
+        stats: EstimateStats {
+            total_kernels: kernels,
+            unique_kernels: kernels,
+            evaluated: kernels,
+            ..Default::default()
+        },
     })
 }
 
-/// Run one request end-to-end (build arch, map, estimate).
+/// Run one request end-to-end (build arch, map, estimate) through the
+/// global [`EstimationEngine`](crate::engine::EstimationEngine) — repeated
+/// kernel shapes within the network and across requests are priced once.
 pub fn run_request(req: &EstimateRequest) -> Result<NetworkEstimate> {
     let net = crate::dnn::zoo::by_name(&req.network)
         .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", req.network))?;
-    let mapper = req.arch.mapper()?;
-    estimate_network(mapper.as_ref(), &net, &req.fp)
+    crate::engine::EstimationEngine::global().estimate_network(&req.arch, &net, &req.fp)
+}
+
+/// [`run_request`] with cache misses fanned out at kernel granularity over
+/// `pool` (the serve loop's and the CLI's hot path). Must be called from
+/// outside `pool`'s own workers — see
+/// [`EstimationEngine::estimate_network_pooled`](crate::engine::EstimationEngine::estimate_network_pooled).
+pub fn run_request_pooled(
+    req: &EstimateRequest,
+    pool: &super::pool::Pool,
+) -> Result<NetworkEstimate> {
+    let net = crate::dnn::zoo::by_name(&req.network)
+        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", req.network))?;
+    crate::engine::EstimationEngine::global()
+        .estimate_network_pooled(&req.arch, &net, &req.fp, pool)
 }
 
 #[cfg(test)]

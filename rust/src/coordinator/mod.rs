@@ -1,6 +1,9 @@
-//! The estimation coordinator: request/response types, the worker pool,
-//! the design-space-exploration driver (roofline pre-filter through the AOT
-//! XLA estimator → accurate AIDG pass), and the line-based request server.
+//! The estimation coordinator: request/response types, the generic worker
+//! pool, the design-space-exploration driver (roofline pre-filter through
+//! the AOT XLA estimator → accurate AIDG pass), and the line-based request
+//! server. All estimation paths route through the unified engine
+//! ([`crate::engine`]); [`estimate_network`] remains as the uncached
+//! reference implementation.
 
 pub mod dse;
 pub mod job;
@@ -9,8 +12,8 @@ pub mod server;
 
 pub use dse::{explore, DsePoint, DseSpec, RooflineBackend};
 pub use job::{
-    estimate_network, run_request, Arch, ArchSource, DescribedArch, EstimateRequest,
-    NetworkEstimate,
+    estimate_network, run_request, run_request_pooled, Arch, ArchSource, DescribedArch,
+    EstimateRequest, EstimateStats, NetworkEstimate,
 };
 pub use pool::Pool;
-pub use server::{parse_arch, serve};
+pub use server::{parse_arch, serve, serve_with, ServeOptions};

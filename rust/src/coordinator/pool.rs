@@ -1,8 +1,21 @@
-//! Worker pool: estimation jobs fan out over std threads (tokio is not
+//! Worker pool: a generic work-item pool over std threads (tokio is not
 //! vendored in this offline image — the workload is CPU-bound, so a plain
 //! thread pool over an MPMC queue is the right tool anyway; see DESIGN.md).
+//!
+//! The queue carries boxed closures, not whole estimation requests: the
+//! unified engine ([`crate::engine`]) fans a single network estimate out at
+//! *kernel* granularity via [`Pool::spawn`], so one large request no longer
+//! pins a single worker. The typed request API ([`Pool::submit_all`] /
+//! [`Pool::run_all`]) is a thin layer over the same queue.
+//!
+//! Failure semantics: a panicking work item is caught
+//! (`std::panic::catch_unwind`) and the worker keeps serving; submitting to
+//! a shut-down pool or losing a result both surface as `Err` values — the
+//! pool never panics the caller.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -10,23 +23,27 @@ use crate::Result;
 
 use super::job::{run_request, EstimateRequest, NetworkEstimate};
 
-type Job = (usize, EstimateRequest, Sender<(usize, Result<NetworkEstimate>)>);
+/// A queued unit of work.
+type WorkItem = Box<dyn FnOnce() + Send + 'static>;
 
 /// Shared MPMC queue (Mutex + Condvar; no crossbeam offline).
 struct Queue {
-    jobs: Mutex<(std::collections::VecDeque<Job>, bool)>, // (queue, closed)
+    jobs: Mutex<(VecDeque<WorkItem>, bool)>, // (queue, closed)
     cv: Condvar,
 }
 
 impl Queue {
-    fn push(&self, j: Job) {
+    fn push(&self, j: WorkItem) -> Result<()> {
         let mut g = self.jobs.lock().unwrap();
-        assert!(!g.1, "pool already shut down");
+        if g.1 {
+            anyhow::bail!("worker pool is shut down");
+        }
         g.0.push_back(j);
         self.cv.notify_one();
+        Ok(())
     }
 
-    fn pop(&self) -> Option<Job> {
+    fn pop(&self) -> Option<WorkItem> {
         let mut g = self.jobs.lock().unwrap();
         loop {
             if let Some(j) = g.0.pop_front() {
@@ -49,7 +66,6 @@ impl Queue {
 pub struct Pool {
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
-    next_id: usize,
 }
 
 impl Pool {
@@ -61,7 +77,7 @@ impl Pool {
             n
         };
         let queue = Arc::new(Queue {
-            jobs: Mutex::new((std::collections::VecDeque::new(), false)),
+            jobs: Mutex::new((VecDeque::new(), false)),
             cv: Condvar::new(),
         });
         let workers = (0..n)
@@ -70,44 +86,86 @@ impl Pool {
                 std::thread::Builder::new()
                     .name(format!("acadl-worker-{i}"))
                     .spawn(move || {
-                        while let Some((id, req, tx)) = q.pop() {
-                            let r = run_request(&req);
-                            // receiver may be gone if the caller bailed
-                            let _ = tx.send((id, r));
+                        while let Some(job) = q.pop() {
+                            // a panicking item must not take the worker (and
+                            // with it every queued job) down; the submitter
+                            // observes the failure as a missing result
+                            let _ = catch_unwind(AssertUnwindSafe(job));
                         }
                     })
                     .expect("spawning worker")
             })
             .collect();
-        Self { queue, workers, next_id: 0 }
+        Self { queue, workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue one work item. Fails (instead of panicking) when the pool
+    /// has been shut down.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
+        self.queue.push(Box::new(job))
+    }
+
+    /// Shut the pool down: queued items still run, new submissions fail.
+    /// (Also invoked by `Drop`.)
+    pub fn close(&self) {
+        self.queue.close();
     }
 
     /// Submit a batch of requests; returns a receiver yielding
-    /// `(submission index, result)` in completion order.
+    /// `(submission index, result)` in completion order. Requests that
+    /// cannot be queued (pool shut down) yield an `Err` result immediately.
     pub fn submit_all(
-        &mut self,
+        &self,
         reqs: Vec<EstimateRequest>,
     ) -> Receiver<(usize, Result<NetworkEstimate>)> {
         let (tx, rx) = channel();
-        for req in reqs {
-            let id = self.next_id;
-            self.next_id += 1;
-            self.queue.push((id, req, tx.clone()));
+        for (id, req) in reqs.into_iter().enumerate() {
+            let txc = tx.clone();
+            let queued = self.spawn(move || {
+                let r = run_request(&req);
+                // receiver may be gone if the caller bailed
+                let _ = txc.send((id, r));
+            });
+            if let Err(e) = queued {
+                let _ = tx.send((id, Err(e)));
+            }
         }
         rx
     }
 
-    /// Submit and wait for everything, results in submission order.
-    pub fn run_all(&mut self, reqs: Vec<EstimateRequest>) -> Vec<Result<NetworkEstimate>> {
+    /// Submit and wait for everything, results in submission order. A
+    /// request whose result is lost (its worker died mid-job or the pool
+    /// shut down underneath it) comes back as an `Err` entry — never a
+    /// panic.
+    pub fn run_all(&self, reqs: Vec<EstimateRequest>) -> Vec<Result<NetworkEstimate>> {
         let n = reqs.len();
-        let base = self.next_id;
         let rx = self.submit_all(reqs);
         let mut out: Vec<Option<Result<NetworkEstimate>>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (id, r) = rx.recv().expect("worker pool hung up");
-            out[id - base] = Some(r);
+        let mut got = 0;
+        while got < n {
+            match rx.recv() {
+                Ok((id, r)) => {
+                    out[id] = Some(r);
+                    got += 1;
+                }
+                Err(_) => break, // every sender dropped without delivering
+            }
         }
-        out.into_iter().map(|o| o.expect("missing result")).collect()
+        out.into_iter()
+            .map(|o| {
+                o.unwrap_or_else(|| {
+                    Err(anyhow::anyhow!(
+                        "worker pool hung up before returning a result \
+                         (worker died or pool shut down)"
+                    ))
+                })
+            })
+            .collect()
     }
 }
 
@@ -127,18 +185,20 @@ mod tests {
     use crate::aidg::FixedPointConfig;
     use crate::coordinator::job::Arch;
 
+    fn req(arch: Arch) -> EstimateRequest {
+        EstimateRequest { arch, network: "tc_resnet8".into(), fp: FixedPointConfig::default() }
+    }
+
     #[test]
     fn pool_runs_jobs_in_parallel_and_in_order() {
-        let mut pool = Pool::new(4);
+        let pool = Pool::new(4);
         let reqs: Vec<EstimateRequest> = (0..6)
-            .map(|i| EstimateRequest {
-                arch: if i % 2 == 0 {
-                    Arch::UltraTrail(UltraTrailConfig::default())
+            .map(|i| {
+                if i % 2 == 0 {
+                    req(Arch::UltraTrail(UltraTrailConfig::default()))
                 } else {
-                    Arch::Systolic(SystolicConfig::new(2, 2))
-                },
-                network: "tc_resnet8".into(),
-                fp: FixedPointConfig::default(),
+                    req(Arch::Systolic(SystolicConfig::new(2, 2)))
+                }
             })
             .collect();
         let results = pool.run_all(reqs);
@@ -159,12 +219,54 @@ mod tests {
 
     #[test]
     fn errors_are_reported_not_panicked() {
-        let mut pool = Pool::new(2);
+        let pool = Pool::new(2);
         let results = pool.run_all(vec![EstimateRequest {
             arch: Arch::UltraTrail(UltraTrailConfig::default()),
             network: "alexnet".into(), // 2D: unmappable on UltraTrail
             fp: FixedPointConfig::default(),
         }]);
         assert!(results[0].is_err());
+    }
+
+    #[test]
+    fn closed_pool_surfaces_errors_not_panics() {
+        let pool = Pool::new(1);
+        pool.close();
+        assert!(pool.spawn(|| {}).is_err());
+        let results = pool.run_all(vec![req(Arch::Systolic(SystolicConfig::new(2, 2)))]);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].is_err());
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_pool() {
+        // the intentional panic below prints one backtrace line in the test
+        // output; swallowing it would mean swapping the process-global
+        // panic hook under concurrently running tests, which is worse
+        let pool = Pool::new(1);
+        pool.spawn(|| panic!("intentional test panic (caught by the pool)")).unwrap();
+        // the single worker must survive to serve the real request
+        let results = pool.run_all(vec![req(Arch::Systolic(SystolicConfig::new(2, 2)))]);
+        assert!(results[0].is_ok(), "{:?}", results[0].as_ref().err());
+    }
+
+    #[test]
+    fn spawn_runs_generic_work_items() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..32 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(());
+            })
+            .unwrap();
+        }
+        drop(tx);
+        assert_eq!(rx.iter().count(), 32);
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
     }
 }

@@ -19,10 +19,15 @@
 //! estimate <arch> <network>      run one estimate, print one result line
 //! describe <name>                read description lines until `end`, then
 //!                                register it as `@<name>`
+//! stats                          engine cache/dedup counters, one line
 //! quit                           stop serving
 //! ```
 //!
-//! Inline and file descriptions are compiled through the global
+//! Estimates run through the global
+//! [`EstimationEngine`](crate::engine::EstimationEngine) with cache misses
+//! fanned out at kernel granularity over a shared worker [`Pool`] — a large
+//! request saturates every worker instead of pinning one. Inline and file
+//! descriptions are compiled through the global
 //! [`ArchRegistry`](crate::acadl::text::ArchRegistry), so repeated requests
 //! against an unchanged description never recompile it.
 
@@ -33,9 +38,11 @@ use anyhow::{bail, Context};
 
 use crate::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailConfig};
 use crate::aidg::FixedPointConfig;
+use crate::engine::EstimationEngine;
 use crate::Result;
 
-use super::job::{run_request, Arch, DescribedArch, EstimateRequest};
+use super::job::{Arch, DescribedArch, EstimateRequest};
+use super::pool::Pool;
 
 /// Parse an architecture spec string.
 pub fn parse_arch(spec: &str) -> Result<Arch> {
@@ -107,10 +114,28 @@ fn parse_dims(s: &str) -> Result<(u32, u32)> {
     Ok((r, c))
 }
 
+/// Serving knobs (the CLI's `--workers`/`--cache-cap` surface).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeOptions {
+    /// Worker threads for kernel-granular fan-out (0 = available
+    /// parallelism).
+    pub workers: usize,
+}
+
 /// Serve requests from `input`, writing one result line per request to
-/// `output`. Returns the number of commands served (including failed ones
-/// and `describe` registrations).
-pub fn serve(input: impl BufRead, mut output: impl Write) -> Result<usize> {
+/// `output`, with default options. Returns the number of commands served
+/// (including failed ones and `describe` registrations).
+pub fn serve(input: impl BufRead, output: impl Write) -> Result<usize> {
+    serve_with(input, output, &ServeOptions::default())
+}
+
+/// [`serve`] with explicit [`ServeOptions`].
+pub fn serve_with(
+    input: impl BufRead,
+    mut output: impl Write,
+    opts: &ServeOptions,
+) -> Result<usize> {
+    let pool = Pool::new(opts.workers);
     let mut served = 0;
     let mut inline: HashMap<String, DescribedArch> = HashMap::new();
     let mut lines = input.lines();
@@ -134,7 +159,7 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> Result<usize> {
             served += 1;
             continue;
         }
-        match serve_line(line, &inline) {
+        match serve_line(line, &inline, &pool) {
             Ok(msg) => writeln!(output, "{msg}")?,
             Err(e) => writeln!(output, "error: {e:#}")?,
         }
@@ -171,7 +196,11 @@ fn read_description(
     Ok((name.to_string(), DescribedArch::inline(format!("@{name}"), body)))
 }
 
-fn serve_line(line: &str, inline: &HashMap<String, DescribedArch>) -> Result<String> {
+fn serve_line(
+    line: &str,
+    inline: &HashMap<String, DescribedArch>,
+    pool: &Pool,
+) -> Result<String> {
     let mut it = line.split_whitespace();
     match it.next() {
         Some("estimate") => {
@@ -188,18 +217,49 @@ fn serve_line(line: &str, inline: &HashMap<String, DescribedArch>) -> Result<Str
                 None => parse_arch(spec)?,
             };
             let network = it.next().context("estimate <arch> <network>")?.to_string();
-            let e = run_request(&EstimateRequest { arch, network, fp: FixedPointConfig::default() })?;
+            let req = EstimateRequest { arch, network, fp: FixedPointConfig::default() };
+            let e = super::job::run_request_pooled(&req, pool)?;
             Ok(format!(
-                "{} {} cycles={} evaluated_iters={} total_iters={} runtime_ms={}",
+                "{} {} cycles={} evaluated_iters={} total_iters={} kernels={} unique={} \
+                 cache_hits={} deduped={} runtime_ms={}",
                 e.arch,
                 e.network,
                 e.total_cycles(),
                 e.evaluated_iters(),
                 e.total_iters(),
+                e.stats.total_kernels,
+                e.stats.unique_kernels,
+                e.stats.cache_hits,
+                e.stats.deduped,
                 e.runtime.as_millis()
             ))
         }
-        Some(cmd) => bail!("unknown command {cmd:?} (estimate|describe|quit)"),
+        Some("stats") => {
+            let s = EstimationEngine::global().stats();
+            let mut line = format!(
+                "stats workers={} requests={} kernels={} evaluated={} deduped={} \
+                 cache_entries={} cache_cap={} cache_hits={} cache_misses={} evictions={} \
+                 arch_compiles={}",
+                pool.workers(),
+                s.requests,
+                s.kernels_total,
+                s.kernels_evaluated,
+                s.kernels_deduped,
+                s.cache.entries,
+                s.cache.capacity,
+                s.cache.hits,
+                s.cache.misses,
+                s.cache.evictions,
+                crate::acadl::text::ArchRegistry::global().compile_count(),
+            );
+            // process-wide counters cover every engine in the process (the
+            // global one above plus any locally constructed ones)
+            for (name, value) in crate::metrics::counters::snapshot() {
+                line.push_str(&format!(" {name}={value}"));
+            }
+            Ok(line)
+        }
+        Some(cmd) => bail!("unknown command {cmd:?} (estimate|describe|stats|quit)"),
         None => bail!("empty command"),
     }
 }
@@ -266,6 +326,39 @@ mod tests {
         assert!(lines[0].contains("cycles="), "{}", lines[0]);
         assert!(lines[1].starts_with("error:"));
         assert!(lines[2].starts_with("error:"));
+    }
+
+    #[test]
+    fn serve_reports_engine_stats_and_cache_reuse() {
+        // the same request twice: the second line must show cache reuse
+        // (no kernel evaluated twice process-wide); `stats` reports counters
+        let input = "estimate systolic:2x2 tc_resnet8\n\
+                     estimate systolic:2x2 tc_resnet8\nstats\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 3);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("unique="), "{}", lines[0]);
+        let kernels_of = |line: &str, field: &str| -> u64 {
+            line.split_whitespace()
+                .find_map(|t| t.strip_prefix(field))
+                .unwrap_or_else(|| panic!("no {field} in {line}"))
+                .parse()
+                .unwrap()
+        };
+        // warm request: every kernel served from cache or intra-request dedup
+        let total = kernels_of(lines[1], "kernels=");
+        let hits = kernels_of(lines[1], "cache_hits=");
+        let dedup = kernels_of(lines[1], "deduped=");
+        assert_eq!(hits + dedup, total, "{}", lines[1]);
+        // cycle-identical across cold and warm
+        assert_eq!(
+            lines[0].split_whitespace().find(|t| t.starts_with("cycles=")),
+            lines[1].split_whitespace().find(|t| t.starts_with("cycles="))
+        );
+        assert!(lines[2].starts_with("stats "), "{}", lines[2]);
+        assert!(lines[2].contains("cache_entries="), "{}", lines[2]);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! The sharded, LRU-bounded, concurrent estimate cache.
+//!
+//! Keys are [`KernelKey`]s (content-addressed — see [`super::key`]); values
+//! are `Arc<LayerEstimate>`s with `trace: None` (trace-carrying requests
+//! bypass the cache entirely), so each entry is a few hundred bytes.
+//! Shard count is fixed at construction; capacity is a soft total bound
+//! enforced per shard (`ceil(cap / shards)`, minimum 1), so the real bound
+//! is `capacity` rounded up to shard granularity. Eviction is
+//! least-recently-used within the shard, driven by a global monotonic tick.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::aidg::LayerEstimate;
+
+use super::key::KernelKey;
+
+/// Point-in-time cache statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+struct Entry {
+    est: Arc<LayerEstimate>,
+    last_used: u64,
+}
+
+/// Concurrent LRU cache of layer estimates.
+pub struct EstimateCache {
+    shards: Vec<Mutex<HashMap<KernelKey, Entry>>>,
+    capacity: AtomicUsize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl EstimateCache {
+    /// Create a cache bounded to ~`capacity` entries. `capacity == 0`
+    /// disables caching (gets always miss, inserts are dropped) while
+    /// keeping intra-request deduplication in the engine intact.
+    pub fn new(capacity: usize) -> Self {
+        const SHARDS: usize = 16;
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            capacity: AtomicUsize::new(capacity),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn per_shard_cap(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed).div_ceil(self.shards.len())
+    }
+
+    /// Look up an estimate, refreshing its recency on a hit.
+    pub fn get(&self, key: &KernelKey) -> Option<Arc<LayerEstimate>> {
+        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        match shard.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.est))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an estimate, evicting LRU entries past the
+    /// shard's capacity share.
+    pub fn insert(&self, key: KernelKey, est: Arc<LayerEstimate>) {
+        let cap = self.per_shard_cap();
+        if cap == 0 {
+            return;
+        }
+        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        let last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+        shard.insert(key, Entry { est, last_used });
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        Self::trim(&mut shard, cap, &self.evictions);
+    }
+
+    fn trim(shard: &mut HashMap<KernelKey, Entry>, cap: usize, evictions: &AtomicU64) {
+        while shard.len() > cap.max(1) {
+            // O(shard len) scan; shards hold `cap/16` entries and eviction
+            // only fires on insert past capacity, so this stays cheap
+            // relative to a single kernel evaluation.
+            let lru = shard
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("non-empty shard");
+            shard.remove(&lru);
+            evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Adjust the capacity bound, trimming immediately if it shrank.
+    pub fn set_capacity(&self, capacity: usize) {
+        self.capacity.store(capacity, Ordering::Relaxed);
+        let cap = self.per_shard_cap();
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            if cap == 0 {
+                let n = shard.len() as u64;
+                shard.clear();
+                self.evictions.fetch_add(n, Ordering::Relaxed);
+            } else {
+                Self::trim(&mut shard, cap, &self.evictions);
+            }
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every entry (tests; memory pressure).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.len(),
+            capacity: self.capacity(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aidg::Provenance;
+
+    fn key(n: u64) -> KernelKey {
+        KernelKey { arch: 1, kernel_hi: n, kernel_lo: n.wrapping_mul(0x9E37), fp_bits: 0 }
+    }
+
+    fn est(cycles: u64) -> Arc<LayerEstimate> {
+        Arc::new(LayerEstimate {
+            label: "t".into(),
+            k: 1,
+            insts_per_iter: 1,
+            cycles,
+            evaluated_iters: 1,
+            k_block: 1,
+            k_prolog: 1,
+            dt_iteration: 0,
+            dt_overlap: 0,
+            used_fallback: false,
+            whole_graph: true,
+            nodes: 1,
+            peak_state_bytes: 0,
+            runtime: std::time::Duration::ZERO,
+            provenance: Provenance::Computed,
+            trace: None,
+        })
+    }
+
+    #[test]
+    fn get_insert_roundtrip_and_counters() {
+        let c = EstimateCache::new(64);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), est(42));
+        assert_eq!(c.get(&key(1)).unwrap().cycles, 42);
+        assert!(c.get(&key(2)).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts, s.entries), (1, 2, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // single-shard-sized view: capacity 16 -> 1 per shard; find two keys
+        // landing in the same shard and verify the untouched one is evicted
+        let c = EstimateCache::new(16);
+        let shard_of = |n: u64| key(n).shard_of(16);
+        let a = key(1);
+        let b = (2..200).map(key).find(|k| k.shard_of(16) == shard_of(1)).unwrap();
+        c.insert(a, est(1));
+        c.insert(b, est(2));
+        assert_eq!(c.len(), 1, "same shard, cap 1 -> evicted down to 1");
+        assert!(c.stats().evictions >= 1);
+        // the more recent insert survives
+        assert_eq!(c.get(&b).unwrap().cycles, 2);
+        assert!(c.get(&a).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let c = EstimateCache::new(0);
+        c.insert(key(1), est(1));
+        assert!(c.get(&key(1)).is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn set_capacity_trims() {
+        let c = EstimateCache::new(1 << 16);
+        for n in 0..256 {
+            c.insert(key(n), est(n));
+        }
+        assert_eq!(c.len(), 256);
+        c.set_capacity(16);
+        assert!(c.len() <= 16, "len {} after shrink", c.len());
+        c.set_capacity(0);
+        assert_eq!(c.len(), 0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Content-addressed kernel identity: the [`KernelKey`] fingerprint that
+//! makes estimate reuse *safe by construction*.
+//!
+//! A fixed-point layer estimate ([`crate::aidg::estimate_layer`]) is a pure
+//! function of four inputs:
+//!
+//! 1. the **architecture** — every routing/timing-relevant primitive of the
+//!    finalized [`Diagram`] ([`Diagram::content_digest`]). For described
+//!    architectures this subsumes the text frontend's source-keyed
+//!    [`ArchRegistry`](crate::acadl::text::ArchRegistry): equal sources
+//!    compile to one shared diagram, and — stronger — a description and a
+//!    hand builder that produce structurally identical diagrams digest
+//!    equally and share cache entries;
+//! 2. the **kernel shape** — `k` and `insts_per_iter`;
+//! 3. the **instruction stream of the decision prefix** — the estimator
+//!    only ever *evaluates* a deterministic prefix of the iteration space
+//!    (whole graph when `k` is small, otherwise `k_block`-sized chunks up
+//!    to the fallback budget). [`decision_prefix`] computes the exact upper
+//!    bound of that prefix, and the fingerprint hashes every instruction in
+//!    it. Iterations beyond the prefix influence the estimate only through
+//!    `k` (the eq. 2 extrapolation), which is hashed separately;
+//! 4. the **fixed-point configuration** — `fallback_frac` (hashed both as
+//!    raw bits and implicitly through the prefix length).
+//!
+//! Two kernels with equal [`KernelKey`]s therefore produce cycle-identical
+//! estimates up to a 128-bit hash collision of *different* prefix streams —
+//! there is no sampling shortcut that could silently alias two genuinely
+//! different kernels.
+
+use crate::acadl::Diagram;
+use crate::aidg::{k_block, FixedPointConfig};
+use crate::isa::LoopKernel;
+
+/// Fingerprint-format version; bump when the word stream changes so stale
+/// keys can never alias across releases.
+const KEY_VERSION: u64 = 1;
+
+/// Architecture fingerprint (a [`Diagram::content_digest`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArchDigest(pub u64);
+
+impl ArchDigest {
+    /// Digest a finalized diagram.
+    pub fn of(d: &Diagram) -> Self {
+        Self(d.content_digest())
+    }
+}
+
+/// Cache key of one `(architecture, kernel, fixed-point config)` estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelKey {
+    pub arch: u64,
+    pub kernel_hi: u64,
+    pub kernel_lo: u64,
+    pub fp_bits: u64,
+}
+
+impl KernelKey {
+    /// Shard selector for the concurrent cache.
+    #[inline]
+    pub(crate) fn shard_of(&self, shards: usize) -> usize {
+        (self.kernel_lo ^ self.arch.rotate_left(17)) as usize % shards
+    }
+}
+
+/// Upper bound on the iterations [`crate::aidg::estimate_layer`] can
+/// evaluate for a kernel with `k` iterations of `insts_per_iter`
+/// instructions on a fetch port of `port_width`, under fallback fraction
+/// `frac`. Mirrors the estimator's control flow exactly: whole graph when
+/// `k_block >= k` or `3·k_block > k`; otherwise chunks of `k_block` until
+/// the budget `max(k·frac, 3·k_block)` is reached (the stability early-exit
+/// can only shorten the evaluated range, never extend it).
+pub fn decision_prefix(k: u64, insts_per_iter: u64, port_width: u64, frac: f64) -> u64 {
+    if k == 0 {
+        return 0;
+    }
+    let kb = k_block(insts_per_iter, port_width);
+    if kb >= k || 3 * kb > k {
+        return k;
+    }
+    let budget = ((k as f64 * frac) as u64).max(3 * kb);
+    (budget.div_ceil(kb) * kb).min(k)
+}
+
+/// 128-bit streaming mixer (two decorrelated multiply-rotate-xor lanes with
+/// a murmur-style finalizer). Not cryptographic — keys live only inside one
+/// process — but wide enough that accidental collisions between different
+/// kernel streams are negligible (~2⁻¹²⁸·n² birthday bound).
+struct Mix128 {
+    a: u64,
+    b: u64,
+}
+
+impl Mix128 {
+    fn new() -> Self {
+        // first 128 bits of pi's fractional part, split across the lanes
+        Self { a: 0x243F_6A88_85A3_08D3, b: 0x1319_8A2E_0370_7344 }
+    }
+
+    #[inline]
+    fn word(&mut self, w: u64) {
+        self.a = (self.a.rotate_left(25) ^ w).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.b = (self.b.rotate_left(13) ^ w.wrapping_mul(0xA24B_AED4_963E_E407))
+            .wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    }
+
+    fn finish(self) -> (u64, u64) {
+        fn avalanche(mut x: u64) -> u64 {
+            x ^= x >> 33;
+            x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            x ^= x >> 33;
+            x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+            x ^ (x >> 33)
+        }
+        (avalanche(self.a), avalanche(self.b ^ self.a.rotate_left(32)))
+    }
+}
+
+/// Compute the content-addressed key of one kernel estimate.
+pub fn kernel_key(
+    arch: ArchDigest,
+    d: &Diagram,
+    kernel: &LoopKernel,
+    fp: &FixedPointConfig,
+) -> KernelKey {
+    let port_width = d.fetch_config().port_width as u64;
+    let prefix = decision_prefix(
+        kernel.k,
+        kernel.insts_per_iter as u64,
+        port_width,
+        fp.fallback_frac,
+    );
+    let mut mix = Mix128::new();
+    mix.word(KEY_VERSION);
+    mix.word(kernel.k);
+    mix.word(kernel.insts_per_iter as u64);
+    mix.word(prefix);
+    kernel.content_words(0..prefix, &mut |w| mix.word(w));
+    let (kernel_hi, kernel_lo) = mix.finish();
+    KernelKey { arch: arch.0, kernel_hi, kernel_lo, fp_bits: fp.fallback_frac.to_bits() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ids::OpId;
+    use crate::isa::Instruction;
+
+    #[test]
+    fn decision_prefix_mirrors_estimator() {
+        // whole graph: k_block >= k or fewer than 3 blocks fit
+        assert_eq!(decision_prefix(2, 4, 2, 0.01), 2);
+        assert_eq!(decision_prefix(5, 3, 2, 0.01), 5); // kb=2, 3*2 > 5
+        assert_eq!(decision_prefix(0, 4, 2, 0.01), 0);
+        // chunked: kb=1 (4 insts, port 2), budget = max(1% of k, 3)
+        assert_eq!(decision_prefix(2000, 4, 2, 0.01), 20);
+        assert_eq!(decision_prefix(100, 4, 2, 0.01), 3); // budget floor 3*kb
+        // kb=2 (3 insts, port 2): budget 20 rounds to a kb multiple
+        assert_eq!(decision_prefix(2000, 3, 2, 0.01), 20);
+        assert_eq!(decision_prefix(2100, 3, 2, 0.01), 22); // 21 -> ceil to 22
+        // budget can never exceed k
+        assert_eq!(decision_prefix(2000, 4, 2, 2.0), 2000);
+    }
+
+    fn kernel(k: u64, base: u64) -> LoopKernel {
+        LoopKernel::new(
+            "anything",
+            k,
+            2,
+            Box::new(move |it, buf| {
+                buf.push(Instruction::new(OpId(0)).read_mem(&[base + it]));
+                buf.push(Instruction::new(OpId(1)).write_mem(&[base + 100 + it]));
+            }),
+        )
+    }
+
+    #[test]
+    fn keys_are_content_addressed() {
+        let mut d = Diagram::new("m");
+        let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+        let es = d.add_execute_stage("es");
+        let (rf, _regs) = d.add_regfile("rf", "r", 2);
+        let mem = d.add_memory("dmem", 1, 1, 1, 1, 0, 1 << 20);
+        let fu = d.add_fu(es, "fu", crate::acadl::Latency::Fixed(1), &["a", "b"]);
+        d.forward(ifs, es);
+        d.fu_reads(fu, rf);
+        d.mem_reads(fu, mem);
+        d.mem_writes(fu, mem);
+        d.finalize().unwrap();
+        let arch = ArchDigest::of(&d);
+        let fp = FixedPointConfig::default();
+
+        // identical content, different labels -> same key (dedup across layers)
+        let a = kernel_key(arch, &d, &kernel(1000, 0), &fp);
+        let mut named = kernel(1000, 0);
+        named.label = "other_layer::compute".into();
+        assert_eq!(a, kernel_key(arch, &d, &named, &fp));
+
+        // shape, addresses, k, fp, and arch all perturb the key
+        assert_ne!(a, kernel_key(arch, &d, &kernel(1001, 0), &fp));
+        assert_ne!(a, kernel_key(arch, &d, &kernel(1000, 7), &fp));
+        let fp2 = FixedPointConfig { fallback_frac: 0.02, ..fp };
+        assert_ne!(a, kernel_key(arch, &d, &kernel(1000, 0), &fp2));
+        let other_arch = ArchDigest(arch.0 ^ 1);
+        assert_ne!(a, kernel_key(other_arch, &d, &kernel(1000, 0), &fp));
+    }
+}

@@ -1,0 +1,430 @@
+//! The unified estimation engine — the one hot path every estimation
+//! request routes through.
+//!
+//! The paper's headline trick deduplicates work in *time* (evaluate a few
+//! loop iterations, extrapolate to billions of instructions). This module
+//! deduplicates the remaining work in *space*: real networks repeat
+//! identical kernel shapes across layers (residual blocks), and DSE sweeps
+//! or serve fleets re-price the same `(architecture, kernel)` pair
+//! thousands of times. The engine
+//!
+//! 1. fingerprints every kernel with a content-addressed [`KernelKey`]
+//!    (architecture structural digest × kernel decision-prefix hash ×
+//!    fixed-point config — see [`key`] for why key equality implies
+//!    cycle-identical estimates),
+//! 2. plans a network estimate as a deduplicated set of kernel work items,
+//! 3. consults the sharded, LRU-bounded [`EstimateCache`] before
+//!    evaluating anything,
+//! 4. fans cache misses out at *kernel* granularity over the generic
+//!    [`Pool`](crate::coordinator::Pool) (one large request no longer pins
+//!    a single worker), and
+//! 5. reassembles per-layer/network results with hit/miss/dedup counters
+//!    ([`crate::coordinator::EstimateStats`], mirrored into
+//!    [`crate::metrics::counters`]).
+//!
+//! The uncached reference path ([`crate::coordinator::estimate_network`])
+//! stays available; `rust/tests/engine_cache.rs` pins the engine
+//! cycle-identical to it, cold and warm, across all four paper
+//! architectures. Requests with `keep_trace` set bypass the cache (traces
+//! are large and per-request) but keep working.
+
+pub mod cache;
+pub mod key;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::acadl::Diagram;
+use crate::aidg::{estimate_layer, FixedPointConfig, LayerEstimate, Provenance};
+use crate::coordinator::job::{Arch, EstimateStats, LayerOutcome, NetworkEstimate};
+use crate::coordinator::pool::Pool;
+use crate::dnn::Network;
+use crate::isa::LoopKernel;
+use crate::mapping::Mapper;
+use crate::Result;
+
+pub use cache::{CacheStats, EstimateCache};
+pub use key::{decision_prefix, kernel_key, ArchDigest, KernelKey};
+
+/// Default entry bound of the global engine's cache (`--cache-cap`
+/// overrides; entries are a few hundred bytes each).
+pub const DEFAULT_CACHE_CAP: usize = 4096;
+
+/// Point-in-time engine statistics (cache state + request counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    pub cache: CacheStats,
+    /// Network estimates served.
+    pub requests: u64,
+    /// Kernel slots seen across all requests.
+    pub kernels_total: u64,
+    /// Kernels actually evaluated through the AIDG.
+    pub kernels_evaluated: u64,
+    /// Kernel slots reused from an identical kernel in the same request.
+    pub kernels_deduped: u64,
+}
+
+/// The shared estimation engine. Cheap to share (`&'static` via
+/// [`EstimationEngine::global`] or `Arc`); all methods take `&self` and are
+/// safe to call from many threads at once.
+pub struct EstimationEngine {
+    cache: EstimateCache,
+    requests: AtomicU64,
+    kernels_total: AtomicU64,
+    kernels_evaluated: AtomicU64,
+    kernels_deduped: AtomicU64,
+}
+
+impl EstimationEngine {
+    pub fn new(cache_capacity: usize) -> Self {
+        Self {
+            cache: EstimateCache::new(cache_capacity),
+            requests: AtomicU64::new(0),
+            kernels_total: AtomicU64::new(0),
+            kernels_evaluated: AtomicU64::new(0),
+            kernels_deduped: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide engine used by the coordinator (`run_request`, the
+    /// serve loop, the CLI).
+    pub fn global() -> &'static EstimationEngine {
+        static GLOBAL: OnceLock<EstimationEngine> = OnceLock::new();
+        GLOBAL.get_or_init(|| EstimationEngine::new(DEFAULT_CACHE_CAP))
+    }
+
+    /// Adjust the cache's entry bound (0 disables cross-request caching;
+    /// intra-request deduplication keeps working).
+    pub fn set_cache_capacity(&self, capacity: usize) {
+        self.cache.set_capacity(capacity);
+    }
+
+    /// Drop all cached estimates (tests; memory pressure).
+    pub fn clear_cache(&self) {
+        self.cache.clear();
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            cache: self.cache.stats(),
+            requests: self.requests.load(Ordering::Relaxed),
+            kernels_total: self.kernels_total.load(Ordering::Relaxed),
+            kernels_evaluated: self.kernels_evaluated.load(Ordering::Relaxed),
+            kernels_deduped: self.kernels_deduped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold one batch's kernel accounting into the engine's counters and
+    /// the process-wide [`crate::metrics::counters`].
+    fn note_kernels(&self, stats: &EstimateStats) {
+        self.kernels_total.fetch_add(stats.total_kernels, Ordering::Relaxed);
+        self.kernels_evaluated.fetch_add(stats.evaluated, Ordering::Relaxed);
+        self.kernels_deduped.fetch_add(stats.deduped, Ordering::Relaxed);
+        crate::metrics::counters::note_engine_kernels(
+            stats.total_kernels,
+            stats.evaluated,
+            stats.cache_hits,
+            stats.deduped,
+        );
+    }
+
+    fn note_request(&self, stats: &EstimateStats) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        crate::metrics::counters::ENGINE_REQUESTS.add(1);
+        self.note_kernels(stats);
+    }
+
+    /// Estimate a batch of kernels against one diagram, serially, with
+    /// cache + intra-call deduplication. Returned estimates carry the
+    /// requesting kernel's label and a [`Provenance`] stamp; counting the
+    /// stamps recovers hit/dedup totals. This is the building block
+    /// [`crate::expt::Comparison`] and the serial network path share.
+    pub fn estimate_kernels(
+        &self,
+        d: &Diagram,
+        arch: ArchDigest,
+        kernels: &[LoopKernel],
+        fp: &FixedPointConfig,
+    ) -> Result<Vec<LayerEstimate>> {
+        let mut local: HashMap<KernelKey, Arc<LayerEstimate>> = HashMap::new();
+        let mut out = Vec::with_capacity(kernels.len());
+        let mut stats = EstimateStats::default();
+        for kern in kernels {
+            let e = self.resolve_serial(d, arch, kern, fp, &mut local)?;
+            stats.count(e.provenance);
+            out.push(e);
+        }
+        // kernel-batch calls are not whole requests, but their kernel work
+        // still counts toward the engine's and the process's totals
+        self.note_kernels(&stats);
+        Ok(out)
+    }
+
+    fn resolve_serial(
+        &self,
+        d: &Diagram,
+        arch: ArchDigest,
+        kern: &LoopKernel,
+        fp: &FixedPointConfig,
+        local: &mut HashMap<KernelKey, Arc<LayerEstimate>>,
+    ) -> Result<LayerEstimate> {
+        if fp.keep_trace {
+            // traces are per-request artifacts; never cached or reused
+            return estimate_layer(d, kern, fp);
+        }
+        let key = kernel_key(arch, d, kern, fp);
+        let (est, provenance) = if let Some(a) = local.get(&key) {
+            (Arc::clone(a), Provenance::Deduped)
+        } else if let Some(a) = self.cache.get(&key) {
+            local.insert(key, Arc::clone(&a));
+            (a, Provenance::CacheHit)
+        } else {
+            let a = Arc::new(estimate_layer(d, kern, fp)?);
+            self.cache.insert(key, Arc::clone(&a));
+            local.insert(key, Arc::clone(&a));
+            (a, Provenance::Computed)
+        };
+        let mut e = (*est).clone();
+        e.label = kern.label.clone();
+        e.provenance = provenance;
+        Ok(e)
+    }
+
+    /// Estimate a whole network serially (map → plan → cache-aware
+    /// evaluate → reassemble). Cycle-identical to the uncached
+    /// [`crate::coordinator::estimate_network`] reference path.
+    pub fn estimate_network(
+        &self,
+        arch: &Arch,
+        net: &Network,
+        fp: &FixedPointConfig,
+    ) -> Result<NetworkEstimate> {
+        let t0 = Instant::now();
+        let mapper = arch.mapper()?;
+        let d = mapper.diagram();
+        let digest = ArchDigest::of(d);
+        let mapped = mapper.map_network(net)?;
+        let mut local: HashMap<KernelKey, Arc<LayerEstimate>> = HashMap::new();
+        let mut stats = EstimateStats::default();
+        let mut layers = Vec::with_capacity(mapped.len());
+        for ml in &mapped {
+            if ml.fused {
+                layers.push(LayerOutcome { layer_name: ml.layer_name.clone(), estimate: None });
+                continue;
+            }
+            let mut ests = Vec::with_capacity(ml.kernels.len());
+            for kern in &ml.kernels {
+                let e = self.resolve_serial(d, digest, kern, fp, &mut local)?;
+                stats.count(e.provenance);
+                ests.push(e);
+            }
+            layers.push(LayerOutcome { layer_name: ml.layer_name.clone(), estimate: Some(ests) });
+        }
+        stats.unique_kernels = if fp.keep_trace {
+            stats.total_kernels
+        } else {
+            local.len() as u64
+        };
+        self.note_request(&stats);
+        Ok(NetworkEstimate {
+            network: net.name.clone(),
+            arch: d.name.clone(),
+            layers,
+            runtime: t0.elapsed(),
+            stats,
+        })
+    }
+
+    /// Estimate a whole network with cache misses fanned out at kernel
+    /// granularity over `pool`. Produces the same `NetworkEstimate` (same
+    /// cycles, same stats) as [`Self::estimate_network`] — only the wall
+    /// time differs. Trace-carrying requests fall back to the serial path.
+    ///
+    /// Must be called from *outside* `pool`'s own workers (the caller
+    /// blocks on results; a worker calling in would wait on jobs queued
+    /// behind itself). The typed request path (`Pool::run_all` →
+    /// `run_request`) uses the serial engine inside workers for exactly
+    /// this reason.
+    pub fn estimate_network_pooled(
+        &self,
+        arch: &Arch,
+        net: &Network,
+        fp: &FixedPointConfig,
+        pool: &Pool,
+    ) -> Result<NetworkEstimate> {
+        if fp.keep_trace {
+            return self.estimate_network(arch, net, fp);
+        }
+        let t0 = Instant::now();
+        let mapper: Arc<dyn Mapper + Send + Sync> = Arc::from(arch.mapper()?);
+        let digest = ArchDigest::of(mapper.diagram());
+        let mapped = mapper.map_network(net)?;
+
+        // ---- plan: dedup kernel slots against the cache and each other ----
+        enum Slot {
+            Cached(Arc<LayerEstimate>),
+            /// Index into the pending work-item list.
+            Pending(usize),
+        }
+        struct PlannedLayer {
+            name: String,
+            /// `None` = fused layer.
+            slots: Option<Vec<(String, Slot, Provenance)>>,
+        }
+        let mut stats = EstimateStats::default();
+        let mut planned: Vec<PlannedLayer> = Vec::with_capacity(mapped.len());
+        let mut pending: Vec<(KernelKey, LoopKernel)> = Vec::new();
+        let mut pending_of: HashMap<KernelKey, usize> = HashMap::new();
+        // cache hits already resolved in this request (a repeat of one is a
+        // Deduped slot, matching the serial path's accounting)
+        let mut hit_of: HashMap<KernelKey, Arc<LayerEstimate>> = HashMap::new();
+        for ml in mapped {
+            if ml.fused {
+                planned.push(PlannedLayer { name: ml.layer_name, slots: None });
+                continue;
+            }
+            let mut slots = Vec::with_capacity(ml.kernels.len());
+            for kern in ml.kernels {
+                let key = kernel_key(digest, mapper.diagram(), &kern, fp);
+                let label = kern.label.clone();
+                let (slot, provenance) = if let Some(&i) = pending_of.get(&key) {
+                    (Slot::Pending(i), Provenance::Deduped)
+                } else if let Some(a) = hit_of.get(&key) {
+                    (Slot::Cached(Arc::clone(a)), Provenance::Deduped)
+                } else if let Some(a) = self.cache.get(&key) {
+                    hit_of.insert(key, Arc::clone(&a));
+                    (Slot::Cached(a), Provenance::CacheHit)
+                } else {
+                    let i = pending.len();
+                    pending_of.insert(key, i);
+                    pending.push((key, kern));
+                    (Slot::Pending(i), Provenance::Computed)
+                };
+                stats.count(provenance);
+                slots.push((label, slot, provenance));
+            }
+            planned.push(PlannedLayer { name: ml.layer_name, slots: Some(slots) });
+        }
+        stats.unique_kernels = (pending_of.len() + hit_of.len()) as u64;
+
+        // ---- evaluate the misses: one pool work item per unique kernel ----
+        let n_pending = pending.len();
+        let (tx, rx) = channel::<(usize, Result<LayerEstimate>)>();
+        for (i, (_, kern)) in pending.iter_mut().enumerate() {
+            // move the kernel into the worker; the key stays for cache fill
+            let kern = std::mem::replace(
+                kern,
+                LoopKernel::new("<taken>", 0, 0, Box::new(|_, _| {})),
+            );
+            let tx = tx.clone();
+            let m = Arc::clone(&mapper);
+            let fp = *fp;
+            pool.spawn(move || {
+                let r = estimate_layer(m.diagram(), &kern, &fp);
+                let _ = tx.send((i, r));
+            })?;
+        }
+        drop(tx);
+        let mut results: Vec<Option<Arc<LayerEstimate>>> = (0..n_pending).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n_pending {
+            let Ok((i, r)) = rx.recv() else { break };
+            let est = Arc::new(r?);
+            self.cache.insert(pending[i].0, Arc::clone(&est));
+            results[i] = Some(est);
+            received += 1;
+        }
+        if received < n_pending {
+            anyhow::bail!(
+                "worker pool hung up after {received}/{n_pending} kernel evaluations \
+                 (a worker died or the pool was shut down)"
+            );
+        }
+
+        // ---- reassemble per-layer outcomes in network order ----
+        let mut layers = Vec::with_capacity(planned.len());
+        for pl in planned {
+            let estimate = match pl.slots {
+                None => None,
+                Some(slots) => {
+                    let mut ests = Vec::with_capacity(slots.len());
+                    for (label, slot, provenance) in slots {
+                        let arc = match slot {
+                            Slot::Cached(a) => a,
+                            Slot::Pending(i) => {
+                                Arc::clone(results[i].as_ref().expect("all results received"))
+                            }
+                        };
+                        let mut e = (*arc).clone();
+                        e.label = label;
+                        e.provenance = provenance;
+                        ests.push(e);
+                    }
+                    Some(ests)
+                }
+            };
+            layers.push(LayerOutcome { layer_name: pl.name, estimate });
+        }
+        self.note_request(&stats);
+        Ok(NetworkEstimate {
+            network: net.name.clone(),
+            arch: mapper.diagram().name.clone(),
+            layers,
+            runtime: t0.elapsed(),
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::SystolicConfig;
+
+    #[test]
+    fn serial_engine_dedups_within_a_network() {
+        let engine = EstimationEngine::new(1 << 10);
+        let arch = Arch::Systolic(SystolicConfig::new(2, 2));
+        let net = crate::dnn::zoo::tc_resnet8();
+        let fp = FixedPointConfig::default();
+        let e = engine.estimate_network(&arch, &net, &fp).unwrap();
+        // TC-ResNet8 repeats clip-layer shapes inside each residual block
+        assert!(
+            e.stats.unique_kernels < e.stats.total_kernels,
+            "expected dedup: {:?}",
+            e.stats
+        );
+        assert!(e.stats.deduped > 0, "{:?}", e.stats);
+        assert_eq!(
+            e.stats.evaluated + e.stats.cache_hits + e.stats.deduped,
+            e.stats.total_kernels
+        );
+        // a second run is served entirely from cache, cycle-identical
+        let warm = engine.estimate_network(&arch, &net, &fp).unwrap();
+        assert_eq!(warm.stats.evaluated, 0, "{:?}", warm.stats);
+        assert_eq!(warm.total_cycles(), e.total_cycles());
+        assert_eq!(engine.stats().requests, 2);
+    }
+
+    #[test]
+    fn keep_trace_bypasses_the_cache() {
+        let engine = EstimationEngine::new(1 << 10);
+        let arch = Arch::Systolic(SystolicConfig::new(2, 2));
+        let mut net = crate::dnn::zoo::tc_resnet8();
+        net.layers.truncate(2);
+        let fp = FixedPointConfig { keep_trace: true, ..Default::default() };
+        let e = engine.estimate_network(&arch, &net, &fp).unwrap();
+        assert_eq!(engine.cache_len(), 0);
+        let traced = e.layers.iter().filter_map(|l| l.estimate.as_ref()).flatten();
+        for est in traced {
+            assert!(est.trace.is_some(), "trace must survive the engine");
+        }
+    }
+}

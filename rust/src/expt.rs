@@ -6,9 +6,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::accel::{Systolic, SystolicConfig};
-use crate::aidg::{estimate_layer, evaluate_whole, FixedPointConfig, IterStat};
+use crate::aidg::{estimate_layer, evaluate_whole, FixedPointConfig, IterStat, Provenance};
 use crate::baselines::roofline_network;
+use crate::coordinator::EstimateStats;
 use crate::dnn::Network;
+use crate::engine::{ArchDigest, EstimationEngine};
 use crate::mapping::{scalar::ScalarMapper, MappedLayer, Mapper};
 use crate::metrics::{mape, percentage_error};
 use crate::report::{fmt_cycles, Table};
@@ -42,6 +44,9 @@ pub struct Comparison {
     pub evaluated_iters: u64,
     pub total_iters: u64,
     pub total_insts: u64,
+    /// Engine-level kernel accounting of the AIDG pass (unique vs total
+    /// kernels, cache reuse within this comparison).
+    pub estimate_stats: EstimateStats,
 }
 
 impl Comparison {
@@ -51,28 +56,50 @@ impl Comparison {
         mapped: &[MappedLayer],
         timeloop_dim: Option<u32>,
     ) -> Result<Self> {
-        // AIDG fixed point
+        // AIDG fixed point, through a fresh (cold) engine: repeated kernel
+        // shapes across the network's layers are evaluated once and reused,
+        // while the reported runtime stays a faithful cold-start number
+        // (sharing the global engine would let earlier runs warm the cache
+        // and distort the paper tables' runtime column).
         let fp = FixedPointConfig::default();
+        // capacity 16× the kernel count: the cache is sharded 16 ways with
+        // per-shard bounds, so this guarantees no eviction mid-comparison
+        // (every distinct kernel is evaluated exactly once)
+        let total_kernels: usize = mapped.iter().map(|m| m.kernels.len()).sum();
+        let engine = EstimationEngine::new(16 * total_kernels.max(1));
+        let digest = ArchDigest::of(mapper.diagram());
         let t0 = std::time::Instant::now();
         let mut aidg_layers = Vec::with_capacity(mapped.len());
         let mut evaluated = 0;
         let mut total_iters = 0;
         let mut total_insts = 0;
+        let mut estimate_stats = EstimateStats::default();
         for ml in mapped {
             if ml.fused {
                 aidg_layers.push(0.0);
                 continue;
             }
             let mut cycles = 0;
-            for k in &ml.kernels {
-                let e = estimate_layer(mapper.diagram(), k, &fp)?;
+            for e in engine.estimate_kernels(mapper.diagram(), digest, &ml.kernels, &fp)? {
                 cycles += e.cycles;
+                // reused estimates count like the serial reference path
+                // counted them (per kernel slot), keeping the paper tables'
+                // "evaluated iterations" column comparable across PRs
                 evaluated += e.evaluated_iters;
                 total_iters += e.k;
                 total_insts += e.total_insts();
+                // the engine is private to this comparison, so a cache hit
+                // here is cross-*layer* reuse within one request — account
+                // it as dedup, matching `EstimateStats`' field definitions
+                estimate_stats.count(match e.provenance {
+                    Provenance::CacheHit => Provenance::Deduped,
+                    p => p,
+                });
             }
             aidg_layers.push(cycles as f64);
         }
+        // fresh engine: every distinct key was evaluated exactly once
+        estimate_stats.unique_kernels = estimate_stats.evaluated;
         let aidg = EstimatorResult {
             name: "AIDG fixed point".into(),
             runtime: t0.elapsed(),
@@ -129,6 +156,7 @@ impl Comparison {
             evaluated_iters: evaluated,
             total_iters,
             total_insts,
+            estimate_stats,
         })
     }
 
@@ -389,6 +417,10 @@ mod tests {
         assert!(pe < 2.0, "PE {pe}");
         let t = c.table("test");
         assert!(t.to_markdown().contains("AIDG"));
+        // engine accounting is consistent and saw every kernel slot
+        let s = &c.estimate_stats;
+        assert_eq!(s.total_kernels, s.evaluated + s.cache_hits + s.deduped, "{s:?}");
+        assert!(s.total_kernels > 0 && s.unique_kernels <= s.total_kernels, "{s:?}");
     }
 
     #[test]

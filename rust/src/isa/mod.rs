@@ -79,6 +79,35 @@ impl Instruction {
     pub fn accesses_memory(&self) -> bool {
         !self.read_addrs.is_empty() || !self.write_addrs.is_empty()
     }
+
+    /// Stream every estimation-relevant field as `u64` words into `sink`
+    /// (field lengths included, so adjacent fields cannot alias). This is
+    /// the per-instruction ingredient of the engine's content-addressed
+    /// kernel fingerprint ([`crate::engine`]): two instructions emitting the
+    /// same word stream route and time identically on a given diagram.
+    pub fn content_words(&self, sink: &mut impl FnMut(u64)) {
+        sink(self.op.0 as u64);
+        sink(self.read_regs.len() as u64);
+        for r in &self.read_regs {
+            sink(r.0 as u64);
+        }
+        sink(self.write_regs.len() as u64);
+        for r in &self.write_regs {
+            sink(r.0 as u64);
+        }
+        sink(self.read_addrs.len() as u64);
+        for &a in &self.read_addrs {
+            sink(a);
+        }
+        sink(self.write_addrs.len() as u64);
+        for &a in &self.write_addrs {
+            sink(a);
+        }
+        sink(self.imms.len() as u64);
+        for &v in &self.imms {
+            sink(v as u64);
+        }
+    }
 }
 
 /// Generator of the concrete instructions of iteration `it` of a loop kernel.
@@ -127,6 +156,22 @@ impl LoopKernel {
     pub fn total_insts(&self) -> u64 {
         self.k * self.insts_per_iter as u64
     }
+
+    /// Stream the instruction content of iterations `iters` into `sink`
+    /// (see [`Instruction::content_words`]). The kernel's *label* is
+    /// deliberately not part of the stream: identically shaped layers map
+    /// to identical instruction streams under different labels, and the
+    /// engine's deduplication keys on content, not names.
+    pub fn content_words(&self, iters: std::ops::Range<u64>, sink: &mut impl FnMut(u64)) {
+        let mut buf = Vec::with_capacity(self.insts_per_iter);
+        for it in iters {
+            buf.clear();
+            self.emit(it, &mut buf);
+            for instr in &buf {
+                instr.content_words(sink);
+            }
+        }
+    }
 }
 
 impl std::fmt::Debug for LoopKernel {
@@ -159,6 +204,24 @@ mod tests {
         assert_eq!(i.imms, vec![7]);
         assert!(i.accesses_memory());
         assert!(!Instruction::new(OpId(0)).accesses_memory());
+    }
+
+    #[test]
+    fn content_words_capture_all_fields() {
+        let collect = |i: &Instruction| {
+            let mut w = Vec::new();
+            i.content_words(&mut |x| w.push(x));
+            w
+        };
+        let base = Instruction::new(OpId(3)).reads(&[RegId(1)]).read_mem(&[10]);
+        assert_eq!(collect(&base), collect(&base.clone()));
+        // every field perturbs the stream, and length prefixes prevent
+        // adjacent fields from aliasing (reg 1 + no addr != no reg + addr 1)
+        assert_ne!(collect(&base), collect(&base.clone().imm(0)));
+        assert_ne!(collect(&base), collect(&base.clone().writes(&[RegId(1)])));
+        let a = Instruction::new(OpId(0)).reads(&[RegId(1)]);
+        let b = Instruction::new(OpId(0)).read_mem(&[1]);
+        assert_ne!(collect(&a), collect(&b));
     }
 
     #[test]

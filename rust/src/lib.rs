@@ -30,11 +30,16 @@
 //! - [`baselines`] — refined roofline (native mirror of the AOT-compiled
 //!   JAX/Pallas estimator) and a Timeloop-like analytical model.
 //! - [`runtime`] — PJRT loader executing the AOT artifacts from Rust.
-//! - [`coordinator`] — the estimation service: job queue, worker pool, and
-//!   the design-space-exploration driver that batches roofline queries
-//!   through the XLA executable.
-//! - [`metrics`] / [`report`] — PE/MAPE/variance/Pearson and the paper's
-//!   table/figure renderers.
+//! - [`engine`] — the unified estimation engine: content-addressed kernel
+//!   fingerprints, a sharded LRU cache of layer estimates, and
+//!   kernel-granular parallel scheduling. Every estimation path routes
+//!   through it; repeated kernel shapes (residual blocks, serve fleets,
+//!   DSE sweeps) are priced once.
+//! - [`coordinator`] — the estimation service: job types, the generic
+//!   worker pool, the request server, and the design-space-exploration
+//!   driver that batches roofline queries through the XLA executable.
+//! - [`metrics`] / [`report`] — PE/MAPE/variance/Pearson, the paper's
+//!   table/figure renderers, and process-wide engine counters.
 
 pub mod acadl;
 pub mod accel;
@@ -43,6 +48,7 @@ pub mod baselines;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod dnn;
+pub mod engine;
 pub mod expt;
 pub mod ids;
 pub mod isa;

@@ -13,33 +13,80 @@
 //! Architecture specs: `systolic:4x4[:pw2]`, `ultratrail[:8]`,
 //! `gemmini[:16]`, `plasticine:3x6:16`, or a textual ACADL description via
 //! `file:<path>` / `--arch-file <path>` (see `arch/README.md`).
+//!
+//! Global flags (anywhere on the command line):
+//!
+//! ```text
+//! --workers <N>      worker threads for kernel-granular fan-out (0 = auto)
+//! --cache-cap <N>    estimate-cache entry bound (0 disables caching)
+//! ```
 
 use acadl_perf::acadl::text::{check_source, Severity};
 use acadl_perf::aidg::FixedPointConfig;
 use acadl_perf::coordinator::{
-    self, Arch, DescribedArch, DseSpec, EstimateRequest, Pool, RooflineBackend,
+    self, Arch, DescribedArch, DseSpec, EstimateRequest, Pool, RooflineBackend, ServeOptions,
 };
+use acadl_perf::engine::EstimationEngine;
 use acadl_perf::report::{fmt_bytes, fmt_cycles, Table};
 use acadl_perf::Result;
 
+/// Flags shared by every subcommand.
+struct GlobalOpts {
+    /// Worker threads (0 = available parallelism).
+    workers: usize,
+}
+
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = dispatch(&args) {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let run = match extract_global_flags(&mut args) {
+        Ok(g) => dispatch(&args, &g),
+        Err(e) => Err(e),
+    };
+    if let Err(e) = run {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
 }
 
-fn dispatch(args: &[String]) -> Result<()> {
+/// Strip `--workers N` / `--cache-cap N` out of `args` (they are valid in
+/// any position), applying the cache bound to the global engine.
+fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
+    let mut opts = GlobalOpts { workers: 0 };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--workers" | "--cache-cap" => {
+                anyhow::ensure!(i + 1 < args.len(), "{} needs a value", args[i]);
+                let v: usize = args[i + 1]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad {} value {:?}", args[i], args[i + 1]))?;
+                if args[i] == "--workers" {
+                    opts.workers = v;
+                } else {
+                    EstimationEngine::global().set_cache_capacity(v);
+                }
+                args.drain(i..i + 2);
+            }
+            _ => i += 1,
+        }
+    }
+    Ok(opts)
+}
+
+fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
     match args.first().map(String::as_str) {
-        Some("estimate") => estimate(&args[1..]),
+        Some("estimate") => estimate(&args[1..], g),
         Some("simulate") => simulate(&args[1..]),
         Some("compare") => compare(&args[1..]),
-        Some("dse") => dse(&args[1..]),
+        Some("dse") => dse(&args[1..], g),
         Some("check") => check(&args[1..]),
         Some("serve") => {
             let stdin = std::io::stdin();
-            let n = coordinator::serve(stdin.lock(), std::io::stdout())?;
+            let n = coordinator::serve_with(
+                stdin.lock(),
+                std::io::stdout(),
+                &ServeOptions { workers: g.workers },
+            )?;
             eprintln!("served {n} requests");
             Ok(())
         }
@@ -48,6 +95,7 @@ fn dispatch(args: &[String]) -> Result<()> {
             eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|serve|info> ...");
             eprintln!("  architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
             eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
+            eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
             Ok(())
         }
     }
@@ -82,13 +130,13 @@ fn check(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn estimate(args: &[String]) -> Result<()> {
+fn estimate(args: &[String], g: &GlobalOpts) -> Result<()> {
     let (arch, network) = arch_and_net(args)?;
-    let e = coordinator::run_request(&EstimateRequest {
-        arch,
-        network,
-        fp: FixedPointConfig::default(),
-    })?;
+    let pool = Pool::new(g.workers);
+    let e = coordinator::run_request_pooled(
+        &EstimateRequest { arch, network, fp: FixedPointConfig::default() },
+        &pool,
+    )?;
     let mut t = Table::new(
         format!("{} on {}", e.network, e.arch),
         &["layer", "cycles", "eval iters", "total iters", "fallback", "peak state"],
@@ -122,6 +170,15 @@ fn estimate(args: &[String]) -> Result<()> {
         100.0 * e.evaluated_iters() as f64 / e.total_iters().max(1) as f64,
         e.total_insts(),
         e.runtime.as_secs_f64() * 1e3,
+    );
+    println!(
+        "engine: {} kernels ({} unique) | {} evaluated | {} cache hits | {} deduped | {} workers",
+        e.stats.total_kernels,
+        e.stats.unique_kernels,
+        e.stats.evaluated,
+        e.stats.cache_hits,
+        e.stats.deduped,
+        pool.workers(),
     );
     Ok(())
 }
@@ -227,7 +284,7 @@ fn compare(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn dse(args: &[String]) -> Result<()> {
+fn dse(args: &[String], g: &GlobalOpts) -> Result<()> {
     anyhow::ensure!(!args.is_empty(), "dse <network> --rows R,.. --cols C,.. --tiles T,..");
     let network = args[0].clone();
     let mut rows = vec![2u32, 3, 4];
@@ -250,10 +307,10 @@ fn dse(args: &[String]) -> Result<()> {
     }
     let spec =
         DseSpec { rows, cols, tiles, network, keep_frac: keep, fp: FixedPointConfig::default() };
-    let mut pool = Pool::new(0);
+    let pool = Pool::new(g.workers);
     let backend = RooflineBackend::auto();
     let t0 = std::time::Instant::now();
-    let points = coordinator::explore(&spec, &mut pool, &backend)?;
+    let points = coordinator::explore(&spec, &pool, &backend)?;
     let mut t = Table::new(
         format!("DSE — {} ({} design points, {:.1} s)", spec.network, points.len(), t0.elapsed().as_secs_f64()),
         &["rows", "cols", "tile", "roofline cycles", "AIDG cycles"],

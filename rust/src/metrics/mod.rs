@@ -1,5 +1,74 @@
-//! Estimation-accuracy metrics (paper §7, eqs. 14–18) and summary
-//! statistics for the figures.
+//! Estimation-accuracy metrics (paper §7, eqs. 14–18), summary statistics
+//! for the figures, and process-wide operational [`counters`] fed by the
+//! unified estimation engine.
+
+/// Process-wide monotonic counters for the estimation hot path. Every
+/// [`EstimationEngine`](crate::engine::EstimationEngine) — the global one
+/// *and* any locally constructed one (e.g. a bench comparison's private
+/// engine) — reports here, so unlike the global engine's own stats these
+/// are whole-process telemetry. The serve loop's `stats` command prints
+/// them via [`snapshot`] alongside the global engine's cache state.
+pub mod counters {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// A named monotonic counter.
+    pub struct Counter {
+        name: &'static str,
+        value: AtomicU64,
+    }
+
+    impl Counter {
+        const fn new(name: &'static str) -> Self {
+            Self { name, value: AtomicU64::new(0) }
+        }
+
+        pub fn add(&self, n: u64) {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+
+        pub fn get(&self) -> u64 {
+            self.value.load(Ordering::Relaxed)
+        }
+
+        pub fn name(&self) -> &'static str {
+            self.name
+        }
+    }
+
+    /// Network estimates served by any engine.
+    pub static ENGINE_REQUESTS: Counter = Counter::new("engine.requests");
+    /// Kernel slots seen (every kernel of every non-fused layer).
+    pub static ENGINE_KERNELS_TOTAL: Counter = Counter::new("engine.kernels.total");
+    /// Kernels actually evaluated through the AIDG.
+    pub static ENGINE_KERNELS_EVALUATED: Counter = Counter::new("engine.kernels.evaluated");
+    /// Kernel slots served from an estimate cache.
+    pub static ENGINE_CACHE_HITS: Counter = Counter::new("engine.cache.hits");
+    /// Kernel slots deduplicated within a single request.
+    pub static ENGINE_KERNELS_DEDUPED: Counter = Counter::new("engine.kernels.deduped");
+
+    /// One kernel batch's accounting, in one call (the request counter is
+    /// bumped separately — kernel-batch APIs are not whole requests).
+    pub fn note_engine_kernels(kernels: u64, evaluated: u64, hits: u64, deduped: u64) {
+        ENGINE_KERNELS_TOTAL.add(kernels);
+        ENGINE_KERNELS_EVALUATED.add(evaluated);
+        ENGINE_CACHE_HITS.add(hits);
+        ENGINE_KERNELS_DEDUPED.add(deduped);
+    }
+
+    /// Snapshot of every counter, for reporting.
+    pub fn snapshot() -> Vec<(&'static str, u64)> {
+        [
+            &ENGINE_REQUESTS,
+            &ENGINE_KERNELS_TOTAL,
+            &ENGINE_KERNELS_EVALUATED,
+            &ENGINE_CACHE_HITS,
+            &ENGINE_KERNELS_DEDUPED,
+        ]
+        .iter()
+        .map(|c| (c.name(), c.get()))
+        .collect()
+    }
+}
 
 /// Percentage error of a whole-DNN estimate (eq. 15).
 pub fn percentage_error(estimated: f64, measured: f64) -> f64 {
@@ -168,5 +237,17 @@ mod tests {
     fn quantiles_interpolate() {
         let b = box_stats(&[1.0, 2.0, 3.0, 4.0]);
         assert!((b.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        // counters are process-global; assert deltas, not absolutes
+        let before = counters::ENGINE_KERNELS_TOTAL.get();
+        counters::note_engine_kernels(10, 4, 5, 1);
+        counters::ENGINE_REQUESTS.add(1);
+        assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
+        let snap = counters::snapshot();
+        assert_eq!(snap.len(), 5);
+        assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
     }
 }

@@ -35,11 +35,33 @@ fn estimation_is_deterministic() {
         fp: FixedPointConfig::default(),
     };
     let a = run_request(&req).unwrap().total_cycles();
-    let mut pool = Pool::new(4);
-    let results = pool.run_all(vec![req.clone(), req.clone(), req]);
-    for r in results {
-        assert_eq!(r.unwrap().total_cycles(), a);
+    // independent fresh engines on pool workers: every request genuinely
+    // re-evaluates on its own thread (the typed `run_all` path would be
+    // served from the global engine's cache, proving nothing about
+    // concurrent evaluation determinism)
+    let pool = Pool::new(4);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for _ in 0..3 {
+        let req = req.clone();
+        let tx = tx.clone();
+        pool.spawn(move || {
+            let net = acadl_perf::dnn::zoo::by_name(&req.network).unwrap();
+            let e = acadl_perf::engine::EstimationEngine::new(64)
+                .estimate_network(&req.arch, &net, &req.fp)
+                .unwrap();
+            tx.send(e.total_cycles()).unwrap();
+        })
+        .unwrap();
     }
+    drop(tx);
+    let cycles: Vec<u64> = rx.iter().collect();
+    assert_eq!(cycles.len(), 3);
+    for c in cycles {
+        assert_eq!(c, a);
+    }
+    // the typed request path (global engine, possibly cached) agrees too
+    let pooled = pool.run_all(vec![req]).pop().unwrap().unwrap();
+    assert_eq!(pooled.total_cycles(), a);
 }
 
 /// Full DSE loop over the Plasticine grid with the auto backend (XLA when
@@ -54,9 +76,9 @@ fn dse_end_to_end() {
         keep_frac: 1.0,
         fp: FixedPointConfig::default(),
     };
-    let mut pool = Pool::new(0);
+    let pool = Pool::new(0);
     let backend = RooflineBackend::auto();
-    let points = explore(&spec, &mut pool, &backend).unwrap();
+    let points = explore(&spec, &pool, &backend).unwrap();
     assert_eq!(points.len(), 8);
     assert!(points.iter().all(|p| p.aidg_cycles.is_some() && p.roofline_cycles > 0.0));
     // AIDG ranking is sorted

@@ -1,0 +1,263 @@
+//! Correctness of the unified estimation engine (`crate::engine`): cached,
+//! deduplicated, and pool-parallel estimation must be **cycle-identical**
+//! to the uncached reference path (`coordinator::estimate_network`) on
+//! every paper architecture — hand-built and description-compiled — cold
+//! and warm; repeated-layer networks must evaluate strictly fewer unique
+//! kernels than total kernels; and one shared engine must survive being
+//! hammered from many threads.
+
+use std::sync::Arc;
+
+use acadl_perf::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailConfig};
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{estimate_network, Arch, DescribedArch, NetworkEstimate, Pool};
+use acadl_perf::dnn::zoo;
+use acadl_perf::engine::{ArchDigest, EstimationEngine, DEFAULT_CACHE_CAP};
+
+/// The four paper architectures as hand builders.
+fn builder_archs() -> Vec<Arch> {
+    vec![
+        Arch::Systolic(SystolicConfig::new(2, 2)),
+        Arch::UltraTrail(UltraTrailConfig::default()),
+        Arch::Gemmini(GemminiConfig::default()),
+        Arch::Plasticine(PlasticineConfig::new(2, 3, 8)),
+    ]
+}
+
+/// The four paper architectures as shipped textual descriptions.
+fn described_archs() -> Vec<Arch> {
+    [
+        "arch/systolic_16x16.toml",
+        "arch/ultratrail_8x8.toml",
+        "arch/gemmini_16.toml",
+        "arch/plasticine_3x6.toml",
+    ]
+    .into_iter()
+    .map(|f| Arch::Described(DescribedArch::file(f)))
+    .collect()
+}
+
+/// Everything cycle-relevant must match, layer by layer.
+fn assert_cycle_identical(what: &str, a: &NetworkEstimate, b: &NetworkEstimate) {
+    assert_eq!(a.layer_cycles(), b.layer_cycles(), "{what}: per-layer cycles differ");
+    assert_eq!(a.total_cycles(), b.total_cycles(), "{what}: total cycles differ");
+    assert_eq!(a.evaluated_iters(), b.evaluated_iters(), "{what}: evaluated iters differ");
+    assert_eq!(a.total_iters(), b.total_iters(), "{what}: total iters differ");
+    assert_eq!(a.total_insts(), b.total_insts(), "{what}: instruction totals differ");
+}
+
+/// Cold engine == uncached reference == warm engine, for every hand-built
+/// and description-compiled paper architecture on TC-ResNet8.
+#[test]
+fn cold_and_warm_cycle_identical_across_all_architectures() {
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    for arch in builder_archs().into_iter().chain(described_archs()) {
+        let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+        let mapper = arch.mapper().unwrap();
+        let reference = estimate_network(mapper.as_ref(), &net, &fp).unwrap();
+        let name = reference.arch.clone();
+
+        let cold = engine.estimate_network(&arch, &net, &fp).unwrap();
+        assert_cycle_identical(&format!("{name} cold"), &reference, &cold);
+        assert_eq!(cold.stats.cache_hits, 0, "{name}: fresh engine cannot hit");
+
+        let warm = engine.estimate_network(&arch, &net, &fp).unwrap();
+        assert_cycle_identical(&format!("{name} warm"), &reference, &warm);
+        assert_eq!(warm.stats.evaluated, 0, "{name}: warm run must not re-evaluate");
+        assert_eq!(
+            warm.stats.cache_hits + warm.stats.deduped,
+            warm.stats.total_kernels,
+            "{name}: warm run must be fully reused ({:?})",
+            warm.stats
+        );
+    }
+}
+
+/// The acceptance property: a repeated-layer network (TC-ResNet8 repeats
+/// the clip-layer shape inside every residual block) evaluates strictly
+/// fewer unique kernels than total kernels, and the counters prove it. The
+/// scalar (systolic) mapper maps activations explicitly, so the duplicates
+/// are visible there; the other mappers fuse activations, so for them only
+/// the accounting invariants are asserted.
+#[test]
+fn repeated_layers_deduplicate() {
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    for arch in builder_archs() {
+        let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+        let e = engine.estimate_network(&arch, &net, &fp).unwrap();
+        if matches!(arch, Arch::Systolic(_)) {
+            assert!(
+                e.stats.unique_kernels < e.stats.total_kernels,
+                "{}: expected unique < total, got {:?}",
+                e.arch,
+                e.stats
+            );
+            // one clip kernel per residual block is a repeat of its sibling
+            assert!(e.stats.deduped >= 3, "{}: {:?}", e.arch, e.stats);
+        }
+        assert!(e.stats.unique_kernels <= e.stats.total_kernels, "{}: {:?}", e.arch, e.stats);
+        assert_eq!(e.stats.evaluated, e.stats.unique_kernels, "{}: {:?}", e.arch, e.stats);
+        assert_eq!(
+            e.stats.evaluated + e.stats.deduped + e.stats.cache_hits,
+            e.stats.total_kernels,
+            "{}: {:?}",
+            e.arch,
+            e.stats
+        );
+        // the engine's own accounting agrees with the request's
+        let s = engine.stats();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.kernels_evaluated, e.stats.evaluated);
+        assert_eq!(s.cache.entries as u64, e.stats.unique_kernels);
+    }
+}
+
+/// Kernel-granular pooled evaluation returns the same estimate (cycles and
+/// accounting) as the serial engine path.
+#[test]
+fn pooled_path_matches_serial() {
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    let pool = Pool::new(4);
+    for arch in builder_archs() {
+        let serial = EstimationEngine::new(DEFAULT_CACHE_CAP)
+            .estimate_network(&arch, &net, &fp)
+            .unwrap();
+        let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+        let cold = engine.estimate_network_pooled(&arch, &net, &fp, &pool).unwrap();
+        assert_cycle_identical(&format!("{} pooled cold", serial.arch), &serial, &cold);
+        assert_eq!(cold.stats, serial.stats, "{}: accounting differs", serial.arch);
+        let warm = engine.estimate_network_pooled(&arch, &net, &fp, &pool).unwrap();
+        assert_cycle_identical(&format!("{} pooled warm", serial.arch), &serial, &warm);
+        assert_eq!(warm.stats.evaluated, 0, "{}: {:?}", serial.arch, warm.stats);
+        // warm accounting mirrors the serial path: one hit per unique key,
+        // repeats classed as intra-request dedup
+        assert_eq!(warm.stats.cache_hits, warm.stats.unique_kernels, "{:?}", warm.stats);
+        assert_eq!(
+            warm.stats.deduped,
+            warm.stats.total_kernels - warm.stats.unique_kernels,
+            "{:?}",
+            warm.stats
+        );
+    }
+}
+
+/// Estimating through a shut-down pool surfaces an error, never a panic.
+#[test]
+fn pooled_path_errors_on_closed_pool() {
+    let net = zoo::tc_resnet8();
+    let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let pool = Pool::new(1);
+    pool.close();
+    let r = engine.estimate_network_pooled(
+        &Arch::Systolic(SystolicConfig::new(2, 2)),
+        &net,
+        &FixedPointConfig::default(),
+        &pool,
+    );
+    assert!(r.is_err(), "closed pool must be an error");
+}
+
+/// Many threads hammering one shared engine: every result cycle-identical
+/// to the single-threaded reference, cache size bounded by unique kernels.
+#[test]
+fn multithreaded_stress_on_shared_engine() {
+    let fp = FixedPointConfig::default();
+    let engine = Arc::new(EstimationEngine::new(DEFAULT_CACHE_CAP));
+    let workloads: Vec<(Arch, &str)> = vec![
+        (Arch::Systolic(SystolicConfig::new(2, 2)), "tc_resnet8"),
+        (Arch::UltraTrail(UltraTrailConfig::default()), "tc_resnet8"),
+    ];
+    let reference: Vec<u64> = workloads
+        .iter()
+        .map(|(arch, net)| {
+            let mapper = arch.mapper().unwrap();
+            estimate_network(mapper.as_ref(), &zoo::by_name(net).unwrap(), &fp)
+                .unwrap()
+                .total_cycles()
+        })
+        .collect();
+
+    let threads: Vec<_> = (0..8usize)
+        .map(|t| {
+            let engine = Arc::clone(&engine);
+            let workloads: Vec<(Arch, String)> = workloads
+                .iter()
+                .map(|(a, n)| (a.clone(), n.to_string()))
+                .collect();
+            std::thread::spawn(move || {
+                let fp = FixedPointConfig::default();
+                let mut cycles = Vec::new();
+                for round in 0..3usize {
+                    let (arch, net) = &workloads[(t + round) % workloads.len()];
+                    let e = engine
+                        .estimate_network(arch, &zoo::by_name(net).unwrap(), &fp)
+                        .unwrap();
+                    cycles.push(((t + round) % workloads.len(), e.total_cycles()));
+                }
+                cycles
+            })
+        })
+        .collect();
+    for th in threads {
+        for (which, cycles) in th.join().unwrap() {
+            assert_eq!(cycles, reference[which], "thread result diverged");
+        }
+    }
+    // 24 requests, but almost all kernel work reused across threads. Racing
+    // cold misses may each evaluate (both insert the same entry), so the
+    // bound is deliberately loose — yet far below the 24 cold runs the old
+    // per-request path would have paid.
+    let s = engine.stats();
+    assert_eq!(s.requests, 24);
+    assert!(
+        s.kernels_evaluated < s.kernels_total / 2,
+        "expected substantial cross-thread reuse: {s:?}"
+    );
+}
+
+/// A structurally identical description and hand builder share one
+/// architecture digest — and therefore one set of cache entries.
+#[test]
+fn described_and_builder_archs_share_cache_entries() {
+    let described = Arch::Described(DescribedArch::file("arch/ultratrail_8x8.toml"));
+    let hand = Arch::UltraTrail(UltraTrailConfig::default());
+    let dd = ArchDigest::of(described.mapper().unwrap().diagram());
+    let hd = ArchDigest::of(hand.mapper().unwrap().diagram());
+    if dd != hd {
+        // digests are allowed to differ if the diagrams differ structurally
+        // (they are pinned cycle-identical, not structure-identical); in that
+        // case the engine simply keeps separate entries — nothing to assert
+        eprintln!("note: described/builder ultratrail digests differ; no cache sharing");
+        return;
+    }
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    engine.estimate_network(&hand, &net, &fp).unwrap();
+    let cross = engine.estimate_network(&described, &net, &fp).unwrap();
+    assert_eq!(cross.stats.evaluated, 0, "{:?}", cross.stats);
+}
+
+/// A tight cache capacity bounds memory (entries evicted LRU) without ever
+/// compromising correctness.
+#[test]
+fn bounded_cache_stays_correct_under_eviction() {
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    let arch = Arch::Systolic(SystolicConfig::new(2, 2));
+    let reference = {
+        let mapper = arch.mapper().unwrap();
+        estimate_network(mapper.as_ref(), &net, &fp).unwrap()
+    };
+    // capacity 4 over 16 shards -> at most 1 entry per shard
+    let engine = EstimationEngine::new(4);
+    for round in 0..3 {
+        let e = engine.estimate_network(&arch, &net, &fp).unwrap();
+        assert_cycle_identical(&format!("evicting round {round}"), &reference, &e);
+    }
+    assert!(engine.cache_len() <= 16, "cap 4 -> at most one entry per shard");
+    assert!(engine.stats().cache.evictions > 0, "{:?}", engine.stats());
+}
