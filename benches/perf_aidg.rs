@@ -8,6 +8,7 @@ use acadl_perf::accel::{Systolic, SystolicConfig};
 use acadl_perf::aidg::{estimate_layer, Evaluator, FixedPointConfig};
 use acadl_perf::bench_harness::{bench, section, time_once};
 use acadl_perf::coordinator::Arch;
+use acadl_perf::dnn::text::NetRegistry;
 use acadl_perf::dnn::zoo;
 use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
 use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
@@ -64,11 +65,35 @@ fn main() {
     assert_eq!(cold.total_cycles(), warm.total_cycles(), "cache must be cycle-identical");
     let hit_rate = (warm.stats.cache_hits + warm.stats.deduped) as f64
         / warm.stats.total_kernels.max(1) as f64;
+
+    section("perf — described networks (net/*.toml through the same cache)");
+    // the textual description compiles to the zoo builder's exact layer
+    // list, so its kernels carry the same content-addressed keys — the
+    // zoo-warmed engine serves the described network without evaluating
+    // anything
+    let src =
+        std::fs::read_to_string("net/tc_resnet8.toml").expect("reading net/tc_resnet8.toml");
+    let (described, compile_dt) = time_once("compile net/tc_resnet8.toml", || {
+        NetRegistry::global().get_or_compile(&src, "net/tc_resnet8.toml").unwrap()
+    });
+    let (net_est, _net_dt) =
+        time_once("engine/net:tc_resnet8 on systolic4x4 (described, zoo-warmed)", || {
+            engine.estimate_network(&arch, &described, &fp).unwrap()
+        });
+    assert_eq!(
+        net_est.total_cycles(),
+        cold.total_cycles(),
+        "described network must be cycle-identical to the zoo builder"
+    );
+    let net_hit_rate = (net_est.stats.cache_hits + net_est.stats.deduped) as f64
+        / net_est.stats.total_kernels.max(1) as f64;
+
     let json = format!(
         "{{\n  \"bench\": \"engine_cold_warm\",\n  \"network\": \"tc_resnet8\",\n  \
          \"arch\": \"systolic4x4\",\n  \"cold_ms\": {:.3},\n  \"warm_ms\": {:.3},\n  \
          \"speedup\": {:.2},\n  \"total_kernels\": {},\n  \"unique_kernels\": {},\n  \
-         \"deduped\": {},\n  \"warm_hit_rate\": {:.4}\n}}\n",
+         \"deduped\": {},\n  \"warm_hit_rate\": {:.4},\n  \"net_compile_ms\": {:.3},\n  \
+         \"net_warm_hit_rate\": {:.4}\n}}\n",
         cold_dt.as_secs_f64() * 1e3,
         warm_dt.as_secs_f64() * 1e3,
         cold_dt.as_secs_f64() / warm_dt.as_secs_f64().max(1e-9),
@@ -76,7 +101,13 @@ fn main() {
         cold.stats.unique_kernels,
         cold.stats.deduped,
         hit_rate,
+        compile_dt.as_secs_f64() * 1e3,
+        net_hit_rate,
     );
     std::fs::write("BENCH_engine.json", &json).expect("writing BENCH_engine.json");
-    println!("  => warm hit rate {:.1}% — wrote BENCH_engine.json", hit_rate * 100.0);
+    println!(
+        "  => warm hit rate {:.1}% | described-net warm hit rate {:.1}% — wrote BENCH_engine.json",
+        hit_rate * 100.0,
+        net_hit_rate * 100.0
+    );
 }

@@ -78,6 +78,7 @@ struct RouteKey {
 /// An accelerator architecture modeled in ACADL.
 #[derive(Debug)]
 pub struct Diagram {
+    /// Architecture name.
     pub name: String,
     objects: Vec<Object>,
     ops: Interner,
@@ -105,6 +106,7 @@ pub struct Diagram {
 }
 
 impl Diagram {
+    /// An empty, unfinalized diagram named `name`.
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -136,10 +138,12 @@ impl Diagram {
         OpId(self.ops.intern(name))
     }
 
+    /// Resolve an op id to its mnemonic.
     pub fn op_name(&self, op: OpId) -> &str {
         self.ops.name(op.0)
     }
 
+    /// Look up an already-interned op by mnemonic.
     pub fn lookup_op(&self, name: &str) -> Option<OpId> {
         self.ops.get(name).map(OpId)
     }
@@ -149,6 +153,7 @@ impl Diagram {
         self.regs.len()
     }
 
+    /// Resolve a register id to its name.
     pub fn reg_name(&self, r: RegId) -> &str {
         self.regs.name(r.0)
     }
@@ -250,10 +255,12 @@ impl Diagram {
         (imem, ifs)
     }
 
+    /// Add a pipeline stage.
     pub fn add_stage(&mut self, name: &str, latency: impl Into<Latency>) -> ObjId {
         self.push(name, ObjectKind::PipelineStage { latency: latency.into() })
     }
 
+    /// Add an execute stage.
     pub fn add_execute_stage(&mut self, name: &str) -> ObjId {
         self.push(name, ObjectKind::ExecuteStage)
     }
@@ -321,40 +328,49 @@ impl Diagram {
         self.forward[from.idx()].push(to);
     }
 
+    /// Register-file read association.
     pub fn fu_reads(&mut self, fu: ObjId, rf: ObjId) {
         self.fu_read_rf[fu.idx()].push(rf);
     }
 
+    /// Register-file write association.
     pub fn fu_writes(&mut self, fu: ObjId, rf: ObjId) {
         self.fu_write_rf[fu.idx()].push(rf);
     }
 
+    /// Memory read association.
     pub fn mem_reads(&mut self, fu: ObjId, mem: ObjId) {
         self.fu_read_mem[fu.idx()].push(mem);
     }
 
+    /// Memory write association.
     pub fn mem_writes(&mut self, fu: ObjId, mem: ObjId) {
         self.fu_write_mem[fu.idx()].push(mem);
     }
 
     // ---- accessors --------------------------------------------------------
 
+    /// The object behind `id`.
     pub fn object(&self, id: ObjId) -> &Object {
         &self.objects[id.idx()]
     }
 
+    /// Number of objects.
     pub fn num_objects(&self) -> usize {
         self.objects.len()
     }
 
+    /// The fetch front-end (panics when absent).
     pub fn fetch_config(&self) -> &FetchConfig {
         self.fetch.as_ref().expect("diagram has no fetch front-end")
     }
 
+    /// The implicit write-back pseudo-object (panics before `finalize`).
     pub fn writeback_obj(&self) -> ObjId {
         self.writeback.expect("diagram not finalized")
     }
 
+    /// Structural-lock configuration of `id`.
     pub fn lock(&self, id: ObjId) -> Lock {
         self.locks[id.idx()]
     }
@@ -373,6 +389,7 @@ impl Diagram {
         }
     }
 
+    /// Iterate `(id, object)` pairs.
     pub fn objects_iter(&self) -> impl Iterator<Item = (ObjId, &Object)> {
         self.objects
             .iter()

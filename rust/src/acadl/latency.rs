@@ -29,7 +29,9 @@ use crate::isa::Instruction;
 /// architecture fingerprint.)
 #[derive(Debug, Clone, PartialEq, Hash)]
 pub enum Latency {
+    /// Constant latency.
     Fixed(Cycle),
+    /// Immediate-dependent latency expression.
     Expr(Expr),
 }
 
@@ -67,23 +69,32 @@ impl From<u64> for Latency {
 /// Parsed latency expression AST.
 #[derive(Debug, Clone, PartialEq, Hash)]
 pub enum Expr {
+    /// Integer constant.
     Const(i64),
     /// `immN` — index into [`Instruction::imms`]; missing entries read 0.
     Imm(usize),
+    /// Negation.
     Neg(Box<Expr>),
+    /// Addition.
     Add(Box<Expr>, Box<Expr>),
+    /// Subtraction.
     Sub(Box<Expr>, Box<Expr>),
+    /// Multiplication.
     Mul(Box<Expr>, Box<Expr>),
     /// Floor division; division by zero yields 0.
     Div(Box<Expr>, Box<Expr>),
+    /// Remainder; a zero divisor yields 0.
     Rem(Box<Expr>, Box<Expr>),
     /// Ceil division; division by zero yields 0.
     Cdiv(Box<Expr>, Box<Expr>),
+    /// Maximum.
     Max(Box<Expr>, Box<Expr>),
+    /// Minimum.
     Min(Box<Expr>, Box<Expr>),
 }
 
 impl Expr {
+    /// Parse a latency expression string.
     pub fn parse(src: &str) -> Result<Self> {
         let mut p = Parser { toks: lex(src)?, pos: 0 };
         let e = p.expr()?;
@@ -93,6 +104,7 @@ impl Expr {
         Ok(e)
     }
 
+    /// Evaluate against an instruction's immediates.
     pub fn eval(&self, imms: &[i64]) -> i64 {
         match self {
             Expr::Const(v) => *v,

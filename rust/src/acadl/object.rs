@@ -17,7 +17,10 @@ use crate::ids::{Addr, Cycle, ObjId, OpId, RegId};
 pub enum ObjectKind {
     /// Forwards instructions; an instruction resides `latency` cycles inside
     /// before being forwarded (paper: PipelineStage).
-    PipelineStage { latency: Latency },
+    PipelineStage {
+        /// Residency before forwarding.
+        latency: Latency,
+    },
 
     /// Receives instructions and dispatches them to a contained
     /// FunctionalUnit; its own latency is *not* accumulated when a contained
@@ -28,28 +31,49 @@ pub enum ObjectKind {
     /// Fetches from the instruction memory into an issue buffer and can
     /// issue multiple instructions per cycle up to `issue_buffer_size`
     /// (paper: InstructionFetchStage).
-    InstructionFetchStage { latency: Latency, issue_buffer_size: u32 },
+    InstructionFetchStage {
+        /// Fetch-stage residency.
+        latency: Latency,
+        /// Issue-buffer depth.
+        issue_buffer_size: u32,
+    },
 
     /// Executes instructions whose operation is in `to_process`, taking
     /// `latency` cycles after data dependencies resolve (paper:
     /// FunctionalUnit; also MemoryAccessUnit when it has memory
     /// associations).
-    FunctionalUnit { latency: Latency, to_process: Vec<OpId> },
+    FunctionalUnit {
+        /// Execution latency (may ride on instruction immediates).
+        latency: Latency,
+        /// Operations this unit processes.
+        to_process: Vec<OpId>,
+    },
 
     /// Maps unique register names to values; access latency is implicit in
     /// the FUs that read/write it (paper: RegisterFile).
-    RegisterFile { data_width: u32, regs: Vec<RegId> },
+    RegisterFile {
+        /// Register width in bits.
+        data_width: u32,
+        /// Registers this file owns.
+        regs: Vec<RegId>,
+    },
 
     /// Data storage with per-transaction latencies. `port_width` is the
     /// number of words per transaction; `max_concurrent_requests` bounds
     /// simultaneous transactions (paper: Memory + MemoryInterface).
     Memory {
+        /// Read-transaction latency.
         read_latency: Latency,
+        /// Write-transaction latency.
         write_latency: Latency,
+        /// Word width in bits.
         data_width: u32,
+        /// Words per transaction.
         port_width: u32,
+        /// Simultaneous transactions.
         max_concurrent_requests: u32,
-        address_ranges: Vec<(Addr, Addr)>, // half-open [start, end)
+        /// Claimed half-open `[start, end)` address ranges.
+        address_ranges: Vec<(Addr, Addr)>,
     },
 
     /// The pseudo-object anchoring load write-backs (§6.1): zero latency and
@@ -60,7 +84,9 @@ pub enum ObjectKind {
 /// One instantiated ACADL object.
 #[derive(Debug, Clone)]
 pub struct Object {
+    /// Object name.
     pub name: String,
+    /// Object kind and kind-specific configuration.
     pub kind: ObjectKind,
 }
 
@@ -79,10 +105,12 @@ impl Object {
         }
     }
 
+    /// True for memory objects.
     pub fn is_memory(&self) -> bool {
         matches!(self.kind, ObjectKind::Memory { .. })
     }
 
+    /// True for functional units.
     pub fn is_functional_unit(&self) -> bool {
         matches!(self.kind, ObjectKind::FunctionalUnit { .. })
     }

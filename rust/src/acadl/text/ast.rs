@@ -20,7 +20,9 @@ use std::fmt::{self, Write as _};
 /// spans always compare equal so AST comparisons ignore positions.
 #[derive(Debug, Clone, Copy, Default, Eq)]
 pub struct Span {
+    /// 1-based line.
     pub line: u32,
+    /// 1-based column.
     pub col: u32,
 }
 
@@ -31,6 +33,7 @@ impl PartialEq for Span {
 }
 
 impl Span {
+    /// A span at `line`:`col`.
     pub fn new(line: u32, col: u32) -> Self {
         Self { line, col }
     }
@@ -45,11 +48,14 @@ impl fmt::Display for Span {
 /// A value plus the source span it came from.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Spanned<T> {
+    /// The wrapped value.
     pub node: T,
+    /// Where it came from.
     pub span: Span,
 }
 
 impl<T> Spanned<T> {
+    /// Wrap `node` with `span`.
     pub fn new(node: T, span: Span) -> Self {
         Self { node, span }
     }
@@ -63,22 +69,36 @@ impl<T> Spanned<T> {
 /// Binary operators of the parameter expression language.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BinOp {
+    /// `+`
     Add,
+    /// `-`
     Sub,
+    /// `*`
     Mul,
+    /// `/` (Euclidean)
     Div,
+    /// `%` (Euclidean)
     Rem,
+    /// `==`
     Eq,
+    /// `!=`
     Ne,
+    /// `<`
     Lt,
+    /// `<=`
     Le,
+    /// `>`
     Gt,
+    /// `>=`
     Ge,
+    /// `&&`
     And,
+    /// `||`
     Or,
 }
 
 impl BinOp {
+    /// Source symbol of the operator.
     pub fn symbol(self) -> &'static str {
         match self {
             BinOp::Add => "+",
@@ -112,12 +132,16 @@ impl BinOp {
 /// Two-argument builtin functions (same set as the latency language).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Func {
+    /// Ceiling division.
     Cdiv,
+    /// Maximum.
     Max,
+    /// Minimum.
     Min,
 }
 
 impl Func {
+    /// Source name of the function.
     pub fn name(self) -> &'static str {
         match self {
             Func::Cdiv => "cdiv",
@@ -131,10 +155,15 @@ impl Func {
 /// references, arithmetic, comparisons (0/1), and `cdiv`/`max`/`min`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PExpr {
+    /// Integer literal.
     Const(i64),
+    /// Parameter or loop-variable reference.
     Var(String),
+    /// Unary negation.
     Neg(Box<PExpr>),
+    /// Binary operation.
     Bin(BinOp, Box<PExpr>, Box<PExpr>),
+    /// Two-argument builtin call.
     Call(Func, Box<PExpr>, Box<PExpr>),
 }
 
@@ -258,7 +287,9 @@ impl fmt::Display for PExpr {
 /// One segment of an interpolated string.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Segment {
+    /// Literal text.
     Lit(String),
+    /// A `${...}` hole.
     Expr(PExpr),
 }
 
@@ -267,11 +298,14 @@ pub enum Segment {
 /// by the latency language).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Template {
+    /// Alternating literal and expression segments.
     pub segments: Vec<Segment>,
+    /// Source span of the whole template.
     pub span: Span,
 }
 
 impl Template {
+    /// A template of pure literal text (no holes).
     pub fn lit(text: impl Into<String>) -> Self {
         let text = text.into();
         let segments = if text.is_empty() { Vec::new() } else { vec![Segment::Lit(text)] };
@@ -315,86 +349,139 @@ impl Template {
 /// One `var in lo..hi` range of a `foreach` clause (half-open).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ForRange {
+    /// Loop variable.
     pub var: Spanned<String>,
+    /// Lower bound (inclusive).
     pub lo: Spanned<PExpr>,
+    /// Upper bound (exclusive).
     pub hi: Spanned<PExpr>,
 }
 
 /// The fetch front-end section (`[fetch]`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Fetch {
+    /// Instruction-memory name.
     pub imem: Template,
+    /// Instruction-memory read latency.
     pub imem_read_latency: Spanned<PExpr>,
+    /// Instructions per fetch transaction.
     pub imem_port_width: Spanned<PExpr>,
+    /// Fetch-stage name.
     pub ifs: Template,
+    /// Fetch-stage latency.
     pub ifs_latency: Spanned<PExpr>,
+    /// Issue-buffer depth.
     pub issue_buffer: Spanned<PExpr>,
+    /// Span of the `[fetch]` header.
     pub span: Span,
 }
 
 /// A replicable declaration: the body plus its `foreach`/`when` clauses.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Decl {
+    /// The declaration body.
     pub body: DeclBody,
+    /// Replication ranges.
     pub foreach: Vec<ForRange>,
+    /// Guard expression.
     pub when: Option<Spanned<PExpr>>,
+    /// Span of the `[[...]]` header.
     pub span: Span,
 }
 
 /// The body of one declaration (object or association edge).
 #[derive(Debug, Clone, PartialEq)]
 pub enum DeclBody {
+    /// A pipeline stage.
     Stage {
+        /// Object name.
         name: Template,
+        /// Residency latency (latency-language string after `${}`).
         latency: Template,
     },
+    /// An execute stage.
     ExecuteStage {
+        /// Object name.
         name: Template,
     },
+    /// A functional unit.
     FunctionalUnit {
+        /// Object name.
         name: Template,
         /// Containing execute stage (optional here; may instead come from an
         /// explicit `[[contains]]` edge).
         container: Option<Template>,
+        /// Execution latency (latency-language string after `${}`).
         latency: Template,
+        /// Operations the unit processes.
         ops: Vec<Spanned<String>>,
     },
+    /// A register file.
     RegisterFile {
+        /// Object name.
         name: Template,
+        /// Register-name prefix (registers are `<prefix><i>`).
         prefix: Template,
+        /// Register count.
         count: Spanned<PExpr>,
     },
+    /// A data memory.
     Memory {
+        /// Object name.
         name: Template,
+        /// Read-transaction latency.
         read_latency: Template,
+        /// Write-transaction latency.
         write_latency: Template,
+        /// Words per transaction.
         port_width: Spanned<PExpr>,
+        /// Simultaneous transactions.
         max_concurrent: Spanned<PExpr>,
+        /// Claimed address-range base.
         base: Spanned<PExpr>,
+        /// Claimed address-range size in words.
         words: Spanned<PExpr>,
     },
+    /// `[[forward]]` routing edge.
     Forward {
+        /// Source stage.
         from: Template,
+        /// Target stage.
         to: Template,
     },
+    /// `[[contains]]` containment edge.
     Contains {
+        /// The containing execute stage.
         parent: Template,
+        /// The contained functional unit.
         child: Template,
     },
+    /// `[[reads]]` FU → register-file association.
     Reads {
+        /// The functional unit.
         fu: Template,
+        /// The register file it reads.
         rf: Template,
     },
+    /// `[[writes]]` FU → register-file association.
     Writes {
+        /// The functional unit.
         fu: Template,
+        /// The register file it writes.
         rf: Template,
     },
+    /// `[[mem_read]]` FU → memory association.
     MemRead {
+        /// The functional unit.
         fu: Template,
+        /// The memory it reads.
         mem: Template,
     },
+    /// `[[mem_write]]` FU → memory association.
     MemWrite {
+        /// The functional unit.
         fu: Template,
+        /// The memory it writes.
         mem: Template,
     },
 }
@@ -421,7 +508,9 @@ impl DeclBody {
 /// One `name = value` parameter.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Param {
+    /// Parameter name.
     pub name: Spanned<String>,
+    /// Integer value.
     pub value: Spanned<i64>,
 }
 

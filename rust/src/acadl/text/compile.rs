@@ -31,58 +31,95 @@ const MAX_INSTANCES_PER_DECL: usize = 1 << 20;
 /// A fully expanded description: concrete objects and edges, no templates.
 #[derive(Debug, Clone, Default)]
 pub struct Flat {
+    /// Expanded architecture name.
     pub name: String,
+    /// Parameter values.
     pub params: BTreeMap<String, i64>,
+    /// Declared ops (`None` = no `[isa]` section).
     pub isa: Option<Vec<Spanned<String>>>,
+    /// Mapper family.
     pub mapper: Option<Spanned<String>>,
+    /// Fetch front-end.
     pub fetch: Option<FlatFetch>,
+    /// Expanded objects in declaration order.
     pub objects: Vec<FlatObject>,
+    /// Expanded association edges.
     pub edges: Vec<FlatEdge>,
 }
 
 #[derive(Debug, Clone)]
+/// Expanded `[fetch]` front-end.
 pub struct FlatFetch {
+    /// Instruction-memory name.
     pub imem: String,
+    /// Instruction-memory read latency.
     pub read_latency: i64,
+    /// Instructions per fetch transaction.
     pub port_width: i64,
+    /// Fetch-stage name.
     pub ifs: String,
+    /// Fetch-stage latency.
     pub ifs_latency: i64,
+    /// Issue-buffer depth.
     pub issue_buffer: i64,
+    /// Span of the `[fetch]` header.
     pub span: Span,
 }
 
 #[derive(Debug, Clone)]
+/// One expanded object.
 pub struct FlatObject {
+    /// Expanded (concrete) name.
     pub name: Spanned<String>,
+    /// Kind and attributes.
     pub kind: FlatObjKind,
 }
 
 #[derive(Debug, Clone)]
+/// Kind-specific attributes of an expanded object.
 pub enum FlatObjKind {
+    /// A pipeline stage.
     Stage {
+        /// Residency latency.
         latency: Latency,
     },
+    /// An execute stage.
     ExecuteStage,
+    /// A functional unit.
     FunctionalUnit {
+        /// Containing execute stage, when given via `in = "..."`.
         container: Option<Spanned<String>>,
+        /// Execution latency.
         latency: Latency,
+        /// Operations the unit processes.
         ops: Vec<Spanned<String>>,
     },
+    /// A register file.
     RegisterFile {
+        /// Register-name prefix.
         prefix: String,
+        /// Register count.
         count: i64,
     },
+    /// A data memory.
     Memory {
+        /// Read-transaction latency.
         read_latency: Latency,
+        /// Write-transaction latency.
         write_latency: Latency,
+        /// Words per transaction.
         port_width: i64,
+        /// Simultaneous transactions.
         max_concurrent: i64,
+        /// Claimed address-range base.
         base: i64,
+        /// Claimed address-range size in words.
         words: i64,
     },
 }
 
 impl FlatObjKind {
+    /// Human-readable kind name for diagnostics.
     pub fn kind_name(&self) -> &'static str {
         match self {
             FlatObjKind::Stage { .. } => "pipeline stage",
@@ -95,17 +132,26 @@ impl FlatObjKind {
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which association an expanded edge declares.
 pub enum EdgeKind {
+    /// Pipeline routing.
     Forward,
+    /// Containment.
     Contains,
+    /// FU reads a register file.
     Reads,
+    /// FU writes a register file.
     Writes,
+    /// FU reads a memory.
     MemRead,
+    /// FU writes a memory.
     MemWrite,
 }
 
 #[derive(Debug, Clone)]
+/// One expanded association edge.
 pub struct FlatEdge {
+    /// Association kind.
     pub kind: EdgeKind,
     /// Source / container / functional-unit endpoint.
     pub a: Spanned<String>,
@@ -496,9 +542,13 @@ pub fn build_diagram(flat: &Flat) -> Result<Diagram> {
 /// A compiled description bound to its mapper family.
 #[derive(Clone)]
 pub enum CompiledModel {
+    /// Scalar-mapped systolic model.
     Systolic(Arc<Systolic>),
+    /// Fused-tensor UltraTrail model.
     UltraTrail(Arc<UltraTrail>),
+    /// Tiled-GEMM Gemmini model.
     Gemmini(Arc<Gemmini>),
+    /// Plasticine grid model.
     Plasticine(Arc<Plasticine>),
 }
 
@@ -511,6 +561,7 @@ impl std::fmt::Debug for CompiledModel {
 }
 
 impl CompiledModel {
+    /// The mapper family name.
     pub fn family(&self) -> &'static str {
         match self {
             CompiledModel::Systolic(_) => "scalar",
@@ -520,6 +571,7 @@ impl CompiledModel {
         }
     }
 
+    /// The compiled diagram.
     pub fn diagram(&self) -> &Diagram {
         match self {
             CompiledModel::Systolic(m) => &m.diagram,
@@ -546,6 +598,7 @@ pub struct CompiledArch {
     // CompiledModel has a manual Debug impl (see above)
     /// Architecture name (from `[arch] name`).
     pub name: String,
+    /// The mapper-bound model.
     pub model: CompiledModel,
 }
 

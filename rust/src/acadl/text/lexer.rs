@@ -12,11 +12,14 @@ use super::Diagnostic;
 /// One token with its source span.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Token {
+    /// Token kind.
     pub kind: TokenKind,
+    /// Source span.
     pub span: Span,
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Token kinds of the TOML-flavored format.
 pub enum TokenKind {
     /// `[`
     LBracket,

@@ -33,27 +33,35 @@ pub use validate::validate;
 /// How bad a diagnostic is. Errors block compilation; warnings do not.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Severity {
+    /// Blocks compilation.
     Error,
+    /// Advisory only.
     Warning,
 }
 
 /// One message tied to a source location.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Diagnostic {
+    /// Error or warning.
     pub severity: Severity,
+    /// Source location.
     pub span: Span,
+    /// Human-readable message.
     pub message: String,
 }
 
 impl Diagnostic {
+    /// An error diagnostic at `span`.
     pub fn error(span: Span, message: impl Into<String>) -> Self {
         Self { severity: Severity::Error, span, message: message.into() }
     }
 
+    /// A warning diagnostic at `span`.
     pub fn warning(span: Span, message: impl Into<String>) -> Self {
         Self { severity: Severity::Warning, span, message: message.into() }
     }
 
+    /// True for errors.
     pub fn is_error(&self) -> bool {
         self.severity == Severity::Error
     }

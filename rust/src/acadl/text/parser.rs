@@ -177,6 +177,9 @@ impl Parser {
 
     fn description(&mut self) -> Result<Description, Diagnostic> {
         let mut desc = Description::default();
+        // an *empty* first [params] section must still make a second one a
+        // duplicate (the other singletons fail fast on missing keys)
+        let mut seen_params = false;
         loop {
             self.skip_newlines();
             if self.peek().is_none() {
@@ -189,7 +192,7 @@ impl Parser {
             if !is_array {
                 let already = match section.as_str() {
                     "arch" => desc.name.is_some(),
-                    "params" => !desc.params.is_empty(),
+                    "params" => std::mem::replace(&mut seen_params, true),
                     "isa" => desc.isa.is_some(),
                     "fetch" => desc.fetch.is_some(),
                     "mapper" => desc.mapper.is_some(),
@@ -846,6 +849,8 @@ foreach = "i in 0..n"
     #[test]
     fn duplicate_and_unknown_keys_error() {
         assert!(parse("[arch]\nname = \"a\"\nname = \"b\"\n").is_err());
+        // an empty first [params] still makes the second a duplicate
+        assert!(parse("[arch]\nname = \"a\"\n[params]\n[params]\nn = 1\n").is_err());
         assert!(parse("[arch]\nname = \"a\"\nbogus = 1\n").is_err());
         assert!(parse("[bogus_section]\nx = 1\n").is_err());
         assert!(parse("[arch]\n").is_err()); // missing required key

@@ -18,6 +18,19 @@ use crate::Result;
 use super::compile::{compile_source, CompiledArch};
 
 /// Content-keyed cache of compiled architecture descriptions.
+///
+/// ```
+/// use acadl_perf::acadl::text::ArchRegistry;
+///
+/// let source = std::fs::read_to_string("arch/gemmini_16.toml").unwrap();
+/// let registry = ArchRegistry::new();
+/// let compiled = registry.get_or_compile(&source, "arch/gemmini_16.toml").unwrap();
+/// assert_eq!(compiled.name, "gemmini16x16");
+/// // identical content never recompiles: one compile, one shared model
+/// let again = registry.get_or_compile(&source, "arch/gemmini_16.toml").unwrap();
+/// assert_eq!(registry.compile_count(), 1);
+/// assert!(std::sync::Arc::ptr_eq(&compiled, &again));
+/// ```
 #[derive(Default)]
 pub struct ArchRegistry {
     cache: Mutex<HashMap<Arc<str>, Arc<CompiledArch>>>,
@@ -25,6 +38,7 @@ pub struct ArchRegistry {
 }
 
 impl ArchRegistry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -66,6 +80,7 @@ impl ArchRegistry {
         self.cache.lock().unwrap().len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -68,6 +68,7 @@ impl Default for GemminiConfig {
 }
 
 impl GemminiConfig {
+    /// Set the array dimension (builder style).
     pub fn with_dim(mut self, dim: u32) -> Self {
         self.dim = dim;
         self
@@ -77,8 +78,11 @@ impl GemminiConfig {
 /// Interned Gemmini ISA ops (named after the real `gemmini_*` intrinsics).
 #[derive(Debug, Clone, Copy)]
 pub struct GemminiOps {
+    /// Execute-pipeline configuration.
     pub config_ex: OpId,
+    /// Load-path configuration.
     pub config_ld: OpId,
+    /// Store-path configuration.
     pub config_st: OpId,
     /// DRAM → scratchpad tile move.
     pub mvin: OpId,
@@ -97,11 +101,17 @@ pub struct GemminiOps {
 
 /// The instantiated Gemmini model.
 pub struct Gemmini {
+    /// The ACADL object diagram.
     pub diagram: Diagram,
+    /// Instantiation configuration.
     pub cfg: GemminiConfig,
+    /// Interned ISA handles.
     pub ops: GemminiOps,
+    /// DRAM object.
     pub dram: ObjId,
+    /// Scratchpad object.
     pub spad: ObjId,
+    /// Accumulator object.
     pub acc: ObjId,
     /// Array state register written by `preload`, read by `compute_*`.
     pub b_tile_reg: crate::ids::RegId,

@@ -46,10 +46,13 @@ pub struct PlasticineConfig {
     pub switch_width: u32,
     /// Instruction memory port width.
     pub imem_port_width: u32,
+    /// Issue-buffer size of the fetch stage.
     pub issue_buffer: u32,
 }
 
 impl PlasticineConfig {
+    /// A `rows`×`cols` grid with PCU tile size `tile` and default
+    /// microarchitecture parameters.
     pub fn new(rows: u32, cols: u32, tile: u32) -> Self {
         Self {
             rows,
@@ -82,15 +85,20 @@ pub struct PlasticineOps {
 pub struct Pcu {
     /// Grid position (row, col) for hop-distance computation.
     pub pos: (u32, u32),
+    /// A-operand tile register.
     pub r_a: RegId,
+    /// B-operand tile register.
     pub r_b: RegId,
+    /// Output tile register.
     pub r_out: RegId,
 }
 
 /// One instantiated PMU's handles.
 #[derive(Debug, Clone, Copy)]
 pub struct Pmu {
+    /// Grid position (row, col).
     pub pos: (u32, u32),
+    /// The PMU's memory object.
     pub mem: ObjId,
     /// Token-address base of this PMU.
     pub base: Addr,
@@ -98,10 +106,15 @@ pub struct Pmu {
 
 /// The instantiated Plasticine-derived model.
 pub struct Plasticine {
+    /// The ACADL object diagram.
     pub diagram: Diagram,
+    /// Instantiation configuration.
     pub cfg: PlasticineConfig,
+    /// Interned ISA handles.
     pub ops: PlasticineOps,
+    /// Compute units in grid order.
     pub pcus: Vec<Pcu>,
+    /// Memory units in grid order.
     pub pmus: Vec<Pmu>,
 }
 

@@ -25,20 +25,26 @@ use crate::ids::{Addr, ObjId, OpId, RegId};
 
 /// Address-space bases within the single data memory.
 pub const ACT_BASE: Addr = 0;
+/// Weight region base.
 pub const WEIGHT_BASE: Addr = 1 << 32;
+/// Partial-sum region base.
 pub const PSUM_BASE: Addr = 2 << 32;
+/// Output region base.
 pub const OUT_BASE: Addr = 3 << 32;
 const MEM_WORDS: u64 = 4 << 32;
 
 /// Configuration of a systolic array instance.
 #[derive(Debug, Clone, Copy)]
 pub struct SystolicConfig {
+    /// Array rows.
     pub rows: u32,
+    /// Array columns.
     pub cols: u32,
     /// Data-memory port width (words per transaction) — the Fig. 13 sweep.
     pub port_width: u32,
     /// Data-memory transaction latencies.
     pub mem_read_latency: u64,
+    /// Data-memory write transaction latency.
     pub mem_write_latency: u64,
     /// Concurrent memory transactions (banked SRAM ports).
     pub mem_concurrency: u32,
@@ -49,6 +55,7 @@ pub struct SystolicConfig {
 }
 
 impl SystolicConfig {
+    /// A `rows`×`cols` array with default memory parameters.
     pub fn new(rows: u32, cols: u32) -> Self {
         Self {
             rows,
@@ -63,6 +70,7 @@ impl SystolicConfig {
         }
     }
 
+    /// Set the data-memory port width (builder style).
     pub fn with_port_width(mut self, pw: u32) -> Self {
         self.port_width = pw;
         self
@@ -72,36 +80,58 @@ impl SystolicConfig {
 /// Per-PE register ids.
 #[derive(Debug, Clone, Copy)]
 pub struct PeRegs {
+    /// Input register (left-streamed operand).
     pub r_in: RegId,
+    /// Second-operand register (element-wise ops).
     pub r_in2: RegId,
+    /// Weight register.
     pub r_w: RegId,
+    /// Accumulator register.
     pub r_acc: RegId,
 }
 
 /// Interned operation ids of the systolic ISA.
 #[derive(Debug, Clone, Copy)]
 pub struct SystolicOps {
+    /// Load a word from memory into a PE register.
     pub load: OpId,
+    /// Load a weight.
     pub loadw: OpId,
+    /// Load an element-wise operand.
     pub loade: OpId,
+    /// Load the second element-wise operand.
     pub loade2: OpId,
+    /// Route an operand to the right neighbor PE.
     pub mov_r: OpId,
+    /// Route an operand to the neighbor PE below.
     pub mov_d: OpId,
+    /// Multiply-accumulate.
     pub mac: OpId,
+    /// Element-wise ReLU.
     pub ew_relu: OpId,
+    /// Element-wise clip.
     pub ew_clip: OpId,
+    /// Element-wise add.
     pub ew_add: OpId,
+    /// Element-wise multiply.
     pub ew_mul: OpId,
+    /// Element-wise accumulate.
     pub ew_acc: OpId,
+    /// Element-wise multiply-accumulate.
     pub ew_mac: OpId,
+    /// Store a PE register to memory.
     pub store: OpId,
+    /// Store the accumulator to memory.
     pub store_acc: OpId,
 }
 
 /// The instantiated model: diagram + handles the mapper needs.
 pub struct Systolic {
+    /// The ACADL object diagram.
     pub diagram: Diagram,
+    /// Instantiation configuration.
     pub cfg: SystolicConfig,
+    /// Interned ISA handles.
     pub ops: SystolicOps,
     /// `pe[r][c]` register ids.
     pub pe: Vec<Vec<PeRegs>>,

@@ -40,11 +40,15 @@ use crate::ids::{Addr, ObjId, OpId};
 
 /// FMEM0 base (layer inputs/outputs ping-pong between FMEM0/FMEM1).
 pub const FMEM0_BASE: Addr = 0;
+/// FMEM1 base (ping-pong partner of FMEM0).
 pub const FMEM1_BASE: Addr = 1 << 20;
 /// FMEM2: second operands of residual adds.
 pub const FMEM2_BASE: Addr = 2 << 20;
+/// Weight memory base.
 pub const WMEM_BASE: Addr = 3 << 20;
+/// Bias memory base.
 pub const BMEM_BASE: Addr = 4 << 20;
+/// Local memory base.
 pub const LMEM_BASE: Addr = 5 << 20;
 const MEM_WORDS: u64 = 1 << 20;
 
@@ -78,12 +82,19 @@ pub struct UltraTrailOps {
 
 /// The instantiated UltraTrail model.
 pub struct UltraTrail {
+    /// The ACADL object diagram.
     pub diagram: Diagram,
+    /// Instantiation configuration.
     pub cfg: UltraTrailConfig,
+    /// Interned ISA handles.
     pub ops: UltraTrailOps,
+    /// Feature memories FMEM0–2.
     pub fmem: [ObjId; 3],
+    /// Weight memory.
     pub wmem: ObjId,
+    /// Bias memory.
     pub bmem: ObjId,
+    /// Local memory.
     pub lmem: ObjId,
 }
 

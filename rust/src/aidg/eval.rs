@@ -46,12 +46,15 @@ static TRACE_NODES: once_cell::sync::Lazy<bool> =
 /// (eq. 4); overlap/stride derive from consecutive records.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IterStat {
+    /// Earliest cycle any node of the iteration entered.
     pub min_enter: Cycle,
+    /// Latest cycle any node of the iteration left.
     pub max_leave: Cycle,
 }
 
 impl IterStat {
     #[inline]
+    /// `Δt_iteration = max_leave - min_enter` (eq. 4).
     pub fn span(&self) -> Cycle {
         self.max_leave - self.min_enter
     }
@@ -71,6 +74,7 @@ enum Tag {
 /// stream.
 pub struct Evaluator<'d> {
     d: &'d Diagram,
+    /// Carried evaluation state (exposed for the memory-footprint metric).
     pub st: EvalState,
     /// (min_enter, max_leave) per evaluated iteration, in order.
     pub iter_stats: Vec<IterStat>,
@@ -93,6 +97,7 @@ pub struct Evaluator<'d> {
 }
 
 impl<'d> Evaluator<'d> {
+    /// A fresh evaluator over `d` with empty carried state.
     pub fn new(d: &'d Diagram) -> Self {
         let f = d.fetch_config();
         let st = EvalState::new(d.num_objects(), d.num_regs(), |i| {

@@ -64,17 +64,23 @@ pub enum Provenance {
 /// Result of estimating one mapped layer.
 #[derive(Debug, Clone)]
 pub struct LayerEstimate {
+    /// The kernel's label (layer/kernel name).
     pub label: String,
     /// Total loop iterations of the layer.
     pub k: u64,
+    /// Instructions per iteration.
     pub insts_per_iter: usize,
     /// Estimated end-to-end cycles `Δt̂`.
     pub cycles: Cycle,
     /// Iterations actually evaluated in the AIDG.
     pub evaluated_iters: u64,
+    /// Fetch-phase block size (`lcm(|I|, port_width) / |I|`).
     pub k_block: u64,
+    /// Iterations evaluated before the steady-state comparison window.
     pub k_prolog: u64,
+    /// Last evaluated per-iteration latency Δt_iteration.
     pub dt_iteration: Cycle,
+    /// Last evaluated inter-iteration overlap Δt_overlap.
     pub dt_overlap: i64,
     /// eq. 5 never satisfied; eqs. 9–13 used.
     pub used_fallback: bool,
@@ -84,6 +90,7 @@ pub struct LayerEstimate {
     pub nodes: u64,
     /// Peak tracked evaluator state (bytes) — the Fig. 11/12 metric.
     pub peak_state_bytes: u64,
+    /// Wall time of the estimation.
     pub runtime: Duration,
     /// How this estimate was obtained (see [`Provenance`]).
     pub provenance: Provenance,
@@ -92,6 +99,7 @@ pub struct LayerEstimate {
 }
 
 impl LayerEstimate {
+    /// Total instructions of the kernel (`k · |I|`).
     pub fn total_insts(&self) -> u64 {
         self.k * self.insts_per_iter as u64
     }

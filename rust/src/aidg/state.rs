@@ -44,6 +44,9 @@ enum RingRepr {
 }
 
 #[derive(Debug, Clone)]
+/// Structural-lock occupancy tracker of one object, with an adaptive
+/// representation: serial (capacity 1), bounded-concurrent, or unbounded
+/// (the write-back pseudo-object).
 pub struct SlotRing {
     repr: RingRepr,
     capacity: u32,
@@ -56,6 +59,7 @@ impl Default for SlotRing {
 }
 
 impl SlotRing {
+    /// A ring with `capacity` slots (`u32::MAX` = unbounded).
     pub fn new(capacity: u32) -> Self {
         let repr = match capacity {
             u32::MAX => RingRepr::Unbounded,
@@ -122,6 +126,7 @@ impl SlotRing {
         }
     }
 
+    /// Tracked bytes of this ring's representation.
     pub fn bytes(&self) -> usize {
         match &self.repr {
             RingRepr::Concurrent { events, .. } => events.len() * 2 * std::mem::size_of::<Cycle>(),
@@ -180,6 +185,7 @@ impl BufferFill {
         }
     }
 
+    /// Tracked bytes of the buffer-fill window.
     pub fn bytes(&self) -> usize {
         self.counts.len() * (std::mem::size_of::<Cycle>() + std::mem::size_of::<u32>())
     }
@@ -218,6 +224,8 @@ pub struct EvalState {
 }
 
 impl EvalState {
+    /// Fresh state for a diagram with `num_objects` objects and
+    /// `num_regs` registers; `capacities` yields each object's lock capacity.
     pub fn new(num_objects: usize, num_regs: usize, capacities: impl Fn(usize) -> u32) -> Self {
         Self {
             obj_ring: (0..num_objects).map(|i| SlotRing::new(capacities(i))).collect(),
@@ -246,6 +254,7 @@ impl EvalState {
             + self.b_forward.bytes()
     }
 
+    /// Fold the current footprint (plus `extra` transient bytes) into the peak.
     pub fn note_peak(&mut self, extra: usize) {
         let b = self.live_bytes() + extra;
         if b > self.peak_bytes {

@@ -22,12 +22,19 @@ use crate::mapping::MappedLayer;
 /// L_MACS..L_K_ITERS).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerFeatures {
+    /// Multiply-accumulate count.
     pub macs: f64,
+    /// Input activation words.
     pub in_words: f64,
+    /// Weight words.
     pub w_words: f64,
+    /// Output words.
     pub out_words: f64,
+    /// Achieved unroll along input channels.
     pub ur_c: f64,
+    /// Achieved unroll along output channels.
     pub ur_k: f64,
+    /// Loop iterations of the mapped kernel.
     pub k_iters: f64,
 }
 

@@ -37,6 +37,8 @@ pub struct TimeloopModel {
 }
 
 impl TimeloopModel {
+    /// Datasheet-default model for a `dim`×`dim` array (one word per
+    /// cycle per stream direction, before fitting).
     pub fn new(dim: u32) -> Self {
         // datasheet-style defaults before fitting: one word per cycle per
         // stream direction

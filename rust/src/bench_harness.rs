@@ -8,10 +8,15 @@ use std::time::{Duration, Instant};
 /// One measured statistic set.
 #[derive(Debug, Clone, Copy)]
 pub struct Stats {
+    /// Median sample.
     pub median: Duration,
+    /// Mean sample.
     pub mean: Duration,
+    /// Fastest sample.
     pub min: Duration,
+    /// Slowest sample.
     pub max: Duration,
+    /// Number of measured samples.
     pub samples: usize,
 }
 

@@ -17,7 +17,6 @@
 use crate::accel::PlasticineConfig;
 use crate::aidg::FixedPointConfig;
 use crate::baselines::roofline::{roofline_cycles, LayerFeatures};
-use crate::dnn::zoo;
 
 use crate::Result;
 
@@ -27,21 +26,29 @@ use super::pool::Pool;
 /// The swept parameter grid.
 #[derive(Debug, Clone)]
 pub struct DseSpec {
+    /// Row counts to sweep.
     pub rows: Vec<u32>,
+    /// Column counts to sweep.
     pub cols: Vec<u32>,
+    /// PCU GEMM tile sizes to sweep.
     pub tiles: Vec<u32>,
+    /// Network spec ([`super::job::resolve_network`]).
     pub network: String,
     /// Fraction of designs surviving the roofline pre-filter into the
     /// accurate pass (1.0 = estimate everything, as Fig. 15 plots).
     pub keep_frac: f64,
+    /// Fixed-point estimator configuration.
     pub fp: FixedPointConfig,
 }
 
 /// One explored design point.
 #[derive(Debug, Clone)]
 pub struct DsePoint {
+    /// Array rows.
     pub rows: u32,
+    /// Array columns.
     pub cols: u32,
+    /// PCU GEMM tile size.
     pub tile: u32,
     /// Whole-network refined-roofline cycles (phase 1).
     pub roofline_cycles: f64,
@@ -51,7 +58,9 @@ pub struct DsePoint {
 
 /// Roofline batch source: XLA executable or the native mirror.
 pub enum RooflineBackend {
+    /// Batched through the AOT XLA executable.
     Xla(crate::runtime::RooflineExec),
+    /// The native Rust mirror.
     Native,
 }
 
@@ -85,8 +94,7 @@ impl RooflineBackend {
 /// estimation engine, so repeated kernel shapes within each design point's
 /// network are priced once per point.
 pub fn explore(spec: &DseSpec, pool: &Pool, backend: &RooflineBackend) -> Result<Vec<DsePoint>> {
-    let net = zoo::by_name(&spec.network)
-        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", spec.network))?;
+    let net = super::job::resolve_network(&spec.network)?;
 
     // ---- phase 1: roofline everything --------------------------------------
     let mut points: Vec<DsePoint> = Vec::new();

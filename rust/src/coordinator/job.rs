@@ -12,6 +12,7 @@ use crate::accel::{
     UltraTrailConfig,
 };
 use crate::aidg::{estimate_layer, FixedPointConfig, LayerEstimate};
+use crate::dnn::text::NetRegistry;
 use crate::dnn::Network;
 use crate::mapping::{
     gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper,
@@ -27,21 +28,30 @@ pub enum ArchSource {
     File(PathBuf),
     /// Inline source, e.g. registered through the server's `describe`
     /// command.
-    Inline { label: String, text: Arc<str> },
+    Inline {
+        /// Diagnostic label (e.g. `@myarch`).
+        label: String,
+        /// The description text.
+        text: Arc<str>,
+    },
 }
 
 /// An architecture defined by a textual ACADL description instead of a
 /// hardcoded builder.
 #[derive(Debug, Clone)]
 pub struct DescribedArch {
+    /// Where the description text comes from.
     pub source: ArchSource,
 }
 
 impl DescribedArch {
+    /// A description read from `path` on every resolution (content-deduped
+    /// by the global registry).
     pub fn file(path: impl Into<PathBuf>) -> Self {
         Self { source: ArchSource::File(path.into()) }
     }
 
+    /// An inline description labeled `label` for diagnostics.
     pub fn inline(label: impl Into<String>, text: impl Into<Arc<str>>) -> Self {
         Self { source: ArchSource::Inline { label: label.into(), text: text.into() } }
     }
@@ -71,18 +81,104 @@ impl DescribedArch {
     }
 }
 
+/// Where a described network's source text lives (the workload-side
+/// sibling of [`ArchSource`]).
+#[derive(Debug, Clone)]
+pub enum NetSource {
+    /// Read (and re-read per request — the registry dedupes unchanged
+    /// content) from a description file.
+    File(PathBuf),
+    /// Inline source, e.g. registered through the server's
+    /// `network describe` command.
+    Inline {
+        /// Diagnostic label (e.g. `@mynet`).
+        label: String,
+        /// The description text.
+        text: Arc<str>,
+    },
+}
+
+/// A DNN workload defined by a textual network description instead of a
+/// hardcoded [`crate::dnn::zoo`] builder.
+#[derive(Debug, Clone)]
+pub struct DescribedNet {
+    /// Where the description text comes from.
+    pub source: NetSource,
+}
+
+impl DescribedNet {
+    /// A description read from `path` on every resolution (content-deduped
+    /// by the global registry).
+    pub fn file(path: impl Into<PathBuf>) -> Self {
+        Self { source: NetSource::File(path.into()) }
+    }
+
+    /// An inline description labeled `label` for diagnostics.
+    pub fn inline(label: impl Into<String>, text: impl Into<Arc<str>>) -> Self {
+        Self { source: NetSource::Inline { label: label.into(), text: text.into() } }
+    }
+
+    /// Diagnostic label: the file path or the inline registration name.
+    pub fn label(&self) -> String {
+        match &self.source {
+            NetSource::File(p) => p.display().to_string(),
+            NetSource::Inline { label, .. } => label.clone(),
+        }
+    }
+
+    /// Compile (or fetch from the global [`NetRegistry`] cache) the
+    /// described network.
+    pub fn network(&self) -> Result<Arc<Network>> {
+        match &self.source {
+            NetSource::File(p) => {
+                let text = std::fs::read_to_string(p).with_context(|| {
+                    format!("reading network description {}", p.display())
+                })?;
+                NetRegistry::global().get_or_compile(&text, &p.display().to_string())
+            }
+            NetSource::Inline { label, text } => {
+                NetRegistry::global().get_or_compile(text, label)
+            }
+        }
+    }
+}
+
+/// Resolve a network spec string: a [`crate::dnn::zoo`] name or
+/// `net:<path>` pointing at a textual network description (`net/*.toml`).
+/// Inline `@<name>` registrations exist only inside a serve session and
+/// are resolved there.
+pub fn resolve_network(spec: &str) -> Result<Arc<Network>> {
+    if let Some(path) = spec.strip_prefix("net:") {
+        if path.is_empty() {
+            anyhow::bail!("net: spec needs a path, e.g. net:net/tc_resnet8.toml");
+        }
+        return DescribedNet::file(path).network();
+    }
+    crate::dnn::zoo::by_name(spec).map(Arc::new).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown network {spec:?} (zoo: {}; or net:<path> for a description file)",
+            crate::dnn::zoo::all_names().join("|")
+        )
+    })
+}
+
 /// Which accelerator model to instantiate.
 #[derive(Debug, Clone)]
 pub enum Arch {
+    /// Weight-stationary systolic array (scalar mapper).
     Systolic(SystolicConfig),
+    /// UltraTrail fused-tensor model.
     UltraTrail(UltraTrailConfig),
+    /// Gemmini tiled-GEMM model.
     Gemmini(GemminiConfig),
+    /// Plasticine-derived grid.
     Plasticine(PlasticineConfig),
     /// Compiled from a textual ACADL description ([`crate::acadl::text`]).
     Described(DescribedArch),
 }
 
 impl Arch {
+    /// Display name (e.g. `gemmini16x16`).
     pub fn name(&self) -> String {
         match self {
             Arch::Systolic(c) => format!("systolic{}x{}", c.rows, c.cols),
@@ -118,21 +214,25 @@ impl Arch {
 /// One network-on-architecture estimation request.
 #[derive(Debug, Clone)]
 pub struct EstimateRequest {
+    /// The accelerator to estimate on.
     pub arch: Arch,
-    /// Model-zoo name ([`crate::dnn::zoo::by_name`]).
+    /// Network spec ([`resolve_network`]): a zoo name or `net:<path>`.
     pub network: String,
+    /// Fixed-point estimator configuration.
     pub fp: FixedPointConfig,
 }
 
 /// Per-layer outcome within a network estimate.
 #[derive(Debug, Clone)]
 pub struct LayerOutcome {
+    /// The layer's name.
     pub layer_name: String,
     /// None for layers fused into their predecessor (zero cycles).
     pub estimate: Option<Vec<LayerEstimate>>,
 }
 
 impl LayerOutcome {
+    /// Layer cycles (0 when fused).
     pub fn cycles(&self) -> u64 {
         self.estimate
             .as_ref()
@@ -140,6 +240,7 @@ impl LayerOutcome {
             .unwrap_or(0)
     }
 
+    /// Iterations evaluated across the layer's kernels.
     pub fn evaluated_iters(&self) -> u64 {
         self.estimate
             .as_ref()
@@ -147,10 +248,12 @@ impl LayerOutcome {
             .unwrap_or(0)
     }
 
+    /// Total loop iterations across the layer's kernels.
     pub fn total_iters(&self) -> u64 {
         self.estimate.as_ref().map(|es| es.iter().map(|e| e.k).sum()).unwrap_or(0)
     }
 
+    /// Total instructions across the layer's kernels.
     pub fn total_insts(&self) -> u64 {
         self.estimate
             .as_ref()
@@ -158,6 +261,7 @@ impl LayerOutcome {
             .unwrap_or(0)
     }
 
+    /// Peak tracked evaluator state across the layer's kernels.
     pub fn peak_state_bytes(&self) -> u64 {
         self.estimate
             .as_ref()
@@ -199,27 +303,35 @@ impl EstimateStats {
 /// Whole-network estimation result (eq. 14: `T̂ = Σ Δt̂_i`).
 #[derive(Debug, Clone)]
 pub struct NetworkEstimate {
+    /// Workload name.
     pub network: String,
+    /// Architecture name.
     pub arch: String,
+    /// Per-layer outcomes in network order.
     pub layers: Vec<LayerOutcome>,
+    /// Wall time of the estimate.
     pub runtime: Duration,
     /// How the engine assembled this estimate (hit/miss/dedup accounting).
     pub stats: EstimateStats,
 }
 
 impl NetworkEstimate {
+    /// Whole-network cycles (eq. 14).
     pub fn total_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.cycles()).sum()
     }
 
+    /// Total loop iterations.
     pub fn total_iters(&self) -> u64 {
         self.layers.iter().map(|l| l.total_iters()).sum()
     }
 
+    /// Iterations actually evaluated.
     pub fn evaluated_iters(&self) -> u64 {
         self.layers.iter().map(|l| l.evaluated_iters()).sum()
     }
 
+    /// Total instructions.
     pub fn total_insts(&self) -> u64 {
         self.layers.iter().map(|l| l.total_insts()).sum()
     }
@@ -279,8 +391,7 @@ pub fn estimate_network(
 /// global [`EstimationEngine`](crate::engine::EstimationEngine) — repeated
 /// kernel shapes within the network and across requests are priced once.
 pub fn run_request(req: &EstimateRequest) -> Result<NetworkEstimate> {
-    let net = crate::dnn::zoo::by_name(&req.network)
-        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", req.network))?;
+    let net = resolve_network(&req.network)?;
     crate::engine::EstimationEngine::global().estimate_network(&req.arch, &net, &req.fp)
 }
 
@@ -292,8 +403,7 @@ pub fn run_request_pooled(
     req: &EstimateRequest,
     pool: &super::pool::Pool,
 ) -> Result<NetworkEstimate> {
-    let net = crate::dnn::zoo::by_name(&req.network)
-        .ok_or_else(|| anyhow::anyhow!("unknown network {:?}", req.network))?;
+    let net = resolve_network(&req.network)?;
     crate::engine::EstimationEngine::global()
         .estimate_network_pooled(&req.arch, &net, &req.fp, pool)
 }
@@ -313,6 +423,16 @@ mod tests {
         assert_eq!(e.layers.len(), 22);
         assert!(e.total_cycles() > 10_000, "cycles {}", e.total_cycles());
         assert!(e.total_cycles() < 100_000, "cycles {}", e.total_cycles());
+    }
+
+    #[test]
+    fn network_specs_resolve() {
+        assert_eq!(resolve_network("tc_resnet8").unwrap().num_layers(), 22);
+        let described = resolve_network("net:net/tc_resnet8.toml").unwrap();
+        assert_eq!(described.name, "tc_resnet8");
+        assert!(resolve_network("net:").is_err());
+        assert!(resolve_network("net:/no/such/file.toml").is_err());
+        assert!(resolve_network("vgg").is_err());
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! server. All estimation paths route through the unified engine
 //! ([`crate::engine`]); [`estimate_network`] remains as the uncached
 //! reference implementation.
+//!
+//! Both sides of a request are spec strings: [`parse_arch`] resolves
+//! architectures (builders, `file:<path>` descriptions, inline `@name`
+//! registrations) and [`resolve_network`] resolves workloads (zoo names,
+//! `net:<path>` descriptions, inline `@name` registrations) — see
+//! `docs/serve-protocol.md`.
 
 pub mod dse;
 pub mod job;
@@ -12,8 +18,8 @@ pub mod server;
 
 pub use dse::{explore, DsePoint, DseSpec, RooflineBackend};
 pub use job::{
-    estimate_network, run_request, run_request_pooled, Arch, ArchSource, DescribedArch,
-    EstimateRequest, EstimateStats, NetworkEstimate,
+    estimate_network, resolve_network, run_request, run_request_pooled, Arch, ArchSource,
+    DescribedArch, DescribedNet, EstimateRequest, EstimateStats, NetSource, NetworkEstimate,
 };
 pub use pool::Pool;
 pub use server::{parse_arch, serve, serve_with, ServeOptions};

@@ -13,12 +13,23 @@
 //! @<name>                        inline description registered via `describe`
 //! ```
 //!
-//! Server protocol (one command per line):
+//! Network spec grammar:
+//!
+//! ```text
+//! <zoo name>                     tc_resnet8 | alexnet | ... (`acadl-perf info`)
+//! net:<path>                     textual network description file (net/*.toml)
+//! @<name>                        inline description registered via
+//!                                `network describe`
+//! ```
+//!
+//! Server protocol (one command per line; see `docs/serve-protocol.md`):
 //!
 //! ```text
 //! estimate <arch> <network>      run one estimate, print one result line
-//! describe <name>                read description lines until `end`, then
-//!                                register it as `@<name>`
+//! describe <name>                read architecture description lines until
+//!                                `end`, then register it as `@<name>`
+//! network describe <name>        read network description lines until
+//!                                `end`, then register it as `@<name>`
 //! stats                          engine cache/dedup counters, one line
 //! quit                           stop serving
 //! ```
@@ -41,7 +52,7 @@ use crate::aidg::FixedPointConfig;
 use crate::engine::EstimationEngine;
 use crate::Result;
 
-use super::job::{Arch, DescribedArch, EstimateRequest};
+use super::job::{resolve_network, Arch, DescribedArch, DescribedNet};
 use super::pool::Pool;
 
 /// Parse an architecture spec string.
@@ -137,7 +148,8 @@ pub fn serve_with(
 ) -> Result<usize> {
     let pool = Pool::new(opts.workers);
     let mut served = 0;
-    let mut inline: HashMap<String, DescribedArch> = HashMap::new();
+    let mut inline_archs: HashMap<String, DescribedArch> = HashMap::new();
+    let mut inline_nets: HashMap<String, DescribedNet> = HashMap::new();
     let mut lines = input.lines();
     while let Some(line) = lines.next() {
         let line = line?;
@@ -148,18 +160,30 @@ pub fn serve_with(
         if line == "quit" {
             break;
         }
-        if let Some(name) = line.strip_prefix("describe ") {
-            match read_description(name.trim(), &mut lines) {
-                Ok((name, arch)) => {
-                    writeln!(output, "described @{name}")?;
-                    inline.insert(name, arch);
+        if let Some(name) = line.strip_prefix("network describe ") {
+            match read_body("network describe", name.trim(), &mut lines) {
+                Ok((name, body)) => {
+                    writeln!(output, "described network @{name}")?;
+                    inline_nets.insert(name.clone(), DescribedNet::inline(format!("@{name}"), body));
                 }
                 Err(e) => writeln!(output, "error: {e:#}")?,
             }
             served += 1;
             continue;
         }
-        match serve_line(line, &inline, &pool) {
+        if let Some(name) = line.strip_prefix("describe ") {
+            match read_body("describe", name.trim(), &mut lines) {
+                Ok((name, body)) => {
+                    writeln!(output, "described @{name}")?;
+                    inline_archs
+                        .insert(name.clone(), DescribedArch::inline(format!("@{name}"), body));
+                }
+                Err(e) => writeln!(output, "error: {e:#}")?,
+            }
+            served += 1;
+            continue;
+        }
+        match serve_line(line, &inline_archs, &inline_nets, &pool) {
             Ok(msg) => writeln!(output, "{msg}")?,
             Err(e) => writeln!(output, "error: {e:#}")?,
         }
@@ -168,13 +192,14 @@ pub fn serve_with(
     Ok(served)
 }
 
-/// Read a `describe <name>` body: raw description lines until `end`. The
-/// body is always consumed, even when the name is invalid — otherwise its
-/// lines would be executed as server commands.
-fn read_description(
+/// Read a `describe`/`network describe` body: raw description lines until
+/// `end`. The body is always consumed, even when the name is invalid —
+/// otherwise its lines would be executed as server commands.
+fn read_body(
+    command: &str,
     name: &str,
     lines: &mut impl Iterator<Item = std::io::Result<String>>,
-) -> Result<(String, DescribedArch)> {
+) -> Result<(String, String)> {
     let bad_name = name.is_empty() || name.split_whitespace().count() != 1;
     let mut body = String::new();
     let mut terminated = false;
@@ -188,17 +213,18 @@ fn read_description(
         body.push('\n');
     }
     if bad_name {
-        bail!("describe needs a single name (describe <name>)");
+        bail!("{command} needs a single name ({command} <name>)");
     }
     if !terminated {
-        bail!("describe {name:?} not terminated with `end` before end of input");
+        bail!("{command} {name:?} not terminated with `end` before end of input");
     }
-    Ok((name.to_string(), DescribedArch::inline(format!("@{name}"), body)))
+    Ok((name.to_string(), body))
 }
 
 fn serve_line(
     line: &str,
-    inline: &HashMap<String, DescribedArch>,
+    inline_archs: &HashMap<String, DescribedArch>,
+    inline_nets: &HashMap<String, DescribedNet>,
     pool: &Pool,
 ) -> Result<String> {
     let mut it = line.split_whitespace();
@@ -207,7 +233,7 @@ fn serve_line(
             let spec = it.next().context("estimate <arch> <network>")?;
             let arch = match spec.strip_prefix('@') {
                 Some(name) => Arch::Described(
-                    inline
+                    inline_archs
                         .get(name)
                         .with_context(|| {
                             format!("no described architecture @{name} (use `describe {name}`)")
@@ -216,9 +242,24 @@ fn serve_line(
                 ),
                 None => parse_arch(spec)?,
             };
-            let network = it.next().context("estimate <arch> <network>")?.to_string();
-            let req = EstimateRequest { arch, network, fp: FixedPointConfig::default() };
-            let e = super::job::run_request_pooled(&req, pool)?;
+            let netspec = it.next().context("estimate <arch> <network>")?;
+            let net = match netspec.strip_prefix('@') {
+                Some(name) => inline_nets
+                    .get(name)
+                    .with_context(|| {
+                        format!(
+                            "no described network @{name} (use `network describe {name}`)"
+                        )
+                    })?
+                    .network()?,
+                None => resolve_network(netspec)?,
+            };
+            let e = EstimationEngine::global().estimate_network_pooled(
+                &arch,
+                &net,
+                &FixedPointConfig::default(),
+                pool,
+            )?;
             Ok(format!(
                 "{} {} cycles={} evaluated_iters={} total_iters={} kernels={} unique={} \
                  cache_hits={} deduped={} runtime_ms={}",
@@ -239,7 +280,7 @@ fn serve_line(
             let mut line = format!(
                 "stats workers={} requests={} kernels={} evaluated={} deduped={} \
                  cache_entries={} cache_cap={} cache_hits={} cache_misses={} evictions={} \
-                 arch_compiles={}",
+                 arch_compiles={} net_compiles={}",
                 pool.workers(),
                 s.requests,
                 s.kernels_total,
@@ -251,6 +292,7 @@ fn serve_line(
                 s.cache.misses,
                 s.cache.evictions,
                 crate::acadl::text::ArchRegistry::global().compile_count(),
+                crate::dnn::text::NetRegistry::global().compile_count(),
             );
             // process-wide counters cover every engine in the process (the
             // global one above plus any locally constructed ones)
@@ -259,7 +301,9 @@ fn serve_line(
             }
             Ok(line)
         }
-        Some(cmd) => bail!("unknown command {cmd:?} (estimate|describe|stats|quit)"),
+        Some(cmd) => {
+            bail!("unknown command {cmd:?} (estimate|describe|network describe|stats|quit)")
+        }
         None => bail!("empty command"),
     }
 }
@@ -368,6 +412,34 @@ mod tests {
         serve(std::io::Cursor::new(input), &mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("no described architecture @nope"), "{text}");
+    }
+
+    #[test]
+    fn serve_network_describe_registers_inline_nets() {
+        let input = format!(
+            "network describe tiny\n{}end\n\
+             estimate ultratrail @tiny\n\
+             estimate ultratrail net:net/tc_resnet8.toml\n\
+             estimate ultratrail @nope\nquit\n",
+            crate::dnn::text::compile::tests::TINY_NET
+        );
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 4);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "described network @tiny");
+        assert!(lines[1].starts_with("ultratrail8x8 tiny8 cycles="), "{}", lines[1]);
+        assert!(
+            lines[2].starts_with("ultratrail8x8 tc_resnet8 cycles="),
+            "{}",
+            lines[2]
+        );
+        assert!(lines[3].contains("no described network @nope"), "{}", lines[3]);
+        // unterminated network describe is an error
+        let mut out = Vec::new();
+        serve(std::io::Cursor::new("network describe x\n[net]\n"), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().contains("not terminated"));
     }
 
     #[test]

@@ -10,6 +10,7 @@
 /// Activation function of an [`LayerKind::Act`] layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ActKind {
+    /// Rectified linear unit.
     Relu,
     /// Clipping activation (UltraTrail / TC-ResNet style).
     Clip,
@@ -18,7 +19,9 @@ pub enum ActKind {
 /// Pooling operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PoolKind {
+    /// Max pooling.
     Max,
+    /// Average pooling.
     Avg,
 }
 
@@ -27,38 +30,122 @@ pub enum PoolKind {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LayerKind {
     /// 1D convolution over (c_in, l_in) producing (c_out, l_out).
-    Conv1d { c_in: u32, l_in: u32, c_out: u32, kernel: u32, stride: u32, pad: bool },
+    Conv1d {
+        /// Input channels.
+        c_in: u32,
+        /// Input length.
+        l_in: u32,
+        /// Output channels.
+        c_out: u32,
+        /// Kernel width.
+        kernel: u32,
+        /// Stride.
+        stride: u32,
+        /// Same-padding (pad by `kernel - 1`).
+        pad: bool,
+    },
     /// 2D convolution over (c_in, h, w).
     Conv2d {
+        /// Input channels.
         c_in: u32,
+        /// Input height.
         h: u32,
+        /// Input width.
         w: u32,
+        /// Output channels.
         c_out: u32,
+        /// Kernel height.
         kh: u32,
+        /// Kernel width.
         kw: u32,
+        /// Stride.
         stride: u32,
+        /// Same-padding (pad by `kernel - 1`).
         pad: bool,
     },
     /// Depth-wise 2D convolution (one filter per channel).
-    DwConv2d { c: u32, h: u32, w: u32, kh: u32, kw: u32, stride: u32, pad: bool },
+    DwConv2d {
+        /// Channels (preserved).
+        c: u32,
+        /// Input height.
+        h: u32,
+        /// Input width.
+        w: u32,
+        /// Kernel height.
+        kh: u32,
+        /// Kernel width.
+        kw: u32,
+        /// Stride.
+        stride: u32,
+        /// Same-padding (pad by `kernel - 1`).
+        pad: bool,
+    },
     /// Fully connected: c_in → c_out.
-    Dense { c_in: u32, c_out: u32 },
+    Dense {
+        /// Input features.
+        c_in: u32,
+        /// Output features.
+        c_out: u32,
+    },
     /// 2D pooling over (c, h, w).
-    Pool2d { kind: PoolKind, c: u32, h: u32, w: u32, k: u32, stride: u32 },
+    Pool2d {
+        /// Max or average.
+        kind: PoolKind,
+        /// Channels.
+        c: u32,
+        /// Input height.
+        h: u32,
+        /// Input width.
+        w: u32,
+        /// Window size.
+        k: u32,
+        /// Stride.
+        stride: u32,
+    },
     /// 1D pooling over (c, l).
-    Pool1d { kind: PoolKind, c: u32, l: u32, k: u32, stride: u32 },
+    Pool1d {
+        /// Max or average.
+        kind: PoolKind,
+        /// Channels.
+        c: u32,
+        /// Input length.
+        l: u32,
+        /// Window size.
+        k: u32,
+        /// Stride.
+        stride: u32,
+    },
     /// Element-wise activation over `c` channels × `spatial` positions.
-    Act { kind: ActKind, c: u32, spatial: u32 },
+    Act {
+        /// Activation function.
+        kind: ActKind,
+        /// Channels.
+        c: u32,
+        /// Spatial positions per channel.
+        spatial: u32,
+    },
     /// Element-wise addition of two (c, spatial) tensors (residual join).
-    Add { c: u32, spatial: u32 },
+    Add {
+        /// Channels.
+        c: u32,
+        /// Spatial positions per channel.
+        spatial: u32,
+    },
     /// Element-wise multiplication (e.g. squeeze-excite scaling).
-    Mul { c: u32, spatial: u32 },
+    Mul {
+        /// Channels.
+        c: u32,
+        /// Spatial positions per channel.
+        spatial: u32,
+    },
 }
 
 /// A named layer instance.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// Layer name.
     pub name: String,
+    /// Hyper-parameters.
     pub kind: LayerKind,
 }
 
@@ -72,6 +159,7 @@ pub fn out_dim(i: u32, k: u32, stride: u32, pad: bool) -> u32 {
 }
 
 impl Layer {
+    /// A named layer.
     pub fn new(name: impl Into<String>, kind: LayerKind) -> Self {
         Self { name: name.into(), kind }
     }
@@ -206,24 +294,30 @@ impl Layer {
 /// joins appear as `Add` layers with their operand shapes.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Network name.
     pub name: String,
+    /// Layers in order (residual joins flattened to `Add`).
     pub layers: Vec<Layer>,
 }
 
 impl Network {
+    /// An empty network named `name`.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), layers: Vec::new() }
     }
 
+    /// Append a layer (builder style).
     pub fn push(&mut self, layer: Layer) -> &mut Self {
         self.layers.push(layer);
         self
     }
 
+    /// Total multiply-accumulate operations.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.macs()).sum()
     }
 
+    /// Number of layers.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }

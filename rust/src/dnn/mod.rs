@@ -1,6 +1,18 @@
-//! DNN layer IR + model zoo (paper §5/§7 workloads).
+//! DNN layer IR, the model zoo (paper §5/§7 workloads), and the textual
+//! network frontend.
+//!
+//! Workloads reach the estimator two ways, producing the same [`Network`]
+//! IR:
+//!
+//! - [`zoo`] — hardcoded Rust builders for the paper's three edge-AI
+//!   networks (TC-ResNet8, AlexNet, EfficientNet) plus reduced variants;
+//! - [`text`] — the textual frontend compiling TOML-flavored descriptions
+//!   (`net/*.toml`, `net:<path>` specs, the server's `network describe`
+//!   command), so serve traffic can estimate arbitrary user networks
+//!   without recompiling Rust.
 
 pub mod layer;
+pub mod text;
 pub mod zoo;
 
 pub use layer::{ActKind, Layer, LayerKind, Network, PoolKind};

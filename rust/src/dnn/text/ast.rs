@@ -1,0 +1,410 @@
+//! AST of the textual DNN network description language.
+//!
+//! A network description is a TOML-flavored document (see `net/README.md`
+//! and `docs/net-format.md`) listing named input tensors and an ordered
+//! sequence of layers. Layers may be *templates*: replicated over integer
+//! index ranges (`foreach`), filtered by guards (`when`), with `${expr}`
+//! interpolation in names and input references. Consecutive layers chain
+//! implicitly (each takes the previous layer's output); `from`/`with`
+//! override that with **named inputs** — the mechanism behind residual skip
+//! paths and squeeze-excite scaling.
+//!
+//! The expression language, interpolation syntax, spans, and `[params]`
+//! section are shared with the textual ACADL frontend
+//! ([`crate::acadl::text::ast`]): one grammar, two description languages.
+//! As there, [`Span`] equality is vacuous so the pretty-print → parse
+//! round-trip property can compare whole ASTs structurally.
+
+use std::fmt::Write as _;
+
+pub use crate::acadl::text::ast::{
+    ForRange, Param, PExpr, Segment, Span, Spanned, Template,
+};
+use crate::dnn::layer::{ActKind, PoolKind};
+
+/// One named input tensor (`[[input]]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputDecl {
+    /// Tensor name referenced by `from`/`with` (default `input`).
+    pub name: Template,
+    /// Channel count.
+    pub channels: Spanned<PExpr>,
+    /// Spatial extent: 1-D (`length`) or 2-D (`height`/`width`).
+    pub shape: InputShape,
+    /// Span of the `[[input]]` header.
+    pub span: Span,
+}
+
+/// The spatial part of an input declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum InputShape {
+    /// 1-D tensor: `length = ...`.
+    OneD {
+        /// Spatial length.
+        length: Spanned<PExpr>,
+    },
+    /// 2-D tensor: `height = ...`, `width = ...`.
+    TwoD {
+        /// Spatial height.
+        height: Spanned<PExpr>,
+        /// Spatial width.
+        width: Spanned<PExpr>,
+    },
+}
+
+/// Kind-specific hyper-parameters of one `[[layer]]` declaration.
+///
+/// Integer fields are [`PExpr`]s evaluated during shape inference, where
+/// the builtins `in_channels` / `in_len` / `in_h` / `in_w` / `in_spatial` /
+/// `in_features` describe the layer's (inferred) input tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerBody {
+    /// `kind = "conv1d"`: 1-D convolution.
+    Conv1d {
+        /// Output channels.
+        out_channels: Spanned<PExpr>,
+        /// Kernel width.
+        kernel: Spanned<PExpr>,
+        /// Stride (default 1).
+        stride: Spanned<PExpr>,
+        /// Same-padding (default false).
+        pad: Spanned<bool>,
+    },
+    /// `kind = "conv2d"`: 2-D convolution (square kernel).
+    Conv2d {
+        /// Output channels.
+        out_channels: Spanned<PExpr>,
+        /// Kernel extent (square).
+        kernel: Spanned<PExpr>,
+        /// Stride (default 1).
+        stride: Spanned<PExpr>,
+        /// Same-padding (default false).
+        pad: Spanned<bool>,
+    },
+    /// `kind = "dwconv2d"`: depth-wise 2-D convolution (channels preserved).
+    DwConv2d {
+        /// Kernel extent (square).
+        kernel: Spanned<PExpr>,
+        /// Stride (default 1).
+        stride: Spanned<PExpr>,
+        /// Same-padding (default false).
+        pad: Spanned<bool>,
+    },
+    /// `kind = "dense"`: fully connected. The input is flattened unless
+    /// `in_features` overrides the feature count (squeeze-excite layers
+    /// consume pooled channels: `in_features = "in_channels"`).
+    Dense {
+        /// Output features.
+        out_channels: Spanned<PExpr>,
+        /// Input-feature override (default: flattened input).
+        in_features: Option<Spanned<PExpr>>,
+    },
+    /// `kind = "maxpool1d" | "avgpool1d"`: 1-D pooling.
+    Pool1d {
+        /// Max or average.
+        pool: PoolKind,
+        /// Window size.
+        kernel: Spanned<PExpr>,
+        /// Stride (default 1).
+        stride: Spanned<PExpr>,
+    },
+    /// `kind = "maxpool2d" | "avgpool2d"`: 2-D pooling (square window).
+    Pool2d {
+        /// Max or average.
+        pool: PoolKind,
+        /// Window size (square).
+        kernel: Spanned<PExpr>,
+        /// Stride (default 1).
+        stride: Spanned<PExpr>,
+    },
+    /// `kind = "relu" | "clip"`: element-wise activation.
+    Act {
+        /// Activation function.
+        act: ActKind,
+    },
+    /// `kind = "add"`: element-wise addition of `from` and `with`.
+    Add,
+    /// `kind = "mul"`: element-wise multiplication of `from` and `with`
+    /// (spatial broadcast allowed — squeeze-excite scaling).
+    Mul,
+}
+
+impl LayerBody {
+    /// The `kind = "..."` string of this body.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            LayerBody::Conv1d { .. } => "conv1d",
+            LayerBody::Conv2d { .. } => "conv2d",
+            LayerBody::DwConv2d { .. } => "dwconv2d",
+            LayerBody::Dense { .. } => "dense",
+            LayerBody::Pool1d { pool: PoolKind::Max, .. } => "maxpool1d",
+            LayerBody::Pool1d { pool: PoolKind::Avg, .. } => "avgpool1d",
+            LayerBody::Pool2d { pool: PoolKind::Max, .. } => "maxpool2d",
+            LayerBody::Pool2d { pool: PoolKind::Avg, .. } => "avgpool2d",
+            LayerBody::Act { act: ActKind::Relu } => "relu",
+            LayerBody::Act { act: ActKind::Clip } => "clip",
+            LayerBody::Add => "add",
+            LayerBody::Mul => "mul",
+        }
+    }
+
+    /// True for the two-operand element-wise kinds (which require `with`).
+    pub fn takes_with(&self) -> bool {
+        matches!(self, LayerBody::Add | LayerBody::Mul)
+    }
+}
+
+/// One `[[layer]]` declaration (possibly replicated via `foreach`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerDecl {
+    /// Layer name template (must be unique after expansion).
+    pub name: Template,
+    /// Kind-specific hyper-parameters.
+    pub body: LayerBody,
+    /// First operand: a layer or input name (default: the previous layer).
+    pub from: Option<Template>,
+    /// Second operand of `add`/`mul`.
+    pub with: Option<Template>,
+    /// Per-layer replication ranges.
+    pub foreach: Vec<ForRange>,
+    /// Per-layer guard.
+    pub when: Option<Spanned<PExpr>>,
+    /// Span of the `[[layer]]` header.
+    pub span: Span,
+}
+
+/// A replication group: `[[foreach]] range = "b in 1..4"` ... `[[end]]`.
+/// Member layers expand *iteration-major* (all of iteration `b = 1`, then
+/// all of `b = 2`, ...), so the implicit previous-layer chain threads
+/// through whole block instances — the residual/SE block template
+/// mechanism.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Group {
+    /// `range = "var in lo..hi, ..."` clauses.
+    pub ranges: Vec<ForRange>,
+    /// Optional per-iteration guard.
+    pub when: Option<Spanned<PExpr>>,
+    /// Member layers, in declaration order.
+    pub layers: Vec<LayerDecl>,
+    /// Span of the `[[foreach]]` header.
+    pub span: Span,
+}
+
+/// One ordered body item: a single layer or a replication group.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Item {
+    /// A single layer declaration.
+    Layer(LayerDecl),
+    /// A `[[foreach]]` replication group.
+    Group(Group),
+}
+
+/// A parsed network description (template form).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NetDescription {
+    /// Network name template (`[net] name = "..."`).
+    pub name: Option<Template>,
+    /// `[params]` in declaration order.
+    pub params: Vec<Param>,
+    /// `[[input]]` tensors in declaration order (the first one starts the
+    /// implicit layer chain).
+    pub inputs: Vec<InputDecl>,
+    /// Layers and groups in declaration order.
+    pub items: Vec<Item>,
+}
+
+impl NetDescription {
+    /// Canonical TOML pretty-printer. The output reparses to an AST equal
+    /// to `self` (spans excepted — they compare vacuously). Optional fields
+    /// with defaults (`stride`, `pad`) are printed explicitly, so parsing
+    /// the output fills them identically.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        if let Some(name) = &self.name {
+            let _ = writeln!(out, "[net]");
+            let _ = writeln!(out, "name = {}", quote(&name.source()));
+            out.push('\n');
+        }
+        if !self.params.is_empty() {
+            let _ = writeln!(out, "[params]");
+            for p in &self.params {
+                let _ = writeln!(out, "{} = {}", p.name.node, p.value.node);
+            }
+            out.push('\n');
+        }
+        for i in &self.inputs {
+            let _ = writeln!(out, "[[input]]");
+            let _ = writeln!(out, "name = {}", quote(&i.name.source()));
+            let _ = writeln!(out, "channels = {}", pexpr_value(&i.channels.node));
+            match &i.shape {
+                InputShape::OneD { length } => {
+                    let _ = writeln!(out, "length = {}", pexpr_value(&length.node));
+                }
+                InputShape::TwoD { height, width } => {
+                    let _ = writeln!(out, "height = {}", pexpr_value(&height.node));
+                    let _ = writeln!(out, "width = {}", pexpr_value(&width.node));
+                }
+            }
+            out.push('\n');
+        }
+        for item in &self.items {
+            match item {
+                Item::Layer(l) => print_layer(&mut out, l),
+                Item::Group(g) => {
+                    let _ = writeln!(out, "[[foreach]]");
+                    let ranges: Vec<String> = g
+                        .ranges
+                        .iter()
+                        .map(|r| format!("{} in {}..{}", r.var.node, r.lo.node, r.hi.node))
+                        .collect();
+                    let _ = writeln!(out, "range = {}", quote(&ranges.join(", ")));
+                    if let Some(w) = &g.when {
+                        let _ = writeln!(out, "when = {}", quote(&w.node.to_string()));
+                    }
+                    out.push('\n');
+                    for l in &g.layers {
+                        print_layer(&mut out, l);
+                    }
+                    let _ = writeln!(out, "[[end]]");
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+}
+
+fn print_layer(out: &mut String, l: &LayerDecl) {
+    let _ = writeln!(out, "[[layer]]");
+    let _ = writeln!(out, "name = {}", quote(&l.name.source()));
+    let _ = writeln!(out, "kind = {}", quote(l.body.kind_name()));
+    if let Some(f) = &l.from {
+        let _ = writeln!(out, "from = {}", quote(&f.source()));
+    }
+    if let Some(w) = &l.with {
+        let _ = writeln!(out, "with = {}", quote(&w.source()));
+    }
+    match &l.body {
+        LayerBody::Conv1d { out_channels, kernel, stride, pad }
+        | LayerBody::Conv2d { out_channels, kernel, stride, pad } => {
+            let _ = writeln!(out, "out_channels = {}", pexpr_value(&out_channels.node));
+            let _ = writeln!(out, "kernel = {}", pexpr_value(&kernel.node));
+            let _ = writeln!(out, "stride = {}", pexpr_value(&stride.node));
+            let _ = writeln!(out, "pad = {}", pad.node);
+        }
+        LayerBody::DwConv2d { kernel, stride, pad } => {
+            let _ = writeln!(out, "kernel = {}", pexpr_value(&kernel.node));
+            let _ = writeln!(out, "stride = {}", pexpr_value(&stride.node));
+            let _ = writeln!(out, "pad = {}", pad.node);
+        }
+        LayerBody::Dense { out_channels, in_features } => {
+            let _ = writeln!(out, "out_channels = {}", pexpr_value(&out_channels.node));
+            if let Some(f) = in_features {
+                let _ = writeln!(out, "in_features = {}", pexpr_value(&f.node));
+            }
+        }
+        LayerBody::Pool1d { kernel, stride, .. } | LayerBody::Pool2d { kernel, stride, .. } => {
+            let _ = writeln!(out, "kernel = {}", pexpr_value(&kernel.node));
+            let _ = writeln!(out, "stride = {}", pexpr_value(&stride.node));
+        }
+        LayerBody::Act { .. } | LayerBody::Add | LayerBody::Mul => {}
+    }
+    if !l.foreach.is_empty() {
+        let ranges: Vec<String> = l
+            .foreach
+            .iter()
+            .map(|r| format!("{} in {}..{}", r.var.node, r.lo.node, r.hi.node))
+            .collect();
+        let _ = writeln!(out, "foreach = {}", quote(&ranges.join(", ")));
+    }
+    if let Some(w) = &l.when {
+        let _ = writeln!(out, "when = {}", quote(&w.node.to_string()));
+    }
+    out.push('\n');
+}
+
+/// Print a [`PExpr`] as a TOML value: bare integer for constants, quoted
+/// expression string otherwise.
+fn pexpr_value(e: &PExpr) -> String {
+    match e {
+        PExpr::Const(v) => v.to_string(),
+        other => quote(&other.to_string()),
+    }
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_cover_every_body() {
+        let one = Spanned::bare(PExpr::Const(1));
+        let bodies = [
+            LayerBody::Conv1d {
+                out_channels: one.clone(),
+                kernel: one.clone(),
+                stride: one.clone(),
+                pad: Spanned::bare(false),
+            },
+            LayerBody::Dense { out_channels: one.clone(), in_features: None },
+            LayerBody::Pool1d { pool: PoolKind::Avg, kernel: one.clone(), stride: one.clone() },
+            LayerBody::Pool2d { pool: PoolKind::Max, kernel: one.clone(), stride: one },
+            LayerBody::Act { act: ActKind::Clip },
+            LayerBody::Add,
+            LayerBody::Mul,
+        ];
+        let names: Vec<&str> = bodies.iter().map(|b| b.kind_name()).collect();
+        assert_eq!(names, vec!["conv1d", "dense", "avgpool1d", "maxpool2d", "clip", "add", "mul"]);
+        assert!(LayerBody::Add.takes_with() && LayerBody::Mul.takes_with());
+        assert!(!LayerBody::Act { act: ActKind::Relu }.takes_with());
+    }
+
+    #[test]
+    fn printer_emits_defaults_explicitly() {
+        let desc = NetDescription {
+            name: Some(Template::lit("n")),
+            params: Vec::new(),
+            inputs: vec![InputDecl {
+                name: Template::lit("input"),
+                channels: Spanned::bare(PExpr::Const(3)),
+                shape: InputShape::TwoD {
+                    height: Spanned::bare(PExpr::Const(8)),
+                    width: Spanned::bare(PExpr::Const(8)),
+                },
+                span: Span::default(),
+            }],
+            items: vec![Item::Layer(LayerDecl {
+                name: Template::lit("c"),
+                body: LayerBody::Conv2d {
+                    out_channels: Spanned::bare(PExpr::Const(4)),
+                    kernel: Spanned::bare(PExpr::Const(3)),
+                    stride: Spanned::bare(PExpr::Const(1)),
+                    pad: Spanned::bare(true),
+                },
+                from: None,
+                with: None,
+                foreach: Vec::new(),
+                when: None,
+                span: Span::default(),
+            })],
+        };
+        let toml = desc.to_toml();
+        assert!(toml.contains("stride = 1"), "{toml}");
+        assert!(toml.contains("pad = true"), "{toml}");
+        assert!(toml.contains("height = 8"), "{toml}");
+    }
+}

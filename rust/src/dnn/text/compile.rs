@@ -1,0 +1,434 @@
+//! Expansion and compilation: template AST → ordered [`LayerInstance`]
+//! list → shape inference ([`super::validate`]) → [`crate::dnn::Network`].
+//!
+//! Expansion is **iteration-major** over `[[foreach]]` groups: every member
+//! layer of iteration `b` is emitted before any layer of iteration `b + 1`,
+//! so the implicit previous-layer chain threads through whole block
+//! instances. Attribute expressions are *not* evaluated here — they are
+//! deferred to shape inference, where the `in_*` builtins of each layer's
+//! inferred input tensor are in scope.
+
+use anyhow::{bail, Context as _};
+
+use crate::acadl::text::Diagnostic;
+use crate::dnn::layer::Network;
+use crate::Result;
+
+use super::ast::{ForRange, Item, LayerDecl, NetDescription, Span, Spanned};
+use super::parser::parse_net;
+use super::validate::infer;
+
+/// Replication safety cap: loop iterations per `[[layer]]`/`[[foreach]]`
+/// item (matches the ACADL frontend's per-declaration cap).
+const MAX_INSTANCES_PER_ITEM: usize = 1 << 20;
+
+/// One expanded layer occurrence: the declaration plus its frozen loop
+/// bindings. Attribute evaluation happens later, against these bindings
+/// plus the inferred input shape.
+#[derive(Debug, Clone)]
+pub struct LayerInstance<'d> {
+    /// The `[[layer]]` declaration this instance came from.
+    pub decl: &'d LayerDecl,
+    /// Group and per-layer loop bindings, outermost first.
+    pub vars: Vec<(String, i64)>,
+    /// Ordinal among this declaration's emitted (guard-passing) instances.
+    pub idx: i64,
+}
+
+/// Per-item iteration budget: bounds *loop iterations*, not just
+/// guard-passing instances, so a huge range with a narrow `when` still
+/// terminates. Reports once; the sentinel stops the range loops.
+struct Budget {
+    visited: usize,
+    span: Span,
+}
+
+impl Budget {
+    fn new(span: Span) -> Self {
+        Self { visited: 0, span }
+    }
+
+    /// Count one iteration; false once the cap is blown (diagnosing the
+    /// first overrun).
+    fn tick(&mut self, diags: &mut Vec<Diagnostic>) -> bool {
+        self.visited += 1;
+        if self.visited > MAX_INSTANCES_PER_ITEM {
+            if self.visited == MAX_INSTANCES_PER_ITEM + 1 {
+                diags.push(Diagnostic::error(
+                    self.span,
+                    format!("declaration iterates more than {MAX_INSTANCES_PER_ITEM} times"),
+                ));
+            }
+            return false;
+        }
+        true
+    }
+
+    fn blown(&self) -> bool {
+        self.visited > MAX_INSTANCES_PER_ITEM
+    }
+
+    fn blow(&mut self) {
+        self.visited = MAX_INSTANCES_PER_ITEM + 2;
+    }
+}
+
+/// Expand `foreach`/`when` templates into the ordered layer-instance list.
+/// Collects diagnostics instead of failing fast; on errors the returned
+/// list is best-effort (do not compile it).
+pub fn expand(desc: &NetDescription) -> (Vec<LayerInstance<'_>>, Vec<Diagnostic>) {
+    let mut params = std::collections::BTreeMap::new();
+    for p in &desc.params {
+        // duplicate params are diagnosed by shape inference; first wins here
+        params.entry(p.name.node.clone()).or_insert(p.value.node);
+    }
+    let mut out = Vec::new();
+    let mut diags = Vec::new();
+    for item in &desc.items {
+        match item {
+            Item::Layer(decl) => {
+                let mut budget = Budget::new(decl.span);
+                let mut vars = Vec::new();
+                let mut idx = 0i64;
+                expand_layer(decl, &params, &mut vars, &mut idx, &mut budget, &mut out, &mut diags);
+            }
+            Item::Group(g) => {
+                let mut budget = Budget::new(g.span);
+                let mut vars = Vec::new();
+                // per-member-decl idx counters persist across group iterations
+                let mut idxs = vec![0i64; g.layers.len()];
+                expand_group(g, 0, &params, &mut vars, &mut idxs, &mut budget, &mut out, &mut diags);
+            }
+        }
+    }
+    (out, diags)
+}
+
+fn lookup_in<'a>(
+    params: &'a std::collections::BTreeMap<String, i64>,
+    vars: &'a [(String, i64)],
+) -> impl Fn(&str) -> Option<i64> + 'a {
+    move |name: &str| {
+        if let Some(&(_, v)) = vars.iter().rev().find(|(n, _)| n == name) {
+            return Some(v);
+        }
+        params.get(name).copied()
+    }
+}
+
+fn eval_spanned(
+    e: &Spanned<super::ast::PExpr>,
+    params: &std::collections::BTreeMap<String, i64>,
+    vars: &[(String, i64)],
+) -> std::result::Result<i64, Diagnostic> {
+    e.node.eval(&lookup_in(params, vars)).map_err(|msg| Diagnostic::error(e.span, msg))
+}
+
+/// Evaluate one `foreach` range's bounds; a failure halts the whole item.
+fn range_bounds(
+    r: &ForRange,
+    params: &std::collections::BTreeMap<String, i64>,
+    vars: &[(String, i64)],
+    budget: &mut Budget,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<(i64, i64)> {
+    match (eval_spanned(&r.lo, params, vars), eval_spanned(&r.hi, params, vars)) {
+        (Ok(lo), Ok(hi)) => Some((lo, hi)),
+        (Err(d), _) | (_, Err(d)) => {
+            // bounds that error once error for every surrounding iteration;
+            // report once and halt this item's expansion
+            diags.push(d);
+            budget.blow();
+            None
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn expand_group<'d>(
+    g: &'d super::ast::Group,
+    depth: usize,
+    params: &std::collections::BTreeMap<String, i64>,
+    vars: &mut Vec<(String, i64)>,
+    idxs: &mut [i64],
+    budget: &mut Budget,
+    out: &mut Vec<LayerInstance<'d>>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if depth == g.ranges.len() {
+        if !budget.tick(diags) {
+            return;
+        }
+        if let Some(w) = &g.when {
+            match eval_spanned(w, params, vars) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(d) => {
+                    diags.push(d);
+                    budget.blow();
+                    return;
+                }
+            }
+        }
+        for (i, decl) in g.layers.iter().enumerate() {
+            expand_layer(decl, params, vars, &mut idxs[i], budget, out, diags);
+            if budget.blown() {
+                return;
+            }
+        }
+        return;
+    }
+    let range = &g.ranges[depth];
+    let Some((lo, hi)) = range_bounds(range, params, vars, budget, diags) else { return };
+    for v in lo..hi {
+        if !budget.tick(diags) {
+            return;
+        }
+        vars.push((range.var.node.clone(), v));
+        expand_group(g, depth + 1, params, vars, idxs, budget, out, diags);
+        vars.pop();
+        if budget.blown() {
+            return;
+        }
+    }
+}
+
+fn expand_layer<'d>(
+    decl: &'d LayerDecl,
+    params: &std::collections::BTreeMap<String, i64>,
+    vars: &mut Vec<(String, i64)>,
+    idx: &mut i64,
+    budget: &mut Budget,
+    out: &mut Vec<LayerInstance<'d>>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    expand_layer_ranges(decl, 0, params, vars, idx, budget, out, diags);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn expand_layer_ranges<'d>(
+    decl: &'d LayerDecl,
+    depth: usize,
+    params: &std::collections::BTreeMap<String, i64>,
+    vars: &mut Vec<(String, i64)>,
+    idx: &mut i64,
+    budget: &mut Budget,
+    out: &mut Vec<LayerInstance<'d>>,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if depth == decl.foreach.len() {
+        if !budget.tick(diags) {
+            return;
+        }
+        if let Some(w) = &decl.when {
+            match eval_spanned(w, params, vars) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(d) => {
+                    diags.push(d);
+                    budget.blow();
+                    return;
+                }
+            }
+        }
+        out.push(LayerInstance { decl, vars: vars.clone(), idx: *idx });
+        *idx += 1;
+        return;
+    }
+    let range = &decl.foreach[depth];
+    let Some((lo, hi)) = range_bounds(range, params, vars, budget, diags) else { return };
+    for v in lo..hi {
+        if !budget.tick(diags) {
+            return;
+        }
+        vars.push((range.var.node.clone(), v));
+        expand_layer_ranges(decl, depth + 1, params, vars, idx, budget, out, diags);
+        vars.pop();
+        if budget.blown() {
+            return;
+        }
+    }
+}
+
+// ---- front doors -----------------------------------------------------------
+
+/// Parse + expand + shape-infer, returning the compiled network (when
+/// error-free) and every diagnostic. This is what `acadl-perf check` drives
+/// for `net/*.toml` files.
+pub fn check_net_source(src: &str) -> (Option<Network>, Vec<Diagnostic>) {
+    let desc = match parse_net(src) {
+        Ok(d) => d,
+        Err(diag) => return (None, vec![diag]),
+    };
+    let (instances, mut diags) = expand(&desc);
+    let net = infer(&desc, &instances, &mut diags);
+    (net, diags)
+}
+
+/// Compile a network description source, failing with the first
+/// diagnostics formatted into the error message.
+pub fn compile_net_source(src: &str, origin: &str) -> Result<Network> {
+    let (net, diags) = check_net_source(src);
+    let errors: Vec<&Diagnostic> = diags.iter().filter(|d| d.is_error()).collect();
+    if !errors.is_empty() {
+        let shown: Vec<String> = errors.iter().take(5).map(|d| d.render(origin)).collect();
+        bail!(
+            "{} error(s) in network description:\n{}",
+            errors.len(),
+            shown.join("\n")
+        );
+    }
+    net.context("network description did not parse")
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A tiny but complete description (three-layer 1-D net with a skip).
+    pub(crate) const TINY_NET: &str = r#"
+[net]
+name = "tiny${c}"
+
+[params]
+c = 8
+
+[[input]]
+channels = "c"
+length = 16
+
+[[layer]]
+name = "conv"
+kind = "conv1d"
+out_channels = "c"
+kernel = 3
+stride = 1
+pad = true
+
+[[layer]]
+name = "skip"
+kind = "add"
+with = "input"
+
+[[layer]]
+name = "act"
+kind = "relu"
+"#;
+
+    #[test]
+    fn tiny_net_compiles() {
+        let net = compile_net_source(TINY_NET, "tiny").unwrap();
+        assert_eq!(net.name, "tiny8");
+        assert_eq!(net.num_layers(), 3);
+        assert_eq!(net.layers[1].kind, crate::dnn::layer::LayerKind::Add { c: 8, spatial: 16 });
+    }
+
+    #[test]
+    fn groups_expand_iteration_major() {
+        let src = r#"
+[net]
+name = "g"
+
+[[input]]
+channels = 4
+length = 32
+
+[[foreach]]
+range = "b in 0..2"
+
+[[layer]]
+name = "c${b}"
+kind = "conv1d"
+out_channels = "4 * (b + 1)"
+kernel = 3
+stride = 2
+pad = true
+
+[[layer]]
+name = "a${b}"
+kind = "clip"
+
+[[end]]
+"#;
+        let (net, diags) = check_net_source(src);
+        assert!(diags.is_empty(), "{diags:?}");
+        let net = net.unwrap();
+        let names: Vec<&str> = net.layers.iter().map(|l| l.name.as_str()).collect();
+        // iteration-major: c0 a0 c1 a1 — the implicit chain threads blocks
+        assert_eq!(names, vec!["c0", "a0", "c1", "a1"]);
+        // c1 consumes a0's output (8 channels, length 16)
+        assert_eq!(
+            net.layers[2].kind,
+            crate::dnn::layer::LayerKind::Conv1d {
+                c_in: 4 * 1,
+                l_in: 16,
+                c_out: 8,
+                kernel: 3,
+                stride: 2,
+                pad: true
+            }
+        );
+    }
+
+    #[test]
+    fn when_guards_and_idx_work() {
+        let src = r#"
+[net]
+name = "w"
+
+[[input]]
+channels = 2
+length = 8
+
+[[layer]]
+name = "l${i}_at${idx}"
+kind = "clip"
+foreach = "i in 0..5"
+when = "i % 2 == 0"
+"#;
+        let (net, diags) = check_net_source(src);
+        assert!(diags.is_empty(), "{diags:?}");
+        let names: Vec<&str> = net.unwrap().layers.iter().map(|l| l.name.as_str()).collect();
+        // filtered instances do not consume idx
+        assert_eq!(names, vec!["l0_at0", "l2_at1", "l4_at2"]);
+    }
+
+    #[test]
+    fn expansion_errors_carry_spans_and_halt() {
+        let src = "[net]\nname = \"x\"\n\n[[layer]]\nname = \"a\"\nkind = \"clip\"\n\
+                   foreach = \"i in 0..missing\"\n";
+        let (net, diags) = check_net_source(src);
+        assert!(net.is_none());
+        assert!(
+            diags.iter().any(|d| d.message.contains("unknown parameter `missing`")),
+            "{diags:?}"
+        );
+        // the bad bound is reported exactly once
+        let n = diags.iter().filter(|d| d.message.contains("unknown parameter")).count();
+        assert_eq!(n, 1, "{diags:?}");
+    }
+
+    #[test]
+    fn runaway_replication_is_capped() {
+        // the guard filters every instance, but the cap bounds *loop
+        // iterations*, so the runaway range is still stopped (and the test
+        // stays fast: no instances reach shape inference)
+        let src = "[net]\nname = \"x\"\n\n[[input]]\nchannels = 1\nlength = 1\n\n\
+                   [[layer]]\nname = \"l${i}_${j}\"\nkind = \"clip\"\n\
+                   foreach = \"i in 0..4096, j in 0..4096\"\nwhen = \"i < 0\"\n";
+        let (net, diags) = check_net_source(src);
+        assert!(net.is_none());
+        assert!(
+            diags.iter().any(|d| d.message.contains("iterates more than")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn compile_net_source_reports_diagnostics() {
+        let e = compile_net_source("[net]\nname = \"x${missing}\"\n", "inline").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("inline:2:"), "{msg}");
+        assert!(msg.contains("unknown parameter"), "{msg}");
+    }
+}

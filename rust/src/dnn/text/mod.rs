@@ -1,0 +1,41 @@
+//! Textual DNN network frontend: parse, validate, and compile network
+//! descriptions from TOML-flavored files (see `net/README.md` for a tour,
+//! `docs/net-format.md` for the full grammar, and `net/*.toml` for the
+//! three paper workloads).
+//!
+//! Pipeline (the workload-side mirror of [`crate::acadl::text`]):
+//!
+//! ```text
+//! source ──parser──▶ NetDescription (template AST)
+//!        ──expand──▶ Vec<LayerInstance> (ordered, after foreach/when/${}
+//!                    replication — iteration-major over [[foreach]] groups)
+//!        ──infer───▶ shape inference + Vec<Diagnostic> (unknown refs,
+//!                    dimensionality mismatches, dead windows, ... with
+//!                    file/line spans)
+//!        ──build───▶ dnn::Network (the same IR the zoo builders produce)
+//! ```
+//!
+//! The tokenizer, expression language, `${}` interpolation, and `foreach`
+//! syntax are shared with the ACADL frontend — one grammar, two description
+//! languages. [`NetRegistry`] caches compiled networks keyed by description
+//! content; beyond that, the engine's content-addressed
+//! [`KernelKey`](crate::engine::KernelKey) means a described network that
+//! compiles to the same layers as a hand-written builder shares its
+//! estimate-cache entries too — `rust/tests/described_nets.rs` pins
+//! `net/*.toml` cycle-identical to `dnn::zoo` across all four paper
+//! architectures.
+
+pub mod ast;
+pub mod compile;
+pub mod parser;
+pub mod registry;
+pub mod validate;
+
+pub use ast::{NetDescription, Span, Spanned, Template};
+pub use compile::{check_net_source, compile_net_source, expand, LayerInstance};
+pub use parser::parse_net;
+pub use registry::NetRegistry;
+pub use validate::{infer, Shape};
+
+// one diagnostics type across both description languages
+pub use crate::acadl::text::{Diagnostic, Severity};

@@ -1,0 +1,664 @@
+//! Parser: token stream → [`NetDescription`] AST.
+//!
+//! The tokenizer ([`crate::acadl::text::lexer`]) and the string-level
+//! sub-parsers for `${}` templates, parameter expressions, and `foreach`
+//! ranges ([`crate::acadl::text::parser`]) are shared with the textual
+//! ACADL frontend — this module only owns the section grammar of network
+//! descriptions: `[net]`, `[params]`, `[[input]]`, `[[layer]]`, and the
+//! `[[foreach]]` ... `[[end]]` group brackets.
+
+use crate::acadl::text::lexer::{lex, Token, TokenKind};
+use crate::acadl::text::parser::{parse_foreach, parse_pexpr, parse_template};
+use crate::acadl::text::Diagnostic;
+use crate::dnn::layer::{ActKind, PoolKind};
+
+use super::ast::{
+    Group, InputDecl, InputShape, Item, LayerBody, LayerDecl, NetDescription, Param, PExpr, Span,
+    Spanned, Template,
+};
+
+/// Parse a network description source file.
+pub fn parse_net(src: &str) -> Result<NetDescription, Diagnostic> {
+    let toks = lex(src)?;
+    Parser { toks, pos: 0 }.description()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+/// A raw `key = value` pair within one section.
+#[derive(Debug, Clone)]
+struct RawPair {
+    key: String,
+    key_span: Span,
+    value: Val,
+}
+
+#[derive(Debug, Clone)]
+enum Val {
+    Int(i64, Span),
+    Str(String, Span),
+    Bool(bool, Span),
+}
+
+impl Val {
+    fn span(&self) -> Span {
+        match self {
+            Val::Int(_, s) | Val::Str(_, s) | Val::Bool(_, s) => *s,
+        }
+    }
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.toks.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn here(&self) -> Span {
+        self.peek()
+            .map(|t| t.span)
+            .unwrap_or_else(|| self.toks.last().map(|t| t.span).unwrap_or_default())
+    }
+
+    fn skip_newlines(&mut self) {
+        while matches!(self.peek().map(|t| &t.kind), Some(TokenKind::Newline)) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, kind: &TokenKind, what: &str) -> Result<Span, Diagnostic> {
+        match self.next() {
+            Some(t) if t.kind == *kind => Ok(t.span),
+            Some(t) => Err(Diagnostic::error(
+                t.span,
+                format!("expected {what}, found {}", t.kind.describe()),
+            )),
+            None => {
+                Err(Diagnostic::error(self.here(), format!("expected {what}, found end of file")))
+            }
+        }
+    }
+
+    /// `[name]` or `[[name]]` header; returns (name, is_array, span).
+    fn header(&mut self) -> Result<(String, bool, Span), Diagnostic> {
+        let span = self.expect(&TokenKind::LBracket, "`[`")?;
+        let is_array = matches!(self.peek().map(|t| &t.kind), Some(TokenKind::LBracket));
+        if is_array {
+            self.pos += 1;
+        }
+        let name = match self.next() {
+            Some(Token { kind: TokenKind::Ident(n), .. }) => n,
+            Some(t) => {
+                return Err(Diagnostic::error(
+                    t.span,
+                    format!("expected section name, found {}", t.kind.describe()),
+                ))
+            }
+            None => return Err(Diagnostic::error(span, "expected section name")),
+        };
+        self.expect(&TokenKind::RBracket, "`]`")?;
+        if is_array {
+            self.expect(&TokenKind::RBracket, "`]]`")?;
+        }
+        self.expect(&TokenKind::Newline, "end of line after section header")?;
+        Ok((name, is_array, span))
+    }
+
+    /// Key-value pairs up to the next section header or end of file.
+    fn pairs(&mut self) -> Result<Vec<RawPair>, Diagnostic> {
+        let mut out = Vec::new();
+        loop {
+            self.skip_newlines();
+            match self.peek().map(|t| &t.kind) {
+                None | Some(TokenKind::LBracket) => return Ok(out),
+                Some(TokenKind::Ident(_)) => {}
+                Some(k) => {
+                    let span = self.here();
+                    return Err(Diagnostic::error(
+                        span,
+                        format!("expected `key = value`, found {}", k.describe()),
+                    ));
+                }
+            }
+            let (key, key_span) = match self.next() {
+                Some(Token { kind: TokenKind::Ident(k), span }) => (k, span),
+                _ => unreachable!("peeked an identifier"),
+            };
+            self.expect(&TokenKind::Equals, "`=`")?;
+            let value = self.value()?;
+            self.expect(&TokenKind::Newline, "end of line after value")?;
+            out.push(RawPair { key, key_span, value });
+        }
+    }
+
+    fn value(&mut self) -> Result<Val, Diagnostic> {
+        match self.next() {
+            Some(Token { kind: TokenKind::Int(v), span }) => Ok(Val::Int(v, span)),
+            Some(Token { kind: TokenKind::Str(s), span }) => Ok(Val::Str(s, span)),
+            Some(Token { kind: TokenKind::Ident(w), span }) if w == "true" => {
+                Ok(Val::Bool(true, span))
+            }
+            Some(Token { kind: TokenKind::Ident(w), span }) if w == "false" => {
+                Ok(Val::Bool(false, span))
+            }
+            Some(t) => Err(Diagnostic::error(
+                t.span,
+                format!(
+                    "expected an integer, string, or true/false, found {}",
+                    t.kind.describe()
+                ),
+            )),
+            None => Err(Diagnostic::error(self.here(), "expected a value, found end of file")),
+        }
+    }
+
+    fn description(&mut self) -> Result<NetDescription, Diagnostic> {
+        let mut desc = NetDescription::default();
+        // the currently open [[foreach]] group, if any
+        let mut open: Option<Group> = None;
+        // explicit seen-tracking: an *empty* first [params] section must
+        // still make a second one a duplicate
+        let mut seen_net = false;
+        let mut seen_params = false;
+        loop {
+            self.skip_newlines();
+            if self.peek().is_none() {
+                if let Some(g) = &open {
+                    return Err(Diagnostic::error(
+                        g.span,
+                        "[[foreach]] group not closed with [[end]] before end of file",
+                    ));
+                }
+                return Ok(desc);
+            }
+            let (section, is_array, span) = self.header()?;
+            let pairs = self.pairs()?;
+            if !is_array {
+                let already = match section.as_str() {
+                    "net" => std::mem::replace(&mut seen_net, true),
+                    "params" => std::mem::replace(&mut seen_params, true),
+                    _ => false,
+                };
+                if already {
+                    return Err(Diagnostic::error(span, format!("duplicate section [{section}]")));
+                }
+            }
+            match (section.as_str(), is_array) {
+                ("net", false) => {
+                    let mut p = PairSet::new(pairs, span, "net")?;
+                    desc.name = Some(p.template("name")?);
+                    p.finish()?;
+                }
+                ("params", false) => {
+                    for pair in pairs {
+                        match pair.value {
+                            Val::Int(v, vspan) => desc.params.push(Param {
+                                name: Spanned::new(pair.key, pair.key_span),
+                                value: Spanned::new(v, vspan),
+                            }),
+                            other => {
+                                return Err(Diagnostic::error(
+                                    other.span(),
+                                    "parameters must be integers",
+                                ))
+                            }
+                        }
+                    }
+                }
+                ("input", true) => {
+                    if open.is_some() {
+                        return Err(Diagnostic::error(
+                            span,
+                            "[[input]] cannot appear inside a [[foreach]] group",
+                        ));
+                    }
+                    desc.inputs.push(self.input(span, pairs)?);
+                }
+                ("layer", true) => {
+                    let layer = self.layer(span, pairs)?;
+                    match &mut open {
+                        Some(g) => g.layers.push(layer),
+                        None => desc.items.push(Item::Layer(layer)),
+                    }
+                }
+                ("foreach", true) => {
+                    if open.is_some() {
+                        return Err(Diagnostic::error(
+                            span,
+                            "nested [[foreach]] groups are not supported",
+                        ));
+                    }
+                    let mut p = PairSet::new(pairs, span, "foreach")?;
+                    let (ranges_src, rspan) = p.string("range")?;
+                    let ranges = parse_foreach(&ranges_src, rspan)?;
+                    let when = p.when_opt()?;
+                    p.finish()?;
+                    open = Some(Group { ranges, when, layers: Vec::new(), span });
+                }
+                ("end", true) => {
+                    if !pairs.is_empty() {
+                        return Err(Diagnostic::error(
+                            pairs[0].key_span,
+                            "[[end]] takes no keys",
+                        ));
+                    }
+                    match open.take() {
+                        Some(g) => desc.items.push(Item::Group(g)),
+                        None => {
+                            return Err(Diagnostic::error(
+                                span,
+                                "[[end]] without an open [[foreach]] group",
+                            ))
+                        }
+                    }
+                }
+                (other, true) => {
+                    return Err(Diagnostic::error(
+                        span,
+                        format!(
+                            "unknown declaration `[[{other}]]` (input|layer|foreach|end)"
+                        ),
+                    ))
+                }
+                (other, false) => {
+                    return Err(Diagnostic::error(
+                        span,
+                        format!(
+                            "unknown section `[{other}]` (net|params, or a `[[...]]` declaration)"
+                        ),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn input(&mut self, span: Span, pairs: Vec<RawPair>) -> Result<InputDecl, Diagnostic> {
+        let mut p = PairSet::new(pairs, span, "input")?;
+        let name = p.template_opt("name")?.unwrap_or_else(|| Template::lit("input"));
+        let channels = p.pexpr("channels")?;
+        let length = p.pexpr_opt("length")?;
+        let height = p.pexpr_opt("height")?;
+        let width = p.pexpr_opt("width")?;
+        p.finish()?;
+        let shape = match (length, height, width) {
+            (Some(length), None, None) => InputShape::OneD { length },
+            (None, Some(height), Some(width)) => InputShape::TwoD { height, width },
+            _ => {
+                return Err(Diagnostic::error(
+                    span,
+                    "[[input]] needs either `length` (1-D) or `height` and `width` (2-D)",
+                ))
+            }
+        };
+        Ok(InputDecl { name, channels, shape, span })
+    }
+
+    fn layer(&mut self, span: Span, pairs: Vec<RawPair>) -> Result<LayerDecl, Diagnostic> {
+        let mut p = PairSet::new(pairs, span, "layer")?;
+        let name = p.template("name")?;
+        let (kind, kind_span) = p.string("kind")?;
+        let from = p.template_opt("from")?;
+        let body = match kind.as_str() {
+            "conv1d" => LayerBody::Conv1d {
+                out_channels: p.pexpr("out_channels")?,
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+                pad: p.bool_default("pad", false)?,
+            },
+            "conv2d" => LayerBody::Conv2d {
+                out_channels: p.pexpr("out_channels")?,
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+                pad: p.bool_default("pad", false)?,
+            },
+            "dwconv2d" => LayerBody::DwConv2d {
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+                pad: p.bool_default("pad", false)?,
+            },
+            "dense" => LayerBody::Dense {
+                out_channels: p.pexpr("out_channels")?,
+                in_features: p.pexpr_opt("in_features")?,
+            },
+            "maxpool1d" => LayerBody::Pool1d {
+                pool: PoolKind::Max,
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+            },
+            "avgpool1d" => LayerBody::Pool1d {
+                pool: PoolKind::Avg,
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+            },
+            "maxpool2d" => LayerBody::Pool2d {
+                pool: PoolKind::Max,
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+            },
+            "avgpool2d" => LayerBody::Pool2d {
+                pool: PoolKind::Avg,
+                kernel: p.pexpr("kernel")?,
+                stride: p.pexpr_default("stride", 1)?,
+            },
+            "relu" => LayerBody::Act { act: ActKind::Relu },
+            "clip" => LayerBody::Act { act: ActKind::Clip },
+            "add" => LayerBody::Add,
+            "mul" => LayerBody::Mul,
+            other => {
+                return Err(Diagnostic::error(
+                    kind_span,
+                    format!(
+                        "unknown layer kind {other:?} (conv1d|conv2d|dwconv2d|dense|\
+                         maxpool1d|avgpool1d|maxpool2d|avgpool2d|relu|clip|add|mul)"
+                    ),
+                ))
+            }
+        };
+        let with = if body.takes_with() {
+            match p.template_opt("with")? {
+                Some(w) => Some(w),
+                None => {
+                    return Err(Diagnostic::error(
+                        span,
+                        format!(
+                            "[layer] kind {:?} needs `with = \"<layer>\"` (second operand)",
+                            body.kind_name()
+                        ),
+                    ))
+                }
+            }
+        } else {
+            // `with` on a one-operand kind falls through to finish()'s
+            // unknown-key diagnostic
+            None
+        };
+        let foreach = match p.take("foreach") {
+            Some(pair) => match pair.value {
+                Val::Str(s, vspan) => parse_foreach(&s, vspan)?,
+                other => {
+                    return Err(Diagnostic::error(other.span(), "foreach must be a string"))
+                }
+            },
+            None => Vec::new(),
+        };
+        let when = p.when_opt()?;
+        p.finish()?;
+        Ok(LayerDecl { name, body, from, with, foreach, when, span })
+    }
+}
+
+/// Typed accessor over one section's raw pairs, with duplicate/unknown-key
+/// detection (the network-grammar sibling of the ACADL parser's pair set;
+/// this one also understands `true`/`false` values).
+struct PairSet {
+    pairs: Vec<Option<RawPair>>,
+    section_span: Span,
+    section: String,
+}
+
+impl PairSet {
+    fn new(pairs: Vec<RawPair>, section_span: Span, section: &str) -> Result<Self, Diagnostic> {
+        for (i, a) in pairs.iter().enumerate() {
+            if pairs[..i].iter().any(|b| b.key == a.key) {
+                return Err(Diagnostic::error(
+                    a.key_span,
+                    format!("duplicate key `{}` in [{section}]", a.key),
+                ));
+            }
+        }
+        Ok(Self {
+            pairs: pairs.into_iter().map(Some).collect(),
+            section_span,
+            section: section.into(),
+        })
+    }
+
+    fn take(&mut self, key: &str) -> Option<RawPair> {
+        self.pairs
+            .iter_mut()
+            .find(|p| p.as_ref().is_some_and(|p| p.key == key))
+            .and_then(Option::take)
+    }
+
+    fn required(&mut self, key: &str) -> Result<RawPair, Diagnostic> {
+        self.take(key).ok_or_else(|| {
+            Diagnostic::error(
+                self.section_span,
+                format!("[{}] is missing required key `{key}`", self.section),
+            )
+        })
+    }
+
+    fn template(&mut self, key: &str) -> Result<Template, Diagnostic> {
+        let pair = self.required(key)?;
+        val_template(pair.value)
+    }
+
+    fn template_opt(&mut self, key: &str) -> Result<Option<Template>, Diagnostic> {
+        match self.take(key) {
+            Some(pair) => Ok(Some(val_template(pair.value)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn pexpr(&mut self, key: &str) -> Result<Spanned<PExpr>, Diagnostic> {
+        let pair = self.required(key)?;
+        val_pexpr(pair.value, key)
+    }
+
+    fn pexpr_opt(&mut self, key: &str) -> Result<Option<Spanned<PExpr>>, Diagnostic> {
+        match self.take(key) {
+            Some(pair) => Ok(Some(val_pexpr(pair.value, key)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn pexpr_default(&mut self, key: &str, default: i64) -> Result<Spanned<PExpr>, Diagnostic> {
+        Ok(self
+            .pexpr_opt(key)?
+            .unwrap_or_else(|| Spanned::new(PExpr::Const(default), self.section_span)))
+    }
+
+    fn bool_default(&mut self, key: &str, default: bool) -> Result<Spanned<bool>, Diagnostic> {
+        match self.take(key) {
+            Some(RawPair { value: Val::Bool(b, span), .. }) => Ok(Spanned::new(b, span)),
+            Some(pair) => Err(Diagnostic::error(
+                pair.value.span(),
+                format!("`{key}` must be true or false"),
+            )),
+            None => Ok(Spanned::new(default, self.section_span)),
+        }
+    }
+
+    fn string(&mut self, key: &str) -> Result<(String, Span), Diagnostic> {
+        let pair = self.required(key)?;
+        match pair.value {
+            Val::Str(s, span) => Ok((s, span)),
+            other => Err(Diagnostic::error(other.span(), format!("`{key}` must be a string"))),
+        }
+    }
+
+    fn when_opt(&mut self) -> Result<Option<Spanned<PExpr>>, Diagnostic> {
+        match self.take("when") {
+            Some(pair) => match pair.value {
+                Val::Str(s, vspan) => Ok(Some(Spanned::new(parse_pexpr(&s, vspan)?, vspan))),
+                other => Err(Diagnostic::error(other.span(), "when must be a string")),
+            },
+            None => Ok(None),
+        }
+    }
+
+    fn finish(self) -> Result<(), Diagnostic> {
+        if let Some(extra) = self.pairs.into_iter().flatten().next() {
+            return Err(Diagnostic::error(
+                extra.key_span,
+                format!("unknown key `{}` in [{}]", extra.key, self.section),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn val_template(val: Val) -> Result<Template, Diagnostic> {
+    match val {
+        Val::Str(s, span) => parse_template(&s, span),
+        Val::Int(v, span) => {
+            let mut t = Template::lit(v.to_string());
+            t.span = span;
+            Ok(t)
+        }
+        Val::Bool(_, span) => Err(Diagnostic::error(span, "expected a string, found boolean")),
+    }
+}
+
+fn val_pexpr(val: Val, key: &str) -> Result<Spanned<PExpr>, Diagnostic> {
+    match val {
+        Val::Int(v, span) => Ok(Spanned::new(PExpr::Const(v), span)),
+        Val::Str(s, span) => Ok(Spanned::new(parse_pexpr(&s, span)?, span)),
+        Val::Bool(_, span) => {
+            Err(Diagnostic::error(span, format!("`{key}` must be an integer or expression")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_network() {
+        let src = r#"
+[net]
+name = "tiny"
+
+[params]
+c = 8
+
+[[input]]
+channels = "c"
+length = 16
+
+[[layer]]
+name = "conv"
+kind = "conv1d"
+out_channels = 4
+kernel = 3
+pad = true
+
+[[layer]]
+name = "act"
+kind = "relu"
+"#;
+        let d = parse_net(src).unwrap();
+        assert_eq!(d.params.len(), 1);
+        assert_eq!(d.inputs.len(), 1);
+        assert_eq!(d.inputs[0].name.source(), "input"); // default name
+        assert_eq!(d.items.len(), 2);
+        let Item::Layer(conv) = &d.items[0] else { panic!("expected layer") };
+        // stride defaulted, pad explicit
+        assert!(matches!(
+            &conv.body,
+            LayerBody::Conv1d { stride, pad, .. }
+                if stride.node == PExpr::Const(1) && pad.node
+        ));
+    }
+
+    #[test]
+    fn parses_foreach_groups_iteration_major() {
+        let src = r#"
+[net]
+name = "g"
+
+[[input]]
+channels = 4
+length = 8
+
+[[foreach]]
+range = "b in 0..3"
+when = "b != 1"
+
+[[layer]]
+name = "c${b}"
+kind = "clip"
+
+[[end]]
+"#;
+        let d = parse_net(src).unwrap();
+        assert_eq!(d.items.len(), 1);
+        let Item::Group(g) = &d.items[0] else { panic!("expected group") };
+        assert_eq!(g.ranges.len(), 1);
+        assert!(g.when.is_some());
+        assert_eq!(g.layers.len(), 1);
+    }
+
+    #[test]
+    fn group_bracket_errors() {
+        let base = "[net]\nname = \"x\"\n";
+        // end without foreach
+        assert!(parse_net(&format!("{base}[[end]]\n")).is_err());
+        // unclosed group
+        let open = format!("{base}[[foreach]]\nrange = \"i in 0..2\"\n");
+        let e = parse_net(&open).unwrap_err();
+        assert!(e.message.contains("not closed"), "{e}");
+        // nested groups
+        let nested = format!("{open}[[foreach]]\nrange = \"j in 0..2\"\n[[end]]\n[[end]]\n");
+        let e = parse_net(&nested).unwrap_err();
+        assert!(e.message.contains("nested"), "{e}");
+        // input inside a group
+        let inp = format!("{open}[[input]]\nchannels = 1\nlength = 1\n[[end]]\n");
+        assert!(parse_net(&inp).is_err());
+    }
+
+    #[test]
+    fn add_requires_with_and_rejects_with_elsewhere() {
+        let base = "[net]\nname = \"x\"\n[[layer]]\nname = \"a\"\n";
+        let e = parse_net(&format!("{base}kind = \"add\"\n")).unwrap_err();
+        assert!(e.message.contains("needs `with"), "{e}");
+        let e = parse_net(&format!("{base}kind = \"relu\"\nwith = \"b\"\n")).unwrap_err();
+        assert!(e.message.contains("unknown key `with`"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_kind_and_bad_values() {
+        let base = "[net]\nname = \"x\"\n[[layer]]\nname = \"a\"\n";
+        let e = parse_net(&format!("{base}kind = \"softmax\"\n")).unwrap_err();
+        assert!(e.message.contains("unknown layer kind"), "{e}");
+        let e = parse_net(&format!(
+            "{base}kind = \"conv1d\"\nout_channels = 4\nkernel = 3\npad = 1\n"
+        ))
+        .unwrap_err();
+        assert!(e.message.contains("must be true or false"), "{e}");
+        // booleans are not valid generic values
+        assert!(parse_net("[net]\nname = true\n").is_err());
+    }
+
+    #[test]
+    fn input_shape_must_be_1d_or_2d() {
+        let mk = |body: &str| format!("[net]\nname = \"x\"\n[[input]]\n{body}");
+        assert!(parse_net(&mk("channels = 3\nlength = 8\n")).is_ok());
+        assert!(parse_net(&mk("channels = 3\nheight = 8\nwidth = 8\n")).is_ok());
+        assert!(parse_net(&mk("channels = 3\n")).is_err());
+        assert!(parse_net(&mk("channels = 3\nlength = 8\nheight = 8\n")).is_err());
+        assert!(parse_net(&mk("channels = 3\nheight = 8\n")).is_err());
+    }
+
+    #[test]
+    fn duplicate_sections_and_keys_error() {
+        assert!(parse_net("[net]\nname = \"a\"\n[net]\nname = \"b\"\n").is_err());
+        // an empty first [params] still makes the second a duplicate
+        assert!(parse_net("[net]\nname = \"a\"\n[params]\n[params]\nc = 8\n").is_err());
+        assert!(parse_net("[net]\nname = \"a\"\nname = \"b\"\n").is_err());
+        assert!(parse_net("[bogus]\nx = 1\n").is_err());
+        assert!(parse_net("[[bogus]]\nx = 1\n").is_err());
+    }
+}

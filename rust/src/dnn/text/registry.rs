@@ -1,0 +1,112 @@
+//! The network registry: a content-keyed cache of compiled network
+//! descriptions, so hot paths (`acadl-perf serve` request loops, repeated
+//! `net:<file>` estimates) never re-lex, re-expand, or re-infer an
+//! unchanged description.
+//!
+//! Keys are the full description source (the map's hash is over the
+//! content, and equality on the content rules out collisions). Compiled
+//! [`Network`]s are shared as `Arc`s. This is the workload-side sibling of
+//! [`crate::acadl::text::ArchRegistry`] — and estimate reuse goes further:
+//! the engine's [`KernelKey`](crate::engine::KernelKey) is content-
+//! addressed over *kernels*, so a described network that compiles to the
+//! same layers as a zoo builder shares its estimate-cache entries too.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::dnn::layer::Network;
+use crate::Result;
+
+use super::compile::compile_net_source;
+
+/// Content-keyed cache of compiled network descriptions.
+#[derive(Default)]
+pub struct NetRegistry {
+    cache: Mutex<HashMap<Arc<str>, Arc<Network>>>,
+    compiles: AtomicU64,
+}
+
+impl NetRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry used by the coordinator.
+    pub fn global() -> &'static NetRegistry {
+        static GLOBAL: OnceLock<NetRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(NetRegistry::new)
+    }
+
+    /// Compile `source` (or return the cached network for identical
+    /// content). `origin` labels diagnostics, e.g. a file path or
+    /// `<inline>`. Failed compiles are not cached.
+    pub fn get_or_compile(&self, source: &str, origin: &str) -> Result<Arc<Network>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(source) {
+            return Ok(Arc::clone(hit));
+        }
+        // compile outside the lock: a slow description must not stall
+        // unrelated requests. Two racing misses both compile; the first
+        // insert wins and both results are equivalent (compilation is
+        // deterministic).
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        let compiled = Arc::new(compile_net_source(source, origin)?);
+        let mut cache = self.cache.lock().unwrap();
+        let entry = cache.entry(Arc::from(source)).or_insert_with(|| Arc::clone(&compiled));
+        Ok(Arc::clone(entry))
+    }
+
+    /// Number of actual compilations performed (cache misses).
+    pub fn compile_count(&self) -> u64 {
+        self.compiles.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached descriptions.
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all cached networks (tests; memory pressure).
+    pub fn clear(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::tests::TINY_NET;
+    use super::*;
+
+    #[test]
+    fn identical_content_compiles_once() {
+        let reg = NetRegistry::new();
+        let a = reg.get_or_compile(TINY_NET, "tiny").unwrap();
+        assert_eq!(reg.compile_count(), 1);
+        assert_eq!(reg.len(), 1);
+        let b = reg.get_or_compile(TINY_NET, "tiny").unwrap();
+        assert_eq!(reg.compile_count(), 1, "cache hit must not recompile");
+        assert!(Arc::ptr_eq(&a, &b), "cache hit must return the shared network");
+        // changed content (even just a comment) is a different key
+        let changed = format!("{TINY_NET}\n# tweaked\n");
+        reg.get_or_compile(&changed, "tiny").unwrap();
+        assert_eq!(reg.compile_count(), 2);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn failed_compiles_are_not_cached() {
+        let reg = NetRegistry::new();
+        let broken = "[net]\nname = \"x\"\n";
+        assert!(reg.get_or_compile(broken, "broken").is_err());
+        assert_eq!(reg.compile_count(), 1);
+        assert!(reg.get_or_compile(broken, "broken").is_err());
+        assert_eq!(reg.compile_count(), 2, "errors are never cached");
+        assert!(reg.is_empty());
+    }
+}

@@ -1,0 +1,743 @@
+//! Shape inference and semantic validation of expanded network
+//! descriptions — and, when clean, compilation into a [`Network`].
+//!
+//! Every check reports a [`Diagnostic`] with the span of the offending
+//! field, so `acadl-perf check` prints `file:line:col: error: ...` lines.
+//! Checked here (errors unless noted):
+//!
+//! - **references**: `from`/`with` naming a layer or input that does not
+//!   exist (or is declared later — only backward references resolve),
+//!   duplicate layer/input names, a first layer with nothing to chain from;
+//! - **shapes**: 1-D layers on 2-D/flat tensors (and vice versa), windows
+//!   that produce no output (`kernel` exceeding the padded input),
+//!   `add`/`mul` operands whose channels differ or whose spatial sizes
+//!   neither match nor broadcast;
+//! - **values**: non-positive or out-of-`u32`-range channels / kernels /
+//!   strides / feature counts, unknown parameters in expressions, division
+//!   by zero;
+//! - **structure**: a description with no layers, a missing `[net]`
+//!   section, duplicate parameters, (warning) parameters shadowing builtin
+//!   shape names, (warning) inputs no layer consumes.
+//!
+//! Shape inference threads a tensor shape (1-D, 2-D, or flat) through the
+//! layer chain; the builtins `in_channels` / `in_len` / `in_h` / `in_w` /
+//! `in_spatial` / `in_features` expose the inferred input of each layer to
+//! its attribute expressions. A layer that fails any check *poisons* its
+//! output shape: consumers are skipped silently instead of cascading
+//! secondary diagnostics.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::fmt;
+
+use crate::acadl::text::Diagnostic;
+use crate::dnn::layer::{out_dim, Layer, LayerKind, Network};
+
+use super::ast::{InputShape, LayerBody, LayerDecl, NetDescription, PExpr, Span, Spanned, Template};
+use super::compile::LayerInstance;
+
+/// Expression names reserved for the per-layer shape builtins.
+pub const SHAPE_BUILTINS: &[&str] =
+    &["in_channels", "in_len", "in_h", "in_w", "in_spatial", "in_features"];
+
+/// An inferred tensor shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    /// Channels × length (1-D convolutional layout).
+    OneD {
+        /// Channels.
+        c: u32,
+        /// Length.
+        l: u32,
+    },
+    /// Channels × height × width.
+    TwoD {
+        /// Channels.
+        c: u32,
+        /// Height.
+        h: u32,
+        /// Width.
+        w: u32,
+    },
+    /// Channel vector with no spatial extent (dense outputs).
+    Flat {
+        /// Channels.
+        c: u32,
+    },
+}
+
+impl Shape {
+    /// Channel count.
+    pub fn channels(&self) -> u32 {
+        match self {
+            Shape::OneD { c, .. } | Shape::TwoD { c, .. } | Shape::Flat { c } => *c,
+        }
+    }
+
+    /// Product of the spatial dimensions (1 for flat tensors).
+    pub fn spatial(&self) -> u64 {
+        match self {
+            Shape::OneD { l, .. } => *l as u64,
+            Shape::TwoD { h, w, .. } => *h as u64 * *w as u64,
+            Shape::Flat { .. } => 1,
+        }
+    }
+
+    /// Total element count (`channels × spatial`) — what `dense` flattens.
+    pub fn features(&self) -> u64 {
+        self.channels() as u64 * self.spatial()
+    }
+
+    /// Value of one shape builtin, if defined for this shape.
+    fn builtin(&self, name: &str) -> Option<i64> {
+        match (name, self) {
+            ("in_channels", s) => Some(s.channels() as i64),
+            ("in_spatial", s) => Some(s.spatial() as i64),
+            ("in_features", s) => Some(s.features() as i64),
+            ("in_len", Shape::OneD { l, .. }) => Some(*l as i64),
+            ("in_h", Shape::TwoD { h, .. }) => Some(*h as i64),
+            ("in_w", Shape::TwoD { w, .. }) => Some(*w as i64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Shape::OneD { c, l } => write!(f, "{c}x{l} (1-D)"),
+            Shape::TwoD { c, h, w } => write!(f, "{c}x{h}x{w} (2-D)"),
+            Shape::Flat { c } => write!(f, "{c} (flat)"),
+        }
+    }
+}
+
+/// Infer shapes over the expanded layer list and build the [`Network`].
+/// Appends every diagnostic to `diags`; returns `Some` iff `diags` holds
+/// no error at all afterwards — pre-existing expansion errors also poison
+/// the result (their instances are missing, so the network would be
+/// silently truncated).
+pub fn infer(
+    desc: &NetDescription,
+    instances: &[LayerInstance<'_>],
+    diags: &mut Vec<Diagnostic>,
+) -> Option<Network> {
+    // ---- parameters ---------------------------------------------------------
+    let mut params: BTreeMap<String, i64> = BTreeMap::new();
+    for p in &desc.params {
+        if SHAPE_BUILTINS.contains(&p.name.node.as_str()) {
+            diags.push(Diagnostic::warning(
+                p.name.span,
+                format!("parameter `{}` shadows a builtin shape name", p.name.node),
+            ));
+        }
+        if params.insert(p.name.node.clone(), p.value.node).is_some() {
+            diags.push(Diagnostic::error(
+                p.name.span,
+                format!("duplicate parameter `{}`", p.name.node),
+            ));
+        }
+    }
+
+    // ---- network name -------------------------------------------------------
+    let name = match &desc.name {
+        Some(t) => match t.render(&|n| params.get(n).copied()) {
+            Ok(n) => n,
+            Err(e) => {
+                diags.push(Diagnostic::error(t.span, e));
+                "net".to_string()
+            }
+        },
+        None => {
+            diags.push(Diagnostic::error(
+                Span::default(),
+                "missing [net] section with `name = \"...\"`",
+            ));
+            "net".to_string()
+        }
+    };
+
+    // ---- inputs -------------------------------------------------------------
+    // name → inferred shape; `None` marks a poisoned (errored) producer
+    let mut shapes: HashMap<String, Option<Shape>> = HashMap::new();
+    let mut input_names: Vec<(String, Span)> = Vec::new();
+    for input in &desc.inputs {
+        let iname = match input.name.render(&|n| params.get(n).copied()) {
+            Ok(n) => n,
+            Err(e) => {
+                diags.push(Diagnostic::error(input.name.span, e));
+                continue;
+            }
+        };
+        let shape = (|| -> Option<Shape> {
+            let c = eval_dim(&input.channels, "channels", &params, diags)?;
+            match &input.shape {
+                InputShape::OneD { length } => {
+                    let l = eval_dim(length, "length", &params, diags)?;
+                    Some(Shape::OneD { c, l })
+                }
+                InputShape::TwoD { height, width } => {
+                    let h = eval_dim(height, "height", &params, diags)?;
+                    let w = eval_dim(width, "width", &params, diags)?;
+                    Some(Shape::TwoD { c, h, w })
+                }
+            }
+        })();
+        if shapes.contains_key(&iname) {
+            diags.push(Diagnostic::error(
+                input.name.span,
+                format!("duplicate input name `{iname}`"),
+            ));
+            continue;
+        }
+        shapes.insert(iname.clone(), shape);
+        input_names.push((iname, input.span));
+    }
+
+    // ---- layers -------------------------------------------------------------
+    let mut used: HashSet<String> = HashSet::new();
+    let mut layers: Vec<Layer> = Vec::new();
+    // (name, shape) of the most recently declared layer — the implicit input
+    let mut prev: Option<(String, Option<Shape>)> = None;
+
+    for inst in instances {
+        let decl = inst.decl;
+        let lookup = |n: &str| -> Option<i64> {
+            if let Some(&(_, v)) = inst.vars.iter().rev().find(|(name, _)| name == n) {
+                return Some(v);
+            }
+            if n == "idx" {
+                return Some(inst.idx);
+            }
+            params.get(n).copied()
+        };
+
+        let lname = match decl.name.render(&lookup) {
+            Ok(n) => n,
+            Err(e) => {
+                diags.push(Diagnostic::error(decl.name.span, e));
+                prev = Some((format!("<unnamed layer at {}>", decl.span), None));
+                continue;
+            }
+        };
+
+        // resolve the first operand
+        let in_shape = match &decl.from {
+            Some(t) => resolve_ref(t, &lookup, &shapes, &mut used, diags),
+            None => match &prev {
+                Some((pname, shape)) => {
+                    used.insert(pname.clone());
+                    *shape // None = poisoned producer, already diagnosed
+                }
+                None => match input_names.first() {
+                    Some((iname, _)) => {
+                        used.insert(iname.clone());
+                        shapes.get(iname).copied().flatten()
+                    }
+                    None => {
+                        diags.push(Diagnostic::error(
+                            decl.span,
+                            format!(
+                                "layer `{lname}` has nothing to chain from \
+                                 (declare an [[input]] or set `from`)"
+                            ),
+                        ));
+                        None
+                    }
+                },
+            },
+        };
+
+        // resolve the second operand (add/mul)
+        let with_shape = decl
+            .with
+            .as_ref()
+            .map(|t| resolve_ref(t, &lookup, &shapes, &mut used, diags));
+
+        let out_shape = build_layer(
+            decl,
+            &lname,
+            in_shape,
+            with_shape,
+            &lookup,
+            &mut layers,
+            diags,
+        );
+
+        if shapes.contains_key(&lname) {
+            diags.push(Diagnostic::error(
+                decl.name.span,
+                format!("duplicate layer name `{lname}`"),
+            ));
+        } else {
+            shapes.insert(lname.clone(), out_shape);
+        }
+        prev = Some((lname, out_shape));
+    }
+
+    if instances.is_empty() {
+        diags.push(Diagnostic::error(Span::default(), "description declares no layers"));
+    }
+    for (iname, span) in &input_names {
+        if !used.contains(iname) {
+            diags.push(Diagnostic::warning(
+                *span,
+                format!("input `{iname}` is never consumed by a layer"),
+            ));
+        }
+    }
+
+    if diags.iter().any(|d| d.is_error()) {
+        return None;
+    }
+    let mut net = Network::new(name);
+    net.layers = layers;
+    Some(net)
+}
+
+/// Evaluate an input dimension with params-only lookup; 1..=u32::MAX.
+fn eval_dim(
+    e: &Spanned<PExpr>,
+    what: &str,
+    params: &BTreeMap<String, i64>,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<u32> {
+    match e.node.eval(&|n| params.get(n).copied()) {
+        Ok(v) if (1..=u32::MAX as i64).contains(&v) => Some(v as u32),
+        Ok(v) => {
+            diags.push(Diagnostic::error(
+                e.span,
+                format!("`{what}` must be in 1..=2^32-1, got {v}"),
+            ));
+            None
+        }
+        Err(msg) => {
+            diags.push(Diagnostic::error(e.span, msg));
+            None
+        }
+    }
+}
+
+/// Resolve a `from`/`with` reference to a declared layer or input. Marks
+/// the producer as used; unknown names are errors, poisoned producers
+/// resolve to `None` without a diagnostic.
+fn resolve_ref(
+    t: &Template,
+    lookup: &dyn Fn(&str) -> Option<i64>,
+    shapes: &HashMap<String, Option<Shape>>,
+    used: &mut HashSet<String>,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<Shape> {
+    let rname = match t.render(lookup) {
+        Ok(n) => n,
+        Err(e) => {
+            diags.push(Diagnostic::error(t.span, e));
+            return None;
+        }
+    };
+    match shapes.get(&rname) {
+        Some(shape) => {
+            used.insert(rname);
+            *shape
+        }
+        None => {
+            diags.push(Diagnostic::error(
+                t.span,
+                format!(
+                    "unknown layer or input `{rname}` \
+                     (only inputs and earlier layers can be referenced)"
+                ),
+            ));
+            None
+        }
+    }
+}
+
+/// Evaluate one attribute expression against loop vars, params, and the
+/// layer's input-shape builtins; require the value in `lo..=u32::MAX`.
+fn eval_attr(
+    e: &Spanned<PExpr>,
+    what: &str,
+    lo: i64,
+    lookup: &dyn Fn(&str) -> Option<i64>,
+    in_shape: &Shape,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<u32> {
+    let full = |n: &str| -> Option<i64> {
+        // loop variables and parameters win over builtins (shadowing is
+        // warned about at the [params] declaration)
+        lookup(n).or_else(|| in_shape.builtin(n))
+    };
+    match e.node.eval(&full) {
+        Ok(v) if (lo..=u32::MAX as i64).contains(&v) => Some(v as u32),
+        Ok(v) => {
+            diags.push(Diagnostic::error(
+                e.span,
+                format!("`{what}` must be in {lo}..=2^32-1, got {v}"),
+            ));
+            None
+        }
+        Err(msg) => {
+            diags.push(Diagnostic::error(e.span, msg));
+            None
+        }
+    }
+}
+
+/// Check one layer instance against its operand shapes, push the compiled
+/// [`Layer`], and return its output shape (`None` = poisoned).
+#[allow(clippy::too_many_arguments)]
+fn build_layer(
+    decl: &LayerDecl,
+    lname: &str,
+    in_shape: Option<Shape>,
+    with_shape: Option<Option<Shape>>,
+    lookup: &dyn Fn(&str) -> Option<i64>,
+    layers: &mut Vec<Layer>,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<Shape> {
+    let kind = decl.body.kind_name();
+    // a poisoned operand: skip silently (its producer already diagnosed)
+    let input = in_shape?;
+    if decl.body.takes_with() && with_shape.as_ref().is_some_and(|w| w.is_none()) {
+        return None;
+    }
+
+    // helpers take `diags` explicitly (capturing it would hold a mutable
+    // borrow across the eval_attr calls below)
+    let need = |ok: bool, what: &str, diags: &mut Vec<Diagnostic>| -> Option<()> {
+        if ok {
+            Some(())
+        } else {
+            diags.push(Diagnostic::error(
+                decl.span,
+                format!("{kind} needs a {what} input, but `{lname}` receives {input}"),
+            ));
+            None
+        }
+    };
+    let window =
+        |i: u32, k: u32, stride: u32, pad: bool, what: &str, diags: &mut Vec<Diagnostic>| {
+            let o = out_dim(i, k, stride, pad);
+            if o == 0 {
+                diags.push(Diagnostic::error(
+                    decl.span,
+                    format!(
+                        "{kind} window (kernel {k}, stride {stride}{}) produces no output on \
+                         {what} {i}",
+                        if pad { ", padded" } else { "" }
+                    ),
+                ));
+                return None;
+            }
+            Some(o)
+        };
+
+    match &decl.body {
+        LayerBody::Conv1d { out_channels, kernel, stride, pad } => {
+            need(matches!(input, Shape::OneD { .. }), "1-D", diags)?;
+            let Shape::OneD { c, l } = input else { unreachable!() };
+            let c_out = eval_attr(out_channels, "out_channels", 1, lookup, &input, diags)?;
+            let k = eval_attr(kernel, "kernel", 1, lookup, &input, diags)?;
+            let s = eval_attr(stride, "stride", 1, lookup, &input, diags)?;
+            let lo = window(l, k, s, pad.node, "length", diags)?;
+            layers.push(Layer::new(
+                lname,
+                LayerKind::Conv1d { c_in: c, l_in: l, c_out, kernel: k, stride: s, pad: pad.node },
+            ));
+            Some(Shape::OneD { c: c_out, l: lo })
+        }
+        LayerBody::Conv2d { out_channels, kernel, stride, pad } => {
+            need(matches!(input, Shape::TwoD { .. }), "2-D", diags)?;
+            let Shape::TwoD { c, h, w } = input else { unreachable!() };
+            let c_out = eval_attr(out_channels, "out_channels", 1, lookup, &input, diags)?;
+            let k = eval_attr(kernel, "kernel", 1, lookup, &input, diags)?;
+            let s = eval_attr(stride, "stride", 1, lookup, &input, diags)?;
+            let ho = window(h, k, s, pad.node, "height", diags)?;
+            let wo = window(w, k, s, pad.node, "width", diags)?;
+            layers.push(Layer::new(
+                lname,
+                LayerKind::Conv2d {
+                    c_in: c,
+                    h,
+                    w,
+                    c_out,
+                    kh: k,
+                    kw: k,
+                    stride: s,
+                    pad: pad.node,
+                },
+            ));
+            Some(Shape::TwoD { c: c_out, h: ho, w: wo })
+        }
+        LayerBody::DwConv2d { kernel, stride, pad } => {
+            need(matches!(input, Shape::TwoD { .. }), "2-D", diags)?;
+            let Shape::TwoD { c, h, w } = input else { unreachable!() };
+            let k = eval_attr(kernel, "kernel", 1, lookup, &input, diags)?;
+            let s = eval_attr(stride, "stride", 1, lookup, &input, diags)?;
+            let ho = window(h, k, s, pad.node, "height", diags)?;
+            let wo = window(w, k, s, pad.node, "width", diags)?;
+            layers.push(Layer::new(
+                lname,
+                LayerKind::DwConv2d { c, h, w, kh: k, kw: k, stride: s, pad: pad.node },
+            ));
+            Some(Shape::TwoD { c, h: ho, w: wo })
+        }
+        LayerBody::Dense { out_channels, in_features } => {
+            let c_out = eval_attr(out_channels, "out_channels", 1, lookup, &input, diags)?;
+            let c_in = match in_features {
+                Some(f) => eval_attr(f, "in_features", 1, lookup, &input, diags)?,
+                None => {
+                    let f = input.features();
+                    if f > u32::MAX as u64 {
+                        diags.push(Diagnostic::error(
+                            decl.span,
+                            format!(
+                                "flattened input of `{lname}` has {f} features \
+                                 (exceeds 2^32-1); set `in_features` explicitly"
+                            ),
+                        ));
+                        return None;
+                    }
+                    f as u32
+                }
+            };
+            layers.push(Layer::new(lname, LayerKind::Dense { c_in, c_out }));
+            Some(Shape::Flat { c: c_out })
+        }
+        LayerBody::Pool1d { pool, kernel, stride } => {
+            need(matches!(input, Shape::OneD { .. }), "1-D", diags)?;
+            let Shape::OneD { c, l } = input else { unreachable!() };
+            let k = eval_attr(kernel, "kernel", 1, lookup, &input, diags)?;
+            let s = eval_attr(stride, "stride", 1, lookup, &input, diags)?;
+            let lo = window(l, k, s, false, "length", diags)?;
+            layers.push(Layer::new(
+                lname,
+                LayerKind::Pool1d { kind: *pool, c, l, k, stride: s },
+            ));
+            Some(Shape::OneD { c, l: lo })
+        }
+        LayerBody::Pool2d { pool, kernel, stride } => {
+            need(matches!(input, Shape::TwoD { .. }), "2-D", diags)?;
+            let Shape::TwoD { c, h, w } = input else { unreachable!() };
+            let k = eval_attr(kernel, "kernel", 1, lookup, &input, diags)?;
+            let s = eval_attr(stride, "stride", 1, lookup, &input, diags)?;
+            let ho = window(h, k, s, false, "height", diags)?;
+            let wo = window(w, k, s, false, "width", diags)?;
+            layers.push(Layer::new(
+                lname,
+                LayerKind::Pool2d { kind: *pool, c, h, w, k, stride: s },
+            ));
+            Some(Shape::TwoD { c, h: ho, w: wo })
+        }
+        LayerBody::Act { act } => {
+            let spatial = narrow_spatial(input.spatial(), lname, decl.span, diags)?;
+            layers.push(Layer::new(
+                lname,
+                LayerKind::Act { kind: *act, c: input.channels(), spatial },
+            ));
+            Some(input)
+        }
+        LayerBody::Add | LayerBody::Mul => {
+            // parser guarantees `with` is present for add/mul
+            let rhs = with_shape.flatten()?;
+            if input.channels() != rhs.channels() {
+                diags.push(Diagnostic::error(
+                    decl.span,
+                    format!(
+                        "{kind} operand channels differ: `{lname}` receives {input} and {rhs}"
+                    ),
+                ));
+                return None;
+            }
+            let (sa, sb) = (input.spatial(), rhs.spatial());
+            let out = if sa == sb || sb == 1 {
+                input
+            } else if sa == 1 {
+                rhs
+            } else {
+                diags.push(Diagnostic::error(
+                    decl.span,
+                    format!(
+                        "{kind} operand spatial sizes differ ({sa} vs {sb}) and neither \
+                         broadcasts (one side must have spatial size 1)"
+                    ),
+                ));
+                return None;
+            };
+            let spatial = narrow_spatial(out.spatial(), lname, decl.span, diags)?;
+            let lk = if matches!(decl.body, LayerBody::Add) {
+                LayerKind::Add { c: out.channels(), spatial }
+            } else {
+                LayerKind::Mul { c: out.channels(), spatial }
+            };
+            layers.push(Layer::new(lname, lk));
+            Some(out)
+        }
+    }
+}
+
+fn narrow_spatial(
+    spatial: u64,
+    lname: &str,
+    span: Span,
+    diags: &mut Vec<Diagnostic>,
+) -> Option<u32> {
+    if spatial > u32::MAX as u64 {
+        diags.push(Diagnostic::error(
+            span,
+            format!("spatial size {spatial} of `{lname}` exceeds 2^32-1"),
+        ));
+        return None;
+    }
+    Some(spatial as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::check_net_source;
+    use super::*;
+    use crate::dnn::layer::PoolKind;
+
+    fn errors_of(src: &str) -> Vec<String> {
+        let (_, diags) = check_net_source(src);
+        diags.iter().filter(|d| d.is_error()).map(|d| d.to_string()).collect()
+    }
+
+    const HEAD: &str = "[net]\nname = \"t\"\n\n[[input]]\nchannels = 8\nlength = 16\n\n";
+
+    #[test]
+    fn sequential_chain_infers_shapes() {
+        let src = format!(
+            "{HEAD}[[layer]]\nname = \"c\"\nkind = \"conv1d\"\nout_channels = 4\n\
+             kernel = 3\nstride = 2\npad = true\n\n\
+             [[layer]]\nname = \"a\"\nkind = \"clip\"\n\n\
+             [[layer]]\nname = \"p\"\nkind = \"avgpool1d\"\nkernel = \"in_len\"\n\n\
+             [[layer]]\nname = \"fc\"\nkind = \"dense\"\nout_channels = 2\n"
+        );
+        let (net, diags) = check_net_source(&src);
+        assert!(diags.is_empty(), "{diags:?}");
+        let net = net.unwrap();
+        assert_eq!(net.name, "t");
+        // conv: (16-1)/2+1 = 8 positions
+        assert_eq!(
+            net.layers[0].kind,
+            LayerKind::Conv1d { c_in: 8, l_in: 16, c_out: 4, kernel: 3, stride: 2, pad: true }
+        );
+        assert_eq!(net.layers[1].kind, LayerKind::Act {
+            kind: crate::dnn::layer::ActKind::Clip,
+            c: 4,
+            spatial: 8
+        });
+        // global pool via the in_len builtin
+        assert_eq!(net.layers[2].kind, LayerKind::Pool1d {
+            kind: PoolKind::Avg,
+            c: 4,
+            l: 8,
+            k: 8,
+            stride: 1
+        });
+        // dense flattens 4x1
+        assert_eq!(net.layers[3].kind, LayerKind::Dense { c_in: 4, c_out: 2 });
+    }
+
+    #[test]
+    fn dimensionality_mismatches_are_errors() {
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"c\"\nkind = \"conv2d\"\nout_channels = 4\nkernel = 3\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("conv2d needs a 2-D input")), "{e:?}");
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"fc\"\nkind = \"dense\"\nout_channels = 2\n\n\
+             [[layer]]\nname = \"p\"\nkind = \"maxpool1d\"\nkernel = 2\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("maxpool1d needs a 1-D input")), "{e:?}");
+    }
+
+    #[test]
+    fn oversized_window_is_an_error() {
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"c\"\nkind = \"conv1d\"\nout_channels = 4\nkernel = 17\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("produces no output")), "{e:?}");
+    }
+
+    #[test]
+    fn unknown_and_forward_references_are_errors() {
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"a\"\nkind = \"clip\"\nfrom = \"ghost\"\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("unknown layer or input `ghost`")), "{e:?}");
+        // forward reference: `b` is declared after `a`
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"a\"\nkind = \"clip\"\nfrom = \"b\"\n\n\
+             [[layer]]\nname = \"b\"\nkind = \"clip\"\nfrom = \"input\"\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("unknown layer or input `b`")), "{e:?}");
+    }
+
+    #[test]
+    fn add_shape_rules() {
+        // channels differ
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"c\"\nkind = \"conv1d\"\nout_channels = 4\nkernel = 1\n\n\
+             [[layer]]\nname = \"s\"\nkind = \"add\"\nwith = \"input\"\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("operand channels differ")), "{e:?}");
+        // non-broadcastable spatial
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"c\"\nkind = \"conv1d\"\nout_channels = 8\nkernel = 1\n\
+             stride = 2\n\n[[layer]]\nname = \"s\"\nkind = \"add\"\nwith = \"input\"\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("spatial sizes differ")), "{e:?}");
+        // broadcast: flat x 1-D multiplies fine (squeeze-excite shape)
+        let src = format!(
+            "{HEAD}[[layer]]\nname = \"fc\"\nkind = \"dense\"\nout_channels = 8\n\
+             in_features = \"in_channels\"\n\n\
+             [[layer]]\nname = \"scale\"\nkind = \"mul\"\nwith = \"input\"\n"
+        );
+        let (net, diags) = check_net_source(&src);
+        assert!(diags.is_empty(), "{diags:?}");
+        let net = net.unwrap();
+        assert_eq!(net.layers[1].kind, LayerKind::Mul { c: 8, spatial: 16 });
+    }
+
+    #[test]
+    fn duplicates_and_empty_bodies_are_errors() {
+        let e = errors_of(&format!(
+            "{HEAD}[[layer]]\nname = \"a\"\nkind = \"clip\"\n\n\
+             [[layer]]\nname = \"a\"\nkind = \"clip\"\n"
+        ));
+        assert!(e.iter().any(|m| m.contains("duplicate layer name `a`")), "{e:?}");
+        let e = errors_of("[net]\nname = \"t\"\n");
+        assert!(e.iter().any(|m| m.contains("declares no layers")), "{e:?}");
+        let e = errors_of("[net]\nname = \"t\"\n\n[[layer]]\nname = \"a\"\nkind = \"clip\"\n");
+        assert!(e.iter().any(|m| m.contains("nothing to chain from")), "{e:?}");
+    }
+
+    #[test]
+    fn unused_input_is_a_warning() {
+        let src = format!(
+            "{HEAD}[[input]]\nname = \"aux\"\nchannels = 2\nlength = 2\n\n\
+             [[layer]]\nname = \"a\"\nkind = \"clip\"\n"
+        );
+        let (net, diags) = check_net_source(&src);
+        assert!(net.is_some());
+        assert!(
+            diags.iter().any(|d| !d.is_error() && d.message.contains("never consumed")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn poisoned_shapes_do_not_cascade() {
+        // the conv fails (bad window); its consumers must not add errors
+        let (net, diags) = check_net_source(&format!(
+            "{HEAD}[[layer]]\nname = \"c\"\nkind = \"conv1d\"\nout_channels = 4\nkernel = 99\n\n\
+             [[layer]]\nname = \"a\"\nkind = \"clip\"\n\n\
+             [[layer]]\nname = \"s\"\nkind = \"add\"\nwith = \"a\"\n"
+        ));
+        assert!(net.is_none());
+        let errors: Vec<_> = diags.iter().filter(|d| d.is_error()).collect();
+        assert_eq!(errors.len(), 1, "{errors:?}");
+    }
+}

@@ -19,11 +19,17 @@ use super::key::KernelKey;
 /// Point-in-time cache statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Live entries.
     pub entries: usize,
+    /// Entry bound (0 = caching disabled).
     pub capacity: usize,
+    /// Lookup hits.
     pub hits: u64,
+    /// Lookup misses.
     pub misses: u64,
+    /// Insertions.
     pub inserts: u64,
+    /// Entries evicted by the LRU bound.
     pub evictions: u64,
 }
 
@@ -125,14 +131,17 @@ impl EstimateCache {
         }
     }
 
+    /// Current entry bound.
     pub fn capacity(&self) -> usize {
         self.capacity.load(Ordering::Relaxed)
     }
 
+    /// Live entries across all shards.
     pub fn len(&self) -> usize {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// True when no entry is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -144,6 +153,7 @@ impl EstimateCache {
         }
     }
 
+    /// Point-in-time statistics snapshot.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             entries: self.len(),

@@ -49,9 +49,13 @@ impl ArchDigest {
 /// Cache key of one `(architecture, kernel, fixed-point config)` estimate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct KernelKey {
+    /// Architecture structural digest.
     pub arch: u64,
+    /// High lane of the kernel-stream hash.
     pub kernel_hi: u64,
+    /// Low lane of the kernel-stream hash.
     pub kernel_lo: u64,
+    /// Raw bits of the fixed-point fallback fraction.
     pub fp_bits: u64,
 }
 

@@ -56,6 +56,7 @@ pub const DEFAULT_CACHE_CAP: usize = 4096;
 /// Point-in-time engine statistics (cache state + request counters).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EngineStats {
+    /// Cache state.
     pub cache: CacheStats,
     /// Network estimates served.
     pub requests: u64,
@@ -79,6 +80,7 @@ pub struct EstimationEngine {
 }
 
 impl EstimationEngine {
+    /// An engine with its own cache bounded at `cache_capacity` entries.
     pub fn new(cache_capacity: usize) -> Self {
         Self {
             cache: EstimateCache::new(cache_capacity),
@@ -107,10 +109,12 @@ impl EstimationEngine {
         self.cache.clear();
     }
 
+    /// Live cached estimates.
     pub fn cache_len(&self) -> usize {
         self.cache.len()
     }
 
+    /// Point-in-time engine statistics.
     pub fn stats(&self) -> EngineStats {
         EngineStats {
             cache: self.cache.stats(),
@@ -200,6 +204,24 @@ impl EstimationEngine {
     /// Estimate a whole network serially (map → plan → cache-aware
     /// evaluate → reassemble). Cycle-identical to the uncached
     /// [`crate::coordinator::estimate_network`] reference path.
+    ///
+    /// ```
+    /// use acadl_perf::accel::SystolicConfig;
+    /// use acadl_perf::aidg::FixedPointConfig;
+    /// use acadl_perf::coordinator::Arch;
+    /// use acadl_perf::engine::EstimationEngine;
+    ///
+    /// let engine = EstimationEngine::new(4096);
+    /// let arch = Arch::Systolic(SystolicConfig::new(2, 2));
+    /// let net = acadl_perf::dnn::zoo::tc_resnet8();
+    /// let fp = FixedPointConfig::default();
+    /// let cold = engine.estimate_network(&arch, &net, &fp).unwrap();
+    /// assert!(cold.total_cycles() > 0);
+    /// // a second run is served entirely from the cache, cycle-identical
+    /// let warm = engine.estimate_network(&arch, &net, &fp).unwrap();
+    /// assert_eq!(warm.stats.evaluated, 0);
+    /// assert_eq!(warm.total_cycles(), cold.total_cycles());
+    /// ```
     pub fn estimate_network(
         &self,
         arch: &Arch,

@@ -19,13 +19,16 @@ use crate::{sim, Result};
 /// Per-estimator outcome of a comparison run.
 #[derive(Debug, Clone)]
 pub struct EstimatorResult {
+    /// Estimator display name.
     pub name: String,
+    /// Wall time the estimator took.
     pub runtime: Duration,
     /// Per-layer cycles (fused layers 0).
     pub layers: Vec<f64>,
 }
 
 impl EstimatorResult {
+    /// Whole-network cycles (sum of per-layer cycles).
     pub fn total(&self) -> f64 {
         self.layers.iter().sum()
     }
@@ -35,14 +38,23 @@ impl EstimatorResult {
 /// AIDG fixed point, refined roofline, optional simplex-fitted
 /// Timeloop-like model, and the DES ground truth.
 pub struct Comparison {
+    /// Workload name.
     pub network: String,
+    /// Architecture name.
     pub arch: String,
+    /// AIDG fixed-point estimator result.
     pub aidg: EstimatorResult,
+    /// Refined-roofline baseline result.
     pub roofline: EstimatorResult,
+    /// Simplex-fitted Timeloop-like baseline (Gemmini tables only).
     pub timeloop: Option<EstimatorResult>,
+    /// DES ground truth.
     pub des: EstimatorResult,
+    /// Iterations the fixed-point estimator actually evaluated.
     pub evaluated_iters: u64,
+    /// Total loop iterations across all kernels.
     pub total_iters: u64,
+    /// Total instructions across all kernels.
     pub total_insts: u64,
     /// Engine-level kernel accounting of the AIDG pass (unique vs total
     /// kernels, cache reuse within this comparison).
@@ -50,6 +62,9 @@ pub struct Comparison {
 }
 
 impl Comparison {
+    /// Run the full comparison on one mapped network: AIDG through a
+    /// fresh private engine, refined roofline, DES ground truth, and (when
+    /// `timeloop_dim` is set) the simplex-fitted Timeloop-like model.
     pub fn run(
         mapper: &(impl Mapper + ?Sized),
         net: &Network,
@@ -200,15 +215,25 @@ impl Comparison {
 /// One layer's outcome within a systolic sweep (Table 5 / Table 6 data).
 #[derive(Debug, Clone)]
 pub struct SweepLayer {
+    /// Layer name.
     pub name: String,
+    /// True when the layer was fused into its predecessor (zero cycles).
     pub fused: bool,
+    /// Fixed-point estimated cycles.
     pub est_cycles: u64,
+    /// Whole-graph evaluated cycles (the measured column).
     pub whole_cycles: u64,
+    /// Refined-roofline cycles.
     pub roofline_cycles: f64,
+    /// Iterations the fixed-point run evaluated.
     pub evaluated_iters: u64,
+    /// Total loop iterations.
     pub total_iters: u64,
+    /// Total instructions.
     pub total_insts: u64,
+    /// True when the 1 % fallback heuristic was used.
     pub used_fallback: bool,
+    /// Peak tracked evaluator state (bytes).
     pub peak_state_bytes: u64,
     /// Per-iteration traces of the *whole-graph* run per kernel (for the
     /// Δt_iteration/Δt_overlap variance analyses), when requested.
@@ -221,55 +246,71 @@ pub struct SweepLayer {
 /// Sweep result for one (array size, network) pair.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Array rows.
     pub rows: u32,
+    /// Array columns.
     pub cols: u32,
+    /// Workload name.
     pub network: String,
+    /// Per-layer outcomes.
     pub layers: Vec<SweepLayer>,
+    /// Cumulative fixed-point estimation wall time.
     pub fp_runtime: Duration,
+    /// Cumulative whole-graph evaluation wall time.
     pub whole_runtime: Duration,
 }
 
 impl SweepPoint {
+    /// Whole-network fixed-point cycles.
     pub fn total_est(&self) -> u64 {
         self.layers.iter().map(|l| l.est_cycles).sum()
     }
 
+    /// Whole-network whole-graph cycles (the measured total).
     pub fn total_whole(&self) -> u64 {
         self.layers.iter().map(|l| l.whole_cycles).sum()
     }
 
+    /// Whole-network refined-roofline cycles.
     pub fn total_roofline(&self) -> f64 {
         self.layers.iter().map(|l| l.roofline_cycles).sum()
     }
 
+    /// Iterations evaluated across all layers.
     pub fn evaluated_iters(&self) -> u64 {
         self.layers.iter().map(|l| l.evaluated_iters).sum()
     }
 
+    /// Total loop iterations across all layers.
     pub fn total_iters(&self) -> u64 {
         self.layers.iter().map(|l| l.total_iters).sum()
     }
 
+    /// Total instructions across all layers.
     pub fn total_insts(&self) -> u64 {
         self.layers.iter().map(|l| l.total_insts).sum()
     }
 
+    /// MAPE of the fixed-point estimate against whole-graph (eq. 16).
     pub fn mape_est(&self) -> f64 {
         let meas: Vec<f64> = self.layers.iter().map(|l| l.whole_cycles as f64).collect();
         let est: Vec<f64> = self.layers.iter().map(|l| l.est_cycles as f64).collect();
         mape(&meas, &est)
     }
 
+    /// MAPE of the roofline estimate against whole-graph.
     pub fn mape_roofline(&self) -> f64 {
         let meas: Vec<f64> = self.layers.iter().map(|l| l.whole_cycles as f64).collect();
         let est: Vec<f64> = self.layers.iter().map(|l| l.roofline_cycles).collect();
         mape(&meas, &est)
     }
 
+    /// Whole-network percentage error of the fixed-point estimate (eq. 15).
     pub fn pe_est(&self) -> f64 {
         percentage_error(self.total_est() as f64, self.total_whole() as f64)
     }
 
+    /// Whole-network percentage error of the roofline estimate.
     pub fn pe_roofline(&self) -> f64 {
         percentage_error(self.total_roofline(), self.total_whole() as f64)
     }

@@ -21,6 +21,7 @@ pub struct ObjId(pub u32);
 
 impl ObjId {
     #[inline]
+    /// The id as a table index.
     pub fn idx(self) -> usize {
         self.0 as usize
     }
@@ -81,6 +82,7 @@ pub struct Interner {
 }
 
 impl Interner {
+    /// An empty interner.
     pub fn new() -> Self {
         Self::default()
     }
@@ -106,10 +108,12 @@ impl Interner {
         &self.names[id as usize]
     }
 
+    /// Number of interned names.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// True when nothing is interned.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }

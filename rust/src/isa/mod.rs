@@ -34,6 +34,7 @@ pub struct Instruction {
 }
 
 impl Instruction {
+    /// A bare instruction of op `op`.
     pub fn new(op: OpId) -> Self {
         Self {
             op,
@@ -45,31 +46,37 @@ impl Instruction {
         }
     }
 
+    /// Add register reads (builder style).
     pub fn reads(mut self, regs: &[RegId]) -> Self {
         self.read_regs.extend_from_slice(regs);
         self
     }
 
+    /// Add register writes.
     pub fn writes(mut self, regs: &[RegId]) -> Self {
         self.write_regs.extend_from_slice(regs);
         self
     }
 
+    /// Add memory reads (word addresses).
     pub fn read_mem(mut self, addrs: &[Addr]) -> Self {
         self.read_addrs.extend_from_slice(addrs);
         self
     }
 
+    /// Add memory writes.
     pub fn write_mem(mut self, addrs: &[Addr]) -> Self {
         self.write_addrs.extend_from_slice(addrs);
         self
     }
 
+    /// Append one immediate.
     pub fn imm(mut self, v: i64) -> Self {
         self.imms.push(v);
         self
     }
 
+    /// Append several immediates.
     pub fn imms(mut self, vs: &[i64]) -> Self {
         self.imms.extend_from_slice(vs);
         self
@@ -126,6 +133,8 @@ pub struct LoopKernel {
 }
 
 impl LoopKernel {
+    /// A kernel of `k` iterations emitting `insts_per_iter` instructions
+    /// each through `gen`.
     pub fn new(label: impl Into<String>, k: u64, insts_per_iter: usize, gen: IterGen) -> Self {
         Self { label: label.into(), k, insts_per_iter, gen }
     }

@@ -15,8 +15,10 @@
 //! - [`isa`] — abstract instructions and loop kernels at any abstraction
 //!   level (scalar `load`/`mac`/`store`, tiled-GEMM `mvin`/`compute`,
 //!   fused-tensor `conv_ext`).
-//! - [`dnn`] — the DNN layer IR and the model zoo (TC-ResNet8, AlexNet,
-//!   EfficientNet-edge and reduced variants).
+//! - [`dnn`] — the DNN layer IR, the model zoo (TC-ResNet8, AlexNet,
+//!   EfficientNet-edge and reduced variants), and the textual network
+//!   frontend ([`dnn::text`]): TOML-flavored network descriptions
+//!   (`net/*.toml`) with shape inference, compiled to the same IR.
 //! - [`mapping`] — DNN-layer → loop-kernel lowering per abstraction level
 //!   (weight-stationary scalar unrolling, im2col + tiled GEMM, fused tensor
 //!   ops, Plasticine parallel-GEMM partitioning).
@@ -40,6 +42,13 @@
 //!   driver that batches roofline queries through the XLA executable.
 //! - [`metrics`] / [`report`] — PE/MAPE/variance/Pearson, the paper's
 //!   table/figure renderers, and process-wide engine counters.
+//!
+//! The `docs/` book covers the system for operators and description
+//! authors: `docs/architecture.md` (module map + the §6.3 estimator),
+//! `docs/arch-format.md` / `docs/net-format.md` (the two description
+//! grammars), `docs/serve-protocol.md`, and `docs/performance.md`.
+
+#![warn(missing_docs)]
 
 pub mod acadl;
 pub mod accel;

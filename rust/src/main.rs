@@ -14,6 +14,11 @@
 //! `gemmini[:16]`, `plasticine:3x6:16`, or a textual ACADL description via
 //! `file:<path>` / `--arch-file <path>` (see `arch/README.md`).
 //!
+//! Network specs: a zoo name (`tc_resnet8`, `alexnet`, ...), or a textual
+//! network description via `net:<path>` / `--network-file <path>` (see
+//! `net/README.md`). `check` accepts both description languages and picks
+//! by content (a `[net]` section marks a network description).
+//!
 //! Global flags (anywhere on the command line):
 //!
 //! ```text
@@ -26,6 +31,7 @@ use acadl_perf::aidg::FixedPointConfig;
 use acadl_perf::coordinator::{
     self, Arch, DescribedArch, DseSpec, EstimateRequest, Pool, RooflineBackend, ServeOptions,
 };
+use acadl_perf::dnn::text::check_net_source;
 use acadl_perf::engine::EstimationEngine;
 use acadl_perf::report::{fmt_bytes, fmt_cycles, Table};
 use acadl_perf::Result;
@@ -95,38 +101,91 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
             eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|serve|info> ...");
             eprintln!("  architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
             eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
+            eprintln!("  networks:      tc_resnet8 | alexnet | ... (acadl-perf info)");
+            eprintln!("                 net:<path>  or  --network-file <path>  (textual network description)");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
             Ok(())
         }
     }
 }
 
+/// Parse the shared `<arch> <network>` argument grammar. `--arch-file` and
+/// `--network-file` are accepted in any position; remaining positionals
+/// fill the architecture spec first, then the network spec.
 fn arch_and_net(args: &[String]) -> Result<(Arch, String)> {
-    if args.first().map(String::as_str) == Some("--arch-file") {
-        anyhow::ensure!(args.len() >= 3, "--arch-file <path> <network>");
-        return Ok((Arch::Described(DescribedArch::file(&args[1])), args[2].clone()));
+    let mut arch: Option<Arch> = None;
+    let mut network: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--arch-file" => {
+                anyhow::ensure!(i + 1 < args.len(), "--arch-file needs a path");
+                anyhow::ensure!(arch.is_none(), "architecture given twice");
+                arch = Some(Arch::Described(DescribedArch::file(&args[i + 1])));
+                i += 2;
+            }
+            "--network-file" => {
+                anyhow::ensure!(i + 1 < args.len(), "--network-file needs a path");
+                anyhow::ensure!(network.is_none(), "network given twice");
+                network = Some(format!("net:{}", args[i + 1]));
+                i += 2;
+            }
+            other => {
+                if arch.is_none() {
+                    arch = Some(coordinator::parse_arch(other)?);
+                } else if network.is_none() {
+                    network = Some(other.to_string());
+                } else {
+                    anyhow::bail!("unexpected argument {other:?}");
+                }
+                i += 1;
+            }
+        }
     }
-    anyhow::ensure!(args.len() >= 2, "expected <arch> <network>");
-    Ok((coordinator::parse_arch(&args[0])?, args[1].clone()))
+    let arch = arch.ok_or_else(|| {
+        anyhow::anyhow!("missing architecture (spec or --arch-file <path>)")
+    })?;
+    let network = network.ok_or_else(|| {
+        anyhow::anyhow!("missing network (zoo name, net:<path>, or --network-file <path>)")
+    })?;
+    Ok((arch, network))
 }
 
 /// `acadl-perf check <file>`: parse + expand + validate a description and
-/// print every diagnostic as `file:line:col: severity: message`.
+/// print every diagnostic as `file:line:col: severity: message`. Both
+/// description languages are accepted; a `[net]` section selects the
+/// network grammar, anything else the architecture grammar.
 fn check(args: &[String]) -> Result<()> {
     anyhow::ensure!(!args.is_empty(), "check <description.toml>");
     let path = &args[0];
     let src = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-    let (_, diags) = check_source(&src);
+    // grammar sniffing: a [net] section marks a network description, and so
+    // do the network-only declarations — a net file that *forgot* [net]
+    // still reaches the network validator's "missing [net] section" error
+    // instead of confusing architecture-grammar diagnostics. Headers are
+    // compared comment-stripped and whitespace-normalized, since the lexer
+    // accepts `[net]  # comment` and `[[ layer ]]`.
+    let is_network = src.lines().any(|l| {
+        let header: String =
+            l.split('#').next().unwrap_or("").chars().filter(|c| !c.is_whitespace()).collect();
+        matches!(header.as_str(), "[net]" | "[[layer]]" | "[[input]]" | "[[foreach]]")
+    });
+    let diags = if is_network {
+        check_net_source(&src).1
+    } else {
+        check_source(&src).1
+    };
     for d in &diags {
         println!("{}", d.render(path));
     }
     let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
     let warnings = diags.len() - errors;
+    let what = if is_network { "network" } else { "architecture" };
     if errors > 0 {
         anyhow::bail!("{path}: {errors} error(s), {warnings} warning(s)");
     }
-    println!("{path}: ok ({warnings} warning(s))");
+    println!("{path}: ok ({what} description, {warnings} warning(s))");
     Ok(())
 }
 
@@ -185,8 +244,7 @@ fn estimate(args: &[String], g: &GlobalOpts) -> Result<()> {
 
 fn simulate(args: &[String]) -> Result<()> {
     let (arch, network) = arch_and_net(args)?;
-    let net = acadl_perf::dnn::zoo::by_name(&network)
-        .ok_or_else(|| anyhow::anyhow!("unknown network {network:?}"))?;
+    let net = coordinator::resolve_network(&network)?;
     let mapper = arch.mapper()?;
     let t0 = std::time::Instant::now();
     let mut total = 0u64;
@@ -214,8 +272,7 @@ fn simulate(args: &[String]) -> Result<()> {
 
 fn compare(args: &[String]) -> Result<()> {
     let (arch, network) = arch_and_net(args)?;
-    let net = acadl_perf::dnn::zoo::by_name(&network)
-        .ok_or_else(|| anyhow::anyhow!("unknown network {network:?}"))?;
+    let net = coordinator::resolve_network(&network)?;
     let mapper = arch.mapper()?;
 
     // AIDG fixed-point estimate
@@ -343,7 +400,10 @@ fn info() -> Result<()> {
             "missing — run `make artifacts`"
         }
     );
-    println!("networks: {}", acadl_perf::dnn::zoo::all_names().join(", "));
+    println!(
+        "networks: {} | net:<path> (textual description, see net/)",
+        acadl_perf::dnn::zoo::all_names().join(", ")
+    );
     println!("architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T> | file:<path>");
     Ok(())
 }

@@ -51,6 +51,7 @@ pub struct GemmTileMapper {
 }
 
 impl GemmTileMapper {
+    /// A mapper over the given Gemmini model.
     pub fn new(g: Arc<Gemmini>) -> Self {
         Self { g }
     }

@@ -25,6 +25,7 @@ use crate::Result;
 
 /// A DNN layer lowered onto one architecture.
 pub struct MappedLayer {
+    /// The mapped layer's name.
     pub layer_name: String,
     /// Uniform loop kernels; the layer's latency is the sum of their
     /// estimates (e.g. weight-load kernel + compute kernel).
@@ -42,6 +43,7 @@ pub struct MappedLayer {
 }
 
 impl MappedLayer {
+    /// A fused (zero-cost) placeholder mapping named `layer_name`.
     pub fn fused(layer_name: impl Into<String>) -> Self {
         Self {
             layer_name: layer_name.into(),

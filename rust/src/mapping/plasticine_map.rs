@@ -41,6 +41,7 @@ pub struct PlasticineMapper {
 }
 
 impl PlasticineMapper {
+    /// A mapper over the given Plasticine model.
     pub fn new(p: Arc<Plasticine>) -> Self {
         Self { p }
     }

@@ -130,6 +130,7 @@ pub struct ScalarMapper {
 }
 
 impl ScalarMapper {
+    /// A mapper over the given systolic model.
     pub fn new(sys: Arc<Systolic>) -> Self {
         Self { sys }
     }

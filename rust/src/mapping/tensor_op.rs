@@ -35,6 +35,7 @@ pub struct TensorOpMapper {
 }
 
 impl TensorOpMapper {
+    /// A mapper over the given UltraTrail model.
     pub fn new(ut: Arc<UltraTrail>) -> Self {
         Self { ut, seq: AtomicU64::new(0) }
     }

@@ -22,14 +22,17 @@ pub mod counters {
             Self { name, value: AtomicU64::new(0) }
         }
 
+        /// Add `n` to the counter.
         pub fn add(&self, n: u64) {
             self.value.fetch_add(n, Ordering::Relaxed);
         }
 
+        /// Current value.
         pub fn get(&self) -> u64 {
             self.value.load(Ordering::Relaxed)
         }
 
+        /// The counter's registered name.
         pub fn name(&self) -> &'static str {
             self.name
         }
@@ -106,6 +109,7 @@ pub fn sample_variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
 }
 
+/// Arithmetic mean (0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
 }
@@ -138,11 +142,17 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
 /// Five-number summary + outliers for the memory box plots (Figs. 11/12).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BoxStats {
+    /// Minimum.
     pub min: f64,
+    /// First quartile.
     pub q1: f64,
+    /// Median.
     pub median: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Maximum.
     pub max: f64,
+    /// Arithmetic mean.
     pub mean: f64,
     /// Points outside 1.5 × IQR whiskers.
     pub outliers: Vec<f64>,
@@ -163,6 +173,7 @@ fn quantile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Five-number summary of `xs` (linear-interpolated quartiles).
 pub fn box_stats(xs: &[f64]) -> BoxStats {
     let mut sorted: Vec<f64> = xs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());

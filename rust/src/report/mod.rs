@@ -10,12 +10,16 @@ use crate::Result;
 /// A simple column-aligned markdown table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table title.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells (one `Vec` per row).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with `headers`.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -24,6 +28,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells.to_vec());
@@ -77,17 +82,20 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// A CSV report named `<stem>.csv` under the reports directory.
     pub fn new(stem: &str, headers: &[&str]) -> Self {
         let mut buf = String::new();
         let _ = writeln!(buf, "{}", headers.join(","));
         Self { path: reports_dir().join(format!("{stem}.csv")), buf }
     }
 
+    /// Append one row.
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         let _ = writeln!(self.buf, "{}", cells.join(","));
         self
     }
 
+    /// Write the file and return its path.
     pub fn finish(self) -> Result<PathBuf> {
         std::fs::write(&self.path, self.buf)?;
         Ok(self.path)
@@ -114,10 +122,12 @@ pub fn fmt_cycles(c: u64) -> String {
     out
 }
 
+/// Format a percentage with two decimals.
 pub fn fmt_pct(v: f64) -> String {
     format!("{v:.2}%")
 }
 
+/// Human-readable byte count (GiB/MiB/KiB).
 pub fn fmt_bytes(b: u64) -> String {
     if b >= 1 << 30 {
         format!("{:.2} GiB", b as f64 / (1u64 << 30) as f64)

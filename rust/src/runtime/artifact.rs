@@ -16,7 +16,9 @@ use super::client::with_client;
 
 /// A compiled AOT artifact.
 pub struct Artifact {
+    /// Artifact stem (e.g. `roofline`).
     pub name: String,
+    /// Path of the loaded HLO text.
     pub path: PathBuf,
     exe: xla::PjRtLoadedExecutable,
 }

@@ -32,6 +32,7 @@ impl RooflineExec {
         Ok(Self { art: Artifact::load(artifacts_dir(), "roofline")? })
     }
 
+    /// Load the artifact from an explicit directory.
     pub fn load_from(dir: impl AsRef<std::path::Path>) -> Result<Self> {
         Ok(Self { art: Artifact::load(dir, "roofline")? })
     }

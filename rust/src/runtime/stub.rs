@@ -30,14 +30,17 @@ pub struct RooflineExec {
 }
 
 impl RooflineExec {
+    /// Always fails: built without the `xla` feature.
     pub fn load() -> Result<Self> {
         anyhow::bail!("built without the `xla` feature (PJRT runtime disabled)")
     }
 
+    /// Always fails: built without the `xla` feature.
     pub fn load_from(_dir: impl AsRef<Path>) -> Result<Self> {
         Self::load()
     }
 
+    /// Unreachable (the stub cannot be constructed).
     pub fn estimate(&self, _layers: &[LayerFeatures], _hw: &HwFeatures) -> Result<Vec<f64>> {
         unreachable!("stub RooflineExec cannot be constructed")
     }

@@ -144,6 +144,7 @@ pub struct CycleSim<'d> {
 }
 
 impl<'d> CycleSim<'d> {
+    /// A fresh simulator over `d`.
     pub fn new(d: &'d Diagram) -> Self {
         Self {
             d,

@@ -1,9 +1,12 @@
 //! Test utilities: a small deterministic property-testing helper (proptest
-//! is not vendored in this offline image), random textual-ACADL AST
-//! generation for the frontend round-trip property, and shared fixtures.
+//! is not vendored in this offline image), random AST generation for the
+//! textual-ACADL and textual-network frontend round-trip properties, and
+//! shared fixtures.
 
 pub mod arch_gen;
+pub mod net_gen;
 pub mod prop;
 
 pub use arch_gen::{arbitrary_description, arbitrary_pexpr, arbitrary_template};
+pub use net_gen::{arbitrary_layer, arbitrary_net_description};
 pub use prop::{Prop, Rng};

@@ -1,0 +1,155 @@
+//! Random [`NetDescription`] AST generation for the textual-network
+//! round-trip property: AST → pretty-print → parse → same AST (the
+//! workload-side mirror of [`super::arch_gen`]).
+//!
+//! Generated trees stay inside the canonical-printable subset shared with
+//! the ACADL generator: literal segments avoid `$`, negations never wrap
+//! constants directly, and `foreach` bounds avoid function calls. On top of
+//! that, the network grammar's own invariants hold by construction:
+//! `add`/`mul` always carry `with`, no other kind does, and groups are
+//! non-empty and never nested.
+
+use crate::dnn::layer::{ActKind, PoolKind};
+use crate::dnn::text::ast::{
+    ForRange, Group, InputDecl, InputShape, Item, LayerBody, LayerDecl, NetDescription, Param,
+    PExpr, Span, Spanned,
+};
+
+use super::arch_gen::{arbitrary_pexpr, arbitrary_template};
+use super::prop::Rng;
+
+const VARS: &[&str] = &["r", "c", "rows", "cols", "idx", "n", "depth_x"];
+
+fn sp<T>(node: T) -> Spanned<T> {
+    Spanned::bare(node)
+}
+
+fn spanned_pexpr(rng: &mut Rng, calls: bool) -> Spanned<PExpr> {
+    sp(arbitrary_pexpr(rng, 2, calls))
+}
+
+fn arbitrary_body(rng: &mut Rng) -> LayerBody {
+    let pexpr = |rng: &mut Rng| spanned_pexpr(rng, true);
+    match rng.range_u32(0, 9) {
+        0 => LayerBody::Conv1d {
+            out_channels: pexpr(rng),
+            kernel: pexpr(rng),
+            stride: pexpr(rng),
+            pad: sp(rng.bool()),
+        },
+        1 => LayerBody::Conv2d {
+            out_channels: pexpr(rng),
+            kernel: pexpr(rng),
+            stride: pexpr(rng),
+            pad: sp(rng.bool()),
+        },
+        2 => LayerBody::DwConv2d { kernel: pexpr(rng), stride: pexpr(rng), pad: sp(rng.bool()) },
+        3 => LayerBody::Dense {
+            out_channels: pexpr(rng),
+            in_features: if rng.bool() { Some(pexpr(rng)) } else { None },
+        },
+        4 => LayerBody::Pool1d {
+            pool: if rng.bool() { PoolKind::Max } else { PoolKind::Avg },
+            kernel: pexpr(rng),
+            stride: pexpr(rng),
+        },
+        5 => LayerBody::Pool2d {
+            pool: if rng.bool() { PoolKind::Max } else { PoolKind::Avg },
+            kernel: pexpr(rng),
+            stride: pexpr(rng),
+        },
+        6 => LayerBody::Act { act: if rng.bool() { ActKind::Relu } else { ActKind::Clip } },
+        7 => LayerBody::Add,
+        _ => LayerBody::Mul,
+    }
+}
+
+fn arbitrary_ranges(rng: &mut Rng, max: usize) -> Vec<ForRange> {
+    (0..rng.range_usize(1, max))
+        .map(|_| ForRange {
+            var: sp(rng.pick(VARS).to_string()),
+            // no calls: the foreach splitter treats `,` as a separator
+            lo: sp(arbitrary_pexpr(rng, 1, false)),
+            hi: sp(arbitrary_pexpr(rng, 1, false)),
+        })
+        .collect()
+}
+
+/// A random `[[layer]]` declaration honoring the grammar's invariants.
+pub fn arbitrary_layer(rng: &mut Rng) -> LayerDecl {
+    let body = arbitrary_body(rng);
+    let with = if body.takes_with() { Some(arbitrary_template(rng)) } else { None };
+    LayerDecl {
+        name: arbitrary_template(rng),
+        from: if rng.bool() { Some(arbitrary_template(rng)) } else { None },
+        with,
+        body,
+        foreach: if rng.bool() { arbitrary_ranges(rng, 2) } else { Vec::new() },
+        when: if rng.bool() { Some(spanned_pexpr(rng, true)) } else { None },
+        span: Span::default(),
+    }
+}
+
+fn arbitrary_input(rng: &mut Rng) -> InputDecl {
+    let shape = if rng.bool() {
+        InputShape::OneD { length: spanned_pexpr(rng, true) }
+    } else {
+        InputShape::TwoD { height: spanned_pexpr(rng, true), width: spanned_pexpr(rng, true) }
+    };
+    InputDecl {
+        name: arbitrary_template(rng),
+        channels: spanned_pexpr(rng, true),
+        shape,
+        span: Span::default(),
+    }
+}
+
+/// A random network description: always named, with random params, inputs,
+/// layers, and (non-nested, non-empty) `[[foreach]]` groups.
+pub fn arbitrary_net_description(rng: &mut Rng) -> NetDescription {
+    let mut params = Vec::new();
+    for i in 0..rng.range_usize(0, 3) {
+        params.push(Param {
+            name: sp(format!("p{i}_{}", rng.range_u64(0, 999))),
+            value: sp(rng.range_u64(0, 1 << 40) as i64),
+        });
+    }
+    let items = (0..rng.range_usize(0, 5))
+        .map(|_| {
+            if rng.range_u32(0, 3) == 0 {
+                Item::Group(Group {
+                    ranges: arbitrary_ranges(rng, 2),
+                    when: if rng.bool() { Some(spanned_pexpr(rng, true)) } else { None },
+                    layers: (0..rng.range_usize(1, 3)).map(|_| arbitrary_layer(rng)).collect(),
+                    span: Span::default(),
+                })
+            } else {
+                Item::Layer(arbitrary_layer(rng))
+            }
+        })
+        .collect();
+    NetDescription {
+        name: Some(arbitrary_template(rng)),
+        params,
+        inputs: (0..rng.range_usize(0, 2)).map(|_| arbitrary_input(rng)).collect(),
+        items,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::text::parse_net;
+    use crate::testkit::Prop;
+
+    #[test]
+    fn net_description_roundtrips_through_pretty_printer() {
+        Prop::new(0xD0_0E7).cases(256).run(|rng| {
+            let ast = arbitrary_net_description(rng);
+            let printed = ast.to_toml();
+            let reparsed = parse_net(&printed)
+                .unwrap_or_else(|e| panic!("reparse failed: {e}\n---\n{printed}"));
+            assert_eq!(ast, reparsed, "pretty-printed form:\n{printed}");
+        });
+    }
+}

@@ -10,11 +10,13 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// A seeded generator (seed 0 is mapped to 1).
     pub fn new(seed: u64) -> Self {
         Self { state: seed.max(1) }
     }
 
     #[inline]
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;
@@ -30,14 +32,17 @@ impl Rng {
         lo + self.next_u64() % (hi - lo + 1)
     }
 
+    /// Uniform in `[lo, hi]` (inclusive).
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }
 
+    /// Uniform in `[lo, hi]` (inclusive).
     pub fn range_u32(&mut self, lo: u32, hi: u32) -> u32 {
         self.range_u64(lo as u64, hi as u64) as u32
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.next_u64() & 1 == 1
     }
@@ -60,10 +65,12 @@ pub struct Prop {
 }
 
 impl Prop {
+    /// A property with `seed` and the default 64 cases.
     pub fn new(seed: u64) -> Self {
         Self { seed, cases: 64 }
     }
 
+    /// Set the number of generated cases.
     pub fn cases(mut self, n: usize) -> Self {
         self.cases = n;
         self

@@ -1,0 +1,219 @@
+//! Round-trip fidelity of the textual network frontend: each shipped
+//! `net/*.toml` description must compile to the **exact layer list** its
+//! `dnn::zoo` builder produces (structural pin), estimate **cycle-identical**
+//! to it across all four described paper architectures, share the engine's
+//! content-addressed estimate cache with the zoo spelling (the KernelKey
+//! proof: a zoo-warmed engine serves the described network without
+//! evaluating anything), and the validator must report the documented error
+//! classes with file/line spans.
+
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{
+    estimate_network, resolve_network, serve, Arch, DescribedArch,
+};
+use acadl_perf::dnn::text::{check_net_source, NetRegistry, Severity};
+use acadl_perf::dnn::zoo;
+use acadl_perf::dnn::Network;
+use acadl_perf::engine::EstimationEngine;
+
+const NET_FILES: [(&str, fn() -> Network); 5] = [
+    ("net/tc_resnet8.toml", zoo::tc_resnet8),
+    ("net/alexnet.toml", zoo::alexnet),
+    ("net/alexnet_reduced.toml", zoo::alexnet_reduced),
+    ("net/efficientnet.toml", zoo::efficientnet),
+    ("net/efficientnet_reduced.toml", zoo::efficientnet_reduced),
+];
+
+const ARCH_FILES: [&str; 4] = [
+    "arch/systolic_16x16.toml",
+    "arch/ultratrail_8x8.toml",
+    "arch/gemmini_16.toml",
+    "arch/plasticine_3x6.toml",
+];
+
+/// The strongest pin: the described network's layer list — every name,
+/// kind, and hyper-parameter — equals the zoo builder's. Cycle-identity on
+/// any architecture follows, since estimation is a function of the layers.
+#[test]
+fn shipped_descriptions_match_zoo_layer_lists() {
+    for (file, builder) in NET_FILES {
+        let described = resolve_network(&format!("net:{file}"))
+            .unwrap_or_else(|e| panic!("compiling {file}: {e:#}"));
+        let hand = builder();
+        assert_eq!(described.name, hand.name, "{file}: network names differ");
+        assert_eq!(
+            described.layers.len(),
+            hand.layers.len(),
+            "{file}: layer counts differ"
+        );
+        for (i, (d, h)) in described.layers.iter().zip(&hand.layers).enumerate() {
+            assert_eq!(d, h, "{file}: layer {i} differs from the zoo builder");
+        }
+    }
+}
+
+#[test]
+fn shipped_descriptions_validate_cleanly() {
+    for (file, _) in NET_FILES {
+        let src = std::fs::read_to_string(file).unwrap();
+        let (net, diags) = check_net_source(&src);
+        assert!(net.is_some(), "{file} did not compile: {diags:?}");
+        assert!(diags.is_empty(), "{file}: unexpected diagnostics {diags:?}");
+    }
+}
+
+/// Estimate `network` on a described architecture through both network
+/// spellings and require identical results, layer by layer.
+fn assert_cycle_identical(arch_file: &str, net_file: &str, builder: fn() -> Network) {
+    let fp = FixedPointConfig::default();
+    let arch = Arch::Described(DescribedArch::file(arch_file));
+    let mapper = arch.mapper().unwrap_or_else(|e| panic!("compiling {arch_file}: {e:#}"));
+
+    let described = resolve_network(&format!("net:{net_file}")).unwrap();
+    let de = estimate_network(mapper.as_ref(), &described, &fp).unwrap();
+    let he = estimate_network(mapper.as_ref(), &builder(), &fp).unwrap();
+
+    assert_eq!(de.network, he.network, "{net_file} on {arch_file}: names differ");
+    assert_eq!(
+        de.layer_cycles(),
+        he.layer_cycles(),
+        "{net_file} on {arch_file}: per-layer cycles differ from the zoo builder"
+    );
+    assert_eq!(de.total_cycles(), he.total_cycles());
+    assert_eq!(
+        de.evaluated_iters(),
+        he.evaluated_iters(),
+        "{net_file} on {arch_file}: fixed-point evaluation took a different path"
+    );
+}
+
+#[test]
+fn tc_resnet8_matches_zoo_on_all_described_architectures() {
+    for arch_file in ARCH_FILES {
+        assert_cycle_identical(arch_file, "net/tc_resnet8.toml", zoo::tc_resnet8);
+    }
+}
+
+#[test]
+fn reduced_networks_match_zoo_on_gemmini() {
+    assert_cycle_identical("arch/gemmini_16.toml", "net/alexnet_reduced.toml", zoo::alexnet_reduced);
+    assert_cycle_identical(
+        "arch/gemmini_16.toml",
+        "net/efficientnet_reduced.toml",
+        zoo::efficientnet_reduced,
+    );
+}
+
+/// The KernelKey proof: described networks produce the same content-
+/// addressed kernel fingerprints as the zoo builders, so a zoo-warmed
+/// engine serves the described spelling entirely from cache (and vice
+/// versa) — zero kernels evaluated, cycle-identical totals.
+#[test]
+fn described_networks_share_the_engine_cache_with_zoo() {
+    let engine = EstimationEngine::new(1 << 12);
+    let arch = Arch::Described(DescribedArch::file("arch/gemmini_16.toml"));
+    let fp = FixedPointConfig::default();
+
+    let hand = zoo::tc_resnet8();
+    let cold = engine.estimate_network(&arch, &hand, &fp).unwrap();
+    assert!(cold.stats.evaluated > 0);
+
+    let described = resolve_network("net:net/tc_resnet8.toml").unwrap();
+    let warm = engine.estimate_network(&arch, &described, &fp).unwrap();
+    assert_eq!(warm.total_cycles(), cold.total_cycles());
+    assert_eq!(
+        warm.stats.evaluated, 0,
+        "described network must hit the zoo-warmed cache: {:?}",
+        warm.stats
+    );
+    assert_eq!(
+        warm.stats.cache_hits + warm.stats.deduped,
+        warm.stats.total_kernels,
+        "{:?}",
+        warm.stats
+    );
+}
+
+#[test]
+fn net_registry_cache_hit_skips_recompilation() {
+    let src = std::fs::read_to_string("net/tc_resnet8.toml").unwrap();
+    let reg = NetRegistry::new();
+    let a = reg.get_or_compile(&src, "tc").unwrap();
+    assert_eq!(reg.compile_count(), 1);
+    let b = reg.get_or_compile(&src, "tc").unwrap();
+    assert_eq!(reg.compile_count(), 1, "cache hit must not recompile");
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    let changed = format!("{src}\n# tweaked\n");
+    reg.get_or_compile(&changed, "tc").unwrap();
+    assert_eq!(reg.compile_count(), 2);
+}
+
+/// The acceptance-criteria path end to end: a described architecture and a
+/// described network through the serve front-end, cycle-identical to the
+/// builder + zoo-name spelling, warm on the second request.
+#[test]
+fn described_net_estimates_flow_through_the_server() {
+    let input = "estimate file:arch/gemmini_16.toml net:net/tc_resnet8.toml\n\
+                 estimate gemmini:16 tc_resnet8\n\
+                 estimate file:arch/gemmini_16.toml net:net/tc_resnet8.toml\nquit\n";
+    let mut out = Vec::new();
+    let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+    assert_eq!(served, 3);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    let field = |line: &str, name: &str| -> String {
+        line.split_whitespace()
+            .find_map(|t| t.strip_prefix(name))
+            .unwrap_or_else(|| panic!("no {name} in {line}"))
+            .to_string()
+    };
+    assert!(lines[0].starts_with("gemmini16x16 tc_resnet8 cycles="), "{}", lines[0]);
+    // all three spellings agree on cycles
+    assert_eq!(field(lines[0], "cycles="), field(lines[1], "cycles="));
+    assert_eq!(field(lines[0], "cycles="), field(lines[2], "cycles="));
+    // the repeat request is served without evaluating any kernel
+    let total: u64 = field(lines[2], "kernels=").parse().unwrap();
+    let hits: u64 = field(lines[2], "cache_hits=").parse().unwrap();
+    let dedup: u64 = field(lines[2], "deduped=").parse().unwrap();
+    assert_eq!(hits + dedup, total, "{}", lines[2]);
+}
+
+#[test]
+fn check_reports_spanned_errors_for_broken_descriptions() {
+    let src = std::fs::read_to_string("net/tc_resnet8.toml").unwrap();
+    // break it three ways: a dangling skip reference, an impossible conv
+    // window, and a shape-incompatible residual add
+    let broken = format!(
+        "{src}\n[[layer]]\nname = \"extra\"\nkind = \"conv1d\"\nfrom = \"ghost\"\n\
+         out_channels = 4\nkernel = 3\n\n\
+         [[layer]]\nname = \"widepool\"\nkind = \"maxpool1d\"\nfrom = \"avgpool\"\nkernel = 99\n\n\
+         [[layer]]\nname = \"badadd\"\nkind = \"add\"\nfrom = \"clip1\"\nwith = \"block1_clip2\"\n"
+    );
+    let (net, diags) = check_net_source(&broken);
+    assert!(net.is_none());
+    let errors: Vec<String> = diags
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .map(|d| d.render("net.toml"))
+        .collect();
+    assert!(
+        errors.iter().any(|e| e.contains("unknown layer or input `ghost`")),
+        "missing dangling-reference error: {errors:?}"
+    );
+    assert!(
+        errors.iter().any(|e| e.contains("produces no output")),
+        "missing dead-window error: {errors:?}"
+    );
+    assert!(
+        errors.iter().any(|e| e.contains("operand")),
+        "missing add-shape error: {errors:?}"
+    );
+    // every rendered diagnostic carries file:line:col
+    for e in &errors {
+        let rest = e.strip_prefix("net.toml:").unwrap_or_else(|| panic!("no origin in {e}"));
+        let mut parts = rest.splitn(3, ':');
+        let line: u32 = parts.next().unwrap().parse().unwrap();
+        let _col: u32 = parts.next().unwrap().parse().unwrap();
+        assert!(line >= 1, "bad line in {e}");
+    }
+}

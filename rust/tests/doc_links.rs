@@ -1,0 +1,119 @@
+//! Documentation link checker: every repo-relative path referenced from
+//! the docs book, the READMEs, and the directory guides must exist, so the
+//! docs cannot silently rot as files move. Runs as a plain test (CI's
+//! doc-link pass) — no external tooling needed.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// The documentation set this repo ships. Presence is itself asserted, so
+/// deleting a book chapter without updating this list fails the build.
+const DOC_FILES: [&str; 9] = [
+    "README.md",
+    "arch/README.md",
+    "net/README.md",
+    "docs/architecture.md",
+    "docs/arch-format.md",
+    "docs/net-format.md",
+    "docs/serve-protocol.md",
+    "docs/performance.md",
+    "ROADMAP.md",
+    // CHANGES.md is a log, not documentation: not checked
+];
+
+/// Directories whose mention in backticks is treated as a path reference.
+const PATH_ROOTS: [&str; 9] = [
+    "docs/", "arch/", "net/", "rust/", "benches/", "examples/", "python/", ".github/", "target/",
+];
+
+/// Extract path references from one markdown document, resolved to
+/// repo-relative paths: `](relative/path)` markdown links (relative to the
+/// document's own directory) plus `` `path/like/this` `` inline code spans
+/// starting with a known repo directory (always repo-relative).
+fn referenced_paths(doc: &str, text: &str) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let dir = Path::new(doc).parent().unwrap_or_else(|| Path::new(""));
+
+    // markdown links, resolved against the document's directory
+    let mut rest = text;
+    while let Some(i) = rest.find("](") {
+        rest = &rest[i + 2..];
+        let Some(end) = rest.find(')') else { break };
+        let target = &rest[..end];
+        rest = &rest[end..];
+        if target.starts_with("http://")
+            || target.starts_with("https://")
+            || target.starts_with('#')
+            || target.is_empty()
+        {
+            continue;
+        }
+        let target = target.split('#').next().unwrap_or(target);
+        let resolved = dir.join(target);
+        out.insert(resolved.to_string_lossy().replace('\\', "/"));
+    }
+
+    // backticked path-like spans (repo-relative by construction)
+    for span in text.split('`').skip(1).step_by(2) {
+        if span.contains(|c: char| c.is_whitespace())
+            || span.contains('*')
+            || span.contains('<')
+            || span.contains('$')
+            || span.contains("::")
+        {
+            continue; // globs, placeholders, Rust paths, code
+        }
+        if PATH_ROOTS.iter().any(|root| span.starts_with(root)) {
+            out.insert(span.trim_end_matches(['.', ',', ';']).to_string());
+        }
+    }
+    out
+}
+
+#[test]
+fn documented_paths_exist() {
+    let mut missing = Vec::new();
+    for doc in DOC_FILES {
+        let text = std::fs::read_to_string(doc)
+            .unwrap_or_else(|e| panic!("documentation file {doc} must exist: {e}"));
+        for path in referenced_paths(doc, &text) {
+            // `target/` artifacts are build outputs, not repo contents
+            if path.starts_with("target/") {
+                continue;
+            }
+            if !Path::new(&path).exists() {
+                missing.push(format!("{doc} -> {path}"));
+            }
+        }
+    }
+    assert!(missing.is_empty(), "dangling documentation references:\n{}", missing.join("\n"));
+}
+
+#[test]
+fn docs_book_is_linked_from_the_readme() {
+    let readme = std::fs::read_to_string("README.md").unwrap();
+    for chapter in [
+        "docs/architecture.md",
+        "docs/arch-format.md",
+        "docs/net-format.md",
+        "docs/serve-protocol.md",
+        "docs/performance.md",
+    ] {
+        assert!(readme.contains(chapter), "README.md must link {chapter}");
+    }
+}
+
+#[test]
+fn every_docs_markdown_file_is_checked() {
+    // a chapter added to docs/ must also be added to DOC_FILES above
+    for entry in std::fs::read_dir("docs").expect("docs/ directory must exist") {
+        let path = entry.unwrap().path();
+        if path.extension().is_some_and(|e| e == "md") {
+            let rel = path.to_string_lossy().replace('\\', "/");
+            assert!(
+                DOC_FILES.contains(&rel.as_str()),
+                "{rel} is not covered by the doc-link checker's DOC_FILES list"
+            );
+        }
+    }
+}
