@@ -1,15 +1,20 @@
-//! §Perf — AIDG evaluator throughput, end-to-end estimation latency, and
-//! unified-engine cold/warm microbenchmarks (the EXPERIMENTS.md §Perf
-//! numbers). Emits `BENCH_engine.json` with machine-readable cold/warm
-//! wall-times and the warm hit rate so future PRs have a perf trajectory.
+//! §Perf — AIDG evaluator throughput, end-to-end estimation latency,
+//! unified-engine cold/warm microbenchmarks, and the DSE sweep phase (the
+//! EXPERIMENTS.md §Perf numbers). Emits `BENCH_engine.json` (cold/warm
+//! wall-times, hit rates) and `BENCH_dse.json` (points/sec, pre-filter
+//! survival, cross-candidate warm hit rate) so future PRs have a perf
+//! trajectory.
 use std::sync::Arc;
 
 use acadl_perf::accel::{Systolic, SystolicConfig};
+use acadl_perf::acadl::text::ast::{Param, Span, Spanned, Sweep, SweepDim, SweepItem};
+use acadl_perf::acadl::text::{parse, PExpr};
 use acadl_perf::aidg::{estimate_layer, Evaluator, FixedPointConfig};
 use acadl_perf::bench_harness::{bench, section, time_once};
-use acadl_perf::coordinator::Arch;
+use acadl_perf::coordinator::{Arch, Pool};
 use acadl_perf::dnn::text::NetRegistry;
 use acadl_perf::dnn::zoo;
+use acadl_perf::dse::{explore_space, RooflineBackend, SweepOptions, SweepSpace};
 use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
 use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
 
@@ -109,5 +114,100 @@ fn main() {
         "  => warm hit rate {:.1}% | described-net warm hit rate {:.1}% — wrote BENCH_engine.json",
         hit_rate * 100.0,
         net_hit_rate * 100.0
+    );
+
+    section("perf — DSE: [sweep] throughput, pre-filter survival, kernel reuse");
+    let pool = Pool::new(0);
+    let backend = RooflineBackend::auto();
+    let src = std::fs::read_to_string("arch/systolic_16x16.toml")
+        .expect("reading arch/systolic_16x16.toml");
+    let space = SweepSpace::from_source(&src, "arch/systolic_16x16.toml", None)
+        .expect("compiling the shipped systolic sweep");
+    let dse_engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let opts = SweepOptions { keep_frac: 0.5, ..Default::default() };
+    let (outcome, dse_dt) = time_once("dse/systolic [sweep] x tc_resnet8 (keep 0.5)", || {
+        explore_space(&space, &net, &opts, &pool, &backend, &dse_engine).unwrap()
+    });
+    let mappable = (outcome.enumerated - outcome.skipped).max(1);
+    let points_per_sec = outcome.enumerated as f64 / dse_dt.as_secs_f64().max(1e-9);
+    let survival = outcome.estimated as f64 / mappable as f64;
+
+    // cross-candidate kernel reuse: sweep a structure-neutral `rev`
+    // dimension next to a structural `cols` dimension — same-`cols`
+    // candidates digest equally, so under locality scheduling the second
+    // and third members of each group are served from the estimate cache
+    let mut dup = parse(&src).expect("parsing systolic description");
+    for p in &mut dup.params {
+        if p.name.node == "rows" {
+            p.value = Spanned::bare(2);
+        }
+    }
+    dup.params.push(Param { name: Spanned::bare("rev".into()), value: Spanned::bare(0) });
+    let rev_range = SweepItem::Range { lo: PExpr::Const(0), hi: PExpr::Const(3), step: None };
+    dup.sweep = Some(Sweep {
+        dims: vec![
+            SweepDim {
+                name: Spanned::bare("rev".into()),
+                items: vec![rev_range],
+                span: Span::default(),
+            },
+            SweepDim {
+                name: Spanned::bare("cols".into()),
+                items: vec![
+                    SweepItem::Scalar(PExpr::Const(2)),
+                    SweepItem::Scalar(PExpr::Const(3)),
+                ],
+                span: Span::default(),
+            },
+        ],
+        when: None,
+        cap: None,
+        span: Span::default(),
+    });
+    let dup_space = SweepSpace::from_description(dup, "systolic-dup", None)
+        .expect("compiling the duplicate-structure sweep");
+    let dup_engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let (dup_outcome, _) = time_once("dse/duplicate-structure sweep (locality)", || {
+        explore_space(
+            &dup_space,
+            &net,
+            &SweepOptions::default(),
+            &pool,
+            &backend,
+            &dup_engine,
+        )
+        .unwrap()
+    });
+    let warm_hit_rate = dup_outcome.warm_hit_rate();
+    assert!(
+        warm_hit_rate > 0.0,
+        "multi-point sweep must reuse KernelKeys across candidates: {:?}",
+        dup_outcome.stats
+    );
+
+    // two sweeps, two labeled records: the shipped-file sweep carries the
+    // throughput/survival numbers, the synthetic duplicate-structure sweep
+    // carries the cross-candidate reuse numbers — mixing them under one
+    // arch label would make the perf trajectory lie about its workload
+    let dse_json = format!(
+        "{{\n  \"bench\": \"dse_sweep\",\n  \"arch\": \"arch/systolic_16x16.toml\",\n  \
+         \"network\": \"tc_resnet8\",\n  \"points\": {},\n  \"wall_ms\": {:.3},\n  \
+         \"points_per_sec\": {:.2},\n  \"prefilter_survival\": {:.4},\n  \
+         \"dup_sweep\": {{\n    \"arch\": \"systolic-dup (rev x cols, locality)\",\n    \
+         \"points\": {},\n    \"warm_hit_rate\": {:.4},\n    \"reuse_rate\": {:.4}\n  }}\n}}\n",
+        outcome.enumerated,
+        dse_dt.as_secs_f64() * 1e3,
+        points_per_sec,
+        survival,
+        dup_outcome.enumerated,
+        warm_hit_rate,
+        dup_outcome.reuse_rate(),
+    );
+    std::fs::write("BENCH_dse.json", &dse_json).expect("writing BENCH_dse.json");
+    println!(
+        "  => {points_per_sec:.1} points/s | pre-filter kept {:.0}% | cross-candidate warm \
+         hit rate {:.1}% — wrote BENCH_dse.json",
+        survival * 100.0,
+        warm_hit_rate * 100.0
     );
 }

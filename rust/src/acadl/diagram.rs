@@ -557,6 +557,29 @@ impl Diagram {
         None
     }
 
+    /// Number of functional units — the DSE reports' PE-count cost proxy
+    /// (every compute/move/memory-access unit counts once).
+    pub fn fu_count(&self) -> usize {
+        self.objects
+            .iter()
+            .filter(|o| matches!(o.kind, ObjectKind::FunctionalUnit { .. }))
+            .count()
+    }
+
+    /// Total words claimed by data memories — the DSE reports' memory cost
+    /// proxy (sums every memory's address ranges, saturating).
+    pub fn memory_words(&self) -> u64 {
+        let mut total = 0u64;
+        for o in &self.objects {
+            if let ObjectKind::Memory { address_ranges, .. } = &o.kind {
+                for &(start, end) in address_ranges {
+                    total = total.saturating_add(end.saturating_sub(start));
+                }
+            }
+        }
+        total
+    }
+
     /// Structural content digest of a finalized diagram: a hash over every
     /// primitive table that can influence routing or timing — object kinds
     /// (with latencies, port widths, capacities, address ranges), all

@@ -514,6 +514,53 @@ pub struct Param {
     pub value: Spanned<i64>,
 }
 
+/// One value item of a sweep dimension: a scalar expression or a half-open
+/// range with an optional step (`lo..hi step s`; step defaults to 1).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepItem {
+    /// A single value.
+    Scalar(PExpr),
+    /// `lo..hi [step s]` — the half-open range `lo, lo+s, ...` below `hi`
+    /// (mirrors `foreach`'s half-open ranges).
+    Range {
+        /// Lower bound (inclusive).
+        lo: PExpr,
+        /// Upper bound (exclusive).
+        hi: PExpr,
+        /// Stride (`None` = 1).
+        step: Option<PExpr>,
+    },
+}
+
+/// One `[sweep]` dimension: a `[params]` entry swept over a value list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepDim {
+    /// The swept parameter (must be declared in `[params]`).
+    pub name: Spanned<String>,
+    /// Value items, concatenated left to right.
+    pub items: Vec<SweepItem>,
+    /// Span of the dimension's value.
+    pub span: Span,
+}
+
+/// The `[sweep]` section: a design-space declaration over the description's
+/// own `[params]`. Purely declarative — compiling the description ignores
+/// it; the DSE subsystem ([`crate::dse`]) enumerates it into candidate
+/// architectures.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sweep {
+    /// Swept dimensions in declaration order (enumeration is row-major:
+    /// the last dimension varies fastest).
+    pub dims: Vec<SweepDim>,
+    /// Guard over swept names + base params; combinations evaluating to 0
+    /// are excluded from the space (reserved key `when`).
+    pub when: Option<Spanned<PExpr>>,
+    /// Combinatorial blow-up cap override (reserved key `cap`).
+    pub cap: Option<Spanned<i64>>,
+    /// Span of the `[sweep]` header.
+    pub span: Span,
+}
+
 /// A parsed architecture description (template form; see
 /// [`crate::acadl::text::compile::expand`] for the flattened form).
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -529,6 +576,9 @@ pub struct Description {
     pub fetch: Option<Fetch>,
     /// `[mapper] family = "..."`.
     pub mapper: Option<Spanned<String>>,
+    /// `[sweep]` design-space declaration (ignored by compilation; consumed
+    /// by [`crate::dse`]).
+    pub sweep: Option<Sweep>,
     /// Object and edge declarations in file order.
     pub decls: Vec<Decl>,
 }
@@ -568,6 +618,19 @@ impl Description {
         if let Some(m) = &self.mapper {
             let _ = writeln!(out, "[mapper]");
             let _ = writeln!(out, "family = {}", quote(&m.node));
+            out.push('\n');
+        }
+        if let Some(s) = &self.sweep {
+            let _ = writeln!(out, "[sweep]");
+            for d in &s.dims {
+                let _ = writeln!(out, "{} = {}", d.name.node, sweep_items_value(&d.items));
+            }
+            if let Some(w) = &s.when {
+                let _ = writeln!(out, "when = {}", quote(&w.node.to_string()));
+            }
+            if let Some(c) = &s.cap {
+                let _ = writeln!(out, "cap = {}", c.node);
+            }
             out.push('\n');
         }
         for d in &self.decls {
@@ -650,6 +713,44 @@ fn pexpr_value(e: &PExpr) -> String {
     match e {
         PExpr::Const(v) => v.to_string(),
         other => quote(&other.to_string()),
+    }
+}
+
+impl SweepItem {
+    /// Canonical source form of one item (`4`, `rows * 2`, `2..17 step 2`).
+    pub fn source(&self) -> String {
+        match self {
+            SweepItem::Scalar(e) => e.to_string(),
+            SweepItem::Range { lo, hi, step: None } => format!("{lo}..{hi}"),
+            SweepItem::Range { lo, hi, step: Some(s) } => format!("{lo}..{hi} step {s}"),
+        }
+    }
+}
+
+/// Print a sweep dimension's items as a TOML value: bare integer for a
+/// single constant scalar, quoted item list otherwise. Reparsing the output
+/// yields a structurally identical item list.
+fn sweep_items_value(items: &[SweepItem]) -> String {
+    if let [SweepItem::Scalar(PExpr::Const(v))] = items {
+        return v.to_string();
+    }
+    let list: Vec<String> = items.iter().map(SweepItem::source).collect();
+    quote(&list.join(", "))
+}
+
+/// Collect every variable name referenced by `e` into `out` (duplicates
+/// included; callers dedupe as needed). Used for name-resolution checks on
+/// expressions that cannot be evaluated yet (e.g. sweep guards, which bind
+/// per-candidate values).
+pub fn collect_vars(e: &PExpr, out: &mut Vec<String>) {
+    match e {
+        PExpr::Const(_) => {}
+        PExpr::Var(name) => out.push(name.clone()),
+        PExpr::Neg(a) => collect_vars(a, out),
+        PExpr::Bin(_, a, b) | PExpr::Call(_, a, b) => {
+            collect_vars(a, out);
+            collect_vars(b, out);
+        }
     }
 }
 

@@ -16,6 +16,12 @@
 //! [`registry::ArchRegistry`] caches compiled models keyed by description
 //! content, so `serve` loops and DSE sweeps never recompile an unchanged
 //! description.
+//!
+//! Descriptions may additionally carry a declarative `[sweep]` section — a
+//! design space over their own `[params]` (value lists, `lo..hi [step s]`
+//! ranges, `when` guards, a combinatorial `cap`). Compilation ignores it;
+//! [`crate::dse`] enumerates it into candidate architectures (see
+//! `docs/dse.md`).
 
 pub mod ast;
 pub mod compile;
@@ -24,8 +30,11 @@ pub mod parser;
 pub mod registry;
 pub mod validate;
 
-pub use ast::{Description, PExpr, Span, Spanned, Template};
-pub use compile::{check_source, compile_source, CompiledArch, CompiledModel, Flat};
+pub use ast::{Description, PExpr, Span, Spanned, Sweep, SweepDim, SweepItem, Template};
+pub use compile::{
+    check_source, compile_source, CompiledArch, CompiledModel, Flat, FlatSweep, FlatSweepDim,
+    DEFAULT_SWEEP_CAP,
+};
 pub use parser::parse;
 pub use registry::ArchRegistry;
 pub use validate::validate;

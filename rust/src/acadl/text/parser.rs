@@ -4,7 +4,7 @@
 
 use super::ast::{
     BinOp, Decl, DeclBody, Description, Fetch, ForRange, Func, PExpr, Param, Segment, Span,
-    Spanned, Template,
+    Spanned, Sweep, SweepDim, SweepItem, Template,
 };
 use super::lexer::{lex, Token, TokenKind};
 use super::Diagnostic;
@@ -196,6 +196,7 @@ impl Parser {
                     "isa" => desc.isa.is_some(),
                     "fetch" => desc.fetch.is_some(),
                     "mapper" => desc.mapper.is_some(),
+                    "sweep" => desc.sweep.is_some(),
                     _ => false,
                 };
                 if already {
@@ -249,6 +250,9 @@ impl Parser {
                     let mut p = PairSet::new(pairs, span, "mapper")?;
                     desc.mapper = Some(p.string("family")?);
                     p.finish()?;
+                }
+                ("sweep", false) => {
+                    desc.sweep = Some(Self::sweep(pairs, span)?);
                 }
                 (name, true) => {
                     desc.decls.push(self.decl(name, span, pairs)?);
@@ -326,6 +330,138 @@ impl Parser {
         p.finish()?;
         Ok(Decl { body, foreach, when, span })
     }
+
+    /// Parse the `[sweep]` section body. Every key except the reserved
+    /// `when` (guard) and `cap` (blow-up bound) declares one swept
+    /// dimension, in file order.
+    fn sweep(pairs: Vec<RawPair>, span: Span) -> Result<Sweep, Diagnostic> {
+        for (i, a) in pairs.iter().enumerate() {
+            if pairs[..i].iter().any(|b| b.key == a.key) {
+                return Err(Diagnostic::error(
+                    a.key_span,
+                    format!("duplicate key `{}` in [sweep]", a.key),
+                ));
+            }
+        }
+        let mut sweep = Sweep { dims: Vec::new(), when: None, cap: None, span };
+        for pair in pairs {
+            let RawPair { key, key_span, value } = pair;
+            if key == "when" {
+                match value {
+                    Val::Str(s, vspan) => {
+                        sweep.when = Some(Spanned::new(parse_pexpr(&s, vspan)?, vspan));
+                    }
+                    other => {
+                        return Err(Diagnostic::error(
+                            other.span(),
+                            "sweep `when` must be a string",
+                        ))
+                    }
+                }
+            } else if key == "cap" {
+                match value {
+                    Val::Int(v, vspan) => sweep.cap = Some(Spanned::new(v, vspan)),
+                    other => {
+                        return Err(Diagnostic::error(
+                            other.span(),
+                            "sweep `cap` must be an integer",
+                        ))
+                    }
+                }
+            } else {
+                match value {
+                    Val::Int(v, vspan) => sweep.dims.push(SweepDim {
+                        name: Spanned::new(key, key_span),
+                        items: vec![SweepItem::Scalar(PExpr::Const(v))],
+                        span: vspan,
+                    }),
+                    Val::Str(s, vspan) => sweep.dims.push(SweepDim {
+                        name: Spanned::new(key, key_span),
+                        items: parse_sweep_items(&s, vspan)?,
+                        span: vspan,
+                    }),
+                    other => {
+                        return Err(Diagnostic::error(
+                            other.span(),
+                            format!(
+                                "sweep dimension `{key}` must be an integer or a value-list \
+                                 string"
+                            ),
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(sweep)
+    }
+}
+
+/// Split `src` at top-level (paren-depth-zero) occurrences of `sep`.
+fn split_top_level<'a>(src: &'a str, sep: &str) -> Vec<&'a str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let bytes = src.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'(' => depth += 1,
+            b')' => depth = depth.saturating_sub(1),
+            // byte-wise compare: separators are ASCII, so a match position
+            // is always a char boundary even in non-ASCII input
+            _ if depth == 0 && bytes[i..].starts_with(sep.as_bytes()) => {
+                parts.push(&src[start..i]);
+                i += sep.len();
+                start = i;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    parts.push(&src[start..]);
+    parts
+}
+
+/// Parse a sweep dimension's value list: comma-separated items, each a
+/// scalar expression or a `lo..hi [step s]` half-open range. Commas inside
+/// function calls do not separate items.
+pub fn parse_sweep_items(src: &str, span: Span) -> Result<Vec<SweepItem>, Diagnostic> {
+    let mut items = Vec::new();
+    for raw in split_top_level(src, ",") {
+        let raw = raw.trim();
+        if raw.is_empty() {
+            continue;
+        }
+        let range_parts = split_top_level(raw, "..");
+        match range_parts.as_slice() {
+            [single] => items.push(SweepItem::Scalar(parse_pexpr(single, span)?)),
+            [lo, hi] => {
+                let (hi, step) = match hi.find(" step ") {
+                    Some(at) => (
+                        &hi[..at],
+                        Some(parse_pexpr(&hi[at + " step ".len()..], span)?),
+                    ),
+                    None => (*hi, None),
+                };
+                items.push(SweepItem::Range {
+                    lo: parse_pexpr(lo, span)?,
+                    hi: parse_pexpr(hi, span)?,
+                    step,
+                });
+            }
+            _ => {
+                return Err(Diagnostic::error(
+                    span,
+                    format!("sweep item {raw:?} has more than one `..`"),
+                ))
+            }
+        }
+    }
+    if items.is_empty() {
+        return Err(Diagnostic::error(span, "empty sweep value list"));
+    }
+    Ok(items)
 }
 
 /// Typed accessor over one section's raw pairs, with duplicate/unknown-key
@@ -844,6 +980,40 @@ foreach = "i in 0..n"
         assert_eq!(d.mapper.as_ref().unwrap().node, "scalar");
         assert_eq!(d.decls[1].foreach.len(), 1);
         assert!(d.decls[1].when.is_some());
+    }
+
+    #[test]
+    fn sweep_section_parses_dims_when_and_cap() {
+        let src = "[arch]\nname = \"x\"\n[sweep]\nrows = \"2, 4, 8\"\ncols = \"2..17 step 2\"\n\
+                   tile = 16\nwhen = \"rows <= cols\"\ncap = 100\n";
+        let d = parse(src).unwrap();
+        let s = d.sweep.unwrap();
+        assert_eq!(s.dims.len(), 3);
+        assert_eq!(s.dims[0].name.node, "rows");
+        assert_eq!(s.dims[0].items.len(), 3);
+        assert!(matches!(
+            &s.dims[1].items[0],
+            SweepItem::Range { step: Some(PExpr::Const(2)), .. }
+        ));
+        assert_eq!(s.dims[2].items, vec![SweepItem::Scalar(PExpr::Const(16))]);
+        assert!(s.when.is_some());
+        assert_eq!(s.cap.unwrap().node, 100);
+        // duplicates, bad values, and a second [sweep] all error
+        assert!(parse("[sweep]\nr = 1\nr = 2\n").is_err());
+        assert!(parse("[sweep]\nwhen = 3\n").is_err());
+        assert!(parse("[sweep]\ncap = \"x\"\n").is_err());
+        assert!(parse("[sweep]\nr = [\"a\"]\n").is_err());
+        assert!(parse("[sweep]\nr = 1\n[sweep]\nc = 2\n").is_err());
+        assert!(parse("[sweep]\nr = \"\"\n").is_err());
+        assert!(parse("[sweep]\nr = \"1..2..3\"\n").is_err());
+    }
+
+    #[test]
+    fn sweep_items_respect_call_commas() {
+        let items = parse_sweep_items("max(2, 4), 8, cdiv(n, 2)..n", Span::default()).unwrap();
+        assert_eq!(items.len(), 3);
+        assert!(matches!(&items[0], SweepItem::Scalar(PExpr::Call(..))));
+        assert!(matches!(&items[2], SweepItem::Range { step: None, .. }));
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //!   ranges, out-of-range numeric attributes, execute stages unreachable
 //!   from the fetch stage, (warning) cyclic forward graphs;
 //! - the `[mapper]` binding: unknown family, missing family parameters.
+//!
+//! `[sweep]` diagnostics (unknown swept parameters, empty dimensions,
+//! combinatorial blow-ups, guard name resolution) are reported during
+//! expansion — see `expand_sweep` in [`super::compile`] — because they
+//! need the template-level AST, which the flattened form no longer has.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 
@@ -416,17 +421,18 @@ pub fn validate(flat: &Flat) -> Vec<Diagnostic> {
             "no [mapper] section; the description can be checked but not estimated",
         )),
         Some(family) => {
-            let required: &[&str] = match family.node.as_str() {
-                "scalar" => &["rows", "cols"],
-                "tensor_op" => &["array_dim"],
-                "gemm_tile" => &["dim"],
-                "plasticine" => &["rows", "cols", "tile"],
-                other => {
+            // required parameters come from the shared family table
+            // (`compile::MAPPER_FAMILIES`) so validation, binding, and the
+            // sweep checks can never disagree
+            let required: &[&str] = match super::compile::family_params(&family.node) {
+                Some((required, _)) => required,
+                None => {
                     diags.push(Diagnostic::error(
                         family.span,
                         format!(
-                            "unknown mapper family `{other}` \
-                             (scalar|tensor_op|gemm_tile|plasticine)"
+                            "unknown mapper family `{}` \
+                             (scalar|tensor_op|gemm_tile|plasticine)",
+                            family.node
                         ),
                     ));
                     &[]

@@ -1,29 +1,30 @@
-//! Design-space exploration driver (paper §7.4, Fig. 15).
+//! Legacy Plasticine design-space exploration API — now a compatibility
+//! shim over the architecture-generic [`crate::dse`] subsystem.
 //!
-//! Sweeps Plasticine-derived architecture parameters (rows × cols × PCU
-//! GEMM tile size) against a set of networks in two phases:
-//!
-//! 1. **Roofline pre-filter** — every design point's per-layer refined
-//!    roofline estimate, batched through the AOT-compiled XLA estimator
-//!    ([`crate::runtime::RooflineExec`]) when available (native mirror
-//!    otherwise). Milliseconds for thousands of points.
-//! 2. **Accurate pass** — the surviving fraction gets full AIDG fixed-point
-//!    estimates on the worker pool.
-//!
-//! This is the loop the paper motivates: exclude designs that cannot win
-//! *before* paying for accurate estimation, and never write RTL for any of
-//! them.
+//! The original driver hardcoded a Plasticine rows × cols × tile grid.
+//! [`DseSpec`]/[`DsePoint`]/[`explore`] keep that exact surface (and
+//! cycle-identical results: candidates still instantiate the hand-built
+//! [`crate::accel::Plasticine`] model), but the two-phase flow — roofline
+//! pre-filter, locality-scheduled accurate pass — runs through
+//! [`crate::dse::explore_candidates`] like any described sweep.
+//! [`DseSpec::to_sweep_description`] renders the equivalent `[sweep]`
+//! space over `arch/plasticine_3x6.toml`; `rust/tests/dse_generic.rs` pins
+//! the two grids cycle-for-cycle.
+
+use crate::aidg::FixedPointConfig;
+use crate::dse::{explore_candidates, CandidateArch, Schedule, SweepOptions};
+use crate::engine::EstimationEngine;
 
 use crate::accel::PlasticineConfig;
-use crate::aidg::FixedPointConfig;
-use crate::baselines::roofline::{roofline_cycles, LayerFeatures};
-
 use crate::Result;
 
-use super::job::{Arch, EstimateRequest};
+use super::job::Arch;
 use super::pool::Pool;
 
-/// The swept parameter grid.
+pub use crate::dse::RooflineBackend;
+
+/// The swept Plasticine parameter grid (legacy spelling of a `[sweep]`
+/// space over `arch/plasticine_3x6.toml`).
 #[derive(Debug, Clone)]
 pub struct DseSpec {
     /// Row counts to sweep.
@@ -41,7 +42,62 @@ pub struct DseSpec {
     pub fp: FixedPointConfig,
 }
 
-/// One explored design point.
+impl DseSpec {
+    /// The grid as explorer candidates (hand-built Plasticine models, so
+    /// the shim is cycle-identical to the pre-refactor driver).
+    fn candidates(&self) -> Vec<CandidateArch> {
+        let mut cands = Vec::new();
+        for &r in &self.rows {
+            for &c in &self.cols {
+                for &t in &self.tiles {
+                    cands.push(CandidateArch {
+                        label: format!("rows={r},cols={c},tile={t}"),
+                        arch: Arch::Plasticine(PlasticineConfig::new(r, c, t)),
+                        assignment: vec![
+                            ("rows".into(), r as i64),
+                            ("cols".into(), c as i64),
+                            ("tile".into(), t as i64),
+                        ],
+                    });
+                }
+            }
+        }
+        cands
+    }
+
+    /// Compile this grid to the equivalent described `[sweep]` space: the
+    /// shipped `arch/plasticine_3x6.toml` with its `[sweep]` replaced by
+    /// the spec's rows/cols/tiles lists.
+    pub fn to_sweep_description(&self) -> Result<crate::acadl::text::Description> {
+        use crate::acadl::text::ast::{Span, Spanned, Sweep, SweepDim, SweepItem};
+        use crate::acadl::text::PExpr;
+        let src = include_str!("../../../arch/plasticine_3x6.toml");
+        let mut desc = crate::acadl::text::parse(src)
+            .map_err(|d| anyhow::anyhow!("{}", d.render("arch/plasticine_3x6.toml")))?;
+        let dim = |name: &str, values: &[u32]| SweepDim {
+            name: Spanned::bare(name.to_string()),
+            items: values
+                .iter()
+                .map(|&v| SweepItem::Scalar(PExpr::Const(v as i64)))
+                .collect(),
+            span: Span::default(),
+        };
+        desc.sweep = Some(Sweep {
+            dims: vec![
+                dim("rows", &self.rows),
+                dim("cols", &self.cols),
+                dim("tile", &self.tiles),
+            ],
+            when: None,
+            cap: None,
+            span: Span::default(),
+        });
+        Ok(desc)
+    }
+}
+
+/// One explored design point (legacy projection of
+/// [`crate::dse::SweepPoint`]).
 #[derive(Debug, Clone)]
 pub struct DsePoint {
     /// Array rows.
@@ -56,106 +112,45 @@ pub struct DsePoint {
     pub aidg_cycles: Option<u64>,
 }
 
-/// Roofline batch source: XLA executable or the native mirror.
-pub enum RooflineBackend {
-    /// Batched through the AOT XLA executable.
-    Xla(crate::runtime::RooflineExec),
-    /// The native Rust mirror.
-    Native,
-}
-
-impl RooflineBackend {
-    /// Load the XLA backend, falling back to the native mirror when the
-    /// artifacts are not built.
-    pub fn auto() -> Self {
-        match crate::runtime::RooflineExec::load() {
-            Ok(x) => RooflineBackend::Xla(x),
-            Err(_) => RooflineBackend::Native,
-        }
-    }
-
-    fn estimate(
-        &self,
-        layers: &[LayerFeatures],
-        hw: &crate::baselines::roofline::HwFeatures,
-    ) -> Result<Vec<f64>> {
-        match self {
-            RooflineBackend::Xla(x) => x.estimate(layers, hw),
-            RooflineBackend::Native => {
-                Ok(layers.iter().map(|l| roofline_cycles(l, hw)).collect())
-            }
-        }
-    }
-}
-
 /// Run the exploration. Returns every grid point with its roofline estimate
 /// and (for survivors) its AIDG estimate, sorted best-AIDG-first where
-/// available. The accurate pass runs through the worker pool and the global
-/// estimation engine, so repeated kernel shapes within each design point's
-/// network are priced once per point.
+/// available — the exact pre-refactor contract, served by the generic
+/// explorer (global engine, locality-scheduled accurate pass).
 pub fn explore(spec: &DseSpec, pool: &Pool, backend: &RooflineBackend) -> Result<Vec<DsePoint>> {
     let net = super::job::resolve_network(&spec.network)?;
-
-    // ---- phase 1: roofline everything --------------------------------------
-    let mut points: Vec<DsePoint> = Vec::new();
-    let mut configs: Vec<PlasticineConfig> = Vec::new();
-    for &r in &spec.rows {
-        for &c in &spec.cols {
-            for &t in &spec.tiles {
-                let cfg = PlasticineConfig::new(r, c, t);
-                let arch = Arch::Plasticine(cfg);
-                let mapper = match arch.mapper() {
-                    Ok(m) => m,
-                    Err(_) => continue, // degenerate grid (e.g. 1×1)
-                };
-                let mapped = mapper.map_network(&net)?;
-                let feats: Vec<LayerFeatures> = net
-                    .layers
+    let opts = SweepOptions {
+        keep_frac: spec.keep_frac,
+        fp: spec.fp,
+        schedule: Schedule::Locality,
+    };
+    let outcome = explore_candidates(
+        spec.candidates(),
+        &net,
+        &opts,
+        pool,
+        backend,
+        EstimationEngine::global(),
+    )?;
+    Ok(outcome
+        .points
+        .into_iter()
+        .map(|p| {
+            let field = |name: &str| {
+                p.assignment
                     .iter()
-                    .zip(&mapped)
-                    .filter(|(_, m)| !m.fused)
-                    .map(|(l, m)| LayerFeatures::from_mapping(l, m))
-                    .collect();
-                let hw = mapper.hw_features();
-                let cycles = backend.estimate(&feats, &hw)?;
-                points.push(DsePoint {
-                    rows: r,
-                    cols: c,
-                    tile: t,
-                    roofline_cycles: cycles.iter().sum(),
-                    aidg_cycles: None,
-                });
-                configs.push(cfg);
+                    .find(|(n, _)| n == name)
+                    .map(|(_, v)| *v as u32)
+                    .unwrap_or_default()
+            };
+            DsePoint {
+                rows: field("rows"),
+                cols: field("cols"),
+                tile: field("tile"),
+                roofline_cycles: p.roofline_cycles,
+                aidg_cycles: p.aidg_cycles,
             }
-        }
-    }
-
-    // ---- phase 2: accurate AIDG on the survivors ----------------------------
-    let keep = ((points.len() as f64 * spec.keep_frac).ceil() as usize).clamp(1, points.len());
-    let mut order: Vec<usize> = (0..points.len()).collect();
-    order.sort_by(|&a, &b| points[a].roofline_cycles.total_cmp(&points[b].roofline_cycles));
-    let survivors: Vec<usize> = order.into_iter().take(keep).collect();
-
-    let reqs: Vec<EstimateRequest> = survivors
-        .iter()
-        .map(|&i| EstimateRequest {
-            arch: Arch::Plasticine(configs[i]),
-            network: spec.network.clone(),
-            fp: spec.fp,
         })
-        .collect();
-    let results = pool.run_all(reqs);
-    for (&i, r) in survivors.iter().zip(results) {
-        points[i].aidg_cycles = Some(r?.total_cycles());
-    }
-
-    points.sort_by(|a, b| match (a.aidg_cycles, b.aidg_cycles) {
-        (Some(x), Some(y)) => x.cmp(&y),
-        (Some(_), None) => std::cmp::Ordering::Less,
-        (None, Some(_)) => std::cmp::Ordering::Greater,
-        (None, None) => a.roofline_cycles.total_cmp(&b.roofline_cycles),
-    });
-    Ok(points)
+        .collect())
 }
 
 #[cfg(test)]
@@ -197,5 +192,25 @@ mod tests {
         let pool = Pool::new(2);
         let points = explore(&spec, &pool, &RooflineBackend::Native).unwrap();
         assert!(points.iter().all(|p| p.aidg_cycles.is_some()));
+    }
+
+    #[test]
+    fn spec_renders_an_equivalent_sweep_description() {
+        let spec = DseSpec {
+            rows: vec![2, 3],
+            cols: vec![4],
+            tiles: vec![8, 16],
+            network: "tc_resnet8".into(),
+            keep_frac: 1.0,
+            fp: FixedPointConfig::default(),
+        };
+        let desc = spec.to_sweep_description().unwrap();
+        let space =
+            crate::dse::SweepSpace::from_description(desc, "plasticine-shim", None).unwrap();
+        assert_eq!(space.len_bound(), 4);
+        let labels: Vec<String> =
+            space.candidates().map(|c| c.unwrap().label()).collect();
+        assert_eq!(labels[0], "rows=2,cols=4,tile=8");
+        assert_eq!(labels.len(), 4);
     }
 }

@@ -1,9 +1,8 @@
 //! The estimation coordinator: request/response types, the generic worker
-//! pool, the design-space-exploration driver (roofline pre-filter through
-//! the AOT XLA estimator → accurate AIDG pass), and the line-based request
-//! server. All estimation paths route through the unified engine
-//! ([`crate::engine`]); [`estimate_network`] remains as the uncached
-//! reference implementation.
+//! pool, the legacy Plasticine DSE shim (the generic explorer lives in
+//! [`crate::dse`]), and the line-based request server. All estimation
+//! paths route through the unified engine ([`crate::engine`]);
+//! [`estimate_network`] remains as the uncached reference implementation.
 //!
 //! Both sides of a request are spec strings: [`parse_arch`] resolves
 //! architectures (builders, `file:<path>` descriptions, inline `@name`

@@ -30,7 +30,14 @@
 //!                                `end`, then register it as `@<name>`
 //! network describe <name>        read network description lines until
 //!                                `end`, then register it as `@<name>`
-//! stats                          engine cache/dedup counters, one line
+//! sweep <arch> <network> [keep=F] [cap=N]
+//!                                explore the architecture's [sweep] space
+//!                                (file:<path> or @described), one summary
+//!                                line
+//! frontier                       the last sweep's Pareto frontier: one
+//!                                header line, then one `point` line each
+//! stats                          engine cache/dedup + dse counters, one
+//!                                line
 //! quit                           stop serving
 //! ```
 //!
@@ -150,6 +157,10 @@ pub fn serve_with(
     let mut served = 0;
     let mut inline_archs: HashMap<String, DescribedArch> = HashMap::new();
     let mut inline_nets: HashMap<String, DescribedNet> = HashMap::new();
+    let mut last_sweep: Option<crate::dse::SweepOutcome> = None;
+    // loaded on the first `sweep` command, then shared by the session —
+    // re-probing the XLA artifacts per request would be pure waste
+    let mut roofline: Option<crate::dse::RooflineBackend> = None;
     let mut lines = input.lines();
     while let Some(line) = lines.next() {
         let line = line?;
@@ -183,7 +194,8 @@ pub fn serve_with(
             served += 1;
             continue;
         }
-        match serve_line(line, &inline_archs, &inline_nets, &pool) {
+        match serve_line(line, &inline_archs, &inline_nets, &pool, &mut last_sweep, &mut roofline)
+        {
             Ok(msg) => writeln!(output, "{msg}")?,
             Err(e) => writeln!(output, "error: {e:#}")?,
         }
@@ -226,6 +238,8 @@ fn serve_line(
     inline_archs: &HashMap<String, DescribedArch>,
     inline_nets: &HashMap<String, DescribedNet>,
     pool: &Pool,
+    last_sweep: &mut Option<crate::dse::SweepOutcome>,
+    roofline: &mut Option<crate::dse::RooflineBackend>,
 ) -> Result<String> {
     let mut it = line.split_whitespace();
     match it.next() {
@@ -275,6 +289,106 @@ fn serve_line(
                 e.runtime.as_millis()
             ))
         }
+        Some("sweep") => {
+            let spec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
+            let netspec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
+            let mut keep = 1.0f64;
+            let mut cap: Option<usize> = None;
+            for extra in it {
+                if let Some(v) = extra.strip_prefix("keep=") {
+                    keep = v.parse().with_context(|| format!("bad keep= value {v:?}"))?;
+                } else if let Some(v) = extra.strip_prefix("cap=") {
+                    cap =
+                        Some(v.parse().with_context(|| format!("bad cap= value {v:?}"))?);
+                } else {
+                    bail!("unknown sweep option {extra:?} (keep=F | cap=N)");
+                }
+            }
+            let (src, origin) = match spec.strip_prefix('@') {
+                Some(name) => {
+                    let d = inline_archs.get(name).with_context(|| {
+                        format!("no described architecture @{name} (use `describe {name}`)")
+                    })?;
+                    match &d.source {
+                        super::job::ArchSource::Inline { text, .. } => {
+                            (text.to_string(), format!("@{name}"))
+                        }
+                        super::job::ArchSource::File(p) => (
+                            std::fs::read_to_string(p).with_context(|| {
+                                format!("reading architecture description {}", p.display())
+                            })?,
+                            p.display().to_string(),
+                        ),
+                    }
+                }
+                None => match spec.strip_prefix("file:") {
+                    Some(path) if !path.is_empty() => (
+                        std::fs::read_to_string(path).with_context(|| {
+                            format!("reading architecture description {path}")
+                        })?,
+                        path.to_string(),
+                    ),
+                    _ => bail!(
+                        "sweep needs a described architecture (file:<path> or @name) — \
+                         builder specs have no [sweep] section"
+                    ),
+                },
+            };
+            let space = crate::dse::SweepSpace::from_source(&src, &origin, cap)?;
+            let net = match netspec.strip_prefix('@') {
+                Some(name) => inline_nets
+                    .get(name)
+                    .with_context(|| {
+                        format!("no described network @{name} (use `network describe {name}`)")
+                    })?
+                    .network()?,
+                None => resolve_network(netspec)?,
+            };
+            let opts = crate::dse::SweepOptions { keep_frac: keep, ..Default::default() };
+            let backend = roofline.get_or_insert_with(crate::dse::RooflineBackend::auto);
+            let outcome = crate::dse::explore_space(
+                &space,
+                &net,
+                &opts,
+                pool,
+                backend,
+                EstimationEngine::global(),
+            )?;
+            let best = outcome.points.first();
+            let line = format!(
+                "sweep {origin} {} enumerated={} skipped={} estimated={} frontier={} \
+                 best={} best_cycles={} hit_rate={:.4} wall_ms={}",
+                net.name,
+                outcome.enumerated,
+                outcome.skipped,
+                outcome.estimated,
+                outcome.frontier().len(),
+                best.map(|p| p.label.clone()).unwrap_or_else(|| "-".into()),
+                best.and_then(|p| p.aidg_cycles).unwrap_or(0),
+                outcome.warm_hit_rate(),
+                outcome.wall.as_millis(),
+            );
+            *last_sweep = Some(outcome);
+            Ok(line)
+        }
+        Some("frontier") => {
+            let outcome = last_sweep
+                .as_ref()
+                .context("no sweep has run yet (run `sweep <arch> <network>` first)")?;
+            let frontier = outcome.frontier();
+            let mut out = format!("frontier points={}", frontier.len());
+            for p in frontier {
+                out.push_str(&format!(
+                    "\npoint {} arch={} cycles={} pe={} mem_words={}",
+                    p.label,
+                    p.arch_name,
+                    p.aidg_cycles.unwrap_or(0),
+                    p.pe_count,
+                    p.mem_words
+                ));
+            }
+            Ok(out)
+        }
         Some("stats") => {
             let s = EstimationEngine::global().stats();
             let mut line = format!(
@@ -302,7 +416,10 @@ fn serve_line(
             Ok(line)
         }
         Some(cmd) => {
-            bail!("unknown command {cmd:?} (estimate|describe|network describe|stats|quit)")
+            bail!(
+                "unknown command {cmd:?} \
+                 (estimate|describe|network describe|sweep|frontier|stats|quit)"
+            )
         }
         None => bail!("empty command"),
     }
@@ -403,6 +520,40 @@ mod tests {
         );
         assert!(lines[2].starts_with("stats "), "{}", lines[2]);
         assert!(lines[2].contains("cache_entries="), "{}", lines[2]);
+    }
+
+    #[test]
+    fn serve_sweep_and_frontier_commands() {
+        let input = "frontier\n\
+                     sweep ultratrail tc_resnet8\n\
+                     sweep file:arch/ultratrail_8x8.toml tc_resnet8 keep=1.0\n\
+                     frontier\n\
+                     sweep file:arch/ultratrail_8x8.toml tc_resnet8 keep=bogus\n\
+                     stats\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 6);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // frontier before any sweep, and builder specs, are clean errors
+        assert!(lines[0].contains("no sweep has run yet"), "{}", lines[0]);
+        assert!(lines[1].contains("builder specs have no [sweep]"), "{}", lines[1]);
+        assert!(lines[2].starts_with("sweep arch/ultratrail_8x8.toml tc_resnet8"), "{}", lines[2]);
+        assert!(lines[2].contains("estimated="), "{}", lines[2]);
+        assert!(lines[2].contains("best=array_dim="), "{}", lines[2]);
+        // frontier: header + one line per point
+        assert!(lines[3].starts_with("frontier points="), "{}", lines[3]);
+        let n: usize = lines[3].split('=').next_back().unwrap().parse().unwrap();
+        assert!(n >= 1);
+        for p in &lines[4..4 + n] {
+            assert!(p.starts_with("point array_dim="), "{p}");
+            assert!(p.contains("cycles="), "{p}");
+        }
+        assert!(lines[4 + n].contains("bad keep= value"), "{}", lines[4 + n]);
+        // stats surfaces the dse counters
+        let stats = lines[5 + n];
+        assert!(stats.contains("dse_points_enumerated="), "{stats}");
+        assert!(stats.contains("dse_points_estimated="), "{stats}");
     }
 
     #[test]

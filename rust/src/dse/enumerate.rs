@@ -1,0 +1,144 @@
+//! Lazy candidate enumeration over a [`SweepSpace`].
+//!
+//! Order is deterministic: row-major over the dimensions in declaration
+//! order, the **last dimension varying fastest** (the natural reading of
+//! nested loops, and the order `rust/tests/dse_generic.rs` pins).
+//! `when`-guarded combinations are skipped without being materialized, so
+//! a huge grid with a narrow guard still enumerates lazily; the
+//! combinatorial cap was already enforced when the space compiled.
+
+use crate::Result;
+
+use super::space::{Candidate, SweepSpace};
+
+/// Lazy iterator over a sweep space's surviving candidates.
+pub struct CandidateIter<'a> {
+    space: &'a SweepSpace,
+    /// Per-dimension value cursor; `None` once exhausted.
+    idx: Option<Vec<usize>>,
+}
+
+impl SweepSpace {
+    /// Enumerate the space's candidates (guards applied) in deterministic
+    /// row-major order. Items are `Err` only when the `when` guard itself
+    /// fails to evaluate (e.g. division by zero at a specific assignment).
+    pub fn candidates(&self) -> CandidateIter<'_> {
+        CandidateIter { space: self, idx: Some(vec![0; self.sweep.dims.len()]) }
+    }
+}
+
+impl CandidateIter<'_> {
+    /// Advance the cursor one step (row-major); `false` at the end.
+    fn advance(idx: &mut [usize], sizes: &[usize]) -> bool {
+        for d in (0..idx.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < sizes[d] {
+                return true;
+            }
+            idx[d] = 0;
+        }
+        false
+    }
+}
+
+impl Iterator for CandidateIter<'_> {
+    type Item = Result<Candidate>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let sweep = &self.space.sweep;
+        let sizes: Vec<usize> = sweep.dims.iter().map(|d| d.values.len()).collect();
+        loop {
+            let idx = self.idx.as_mut()?;
+            let assignment: Vec<(String, i64)> = sweep
+                .dims
+                .iter()
+                .zip(idx.iter())
+                .map(|(d, &i)| (d.name.clone(), d.values[i]))
+                .collect();
+            if !Self::advance(idx, &sizes) {
+                self.idx = None;
+            }
+            if let Some(w) = &sweep.when {
+                let lookup = |n: &str| {
+                    assignment
+                        .iter()
+                        .find(|(name, _)| name == n)
+                        .map(|(_, v)| *v)
+                        .or_else(|| self.space.params().get(n).copied())
+                };
+                match w.node.eval(&lookup) {
+                    Ok(0) => continue,
+                    Ok(_) => {}
+                    Err(msg) => {
+                        let c = Candidate { assignment };
+                        return Some(Err(anyhow::anyhow!(
+                            "sweep guard failed at {}: {msg}",
+                            c.label()
+                        )));
+                    }
+                }
+            }
+            return Some(Ok(Candidate { assignment }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SWEPT: &str = r#"
+[arch]
+name = "t${rows}x${cols}"
+
+[params]
+rows = 2
+cols = 2
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = 1
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 1
+
+[sweep]
+rows = "2, 4"
+cols = "2..7 step 2"
+when = "rows <= cols"
+"#;
+
+    #[test]
+    fn enumeration_is_row_major_guarded_and_deterministic() {
+        let space = SweepSpace::from_source(SWEPT, "inline", None).unwrap();
+        let labels = |space: &SweepSpace| -> Vec<String> {
+            space.candidates().map(|c| c.unwrap().label()).collect()
+        };
+        let first = labels(&space);
+        // cols varies fastest; rows=4/cols=2 is guarded out
+        assert_eq!(
+            first,
+            vec![
+                "rows=2,cols=2",
+                "rows=2,cols=4",
+                "rows=2,cols=6",
+                "rows=4,cols=4",
+                "rows=4,cols=6",
+            ]
+        );
+        assert_eq!(first, labels(&space), "enumeration must be deterministic");
+    }
+
+    #[test]
+    fn guard_eval_errors_surface_per_candidate() {
+        let src = SWEPT.replace("rows <= cols", "rows / (cols - 2) >= 0");
+        let space = SweepSpace::from_source(&src, "inline", None).unwrap();
+        let results: Vec<Result<Candidate>> = space.candidates().collect();
+        // cols=2 assignments divide by zero; the others still enumerate
+        assert!(results.iter().any(|r| r.is_err()));
+        assert!(results.iter().any(|r| r.is_ok()));
+        let msg = format!("{:#}", results[0].as_ref().unwrap_err());
+        assert!(msg.contains("sweep guard failed at rows=2,cols=2"), "{msg}");
+    }
+}

@@ -1,0 +1,76 @@
+//! Pareto-frontier extraction over explored design points.
+//!
+//! The paper's Fig. 15 ranks designs by estimated cycles alone; real
+//! pre-RTL exploration trades cycles against cost. We report the frontier
+//! of (cycles, PE count, memory words): a point is dominated when another
+//! point is no worse on every axis and strictly better on at least one.
+//! Only points that received an accurate (AIDG) estimate participate —
+//! pre-filtered points are never reported as winners.
+
+use super::SweepPoint;
+
+/// Mark `on_frontier` on every point: true iff the point has an accurate
+/// estimate and no other estimated point dominates it on
+/// (cycles, PE count, memory words). O(n²), deterministic.
+pub fn mark_frontier(points: &mut [SweepPoint]) {
+    let axes: Vec<Option<(u64, u64, u64)>> = points
+        .iter()
+        .map(|p| p.aidg_cycles.map(|c| (c, p.pe_count, p.mem_words)))
+        .collect();
+    for i in 0..points.len() {
+        points[i].on_frontier = match axes[i] {
+            None => false,
+            Some(a) => !axes
+                .iter()
+                .enumerate()
+                .any(|(j, b)| j != i && b.is_some_and(|b| dominates(b, a))),
+        };
+    }
+}
+
+/// True when `a` is no worse than `b` on every axis and strictly better on
+/// at least one (all axes minimized). Equal points do not dominate each
+/// other, so ties stay on the frontier together.
+fn dominates(a: (u64, u64, u64), b: (u64, u64, u64)) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && a.2 <= b.2 && (a.0 < b.0 || a.1 < b.1 || a.2 < b.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(cycles: Option<u64>, pe: u64, mem: u64) -> SweepPoint {
+        SweepPoint {
+            label: String::new(),
+            assignment: Vec::new(),
+            arch_name: String::new(),
+            digest: 0,
+            pe_count: pe,
+            mem_words: mem,
+            roofline_cycles: 0.0,
+            aidg_cycles: cycles,
+            on_frontier: false,
+        }
+    }
+
+    #[test]
+    fn frontier_keeps_tradeoffs_drops_dominated() {
+        let mut pts = vec![
+            point(Some(100), 4, 10),  // fast but big
+            point(Some(200), 2, 10),  // slower but half the PEs
+            point(Some(250), 4, 10),  // dominated by the first
+            point(Some(100), 4, 10),  // exact tie with the first: kept
+            point(None, 1, 1),        // never estimated: off-frontier
+        ];
+        mark_frontier(&mut pts);
+        let on: Vec<bool> = pts.iter().map(|p| p.on_frontier).collect();
+        assert_eq!(on, vec![true, true, false, true, false]);
+    }
+
+    #[test]
+    fn single_estimated_point_is_the_frontier() {
+        let mut pts = vec![point(Some(5), 1, 1)];
+        mark_frontier(&mut pts);
+        assert!(pts[0].on_frontier);
+    }
+}

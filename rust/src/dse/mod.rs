@@ -1,0 +1,393 @@
+//! Architecture-generic design-space exploration (paper §7.4, Fig. 15).
+//!
+//! The paper's end goal is pre-RTL exploration: exclude losing accelerator
+//! designs with cheap estimates *before* paying for accurate ones — and
+//! never write RTL for any of them. Related work (ANNETTE's mixed models,
+//! the "performance representatives" benchmarking line) reaches the same
+//! conclusion: a small number of representative evaluations can rank large
+//! design spaces. This module turns that loop architecture-generic:
+//!
+//! 1. **Space** ([`space`]) — any described architecture (`arch/*.toml`)
+//!    declares its design space in a `[sweep]` section over its own
+//!    `${}`/`[params]` template parameters; the space compiles with spanned
+//!    diagnostics and a combinatorial cap.
+//! 2. **Enumerate** ([`enumerate`]) — candidates stream out lazily in
+//!    deterministic row-major order, `when` guards applied.
+//! 3. **Pre-filter** — every candidate gets a whole-network refined
+//!    roofline estimate ([`RooflineBackend`], XLA-batched when artifacts
+//!    are built); only the best `keep_frac` survive.
+//! 4. **Schedule** ([`schedule`]) — survivors are ordered to maximize
+//!    [`KernelKey`](crate::engine::KernelKey) reuse: candidates whose swept
+//!    parameters leave `Diagram::content_digest`-relevant structure
+//!    unchanged are grouped adjacently so the LRU-bounded estimate cache
+//!    stays warm across thousands of design points.
+//! 5. **Accurate pass + frontier** ([`frontier`]) — survivors get full
+//!    AIDG fixed-point estimates through the engine + worker pool, and the
+//!    Pareto frontier of (cycles, PE count, memory words) is marked for
+//!    reporting through [`crate::report`].
+//!
+//! The legacy Plasticine grid API lives on in [`crate::coordinator::dse`]
+//! as a compatibility shim over [`explore_candidates`].
+
+pub mod enumerate;
+pub mod frontier;
+pub mod schedule;
+pub mod space;
+
+use std::time::{Duration, Instant};
+
+use crate::baselines::roofline::{roofline_cycles, LayerFeatures};
+use crate::coordinator::job::{Arch, EstimateStats};
+use crate::coordinator::pool::Pool;
+use crate::dnn::Network;
+use crate::engine::{ArchDigest, EstimationEngine};
+use crate::metrics::counters;
+use crate::Result;
+
+pub use enumerate::CandidateIter;
+pub use frontier::mark_frontier;
+pub use schedule::{plan_order, Schedule};
+pub use space::{Candidate, SweepSpace};
+
+/// Roofline batch source: XLA executable or the native mirror.
+pub enum RooflineBackend {
+    /// Batched through the AOT XLA executable.
+    Xla(crate::runtime::RooflineExec),
+    /// The native Rust mirror.
+    Native,
+}
+
+impl RooflineBackend {
+    /// Load the XLA backend, falling back to the native mirror when the
+    /// artifacts are not built.
+    pub fn auto() -> Self {
+        match crate::runtime::RooflineExec::load() {
+            Ok(x) => RooflineBackend::Xla(x),
+            Err(_) => RooflineBackend::Native,
+        }
+    }
+
+    /// Estimate a batch of layers on one hardware configuration.
+    pub fn estimate(
+        &self,
+        layers: &[LayerFeatures],
+        hw: &crate::baselines::roofline::HwFeatures,
+    ) -> Result<Vec<f64>> {
+        match self {
+            RooflineBackend::Xla(x) => x.estimate(layers, hw),
+            RooflineBackend::Native => {
+                Ok(layers.iter().map(|l| roofline_cycles(l, hw)).collect())
+            }
+        }
+    }
+}
+
+/// Exploration knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepOptions {
+    /// Fraction of candidates surviving the roofline pre-filter into the
+    /// accurate pass (1.0 = estimate everything, as Fig. 15 plots).
+    pub keep_frac: f64,
+    /// Fixed-point estimator configuration.
+    pub fp: crate::aidg::FixedPointConfig,
+    /// Accurate-pass ordering (default: cache-locality grouping).
+    pub schedule: Schedule,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        Self {
+            keep_frac: 1.0,
+            fp: crate::aidg::FixedPointConfig::default(),
+            schedule: Schedule::Locality,
+        }
+    }
+}
+
+/// One candidate ready to estimate: a display label, the instantiable
+/// architecture, and the sweep assignment that produced it.
+pub struct CandidateArch {
+    /// Compact `rows=4,cols=8` label.
+    pub label: String,
+    /// The architecture (described candidates compile through the global
+    /// registry; the legacy shim passes hand builders).
+    pub arch: Arch,
+    /// `(param, value)` pairs in dimension order.
+    pub assignment: Vec<(String, i64)>,
+}
+
+/// One explored design point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Compact assignment label (`rows=4,cols=8`).
+    pub label: String,
+    /// The sweep assignment in dimension order.
+    pub assignment: Vec<(String, i64)>,
+    /// Compiled architecture name (e.g. `systolic4x8`).
+    pub arch_name: String,
+    /// Structural architecture digest
+    /// ([`crate::acadl::Diagram::content_digest`]) — the
+    /// locality-scheduling group key.
+    pub digest: u64,
+    /// Functional-unit count (PE cost proxy).
+    pub pe_count: u64,
+    /// Total memory words claimed (memory cost proxy).
+    pub mem_words: u64,
+    /// Whole-network refined-roofline cycles (phase 1).
+    pub roofline_cycles: f64,
+    /// Whole-network AIDG cycles (phase 2; `None` if pre-filtered out).
+    pub aidg_cycles: Option<u64>,
+    /// On the Pareto frontier of (cycles, PE count, memory words).
+    pub on_frontier: bool,
+}
+
+/// The result of one exploration: every point (survivors sorted
+/// best-AIDG-first, then pre-filtered points by roofline) plus run-level
+/// accounting.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// Explored points, best first.
+    pub points: Vec<SweepPoint>,
+    /// Candidates enumerated (including unmappable ones).
+    pub enumerated: u64,
+    /// Candidates skipped because the architecture could not be
+    /// instantiated (e.g. degenerate grids) or their guard failed to
+    /// evaluate at that assignment.
+    pub skipped: u64,
+    /// Candidates that received an accurate AIDG estimate.
+    pub estimated: u64,
+    /// Aggregate engine accounting over the accurate pass.
+    pub stats: EstimateStats,
+    /// Wall time of the whole exploration.
+    pub wall: Duration,
+}
+
+impl SweepOutcome {
+    /// Fraction of kernel slots in the accurate pass served from the
+    /// cross-candidate estimate cache (the locality scheduler's win; 0.0
+    /// when nothing was estimated).
+    pub fn warm_hit_rate(&self) -> f64 {
+        self.stats.cache_hits as f64 / self.stats.total_kernels.max(1) as f64
+    }
+
+    /// Fraction of kernel slots reused from *anywhere* (cache or
+    /// intra-candidate dedup).
+    pub fn reuse_rate(&self) -> f64 {
+        (self.stats.cache_hits + self.stats.deduped) as f64
+            / self.stats.total_kernels.max(1) as f64
+    }
+
+    /// Points on the Pareto frontier, best-cycles-first.
+    pub fn frontier(&self) -> Vec<&SweepPoint> {
+        self.points.iter().filter(|p| p.on_frontier).collect()
+    }
+}
+
+/// Explore a compiled sweep space against one network: enumerate, roofline
+/// pre-filter, locality-schedule, accurately estimate, and mark the Pareto
+/// frontier.
+pub fn explore_space(
+    space: &SweepSpace,
+    net: &Network,
+    opts: &SweepOptions,
+    pool: &Pool,
+    backend: &RooflineBackend,
+    engine: &EstimationEngine,
+) -> Result<SweepOutcome> {
+    let mut cands = Vec::new();
+    let mut guard_failures = 0u64;
+    let mut first_guard_err: Option<anyhow::Error> = None;
+    for c in space.candidates() {
+        match c {
+            Ok(c) => cands.push(CandidateArch {
+                label: c.label(),
+                arch: space.candidate_arch(&c),
+                assignment: c.assignment,
+            }),
+            Err(e) => {
+                // a guard that fails at one assignment (e.g. divides by
+                // zero there) excludes that point, not the whole sweep —
+                // it surfaces through the skipped count
+                guard_failures += 1;
+                if first_guard_err.is_none() {
+                    first_guard_err = Some(e);
+                }
+            }
+        }
+    }
+    if cands.is_empty() {
+        if let Some(e) = first_guard_err {
+            return Err(e);
+        }
+    }
+    let mut outcome = explore_candidates(cands, net, opts, pool, backend, engine)?;
+    if guard_failures > 0 {
+        outcome.enumerated += guard_failures;
+        outcome.skipped += guard_failures;
+        counters::DSE_POINTS_ENUMERATED.add(guard_failures);
+    }
+    Ok(outcome)
+}
+
+/// [`explore_space`] over pre-built candidates (the legacy Plasticine shim
+/// and tests construct these directly).
+pub fn explore_candidates(
+    cands: Vec<CandidateArch>,
+    net: &Network,
+    opts: &SweepOptions,
+    pool: &Pool,
+    backend: &RooflineBackend,
+    engine: &EstimationEngine,
+) -> Result<SweepOutcome> {
+    anyhow::ensure!(
+        opts.keep_frac.is_finite() && (0.0..=1.0).contains(&opts.keep_frac),
+        "keep_frac must be a finite fraction in 0..=1 (got {})",
+        opts.keep_frac
+    );
+    let t0 = Instant::now();
+
+    // ---- phase 1: roofline everything ----------------------------------
+    let mut points: Vec<SweepPoint> = Vec::new();
+    let mut archs: Vec<Arch> = Vec::new();
+    let mut enumerated = 0u64;
+    let mut skipped = 0u64;
+    for cand in cands {
+        enumerated += 1;
+        counters::DSE_POINTS_ENUMERATED.add(1);
+        let mapper = match cand.arch.mapper() {
+            Ok(m) => m,
+            Err(_) => {
+                // degenerate design point (e.g. a 1×1 grid); exploration
+                // excludes it rather than failing the whole sweep
+                skipped += 1;
+                continue;
+            }
+        };
+        let mapped = mapper.map_network(net)?;
+        let feats: Vec<LayerFeatures> = net
+            .layers
+            .iter()
+            .zip(&mapped)
+            .filter(|(_, m)| !m.fused)
+            .map(|(l, m)| LayerFeatures::from_mapping(l, m))
+            .collect();
+        let hw = mapper.hw_features();
+        let cycles = backend.estimate(&feats, &hw)?;
+        let d = mapper.diagram();
+        points.push(SweepPoint {
+            label: cand.label,
+            assignment: cand.assignment,
+            arch_name: d.name.clone(),
+            digest: ArchDigest::of(d).0,
+            pe_count: d.fu_count() as u64,
+            mem_words: d.memory_words(),
+            roofline_cycles: cycles.iter().sum(),
+            aidg_cycles: None,
+            on_frontier: false,
+        });
+        archs.push(cand.arch);
+    }
+    // the funnel: enumerated (all) >= prefiltered (mappable, roofline
+    // evaluated) >= estimated (survived keep_frac into the accurate pass)
+    counters::DSE_POINTS_PREFILTERED.add(points.len() as u64);
+
+    // ---- phase 2: survivors, locality-ordered, accurately estimated ----
+    let keep =
+        ((points.len() as f64 * opts.keep_frac).ceil() as usize).clamp(1, points.len().max(1));
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| points[a].roofline_cycles.total_cmp(&points[b].roofline_cycles));
+    let survivors: Vec<usize> = order.into_iter().take(keep).collect();
+    let digests: Vec<u64> = survivors.iter().map(|&i| points[i].digest).collect();
+    let plan = plan_order(&digests, opts.schedule);
+
+    let mut stats = EstimateStats::default();
+    let mut estimated = 0u64;
+    for &s in &plan {
+        let i = survivors[s];
+        let e = engine.estimate_network_pooled(&archs[i], net, &opts.fp, pool)?;
+        points[i].aidg_cycles = Some(e.total_cycles());
+        stats.total_kernels += e.stats.total_kernels;
+        stats.unique_kernels += e.stats.unique_kernels;
+        stats.cache_hits += e.stats.cache_hits;
+        stats.deduped += e.stats.deduped;
+        stats.evaluated += e.stats.evaluated;
+        estimated += 1;
+        counters::DSE_POINTS_ESTIMATED.add(1);
+    }
+
+    // survivors best-AIDG-first, then pre-filtered points by roofline
+    points.sort_by(|a, b| match (a.aidg_cycles, b.aidg_cycles) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => a.roofline_cycles.total_cmp(&b.roofline_cycles),
+    });
+    mark_frontier(&mut points);
+    Ok(SweepOutcome { points, enumerated, skipped, estimated, stats, wall: t0.elapsed() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::PlasticineConfig;
+    use crate::engine::DEFAULT_CACHE_CAP;
+
+    fn grid_candidates() -> Vec<CandidateArch> {
+        let mut cands = Vec::new();
+        for (r, c) in [(2u32, 2u32), (2, 3), (3, 2)] {
+            cands.push(CandidateArch {
+                label: format!("rows={r},cols={c}"),
+                arch: Arch::Plasticine(PlasticineConfig::new(r, c, 8)),
+                assignment: vec![("rows".into(), r as i64), ("cols".into(), c as i64)],
+            });
+        }
+        cands
+    }
+
+    #[test]
+    fn explore_candidates_ranks_and_marks_frontier() {
+        let net = crate::dnn::zoo::tc_resnet8();
+        let pool = Pool::new(2);
+        let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+        let outcome = explore_candidates(
+            grid_candidates(),
+            &net,
+            &SweepOptions::default(),
+            &pool,
+            &RooflineBackend::Native,
+            &engine,
+        )
+        .unwrap();
+        assert_eq!(outcome.enumerated, 3);
+        assert_eq!(outcome.estimated, 3);
+        assert!(outcome.points.iter().all(|p| p.aidg_cycles.is_some()));
+        let cycles: Vec<u64> = outcome.points.iter().filter_map(|p| p.aidg_cycles).collect();
+        assert!(cycles.windows(2).all(|w| w[0] <= w[1]), "{cycles:?}");
+        assert!(!outcome.frontier().is_empty());
+        // the best-cycles point always survives dominance on the cycle axis
+        assert!(outcome.points[0].on_frontier);
+        assert!(outcome.points.iter().all(|p| p.pe_count > 0 && p.mem_words > 0));
+    }
+
+    #[test]
+    fn keep_frac_is_validated() {
+        let net = crate::dnn::zoo::tc_resnet8();
+        let pool = Pool::new(1);
+        let engine = EstimationEngine::new(16);
+        for bad in [f64::NAN, -0.1, 1.1] {
+            let opts = SweepOptions { keep_frac: bad, ..Default::default() };
+            assert!(
+                explore_candidates(
+                    grid_candidates(),
+                    &net,
+                    &opts,
+                    &pool,
+                    &RooflineBackend::Native,
+                    &engine
+                )
+                .is_err(),
+                "keep_frac {bad} must be rejected"
+            );
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Cache-locality scheduling of the accurate pass.
+//!
+//! Phase 2 estimates survivors sequentially (each one fans out at kernel
+//! granularity over the worker pool), so the *order* of candidates decides
+//! how warm the content-addressed estimate cache stays: two candidates
+//! share [`KernelKey`](crate::engine::KernelKey)s only when their diagrams
+//! digest equally (swept parameters that never touch
+//! `Diagram::content_digest`-relevant structure — name-only or
+//! mapper-binding-only params), and an LRU-bounded cache forgets a group's
+//! kernels if unrelated candidates run in between. Grouping same-digest
+//! candidates adjacently therefore maximizes the warm hit rate across
+//! thousands of design points without growing the cache.
+
+/// How to order phase-2 survivors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Group candidates by architecture digest; groups (and members within
+    /// a group) keep the roofline best-first order. The default.
+    Locality,
+    /// Keep the roofline best-first order untouched.
+    Enumerated,
+    /// Deterministic pseudo-random permutation of the given seed (the
+    /// locality baseline `rust/tests/dse_generic.rs` measures against).
+    Shuffled(u64),
+}
+
+/// Plan the estimation order over survivors with the given architecture
+/// `digests` (one per survivor, in roofline best-first order). Returns the
+/// indices in execution order. Pure and deterministic for every variant.
+pub fn plan_order(digests: &[u64], schedule: Schedule) -> Vec<usize> {
+    let n = digests.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    match schedule {
+        Schedule::Enumerated => order,
+        Schedule::Locality => {
+            // first-appearance rank of each digest; stable sort keeps the
+            // roofline order both across groups and within each group
+            let mut group_rank: Vec<(u64, usize)> = Vec::new();
+            let mut rank_of = |d: u64| -> usize {
+                if let Some(&(_, r)) = group_rank.iter().find(|(g, _)| *g == d) {
+                    return r;
+                }
+                let r = group_rank.len();
+                group_rank.push((d, r));
+                r
+            };
+            let ranks: Vec<usize> = digests.iter().map(|&d| rank_of(d)).collect();
+            order.sort_by_key(|&i| ranks[i]);
+            order
+        }
+        Schedule::Shuffled(seed) => {
+            // Fisher–Yates over an xorshift64* stream (no RNG crate in the
+            // offline image; determinism is the point anyway)
+            let mut state = seed | 1;
+            let mut next = move || {
+                state ^= state << 13;
+                state ^= state >> 7;
+                state ^= state << 17;
+                state.wrapping_mul(0x2545_F491_4F6C_DD1D)
+            };
+            for i in (1..n).rev() {
+                let j = (next() % (i as u64 + 1)) as usize;
+                order.swap(i, j);
+            }
+            order
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locality_groups_by_digest_stably() {
+        // interleaved groups A/B/A/B/A with a C tail
+        let digests = [7, 9, 7, 9, 7, 3];
+        let order = plan_order(&digests, Schedule::Locality);
+        assert_eq!(order, vec![0, 2, 4, 1, 3, 5]);
+        // enumerated keeps the input order
+        assert_eq!(plan_order(&digests, Schedule::Enumerated), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn shuffle_is_a_deterministic_permutation() {
+        let digests = [1, 2, 3, 4, 5, 6, 7];
+        let a = plan_order(&digests, Schedule::Shuffled(42));
+        let b = plan_order(&digests, Schedule::Shuffled(42));
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..7).collect::<Vec<_>>());
+        assert_ne!(a, plan_order(&digests, Schedule::Shuffled(43)));
+    }
+
+    #[test]
+    fn empty_and_singleton_orders() {
+        assert!(plan_order(&[], Schedule::Locality).is_empty());
+        assert_eq!(plan_order(&[5], Schedule::Shuffled(0)), vec![0]);
+    }
+}

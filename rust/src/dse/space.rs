@@ -1,0 +1,236 @@
+//! The compiled sweep space: a parsed architecture description plus its
+//! evaluated `[sweep]` dimensions, from which candidate architectures are
+//! rendered on demand.
+//!
+//! A candidate is an assignment of one value per sweep dimension. Its
+//! architecture is the base description with `[params]` overridden by the
+//! assignment (and the `[sweep]` section stripped), rendered back to
+//! canonical TOML — so candidates flow through the exact same
+//! [`ArchRegistry`](crate::acadl::text::ArchRegistry)-cached compile path
+//! as any other described architecture, and identical candidates share one
+//! compiled model.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context as _};
+
+use crate::acadl::text::ast::Param;
+use crate::acadl::text::compile::FlatSweep;
+use crate::acadl::text::{check_source, parse, Description, Diagnostic, Spanned};
+use crate::coordinator::{Arch, DescribedArch};
+use crate::Result;
+
+/// A compiled `[sweep]` design space over one architecture description.
+pub struct SweepSpace {
+    /// Diagnostic label of the source (file path or `@name`).
+    pub origin: String,
+    /// The base description with `[sweep]` stripped (candidates patch its
+    /// `[params]`).
+    base: Description,
+    /// Base parameter values (guard fallback for unswept params).
+    params: BTreeMap<String, i64>,
+    /// The evaluated sweep (dimensions, guard, cap).
+    pub sweep: FlatSweep,
+}
+
+/// One enumerated design point: a value per sweep dimension, in dimension
+/// declaration order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Candidate {
+    /// `(param, value)` pairs in dimension order.
+    pub assignment: Vec<(String, i64)>,
+}
+
+impl Candidate {
+    /// Compact `rows=4,cols=8` rendering (point labels in reports).
+    pub fn label(&self) -> String {
+        let parts: Vec<String> =
+            self.assignment.iter().map(|(n, v)| format!("{n}={v}")).collect();
+        parts.join(",")
+    }
+
+    /// The assigned value of `param`, if swept.
+    pub fn value(&self, param: &str) -> Option<i64> {
+        self.assignment.iter().find(|(n, _)| n == param).map(|(_, v)| *v)
+    }
+}
+
+impl SweepSpace {
+    /// Compile a sweep space from description source text. Fails with
+    /// rendered diagnostics when the description (or its `[sweep]`) has
+    /// errors, and with a clear message when there is no `[sweep]` at all.
+    /// `cap_override` replaces the description's combinatorial cap (the
+    /// CLI's `--sweep-cap`).
+    pub fn from_source(src: &str, origin: &str, cap_override: Option<usize>) -> Result<Self> {
+        let desc = match parse(src) {
+            Ok(d) => d,
+            Err(diag) => bail!("{}", diag.render(origin)),
+        };
+        // diagnose against the *original* text first so line/column numbers
+        // match the user's file (from_description re-renders the tree, which
+        // strips comments and reorders sections). The only diagnostic a cap
+        // override can change is the blow-up error, so that one is deferred
+        // to the post-override check.
+        let (_, diags) = check_source(src);
+        let errors: Vec<&Diagnostic> = diags
+            .iter()
+            .filter(|d| {
+                d.is_error()
+                    && !(cap_override.is_some() && d.message.contains("exceeding the cap"))
+            })
+            .collect();
+        if !errors.is_empty() {
+            let shown: Vec<String> = errors.iter().take(5).map(|d| d.render(origin)).collect();
+            bail!(
+                "{} error(s) in architecture description:\n{}",
+                errors.len(),
+                shown.join("\n")
+            );
+        }
+        Self::from_description(desc, origin, cap_override)
+    }
+
+    /// [`SweepSpace::from_source`] over an already-parsed description
+    /// (tests and the compatibility shim construct these directly).
+    pub fn from_description(
+        mut desc: Description,
+        origin: &str,
+        cap_override: Option<usize>,
+    ) -> Result<Self> {
+        let Some(sweep_ast) = desc.sweep.as_mut() else {
+            bail!(
+                "{origin} has no [sweep] section — declare one to run a design-space \
+                 exploration (see docs/dse.md)"
+            );
+        };
+        if let Some(cap) = cap_override {
+            anyhow::ensure!(cap >= 1, "--sweep-cap must be >= 1 (got {cap})");
+            // the override replaces the description's own cap *before*
+            // evaluation, so it can both tighten and relax the bound.
+            // Saturate instead of wrapping: a cap past i64::MAX is already
+            // unreachable (len_bound saturates at usize::MAX anyway).
+            sweep_ast.cap = Some(Spanned::bare(cap.min(i64::MAX as usize) as i64));
+        }
+        // re-render so diagnostics reflect exactly the space being built
+        // (from_description callers may have patched the parsed tree).
+        // Positions in the re-render don't correspond to any file the user
+        // can open, so cap-exceeded errors (the one class an override can
+        // introduce) are reported message-only; everything else was already
+        // span-checked against the original text by from_source.
+        let src = desc.to_toml();
+        let (flat, diags) = check_source(&src);
+        let errors: Vec<&Diagnostic> = diags.iter().filter(|d| d.is_error()).collect();
+        if !errors.is_empty() {
+            let shown: Vec<String> = errors
+                .iter()
+                .take(5)
+                .map(|d| {
+                    if d.message.contains("exceeding the cap") {
+                        format!("{origin}: {}", d.message)
+                    } else {
+                        d.render(origin)
+                    }
+                })
+                .collect();
+            bail!(
+                "{} error(s) in architecture description:\n{}",
+                errors.len(),
+                shown.join("\n")
+            );
+        }
+        let flat = flat.context("description did not parse")?;
+        let sweep = flat
+            .sweep
+            .with_context(|| format!("{origin}: [sweep] section did not evaluate"))?;
+        let mut base = desc;
+        base.sweep = None;
+        Ok(Self { origin: origin.to_string(), base, params: flat.params, sweep })
+    }
+
+    /// Base parameter values (the description's own `[params]`).
+    pub fn params(&self) -> &BTreeMap<String, i64> {
+        &self.params
+    }
+
+    /// Upper bound on the candidate count (guards only shrink it).
+    pub fn len_bound(&self) -> usize {
+        self.sweep.len_bound()
+    }
+
+    /// Render one candidate's description source: the base description
+    /// with its `[params]` overridden by the assignment. Deterministic, so
+    /// identical candidates are content-deduplicated by the registry.
+    pub fn candidate_source(&self, c: &Candidate) -> String {
+        let mut desc = self.base.clone();
+        for (name, value) in &c.assignment {
+            match desc.params.iter_mut().find(|p| p.name.node == *name) {
+                Some(p) => p.value = Spanned::bare(*value),
+                None => desc.params.push(Param {
+                    name: Spanned::bare(name.clone()),
+                    value: Spanned::bare(*value),
+                }),
+            }
+        }
+        desc.to_toml()
+    }
+
+    /// The candidate as an estimable architecture (an inline described
+    /// arch, compiled through the global registry on first use).
+    pub fn candidate_arch(&self, c: &Candidate) -> Arch {
+        let label = format!("{}[{}]", self.origin, c.label());
+        Arch::Described(DescribedArch::inline(label, self.candidate_source(c)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SWEPT: &str = r#"
+[arch]
+name = "t${rows}x${cols}"
+
+[params]
+rows = 2
+cols = 2
+
+[fetch]
+imem = "imem"
+imem_read_latency = 1
+imem_port_width = 1
+ifs = "ifs"
+ifs_latency = 1
+issue_buffer = 1
+
+[sweep]
+rows = "2, 4"
+cols = "2..7 step 2"
+when = "rows <= cols"
+"#;
+
+    #[test]
+    fn space_compiles_and_renders_candidates() {
+        let space = SweepSpace::from_source(SWEPT, "inline", None).unwrap();
+        assert_eq!(space.len_bound(), 6);
+        let c = Candidate { assignment: vec![("rows".into(), 4), ("cols".into(), 6)] };
+        assert_eq!(c.label(), "rows=4,cols=6");
+        let src = space.candidate_source(&c);
+        assert!(src.contains("rows = 4"), "{src}");
+        assert!(src.contains("cols = 6"), "{src}");
+        assert!(!src.contains("[sweep]"), "sweep must be stripped:\n{src}");
+        // the rendered candidate is itself a valid description
+        let (_, diags) = check_source(&src);
+        assert!(diags.iter().all(|d| !d.is_error()), "{diags:?}");
+    }
+
+    #[test]
+    fn missing_sweep_and_cap_overrides_error() {
+        let no_sweep = SWEPT.split("[sweep]").next().unwrap();
+        let e = SweepSpace::from_source(no_sweep, "inline", None).unwrap_err();
+        assert!(format!("{e:#}").contains("no [sweep] section"), "{e:#}");
+        let e = SweepSpace::from_source(SWEPT, "inline", Some(3)).unwrap_err();
+        assert!(format!("{e:#}").contains("exceeding the cap of 3"), "{e:#}");
+        assert!(SweepSpace::from_source(SWEPT, "inline", Some(0)).is_err());
+        assert!(SweepSpace::from_source(SWEPT, "inline", Some(6)).is_ok());
+    }
+}

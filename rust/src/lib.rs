@@ -37,9 +37,13 @@
 //!   kernel-granular parallel scheduling. Every estimation path routes
 //!   through it; repeated kernel shapes (residual blocks, serve fleets,
 //!   DSE sweeps) are priced once.
+//! - [`dse`] — architecture-generic design-space exploration: `[sweep]`
+//!   spaces declared in description files, lazy guarded enumeration, the
+//!   roofline pre-filter, cache-locality scheduling of the accurate pass,
+//!   and Pareto-frontier reporting (paper §7.4, Fig. 15).
 //! - [`coordinator`] — the estimation service: job types, the generic
-//!   worker pool, the request server, and the design-space-exploration
-//!   driver that batches roofline queries through the XLA executable.
+//!   worker pool, the request server, and the legacy Plasticine DSE shim
+//!   over [`dse`].
 //! - [`metrics`] / [`report`] — PE/MAPE/variance/Pearson, the paper's
 //!   table/figure renderers, and process-wide engine counters.
 //!
@@ -57,6 +61,7 @@ pub mod baselines;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod dnn;
+pub mod dse;
 pub mod engine;
 pub mod expt;
 pub mod ids;

@@ -4,7 +4,10 @@
 //! acadl-perf estimate <arch> <network>             per-layer AIDG estimate
 //! acadl-perf simulate <arch> <network>             cycle-accurate DES (slow)
 //! acadl-perf compare <arch> <network>              AIDG vs roofline vs DES
+//! acadl-perf dse --arch-file <path> --network-file <path>
+//!               [--keep-frac F] [--sweep-cap N]    explore the file's [sweep]
 //! acadl-perf dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]
+//! acadl-perf dse plasticine:<R,..>x<C,..>:<T,..> <network> [--keep F]
 //! acadl-perf check <file.toml>                     validate a description
 //! acadl-perf serve                                 line-based request loop
 //! acadl-perf info                                  platform + model zoo
@@ -26,14 +29,17 @@
 //! --cache-cap <N>    estimate-cache entry bound (0 disables caching)
 //! ```
 
+use anyhow::Context as _;
+
 use acadl_perf::acadl::text::{check_source, Severity};
 use acadl_perf::aidg::FixedPointConfig;
 use acadl_perf::coordinator::{
     self, Arch, DescribedArch, DseSpec, EstimateRequest, Pool, RooflineBackend, ServeOptions,
 };
 use acadl_perf::dnn::text::check_net_source;
+use acadl_perf::dse::{explore_space, SweepOptions, SweepSpace};
 use acadl_perf::engine::EstimationEngine;
-use acadl_perf::report::{fmt_bytes, fmt_cycles, Table};
+use acadl_perf::report::{fmt_bytes, fmt_cycles, Csv, Table};
 use acadl_perf::Result;
 
 /// Flags shared by every subcommand.
@@ -54,6 +60,37 @@ fn main() {
     }
 }
 
+/// Hard ceiling on `--workers`: more threads than this is always a typo,
+/// and silently clamping would hide it.
+const MAX_WORKERS: u64 = 4096;
+
+/// Parse a non-negative count flag, rejecting non-numbers, overflow, and
+/// values past `max` with messages that name the flag — never clamping.
+fn parse_count_flag(flag: &str, value: &str, max: u64) -> Result<usize> {
+    let v: u64 = value.parse().map_err(|_| {
+        if !value.is_empty() && value.chars().all(|c| c.is_ascii_digit()) {
+            anyhow::anyhow!("{flag} value {value:?} overflows (max {max})")
+        } else {
+            anyhow::anyhow!("{flag} value {value:?} is not a non-negative integer")
+        }
+    })?;
+    anyhow::ensure!(v <= max, "{flag} value {v} is out of range (max {max})");
+    usize::try_from(v).map_err(|_| anyhow::anyhow!("{flag} value {v} overflows usize"))
+}
+
+/// Parse a keep fraction, rejecting NaN/inf and anything outside 0..=1
+/// with a proper error instead of silently clamping.
+fn parse_keep_frac(flag: &str, value: &str) -> Result<f64> {
+    let v: f64 = value
+        .parse()
+        .map_err(|_| anyhow::anyhow!("{flag} value {value:?} is not a number"))?;
+    anyhow::ensure!(
+        v.is_finite() && (0.0..=1.0).contains(&v),
+        "{flag} must be a finite fraction in 0..=1 (got {value})"
+    );
+    Ok(v)
+}
+
 /// Strip `--workers N` / `--cache-cap N` out of `args` (they are valid in
 /// any position), applying the cache bound to the global engine.
 fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
@@ -61,16 +98,15 @@ fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
-            "--workers" | "--cache-cap" => {
-                anyhow::ensure!(i + 1 < args.len(), "{} needs a value", args[i]);
-                let v: usize = args[i + 1]
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad {} value {:?}", args[i], args[i + 1]))?;
-                if args[i] == "--workers" {
-                    opts.workers = v;
-                } else {
-                    EstimationEngine::global().set_cache_capacity(v);
-                }
+            "--workers" => {
+                anyhow::ensure!(i + 1 < args.len(), "--workers needs a value");
+                opts.workers = parse_count_flag("--workers", &args[i + 1], MAX_WORKERS)?;
+                args.drain(i..i + 2);
+            }
+            "--cache-cap" => {
+                anyhow::ensure!(i + 1 < args.len(), "--cache-cap needs a value");
+                let cap = parse_count_flag("--cache-cap", &args[i + 1], u64::MAX)?;
+                EstimationEngine::global().set_cache_capacity(cap);
                 args.drain(i..i + 2);
             }
             _ => i += 1,
@@ -103,6 +139,8 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
             eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
             eprintln!("  networks:      tc_resnet8 | alexnet | ... (acadl-perf info)");
             eprintln!("                 net:<path>  or  --network-file <path>  (textual network description)");
+            eprintln!("  dse:           --arch-file <path> [--network-file <path>] [--keep-frac F] [--sweep-cap N]");
+            eprintln!("                 explores the description's [sweep] space (see docs/dse.md)");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
             Ok(())
         }
@@ -151,6 +189,33 @@ fn arch_and_net(args: &[String]) -> Result<(Arch, String)> {
     Ok((arch, network))
 }
 
+/// Grammar sniffing for `check`: a `[net]` section marks a network
+/// description, and so do the network-only declarations — a net file that
+/// *forgot* `[net]` still reaches the network validator's "missing [net]
+/// section" error instead of confusing architecture-grammar diagnostics.
+/// Headers are compared comment-stripped and whitespace-normalized, since
+/// the lexer accepts `[net]  # comment` and `[[ layer ]]`. A file whose
+/// *first* real section is the architecture-only `[sweep]` is an
+/// architecture description no matter what later headers resemble.
+fn sniff_is_network(src: &str) -> bool {
+    let headers = src.lines().filter_map(|l| {
+        let header: String =
+            l.split('#').next().unwrap_or("").chars().filter(|c| !c.is_whitespace()).collect();
+        header.starts_with('[').then_some(header)
+    });
+    let mut first_is_sweep = false;
+    let mut has_net_marker = false;
+    for (i, h) in headers.enumerate() {
+        if i == 0 && h == "[sweep]" {
+            first_is_sweep = true;
+        }
+        if matches!(h.as_str(), "[net]" | "[[layer]]" | "[[input]]" | "[[foreach]]") {
+            has_net_marker = true;
+        }
+    }
+    has_net_marker && !first_is_sweep
+}
+
 /// `acadl-perf check <file>`: parse + expand + validate a description and
 /// print every diagnostic as `file:line:col: severity: message`. Both
 /// description languages are accepted; a `[net]` section selects the
@@ -160,17 +225,7 @@ fn check(args: &[String]) -> Result<()> {
     let path = &args[0];
     let src = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
-    // grammar sniffing: a [net] section marks a network description, and so
-    // do the network-only declarations — a net file that *forgot* [net]
-    // still reaches the network validator's "missing [net] section" error
-    // instead of confusing architecture-grammar diagnostics. Headers are
-    // compared comment-stripped and whitespace-normalized, since the lexer
-    // accepts `[net]  # comment` and `[[ layer ]]`.
-    let is_network = src.lines().any(|l| {
-        let header: String =
-            l.split('#').next().unwrap_or("").chars().filter(|c| !c.is_whitespace()).collect();
-        matches!(header.as_str(), "[net]" | "[[layer]]" | "[[input]]" | "[[foreach]]")
-    });
+    let is_network = sniff_is_network(&src);
     let diags = if is_network {
         check_net_source(&src).1
     } else {
@@ -342,26 +397,204 @@ fn compare(args: &[String]) -> Result<()> {
 }
 
 fn dse(args: &[String], g: &GlobalOpts) -> Result<()> {
-    anyhow::ensure!(!args.is_empty(), "dse <network> --rows R,.. --cols C,.. --tiles T,..");
-    let network = args[0].clone();
+    anyhow::ensure!(
+        !args.is_empty(),
+        "dse --arch-file <path> --network-file <path> [--keep-frac F] [--sweep-cap N]\n\
+         dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]"
+    );
+    if args.iter().any(|a| a == "--arch-file") {
+        return dse_generic(args, g);
+    }
+    dse_plasticine(args, g)
+}
+
+/// Generic DSE over a described architecture's `[sweep]` space.
+fn dse_generic(args: &[String], g: &GlobalOpts) -> Result<()> {
+    let mut arch_file: Option<String> = None;
+    let mut network: Option<String> = None;
+    let mut keep = 1.0f64;
+    let mut cap: Option<usize> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--arch-file" => {
+                anyhow::ensure!(i + 1 < args.len(), "--arch-file needs a path");
+                anyhow::ensure!(arch_file.is_none(), "architecture given twice");
+                arch_file = Some(args[i + 1].clone());
+                i += 2;
+            }
+            "--network-file" => {
+                anyhow::ensure!(i + 1 < args.len(), "--network-file needs a path");
+                anyhow::ensure!(network.is_none(), "network given twice");
+                network = Some(format!("net:{}", args[i + 1]));
+                i += 2;
+            }
+            "--keep-frac" | "--keep" => {
+                anyhow::ensure!(i + 1 < args.len(), "{} needs a value", args[i]);
+                keep = parse_keep_frac(&args[i], &args[i + 1])?;
+                i += 2;
+            }
+            "--sweep-cap" => {
+                anyhow::ensure!(i + 1 < args.len(), "--sweep-cap needs a value");
+                cap = Some(parse_count_flag("--sweep-cap", &args[i + 1], i64::MAX as u64)?);
+                i += 2;
+            }
+            other if !other.starts_with("--") && network.is_none() => {
+                network = Some(other.to_string());
+                i += 1;
+            }
+            other => anyhow::bail!("unknown dse flag {other:?}"),
+        }
+    }
+    let arch_file = arch_file.context("missing --arch-file <path>")?;
+    let network =
+        network.context("missing network (zoo name, net:<path>, or --network-file <path>)")?;
+    let src = std::fs::read_to_string(&arch_file)
+        .map_err(|e| anyhow::anyhow!("reading {arch_file}: {e}"))?;
+    let space = SweepSpace::from_source(&src, &arch_file, cap)?;
+    let net = coordinator::resolve_network(&network)?;
+    let pool = Pool::new(g.workers);
+    let backend = RooflineBackend::auto();
+    let opts = SweepOptions { keep_frac: keep, ..Default::default() };
+    let outcome =
+        explore_space(&space, &net, &opts, &pool, &backend, EstimationEngine::global())?;
+
+    let dims: Vec<String> = outcome
+        .points
+        .first()
+        .map(|p| p.assignment.iter().map(|(n, _)| n.clone()).collect())
+        .unwrap_or_default();
+    let mut headers: Vec<&str> = vec!["arch"];
+    headers.extend(dims.iter().map(String::as_str));
+    headers.extend(["roofline cycles", "AIDG cycles", "PEs", "mem words", "frontier"]);
+    let mut t = Table::new(
+        format!(
+            "DSE — {} × {} ({} points, {} estimated, {:.1} s)",
+            arch_file,
+            net.name,
+            outcome.enumerated,
+            outcome.estimated,
+            outcome.wall.as_secs_f64()
+        ),
+        &headers,
+    );
+    let mut csv = Csv::new("dse_sweep", &headers);
+    let mut omitted = 0usize;
+    for p in &outcome.points {
+        let mut cells = vec![p.arch_name.clone()];
+        cells.extend(p.assignment.iter().map(|(_, v)| v.to_string()));
+        cells.extend([
+            fmt_cycles(p.roofline_cycles as u64),
+            p.aidg_cycles.map(fmt_cycles).unwrap_or_else(|| "filtered".into()),
+            p.pe_count.to_string(),
+            p.mem_words.to_string(),
+            if p.on_frontier { "*".into() } else { String::new() },
+        ]);
+        if outcome.points.len() <= 40 || p.on_frontier {
+            t.row(&cells);
+        } else {
+            omitted += 1;
+        }
+        csv.row(&cells);
+    }
+    if omitted > 0 {
+        let mut marker = vec![format!("… {omitted} non-frontier rows omitted (see CSV)")];
+        marker.resize(headers.len(), String::new());
+        t.row(&marker);
+    }
+    println!("{}", t.to_markdown());
+
+    let mut f = Table::new(
+        format!("Pareto frontier — cycles vs PE count vs memory ({} points)",
+            outcome.frontier().len()),
+        &["point", "arch", "AIDG cycles", "PEs", "mem words"],
+    );
+    for p in outcome.frontier() {
+        f.row(&[
+            p.label.clone(),
+            p.arch_name.clone(),
+            p.aidg_cycles.map(fmt_cycles).unwrap_or_default(),
+            p.pe_count.to_string(),
+            p.mem_words.to_string(),
+        ]);
+    }
+    println!("{}", f.to_markdown());
+    let csv_path = csv.finish()?;
+    println!(
+        "enumerated {} ({} skipped) | pre-filter kept {} | warm hit rate {:.1}% | \
+         reuse {:.1}% | {:.1} points/s | series: {}",
+        outcome.enumerated,
+        outcome.skipped,
+        outcome.estimated,
+        outcome.warm_hit_rate() * 100.0,
+        outcome.reuse_rate() * 100.0,
+        outcome.enumerated as f64 / outcome.wall.as_secs_f64().max(1e-9),
+        csv_path.display(),
+    );
+    Ok(())
+}
+
+/// Legacy Plasticine grid spellings:
+/// `dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]` and
+/// `dse plasticine:<R,..>x<C,..>:<T,..> <network> [--keep F]`.
+fn dse_plasticine(args: &[String], g: &GlobalOpts) -> Result<()> {
     let mut rows = vec![2u32, 3, 4];
     let mut cols = vec![2u32, 4, 6];
     let mut tiles = vec![8u32, 16];
+    let parse_list = |flag: &str, s: &str| -> Result<Vec<u32>> {
+        let v: Vec<u32> = s
+            .split(',')
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| anyhow::anyhow!("bad {flag} entry {v:?} in {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(!v.is_empty(), "{flag} list is empty");
+        Ok(v)
+    };
+    let mut network: Option<String> = None;
     let mut keep = 1.0f64;
-    let mut i = 1;
+    let mut i = 0;
     while i < args.len() {
-        anyhow::ensure!(i + 1 < args.len(), "flag {} needs a value", args[i]);
-        let parse_list =
-            |s: &str| -> Result<Vec<u32>> { s.split(',').map(|v| Ok(v.parse()?)).collect() };
         match args[i].as_str() {
-            "--rows" => rows = parse_list(&args[i + 1])?,
-            "--cols" => cols = parse_list(&args[i + 1])?,
-            "--tiles" => tiles = parse_list(&args[i + 1])?,
-            "--keep" => keep = args[i + 1].parse()?,
-            other => anyhow::bail!("unknown flag {other:?}"),
+            "--rows" | "--cols" | "--tiles" => {
+                anyhow::ensure!(i + 1 < args.len(), "flag {} needs a value", args[i]);
+                let list = parse_list(&args[i], &args[i + 1])?;
+                match args[i].as_str() {
+                    "--rows" => rows = list,
+                    "--cols" => cols = list,
+                    _ => tiles = list,
+                }
+                i += 2;
+            }
+            "--keep" | "--keep-frac" => {
+                anyhow::ensure!(i + 1 < args.len(), "{} needs a value", args[i]);
+                keep = parse_keep_frac(&args[i], &args[i + 1])?;
+                i += 2;
+            }
+            spec if spec.starts_with("plasticine:") => {
+                // the legacy arch spelling with comma lists per field
+                let parts: Vec<&str> = spec.splitn(3, ':').collect();
+                anyhow::ensure!(
+                    parts.len() == 3,
+                    "plasticine sweep spec needs <rows>x<cols>:<tiles> (got {spec:?})"
+                );
+                let (r, c) = parts[1]
+                    .split_once('x')
+                    .context("plasticine sweep spec needs <rows>x<cols>")?;
+                rows = parse_list("rows", r)?;
+                cols = parse_list("cols", c)?;
+                tiles = parse_list("tiles", parts[2])?;
+                i += 1;
+            }
+            other if !other.starts_with("--") && network.is_none() => {
+                network = Some(other.to_string());
+                i += 1;
+            }
+            other => anyhow::bail!("unknown dse flag {other:?}"),
         }
-        i += 2;
     }
+    let network = network.context("dse <network> --rows R,.. --cols C,.. --tiles T,..")?;
     let spec =
         DseSpec { rows, cols, tiles, network, keep_frac: keep, fp: FixedPointConfig::default() };
     let pool = Pool::new(g.workers);
@@ -369,7 +602,12 @@ fn dse(args: &[String], g: &GlobalOpts) -> Result<()> {
     let t0 = std::time::Instant::now();
     let points = coordinator::explore(&spec, &pool, &backend)?;
     let mut t = Table::new(
-        format!("DSE — {} ({} design points, {:.1} s)", spec.network, points.len(), t0.elapsed().as_secs_f64()),
+        format!(
+            "DSE — {} ({} design points, {:.1} s)",
+            spec.network,
+            points.len(),
+            t0.elapsed().as_secs_f64()
+        ),
         &["rows", "cols", "tile", "roofline cycles", "AIDG cycles"],
     );
     for p in points.iter().take(20) {
@@ -406,4 +644,62 @@ fn info() -> Result<()> {
     );
     println!("architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T> | file:<path>");
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_flags_reject_garbage_overflow_and_out_of_range() {
+        assert_eq!(parse_count_flag("--workers", "8", MAX_WORKERS).unwrap(), 8);
+        assert_eq!(parse_count_flag("--workers", "0", MAX_WORKERS).unwrap(), 0);
+        let e = parse_count_flag("--workers", "4097", MAX_WORKERS).unwrap_err();
+        assert!(format!("{e}").contains("out of range"), "{e}");
+        let e = parse_count_flag("--workers", "99999999999999999999", MAX_WORKERS).unwrap_err();
+        assert!(format!("{e}").contains("overflows"), "{e}");
+        let e = parse_count_flag("--cache-cap", "-3", u64::MAX).unwrap_err();
+        assert!(format!("{e}").contains("not a non-negative integer"), "{e}");
+        assert!(parse_count_flag("--cache-cap", "twelve", u64::MAX).is_err());
+        assert!(parse_count_flag("--cache-cap", "", u64::MAX).is_err());
+    }
+
+    #[test]
+    fn keep_frac_rejects_nan_and_out_of_range() {
+        assert_eq!(parse_keep_frac("--keep-frac", "0.5").unwrap(), 0.5);
+        assert_eq!(parse_keep_frac("--keep-frac", "1").unwrap(), 1.0);
+        assert_eq!(parse_keep_frac("--keep-frac", "0").unwrap(), 0.0);
+        for bad in ["NaN", "nan", "inf", "-0.1", "1.01", "two"] {
+            let e = parse_keep_frac("--keep", bad).unwrap_err();
+            let msg = format!("{e}");
+            assert!(msg.contains("--keep"), "{bad}: {msg}");
+        }
+    }
+
+    #[test]
+    fn extract_global_flags_strips_and_validates() {
+        let mut args: Vec<String> =
+            ["estimate", "--workers", "3", "ultratrail", "tc_resnet8"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let g = extract_global_flags(&mut args).unwrap();
+        assert_eq!(g.workers, 3);
+        assert_eq!(args, vec!["estimate", "ultratrail", "tc_resnet8"]);
+        let mut bad: Vec<String> =
+            ["--workers", "1000000"].iter().map(|s| s.to_string()).collect();
+        assert!(extract_global_flags(&mut bad).is_err());
+    }
+
+    #[test]
+    fn sniffing_picks_the_right_grammar() {
+        assert!(sniff_is_network("[net]\nname = \"x\"\n"));
+        assert!(sniff_is_network("# c\n[[layer]]\nname = \"x\"\n"));
+        assert!(!sniff_is_network("[arch]\nname = \"x\"\n[sweep]\nrows = 1\n"));
+        // first real section [sweep] => architecture, even with net-like
+        // headers further down (e.g. in a commented-out example... or not)
+        assert!(!sniff_is_network("# preamble\n[sweep]  # space\nrows = 1\n[net]\n"));
+        assert!(sniff_is_network("[net]\n[sweep]\n"));
+        assert!(!sniff_is_network("x = 1\n"));
+    }
 }

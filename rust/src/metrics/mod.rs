@@ -48,6 +48,13 @@ pub mod counters {
     pub static ENGINE_CACHE_HITS: Counter = Counter::new("engine.cache.hits");
     /// Kernel slots deduplicated within a single request.
     pub static ENGINE_KERNELS_DEDUPED: Counter = Counter::new("engine.kernels.deduped");
+    /// DSE design points enumerated (including unmappable ones).
+    pub static DSE_POINTS_ENUMERATED: Counter = Counter::new("dse_points_enumerated");
+    /// DSE design points that reached the roofline pre-filter (mappable
+    /// candidates; enumerated minus degenerate skips).
+    pub static DSE_POINTS_PREFILTERED: Counter = Counter::new("dse_points_prefiltered");
+    /// DSE design points that survived into the accurate AIDG pass.
+    pub static DSE_POINTS_ESTIMATED: Counter = Counter::new("dse_points_estimated");
 
     /// One kernel batch's accounting, in one call (the request counter is
     /// bumped separately — kernel-batch APIs are not whole requests).
@@ -66,6 +73,9 @@ pub mod counters {
             &ENGINE_KERNELS_EVALUATED,
             &ENGINE_CACHE_HITS,
             &ENGINE_KERNELS_DEDUPED,
+            &DSE_POINTS_ENUMERATED,
+            &DSE_POINTS_PREFILTERED,
+            &DSE_POINTS_ESTIMATED,
         ]
         .iter()
         .map(|c| (c.name(), c.get()))
@@ -258,7 +268,10 @@ mod tests {
         counters::ENGINE_REQUESTS.add(1);
         assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
         let snap = counters::snapshot();
-        assert_eq!(snap.len(), 5);
+        assert_eq!(snap.len(), 8);
         assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
+        assert!(snap.iter().any(|(n, _)| *n == "dse_points_enumerated"));
+        assert!(snap.iter().any(|(n, _)| *n == "dse_points_prefiltered"));
+        assert!(snap.iter().any(|(n, _)| *n == "dse_points_estimated"));
     }
 }

@@ -9,7 +9,7 @@
 
 use crate::acadl::text::ast::{
     BinOp, Decl, DeclBody, Description, Fetch, ForRange, Func, PExpr, Param, Segment, Span,
-    Spanned, Template,
+    Spanned, Sweep, SweepDim, SweepItem, Template,
 };
 
 use super::prop::Rng;
@@ -135,6 +135,39 @@ fn arbitrary_body(rng: &mut Rng) -> DeclBody {
     }
 }
 
+/// A random `[sweep]` item. Expressions avoid the identifier `step` (absent
+/// from [`VARS`]), which the range splitter treats as a keyword.
+fn arbitrary_sweep_item(rng: &mut Rng) -> SweepItem {
+    if rng.bool() {
+        SweepItem::Scalar(arbitrary_pexpr(rng, 2, true))
+    } else {
+        SweepItem::Range {
+            lo: arbitrary_pexpr(rng, 1, true),
+            hi: arbitrary_pexpr(rng, 1, true),
+            step: if rng.bool() { Some(arbitrary_pexpr(rng, 1, true)) } else { None },
+        }
+    }
+}
+
+/// A random `[sweep]` section over distinct dimension names.
+fn arbitrary_sweep(rng: &mut Rng) -> Sweep {
+    let n_dims = rng.range_usize(1, 3);
+    let dims = (0..n_dims)
+        .map(|i| SweepDim {
+            // VARS entries are distinct; index by position for unique keys
+            name: sp(VARS[(i * 2) % VARS.len()].to_string()),
+            items: (0..rng.range_usize(1, 3)).map(|_| arbitrary_sweep_item(rng)).collect(),
+            span: Span::default(),
+        })
+        .collect();
+    Sweep {
+        dims,
+        when: if rng.bool() { Some(spanned_pexpr(rng, true)) } else { None },
+        cap: if rng.bool() { Some(sp(rng.range_u64(1, 1 << 20) as i64)) } else { None },
+        span: Span::default(),
+    }
+}
+
 fn arbitrary_decl(rng: &mut Rng) -> Decl {
     let foreach = (0..rng.range_usize(0, 2))
         .map(|_| ForRange {
@@ -173,6 +206,7 @@ pub fn arbitrary_description(rng: &mut Rng) -> Description {
             span: Span::default(),
         }),
         mapper: if rng.bool() { Some(sp(ident(rng))) } else { None },
+        sweep: if rng.range_u32(0, 3) == 0 { Some(arbitrary_sweep(rng)) } else { None },
         decls: (0..rng.range_usize(0, 6)).map(|_| arbitrary_decl(rng)).collect(),
     }
 }

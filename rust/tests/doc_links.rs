@@ -8,7 +8,7 @@ use std::path::Path;
 
 /// The documentation set this repo ships. Presence is itself asserted, so
 /// deleting a book chapter without updating this list fails the build.
-const DOC_FILES: [&str; 9] = [
+const DOC_FILES: [&str; 10] = [
     "README.md",
     "arch/README.md",
     "net/README.md",
@@ -17,6 +17,7 @@ const DOC_FILES: [&str; 9] = [
     "docs/net-format.md",
     "docs/serve-protocol.md",
     "docs/performance.md",
+    "docs/dse.md",
     "ROADMAP.md",
     // CHANGES.md is a log, not documentation: not checked
 ];
@@ -98,6 +99,7 @@ fn docs_book_is_linked_from_the_readme() {
         "docs/net-format.md",
         "docs/serve-protocol.md",
         "docs/performance.md",
+        "docs/dse.md",
     ] {
         assert!(readme.contains(chapter), "README.md must link {chapter}");
     }
