@@ -1,24 +1,119 @@
 //! §Perf — AIDG evaluator throughput, end-to-end estimation latency,
 //! unified-engine cold/warm microbenchmarks, and the DSE sweep phase (the
-//! EXPERIMENTS.md §Perf numbers). Emits `BENCH_engine.json` (cold/warm
-//! wall-times, hit rates) and `BENCH_dse.json` (points/sec, pre-filter
-//! survival, cross-candidate warm hit rate) so future PRs have a perf
-//! trajectory.
+//! EXPERIMENTS.md §Perf numbers). Emits `BENCH_eval.json` (evaluator
+//! nodes/sec, iterations/sec, and peak frontier bytes per arch × net),
+//! `BENCH_engine.json` (cold/warm wall-times, hit rates) and
+//! `BENCH_dse.json` (points/sec, pre-filter survival, cross-candidate warm
+//! hit rate) so future PRs have a perf trajectory. `--smoke` runs the
+//! evaluator phase only (CI's artifact-shape check).
 use std::sync::Arc;
+use std::time::Instant;
 
-use acadl_perf::accel::{Systolic, SystolicConfig};
+use acadl_perf::accel::{
+    Gemmini, GemminiConfig, Systolic, SystolicConfig, UltraTrail, UltraTrailConfig,
+};
 use acadl_perf::acadl::text::ast::{Param, Span, Spanned, Sweep, SweepDim, SweepItem};
 use acadl_perf::acadl::text::{parse, PExpr};
 use acadl_perf::aidg::{estimate_layer, Evaluator, FixedPointConfig};
-use acadl_perf::bench_harness::{bench, section, time_once};
+use acadl_perf::bench_harness::{bench, section, smoke, time_once};
 use acadl_perf::coordinator::{Arch, Pool};
 use acadl_perf::dnn::text::NetRegistry;
 use acadl_perf::dnn::zoo;
 use acadl_perf::dse::{explore_space, RooflineBackend, SweepOptions, SweepSpace};
 use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
-use acadl_perf::mapping::{scalar::ScalarMapper, Mapper};
+use acadl_perf::mapping::{
+    gemm_tile::GemmTileMapper, scalar::ScalarMapper, tensor_op::TensorOpMapper, Mapper,
+};
+
+/// The `bench_eval` phase: evaluator-level throughput per arch × net
+/// through the iteration-program hot path, emitted as `BENCH_eval.json`
+/// (nodes/sec, iterations/sec, peak frontier bytes). `iter_cap` bounds the
+/// iterations evaluated per kernel so the smoke pass stays fast.
+fn bench_eval(iter_cap: u64, nets: &[&str]) {
+    section("perf — evaluator iteration programs per arch × net (BENCH_eval.json)");
+    let mappers: Vec<(&str, Box<dyn Mapper>)> = vec![
+        (
+            "systolic4x4",
+            Box::new(ScalarMapper::new(Arc::new(
+                Systolic::new(SystolicConfig::new(4, 4)).unwrap(),
+            ))),
+        ),
+        (
+            "gemmini16",
+            Box::new(GemmTileMapper::new(Arc::new(
+                Gemmini::new(GemminiConfig::default()).unwrap(),
+            ))),
+        ),
+        (
+            "ultratrail",
+            Box::new(TensorOpMapper::new(Arc::new(
+                UltraTrail::new(UltraTrailConfig::default()).unwrap(),
+            ))),
+        ),
+    ];
+    let mut records = Vec::new();
+    for (arch, mapper) in &mappers {
+        for net_name in nets {
+            let net = zoo::by_name(net_name).unwrap();
+            let Ok(mapped) = mapper.map_network(&net) else {
+                continue; // e.g. 2-D networks on UltraTrail
+            };
+            let mut nodes = 0u64;
+            let mut iters = 0u64;
+            let mut kernels = 0u64;
+            let mut peak = 0u64;
+            let t0 = Instant::now();
+            for ml in mapped.iter().filter(|l| !l.fused) {
+                for kernel in &ml.kernels {
+                    // bound per-kernel work in iterations AND instructions
+                    // (GEMM kernels can carry hundreds of insts/iteration)
+                    let insts_budget =
+                        (200 * iter_cap / kernel.insts_per_iter.max(1) as u64).max(1);
+                    let range = 0..kernel.k.min(iter_cap).min(insts_budget);
+                    let mut ev = Evaluator::new(mapper.diagram());
+                    ev.run(kernel, range).unwrap();
+                    nodes += ev.st.nodes;
+                    iters += ev.iter_stats.len() as u64;
+                    peak = peak.max(ev.st.peak_bytes as u64);
+                    kernels += 1;
+                }
+            }
+            let wall = t0.elapsed();
+            let secs = wall.as_secs_f64().max(1e-9);
+            println!(
+                "  eval/{arch} x {net_name}: {:.2} M nodes/s, {:.1} k iters/s, peak {} B",
+                nodes as f64 / secs / 1e6,
+                iters as f64 / secs / 1e3,
+                peak
+            );
+            records.push(format!(
+                "    {{\n      \"arch\": \"{arch}\",\n      \"network\": \"{net_name}\",\n      \
+                 \"kernels\": {kernels},\n      \"nodes\": {nodes},\n      \
+                 \"evaluated_iters\": {iters},\n      \"wall_ms\": {:.3},\n      \
+                 \"nodes_per_sec\": {:.1},\n      \"iters_per_sec\": {:.1},\n      \
+                 \"peak_frontier_bytes\": {peak}\n    }}",
+                secs * 1e3,
+                nodes as f64 / secs,
+                iters as f64 / secs,
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"eval_program\",\n  \"iter_cap\": {iter_cap},\n  \"records\": [\n{}\n  ]\n}}\n",
+        records.join(",\n")
+    );
+    std::fs::write("BENCH_eval.json", &json).expect("writing BENCH_eval.json");
+    println!("  => wrote BENCH_eval.json ({} records)", records.len());
+}
 
 fn main() {
+    if smoke() {
+        // CI's fast pass: emit + shape-check the evaluator artifact only
+        bench_eval(500, &["tc_resnet8"]);
+        return;
+    }
+    bench_eval(20_000, &["tc_resnet8", "efficientnet_reduced"]);
+
     section("perf — evaluator throughput (whole-graph sweep)");
     let sys = Arc::new(Systolic::new(SystolicConfig::new(4, 4)).unwrap());
     let mapper = ScalarMapper::new(Arc::clone(&sys) as Arc<Systolic>);

@@ -705,14 +705,47 @@ impl Diagram {
     /// `ceil(n_addrs / port_width)` transactions of `latency` each.
     #[inline]
     pub fn mem_latency(&self, mem: ObjId, n_addrs: usize, write: bool, instr: &Instruction) -> u64 {
+        self.mem_latency_imms(mem, n_addrs, write, &instr.imms)
+    }
+
+    /// [`Self::mem_latency`] against a raw immediate slice (iteration-
+    /// program hot path).
+    #[inline]
+    pub fn mem_latency_imms(&self, mem: ObjId, n_addrs: usize, write: bool, imms: &[i64]) -> u64 {
         if let ObjectKind::Memory { read_latency, write_latency, port_width, .. } =
             &self.objects[mem.idx()].kind
         {
-            let per = if write { write_latency } else { read_latency }.eval(instr);
+            let per = (if write { write_latency } else { read_latency }).eval_imms(imms);
             let txns = (n_addrs as u64).div_ceil(*port_width as u64).max(1);
             per * txns
         } else {
             0
+        }
+    }
+
+    /// Per-transaction read/write latency of memory `mem` evaluated against
+    /// a raw immediate slice (0 for non-memories).
+    #[inline]
+    pub fn mem_txn_latency_imms(&self, mem: ObjId, write: bool, imms: &[i64]) -> u64 {
+        if let ObjectKind::Memory { read_latency, write_latency, .. } =
+            &self.objects[mem.idx()].kind
+        {
+            (if write { write_latency } else { read_latency }).eval_imms(imms)
+        } else {
+            0
+        }
+    }
+
+    /// Residency latency of `obj` evaluated against a raw immediate slice:
+    /// pipeline-stage / fetch-stage / functional-unit latencies; 0 for every
+    /// other kind (matching the evaluator's per-node latency dispatch).
+    #[inline]
+    pub fn object_latency_imms(&self, obj: ObjId, imms: &[i64]) -> u64 {
+        match &self.objects[obj.idx()].kind {
+            ObjectKind::PipelineStage { latency }
+            | ObjectKind::InstructionFetchStage { latency, .. }
+            | ObjectKind::FunctionalUnit { latency, .. } => latency.eval_imms(imms),
+            _ => 0,
         }
     }
 }

@@ -48,9 +48,17 @@ impl Latency {
     /// Evaluate against `instr`'s immediates; negative results clamp to 0.
     #[inline]
     pub fn eval(&self, instr: &Instruction) -> Cycle {
+        self.eval_imms(&instr.imms)
+    }
+
+    /// Evaluate against a raw immediate slice (the iteration-program hot
+    /// path, which carries operand slices instead of owned instructions);
+    /// negative results clamp to 0.
+    #[inline]
+    pub fn eval_imms(&self, imms: &[i64]) -> Cycle {
         match self {
             Latency::Fixed(c) => *c,
-            Latency::Expr(e) => e.eval(&instr.imms).max(0) as Cycle,
+            Latency::Expr(e) => e.eval(imms).max(0) as Cycle,
         }
     }
 

@@ -27,12 +27,21 @@
 //! - every node's `t_leave = max(t_stop, structural-free time of the next
 //!   object in the route)` — an instruction occupies a module until the
 //!   next module accepts it.
+//!
+//! The per-instruction work is split between a one-time *lowering* pass
+//! (first iteration of each offset: route resolution + template-invariant
+//! facts compiled into an `IterProgram`) and a tight
+//! steady-state interpreter over the lowered node table — see the module
+//! docs of `super::program` for the design and its safety net. Iterations
+//! are emitted into a reused [`EmitBuf`] arena, so a warmed-up evaluation
+//! performs zero heap allocations per iteration.
 
-use crate::acadl::{Diagram, ObjectKind};
+use crate::acadl::Diagram;
 use crate::ids::Cycle;
-use crate::isa::{Instruction, LoopKernel};
+use crate::isa::{EmitBuf, InstrView, LoopKernel};
 use crate::Result;
 
+use super::program::{IterProgram, Lat, NodeKind, NO_LOCK};
 use super::state::EvalState;
 
 /// Debug tracing flags, resolved once (env lookups are process-global locks
@@ -60,33 +69,33 @@ impl IterStat {
     }
 }
 
-/// Node kind within an instruction's route tail.
-#[derive(Debug, Clone, Copy)]
-enum Tag {
-    Stage,
-    Fu,
-    ReadMem,
-    WriteBack,
-    WriteMem,
-}
-
 /// Streaming evaluator over one diagram + one loop kernel's instruction
 /// stream.
+///
+/// An evaluator is bound to one kernel *template*: the iteration program
+/// (and the route per offset) is lowered from the first iteration that
+/// reaches each offset and reused for every later iteration — the §6.3
+/// contract that consecutive iterations differ only in addresses. Chunked
+/// [`Evaluator::run`] calls over the same kernel continue the same program;
+/// the `verify-routes` cargo feature re-derives and checks routes on every
+/// instruction for debugging.
 pub struct Evaluator<'d> {
     d: &'d Diagram,
     /// Carried evaluation state (exposed for the memory-footprint metric).
     pub st: EvalState,
     /// (min_enter, max_leave) per evaluated iteration, in order.
     pub iter_stats: Vec<IterStat>,
-    buf: Vec<Instruction>,
-    /// Reused tail-node scratch buffer (avoids a per-instruction alloc).
-    tail: Vec<(crate::ids::ObjId, Tag)>,
-    /// Route per iteration offset: consecutive iterations execute the same
-    /// instruction template (only addresses change — §6.3), so the route of
-    /// the j-th instruction of an iteration is invariant. Verified against a
-    /// full routing pass on the first iteration of each offset.
+    /// Reused emission arena (cleared, never shrunk, per iteration).
+    emit: EmitBuf,
+    /// Lowered iteration program, grown offset-by-offset on the first
+    /// iteration (§6.3: the template is iteration-invariant).
+    program: IterProgram,
+    /// Route per iteration offset, retained only for the `verify-routes`
+    /// check (the lowered program otherwise subsumes the route).
+    #[cfg(feature = "verify-routes")]
     routes: Vec<std::sync::Arc<crate::acadl::Route>>,
     // fetch constants
+    ifs_lock: u32,
     p: u64,
     imem_read_lat: Cycle,
     ifs_lat: Cycle,
@@ -107,9 +116,11 @@ impl<'d> Evaluator<'d> {
             d,
             st,
             iter_stats: Vec::new(),
-            buf: Vec::new(),
-            tail: Vec::new(),
+            emit: EmitBuf::new(),
+            program: IterProgram::default(),
+            #[cfg(feature = "verify-routes")]
             routes: Vec::new(),
+            ifs_lock: d.lock(f.fetch_stage).owner.idx() as u32,
             p: f.port_width as u64,
             imem_read_lat: f.read_latency,
             ifs_lat: f.ifs_latency,
@@ -122,22 +133,23 @@ impl<'d> Evaluator<'d> {
     /// Evaluate iterations `range` of `kernel`, appending to the carried
     /// state and per-iteration stats.
     pub fn run(&mut self, kernel: &LoopKernel, range: std::ops::Range<u64>) -> Result<()> {
+        self.iter_stats.reserve((range.end.saturating_sub(range.start)) as usize);
         for it in range {
-            self.buf.clear();
-            kernel.emit(it, &mut self.buf);
+            self.emit.clear();
+            kernel.emit_into(it, &mut self.emit);
             self.cur_min_enter = Cycle::MAX;
             self.cur_max_leave = 0;
-            // take() the buffer to appease the borrow checker; instructions
-            // are processed one at a time.
-            let buf = std::mem::take(&mut self.buf);
+            // take() the arena to appease the borrow checker; instructions
+            // are processed one at a time (the swap is allocation-free).
+            let emit = std::mem::take(&mut self.emit);
             let mut res = Ok(());
-            for (j, instr) in buf.iter().enumerate() {
-                res = self.process(instr, j);
+            for j in 0..emit.len() {
+                res = self.step(j, &emit.view(j));
                 if res.is_err() {
                     break;
                 }
             }
-            self.buf = buf;
+            self.emit = emit;
             res?;
             self.iter_stats.push(IterStat {
                 min_enter: self.cur_min_enter,
@@ -145,6 +157,32 @@ impl<'d> Evaluator<'d> {
             });
             self.st.note_peak(self.iter_stats.len() * std::mem::size_of::<IterStat>());
         }
+        Ok(())
+    }
+
+    /// Number of lowered instruction offsets (test introspection).
+    #[cfg(test)]
+    pub(crate) fn program_len(&self) -> usize {
+        self.program.len()
+    }
+
+    /// `verify-routes` builds: re-derive the instruction's route and assert
+    /// it matches the lowered template.
+    #[cfg(feature = "verify-routes")]
+    fn verify_route(&self, offset: usize, view: &InstrView<'_>) -> Result<()> {
+        let r = self.d.route(&view.to_instruction())?;
+        assert_eq!(
+            *self.routes[offset], *r,
+            "route template changed at offset {offset}"
+        );
+        Ok(())
+    }
+
+    /// Default builds: route invariance is a §6.3 precondition, not
+    /// re-checked per instruction.
+    #[cfg(not(feature = "verify-routes"))]
+    #[inline]
+    fn verify_route(&self, _offset: usize, _view: &InstrView<'_>) -> Result<()> {
         Ok(())
     }
 
@@ -184,38 +222,34 @@ impl<'d> Evaluator<'d> {
         self.st.group_slots[within]
     }
 
-    /// Process one instruction: walk its route, computing `t_enter`/`t_leave`
-    /// for every node per Algorithm 1, and update the frontier.
-    ///
-    /// `offset` is the instruction's position within its iteration; routes
-    /// are resolved once per offset and reused (same template, different
-    /// addresses).
-    fn process(&mut self, instr: &Instruction, offset: usize) -> Result<()> {
-        let route = if let Some(r) = self.routes.get(offset) {
-            debug_assert_eq!(**r, *self.d.route(instr)?, "route template changed at offset {offset}");
-            r.clone()
+    /// Process one instruction: lower its offset on first encounter, then
+    /// interpret the lowered node table per Algorithm 1 and update the
+    /// frontier. `offset` is the instruction's position within its
+    /// iteration.
+    fn step(&mut self, offset: usize, view: &InstrView<'_>) -> Result<()> {
+        if offset >= self.program.len() {
+            debug_assert_eq!(offset, self.program.len(), "offsets must arrive in order");
+            let instr = view.to_instruction();
+            let route = self.d.route(&instr)?;
+            self.program.lower_offset(self.d, &route, view);
+            #[cfg(feature = "verify-routes")]
+            self.routes.push(route);
         } else {
-            debug_assert_eq!(offset, self.routes.len(), "offsets must arrive in order");
-            let r = self.d.route(instr)?;
-            self.routes.push(r.clone());
-            r
-        };
+            // re-derive and compare the route on every later instruction
+            // (the just-lowered offset would only compare itself)
+            self.verify_route(offset, view)?;
+        }
         let fetch_leave = self.fetch_leave();
-
-        // Build the tail object sequence: IFS, stages…, FU, read mems…,
-        // writeBack?, write mems…
-        let f = self.d.fetch_config();
-        let wb = self.d.writeback_obj();
+        let meta = self.program.offsets[offset];
 
         // --- IFS node (in-forward from fetch + buffer fill edge) ----------
         // entry requires a free issue-buffer slot (interval occupancy on the
         // IFS lock, capacity = issue_buffer_size) AND a per-cycle entry slot
         // (Algorithm 1's b_enter); iterate the two monotone constraints to a
         // common fixpoint
-        let ifs_lock = self.d.lock(f.fetch_stage).owner;
         let mut t_enter = fetch_leave;
         loop {
-            let tg = self.st.obj_ring[ifs_lock.idx()].gate(t_enter);
+            let tg = self.st.obj_ring[self.ifs_lock as usize].gate(t_enter);
             let tb = self.st.b_enter.probe(tg, self.issue_buf);
             if tb == t_enter {
                 break;
@@ -231,87 +265,63 @@ impl<'d> Evaluator<'d> {
         let mut t_stop = t_enter + self.ifs_lat;
         self.st.nodes += 1;
 
-        // Assemble the remaining object order once (reused scratch buffer);
-        // the IFS `t_leave` then stalls on the first tail object's
-        // structural availability.
-        let mut tail = std::mem::take(&mut self.tail);
-        tail.clear();
-        for &s in &route.stages {
-            tail.push((s, Tag::Stage));
-        }
-        tail.push((route.fu, Tag::Fu));
-        for &m in &route.read_mems {
-            tail.push((m, Tag::ReadMem));
-        }
-        if route.has_writeback {
-            tail.push((wb, Tag::WriteBack));
-        }
-        for &m in &route.write_mems {
-            tail.push((m, Tag::WriteMem));
-        }
-
         // t_leave of the IFS node: stall until the first tail object frees
         // (worked example n63: the store waits in the IFS for the store
         // unit).
-        let first_lock = self.d.lock(tail[0].0).owner;
         let horizon = self.st.horizon;
-        let mut t_leave = self.st.obj_ring[first_lock.idx()].gate(t_stop);
-        self.st.obj_ring[ifs_lock.idx()].insert(t_enter, t_leave, horizon);
+        let mut t_leave = self.st.obj_ring[meta.first_tail_lock as usize].gate(t_stop);
+        self.st.obj_ring[self.ifs_lock as usize].insert(t_enter, t_leave, horizon);
         let mut prev_leave = t_leave;
 
+        // The fast memory path is valid while the iteration's addresses
+        // still obey the lowered address→memory partition; otherwise the
+        // memory nodes of this instruction fall back to full scans.
+        let fast_mem = self.program.partition_holds(self.d, &meta, view);
+
         // --- tail nodes ----------------------------------------------------
-        for j in 0..tail.len() {
-            let (obj, ref tag) = tail[j];
-            let lock = self.d.lock(obj);
-            t_enter = self.st.obj_ring[lock.owner.idx()].gate(prev_leave);
+        for ni in meta.nodes.0..meta.nodes.1 {
+            let node = self.program.nodes[ni as usize];
+            t_enter = self.st.obj_ring[node.owner as usize].gate(prev_leave);
 
             // data dependencies + latency per node kind
             let mut deps: Cycle = 0;
-            let lat: Cycle = match tag {
-                Tag::Stage => match &self.d.object(obj).kind {
-                    ObjectKind::PipelineStage { latency } => latency.eval(instr),
-                    _ => 0,
-                },
-                Tag::Fu => {
-                    for r in instr.read_regs.iter().chain(instr.write_regs.iter()) {
+            let lat: Cycle = match node.kind {
+                NodeKind::Stage { lat } => lat.eval(self.d, view.imms),
+                NodeKind::Fu { lat, .. } => {
+                    for r in view.read_regs.iter().chain(view.write_regs.iter()) {
                         deps = deps.max(self.st.reg_last[r.0 as usize]);
                     }
-                    match &self.d.object(obj).kind {
-                        ObjectKind::FunctionalUnit { latency, .. } => latency.eval(instr),
-                        _ => 0,
-                    }
+                    lat.eval(self.d, view.imms)
                 }
-                Tag::ReadMem => {
-                    let mut n = 0usize;
-                    for &a in &instr.read_addrs {
-                        if self.d.memory_of(a) == Some(obj) {
-                            n += 1;
-                            deps = deps.max(
-                                self.st.addr_last.get(&a).copied().unwrap_or(0),
-                            );
+                NodeKind::Mem { write, per_txn, port, pos, .. } => {
+                    let addrs = if write { view.write_addrs } else { view.read_addrs };
+                    let n = if fast_mem {
+                        for &p in self.program.positions_of(pos) {
+                            deps = deps.max(self.st.addr_last.get(addrs[p as usize]));
                         }
-                    }
-                    self.d.mem_latency(obj, n, false, instr)
-                }
-                Tag::WriteBack => 0,
-                Tag::WriteMem => {
-                    let mut n = 0usize;
-                    for &a in &instr.write_addrs {
-                        if self.d.memory_of(a) == Some(obj) {
-                            n += 1;
-                            deps = deps.max(
-                                self.st.addr_last.get(&a).copied().unwrap_or(0),
-                            );
+                        (pos.1 - pos.0) as usize
+                    } else {
+                        let mut n = 0usize;
+                        for &a in addrs {
+                            if self.d.memory_of(a) == Some(node.obj) {
+                                n += 1;
+                                deps = deps.max(self.st.addr_last.get(a));
+                            }
                         }
-                    }
-                    self.d.mem_latency(obj, n, true, instr)
+                        n
+                    };
+                    let per = match per_txn {
+                        Lat::Fix(c) => c,
+                        Lat::Dyn(m) => self.d.mem_txn_latency_imms(m, write, view.imms),
+                    };
+                    per * (n as u64).div_ceil(port as u64).max(1)
                 }
+                NodeKind::WriteBack => 0,
             };
 
             t_stop = t_enter.max(deps) + lat;
-            t_leave = if j + 1 < tail.len() {
-                let next_lock = self.d.lock(tail[j + 1].0).owner;
-                self.st.obj_ring[next_lock.idx()].gate(t_stop)
+            t_leave = if node.next != NO_LOCK {
+                self.st.obj_ring[node.next as usize].gate(t_stop)
             } else {
                 t_stop
             };
@@ -319,55 +329,54 @@ impl<'d> Evaluator<'d> {
                 eprintln!(
                     "AIDG i{} node {} enter={} deps={} stop={} leave={}",
                     self.st.instr_index - 1,
-                    self.d.object(obj).name,
+                    self.d.object(node.obj).name,
                     t_enter,
                     deps,
                     t_stop,
                     t_leave
                 );
             }
-            self.st.obj_ring[lock.owner.idx()].insert(t_enter, t_leave, horizon);
+            self.st.obj_ring[node.owner as usize].insert(t_enter, t_leave, horizon);
             self.st.nodes += 1;
 
             // frontier updates (last accessor maps)
-            match tag {
-                Tag::Fu => {
+            match node.kind {
+                NodeKind::Fu { anchors_writes, .. } => {
                     // read registers anchor here; write registers anchor here
                     // too unless a writeBack node follows (§6.1)
-                    for r in &instr.read_regs {
+                    for r in view.read_regs {
                         self.st.reg_last[r.0 as usize] = t_leave;
                     }
-                    if !route.has_writeback {
-                        for r in &instr.write_regs {
+                    if anchors_writes {
+                        for r in view.write_regs {
                             self.st.reg_last[r.0 as usize] = t_leave;
                         }
                     }
                 }
-                Tag::ReadMem => {
-                    for &a in &instr.read_addrs {
-                        if self.d.memory_of(a) == Some(obj) {
-                            self.st.addr_last.insert(a, t_leave);
+                NodeKind::Mem { write, pos, .. } => {
+                    let addrs = if write { view.write_addrs } else { view.read_addrs };
+                    if fast_mem {
+                        for &p in self.program.positions_of(pos) {
+                            self.st.addr_last.set(addrs[p as usize], t_leave);
+                        }
+                    } else {
+                        for &a in addrs {
+                            if self.d.memory_of(a) == Some(node.obj) {
+                                self.st.addr_last.set(a, t_leave);
+                            }
                         }
                     }
                 }
-                Tag::WriteBack => {
-                    for r in &instr.write_regs {
+                NodeKind::WriteBack => {
+                    for r in view.write_regs {
                         self.st.reg_last[r.0 as usize] = t_leave;
                     }
                 }
-                Tag::WriteMem => {
-                    for &a in &instr.write_addrs {
-                        if self.d.memory_of(a) == Some(obj) {
-                            self.st.addr_last.insert(a, t_leave);
-                        }
-                    }
-                }
-                Tag::Stage => {}
+                NodeKind::Stage { .. } => {}
             }
             prev_leave = t_leave;
         }
 
-        self.tail = tail;
         if prev_leave > self.cur_max_leave {
             self.cur_max_leave = prev_leave;
         }
@@ -375,7 +384,7 @@ impl<'d> Evaluator<'d> {
             eprintln!(
                 "AIDG i{} op={} leave={}",
                 self.st.instr_index - 1,
-                self.d.op_name(instr.op),
+                self.d.op_name(view.op),
                 prev_leave
             );
         }
@@ -387,7 +396,8 @@ impl<'d> Evaluator<'d> {
 mod tests {
     use super::*;
     use crate::acadl::Latency;
-    use crate::ids::{ObjId, RegId};
+    use crate::ids::RegId;
+    use crate::isa::Instruction;
 
     /// 1-FU scalar machine: fetch(p=2) → es{alu} with one RF and one memory.
     fn machine() -> (Diagram, TestOps) {
@@ -533,5 +543,50 @@ mod tests {
         let single = build(1);
         let dual = build(2);
         assert!(dual < single, "dual {dual} should beat single {single}");
+    }
+
+    #[test]
+    fn partition_fallback_matches_full_scan() {
+        // a template-violating kernel whose addresses migrate between two
+        // memories across iterations: the partition check must detect it
+        // and fall back to the full memory_of scan (deps/updates land on
+        // the right scoreboard entries either way)
+        let mut d = Diagram::new("m");
+        let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+        let es = d.add_execute_stage("es");
+        let (rf, regs) = d.add_regfile("rf", "r", 2);
+        let m0 = d.add_memory("m0", 2, 2, 1, 1, 0, 1024);
+        let m1 = d.add_memory("m1", 7, 7, 1, 1, 4096, 1024);
+        let lsu = d.add_fu(es, "lsu", Latency::Fixed(1), &["load"]);
+        d.forward(ifs, es);
+        d.fu_writes(lsu, rf);
+        d.mem_reads(lsu, m0);
+        d.mem_reads(lsu, m1);
+        let load = d.op("load");
+        d.finalize().unwrap();
+        let r0 = regs[0];
+        // iteration 0: [m0, m1]; iteration 1: both addresses in m1 — the
+        // per-mem counts change while the route (mem set) stays the same
+        let kernel = LoopKernel::new(
+            "t",
+            2,
+            1,
+            Box::new(move |it, buf| {
+                let a0 = if it == 0 { 0 } else { 4096 + 100 };
+                buf.push(Instruction::new(load).writes(&[r0]).read_mem(&[a0, 4096 + it]));
+            }),
+        );
+        let mut ev = Evaluator::new(&d);
+        ev.run(&kernel, 0..2).unwrap();
+        // iteration 1 pays two m1 transactions (2 addrs / port 1 × lat 7)
+        // on the m1 node and a single minimum transaction on the m0 node,
+        // exactly like the pre-program evaluator's full scan
+        assert_eq!(ev.iter_stats.len(), 2);
+        assert!(ev.iter_stats[1].span() >= 14, "stats: {:?}", ev.iter_stats);
+        // and the fallback is bit-identical to the reference evaluator
+        let mut reference = crate::aidg::reference::RefEvaluator::new(&d);
+        reference.run(&kernel, 0..2).unwrap();
+        assert_eq!(ev.iter_stats, reference.iter_stats);
+        assert_eq!(ev.st.nodes, reference.nodes);
     }
 }

@@ -149,6 +149,7 @@ pub fn estimate_layer(
                   whole_graph: bool,
                   start: Instant,
                   cfg: &FixedPointConfig| {
+        crate::metrics::counters::note_aidg(ev.st.nodes, ev.iter_stats.len() as u64);
         LayerEstimate {
             label: kernel.label.clone(),
             k,
@@ -243,6 +244,7 @@ pub fn evaluate_whole(diagram: &Diagram, kernel: &LoopKernel) -> Result<LayerEst
     let start = Instant::now();
     let mut ev = Evaluator::new(diagram);
     ev.run(kernel, 0..kernel.k)?;
+    crate::metrics::counters::note_aidg(ev.st.nodes, ev.iter_stats.len() as u64);
     let cycles = ev.dt_aidg();
     let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
     let ov = overlap(&ev.iter_stats);

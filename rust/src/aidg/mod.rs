@@ -6,10 +6,19 @@
 //! This implementation fuses construction (§6.1) and Algorithm-1 evaluation
 //! (§6.2) into one streaming topological sweep ([`eval::Evaluator`]), and
 //! layers the §6.3 fixed-point estimator with its 1 % fallback heuristic on
-//! top ([`fixed_point::estimate_layer`]).
+//! top ([`fixed_point::estimate_layer`]). The evaluator compiles each
+//! kernel's instruction template into a precompiled *iteration program*
+//! (the crate-private `program` module) on the first iteration, so
+//! steady-state iterations replay
+//! a flat node table with zero heap allocations (the original
+//! re-derive-everything evaluator survives as the differential-test
+//! reference in `reference` under `#[cfg(test)]`).
 
 pub mod eval;
 pub mod fixed_point;
+pub(crate) mod program;
+#[cfg(test)]
+pub(crate) mod reference;
 pub mod state;
 
 pub use eval::{Evaluator, IterStat};

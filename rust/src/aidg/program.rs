@@ -1,0 +1,602 @@
+//! Precompiled iteration programs — the evaluator's allocation-free
+//! steady-state hot path.
+//!
+//! §6.3 guarantees that consecutive iterations of a [`LoopKernel`]
+//! (`crate::isa::LoopKernel`) execute the same instruction *template*: only
+//! memory addresses (and latency-expression immediates) change. The
+//! original evaluator nevertheless re-derived all template-invariant facts
+//! on every instruction of every iteration — route tails, lock owners,
+//! `ObjectKind` matches for latency dispatch, and a full `memory_of` binary
+//! search per address per memory node. This module lowers each instruction
+//! *offset* (position within the iteration) exactly once, on the first
+//! iteration that reaches it, into a flat node table the interpreter in
+//! [`super::eval::Evaluator`] replays with:
+//!
+//! - resolved lock-owner ring indices (no `Diagram::lock` calls),
+//! - pre-evaluated fixed latencies with a dynamic escape hatch for
+//!   immediate-dependent `Latency::Expr` objects,
+//! - per-memory-node operand *positions* (which addresses of the
+//!   instruction belong to this memory node) interned into one flat pool,
+//! - no per-node `ObjectKind` matching and no allocation.
+//!
+//! Per-iteration operands (register ids, addresses, immediates) are read
+//! from the emission arena ([`crate::isa::EmitBuf`]) each iteration, so the
+//! program holds only what §6.3 makes invariant.
+//!
+//! ## Safety net: the partition check
+//!
+//! The one lowered fact that is *not* implied by route invariance is the
+//! address→memory partition: an instruction touching two memories could in
+//! principle redistribute its addresses between them in a later iteration
+//! while keeping the same route. Before interpreting an instruction, the
+//! evaluator runs [`IterProgram::partition_holds`]: every recorded position
+//! is membership-checked against its memory's address range (two compares
+//! for the ubiquitous single-range memories). If the check fails — or the
+//! address-field lengths changed — the memory nodes of that instruction
+//! fall back to the original full `memory_of` scan, reproducing the
+//! reference evaluator bit-for-bit even for template-violating kernels.
+//!
+//! Route *invariance itself* is asserted the same way the original
+//! evaluator asserted it: lowering derives the route from the first
+//! iteration, and the `verify-routes` cargo feature (a dedicated cfg, off
+//! by default so debug builds no longer pay a full routing pass per
+//! instruction) re-derives and compares the route on every instruction.
+
+use crate::acadl::{Diagram, ObjectKind, Route};
+use crate::ids::{Addr, Cycle, ObjId};
+use crate::isa::InstrView;
+
+/// Sentinel for "no next node" in [`Node::next`].
+pub(crate) const NO_LOCK: u32 = u32::MAX;
+
+/// Lowered latency of one node.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Lat {
+    /// Instruction-independent latency, evaluated at lowering time.
+    Fix(Cycle),
+    /// Immediate-dependent latency (`Latency::Expr`): re-evaluated against
+    /// the current iteration's immediates through the object table. For
+    /// memory nodes this is the *per-transaction* latency.
+    Dyn(ObjId),
+}
+
+impl Lat {
+    /// Residency latency of a stage/FU node for the current immediates.
+    #[inline]
+    pub(crate) fn eval(self, d: &Diagram, imms: &[i64]) -> Cycle {
+        match self {
+            Lat::Fix(c) => c,
+            Lat::Dyn(obj) => d.object_latency_imms(obj, imms),
+        }
+    }
+}
+
+/// Kind-specific lowered data of one tail node.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum NodeKind {
+    /// Intermediate pipeline stage.
+    Stage {
+        /// Residency latency.
+        lat: Lat,
+    },
+    /// The functional unit node (register data dependencies).
+    Fu {
+        /// Execution latency.
+        lat: Lat,
+        /// Write registers anchor here (no writeBack node follows).
+        anchors_writes: bool,
+    },
+    /// A memory node (address data dependencies).
+    Mem {
+        /// Write transaction (vs read).
+        write: bool,
+        /// Per-transaction latency.
+        per_txn: Lat,
+        /// Words per transaction.
+        port: u32,
+        /// `[start, end)` into [`IterProgram::positions`]: indices of this
+        /// instruction's read/write addresses served by this memory.
+        pos: (u32, u32),
+        /// Single-range membership check `[base, end)`; `end == 0` marks a
+        /// multi-range memory (checked through `Diagram::memory_of`).
+        base: Addr,
+        /// Exclusive end of the single-range check (0 = multi-range).
+        end: Addr,
+    },
+    /// The writeBack pseudo-node (zero latency, unbounded lock).
+    WriteBack,
+}
+
+/// One lowered tail node: everything Algorithm 1 needs that is invariant
+/// across iterations, flat and `Copy` (the SoA pools — positions — live in
+/// the owning [`IterProgram`]).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Node {
+    /// The underlying object (traces, dynamic latency, slow-path scans).
+    pub obj: ObjId,
+    /// Lock-owner ring index of this node.
+    pub owner: u32,
+    /// Lock-owner ring index of the *next* tail node ([`NO_LOCK`] = last):
+    /// `t_leave` stalls until the next object frees.
+    pub next: u32,
+    /// Kind-specific lowered data.
+    pub kind: NodeKind,
+}
+
+/// Per-offset metadata: which slice of the node table interprets the j-th
+/// instruction of an iteration, plus the template-shape facts the fast
+/// memory path depends on.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct OffsetMeta {
+    /// `[start, end)` into [`IterProgram::nodes`].
+    pub nodes: (u32, u32),
+    /// Lock-owner ring index of the first tail object (the IFS `t_leave`
+    /// stalls on it).
+    pub first_tail_lock: u32,
+    /// `read_addrs` length at lowering time.
+    pub ra_len: u32,
+    /// `write_addrs` length at lowering time.
+    pub wa_len: u32,
+}
+
+/// A compiled iteration program: one [`OffsetMeta`] per instruction offset,
+/// a flat node table, and the interned memory-position pool. Grown
+/// offset-by-offset as the first iteration streams through the evaluator;
+/// steady-state iterations only read it.
+#[derive(Debug, Default)]
+pub(crate) struct IterProgram {
+    /// Per-offset node ranges.
+    pub offsets: Vec<OffsetMeta>,
+    /// Flat tail-node table.
+    pub nodes: Vec<Node>,
+    /// Interned address-position pool (indices into an instruction's
+    /// `read_addrs` / `write_addrs`).
+    pub positions: Vec<u32>,
+}
+
+impl IterProgram {
+    /// Number of lowered instruction offsets.
+    pub fn len(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// The position slice of a memory node.
+    #[inline]
+    pub fn positions_of(&self, pos: (u32, u32)) -> &[u32] {
+        &self.positions[pos.0 as usize..pos.1 as usize]
+    }
+
+    /// Single-range membership data of a memory object: `(base, end)` when
+    /// the memory claims exactly one address range, the `(0, 0)` multi-range
+    /// sentinel otherwise.
+    fn range_check(d: &Diagram, mem: ObjId) -> (Addr, Addr) {
+        if let ObjectKind::Memory { address_ranges, .. } = &d.object(mem).kind {
+            if let [(base, end)] = address_ranges[..] {
+                return (base, end);
+            }
+        }
+        (0, 0)
+    }
+
+    /// Record the positions of `addrs` entries served by `mem` and build
+    /// the memory node.
+    fn lower_mem_node(
+        &mut self,
+        d: &Diagram,
+        mem: ObjId,
+        write: bool,
+        addrs: &[Addr],
+    ) -> NodeKind {
+        let start = self.positions.len() as u32;
+        for (i, &a) in addrs.iter().enumerate() {
+            if d.memory_of(a) == Some(mem) {
+                self.positions.push(i as u32);
+            }
+        }
+        let end = self.positions.len() as u32;
+        let (per_txn, port) =
+            if let ObjectKind::Memory { read_latency, write_latency, port_width, .. } =
+                &d.object(mem).kind
+            {
+                let lat = if write { write_latency } else { read_latency };
+                let per = match lat {
+                    crate::acadl::Latency::Fixed(c) => Lat::Fix(*c),
+                    crate::acadl::Latency::Expr(_) => Lat::Dyn(mem),
+                };
+                (per, *port_width)
+            } else {
+                (Lat::Fix(0), 1)
+            };
+        let (base, range_end) = Self::range_check(d, mem);
+        NodeKind::Mem { write, per_txn, port, pos: (start, end), base, end: range_end }
+    }
+
+    /// Lowered latency of a stage/FU object.
+    fn lower_lat(d: &Diagram, obj: ObjId) -> Lat {
+        match d.object(obj).fixed_latency() {
+            Some(c) => Lat::Fix(c),
+            None => Lat::Dyn(obj),
+        }
+    }
+
+    /// Lower the next instruction offset from its first-iteration view and
+    /// resolved route. Offsets must be lowered in order.
+    pub fn lower_offset(&mut self, d: &Diagram, route: &Route, view: &InstrView<'_>) {
+        let wb = d.writeback_obj();
+        let node_start = self.nodes.len() as u32;
+
+        // Assemble the tail object order once: stages…, FU, read mems…,
+        // writeBack?, write mems… — mirroring the reference evaluator's
+        // per-instruction scratch buffer.
+        for &s in &route.stages {
+            let kind = match &d.object(s).kind {
+                ObjectKind::PipelineStage { .. } => NodeKind::Stage { lat: Self::lower_lat(d, s) },
+                _ => NodeKind::Stage { lat: Lat::Fix(0) },
+            };
+            self.push_node(d, s, kind);
+        }
+        let fu_kind = match &d.object(route.fu).kind {
+            ObjectKind::FunctionalUnit { .. } => NodeKind::Fu {
+                lat: Self::lower_lat(d, route.fu),
+                anchors_writes: !route.has_writeback,
+            },
+            _ => NodeKind::Fu { lat: Lat::Fix(0), anchors_writes: !route.has_writeback },
+        };
+        self.push_node(d, route.fu, fu_kind);
+        for &m in &route.read_mems {
+            let kind = self.lower_mem_node(d, m, false, view.read_addrs);
+            self.push_node(d, m, kind);
+        }
+        if route.has_writeback {
+            self.push_node(d, wb, NodeKind::WriteBack);
+        }
+        for &m in &route.write_mems {
+            let kind = self.lower_mem_node(d, m, true, view.write_addrs);
+            self.push_node(d, m, kind);
+        }
+
+        // Back-patch each node's `next` lock (the structural stall target).
+        let node_end = self.nodes.len() as u32;
+        for i in node_start..node_end.saturating_sub(1) {
+            self.nodes[i as usize].next = self.nodes[i as usize + 1].owner;
+        }
+        let first_tail_lock =
+            self.nodes.get(node_start as usize).map_or(NO_LOCK, |n| n.owner);
+        self.offsets.push(OffsetMeta {
+            nodes: (node_start, node_end),
+            first_tail_lock,
+            ra_len: view.read_addrs.len() as u32,
+            wa_len: view.write_addrs.len() as u32,
+        });
+    }
+
+    fn push_node(&mut self, d: &Diagram, obj: ObjId, kind: NodeKind) {
+        self.nodes.push(Node {
+            obj,
+            owner: d.lock(obj).owner.idx() as u32,
+            next: NO_LOCK,
+            kind,
+        });
+    }
+
+    /// True when the current iteration's addresses still obey the lowered
+    /// address→memory partition (and field lengths), so the memory nodes
+    /// can use their interned positions instead of a full `memory_of` scan.
+    /// Every address position of the instruction is recorded under exactly
+    /// one memory node — `Diagram::route` fails on any address no memory
+    /// claims, so a lowered offset cannot have unmapped positions — and
+    /// therefore checking all recorded positions covers the whole
+    /// partition.
+    #[inline]
+    pub fn partition_holds(&self, d: &Diagram, meta: &OffsetMeta, view: &InstrView<'_>) -> bool {
+        if view.read_addrs.len() != meta.ra_len as usize
+            || view.write_addrs.len() != meta.wa_len as usize
+        {
+            return false;
+        }
+        for node in &self.nodes[meta.nodes.0 as usize..meta.nodes.1 as usize] {
+            if let NodeKind::Mem { write, pos, base, end, .. } = node.kind {
+                let addrs = if write { view.write_addrs } else { view.read_addrs };
+                for &p in self.positions_of(pos) {
+                    let a = addrs[p as usize];
+                    let ok = if end > base {
+                        a >= base && a < end
+                    } else {
+                        d.memory_of(a) == Some(node.obj)
+                    };
+                    if !ok {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use crate::acadl::{Diagram, Latency};
+    use crate::aidg::reference::RefEvaluator;
+    use crate::aidg::Evaluator;
+    use crate::dnn::zoo;
+    use crate::ids::{OpId, RegId};
+    use crate::isa::LoopKernel;
+    use crate::mapping::{
+        gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper,
+        tensor_op::TensorOpMapper, Mapper,
+    };
+    use crate::testkit::{Prop, Rng};
+
+    /// A randomized scalar machine: random fetch geometry, an optional
+    /// expression-latency pipeline stage, 1–3 memories with mixed fixed /
+    /// immediate-dependent latencies and port widths, and two FUs.
+    struct RandMachine {
+        d: Diagram,
+        load: OpId,
+        store: OpId,
+        mac: OpId,
+        regs: Vec<RegId>,
+        mem_bases: Vec<u64>,
+    }
+
+    fn random_machine(rng: &mut Rng) -> RandMachine {
+        let mut d = Diagram::new("rand");
+        let pw = rng.range_u32(1, 3);
+        let (_im, ifs) = d.add_fetch(
+            "imem",
+            rng.range_u64(1, 2),
+            pw,
+            "ifs",
+            rng.range_u64(1, 2),
+            rng.range_u32(1, 4),
+        );
+        let es = d.add_execute_stage("es");
+        let stage = rng.bool().then(|| {
+            let lat = if rng.bool() {
+                Latency::Fixed(rng.range_u64(0, 2))
+            } else {
+                Latency::parse("1 + imm0 % 3").unwrap()
+            };
+            d.add_stage("ps", lat)
+        });
+        let (rf, regs) = d.add_regfile("rf", "r", 4);
+        let n_mems = rng.range_usize(1, 3);
+        let mut mems = Vec::new();
+        let mut mem_bases = Vec::new();
+        for i in 0..n_mems {
+            let base = (i as u64) << 20;
+            let rl = if rng.bool() {
+                Latency::Fixed(rng.range_u64(1, 6))
+            } else {
+                Latency::parse("2 + imm1 % 4").unwrap()
+            };
+            let wl = if rng.bool() {
+                Latency::Fixed(rng.range_u64(1, 6))
+            } else {
+                Latency::parse("1 + imm0 % 2").unwrap()
+            };
+            let m = d.add_memory(
+                &format!("mem{i}"),
+                rl,
+                wl,
+                rng.range_u32(1, 4),
+                rng.range_u32(1, 2),
+                base,
+                1 << 20,
+            );
+            mems.push(m);
+            mem_bases.push(base);
+        }
+        let lsu_lat = if rng.bool() {
+            Latency::Fixed(rng.range_u64(1, 2))
+        } else {
+            Latency::parse("1 + imm0 % 2").unwrap()
+        };
+        let lsu = d.add_fu(es, "lsu", lsu_lat, &["load", "store"]);
+        let alu = d.add_fu(es, "alu", Latency::Fixed(rng.range_u64(1, 3)), &["mac"]);
+        match stage {
+            Some(s) => {
+                d.forward(ifs, s);
+                d.forward(s, es);
+            }
+            None => d.forward(ifs, es),
+        }
+        d.fu_reads(lsu, rf);
+        d.fu_writes(lsu, rf);
+        d.fu_reads(alu, rf);
+        d.fu_writes(alu, rf);
+        for &m in &mems {
+            d.mem_reads(lsu, m);
+            d.mem_writes(lsu, m);
+        }
+        let (load, store, mac) = (d.op("load"), d.op("store"), d.op("mac"));
+        d.finalize().unwrap();
+        RandMachine { d, load, store, mac, regs, mem_bases }
+    }
+
+    /// Template slot of a random §6.3 kernel: fixed op/registers/shape,
+    /// addresses strided by the iteration index, immediates varying per
+    /// iteration (exercising the dynamic-latency escape hatch).
+    #[derive(Clone, Copy)]
+    enum Slot {
+        Load { w: usize, mem: usize, mem2: Option<usize>, na: u64, off: u64, stride: u64 },
+        Store { r: usize, mem: usize, off: u64, stride: u64 },
+        Mac { a: usize, b: usize, w: usize },
+    }
+
+    fn random_kernel(rng: &mut Rng, m: &RandMachine, k: u64) -> LoopKernel {
+        let n_slots = rng.range_usize(2, 7);
+        let mut slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            let s = match rng.range_u32(0, 3) {
+                0 | 1 => Slot::Load {
+                    w: rng.range_usize(0, m.regs.len() - 1),
+                    mem: rng.range_usize(0, m.mem_bases.len() - 1),
+                    mem2: (m.mem_bases.len() > 1 && rng.bool())
+                        .then(|| rng.range_usize(0, m.mem_bases.len() - 1)),
+                    na: rng.range_u64(1, 4),
+                    off: rng.range_u64(0, 4096),
+                    stride: rng.range_u64(1, 8),
+                },
+                2 => Slot::Store {
+                    r: rng.range_usize(0, m.regs.len() - 1),
+                    mem: rng.range_usize(0, m.mem_bases.len() - 1),
+                    off: rng.range_u64(0, 4096),
+                    stride: rng.range_u64(1, 8),
+                },
+                _ => Slot::Mac {
+                    a: rng.range_usize(0, m.regs.len() - 1),
+                    b: rng.range_usize(0, m.regs.len() - 1),
+                    w: rng.range_usize(0, m.regs.len() - 1),
+                },
+            };
+            slots.push(s);
+        }
+        let (load, store, mac) = (m.load, m.store, m.mac);
+        let regs = m.regs.clone();
+        let bases = m.mem_bases.clone();
+        let n = slots.len();
+        LoopKernel::new(
+            "rand",
+            k,
+            n,
+            Box::new(move |it, buf| {
+                for s in &slots {
+                    match *s {
+                        Slot::Load { w, mem, mem2, na, off, stride } => {
+                            let mut b = buf
+                                .instr(load)
+                                .writes(&[regs[w]])
+                                .read_mem_iter(
+                                    (0..na).map(|q| bases[mem] + off + stride * it + q),
+                                );
+                            if let Some(m2) = mem2 {
+                                b = b.read_mem(&[bases[m2] + off + stride * it]);
+                            }
+                            b.imm((it % 3) as i64).imm((it % 5) as i64);
+                        }
+                        Slot::Store { r, mem, off, stride } => {
+                            buf.instr(store)
+                                .reads(&[regs[r]])
+                                .write_mem(&[bases[mem] + off + stride * it])
+                                .imm((it % 2) as i64)
+                                .imm((it % 7) as i64);
+                        }
+                        Slot::Mac { a, b, w } => {
+                            buf.instr(mac)
+                                .reads(&[regs[a], regs[b]])
+                                .writes(&[regs[w]])
+                                .imm((it % 4) as i64);
+                        }
+                    }
+                }
+            }),
+        )
+    }
+
+    /// The headline differential property: the iteration-program
+    /// interpreter is bit-identical to the retained reference evaluator
+    /// across random architectures × random template kernels, including
+    /// chunk boundaries (the §6.3 streaming contract) and dynamic
+    /// latencies.
+    #[test]
+    fn property_program_matches_reference_on_random_machines() {
+        Prop::new(0xA1D6).cases(30).run(|rng| {
+            let m = random_machine(rng);
+            let k = rng.range_u64(8, 48);
+            let kernel = random_kernel(rng, &m, k);
+            let mut fast = Evaluator::new(&m.d);
+            let mut reference = RefEvaluator::new(&m.d);
+            // chunk the fast path so program reuse crosses run() calls
+            let cut = rng.range_u64(1, k - 1);
+            fast.run(&kernel, 0..cut).unwrap();
+            fast.run(&kernel, cut..k).unwrap();
+            reference.run(&kernel, 0..k).unwrap();
+            assert_eq!(fast.iter_stats, reference.iter_stats, "k={k}");
+            assert_eq!(fast.st.nodes, reference.nodes, "k={k}");
+            assert_eq!(fast.dt_aidg(), reference.dt_aidg(), "k={k}");
+        });
+    }
+
+    /// Every real mapper's kernels (all four architectures × TC-ResNet8)
+    /// evaluate bit-identically through the program interpreter and the
+    /// reference evaluator.
+    #[test]
+    fn program_matches_reference_on_mapped_kernels() {
+        let mappers: Vec<(&str, Box<dyn Mapper>)> = vec![
+            (
+                "systolic4x4",
+                Box::new(ScalarMapper::new(Arc::new(
+                    crate::accel::Systolic::new(crate::accel::SystolicConfig::new(4, 4))
+                        .unwrap(),
+                ))),
+            ),
+            (
+                "gemmini",
+                Box::new(GemmTileMapper::new(Arc::new(
+                    crate::accel::Gemmini::new(crate::accel::GemminiConfig::default()).unwrap(),
+                ))),
+            ),
+            (
+                "ultratrail",
+                Box::new(TensorOpMapper::new(Arc::new(
+                    crate::accel::UltraTrail::new(crate::accel::UltraTrailConfig::default())
+                        .unwrap(),
+                ))),
+            ),
+            (
+                "plasticine",
+                Box::new(PlasticineMapper::new(Arc::new(
+                    crate::accel::Plasticine::new(crate::accel::PlasticineConfig::new(2, 3, 8))
+                        .unwrap(),
+                ))),
+            ),
+        ];
+        let net = zoo::tc_resnet8();
+        for (name, mapper) in &mappers {
+            let mapped = mapper.map_network(&net).unwrap();
+            for ml in mapped.iter().filter(|l| !l.fused) {
+                for kernel in &ml.kernels {
+                    let iters = kernel.k.min(8);
+                    let mut fast = Evaluator::new(mapper.diagram());
+                    let mut reference = RefEvaluator::new(mapper.diagram());
+                    fast.run(kernel, 0..iters).unwrap();
+                    reference.run(kernel, 0..iters).unwrap();
+                    assert_eq!(
+                        fast.iter_stats, reference.iter_stats,
+                        "{name}: {}",
+                        kernel.label
+                    );
+                    assert_eq!(fast.st.nodes, reference.nodes, "{name}: {}", kernel.label);
+                }
+            }
+        }
+    }
+
+    /// Lowering compiles one node per tail object and interns memory
+    /// positions; re-running more iterations grows nothing.
+    #[test]
+    fn lowering_is_one_shot_and_flat() {
+        let m = {
+            let mut rng = Rng::new(7);
+            random_machine(&mut rng)
+        };
+        let kernel = {
+            let mut rng = Rng::new(8);
+            random_kernel(&mut rng, &m, 32)
+        };
+        let mut ev = Evaluator::new(&m.d);
+        ev.run(&kernel, 0..2).unwrap();
+        let offsets = ev_program_len(&ev);
+        assert_eq!(offsets, kernel.insts_per_iter);
+        ev.run(&kernel, 2..32).unwrap();
+        assert_eq!(ev_program_len(&ev), offsets, "program must not re-lower");
+    }
+
+    fn ev_program_len(ev: &Evaluator<'_>) -> usize {
+        ev.program_len()
+    }
+}

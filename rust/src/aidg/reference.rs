@@ -1,0 +1,404 @@
+//! The pre-program Algorithm-1 evaluator, retained verbatim as the
+//! differential-test reference (`#[cfg(test)]` only — it never ships).
+//!
+//! This is the evaluator as it existed before the precompiled iteration
+//! programs ([`super::program`]): every instruction of every iteration
+//! re-derives its route tail, lock owners and latency dispatch, probes a
+//! hashmap address scoreboard, and allocates owned [`Instruction`]s. It is
+//! deliberately *independent* of the optimized frontier containers — the
+//! structural rings use a `BTreeMap` delta map, the buffer fill a hashmap
+//! with the historical 4096-entry lazy compaction, and the address
+//! scoreboard a plain hashmap — so a differential test between this and
+//! [`super::eval::Evaluator`] exercises both the interpreter *and* the
+//! rewritten state structures.
+
+use std::collections::BTreeMap;
+
+use crate::acadl::{Diagram, ObjectKind};
+use crate::ids::{Addr, Cycle, FxHashMap, ObjId};
+use crate::isa::{Instruction, LoopKernel};
+use crate::Result;
+
+/// Interval-occupancy tracker (reference form: `BTreeMap` delta map).
+#[derive(Debug, Clone)]
+enum RefRingRepr {
+    Serial { last: Cycle },
+    Concurrent { events: BTreeMap<Cycle, i64>, base_active: i64 },
+    Unbounded,
+}
+
+#[derive(Debug, Clone)]
+struct RefSlotRing {
+    repr: RefRingRepr,
+    capacity: u32,
+}
+
+impl RefSlotRing {
+    fn new(capacity: u32) -> Self {
+        let repr = match capacity {
+            u32::MAX => RefRingRepr::Unbounded,
+            1 => RefRingRepr::Serial { last: 0 },
+            _ => RefRingRepr::Concurrent { events: BTreeMap::new(), base_active: 0 },
+        };
+        Self { repr, capacity }
+    }
+
+    fn gate(&self, t0: Cycle) -> Cycle {
+        match &self.repr {
+            RefRingRepr::Unbounded => t0,
+            RefRingRepr::Serial { last } => t0.max(*last),
+            RefRingRepr::Concurrent { events, base_active } => {
+                let cap = self.capacity as i64;
+                let mut active =
+                    base_active + events.range(..=t0).map(|(_, d)| *d).sum::<i64>();
+                if active < cap {
+                    return t0;
+                }
+                for (&t, &d) in
+                    events.range((std::ops::Bound::Excluded(t0), std::ops::Bound::Unbounded))
+                {
+                    active += d;
+                    if active < cap {
+                        return t;
+                    }
+                }
+                unreachable!("occupancy never drains")
+            }
+        }
+    }
+
+    fn insert(&mut self, enter: Cycle, leave: Cycle, horizon: Cycle) {
+        match &mut self.repr {
+            RefRingRepr::Unbounded => {}
+            RefRingRepr::Serial { last } => {
+                if leave > *last {
+                    *last = leave;
+                }
+            }
+            RefRingRepr::Concurrent { events, base_active } => {
+                if leave <= enter {
+                    return;
+                }
+                *events.entry(enter).or_insert(0) += 1;
+                *events.entry(leave).or_insert(0) -= 1;
+                while let Some((&t, _)) = events.first_key_value() {
+                    if t >= horizon {
+                        break;
+                    }
+                    let d = events.remove(&t).unwrap();
+                    *base_active += d;
+                }
+            }
+        }
+    }
+}
+
+/// Per-cycle fill counters (reference form: hashmap + lazy compaction).
+#[derive(Debug, Default)]
+struct RefBufferFill {
+    counts: FxHashMap<Cycle, u32>,
+    watermark: Cycle,
+}
+
+impl RefBufferFill {
+    fn alloc(&mut self, t0: Cycle, cap: u32) -> Cycle {
+        let t = self.probe(t0, cap);
+        *self.counts.entry(t).or_insert(0) += 1;
+        t
+    }
+
+    fn probe(&self, t0: Cycle, cap: u32) -> Cycle {
+        let mut t = t0.max(self.watermark);
+        loop {
+            if self.counts.get(&t).copied().unwrap_or(0) < cap {
+                return t;
+            }
+            t += 1;
+        }
+    }
+
+    fn commit(&mut self, t: Cycle) {
+        *self.counts.entry(t).or_insert(0) += 1;
+    }
+
+    fn prune_below(&mut self, t: Cycle) {
+        if t > self.watermark {
+            self.watermark = t;
+            if self.counts.len() > 4096 {
+                self.counts.retain(|&k, _| k >= t);
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Tag {
+    Stage,
+    Fu,
+    ReadMem,
+    WriteBack,
+    WriteMem,
+}
+
+/// The reference streaming evaluator (pre-program hot path).
+pub(crate) struct RefEvaluator<'d> {
+    d: &'d Diagram,
+    obj_ring: Vec<RefSlotRing>,
+    reg_last: Vec<Cycle>,
+    addr_last: FxHashMap<Addr, Cycle>,
+    b_enter: RefBufferFill,
+    b_forward: RefBufferFill,
+    instr_index: u64,
+    group_slots: Vec<Cycle>,
+    next_fetch_start: Cycle,
+    last_ifs_enter: Cycle,
+    horizon: Cycle,
+    /// Total AIDG nodes processed (compared against the optimized path).
+    pub nodes: u64,
+    /// (min_enter, max_leave) per evaluated iteration, in order.
+    pub iter_stats: Vec<super::IterStat>,
+    buf: Vec<Instruction>,
+    tail: Vec<(ObjId, Tag)>,
+    routes: Vec<std::sync::Arc<crate::acadl::Route>>,
+    p: u64,
+    imem_read_lat: Cycle,
+    ifs_lat: Cycle,
+    issue_buf: u32,
+    cur_min_enter: Cycle,
+    cur_max_leave: Cycle,
+}
+
+impl<'d> RefEvaluator<'d> {
+    pub fn new(d: &'d Diagram) -> Self {
+        let f = d.fetch_config();
+        Self {
+            d,
+            obj_ring: (0..d.num_objects())
+                .map(|i| RefSlotRing::new(d.lock(ObjId(i as u32)).capacity))
+                .collect(),
+            reg_last: vec![0; d.num_regs()],
+            addr_last: FxHashMap::default(),
+            b_enter: RefBufferFill::default(),
+            b_forward: RefBufferFill::default(),
+            instr_index: 0,
+            group_slots: Vec::new(),
+            next_fetch_start: 0,
+            last_ifs_enter: 0,
+            horizon: 0,
+            nodes: 0,
+            iter_stats: Vec::new(),
+            buf: Vec::new(),
+            tail: Vec::new(),
+            routes: Vec::new(),
+            p: f.port_width as u64,
+            imem_read_lat: f.read_latency,
+            ifs_lat: f.ifs_latency,
+            issue_buf: f.issue_buffer_size,
+            cur_min_enter: Cycle::MAX,
+            cur_max_leave: 0,
+        }
+    }
+
+    pub fn run(&mut self, kernel: &LoopKernel, range: std::ops::Range<u64>) -> Result<()> {
+        for it in range {
+            self.buf.clear();
+            kernel.emit(it, &mut self.buf);
+            self.cur_min_enter = Cycle::MAX;
+            self.cur_max_leave = 0;
+            let buf = std::mem::take(&mut self.buf);
+            let mut res = Ok(());
+            for (j, instr) in buf.iter().enumerate() {
+                res = self.process(instr, j);
+                if res.is_err() {
+                    break;
+                }
+            }
+            self.buf = buf;
+            res?;
+            self.iter_stats.push(super::IterStat {
+                min_enter: self.cur_min_enter,
+                max_leave: self.cur_max_leave,
+            });
+        }
+        Ok(())
+    }
+
+    pub fn dt_aidg(&self) -> Cycle {
+        let min = self.iter_stats.first().map_or(0, |s| s.min_enter);
+        let max = self.iter_stats.iter().map(|s| s.max_leave).max().unwrap_or(0);
+        max - min
+    }
+
+    fn fetch_leave(&mut self) -> Cycle {
+        let within = (self.instr_index % self.p) as usize;
+        if within == 0 {
+            let t_enter = self.next_fetch_start.max(self.last_ifs_enter);
+            if t_enter < self.cur_min_enter {
+                self.cur_min_enter = t_enter;
+            }
+            self.horizon = t_enter;
+            let t_stop = t_enter + self.imem_read_lat;
+            self.group_slots.clear();
+            for _ in 0..self.p {
+                let slot = self.b_forward.alloc(t_stop, self.issue_buf);
+                self.group_slots.push(slot);
+            }
+            self.next_fetch_start = t_stop;
+            self.b_forward.prune_below(t_enter);
+            self.nodes += 1;
+        }
+        self.instr_index += 1;
+        self.group_slots[within]
+    }
+
+    fn process(&mut self, instr: &Instruction, offset: usize) -> Result<()> {
+        let route = if let Some(r) = self.routes.get(offset) {
+            r.clone()
+        } else {
+            let r = self.d.route(instr)?;
+            self.routes.push(r.clone());
+            r
+        };
+        let fetch_leave = self.fetch_leave();
+
+        let f = self.d.fetch_config();
+        let wb = self.d.writeback_obj();
+
+        let ifs_lock = self.d.lock(f.fetch_stage).owner;
+        let mut t_enter = fetch_leave;
+        loop {
+            let tg = self.obj_ring[ifs_lock.idx()].gate(t_enter);
+            let tb = self.b_enter.probe(tg, self.issue_buf);
+            if tb == t_enter {
+                break;
+            }
+            t_enter = tb;
+        }
+        self.b_enter.commit(t_enter);
+        if t_enter < self.cur_min_enter {
+            self.cur_min_enter = t_enter;
+        }
+        self.last_ifs_enter = t_enter;
+        self.b_enter.prune_below(fetch_leave.saturating_sub(1));
+        let mut t_stop = t_enter + self.ifs_lat;
+        self.nodes += 1;
+
+        let mut tail = std::mem::take(&mut self.tail);
+        tail.clear();
+        for &s in &route.stages {
+            tail.push((s, Tag::Stage));
+        }
+        tail.push((route.fu, Tag::Fu));
+        for &m in &route.read_mems {
+            tail.push((m, Tag::ReadMem));
+        }
+        if route.has_writeback {
+            tail.push((wb, Tag::WriteBack));
+        }
+        for &m in &route.write_mems {
+            tail.push((m, Tag::WriteMem));
+        }
+
+        let first_lock = self.d.lock(tail[0].0).owner;
+        let horizon = self.horizon;
+        let mut t_leave = self.obj_ring[first_lock.idx()].gate(t_stop);
+        self.obj_ring[ifs_lock.idx()].insert(t_enter, t_leave, horizon);
+        let mut prev_leave = t_leave;
+
+        for j in 0..tail.len() {
+            let (obj, ref tag) = tail[j];
+            let lock = self.d.lock(obj);
+            t_enter = self.obj_ring[lock.owner.idx()].gate(prev_leave);
+
+            let mut deps: Cycle = 0;
+            let lat: Cycle = match tag {
+                Tag::Stage => match &self.d.object(obj).kind {
+                    ObjectKind::PipelineStage { latency } => latency.eval(instr),
+                    _ => 0,
+                },
+                Tag::Fu => {
+                    for r in instr.read_regs.iter().chain(instr.write_regs.iter()) {
+                        deps = deps.max(self.reg_last[r.0 as usize]);
+                    }
+                    match &self.d.object(obj).kind {
+                        ObjectKind::FunctionalUnit { latency, .. } => latency.eval(instr),
+                        _ => 0,
+                    }
+                }
+                Tag::ReadMem => {
+                    let mut n = 0usize;
+                    for &a in &instr.read_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            n += 1;
+                            deps =
+                                deps.max(self.addr_last.get(&a).copied().unwrap_or(0));
+                        }
+                    }
+                    self.d.mem_latency(obj, n, false, instr)
+                }
+                Tag::WriteBack => 0,
+                Tag::WriteMem => {
+                    let mut n = 0usize;
+                    for &a in &instr.write_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            n += 1;
+                            deps =
+                                deps.max(self.addr_last.get(&a).copied().unwrap_or(0));
+                        }
+                    }
+                    self.d.mem_latency(obj, n, true, instr)
+                }
+            };
+
+            t_stop = t_enter.max(deps) + lat;
+            t_leave = if j + 1 < tail.len() {
+                let next_lock = self.d.lock(tail[j + 1].0).owner;
+                self.obj_ring[next_lock.idx()].gate(t_stop)
+            } else {
+                t_stop
+            };
+            self.obj_ring[lock.owner.idx()].insert(t_enter, t_leave, horizon);
+            self.nodes += 1;
+
+            match tag {
+                Tag::Fu => {
+                    for r in &instr.read_regs {
+                        self.reg_last[r.0 as usize] = t_leave;
+                    }
+                    if !route.has_writeback {
+                        for r in &instr.write_regs {
+                            self.reg_last[r.0 as usize] = t_leave;
+                        }
+                    }
+                }
+                Tag::ReadMem => {
+                    for &a in &instr.read_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            self.addr_last.insert(a, t_leave);
+                        }
+                    }
+                }
+                Tag::WriteBack => {
+                    for r in &instr.write_regs {
+                        self.reg_last[r.0 as usize] = t_leave;
+                    }
+                }
+                Tag::WriteMem => {
+                    for &a in &instr.write_addrs {
+                        if self.d.memory_of(a) == Some(obj) {
+                            self.addr_last.insert(a, t_leave);
+                        }
+                    }
+                }
+                Tag::Stage => {}
+            }
+            prev_leave = t_leave;
+        }
+
+        self.tail = tail;
+        if prev_leave > self.cur_max_leave {
+            self.cur_max_leave = prev_leave;
+        }
+        Ok(())
+    }
+}

@@ -9,8 +9,16 @@
 //! time (§6.3) with memory bounded by the *live* frontier instead of the
 //! whole graph — the whole-graph evaluation of Table 5 is the same sweep run
 //! to `k`.
+//!
+//! Every container here is engineered for the iteration-program hot path
+//! (`crate::aidg::program`): steady-state operation touches only
+//! preallocated storage — the address scoreboard is a paged dense plane
+//! instead of a hashmap, the issue-buffer fill counters are a watermarked
+//! ring instead of a hashmap probed one `t += 1` at a time, and concurrent
+//! structural rings keep their occupancy deltas in a reused sorted deque
+//! instead of a node-allocating `BTreeMap`.
 
-
+use std::collections::VecDeque;
 
 use crate::ids::{Addr, Cycle, FxHashMap};
 
@@ -24,18 +32,21 @@ use crate::ids::{Addr, Cycle, FxHashMap};
 /// leave times is correct. The exact model is interval occupancy: each
 /// occupant holds the object over `[enter, leave)`; the next claimant ready
 /// at `t0` enters at the earliest `t ≥ t0` where fewer than `capacity`
-/// intervals are active. Stored as a time-sorted delta map (+1 at entry,
-/// −1 at leave), pruned below the evaluation horizon (the current fetch
-/// time — no future claim can be gated earlier), so the live window stays
-/// tiny.
+/// intervals are active. Stored as a time-sorted delta sequence (+1 at
+/// entry, −1 at leave; equal times merge), pruned below the evaluation
+/// horizon (the current fetch time — no future claim can be gated earlier),
+/// so the live window stays tiny and its deque capacity is reused across
+/// iterations (no steady-state allocation).
 #[derive(Debug, Clone)]
 enum RingRepr {
     /// capacity == 1: claims serialize, the last leave time is the gate.
     Serial { last: Cycle },
-    /// 1 < capacity < ∞: full interval-occupancy delta map.
+    /// 1 < capacity < ∞: full interval-occupancy delta window.
     Concurrent {
-        /// Time-sorted occupancy deltas at or after the horizon.
-        events: std::collections::BTreeMap<Cycle, i64>,
+        /// Time-sorted `(time, merged delta)` events at or after the
+        /// horizon (zero-delta entries may persist until pruned, exactly
+        /// like the entries a delta map would retain).
+        events: VecDeque<(Cycle, i64)>,
         /// Active count just below the first retained event.
         base_active: i64,
     },
@@ -64,10 +75,7 @@ impl SlotRing {
         let repr = match capacity {
             u32::MAX => RingRepr::Unbounded,
             1 => RingRepr::Serial { last: 0 },
-            _ => RingRepr::Concurrent {
-                events: std::collections::BTreeMap::new(),
-                base_active: 0,
-            },
+            _ => RingRepr::Concurrent { events: VecDeque::new(), base_active: 0 },
         };
         Self { repr, capacity }
     }
@@ -80,22 +88,42 @@ impl SlotRing {
             RingRepr::Serial { last } => t0.max(*last),
             RingRepr::Concurrent { events, base_active } => {
                 let cap = self.capacity as i64;
-                let mut active =
-                    base_active + events.range(..=t0).map(|(_, d)| *d).sum::<i64>();
+                let mut active = *base_active;
+                let mut i = 0;
+                while i < events.len() {
+                    let (t, d) = events[i];
+                    if t > t0 {
+                        break;
+                    }
+                    active += d;
+                    i += 1;
+                }
                 if active < cap {
                     return t0;
                 }
-                for (&t, &d) in
-                    events.range((std::ops::Bound::Excluded(t0), std::ops::Bound::Unbounded))
-                {
+                while i < events.len() {
+                    let (t, d) = events[i];
                     active += d;
                     if active < cap {
                         return t;
                     }
+                    i += 1;
                 }
                 unreachable!("occupancy never drains: every interval carries its leave event")
             }
         }
+    }
+
+    /// Merge `delta` into the sorted event window at time `t`.
+    fn bump(events: &mut VecDeque<(Cycle, i64)>, t: Cycle, delta: i64) {
+        let i = events.partition_point(|&(et, _)| et < t);
+        if let Some(e) = events.get_mut(i) {
+            if e.0 == t {
+                e.1 += delta;
+                return;
+            }
+        }
+        events.insert(i, (t, delta));
     }
 
     /// Record an occupant over `[enter, leave)` and prune events below
@@ -113,37 +141,50 @@ impl SlotRing {
                 if leave <= enter {
                     return;
                 }
-                *events.entry(enter).or_insert(0) += 1;
-                *events.entry(leave).or_insert(0) -= 1;
-                while let Some((&t, _)) = events.first_key_value() {
+                Self::bump(events, enter, 1);
+                Self::bump(events, leave, -1);
+                while let Some(&(t, d)) = events.front() {
                     if t >= horizon {
                         break;
                     }
-                    let d = events.remove(&t).unwrap();
                     *base_active += d;
+                    events.pop_front();
                 }
             }
         }
     }
 
-    /// Tracked bytes of this ring's representation.
+    /// Tracked bytes of this ring's representation: the retained event
+    /// entries at their true width (time + delta per entry).
     pub fn bytes(&self) -> usize {
         match &self.repr {
-            RingRepr::Concurrent { events, .. } => events.len() * 2 * std::mem::size_of::<Cycle>(),
+            RingRepr::Concurrent { events, .. } => {
+                events.len() * (std::mem::size_of::<Cycle>() + std::mem::size_of::<i64>())
+            }
             _ => 0,
         }
     }
 }
 
 /// Per-cycle fill counters for the issue buffer (Algorithm 1's `b_enter` /
-/// `b_forward` hashmaps): at most `cap` instructions may claim the same
-/// cycle; `alloc` finds the earliest cycle `>= t0` with a free slot.
+/// `b_forward`): at most `cap` instructions may claim the same cycle;
+/// `alloc` finds the earliest cycle `>= t0` with a free slot.
+///
+/// Stored as a power-of-two ring of counters over the live window
+/// `[watermark, hi)` — times below the monotonic watermark can no longer be
+/// allocated, so their slots are zeroed and reused in place instead of
+/// retained in a hashmap until a bulk compaction (the old representation
+/// over-reported `bytes()` by up to 4096 stale entries and paid a hash per
+/// `t += 1` probe step).
 #[derive(Debug, Default)]
 pub struct BufferFill {
-    counts: FxHashMap<Cycle, u32>,
+    /// Power-of-two counter ring; slot of time `t` is `t & (len - 1)`.
+    counts: Vec<u32>,
     /// Times strictly below this can no longer be allocated (monotonic
-    /// frontier) and are pruned.
+    /// frontier); their slots are zero.
     watermark: Cycle,
+    /// Exclusive upper bound of possibly-nonzero slots (`>= watermark`).
+    hi: Cycle,
 }
 
 impl BufferFill {
@@ -151,7 +192,7 @@ impl BufferFill {
     #[inline]
     pub fn alloc(&mut self, t0: Cycle, cap: u32) -> Cycle {
         let t = self.probe(t0, cap);
-        *self.counts.entry(t).or_insert(0) += 1;
+        self.commit(t);
         t
     }
 
@@ -159,35 +200,160 @@ impl BufferFill {
     #[inline]
     pub fn probe(&self, t0: Cycle, cap: u32) -> Cycle {
         let mut t = t0.max(self.watermark);
-        loop {
-            if self.counts.get(&t).copied().unwrap_or(0) < cap {
+        if self.counts.is_empty() {
+            return t;
+        }
+        let mask = self.counts.len() - 1;
+        while t < self.hi {
+            if self.counts[(t as usize) & mask] < cap {
                 return t;
             }
             t += 1;
         }
+        t
     }
 
     /// Claim a slot at `t` (previously validated with [`Self::probe`]).
     #[inline]
     pub fn commit(&mut self, t: Cycle) {
-        *self.counts.entry(t).or_insert(0) += 1;
-    }
-
-    /// Advance the frontier: allocations below `t` can no longer occur, so
-    /// their counters are dropped. Called with the oldest time still
-    /// reachable (e.g. the previous fetch-group start).
-    pub fn prune_below(&mut self, t: Cycle) {
-        if t > self.watermark {
-            self.watermark = t;
-            if self.counts.len() > 4096 {
-                self.counts.retain(|&k, _| k >= t);
-            }
+        if t < self.watermark {
+            // A claim below the frontier can never be observed by `probe`
+            // (which snaps to the watermark), so recording it is pointless.
+            return;
+        }
+        self.ensure(t);
+        let mask = self.counts.len() - 1;
+        self.counts[(t as usize) & mask] += 1;
+        if t + 1 > self.hi {
+            self.hi = t + 1;
         }
     }
 
-    /// Tracked bytes of the buffer-fill window.
+    /// Grow the ring so the window `[watermark, t]` fits. Growth doubles
+    /// and re-places the live window, so it is amortized and stops entirely
+    /// once the evaluation's fill spread stabilizes.
+    fn ensure(&mut self, t: Cycle) {
+        let needed = (t - self.watermark + 1) as usize;
+        if needed <= self.counts.len() {
+            return;
+        }
+        let new_len = needed.next_power_of_two().max(64);
+        let mut next = vec![0u32; new_len];
+        if !self.counts.is_empty() {
+            let old_mask = self.counts.len() - 1;
+            let new_mask = new_len - 1;
+            let mut x = self.watermark;
+            while x < self.hi {
+                next[(x as usize) & new_mask] = self.counts[(x as usize) & old_mask];
+                x += 1;
+            }
+        }
+        self.counts = next;
+    }
+
+    /// Advance the frontier: allocations below `t` can no longer occur, so
+    /// their slots are zeroed for reuse. Called with the oldest time still
+    /// reachable (e.g. the previous fetch-group start).
+    pub fn prune_below(&mut self, t: Cycle) {
+        if t <= self.watermark {
+            return;
+        }
+        if !self.counts.is_empty() {
+            let mask = self.counts.len() - 1;
+            let stop = t.min(self.hi);
+            let mut x = self.watermark;
+            while x < stop {
+                self.counts[(x as usize) & mask] = 0;
+                x += 1;
+            }
+        }
+        self.watermark = t;
+        if self.hi < t {
+            self.hi = t;
+        }
+    }
+
+    /// Tracked bytes of the buffer-fill window: the ring's actual counter
+    /// storage (exact — stale times are zeroed in place, never retained).
     pub fn bytes(&self) -> usize {
-        self.counts.len() * (std::mem::size_of::<Cycle>() + std::mem::size_of::<u32>())
+        self.counts.len() * std::mem::size_of::<u32>()
+    }
+}
+
+/// Page granularity of the address plane: 512 words (4 KiB of cycle stamps)
+/// per page balances density on strided kernel address streams against
+/// waste on scattered token regions.
+const PAGE_SHIFT: u32 = 9;
+/// Words per address-plane page.
+const PAGE_WORDS: usize = 1 << PAGE_SHIFT;
+const PAGE_MASK: usize = PAGE_WORDS - 1;
+
+/// Last-accessor scoreboard over the global address space, stored as a
+/// paged dense plane: the address's high bits select a page (resolved
+/// through a small page index with a one-entry cache — kernel address
+/// streams are strided, so consecutive accesses overwhelmingly hit the same
+/// page), the low bits index a flat `[Cycle; 512]` page directly. Absent
+/// addresses read 0, exactly like the hashmap it replaces, and pages are
+/// only allocated when the footprint grows — steady-state iterations touch
+/// existing pages only.
+#[derive(Debug, Default)]
+pub struct AddrPlane {
+    index: FxHashMap<u64, u32>,
+    pages: Vec<Box<[Cycle]>>,
+    last_key: u64,
+    last_slot: u32,
+}
+
+impl AddrPlane {
+    /// Resolve a page key to its slab slot (one-entry cache in front of
+    /// the index), refreshing the cache on an index hit.
+    #[inline]
+    fn lookup(&mut self, key: u64) -> Option<u32> {
+        if !self.pages.is_empty() && self.last_key == key {
+            return Some(self.last_slot);
+        }
+        let s = *self.index.get(&key)?;
+        self.last_key = key;
+        self.last_slot = s;
+        Some(s)
+    }
+
+    /// Last-accessor leave time of `a` (0 when never accessed).
+    #[inline]
+    pub fn get(&mut self, a: Addr) -> Cycle {
+        match self.lookup(a >> PAGE_SHIFT) {
+            Some(slot) => self.pages[slot as usize][(a as usize) & PAGE_MASK],
+            None => 0,
+        }
+    }
+
+    /// Record `t` as the last-accessor leave time of `a`.
+    #[inline]
+    pub fn set(&mut self, a: Addr, t: Cycle) {
+        let key = a >> PAGE_SHIFT;
+        let slot = match self.lookup(key) {
+            Some(s) => s,
+            None => {
+                let s = self.pages.len() as u32;
+                self.pages.push(vec![0; PAGE_WORDS].into_boxed_slice());
+                self.index.insert(key, s);
+                self.last_key = key;
+                self.last_slot = s;
+                s
+            }
+        };
+        self.pages[slot as usize][(a as usize) & PAGE_MASK] = t;
+    }
+
+    /// Number of resident pages.
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Tracked bytes: resident pages at full width plus the page index.
+    pub fn bytes(&self) -> usize {
+        self.pages.len() * PAGE_WORDS * std::mem::size_of::<Cycle>()
+            + self.index.len() * (std::mem::size_of::<u64>() + std::mem::size_of::<u32>())
     }
 }
 
@@ -198,8 +364,8 @@ pub struct EvalState {
     pub obj_ring: Vec<SlotRing>,
     /// Last-accessor leave time per register id.
     pub reg_last: Vec<Cycle>,
-    /// Last-accessor leave time per memory address.
-    pub addr_last: FxHashMap<Addr, Cycle>,
+    /// Last-accessor leave time per memory address (paged dense plane).
+    pub addr_last: AddrPlane,
     /// Issue-buffer entry fill (Algorithm 1 `b_enter`).
     pub b_enter: BufferFill,
     /// Issue-buffer forward fill (Algorithm 1 `b_forward`).
@@ -230,7 +396,7 @@ impl EvalState {
         Self {
             obj_ring: (0..num_objects).map(|i| SlotRing::new(capacities(i))).collect(),
             reg_last: vec![0; num_regs],
-            addr_last: FxHashMap::default(),
+            addr_last: AddrPlane::default(),
             b_enter: BufferFill::default(),
             b_forward: BufferFill::default(),
             instr_index: 0,
@@ -244,12 +410,14 @@ impl EvalState {
     }
 
     /// Current tracked-state footprint in bytes (the Fig. 11/12 metric; see
-    /// DESIGN.md — tracked evaluator state, not process RSS).
+    /// DESIGN.md — tracked evaluator state, not process RSS). Address
+    /// scoreboard bytes are page-granular (resident 4 KiB pages), matching
+    /// what the plane actually retains.
     pub fn live_bytes(&self) -> usize {
         let rings: usize = self.obj_ring.iter().map(|r| r.bytes()).sum();
         rings
             + self.reg_last.len() * std::mem::size_of::<Cycle>()
-            + self.addr_last.len() * (std::mem::size_of::<Addr>() + std::mem::size_of::<Cycle>() + 8)
+            + self.addr_last.bytes()
             + self.b_enter.bytes()
             + self.b_forward.bytes()
     }
@@ -324,6 +492,17 @@ mod tests {
     }
 
     #[test]
+    fn ring_concurrent_prunes_and_reports_true_entry_width() {
+        let mut r = SlotRing::new(2);
+        for i in 0..100 {
+            r.insert(i * 10, i * 10 + 5, i.saturating_sub(1) * 10);
+        }
+        // the pruned window holds a handful of events of 16 bytes each
+        assert!(r.bytes() <= 8 * 16, "bytes {}", r.bytes());
+        assert_eq!(r.gate(991), 991);
+    }
+
+    #[test]
     fn ring_unbounded_never_constrains() {
         let mut r = SlotRing::new(u32::MAX);
         r.insert(0, 10, 0);
@@ -351,17 +530,51 @@ mod tests {
             b.alloc(t, 1);
         }
         b.prune_below(9_000);
-        assert!(b.counts.len() <= 10_000);
         // allocations below the watermark snap up to it
         assert!(b.alloc(0, 1) >= 9_000);
+        // zeroed slots below the watermark are reusable, and bytes reflect
+        // the ring's actual storage (no stale retained entries)
+        assert_eq!(b.bytes(), b.counts.len() * 4);
+    }
+
+    #[test]
+    fn buffer_fill_far_future_commit_then_prune() {
+        let mut b = BufferFill::default();
+        assert_eq!(b.alloc(0, 1), 0);
+        // a parked instruction commits far beyond the watermark
+        b.commit(5_000);
+        assert_eq!(b.probe(5_000, 1), 5_001);
+        b.prune_below(6_000);
+        assert_eq!(b.probe(0, 1), 6_000);
+        assert_eq!(b.alloc(6_000, 1), 6_000);
+        assert_eq!(b.alloc(6_000, 1), 6_001);
+    }
+
+    #[test]
+    fn addr_plane_defaults_to_zero_and_overwrites() {
+        let mut p = AddrPlane::default();
+        assert_eq!(p.get(42), 0);
+        p.set(42, 7);
+        p.set(43, 9);
+        assert_eq!(p.get(42), 7);
+        assert_eq!(p.get(43), 9);
+        p.set(42, 11);
+        assert_eq!(p.get(42), 11);
+        assert_eq!(p.pages(), 1);
+        // a far-away address opens a second page; the first stays intact
+        p.set(1 << 40, 3);
+        assert_eq!(p.get(1 << 40), 3);
+        assert_eq!(p.get(42), 11);
+        assert_eq!(p.pages(), 2);
+        assert!(p.bytes() >= 2 * 512 * 8);
     }
 
     #[test]
     fn state_tracks_peak() {
         let mut s = EvalState::new(4, 8, |_| 1);
         let base = s.live_bytes();
-        s.addr_last.insert(1, 1);
-        s.addr_last.insert(2, 1);
+        s.addr_last.set(1, 1);
+        s.addr_last.set(2, 1);
         s.note_peak(0);
         assert!(s.peak_bytes > base);
     }

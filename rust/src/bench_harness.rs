@@ -80,6 +80,13 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// True when the bench was invoked with `--smoke` (CI's fast pass: run the
+/// cheap phases only, but still emit the JSON artifacts so their shape can
+/// be asserted).
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

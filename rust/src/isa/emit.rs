@@ -1,0 +1,346 @@
+//! Reusable instruction-emission arena — the allocation-free counterpart of
+//! `Vec<Instruction>`.
+//!
+//! A [`LoopKernel`](super::LoopKernel) generator runs once per evaluated
+//! iteration, and with the old AoS representation every emitted
+//! [`Instruction`](super::Instruction) heap-allocated five `Vec`s
+//! (registers, addresses, immediates). [`EmitBuf`] stores the same data in
+//! struct-of-arrays form: one flat pool per operand field plus per-
+//! instruction end offsets, so a cleared buffer re-emits the next iteration
+//! into already-allocated capacity. Operand slices are *interned* into the
+//! pools by the builder returned from [`EmitBuf::instr`]; readers get them
+//! back as borrowed [`InstrView`] slices without any per-instruction
+//! indirection.
+//!
+//! The arena is the emission side of the precompiled iteration programs
+//! (`crate::aidg::program`): the evaluator's steady-state loop reads operand
+//! slices straight out of the pools, and `clear()` keeps capacity, so a
+//! warmed-up evaluation performs zero heap allocations per iteration.
+
+use crate::ids::{Addr, OpId, RegId};
+
+use super::Instruction;
+
+/// Struct-of-arrays instruction buffer with reusable capacity.
+///
+/// Filled by [`LoopKernel`](super::LoopKernel) generators through
+/// [`EmitBuf::instr`] (allocation-free builder) or [`EmitBuf::push`]
+/// (compatibility with code that already holds an [`Instruction`]).
+#[derive(Debug, Default)]
+pub struct EmitBuf {
+    ops: Vec<OpId>,
+    // Per-instruction exclusive end offsets into the flat pools below; the
+    // i-th instruction's slice of a pool is `[end[i-1], end[i])` (0-based
+    // start for the first instruction). Fields of one instruction are
+    // contiguous by construction: the builder exclusively borrows the
+    // buffer, so no other instruction can interleave appends.
+    rr_end: Vec<u32>,
+    wr_end: Vec<u32>,
+    ra_end: Vec<u32>,
+    wa_end: Vec<u32>,
+    im_end: Vec<u32>,
+    read_regs: Vec<RegId>,
+    write_regs: Vec<RegId>,
+    read_addrs: Vec<Addr>,
+    write_addrs: Vec<Addr>,
+    imms: Vec<i64>,
+}
+
+#[inline]
+fn start_of(ends: &[u32], i: usize) -> usize {
+    if i == 0 {
+        0
+    } else {
+        ends[i - 1] as usize
+    }
+}
+
+impl EmitBuf {
+    /// An empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all instructions, keeping every pool's capacity.
+    pub fn clear(&mut self) {
+        self.ops.clear();
+        self.rr_end.clear();
+        self.wr_end.clear();
+        self.ra_end.clear();
+        self.wa_end.clear();
+        self.im_end.clear();
+        self.read_regs.clear();
+        self.write_regs.clear();
+        self.read_addrs.clear();
+        self.write_addrs.clear();
+        self.imms.clear();
+    }
+
+    /// Number of emitted instructions.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when no instruction has been emitted.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Start a new instruction of op `op`. The returned builder appends
+    /// operands into the pools and seals the instruction when dropped (at
+    /// the end of the statement), so the idiomatic form is one chained
+    /// statement per instruction:
+    ///
+    /// ```text
+    /// buf.instr(load).writes(&[r0]).read_mem(&[addr]);
+    /// ```
+    pub fn instr(&mut self, op: OpId) -> InstrBuilder<'_> {
+        self.ops.push(op);
+        InstrBuilder { buf: self }
+    }
+
+    /// Append an already-built [`Instruction`] (compatibility path; the
+    /// instruction's own `Vec`s were already allocated by its builder).
+    pub fn push(&mut self, i: Instruction) {
+        self.instr(i.op)
+            .reads(&i.read_regs)
+            .writes(&i.write_regs)
+            .read_mem(&i.read_addrs)
+            .write_mem(&i.write_addrs)
+            .imms(&i.imms);
+    }
+
+    fn seal(&mut self) {
+        self.rr_end.push(self.read_regs.len() as u32);
+        self.wr_end.push(self.write_regs.len() as u32);
+        self.ra_end.push(self.read_addrs.len() as u32);
+        self.wa_end.push(self.write_addrs.len() as u32);
+        self.im_end.push(self.imms.len() as u32);
+    }
+
+    /// Borrowed view of instruction `i`.
+    pub fn view(&self, i: usize) -> InstrView<'_> {
+        InstrView {
+            op: self.ops[i],
+            read_regs: &self.read_regs[start_of(&self.rr_end, i)..self.rr_end[i] as usize],
+            write_regs: &self.write_regs[start_of(&self.wr_end, i)..self.wr_end[i] as usize],
+            read_addrs: &self.read_addrs[start_of(&self.ra_end, i)..self.ra_end[i] as usize],
+            write_addrs: &self.write_addrs[start_of(&self.wa_end, i)..self.wa_end[i] as usize],
+            imms: &self.imms[start_of(&self.im_end, i)..self.im_end[i] as usize],
+        }
+    }
+
+    /// Iterate the emitted instructions as views.
+    pub fn iter(&self) -> impl Iterator<Item = InstrView<'_>> {
+        (0..self.len()).map(move |i| self.view(i))
+    }
+}
+
+/// Builder of one instruction inside an [`EmitBuf`]. Appends operands into
+/// the buffer's flat pools; the instruction record is sealed when the
+/// builder drops (end of the emitting statement). The exclusive borrow of
+/// the buffer guarantees the appended operand slices stay contiguous.
+pub struct InstrBuilder<'a> {
+    buf: &'a mut EmitBuf,
+}
+
+impl Drop for InstrBuilder<'_> {
+    fn drop(&mut self) {
+        self.buf.seal();
+    }
+}
+
+impl InstrBuilder<'_> {
+    /// Append register reads.
+    pub fn reads(self, regs: &[RegId]) -> Self {
+        self.buf.read_regs.extend_from_slice(regs);
+        self
+    }
+
+    /// Append register reads from an iterator (no intermediate slice).
+    pub fn reads_iter(self, regs: impl IntoIterator<Item = RegId>) -> Self {
+        self.buf.read_regs.extend(regs);
+        self
+    }
+
+    /// Append register writes.
+    pub fn writes(self, regs: &[RegId]) -> Self {
+        self.buf.write_regs.extend_from_slice(regs);
+        self
+    }
+
+    /// Append register writes from an iterator.
+    pub fn writes_iter(self, regs: impl IntoIterator<Item = RegId>) -> Self {
+        self.buf.write_regs.extend(regs);
+        self
+    }
+
+    /// Append memory reads (word addresses).
+    pub fn read_mem(self, addrs: &[Addr]) -> Self {
+        self.buf.read_addrs.extend_from_slice(addrs);
+        self
+    }
+
+    /// Append memory reads from an iterator.
+    pub fn read_mem_iter(self, addrs: impl IntoIterator<Item = Addr>) -> Self {
+        self.buf.read_addrs.extend(addrs);
+        self
+    }
+
+    /// Append memory writes.
+    pub fn write_mem(self, addrs: &[Addr]) -> Self {
+        self.buf.write_addrs.extend_from_slice(addrs);
+        self
+    }
+
+    /// Append memory writes from an iterator.
+    pub fn write_mem_iter(self, addrs: impl IntoIterator<Item = Addr>) -> Self {
+        self.buf.write_addrs.extend(addrs);
+        self
+    }
+
+    /// Append one immediate.
+    pub fn imm(self, v: i64) -> Self {
+        self.buf.imms.push(v);
+        self
+    }
+
+    /// Append several immediates.
+    pub fn imms(self, vs: &[i64]) -> Self {
+        self.buf.imms.extend_from_slice(vs);
+        self
+    }
+}
+
+/// Borrowed, field-sliced view of one emitted instruction — the reading
+/// counterpart of [`Instruction`], without owning any storage.
+#[derive(Debug, Clone, Copy)]
+pub struct InstrView<'a> {
+    /// Mnemonic id.
+    pub op: OpId,
+    /// Registers read.
+    pub read_regs: &'a [RegId],
+    /// Registers written.
+    pub write_regs: &'a [RegId],
+    /// Memory addresses read.
+    pub read_addrs: &'a [Addr],
+    /// Memory addresses written.
+    pub write_addrs: &'a [Addr],
+    /// Immediates (latency-expression inputs).
+    pub imms: &'a [i64],
+}
+
+impl InstrView<'_> {
+    /// Stream every estimation-relevant field as `u64` words into `sink`
+    /// (field lengths included, so adjacent fields cannot alias). This is
+    /// the single definition of the engine's content-word stream;
+    /// [`Instruction::content_words`] delegates here, so arena-emitted and
+    /// materialized instructions fingerprint identically.
+    pub fn content_words(&self, sink: &mut impl FnMut(u64)) {
+        sink(self.op.0 as u64);
+        sink(self.read_regs.len() as u64);
+        for r in self.read_regs {
+            sink(r.0 as u64);
+        }
+        sink(self.write_regs.len() as u64);
+        for r in self.write_regs {
+            sink(r.0 as u64);
+        }
+        sink(self.read_addrs.len() as u64);
+        for &a in self.read_addrs {
+            sink(a);
+        }
+        sink(self.write_addrs.len() as u64);
+        for &a in self.write_addrs {
+            sink(a);
+        }
+        sink(self.imms.len() as u64);
+        for &v in self.imms {
+            sink(v as u64);
+        }
+    }
+
+    /// Materialize an owning [`Instruction`] (routing and the simulator
+    /// want one; the evaluator's steady state never does).
+    pub fn to_instruction(&self) -> Instruction {
+        Instruction {
+            op: self.op,
+            read_regs: self.read_regs.to_vec(),
+            write_regs: self.write_regs.to_vec(),
+            read_addrs: self.read_addrs.to_vec(),
+            write_addrs: self.write_addrs.to_vec(),
+            imms: self.imms.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_seals_per_statement() {
+        let mut b = EmitBuf::new();
+        b.instr(OpId(1)).reads(&[RegId(2)]).writes(&[RegId(3)]).read_mem(&[10, 11]).imm(7);
+        b.instr(OpId(2)).write_mem(&[20]);
+        assert_eq!(b.len(), 2);
+        let v0 = b.view(0);
+        assert_eq!(v0.op, OpId(1));
+        assert_eq!(v0.read_regs, &[RegId(2)]);
+        assert_eq!(v0.write_regs, &[RegId(3)]);
+        assert_eq!(v0.read_addrs, &[10, 11]);
+        assert_eq!(v0.imms, &[7]);
+        let v1 = b.view(1);
+        assert_eq!(v1.op, OpId(2));
+        assert!(v1.read_regs.is_empty());
+        assert_eq!(v1.write_addrs, &[20]);
+    }
+
+    #[test]
+    fn conditional_chains_stay_contiguous() {
+        let mut b = EmitBuf::new();
+        for extra in [false, true] {
+            let mut i = b.instr(OpId(0)).reads(&[RegId(0)]);
+            if extra {
+                i = i.reads(&[RegId(1)]);
+            }
+            i.writes(&[RegId(9)]);
+        }
+        assert_eq!(b.view(0).read_regs, &[RegId(0)]);
+        assert_eq!(b.view(1).read_regs, &[RegId(0), RegId(1)]);
+        assert_eq!(b.view(1).write_regs, &[RegId(9)]);
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut b = EmitBuf::new();
+        b.instr(OpId(0)).read_mem_iter(0..64);
+        let cap = b.read_addrs.capacity();
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.read_addrs.capacity(), cap);
+        b.instr(OpId(1)).read_mem_iter(100..110);
+        assert_eq!(b.view(0).read_addrs.len(), 10);
+        assert_eq!(b.view(0).read_addrs[0], 100);
+    }
+
+    #[test]
+    fn push_matches_builder_and_roundtrips() {
+        let i = Instruction::new(OpId(4))
+            .reads(&[RegId(1)])
+            .writes(&[RegId(2)])
+            .read_mem(&[10])
+            .write_mem(&[20])
+            .imm(-3);
+        let mut b = EmitBuf::new();
+        b.push(i.clone());
+        let back = b.view(0).to_instruction();
+        assert_eq!(back, i);
+        // content words agree between the owned and the arena forms
+        let mut w1 = Vec::new();
+        i.content_words(&mut |x| w1.push(x));
+        let mut w2 = Vec::new();
+        b.view(0).content_words(&mut |x| w2.push(x));
+        assert_eq!(w1, w2);
+    }
+}

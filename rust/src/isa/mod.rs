@@ -15,6 +15,10 @@
 
 use crate::ids::{Addr, OpId, RegId};
 
+pub mod emit;
+
+pub use emit::{EmitBuf, InstrBuilder, InstrView};
+
 /// One abstract instruction occupying hardware modules as it propagates
 /// through an ACADL object diagram.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -87,38 +91,35 @@ impl Instruction {
         !self.read_addrs.is_empty() || !self.write_addrs.is_empty()
     }
 
+    /// Borrowed field-sliced view of this instruction (the arena-emitted
+    /// form; see [`emit::InstrView`]).
+    pub fn view(&self) -> InstrView<'_> {
+        InstrView {
+            op: self.op,
+            read_regs: &self.read_regs,
+            write_regs: &self.write_regs,
+            read_addrs: &self.read_addrs,
+            write_addrs: &self.write_addrs,
+            imms: &self.imms,
+        }
+    }
+
     /// Stream every estimation-relevant field as `u64` words into `sink`
     /// (field lengths included, so adjacent fields cannot alias). This is
     /// the per-instruction ingredient of the engine's content-addressed
     /// kernel fingerprint ([`crate::engine`]): two instructions emitting the
     /// same word stream route and time identically on a given diagram.
+    /// Delegates to [`InstrView::content_words`] so arena-emitted and
+    /// materialized instructions share one stream definition.
     pub fn content_words(&self, sink: &mut impl FnMut(u64)) {
-        sink(self.op.0 as u64);
-        sink(self.read_regs.len() as u64);
-        for r in &self.read_regs {
-            sink(r.0 as u64);
-        }
-        sink(self.write_regs.len() as u64);
-        for r in &self.write_regs {
-            sink(r.0 as u64);
-        }
-        sink(self.read_addrs.len() as u64);
-        for &a in &self.read_addrs {
-            sink(a);
-        }
-        sink(self.write_addrs.len() as u64);
-        for &a in &self.write_addrs {
-            sink(a);
-        }
-        sink(self.imms.len() as u64);
-        for &v in &self.imms {
-            sink(v as u64);
-        }
+        self.view().content_words(sink);
     }
 }
 
-/// Generator of the concrete instructions of iteration `it` of a loop kernel.
-pub type IterGen = Box<dyn Fn(u64, &mut Vec<Instruction>) + Send + Sync>;
+/// Generator of the concrete instructions of iteration `it` of a loop
+/// kernel, emitting into a reusable [`EmitBuf`] arena (zero allocations per
+/// iteration once the arena is warm).
+pub type IterGen = Box<dyn Fn(u64, &mut EmitBuf) + Send + Sync>;
 
 /// A mapped DNN layer: `k` iterations of a fixed instruction template.
 pub struct LoopKernel {
@@ -139,8 +140,9 @@ impl LoopKernel {
         Self { label: label.into(), k, insts_per_iter, gen }
     }
 
-    /// Append iteration `it`'s instructions to `buf`.
-    pub fn emit(&self, it: u64, buf: &mut Vec<Instruction>) {
+    /// Append iteration `it`'s instructions to the emission arena — the
+    /// evaluator's hot path (allocation-free once `buf`'s pools are warm).
+    pub fn emit_into(&self, it: u64, buf: &mut EmitBuf) {
         let before = buf.len();
         (self.gen)(it, buf);
         debug_assert_eq!(
@@ -152,11 +154,23 @@ impl LoopKernel {
         );
     }
 
+    /// Append iteration `it`'s instructions to `buf` as owned
+    /// [`Instruction`]s (compatibility path for the simulator and tests;
+    /// allocates — use [`Self::emit_into`] on hot paths).
+    pub fn emit(&self, it: u64, buf: &mut Vec<Instruction>) {
+        let mut eb = EmitBuf::new();
+        self.emit_into(it, &mut eb);
+        buf.extend(eb.iter().map(|v| v.to_instruction()));
+    }
+
     /// Materialize a range of iterations (mostly for tests / the simulator).
     pub fn materialize(&self, iters: std::ops::Range<u64>) -> Vec<Instruction> {
         let mut buf = Vec::with_capacity(self.insts_per_iter * (iters.end - iters.start) as usize);
+        let mut eb = EmitBuf::new();
         for it in iters {
-            self.emit(it, &mut buf);
+            eb.clear();
+            self.emit_into(it, &mut eb);
+            buf.extend(eb.iter().map(|v| v.to_instruction()));
         }
         buf
     }
@@ -172,12 +186,12 @@ impl LoopKernel {
     /// to identical instruction streams under different labels, and the
     /// engine's deduplication keys on content, not names.
     pub fn content_words(&self, iters: std::ops::Range<u64>, sink: &mut impl FnMut(u64)) {
-        let mut buf = Vec::with_capacity(self.insts_per_iter);
+        let mut buf = EmitBuf::new();
         for it in iters {
             buf.clear();
-            self.emit(it, &mut buf);
-            for instr in &buf {
-                instr.content_words(sink);
+            self.emit_into(it, &mut buf);
+            for view in buf.iter() {
+                view.content_words(sink);
             }
         }
     }

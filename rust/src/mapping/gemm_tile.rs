@@ -30,7 +30,7 @@ use crate::accel::gemmini::{Gemmini, ACC_BASE, DRAM_BASE, SPAD_BASE};
 use crate::acadl::Diagram;
 use crate::dnn::{Layer, LayerKind};
 use crate::ids::Addr;
-use crate::isa::{Instruction, LoopKernel};
+use crate::isa::LoopKernel;
 use crate::Result;
 
 use super::{MappedLayer, Mapper};
@@ -65,7 +65,7 @@ impl GemmTileMapper {
             3,
             Box::new(move |_it, buf| {
                 for op in [g.ops.config_ex, g.ops.config_ld, g.ops.config_st] {
-                    buf.push(Instruction::new(op).reads(&[g.cfg_reg]).writes(&[g.cfg_reg]));
+                    buf.instr(op).reads(&[g.cfg_reg]).writes(&[g.cfg_reg]);
                 }
             }),
         )
@@ -104,52 +104,40 @@ impl GemmTileMapper {
                 // accumulator token of the output tile
                 let acc_tok = ACC_BASE + (c_id % 64);
                 // bias / zero the tile
-                buf.push(
-                    Instruction::new(ops.mvin_acc)
-                        .imms(&[words as i64, ((c_id * words) % 4096) as i64])
-                        .reads(&[g2.cfg_reg])
-                        .read_mem(&[DRAM_BASE + DRAM_D_OFF + c_id])
-                        .write_mem(&[acc_tok]),
-                );
+                buf.instr(ops.mvin_acc)
+                    .imms(&[words as i64, ((c_id * words) % 4096) as i64])
+                    .reads(&[g2.cfg_reg])
+                    .read_mem(&[DRAM_BASE + DRAM_D_OFF + c_id])
+                    .write_mem(&[acc_tok]);
                 for kk in 0..nk {
                     let a_id = a_row_base + kk;
                     let b_id = b_col_base + kk * nn;
                     let a_slot = SPAD_BASE + (a_id % SPAD_SLOTS);
                     let b_slot = SPAD_BASE + SPAD_SLOTS + (b_id % SPAD_SLOTS);
-                    buf.push(
-                        Instruction::new(ops.mvin)
-                            .imms(&[words as i64, ((a_id * words) % 4096) as i64])
-                            .reads(&[g2.cfg_reg])
-                            .read_mem(&[DRAM_BASE + DRAM_A_OFF + a_id])
-                            .write_mem(&[a_slot]),
-                    );
-                    buf.push(
-                        Instruction::new(ops.mvin)
-                            .imms(&[words as i64, ((b_id * words) % 4096) as i64])
-                            .reads(&[g2.cfg_reg])
-                            .read_mem(&[DRAM_BASE + DRAM_B_OFF + b_id])
-                            .write_mem(&[b_slot]),
-                    );
-                    buf.push(
-                        Instruction::new(ops.preload)
-                            .reads(&[g2.cfg_reg])
-                            .writes(&[g2.b_tile_reg])
-                            .read_mem(&[b_slot]),
-                    );
-                    buf.push(
-                        Instruction::new(ops.compute_accumulated)
-                            .reads(&[g2.b_tile_reg, g2.cfg_reg])
-                            .read_mem(&[a_slot, acc_tok])
-                            .write_mem(&[acc_tok]),
-                    );
-                }
-                buf.push(
-                    Instruction::new(ops.mvout)
-                        .imms(&[words as i64, ((c_id * words) % 4096) as i64])
+                    buf.instr(ops.mvin)
+                        .imms(&[words as i64, ((a_id * words) % 4096) as i64])
                         .reads(&[g2.cfg_reg])
-                        .read_mem(&[acc_tok])
-                        .write_mem(&[DRAM_BASE + DRAM_C_OFF + c_id]),
-                );
+                        .read_mem(&[DRAM_BASE + DRAM_A_OFF + a_id])
+                        .write_mem(&[a_slot]);
+                    buf.instr(ops.mvin)
+                        .imms(&[words as i64, ((b_id * words) % 4096) as i64])
+                        .reads(&[g2.cfg_reg])
+                        .read_mem(&[DRAM_BASE + DRAM_B_OFF + b_id])
+                        .write_mem(&[b_slot]);
+                    buf.instr(ops.preload)
+                        .reads(&[g2.cfg_reg])
+                        .writes(&[g2.b_tile_reg])
+                        .read_mem(&[b_slot]);
+                    buf.instr(ops.compute_accumulated)
+                        .reads(&[g2.b_tile_reg, g2.cfg_reg])
+                        .read_mem(&[a_slot, acc_tok])
+                        .write_mem(&[acc_tok]);
+                }
+                buf.instr(ops.mvout)
+                    .imms(&[words as i64, ((c_id * words) % 4096) as i64])
+                    .reads(&[g2.cfg_reg])
+                    .read_mem(&[acc_tok])
+                    .write_mem(&[DRAM_BASE + DRAM_C_OFF + c_id]);
             }),
         );
 
@@ -186,29 +174,23 @@ impl GemmTileMapper {
             Box::new(move |it, buf| {
                 let ops = &g2.ops;
                 let acc_tok = ACC_BASE + (it % 64);
-                buf.push(
-                    Instruction::new(ops.mvin_acc)
-                        .imms(&[words as i64, ((it * words) % 4096) as i64])
-                        .reads(&[g2.cfg_reg])
-                        .read_mem(&[DRAM_BASE + DRAM_A_OFF + it])
-                        .write_mem(&[acc_tok]),
-                );
+                buf.instr(ops.mvin_acc)
+                    .imms(&[words as i64, ((it * words) % 4096) as i64])
+                    .reads(&[g2.cfg_reg])
+                    .read_mem(&[DRAM_BASE + DRAM_A_OFF + it])
+                    .write_mem(&[acc_tok]);
                 if two_operand {
-                    buf.push(
-                        Instruction::new(ops.mvin_acc)
-                            .imms(&[words as i64, ((it * words) % 4096) as i64])
-                            .reads(&[g2.cfg_reg])
-                            .read_mem(&[DRAM_BASE + DRAM_B_OFF + it])
-                            .write_mem(&[acc_tok]),
-                    );
-                }
-                buf.push(
-                    Instruction::new(ops.mvout)
+                    buf.instr(ops.mvin_acc)
                         .imms(&[words as i64, ((it * words) % 4096) as i64])
                         .reads(&[g2.cfg_reg])
-                        .read_mem(&[acc_tok])
-                        .write_mem(&[DRAM_BASE + DRAM_C_OFF + it]),
-                );
+                        .read_mem(&[DRAM_BASE + DRAM_B_OFF + it])
+                        .write_mem(&[acc_tok]);
+                }
+                buf.instr(ops.mvout)
+                    .imms(&[words as i64, ((it * words) % 4096) as i64])
+                    .reads(&[g2.cfg_reg])
+                    .read_mem(&[acc_tok])
+                    .write_mem(&[DRAM_BASE + DRAM_C_OFF + it]);
             }),
         );
         MappedLayer {

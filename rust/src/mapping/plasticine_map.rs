@@ -30,7 +30,7 @@ use anyhow::bail;
 use crate::accel::plasticine::Plasticine;
 use crate::acadl::Diagram;
 use crate::dnn::{Layer, LayerKind};
-use crate::isa::{Instruction, LoopKernel};
+use crate::isa::{EmitBuf, LoopKernel};
 use crate::Result;
 
 use super::{MappedLayer, Mapper};
@@ -64,7 +64,7 @@ impl PlasticineMapper {
 
         let emit_wave = {
             let p = Arc::clone(p);
-            move |wave: u64, active: u64, buf: &mut Vec<Instruction>| {
+            move |wave: u64, active: u64, buf: &mut EmitBuf| {
                 let ops = &p.ops;
                 let n_pmus = p.pmus.len() as u64;
                 for pc in 0..active as usize {
@@ -80,36 +80,26 @@ impl PlasticineMapper {
                             Plasticine::hops(pcu.pos, p.pmus[a_pmu].pos) as i64;
                         let b_hops =
                             Plasticine::hops(pcu.pos, p.pmus[b_pmu].pos) as i64;
-                        buf.push(
-                            Instruction::new(ops.route_in)
-                                .writes(&[pcu.r_a])
-                                .read_mem(&[p.pmus[a_pmu].base
-                                    + (a_id / n_pmus) % 1024])
-                                .imms(&[t, a_hops]),
-                        );
-                        buf.push(
-                            Instruction::new(ops.route_in)
-                                .writes(&[pcu.r_b])
-                                .read_mem(&[p.pmus[b_pmu].base + 1024
-                                    + (b_id / n_pmus) % 1024])
-                                .imms(&[t, b_hops]),
-                        );
+                        buf.instr(ops.route_in)
+                            .writes(&[pcu.r_a])
+                            .read_mem(&[p.pmus[a_pmu].base + (a_id / n_pmus) % 1024])
+                            .imms(&[t, a_hops]);
+                        buf.instr(ops.route_in)
+                            .writes(&[pcu.r_b])
+                            .read_mem(&[p.pmus[b_pmu].base + 1024 + (b_id / n_pmus) % 1024])
+                            .imms(&[t, b_hops]);
                         let op = if gemm { ops.gemm_tile } else { ops.add_tile };
-                        buf.push(
-                            Instruction::new(op)
-                                .reads(&[pcu.r_a, pcu.r_b, pcu.r_out])
-                                .writes(&[pcu.r_out])
-                                .imms(&[t]),
-                        );
+                        buf.instr(op)
+                            .reads(&[pcu.r_a, pcu.r_b, pcu.r_out])
+                            .writes(&[pcu.r_out])
+                            .imms(&[t]);
                     }
                     let c_pmu = (item % n_pmus) as usize;
                     let c_hops = Plasticine::hops(pcu.pos, p.pmus[c_pmu].pos) as i64;
-                    buf.push(
-                        Instruction::new(ops.route_out)
-                            .reads(&[pcu.r_out])
-                            .write_mem(&[p.pmus[c_pmu].base + 2048 + (item / n_pmus) % 1024])
-                            .imms(&[t, c_hops]),
-                    );
+                    buf.instr(ops.route_out)
+                        .reads(&[pcu.r_out])
+                        .write_mem(&[p.pmus[c_pmu].base + 2048 + (item / n_pmus) % 1024])
+                        .imms(&[t, c_hops]);
                 }
             }
         };

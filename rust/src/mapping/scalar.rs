@@ -27,7 +27,7 @@ use crate::accel::systolic::{Systolic, ACT_BASE, OUT_BASE, PSUM_BASE, WEIGHT_BAS
 use crate::acadl::Diagram;
 use crate::dnn::{Layer, LayerKind};
 use crate::ids::Addr;
-use crate::isa::{Instruction, LoopKernel};
+use crate::isa::LoopKernel;
 use crate::Result;
 
 use super::{unroll_factor, MappedLayer, Mapper};
@@ -158,12 +158,12 @@ impl ScalarMapper {
                 let k_tile = ((it / taps as u64) % k_tiles as u64) as u32;
                 let c_tile = (it / (taps as u64 * k_tiles as u64)) as u32;
                 for j in 0..ur_k {
-                    let addrs: Vec<Addr> = (0..ur_c)
-                        .map(|r| g.w_addr(c_tile * ur_c + r, k_tile * ur_k + j, tap))
-                        .collect();
-                    let writes: Vec<_> =
-                        (0..ur_c).map(|r| s1.pe[r as usize][j as usize].r_w).collect();
-                    buf.push(Instruction::new(s1.ops.loadw).writes(&writes).read_mem(&addrs));
+                    buf.instr(s1.ops.loadw)
+                        .writes_iter((0..ur_c).map(|r| s1.pe[r as usize][j as usize].r_w))
+                        .read_mem_iter(
+                            (0..ur_c)
+                                .map(|r| g.w_addr(c_tile * ur_c + r, k_tile * ur_k + j, tap)),
+                        );
                 }
             }),
         );
@@ -190,53 +190,44 @@ impl ScalarMapper {
                 let ops = &s2.ops;
                 // activation loads down the left edge
                 for r in 0..ur_c as usize {
-                    buf.push(
-                        Instruction::new(ops.load)
-                            .writes(&[pe[r][0].r_in])
-                            .read_mem(&[g.act_addr(c_tile * ur_c + r as u32, tap, o)]),
-                    );
+                    buf.instr(ops.load)
+                        .writes(&[pe[r][0].r_in])
+                        .read_mem(&[g.act_addr(c_tile * ur_c + r as u32, tap, o)]);
                 }
                 // operand propagation to the right
                 for j in 1..ur_k as usize {
                     for r in 0..ur_c as usize {
-                        buf.push(
-                            Instruction::new(ops.mov_r)
-                                .reads(&[pe[r][j - 1].r_in])
-                                .writes(&[pe[r][j].r_in]),
-                        );
+                        buf.instr(ops.mov_r)
+                            .reads(&[pe[r][j - 1].r_in])
+                            .writes(&[pe[r][j].r_in]);
                     }
                 }
                 // mac wave: psums flow down the columns
                 for r in 0..ur_c as usize {
                     for j in 0..ur_k as usize {
-                        let mut i = Instruction::new(ops.mac)
-                            .reads(&[pe[r][j].r_in, pe[r][j].r_w]);
+                        let mut i = buf.instr(ops.mac).reads(&[pe[r][j].r_in, pe[r][j].r_w]);
                         if r > 0 {
                             i = i.reads(&[pe[r - 1][j].r_acc]);
                         }
-                        buf.push(i.writes(&[pe[r][j].r_acc]));
+                        i.writes(&[pe[r][j].r_acc]);
                     }
                 }
                 // pass psums through idle rows to the store units
                 for rr in ur_c as usize..s2.cfg.rows as usize {
                     for j in 0..ur_k as usize {
-                        buf.push(
-                            Instruction::new(ops.mov_d)
-                                .reads(&[pe[rr - 1][j].r_acc])
-                                .writes(&[pe[rr][j].r_acc]),
-                        );
+                        buf.instr(ops.mov_d)
+                            .reads(&[pe[rr - 1][j].r_acc])
+                            .writes(&[pe[rr][j].r_acc]);
                     }
                 }
                 // accumulate into psum memory (read-modify-write)
                 let last = s2.cfg.rows as usize - 1;
                 for j in 0..ur_k as usize {
                     let a = g.psum_addr(k_tile * ur_k + j as u32, o);
-                    buf.push(
-                        Instruction::new(ops.store_acc)
-                            .reads(&[pe[last][j].r_acc])
-                            .read_mem(&[a])
-                            .write_mem(&[a]),
-                    );
+                    buf.instr(ops.store_acc)
+                        .reads(&[pe[last][j].r_acc])
+                        .read_mem(&[a])
+                        .write_mem(&[a]);
                 }
             }),
         );
@@ -287,13 +278,9 @@ impl ScalarMapper {
                     let c_tile = it as u32;
                     for j in 0..u {
                         let ch = c_tile * u + j;
-                        let addrs: Vec<Addr> =
-                            (0..g.taps()).map(|t| g.w_addr(0, ch, t)).collect();
-                        buf.push(
-                            Instruction::new(s0.ops.loadw)
-                                .writes(&[s0.pe[0][j as usize].r_w])
-                                .read_mem(&addrs),
-                        );
+                        buf.instr(s0.ops.loadw)
+                            .writes(&[s0.pe[0][j as usize].r_w])
+                            .read_mem_iter((0..g.taps()).map(|t| g.w_addr(0, ch, t)));
                     }
                 }),
             ));
@@ -321,25 +308,17 @@ impl ScalarMapper {
                             Some(g) => g.act_addr(ch, t, o),
                             None => ACT_BASE + ch as u64 * spatial as u64 + o as u64,
                         };
-                        buf.push(
-                            Instruction::new(ops.loade)
-                                .writes(&[pe[0][j].r_in])
-                                .read_mem(&[a]),
-                        );
+                        buf.instr(ops.loade).writes(&[pe[0][j].r_in]).read_mem(&[a]);
                         if two_operand && t == 0 {
                             let b = ACT_BASE
                                 + (c_tiles * u) as u64 * spatial as u64
                                 + ch as u64 * spatial as u64
                                 + o as u64;
-                            buf.push(
-                                Instruction::new(ops.loade2)
-                                    .writes(&[pe[0][j].r_in2])
-                                    .read_mem(&[b]),
-                            );
+                            buf.instr(ops.loade2).writes(&[pe[0][j].r_in2]).read_mem(&[b]);
                         }
                         // the op consumes the loaded element (accumulating
                         // ops chain through r_acc)
-                        let mut i = Instruction::new(op).reads(&[pe[0][j].r_in]);
+                        let mut i = buf.instr(op).reads(&[pe[0][j].r_in]);
                         if two_operand {
                             i = i.reads(&[pe[0][j].r_in2]);
                         }
@@ -349,27 +328,23 @@ impl ScalarMapper {
                         if op == ops.ew_mac {
                             i = i.reads(&[pe[0][j].r_w]);
                         }
-                        buf.push(i.writes(&[pe[0][j].r_acc]));
+                        i.writes(&[pe[0][j].r_acc]);
                     }
                 }
                 // results flow down to the bottom store row
                 for rr in 1..s1.cfg.rows as usize {
                     for j in 0..u as usize {
-                        buf.push(
-                            Instruction::new(ops.mov_d)
-                                .reads(&[pe[rr - 1][j].r_acc])
-                                .writes(&[pe[rr][j].r_acc]),
-                        );
+                        buf.instr(ops.mov_d)
+                            .reads(&[pe[rr - 1][j].r_acc])
+                            .writes(&[pe[rr][j].r_acc]);
                     }
                 }
                 let last = s1.cfg.rows as usize - 1;
                 for j in 0..u as usize {
                     let ch = c_tile * u + j as u32;
-                    buf.push(
-                        Instruction::new(ops.store)
-                            .reads(&[pe[last][j].r_acc])
-                            .write_mem(&[OUT_BASE + ch as u64 * spatial as u64 + o as u64]),
-                    );
+                    buf.instr(ops.store)
+                        .reads(&[pe[last][j].r_acc])
+                        .write_mem(&[OUT_BASE + ch as u64 * spatial as u64 + o as u64]);
                 }
             }),
         ));

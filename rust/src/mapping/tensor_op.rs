@@ -22,7 +22,7 @@ use crate::accel::ultratrail::{UltraTrail, BMEM_BASE, FMEM0_BASE, FMEM1_BASE, FM
 use crate::acadl::Diagram;
 use crate::dnn::{Layer, LayerKind};
 use crate::ids::Addr;
-use crate::isa::{Instruction, LoopKernel};
+use crate::isa::LoopKernel;
 use crate::Result;
 
 use super::{MappedLayer, Mapper};
@@ -69,14 +69,14 @@ impl TensorOpMapper {
             1,
             1,
             Box::new(move |_it, buf| {
-                let mut i = Instruction::new(op).imms(&imms).read_mem(&[seq_in]);
+                let mut i = buf.instr(op).imms(&imms).read_mem(&[seq_in]);
                 if weighted {
                     i = i.read_mem(&[w_token, b_token]);
                 }
                 if let Some(a) = extra_read {
                     i = i.read_mem(&[a]);
                 }
-                buf.push(i.write_mem(&[seq_out]));
+                i.write_mem(&[seq_out]);
             }),
         );
         let n = self.ut.cfg.array_dim;

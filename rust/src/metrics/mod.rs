@@ -55,6 +55,18 @@ pub mod counters {
     pub static DSE_POINTS_PREFILTERED: Counter = Counter::new("dse_points_prefiltered");
     /// DSE design points that survived into the accurate AIDG pass.
     pub static DSE_POINTS_ESTIMATED: Counter = Counter::new("dse_points_estimated");
+    /// AIDG nodes processed by any evaluator (the §6.2 work unit — the
+    /// denominator of the evaluator-throughput numbers in
+    /// `BENCH_eval.json`).
+    pub static AIDG_NODES: Counter = Counter::new("aidg.nodes");
+    /// Loop-kernel iterations evaluated by any evaluator.
+    pub static AIDG_ITERATIONS: Counter = Counter::new("aidg.iterations");
+
+    /// One layer estimation's evaluator accounting, in one call.
+    pub fn note_aidg(nodes: u64, iterations: u64) {
+        AIDG_NODES.add(nodes);
+        AIDG_ITERATIONS.add(iterations);
+    }
 
     /// One kernel batch's accounting, in one call (the request counter is
     /// bumped separately — kernel-batch APIs are not whole requests).
@@ -76,6 +88,8 @@ pub mod counters {
             &DSE_POINTS_ENUMERATED,
             &DSE_POINTS_PREFILTERED,
             &DSE_POINTS_ESTIMATED,
+            &AIDG_NODES,
+            &AIDG_ITERATIONS,
         ]
         .iter()
         .map(|c| (c.name(), c.get()))

@@ -34,7 +34,7 @@ use anyhow::{bail, Context};
 
 use crate::acadl::{Diagram, ObjectKind};
 use crate::ids::{Addr, Cycle, ObjId, RegId};
-use crate::isa::{Instruction, LoopKernel};
+use crate::isa::{EmitBuf, Instruction, LoopKernel};
 use crate::Result;
 
 static TRACE: once_cell::sync::Lazy<bool> =
@@ -326,8 +326,10 @@ impl<'d> CycleSim<'d> {
         let ifs_obj = f.fetch_stage;
         let p = f.port_width as usize;
 
-        // instruction stream, materialized one iteration at a time
+        // instruction stream, materialized one iteration at a time through
+        // a reused emission arena (no throwaway buffer per iteration)
         let mut stream: Vec<Instruction> = Vec::new();
+        let mut emit = EmitBuf::new();
         let mut stream_pos = 0usize;
         let mut next_iter = range.start;
 
@@ -349,7 +351,9 @@ impl<'d> CycleSim<'d> {
                     if stream_pos >= stream.len() && next_iter < range.end {
                         stream.clear();
                         stream_pos = 0;
-                        kernel.emit(next_iter, &mut stream);
+                        emit.clear();
+                        kernel.emit_into(next_iter, &mut emit);
+                        stream.extend(emit.iter().map(|v| v.to_instruction()));
                         next_iter += 1;
                     }
                     if stream_pos < stream.len() {
