@@ -98,12 +98,53 @@ fn bench_eval(iter_cap: u64, nets: &[&str]) {
             ));
         }
     }
+    // ---- obs_overhead: evaluator throughput, tracing off vs on ----
+    // The tracing layer's contract is "free when off, allocation-free when
+    // on"; this pins the second half with numbers (the evaluator's phase
+    // timing is raw clock reads, so "on" should cost low single digits).
+    let (ov_arch, ov_mapper) = &mappers[0];
+    let ov_net = zoo::by_name(nets[0]).unwrap();
+    let ov_mapped = ov_mapper.map_network(&ov_net).unwrap();
+    let measure = || {
+        let mut nodes = 0u64;
+        let t0 = Instant::now();
+        for ml in ov_mapped.iter().filter(|l| !l.fused) {
+            for kernel in &ml.kernels {
+                let insts_budget =
+                    (200 * iter_cap / kernel.insts_per_iter.max(1) as u64).max(1);
+                let range = 0..kernel.k.min(iter_cap).min(insts_budget);
+                let mut ev = Evaluator::new(ov_mapper.diagram());
+                ev.run(kernel, range).unwrap();
+                nodes += ev.st.nodes;
+            }
+        }
+        nodes as f64 / t0.elapsed().as_secs_f64().max(1e-9)
+    };
+    acadl_perf::obs::set_enabled(false);
+    let off_nps = measure();
+    acadl_perf::obs::set_enabled(true);
+    let on_nps = measure();
+    acadl_perf::obs::set_enabled(false);
+    println!(
+        "  obs_overhead/{ov_arch} x {}: {:.2} M nodes/s off, {:.2} M nodes/s on ({:.1}% ratio)",
+        nets[0],
+        off_nps / 1e6,
+        on_nps / 1e6,
+        100.0 * on_nps / off_nps.max(1e-9),
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"eval_program\",\n  \"iter_cap\": {iter_cap},\n  \"records\": [\n{}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"eval_program\",\n  \"iter_cap\": {iter_cap},\n  \
+         \"obs_overhead\": {{\n    \"arch\": \"{ov_arch}\",\n    \"network\": \"{}\",\n    \
+         \"nodes_per_sec_tracing_off\": {off_nps:.1},\n    \
+         \"nodes_per_sec_tracing_on\": {on_nps:.1},\n    \
+         \"on_off_ratio\": {:.4}\n  }},\n  \"records\": [\n{}\n  ]\n}}\n",
+        nets[0],
+        on_nps / off_nps.max(1e-9),
         records.join(",\n")
     );
     std::fs::write("BENCH_eval.json", &json).expect("writing BENCH_eval.json");
-    println!("  => wrote BENCH_eval.json ({} records)", records.len());
+    println!("  => wrote BENCH_eval.json ({} records + obs_overhead)", records.len());
 }
 
 fn main() {
@@ -210,6 +251,14 @@ fn main() {
         hit_rate * 100.0,
         net_hit_rate * 100.0
     );
+
+    section("perf — tracing layer: span profile of one traced estimate");
+    acadl_perf::obs::set_enabled(true);
+    EstimationEngine::new(DEFAULT_CACHE_CAP)
+        .estimate_network(&arch, &net, &fp)
+        .expect("traced estimate");
+    acadl_perf::obs::set_enabled(false);
+    print!("{}", acadl_perf::report::profile(&acadl_perf::obs::snapshot()).to_markdown());
 
     section("perf — DSE: [sweep] throughput, pre-filter survival, kernel reuse");
     let pool = Pool::new(0);

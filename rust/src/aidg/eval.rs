@@ -103,6 +103,12 @@ pub struct Evaluator<'d> {
     // current-iteration accumulation
     cur_min_enter: Cycle,
     cur_max_leave: Cycle,
+    /// Wall time spent inside [`Evaluator::run`] (ns; 0 when tracing is
+    /// disabled). Accumulated with raw clock reads — no spans on this path,
+    /// so the steady state stays allocation-free and the ring unflooded.
+    pub(crate) obs_run_ns: u64,
+    /// Portion of `obs_run_ns` spent lowering the iteration program.
+    pub(crate) obs_compile_ns: u64,
 }
 
 impl<'d> Evaluator<'d> {
@@ -127,12 +133,18 @@ impl<'d> Evaluator<'d> {
             issue_buf: f.issue_buffer_size,
             cur_min_enter: Cycle::MAX,
             cur_max_leave: 0,
+            obs_run_ns: 0,
+            obs_compile_ns: 0,
         }
     }
 
     /// Evaluate iterations `range` of `kernel`, appending to the carried
     /// state and per-iteration stats.
     pub fn run(&mut self, kernel: &LoopKernel, range: std::ops::Range<u64>) -> Result<()> {
+        // phase timing by raw clock reads (no span, no ring event): chunked
+        // runs would flood the ring, and the steady-state path must stay
+        // allocation-free. 0 doubles as the "tracing off" sentinel.
+        let t_run = if crate::obs::enabled() { crate::obs::now_ns() } else { 0 };
         self.iter_stats.reserve((range.end.saturating_sub(range.start)) as usize);
         for it in range {
             self.emit.clear();
@@ -156,6 +168,9 @@ impl<'d> Evaluator<'d> {
                 max_leave: self.cur_max_leave,
             });
             self.st.note_peak(self.iter_stats.len() * std::mem::size_of::<IterStat>());
+        }
+        if t_run != 0 {
+            self.obs_run_ns += crate::obs::now_ns().saturating_sub(t_run);
         }
         Ok(())
     }
@@ -229,11 +244,15 @@ impl<'d> Evaluator<'d> {
     fn step(&mut self, offset: usize, view: &InstrView<'_>) -> Result<()> {
         if offset >= self.program.len() {
             debug_assert_eq!(offset, self.program.len(), "offsets must arrive in order");
+            let t_lower = if crate::obs::enabled() { crate::obs::now_ns() } else { 0 };
             let instr = view.to_instruction();
             let route = self.d.route(&instr)?;
             self.program.lower_offset(self.d, &route, view);
             #[cfg(feature = "verify-routes")]
             self.routes.push(route);
+            if t_lower != 0 {
+                self.obs_compile_ns += crate::obs::now_ns().saturating_sub(t_lower);
+            }
         } else {
             // re-derive and compare the route on every later instruction
             // (the just-lowered offset would only compare itself)

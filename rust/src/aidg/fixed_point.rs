@@ -134,8 +134,10 @@ pub fn estimate_layer(
     kernel: &LoopKernel,
     cfg: &FixedPointConfig,
 ) -> Result<LayerEstimate> {
+    let mut sp = crate::obs::span("aidg.estimate_layer");
     let start = Instant::now();
     let k = kernel.k;
+    sp.arg("k", k);
     let p = diagram.fetch_config().port_width as u64;
     let kb = k_block(kernel.insts_per_iter as u64, p);
     let mut ev = Evaluator::new(diagram);
@@ -150,6 +152,12 @@ pub fn estimate_layer(
                   start: Instant,
                   cfg: &FixedPointConfig| {
         crate::metrics::counters::note_aidg(ev.st.nodes, ev.iter_stats.len() as u64);
+        // evaluator phases are histogram-only aggregates (see Evaluator::run)
+        crate::obs::record_duration("aidg.program.compile", ev.obs_compile_ns);
+        crate::obs::record_duration(
+            "aidg.evaluate",
+            ev.obs_run_ns.saturating_sub(ev.obs_compile_ns),
+        );
         LayerEstimate {
             label: kernel.label.clone(),
             k,
@@ -172,6 +180,7 @@ pub fn estimate_layer(
 
     // k_block >= k or too few blocks for a fixed point: whole graph (§6.3).
     if kb >= k || 3 * kb > k {
+        sp.note("whole");
         ev.run(kernel, 0..k)?;
         let cycles = ev.dt_aidg();
         let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
@@ -209,6 +218,7 @@ pub fn estimate_layer(
 
     if evaluated >= k {
         // ran through everything: exact result
+        sp.note("whole");
         let cycles = ev.dt_aidg();
         let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
         let ov = overlap(&ev.iter_stats);
@@ -217,6 +227,7 @@ pub fn estimate_layer(
 
     if let Some(k_prolog) = stable_at {
         // eqs. 6–8 + eq. 2
+        sp.note("fixed_point");
         let dt_prolog = ev.iter_stats.iter().map(|s| s.max_leave).max().unwrap();
         let dt_iteration = ev.iter_stats.last().unwrap().span();
         let ov = overlap(&ev.iter_stats);
@@ -229,6 +240,7 @@ pub fn estimate_layer(
     // Fallback heuristic (eqs. 9–13): Δt_iteration oscillates. Average the
     // per-iteration latency between k_prolog = ⌊k01/4⌋ and k01 = evaluated
     // iterations (1 % of k).
+    sp.note("fallback");
     let k01 = evaluated;
     let k_prolog = (k01 / 4).max(1);
     let leave_at = |it: u64| ev.iter_stats[(it - 1) as usize].max_leave;
@@ -241,10 +253,17 @@ pub fn estimate_layer(
 
 /// Whole-graph evaluation of all `k` iterations (the Table 5 ground truth).
 pub fn evaluate_whole(diagram: &Diagram, kernel: &LoopKernel) -> Result<LayerEstimate> {
+    let mut sp = crate::obs::span("aidg.evaluate_whole");
+    sp.arg("k", kernel.k);
     let start = Instant::now();
     let mut ev = Evaluator::new(diagram);
     ev.run(kernel, 0..kernel.k)?;
     crate::metrics::counters::note_aidg(ev.st.nodes, ev.iter_stats.len() as u64);
+    crate::obs::record_duration("aidg.program.compile", ev.obs_compile_ns);
+    crate::obs::record_duration(
+        "aidg.evaluate",
+        ev.obs_run_ns.saturating_sub(ev.obs_compile_ns),
+    );
     let cycles = ev.dt_aidg();
     let dt_it = ev.iter_stats.last().map_or(0, |s| s.span());
     let ov = overlap(&ev.iter_stats);

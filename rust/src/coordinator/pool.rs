@@ -106,8 +106,34 @@ impl Pool {
 
     /// Enqueue one work item. Fails (instead of panicking) when the pool
     /// has been shut down.
+    ///
+    /// Each job's lifecycle is observable via [`crate::obs`]: the
+    /// `pool.queue_depth` gauge rises on enqueue and falls on pickup, the
+    /// `pool.inflight` gauge covers execution (panic-safe), and — when
+    /// tracing is enabled — the job runs under a `pool.job` span whose
+    /// parent is the span that called `spawn`, with the queue wait recorded
+    /// as a `queued_ns` argument. Spans opened inside the job nest under
+    /// `pool.job`, so cross-thread traces keep their request structure.
     pub fn spawn(&self, job: impl FnOnce() + Send + 'static) -> Result<()> {
-        self.queue.push(Box::new(job))
+        // capture the submitter's span context and enqueue time *now*; the
+        // wrapper re-parents the job's span on whichever worker runs it
+        let parent = crate::obs::current_span_id();
+        let enq_ns = if crate::obs::enabled() { crate::obs::now_ns() } else { 0 };
+        crate::obs::gauge::POOL_QUEUE_DEPTH.add(1);
+        let queued = self.queue.push(Box::new(move || {
+            crate::obs::gauge::POOL_QUEUE_DEPTH.add(-1);
+            let _inflight = crate::obs::gauge::POOL_INFLIGHT.raii();
+            let mut sp = crate::obs::span_with_parent("pool.job", parent);
+            if enq_ns != 0 {
+                sp.arg("queued_ns", crate::obs::now_ns().saturating_sub(enq_ns));
+            }
+            job();
+        }));
+        if queued.is_err() {
+            // never enqueued: the wrapper's decrement will not run
+            crate::obs::gauge::POOL_QUEUE_DEPTH.add(-1);
+        }
+        queued
     }
 
     /// Shut the pool down: queued items still run, new submissions fail.

@@ -38,6 +38,10 @@
 //!                                header line, then one `point` line each
 //! stats                          engine cache/dedup + dse counters, one
 //!                                line
+//! metrics                        full telemetry snapshot: counters, pool/
+//!                                cache gauges, per-span latency summaries,
+//!                                one machine-readable line
+//! trace on|off                   toggle span tracing for this process
 //! quit                           stop serving
 //! ```
 //!
@@ -415,10 +419,48 @@ fn serve_line(
             }
             Ok(line)
         }
+        Some("metrics") => {
+            // one stable machine-readable line: flag + ring accounting,
+            // then counters, gauges, and per-span latency summaries (spans
+            // name-sorted by the snapshot)
+            let snap = crate::obs::snapshot();
+            let mut line = format!(
+                "metrics enabled={} events={} dropped={}",
+                u8::from(snap.enabled),
+                snap.events_recorded,
+                snap.events_dropped
+            );
+            for (name, value) in &snap.counters {
+                line.push_str(&format!(" {name}={value}"));
+            }
+            for (name, value) in &snap.gauges {
+                line.push_str(&format!(" {name}={value}"));
+            }
+            for s in &snap.spans {
+                let h = s.summary;
+                line.push_str(&format!(
+                    " span.{0}.count={1} span.{0}.total_ns={2} span.{0}.self_ns={3} \
+                     span.{0}.p50_ns={4} span.{0}.p95_ns={5} span.{0}.max_ns={6}",
+                    s.name, h.count, h.total_ns, h.self_ns, h.p50_ns, h.p95_ns, h.max_ns
+                ));
+            }
+            Ok(line)
+        }
+        Some("trace") => match it.next() {
+            Some("on") => {
+                crate::obs::set_enabled(true);
+                Ok("trace on".to_string())
+            }
+            Some("off") => {
+                crate::obs::set_enabled(false);
+                Ok("trace off".to_string())
+            }
+            _ => bail!("trace needs an argument (trace on|off)"),
+        },
         Some(cmd) => {
             bail!(
                 "unknown command {cmd:?} \
-                 (estimate|describe|network describe|sweep|frontier|stats|quit)"
+                 (estimate|describe|network describe|sweep|frontier|stats|metrics|trace|quit)"
             )
         }
         None => bail!("empty command"),
@@ -550,10 +592,41 @@ mod tests {
             assert!(p.contains("cycles="), "{p}");
         }
         assert!(lines[4 + n].contains("bad keep= value"), "{}", lines[4 + n]);
-        // stats surfaces the dse counters
+        // stats surfaces the dse counters (dotted naming convention)
         let stats = lines[5 + n];
-        assert!(stats.contains("dse_points_enumerated="), "{stats}");
-        assert!(stats.contains("dse_points_estimated="), "{stats}");
+        assert!(stats.contains("dse.points.enumerated="), "{stats}");
+        assert!(stats.contains("dse.points.estimated="), "{stats}");
+    }
+
+    #[test]
+    fn serve_metrics_and_trace_commands() {
+        // serialize against other tests that toggle the tracing flag
+        let _lock = crate::obs::test_lock();
+        let input = "metrics\ntrace on\ntrace off\ntrace sideways\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 4);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // one machine-readable line: flag/ring accounting, counters, gauges
+        assert!(lines[0].starts_with("metrics enabled="), "{}", lines[0]);
+        assert!(lines[0].contains(" events="), "{}", lines[0]);
+        assert!(lines[0].contains(" dropped="), "{}", lines[0]);
+        assert!(lines[0].contains(" engine.requests="), "{}", lines[0]);
+        assert!(lines[0].contains(" pool.queue_depth="), "{}", lines[0]);
+        assert!(lines[0].contains(" pool.inflight="), "{}", lines[0]);
+        assert!(lines[0].contains(" cache.entries="), "{}", lines[0]);
+        // every k=v token is machine-parsable
+        for tok in lines[0].split_whitespace().skip(1) {
+            let (k, v) = tok.split_once('=').unwrap_or_else(|| panic!("bad token {tok}"));
+            assert!(!k.is_empty(), "{tok}");
+            assert!(v.parse::<i64>().is_ok(), "non-numeric value in {tok}");
+        }
+        assert_eq!(lines[1], "trace on");
+        assert_eq!(lines[2], "trace off");
+        assert!(lines[3].contains("trace needs an argument"), "{}", lines[3]);
+        // the toggles actually moved the flag: off after `trace off`
+        assert!(!crate::obs::enabled());
     }
 
     #[test]

@@ -197,6 +197,7 @@ pub fn explore_space(
     let mut cands = Vec::new();
     let mut guard_failures = 0u64;
     let mut first_guard_err: Option<anyhow::Error> = None;
+    let mut enum_sp = crate::obs::span("dse.enumerate");
     for c in space.candidates() {
         match c {
             Ok(c) => cands.push(CandidateArch {
@@ -215,6 +216,9 @@ pub fn explore_space(
             }
         }
     }
+    enum_sp.arg("candidates", cands.len() as u64);
+    enum_sp.arg("guard_failures", guard_failures);
+    drop(enum_sp);
     if cands.is_empty() {
         if let Some(e) = first_guard_err {
             return Err(e);
@@ -244,9 +248,11 @@ pub fn explore_candidates(
         "keep_frac must be a finite fraction in 0..=1 (got {})",
         opts.keep_frac
     );
+    let mut sp = crate::obs::span("dse.explore");
     let t0 = Instant::now();
 
     // ---- phase 1: roofline everything ----------------------------------
+    let prefilter_sp = crate::obs::span("dse.prefilter");
     let mut points: Vec<SweepPoint> = Vec::new();
     let mut archs: Vec<Arch> = Vec::new();
     let mut enumerated = 0u64;
@@ -290,8 +296,10 @@ pub fn explore_candidates(
     // the funnel: enumerated (all) >= prefiltered (mappable, roofline
     // evaluated) >= estimated (survived keep_frac into the accurate pass)
     counters::DSE_POINTS_PREFILTERED.add(points.len() as u64);
+    drop(prefilter_sp);
 
     // ---- phase 2: survivors, locality-ordered, accurately estimated ----
+    let estimate_sp = crate::obs::span("dse.estimate");
     let keep =
         ((points.len() as f64 * opts.keep_frac).ceil() as usize).clamp(1, points.len().max(1));
     let mut order: Vec<usize> = (0..points.len()).collect();
@@ -314,6 +322,9 @@ pub fn explore_candidates(
         estimated += 1;
         counters::DSE_POINTS_ESTIMATED.add(1);
     }
+    drop(estimate_sp);
+    sp.arg("enumerated", enumerated);
+    sp.arg("estimated", estimated);
 
     // survivors best-AIDG-first, then pre-filtered points by roofline
     points.sort_by(|a, b| match (a.aidg_cycles, b.aidg_cycles) {

@@ -9,7 +9,7 @@
 //! least-recently-used within the shard, driven by a global monotonic tick.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::aidg::LayerEstimate;
@@ -47,6 +47,11 @@ pub struct EstimateCache {
     misses: AtomicU64,
     inserts: AtomicU64,
     evictions: AtomicU64,
+    /// Publish per-shard occupancy to [`crate::obs::gauge`] after every
+    /// mutating operation. Off by default: the gauge registry is
+    /// process-global, so only one cache (the global engine's) should own
+    /// it.
+    gauged: AtomicBool,
 }
 
 impl EstimateCache {
@@ -63,6 +68,24 @@ impl EstimateCache {
             misses: AtomicU64::new(0),
             inserts: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            gauged: AtomicBool::new(false),
+        }
+    }
+
+    /// Start publishing this cache's per-shard occupancy to the
+    /// process-global [`crate::obs::gauge`] registry. Call on at most one
+    /// cache per process (the global engine enables it for its own).
+    pub fn enable_gauges(&self) {
+        self.gauged.store(true, Ordering::Relaxed);
+        for (i, shard) in self.shards.iter().enumerate() {
+            crate::obs::gauge::set_cache_shard(i, shard.lock().unwrap().len());
+        }
+    }
+
+    #[inline]
+    fn publish_shard(&self, idx: usize, len: usize) {
+        if self.gauged.load(Ordering::Relaxed) {
+            crate::obs::gauge::set_cache_shard(idx, len);
         }
     }
 
@@ -93,11 +116,15 @@ impl EstimateCache {
         if cap == 0 {
             return;
         }
-        let mut shard = self.shards[key.shard_of(self.shards.len())].lock().unwrap();
+        let idx = key.shard_of(self.shards.len());
+        let mut shard = self.shards[idx].lock().unwrap();
         let last_used = self.tick.fetch_add(1, Ordering::Relaxed);
         shard.insert(key, Entry { est, last_used });
         self.inserts.fetch_add(1, Ordering::Relaxed);
         Self::trim(&mut shard, cap, &self.evictions);
+        let len = shard.len();
+        drop(shard);
+        self.publish_shard(idx, len);
     }
 
     fn trim(shard: &mut HashMap<KernelKey, Entry>, cap: usize, evictions: &AtomicU64) {
@@ -119,7 +146,7 @@ impl EstimateCache {
     pub fn set_capacity(&self, capacity: usize) {
         self.capacity.store(capacity, Ordering::Relaxed);
         let cap = self.per_shard_cap();
-        for shard in &self.shards {
+        for (idx, shard) in self.shards.iter().enumerate() {
             let mut shard = shard.lock().unwrap();
             if cap == 0 {
                 let n = shard.len() as u64;
@@ -128,6 +155,9 @@ impl EstimateCache {
             } else {
                 Self::trim(&mut shard, cap, &self.evictions);
             }
+            let len = shard.len();
+            drop(shard);
+            self.publish_shard(idx, len);
         }
     }
 
@@ -148,8 +178,9 @@ impl EstimateCache {
 
     /// Drop every entry (tests; memory pressure).
     pub fn clear(&self) {
-        for shard in &self.shards {
+        for (idx, shard) in self.shards.iter().enumerate() {
             shard.lock().unwrap().clear();
+            self.publish_shard(idx, 0);
         }
     }
 

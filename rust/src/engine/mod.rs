@@ -95,7 +95,12 @@ impl EstimationEngine {
     /// serve loop, the CLI).
     pub fn global() -> &'static EstimationEngine {
         static GLOBAL: OnceLock<EstimationEngine> = OnceLock::new();
-        GLOBAL.get_or_init(|| EstimationEngine::new(DEFAULT_CACHE_CAP))
+        GLOBAL.get_or_init(|| {
+            let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+            // the process-global engine owns the process-global cache gauges
+            engine.cache.enable_gauges();
+            engine
+        })
     }
 
     /// Adjust the cache's entry bound (0 disables cross-request caching;
@@ -179,17 +184,23 @@ impl EstimationEngine {
         fp: &FixedPointConfig,
         local: &mut HashMap<KernelKey, Arc<LayerEstimate>>,
     ) -> Result<LayerEstimate> {
+        let mut sp = crate::obs::span("engine.kernel");
         if fp.keep_trace {
             // traces are per-request artifacts; never cached or reused
+            sp.note("trace");
             return estimate_layer(d, kern, fp);
         }
         let key = kernel_key(arch, d, kern, fp);
+        sp.arg("kernel_hi", key.kernel_hi);
         let (est, provenance) = if let Some(a) = local.get(&key) {
+            sp.note("dedup");
             (Arc::clone(a), Provenance::Deduped)
         } else if let Some(a) = self.cache.get(&key) {
+            sp.note("hit");
             local.insert(key, Arc::clone(&a));
             (a, Provenance::CacheHit)
         } else {
+            sp.note("evaluated");
             let a = Arc::new(estimate_layer(d, kern, fp)?);
             self.cache.insert(key, Arc::clone(&a));
             local.insert(key, Arc::clone(&a));
@@ -228,6 +239,7 @@ impl EstimationEngine {
         net: &Network,
         fp: &FixedPointConfig,
     ) -> Result<NetworkEstimate> {
+        let mut sp = crate::obs::span("engine.estimate_network");
         let t0 = Instant::now();
         let mapper = arch.mapper()?;
         let d = mapper.diagram();
@@ -254,6 +266,8 @@ impl EstimationEngine {
         } else {
             local.len() as u64
         };
+        sp.arg("kernels", stats.total_kernels);
+        sp.arg("evaluated", stats.evaluated);
         self.note_request(&stats);
         Ok(NetworkEstimate {
             network: net.name.clone(),
@@ -284,6 +298,7 @@ impl EstimationEngine {
         if fp.keep_trace {
             return self.estimate_network(arch, net, fp);
         }
+        let mut sp = crate::obs::span("engine.estimate_network_pooled");
         let t0 = Instant::now();
         let mapper: Arc<dyn Mapper + Send + Sync> = Arc::from(arch.mapper()?);
         let digest = ArchDigest::of(mapper.diagram());
@@ -314,7 +329,9 @@ impl EstimationEngine {
             }
             let mut slots = Vec::with_capacity(ml.kernels.len());
             for kern in ml.kernels {
+                let mut psp = crate::obs::span("engine.kernel.plan");
                 let key = kernel_key(digest, mapper.diagram(), &kern, fp);
+                psp.arg("kernel_hi", key.kernel_hi);
                 let label = kern.label.clone();
                 let (slot, provenance) = if let Some(&i) = pending_of.get(&key) {
                     (Slot::Pending(i), Provenance::Deduped)
@@ -329,6 +346,11 @@ impl EstimationEngine {
                     pending.push((key, kern));
                     (Slot::Pending(i), Provenance::Computed)
                 };
+                psp.note(match provenance {
+                    Provenance::Computed => "evaluated",
+                    Provenance::CacheHit => "hit",
+                    Provenance::Deduped => "dedup",
+                });
                 stats.count(provenance);
                 slots.push((label, slot, provenance));
             }
@@ -339,17 +361,23 @@ impl EstimationEngine {
         // ---- evaluate the misses: one pool work item per unique kernel ----
         let n_pending = pending.len();
         let (tx, rx) = channel::<(usize, Result<LayerEstimate>)>();
-        for (i, (_, kern)) in pending.iter_mut().enumerate() {
+        for (i, (key, kern)) in pending.iter_mut().enumerate() {
             // move the kernel into the worker; the key stays for cache fill
             let kern = std::mem::replace(
                 kern,
                 LoopKernel::new("<taken>", 0, 0, Box::new(|_, _| {})),
             );
+            let kernel_hi = key.kernel_hi;
             let tx = tx.clone();
             let m = Arc::clone(&mapper);
             let fp = *fp;
             pool.spawn(move || {
-                let r = estimate_layer(m.diagram(), &kern, &fp);
+                let r = {
+                    let mut ksp = crate::obs::span("engine.kernel");
+                    ksp.arg("kernel_hi", kernel_hi);
+                    ksp.note("evaluated");
+                    estimate_layer(m.diagram(), &kern, &fp)
+                };
                 let _ = tx.send((i, r));
             })?;
         }
@@ -394,6 +422,8 @@ impl EstimationEngine {
             };
             layers.push(LayerOutcome { layer_name: pl.name, estimate });
         }
+        sp.arg("kernels", stats.total_kernels);
+        sp.arg("evaluated", stats.evaluated);
         self.note_request(&stats);
         Ok(NetworkEstimate {
             network: net.name.clone(),

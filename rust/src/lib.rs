@@ -46,6 +46,10 @@
 //!   over [`dse`].
 //! - [`metrics`] / [`report`] — PE/MAPE/variance/Pearson, the paper's
 //!   table/figure renderers, and process-wide engine counters.
+//! - [`obs`] — structured tracing: timed spans with cross-thread nesting,
+//!   per-span latency histograms, a lock-free event ring with Chrome
+//!   trace-event export, and pool/cache gauges, all behind a runtime
+//!   enable flag that keeps the layer free when off.
 //!
 //! The `docs/` book covers the system for operators and description
 //! authors: `docs/architecture.md` (module map + the §6.3 estimator),
@@ -68,6 +72,7 @@ pub mod ids;
 pub mod isa;
 pub mod mapping;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -27,7 +27,13 @@
 //! ```text
 //! --workers <N>      worker threads for kernel-granular fan-out (0 = auto)
 //! --cache-cap <N>    estimate-cache entry bound (0 disables caching)
+//! --profile          enable tracing; print the span profile table at exit
+//! --trace-out <path> enable tracing; write Chrome trace JSON at exit
 //! ```
+//!
+//! `--profile` and `--trace-out` turn the [`acadl_perf::obs`] tracing layer
+//! on for the whole run; the trace file loads in Perfetto or
+//! `chrome://tracing` (see `docs/observability.md`).
 
 use anyhow::Context as _;
 
@@ -46,18 +52,38 @@ use acadl_perf::Result;
 struct GlobalOpts {
     /// Worker threads (0 = available parallelism).
     workers: usize,
+    /// Write the span ring as Chrome trace JSON here after the command.
+    trace_out: Option<String>,
+    /// Print the span profile table after the command.
+    profile: bool,
 }
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
     let run = match extract_global_flags(&mut args) {
-        Ok(g) => dispatch(&args, &g),
+        Ok(g) => dispatch(&args, &g).and_then(|()| finish_observability(&g)),
         Err(e) => Err(e),
     };
     if let Err(e) = run {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Post-dispatch telemetry surfaces: `--profile` prints the span profile
+/// table, `--trace-out` writes the ring as Chrome trace-event JSON.
+fn finish_observability(g: &GlobalOpts) -> Result<()> {
+    if g.profile {
+        print!("{}", acadl_perf::report::profile(&acadl_perf::obs::snapshot()).to_markdown());
+    }
+    if let Some(path) = &g.trace_out {
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
+        acadl_perf::obs::write_chrome_trace(&mut f)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        eprintln!("trace: wrote {path}");
+    }
+    Ok(())
 }
 
 /// Hard ceiling on `--workers`: more threads than this is always a typo,
@@ -91,10 +117,12 @@ fn parse_keep_frac(flag: &str, value: &str) -> Result<f64> {
     Ok(v)
 }
 
-/// Strip `--workers N` / `--cache-cap N` out of `args` (they are valid in
-/// any position), applying the cache bound to the global engine.
+/// Strip the global flags (`--workers N`, `--cache-cap N`, `--trace-out
+/// PATH`, `--profile`) out of `args` — they are valid in any position —
+/// applying the cache bound to the global engine and enabling tracing when
+/// a telemetry flag is present.
 fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
-    let mut opts = GlobalOpts { workers: 0 };
+    let mut opts = GlobalOpts { workers: 0, trace_out: None, profile: false };
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -108,6 +136,17 @@ fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
                 let cap = parse_count_flag("--cache-cap", &args[i + 1], u64::MAX)?;
                 EstimationEngine::global().set_cache_capacity(cap);
                 args.drain(i..i + 2);
+            }
+            "--trace-out" => {
+                anyhow::ensure!(i + 1 < args.len(), "--trace-out needs a path");
+                opts.trace_out = Some(args[i + 1].clone());
+                acadl_perf::obs::set_enabled(true);
+                args.drain(i..i + 2);
+            }
+            "--profile" => {
+                opts.profile = true;
+                acadl_perf::obs::set_enabled(true);
+                args.remove(i);
             }
             _ => i += 1,
         }
@@ -142,6 +181,7 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
             eprintln!("  dse:           --arch-file <path> [--network-file <path>] [--keep-frac F] [--sweep-cap N]");
             eprintln!("                 explores the description's [sweep] space (see docs/dse.md)");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
+            eprintln!("                 --profile (span profile table) | --trace-out <path> (Chrome trace JSON)");
             Ok(())
         }
     }
@@ -685,9 +725,27 @@ mod tests {
                 .collect();
         let g = extract_global_flags(&mut args).unwrap();
         assert_eq!(g.workers, 3);
+        assert!(g.trace_out.is_none());
+        assert!(!g.profile);
         assert_eq!(args, vec!["estimate", "ultratrail", "tc_resnet8"]);
         let mut bad: Vec<String> =
             ["--workers", "1000000"].iter().map(|s| s.to_string()).collect();
+        assert!(extract_global_flags(&mut bad).is_err());
+    }
+
+    #[test]
+    fn telemetry_flags_strip_and_enable_tracing() {
+        let mut args: Vec<String> =
+            ["estimate", "--profile", "gemmini", "--trace-out", "t.json", "tc_resnet8"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let g = extract_global_flags(&mut args).unwrap();
+        assert!(g.profile);
+        assert_eq!(g.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(args, vec!["estimate", "gemmini", "tc_resnet8"]);
+        assert!(acadl_perf::obs::enabled());
+        let mut bad: Vec<String> = ["--trace-out"].iter().map(|s| s.to_string()).collect();
         assert!(extract_global_flags(&mut bad).is_err());
     }
 

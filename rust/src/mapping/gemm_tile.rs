@@ -209,6 +209,10 @@ impl Mapper for GemmTileMapper {
         &self.g.diagram
     }
 
+    fn obs_name(&self) -> &'static str {
+        "mapping.gemm_tile"
+    }
+
     fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
         if let Some((m, k, n)) = layer.gemm_dims() {
             if m == 0 {

@@ -85,8 +85,16 @@ pub trait Mapper {
     /// Lower one layer.
     fn map_layer(&self, layer: &Layer) -> Result<MappedLayer>;
 
+    /// Span name for this mapper's [`Mapper::map_network`] in
+    /// [`crate::obs`] traces (e.g. `"mapping.scalar"`).
+    fn obs_name(&self) -> &'static str {
+        "mapping.map_network"
+    }
+
     /// Lower a whole network in order.
     fn map_network(&self, net: &Network) -> Result<Vec<MappedLayer>> {
+        let mut sp = crate::obs::span(self.obs_name());
+        sp.arg("layers", net.layers.len() as u64);
         net.layers.iter().map(|l| self.map_layer(l)).collect()
     }
 

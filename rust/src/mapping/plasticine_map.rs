@@ -160,6 +160,10 @@ impl Mapper for PlasticineMapper {
         &self.p.diagram
     }
 
+    fn obs_name(&self) -> &'static str {
+        "mapping.plasticine"
+    }
+
     fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
         if let Some((m, k, n)) = layer.gemm_dims() {
             if m == 0 {

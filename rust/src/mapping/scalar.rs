@@ -358,6 +358,10 @@ impl Mapper for ScalarMapper {
         &self.sys.diagram
     }
 
+    fn obs_name(&self) -> &'static str {
+        "mapping.scalar"
+    }
+
     fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
         if let Some(g) = conv_geom(layer) {
             if g.out_pos() == 0 {

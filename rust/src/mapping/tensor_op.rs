@@ -96,6 +96,10 @@ impl Mapper for TensorOpMapper {
         &self.ut.diagram
     }
 
+    fn obs_name(&self) -> &'static str {
+        "mapping.tensor_op"
+    }
+
     fn map_layer(&self, layer: &Layer) -> Result<MappedLayer> {
         let ops = self.ut.ops;
         match layer.kind {

@@ -49,12 +49,12 @@ pub mod counters {
     /// Kernel slots deduplicated within a single request.
     pub static ENGINE_KERNELS_DEDUPED: Counter = Counter::new("engine.kernels.deduped");
     /// DSE design points enumerated (including unmappable ones).
-    pub static DSE_POINTS_ENUMERATED: Counter = Counter::new("dse_points_enumerated");
+    pub static DSE_POINTS_ENUMERATED: Counter = Counter::new("dse.points.enumerated");
     /// DSE design points that reached the roofline pre-filter (mappable
     /// candidates; enumerated minus degenerate skips).
-    pub static DSE_POINTS_PREFILTERED: Counter = Counter::new("dse_points_prefiltered");
+    pub static DSE_POINTS_PREFILTERED: Counter = Counter::new("dse.points.prefiltered");
     /// DSE design points that survived into the accurate AIDG pass.
-    pub static DSE_POINTS_ESTIMATED: Counter = Counter::new("dse_points_estimated");
+    pub static DSE_POINTS_ESTIMATED: Counter = Counter::new("dse.points.estimated");
     /// AIDG nodes processed by any evaluator (the §6.2 work unit — the
     /// denominator of the evaluator-throughput numbers in
     /// `BENCH_eval.json`).
@@ -282,10 +282,31 @@ mod tests {
         counters::ENGINE_REQUESTS.add(1);
         assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
         let snap = counters::snapshot();
-        assert_eq!(snap.len(), 8);
+        assert_eq!(snap.len(), 10);
         assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
-        assert!(snap.iter().any(|(n, _)| *n == "dse_points_enumerated"));
-        assert!(snap.iter().any(|(n, _)| *n == "dse_points_prefiltered"));
-        assert!(snap.iter().any(|(n, _)| *n == "dse_points_estimated"));
+        assert!(snap.iter().any(|(n, _)| *n == "dse.points.enumerated"));
+        assert!(snap.iter().any(|(n, _)| *n == "dse.points.prefiltered"));
+        assert!(snap.iter().any(|(n, _)| *n == "dse.points.estimated"));
+    }
+
+    #[test]
+    fn counter_names_follow_the_dotted_convention() {
+        for (name, _) in counters::snapshot() {
+            assert!(
+                name.contains('.'),
+                "counter {name:?} must use the dotted naming convention (e.g. engine.requests)"
+            );
+            assert!(
+                !name.contains('_') && !name.contains(' ') && !name.contains('='),
+                "counter {name:?} must be machine-line safe: dot-separated lowercase segments"
+            );
+            assert!(
+                name.split('.').all(|seg| {
+                    !seg.is_empty()
+                        && seg.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit())
+                }),
+                "counter {name:?} has an empty or non-lowercase dotted segment"
+            );
+        }
     }
 }

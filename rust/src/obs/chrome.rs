@@ -1,0 +1,142 @@
+//! Chrome trace-event JSON export of the span ring.
+//!
+//! Emits the "JSON Object Format" understood by Perfetto and
+//! `chrome://tracing`: a `traceEvents` array of complete (`"ph":"X"`)
+//! duration events with microsecond timestamps. Span ids, parents, integer
+//! arguments and provenance notes ride along in each event's `args`, so a
+//! pooled estimate's cross-thread structure is recoverable in the viewer.
+//! Hand-rolled serialization — the crate deliberately has no serde.
+
+use std::io::{self, Write};
+
+use super::ring::{self, SpanEvent};
+use super::NO_NAME;
+
+/// Append a JSON-escaped string literal (with quotes) to `out`.
+fn push_json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Nanoseconds → microseconds with three decimals, as exact decimal text
+/// (Chrome's `ts`/`dur` unit is µs; three decimals preserves full ns
+/// resolution without float rounding).
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn push_event(out: &mut String, ev: &SpanEvent) {
+    out.push_str("{\"name\":");
+    push_json_str(out, ev.name());
+    out.push_str(",\"cat\":\"obs\",\"ph\":\"X\",\"ts\":");
+    out.push_str(&us(ev.start_ns));
+    out.push_str(",\"dur\":");
+    out.push_str(&us(ev.dur_ns));
+    out.push_str(",\"pid\":1,\"tid\":");
+    out.push_str(&ev.tid.to_string());
+    out.push_str(",\"args\":{\"span_id\":");
+    out.push_str(&ev.id.to_string());
+    out.push_str(",\"parent\":");
+    out.push_str(&ev.parent.to_string());
+    for (key, val) in [(ev.arg0_key, ev.arg0_val), (ev.arg1_key, ev.arg1_val)] {
+        if key != NO_NAME {
+            out.push(',');
+            push_json_str(out, super::resolve_name(key));
+            out.push(':');
+            out.push_str(&val.to_string());
+        }
+    }
+    if ev.note_idx != NO_NAME {
+        out.push_str(",\"note\":");
+        push_json_str(out, super::resolve_name(ev.note_idx));
+    }
+    out.push_str("}}");
+}
+
+/// The global ring's retained events as a Chrome trace JSON document.
+pub fn chrome_trace_string() -> String {
+    let events = ring::events();
+    let mut out = String::with_capacity(64 + events.len() * 160);
+    out.push_str("{\"traceEvents\":[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_event(&mut out, ev);
+    }
+    out.push_str("],\"displayTimeUnit\":\"ns\"}\n");
+    out
+}
+
+/// Write the global ring's retained events as Chrome trace JSON.
+pub fn write_chrome_trace(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(chrome_trace_string().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_string_escaping() {
+        let mut s = String::new();
+        push_json_str(&mut s, "a\"b\\c\nd\te\u{1}");
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\te\\u0001\"");
+    }
+
+    #[test]
+    fn microsecond_formatting_is_exact() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(1), "0.001");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn events_serialize_with_required_keys() {
+        let ev = SpanEvent {
+            name_idx: super::super::intern("obs.test.chrome"),
+            tid: 3,
+            id: 17,
+            parent: 5,
+            start_ns: 2500,
+            dur_ns: 1500,
+            arg0_key: super::super::intern("k"),
+            arg0_val: 9,
+            arg1_key: NO_NAME,
+            arg1_val: 0,
+            note_idx: super::super::intern("hit"),
+        };
+        let mut s = String::new();
+        push_event(&mut s, &ev);
+        assert!(s.contains("\"name\":\"obs.test.chrome\""));
+        assert!(s.contains("\"ph\":\"X\""));
+        assert!(s.contains("\"ts\":2.500"));
+        assert!(s.contains("\"dur\":1.500"));
+        assert!(s.contains("\"pid\":1"));
+        assert!(s.contains("\"tid\":3"));
+        assert!(s.contains("\"span_id\":17"));
+        assert!(s.contains("\"parent\":5"));
+        assert!(s.contains("\"k\":9"));
+        assert!(s.contains("\"note\":\"hit\""));
+    }
+
+    #[test]
+    fn trace_document_wraps_events() {
+        let doc = chrome_trace_string();
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.trim_end().ends_with("],\"displayTimeUnit\":\"ns\"}"));
+    }
+}

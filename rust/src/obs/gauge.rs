@@ -1,0 +1,133 @@
+//! Instantaneous-level gauges: pool queue depth, in-flight jobs, and
+//! per-shard [`EstimateCache`](crate::engine::EstimateCache) occupancy.
+//!
+//! Unlike [`crate::metrics::counters`] (monotonic totals) a gauge moves in
+//! both directions, so it can drift if an increment's matching decrement is
+//! lost to a panic — [`Gauge::raii`] returns a guard whose `Drop` restores
+//! the level even when the guarded job unwinds. Gauges are always live
+//! (plain atomics, no enable check): they cost the same as the check would.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+
+/// A named signed instantaneous level.
+pub struct Gauge {
+    name: &'static str,
+    value: AtomicI64,
+}
+
+impl Gauge {
+    /// A gauge at level 0.
+    pub const fn new(name: &'static str) -> Self {
+        Self { name, value: AtomicI64::new(0) }
+    }
+
+    /// The gauge's dotted name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Move the level by `delta` (may be negative).
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.value.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Set the level absolutely.
+    #[inline]
+    pub fn set(&self, value: i64) {
+        self.value.store(value, Ordering::Relaxed);
+    }
+
+    /// The current level.
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Increment now, decrement when the returned guard drops — panic-safe
+    /// occupancy tracking for scopes that may unwind.
+    pub fn raii(&'static self) -> GaugeGuard {
+        self.add(1);
+        GaugeGuard { gauge: self }
+    }
+}
+
+/// Decrements its gauge on drop (including during unwinding).
+pub struct GaugeGuard {
+    gauge: &'static Gauge,
+}
+
+impl Drop for GaugeGuard {
+    fn drop(&mut self) {
+        self.gauge.add(-1);
+    }
+}
+
+/// Jobs accepted by [`crate::coordinator::Pool::spawn`] but not yet picked
+/// up by a worker.
+pub static POOL_QUEUE_DEPTH: Gauge = Gauge::new("pool.queue_depth");
+
+/// Jobs currently executing on pool workers.
+pub static POOL_INFLIGHT: Gauge = Gauge::new("pool.inflight");
+
+/// Shard count mirrored from the engine's `EstimateCache`.
+pub const CACHE_SHARDS: usize = 16;
+
+/// Per-shard entry counts for the global engine's estimate cache, updated
+/// after every mutating cache operation when gauging is enabled.
+static CACHE_SHARD_ENTRIES: [AtomicI64; CACHE_SHARDS] =
+    [const { AtomicI64::new(0) }; CACHE_SHARDS];
+
+/// Publish one cache shard's entry count.
+#[inline]
+pub fn set_cache_shard(idx: usize, entries: usize) {
+    if let Some(g) = CACHE_SHARD_ENTRIES.get(idx) {
+        g.store(entries as i64, Ordering::Relaxed);
+    }
+}
+
+/// All cache shard levels, by shard index.
+pub fn cache_shards_snapshot() -> [i64; CACHE_SHARDS] {
+    std::array::from_fn(|i| CACHE_SHARD_ENTRIES[i].load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_moves_both_directions() {
+        static G: Gauge = Gauge::new("obs.test.gauge");
+        assert_eq!(G.name(), "obs.test.gauge");
+        G.add(3);
+        G.add(-1);
+        assert_eq!(G.get(), 2);
+        G.set(0);
+        assert_eq!(G.get(), 0);
+    }
+
+    #[test]
+    fn raii_guard_restores_level_on_panic() {
+        static G: Gauge = Gauge::new("obs.test.raii");
+        {
+            let _g = G.raii();
+            assert_eq!(G.get(), 1);
+        }
+        assert_eq!(G.get(), 0);
+        let unwound = std::panic::catch_unwind(|| {
+            let _g = G.raii();
+            panic!("job failed");
+        });
+        assert!(unwound.is_err());
+        assert_eq!(G.get(), 0, "guard must decrement during unwinding");
+    }
+
+    #[test]
+    fn cache_shard_levels_round_trip() {
+        set_cache_shard(3, 42);
+        set_cache_shard(CACHE_SHARDS, 99); // out of range: ignored
+        let snap = cache_shards_snapshot();
+        assert_eq!(snap[3], 42);
+        set_cache_shard(3, 0);
+    }
+}

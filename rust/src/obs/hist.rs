@@ -1,0 +1,251 @@
+//! Per-span-name latency histograms with power-of-two nanosecond buckets.
+//!
+//! A [`Histogram`] is 69 atomics — cheap enough to keep one per span name
+//! for the life of the process. Bucket 0 holds exactly `{0}` and bucket
+//! `i ≥ 1` holds `[2^(i-1), 2^i - 1]`, so `observe` is a `leading_zeros`
+//! and one `fetch_add`; quantiles come back as the bucket's upper bound
+//! clamped to the recorded maximum (never over-reporting).
+//!
+//! The registry maps interned span-name indices to `&'static Histogram`s
+//! leaked at registration. Registration (once per distinct name, during
+//! warmup) takes a write lock and allocates; steady-state lookups take the
+//! read lock and scan a short vector — no allocation, which is what lets
+//! `rust/tests/eval_alloc.rs` pass with tracing enabled.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Number of buckets: `{0}` plus one per power of two up to `2^63`.
+pub const BUCKETS: usize = 65;
+
+/// Lock-free latency histogram (nanoseconds, power-of-two buckets).
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    self_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Bucket index for a duration: 0 for 0 ns, else `64 - leading_zeros`
+/// (1 → 1, 2..=3 → 2, `u64::MAX` → 64).
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        64 - ns.leading_zeros() as usize
+    }
+}
+
+/// Largest duration that lands in bucket `i`.
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1..=63 => (1u64 << i) - 1,
+        _ => u64::MAX,
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            self_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one span instance: total duration and its self time (total
+    /// minus same-thread child spans). Lock-free, allocation-free.
+    #[inline]
+    pub fn observe(&self, dur_ns: u64, self_ns: u64) {
+        self.buckets[bucket_index(dur_ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(dur_ns, Ordering::Relaxed);
+        self.self_ns.fetch_add(self_ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(dur_ns, Ordering::Relaxed);
+    }
+
+    /// Aggregate view (count, totals, max, p50/p95).
+    pub fn summary(&self) -> HistSummary {
+        let count = self.count.load(Ordering::Relaxed);
+        let max_ns = self.max_ns.load(Ordering::Relaxed);
+        HistSummary {
+            count,
+            total_ns: self.sum_ns.load(Ordering::Relaxed),
+            self_ns: self.self_ns.load(Ordering::Relaxed),
+            max_ns,
+            p50_ns: self.quantile(0.50, count, max_ns),
+            p95_ns: self.quantile(0.95, count, max_ns),
+        }
+    }
+
+    /// Upper-bound quantile: the upper edge of the bucket containing the
+    /// rank-`ceil(q·count)` observation, clamped to the recorded max.
+    fn quantile(&self, q: f64, count: u64, max_ns: u64) -> u64 {
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper_bound(i).min(max_ns);
+            }
+        }
+        max_ns
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One histogram's aggregate numbers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Recorded span instances.
+    pub count: u64,
+    /// Sum of all durations (ns).
+    pub total_ns: u64,
+    /// Sum of self times (duration minus same-thread children, ns).
+    pub self_ns: u64,
+    /// Largest single duration (ns).
+    pub max_ns: u64,
+    /// Median (bucket upper bound, clamped to max).
+    pub p50_ns: u64,
+    /// 95th percentile (bucket upper bound, clamped to max).
+    pub p95_ns: u64,
+}
+
+/// name-index → histogram registry. Short linear-scan vector: the span
+/// taxonomy is a couple dozen names, and scans hold only the read lock.
+static REGISTRY: RwLock<Vec<(u32, &'static Histogram)>> = RwLock::new(Vec::new());
+
+/// The histogram for an interned span name, registering (and leaking) it
+/// on first use. Steady-state calls never allocate.
+pub fn for_name(name_idx: u32) -> &'static Histogram {
+    {
+        let reg = REGISTRY.read().unwrap();
+        if let Some((_, h)) = reg.iter().find(|(i, _)| *i == name_idx) {
+            return h;
+        }
+    }
+    let mut reg = REGISTRY.write().unwrap();
+    if let Some((_, h)) = reg.iter().find(|(i, _)| *i == name_idx) {
+        return h;
+    }
+    let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+    reg.push((name_idx, h));
+    h
+}
+
+/// Summaries for every registered span name (unsorted registration order).
+pub fn summaries() -> Vec<(&'static str, HistSummary)> {
+    REGISTRY
+        .read()
+        .unwrap()
+        .iter()
+        .map(|(idx, h)| (super::resolve_name(*idx), h.summary()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper_bound(0), 0);
+        assert_eq!(bucket_upper_bound(1), 1);
+        assert_eq!(bucket_upper_bound(2), 3);
+        assert_eq!(bucket_upper_bound(10), 1023);
+        assert_eq!(bucket_upper_bound(64), u64::MAX);
+        // every value lands in a bucket whose bound contains it
+        for ns in [0u64, 1, 2, 3, 7, 8, 1 << 20, u64::MAX - 1, u64::MAX] {
+            let i = bucket_index(ns);
+            assert!(ns <= bucket_upper_bound(i));
+            if i > 0 {
+                assert!(ns > bucket_upper_bound(i - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn summary_quantiles_clamp_to_max() {
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.observe(1000, 900);
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.total_ns, 100_000);
+        assert_eq!(s.self_ns, 90_000);
+        assert_eq!(s.max_ns, 1000);
+        // bucket upper bound would be 1023; max clamps it
+        assert_eq!(s.p50_ns, 1000);
+        assert_eq!(s.p95_ns, 1000);
+    }
+
+    #[test]
+    fn summary_of_empty_histogram_is_zero() {
+        let s = Histogram::new().summary();
+        assert_eq!(
+            s,
+            HistSummary { count: 0, total_ns: 0, self_ns: 0, max_ns: 0, p50_ns: 0, p95_ns: 0 }
+        );
+    }
+
+    #[test]
+    fn quantiles_walk_buckets() {
+        let h = Histogram::new();
+        // 90 fast (≤15ns bucket), 10 slow (≤1023ns bucket)
+        for _ in 0..90 {
+            h.observe(10, 10);
+        }
+        for _ in 0..10 {
+            h.observe(600, 600);
+        }
+        let s = h.summary();
+        assert_eq!(s.p50_ns, 15); // bucket [8,15]
+        assert_eq!(s.p95_ns, 600); // bucket [512,1023] clamped to max
+        assert_eq!(s.max_ns, 600);
+    }
+
+    #[test]
+    fn zero_duration_observations_count() {
+        let h = Histogram::new();
+        h.observe(0, 0);
+        let s = h.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.p50_ns, 0);
+        assert_eq!(s.max_ns, 0);
+    }
+
+    #[test]
+    fn registry_returns_same_histogram_for_same_name() {
+        let idx = super::super::intern("obs.test.hist_registry");
+        let a = for_name(idx) as *const Histogram;
+        let b = for_name(idx) as *const Histogram;
+        assert_eq!(a, b);
+        for_name(idx).observe(5, 5);
+        assert!(summaries()
+            .iter()
+            .any(|(n, s)| *n == "obs.test.hist_registry" && s.count >= 1));
+    }
+}

@@ -1,0 +1,232 @@
+//! Low-overhead structured tracing and telemetry for the estimation stack.
+//!
+//! The paper's headline claim is attributional — a few evaluated loop
+//! iterations standing in for billions of instructions — and this module
+//! makes the attribution *observable*: where an estimate's wall time goes
+//! (mapping vs. lowering vs. steady-state evaluation vs. cache lookup),
+//! how the worker pool breathes (queue depth, in-flight jobs), and how the
+//! estimate cache fills per shard. Four primitives:
+//!
+//! 1. **Timed spans** ([`span`] / [`SpanGuard`]) — thread-local nesting
+//!    with explicit parent propagation across pool threads
+//!    ([`span_with_parent`] + [`current_span_id`]). Every span drop feeds
+//!    the histogram registry and the event ring.
+//! 2. **Latency histograms** ([`Histogram`]) — per-span-name power-of-two
+//!    nanosecond buckets with count / p50 / p95 / max and a *self-time*
+//!    column (total minus child spans on the same thread).
+//! 3. **A fixed-capacity lock-free event ring** ([`SpanRing`]) — writers
+//!    claim slots with one `fetch_add` and publish via a per-slot sequence
+//!    counter; when full, the oldest events are overwritten first.
+//! 4. **Gauges** ([`gauge`]) — pool queue depth, in-flight jobs, per-shard
+//!    [`EstimateCache`](crate::engine::EstimateCache) occupancy.
+//!
+//! One [`snapshot`] joins all of it with the existing
+//! [`crate::metrics::counters`]; [`write_chrome_trace`] exports the ring as
+//! Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! **Overhead contract.** Tracing is disabled by default. Disabled, a span
+//! is a handful of branches (one relaxed atomic load, no clock read, no
+//! interning, no TLS mutation); enabled, the steady-state evaluator path
+//! stays allocation-free (`rust/tests/eval_alloc.rs` proves both modes) and
+//! estimates are bit-identical because the instrumentation only *reads*
+//! clocks — `rust/tests/obs_trace.rs` pins cycle-identity across all four
+//! paper architectures. See `docs/observability.md` for the span taxonomy.
+
+pub mod chrome;
+pub mod gauge;
+pub mod hist;
+pub mod ring;
+pub mod span;
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+pub use chrome::{chrome_trace_string, write_chrome_trace};
+pub use gauge::Gauge;
+pub use hist::{HistSummary, Histogram};
+pub use ring::{SpanEvent, SpanRing};
+pub use span::{current_span_id, record_duration, span, span_with_parent, SpanGuard};
+
+/// Process-wide enable flag. All span/histogram/ring recording is gated on
+/// it; gauges and [`crate::metrics::counters`] stay live regardless (they
+/// are plain atomics, as cheap as the flag check itself).
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Enable or disable tracing process-wide. Spans opened while enabled
+/// record on drop even if tracing is disabled in between.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// True when tracing is enabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds since the process's tracing epoch (the first call). All
+/// span timestamps share this epoch, so cross-thread event ordering is
+/// meaningful. Never allocates.
+#[inline]
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+thread_local! {
+    /// Cached per-thread id (0 = not yet assigned).
+    static TID: std::cell::Cell<u32> = const { std::cell::Cell::new(0) };
+}
+
+/// A small, stable, process-unique id for the calling thread (assigned on
+/// first use; `ThreadId` has no stable integer accessor).
+pub fn thread_id() -> u32 {
+    static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+    TID.with(|t| {
+        let mut id = t.get();
+        if id == 0 {
+            id = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            t.set(id);
+        }
+        id
+    })
+}
+
+/// Interned span/arg name table: names are `&'static str`, events store a
+/// `u32` index. Registration (write lock + `Vec` growth) happens once per
+/// distinct name; steady-state lookups take the read lock only.
+static STRINGS: RwLock<Vec<&'static str>> = RwLock::new(Vec::new());
+
+/// Sentinel index meaning "no name/arg/note".
+pub const NO_NAME: u32 = u32::MAX;
+
+/// Intern a static string, returning its stable index.
+pub fn intern(s: &'static str) -> u32 {
+    {
+        let v = STRINGS.read().unwrap();
+        if let Some(i) = v.iter().position(|&t| std::ptr::eq(t, s) || t == s) {
+            return i as u32;
+        }
+    }
+    let mut v = STRINGS.write().unwrap();
+    if let Some(i) = v.iter().position(|&t| t == s) {
+        return i as u32;
+    }
+    v.push(s);
+    (v.len() - 1) as u32
+}
+
+/// Resolve an interned index back to its string (`"?"` when unknown).
+pub fn resolve_name(idx: u32) -> &'static str {
+    if idx == NO_NAME {
+        return "?";
+    }
+    STRINGS.read().unwrap().get(idx as usize).copied().unwrap_or("?")
+}
+
+/// One span name's aggregate latency summary.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanSummary {
+    /// The span's name.
+    pub name: &'static str,
+    /// Count/total/self/p50/p95/max over every recorded instance.
+    pub summary: HistSummary,
+}
+
+/// Point-in-time join of every telemetry surface: the enable flag, ring
+/// accounting, the process-wide monotonic counters, gauges, and one
+/// latency summary per span name (sorted by name for stable output).
+#[derive(Debug, Clone)]
+pub struct ObsSnapshot {
+    /// Whether tracing is currently enabled.
+    pub enabled: bool,
+    /// Span events recorded into the ring since process start.
+    pub events_recorded: u64,
+    /// Events overwritten by ring wraparound (oldest-first).
+    pub events_dropped: u64,
+    /// Every [`crate::metrics::counters`] counter, in registration order.
+    pub counters: Vec<(&'static str, u64)>,
+    /// Gauges: pool queue depth / in-flight, per-shard cache occupancy.
+    pub gauges: Vec<(String, i64)>,
+    /// Per-span-name latency summaries, sorted by name.
+    pub spans: Vec<SpanSummary>,
+}
+
+/// Serializes unit tests that toggle the process-global enable flag, so
+/// concurrently running tests cannot observe each other's toggles.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Take an [`ObsSnapshot`].
+pub fn snapshot() -> ObsSnapshot {
+    let (recorded, dropped) = ring::global_stats();
+    let mut gauges: Vec<(String, i64)> = vec![
+        (gauge::POOL_QUEUE_DEPTH.name().to_string(), gauge::POOL_QUEUE_DEPTH.get()),
+        (gauge::POOL_INFLIGHT.name().to_string(), gauge::POOL_INFLIGHT.get()),
+    ];
+    let shards = gauge::cache_shards_snapshot();
+    gauges.push(("cache.entries".to_string(), shards.iter().sum()));
+    for (i, v) in shards.iter().enumerate() {
+        gauges.push((format!("cache.shard{i:02}.entries"), *v));
+    }
+    let mut spans: Vec<SpanSummary> = hist::summaries()
+        .into_iter()
+        .map(|(name, summary)| SpanSummary { name, summary })
+        .collect();
+    spans.sort_by_key(|s| s.name);
+    ObsSnapshot {
+        enabled: enabled(),
+        events_recorded: recorded,
+        events_dropped: dropped,
+        counters: crate::metrics::counters::snapshot(),
+        gauges,
+        spans,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_stable_and_content_addressed() {
+        let a = intern("obs.test.interning");
+        let b = intern("obs.test.interning");
+        assert_eq!(a, b);
+        assert_eq!(resolve_name(a), "obs.test.interning");
+        assert_eq!(resolve_name(NO_NAME), "?");
+        assert_eq!(resolve_name(u32::MAX - 1), "?");
+        let c = intern("obs.test.other");
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn thread_ids_are_stable_per_thread_and_distinct() {
+        let here = thread_id();
+        assert_eq!(here, thread_id());
+        let other = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(here, other);
+        assert!(here > 0 && other > 0);
+    }
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn snapshot_joins_counters_and_gauges() {
+        let s = snapshot();
+        assert!(s.counters.iter().any(|(n, _)| *n == "engine.requests"));
+        assert!(s.gauges.iter().any(|(n, _)| n == "pool.queue_depth"));
+        assert!(s.gauges.iter().any(|(n, _)| n == "cache.entries"));
+        // 16 shards + aggregate + 2 pool gauges
+        assert_eq!(s.gauges.len(), 3 + gauge::CACHE_SHARDS);
+    }
+}

@@ -1,0 +1,313 @@
+//! Fixed-capacity lock-free ring buffer of span events.
+//!
+//! Writers claim a slot with a single `fetch_add` on the global write
+//! cursor, then publish through a per-slot sequence word tagged with the
+//! claim position (crossbeam-style seqlock: odd = in progress, `2·pos+2` =
+//! published). Readers validate the sequence before *and* after copying a
+//! slot, so a concurrent overwrite is detected and the slot skipped rather
+//! than returned torn. When the ring is full the oldest events are
+//! overwritten first; [`SpanRing::snapshot`] reports how many were lost.
+//!
+//! Events are plain-old-data — interned `u32` name indices, integer ids
+//! and nanosecond timestamps — so recording is store-only: no allocation,
+//! no locks, no drop glue.
+
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use super::NO_NAME;
+
+/// One completed span, as recorded in the ring. All-integer POD; resolve
+/// names with [`crate::obs::resolve_name`] or the [`SpanEvent::name`]
+/// helper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Interned span name index.
+    pub name_idx: u32,
+    /// Recording thread's [`crate::obs::thread_id`].
+    pub tid: u32,
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Parent span id (0 = root).
+    pub parent: u64,
+    /// Start timestamp, ns since the tracing epoch.
+    pub start_ns: u64,
+    /// Duration in ns.
+    pub dur_ns: u64,
+    /// First argument's interned key ([`NO_NAME`] = unset).
+    pub arg0_key: u32,
+    /// First argument's value.
+    pub arg0_val: u64,
+    /// Second argument's interned key ([`NO_NAME`] = unset).
+    pub arg1_key: u32,
+    /// Second argument's value.
+    pub arg1_val: u64,
+    /// Interned provenance note ([`NO_NAME`] = none), e.g. `"hit"`.
+    pub note_idx: u32,
+}
+
+impl SpanEvent {
+    /// The span's resolved name.
+    pub fn name(&self) -> &'static str {
+        super::resolve_name(self.name_idx)
+    }
+
+    /// The provenance note, if any.
+    pub fn note(&self) -> Option<&'static str> {
+        (self.note_idx != NO_NAME).then(|| super::resolve_name(self.note_idx))
+    }
+}
+
+/// One ring slot: a seqlock word plus the event fields, all atomics so the
+/// whole structure is safe Rust with no `UnsafeCell`.
+struct Slot {
+    /// `2·pos+1` while the claim at `pos` is being written, `2·pos+2` once
+    /// published, 0 when never written.
+    seq: AtomicU64,
+    name_idx: AtomicU64,
+    tid: AtomicU64,
+    id: AtomicU64,
+    parent: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    arg0_key: AtomicU64,
+    arg0_val: AtomicU64,
+    arg1_key: AtomicU64,
+    arg1_val: AtomicU64,
+    note_idx: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            name_idx: AtomicU64::new(0),
+            tid: AtomicU64::new(0),
+            id: AtomicU64::new(0),
+            parent: AtomicU64::new(0),
+            start_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+            arg0_key: AtomicU64::new(0),
+            arg0_val: AtomicU64::new(0),
+            arg1_key: AtomicU64::new(0),
+            arg1_val: AtomicU64::new(0),
+            note_idx: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity multi-writer ring of [`SpanEvent`]s.
+pub struct SpanRing {
+    cap: u64,
+    next: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl SpanRing {
+    /// A ring holding the most recent `cap` events (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap: cap as u64,
+            next: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+        }
+    }
+
+    /// The ring's capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Record one event. Lock-free and allocation-free; overwrites the
+    /// oldest event when full.
+    pub fn record(&self, ev: &SpanEvent) {
+        let pos = self.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(pos % self.cap) as usize];
+        slot.seq.store(2 * pos + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        slot.name_idx.store(ev.name_idx as u64, Ordering::Relaxed);
+        slot.tid.store(ev.tid as u64, Ordering::Relaxed);
+        slot.id.store(ev.id, Ordering::Relaxed);
+        slot.parent.store(ev.parent, Ordering::Relaxed);
+        slot.start_ns.store(ev.start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(ev.dur_ns, Ordering::Relaxed);
+        slot.arg0_key.store(ev.arg0_key as u64, Ordering::Relaxed);
+        slot.arg0_val.store(ev.arg0_val, Ordering::Relaxed);
+        slot.arg1_key.store(ev.arg1_key as u64, Ordering::Relaxed);
+        slot.arg1_val.store(ev.arg1_val, Ordering::Relaxed);
+        slot.note_idx.store(ev.note_idx as u64, Ordering::Relaxed);
+        slot.seq.store(2 * pos + 2, Ordering::Release);
+    }
+
+    /// Copy out the retained events oldest-first, plus
+    /// `(events_recorded, events_dropped)` totals. Slots concurrently being
+    /// overwritten are skipped, never returned torn.
+    pub fn snapshot(&self) -> (Vec<SpanEvent>, u64, u64) {
+        let recorded = self.next.load(Ordering::Acquire);
+        let start = recorded.saturating_sub(self.cap);
+        let mut out = Vec::with_capacity((recorded - start) as usize);
+        for pos in start..recorded {
+            let slot = &self.slots[(pos % self.cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != 2 * pos + 2 {
+                continue; // unpublished or already overwritten
+            }
+            let ev = SpanEvent {
+                name_idx: slot.name_idx.load(Ordering::Relaxed) as u32,
+                tid: slot.tid.load(Ordering::Relaxed) as u32,
+                id: slot.id.load(Ordering::Relaxed),
+                parent: slot.parent.load(Ordering::Relaxed),
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+                arg0_key: slot.arg0_key.load(Ordering::Relaxed) as u32,
+                arg0_val: slot.arg0_val.load(Ordering::Relaxed),
+                arg1_key: slot.arg1_key.load(Ordering::Relaxed) as u32,
+                arg1_val: slot.arg1_val.load(Ordering::Relaxed),
+                note_idx: slot.note_idx.load(Ordering::Relaxed) as u32,
+            };
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) == s1 {
+                out.push(ev);
+            }
+        }
+        (out, recorded, start)
+    }
+}
+
+/// Default capacity of the process-global ring.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+static RING: OnceLock<SpanRing> = OnceLock::new();
+
+fn global_ring() -> &'static SpanRing {
+    RING.get_or_init(|| SpanRing::new(RING_CAP.load(Ordering::Relaxed)))
+}
+
+/// Set the global ring's capacity. Returns `false` (no effect) once the
+/// ring has been used — capacity must be chosen before the first span.
+pub fn set_ring_capacity(cap: usize) -> bool {
+    if RING.get().is_some() {
+        return false;
+    }
+    RING_CAP.store(cap.max(1), Ordering::Relaxed);
+    RING.get().is_none()
+}
+
+/// Record into the global ring (allocates only on the very first call,
+/// which constructs the ring — warmup, not steady state).
+pub(crate) fn record_global(ev: &SpanEvent) {
+    global_ring().record(ev);
+}
+
+/// `(events_recorded, events_dropped)` for the global ring.
+pub fn global_stats() -> (u64, u64) {
+    match RING.get() {
+        Some(r) => {
+            let next = r.next.load(Ordering::Relaxed);
+            (next, next.saturating_sub(r.cap))
+        }
+        None => (0, 0),
+    }
+}
+
+/// Snapshot the global ring's retained events, oldest-first.
+pub fn events() -> Vec<SpanEvent> {
+    match RING.get() {
+        Some(r) => r.snapshot().0,
+        None => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64) -> SpanEvent {
+        SpanEvent {
+            name_idx: 7,
+            tid: 1,
+            id,
+            parent: id.saturating_sub(1),
+            start_ns: id * 100,
+            dur_ns: 50,
+            arg0_key: NO_NAME,
+            arg0_val: 0,
+            arg1_key: NO_NAME,
+            arg1_val: 0,
+            note_idx: NO_NAME,
+        }
+    }
+
+    #[test]
+    fn wraparound_drops_oldest_first() {
+        let ring = SpanRing::new(4);
+        for id in 0..7 {
+            ring.record(&ev(id));
+        }
+        let (events, recorded, dropped) = ring.snapshot();
+        assert_eq!(recorded, 7);
+        assert_eq!(dropped, 3);
+        assert_eq!(events.len(), 4);
+        let ids: Vec<u64> = events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![3, 4, 5, 6], "oldest events evicted, order preserved");
+    }
+
+    #[test]
+    fn under_capacity_returns_everything_in_order() {
+        let ring = SpanRing::new(16);
+        for id in 0..5 {
+            ring.record(&ev(id));
+        }
+        let (events, recorded, dropped) = ring.snapshot();
+        assert_eq!((recorded, dropped), (5, 0));
+        assert_eq!(events.iter().map(|e| e.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(events[0].start_ns, 0);
+        assert_eq!(events[4].start_ns, 400);
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_events() {
+        use std::sync::Arc;
+        let ring = Arc::new(SpanRing::new(8));
+        let writers: Vec<_> = (0..4)
+            .map(|t| {
+                let r = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let id = t * 1000 + i;
+                        // fields correlated so tearing is detectable
+                        let e = SpanEvent { start_ns: id * 100, dur_ns: id, ..ev(id) };
+                        r.record(&e);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            for e in ring.snapshot().0 {
+                assert_eq!(e.start_ns, e.id * 100, "torn event: {e:?}");
+                assert_eq!(e.dur_ns, e.id);
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let (events, recorded, dropped) = ring.snapshot();
+        assert_eq!(recorded, 2000);
+        assert_eq!(dropped, 1992);
+        assert_eq!(events.len(), 8);
+    }
+
+    #[test]
+    fn capacity_is_clamped_to_at_least_one() {
+        let ring = SpanRing::new(0);
+        assert_eq!(ring.capacity(), 1);
+        ring.record(&ev(1));
+        ring.record(&ev(2));
+        let (events, recorded, dropped) = ring.snapshot();
+        assert_eq!((recorded, dropped), (2, 1));
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].id, 2);
+    }
+}

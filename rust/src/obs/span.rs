@@ -1,0 +1,298 @@
+//! Timed spans with thread-local nesting and explicit cross-thread
+//! parenting.
+//!
+//! [`span`] opens a guard that records on drop: total duration into the
+//! per-name [`Histogram`](super::Histogram) (together with *self time* —
+//! duration minus same-thread child spans) and one [`SpanEvent`] into the
+//! global ring. Nesting is a fixed-depth thread-local stack, so opening a
+//! span never allocates; work shipped to another thread keeps its logical
+//! parent by capturing [`current_span_id`] at submission and opening the
+//! job's span with [`span_with_parent`].
+//!
+//! When tracing is disabled ([`super::enabled`]), constructing and
+//! dropping a guard is a few branches: one relaxed flag load, no clock
+//! read, no interning, no thread-local traffic.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::ring::SpanEvent;
+use super::{enabled, hist, now_ns, ring, thread_id, NO_NAME};
+
+/// Maximum same-thread span nesting tracked for self-time accounting.
+/// Deeper spans still record, but attribute their time to no parent.
+pub const MAX_DEPTH: usize = 64;
+
+/// Process-unique span ids, starting at 1 (0 = "no parent").
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+#[derive(Clone, Copy)]
+struct Frame {
+    id: u64,
+    child_ns: u64,
+}
+
+struct StackState {
+    depth: usize,
+    frames: [Frame; MAX_DEPTH],
+}
+
+thread_local! {
+    static STACK: RefCell<StackState> = const {
+        RefCell::new(StackState { depth: 0, frames: [Frame { id: 0, child_ns: 0 }; MAX_DEPTH] })
+    };
+}
+
+/// The id of the innermost open span on this thread (0 if none). Capture
+/// it before handing work to another thread, then open the remote side
+/// with [`span_with_parent`].
+pub fn current_span_id() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    STACK.with(|s| {
+        let s = s.borrow();
+        if s.depth == 0 {
+            0
+        } else {
+            s.frames[s.depth - 1].id
+        }
+    })
+}
+
+/// Open a timed span nested under this thread's innermost open span.
+#[must_use = "a span records when the guard drops; binding it to _ ends it immediately"]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inert();
+    }
+    let parent = current_span_id();
+    SpanGuard::open(name, parent)
+}
+
+/// Open a timed span with an explicit parent id (use 0 for a root). This
+/// is the cross-thread variant: the span still joins this thread's nesting
+/// stack for self-time accounting, but its recorded parent is `parent`.
+#[must_use = "a span records when the guard drops; binding it to _ ends it immediately"]
+pub fn span_with_parent(name: &'static str, parent: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::inert();
+    }
+    SpanGuard::open(name, parent)
+}
+
+/// Record a duration measured externally (no guard, no ring event) into
+/// `name`'s histogram. Used for phases timed with raw [`now_ns`] reads on
+/// allocation-critical paths where even a ring write is unwanted.
+#[inline]
+pub fn record_duration(name: &'static str, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    hist::for_name(super::intern(name)).observe(dur_ns, dur_ns);
+}
+
+/// Live timed span; records on drop. Obtain via [`span`] /
+/// [`span_with_parent`].
+pub struct SpanGuard {
+    active: bool,
+    pushed: bool,
+    name_idx: u32,
+    note_idx: u32,
+    id: u64,
+    parent: u64,
+    start_ns: u64,
+    args: [(u32, u64); 2],
+    n_args: u8,
+}
+
+impl SpanGuard {
+    fn inert() -> Self {
+        Self {
+            active: false,
+            pushed: false,
+            name_idx: NO_NAME,
+            note_idx: NO_NAME,
+            id: 0,
+            parent: 0,
+            start_ns: 0,
+            args: [(NO_NAME, 0); 2],
+            n_args: 0,
+        }
+    }
+
+    fn open(name: &'static str, parent: u64) -> Self {
+        let name_idx = super::intern(name);
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        let pushed = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.depth < MAX_DEPTH {
+                let d = s.depth;
+                s.frames[d] = Frame { id, child_ns: 0 };
+                s.depth = d + 1;
+                true
+            } else {
+                false
+            }
+        });
+        Self {
+            active: true,
+            pushed,
+            name_idx,
+            note_idx: NO_NAME,
+            id,
+            parent,
+            start_ns: now_ns(),
+            args: [(NO_NAME, 0); 2],
+            n_args: 0,
+        }
+    }
+
+    /// This span's id (0 when tracing was disabled at open).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a `key=value` integer argument (up to two per span; extra
+    /// arguments are dropped). No-op on an inert guard.
+    pub fn arg(&mut self, key: &'static str, value: u64) {
+        if self.active && (self.n_args as usize) < self.args.len() {
+            self.args[self.n_args as usize] = (super::intern(key), value);
+            self.n_args += 1;
+        }
+    }
+
+    /// Attach a provenance note (e.g. `"hit"`, `"evaluated"`), replacing
+    /// any earlier one. No-op on an inert guard.
+    pub fn note(&mut self, note: &'static str) {
+        if self.active {
+            self.note_idx = super::intern(note);
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let dur_ns = now_ns().saturating_sub(self.start_ns);
+        let mut child_ns = 0;
+        if self.pushed {
+            // pop our frame; credit our duration to the new top's children
+            let _ = STACK.try_with(|s| {
+                let mut s = s.borrow_mut();
+                if s.depth > 0 {
+                    let d = s.depth - 1;
+                    child_ns = s.frames[d].child_ns;
+                    s.depth = d;
+                    if d > 0 {
+                        s.frames[d - 1].child_ns += dur_ns;
+                    }
+                }
+            });
+        }
+        hist::for_name(self.name_idx).observe(dur_ns, dur_ns.saturating_sub(child_ns));
+        ring::record_global(&SpanEvent {
+            name_idx: self.name_idx,
+            tid: thread_id(),
+            id: self.id,
+            parent: self.parent,
+            start_ns: self.start_ns,
+            dur_ns,
+            arg0_key: self.args[0].0,
+            arg0_val: self.args[0].1,
+            arg1_key: self.args[1].0,
+            arg1_val: self.args[1].1,
+            note_idx: self.note_idx,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _lock = super::super::test_lock();
+        super::super::set_enabled(false);
+        let mut g = span("obs.test.inert");
+        assert_eq!(g.id(), 0);
+        g.arg("k", 1);
+        g.note("n");
+        assert_eq!(current_span_id(), 0);
+        drop(g);
+        assert!(
+            !hist::summaries().iter().any(|(n, _)| *n == "obs.test.inert"),
+            "inert span must not register a histogram"
+        );
+    }
+
+    #[test]
+    fn nesting_attributes_self_time_and_parents() {
+        let _lock = super::super::test_lock();
+        super::super::set_enabled(true);
+        let events_before = ring::global_stats().0;
+        let (outer_id, inner_id);
+        {
+            let outer = span("obs.test.outer");
+            outer_id = outer.id();
+            assert_eq!(current_span_id(), outer_id);
+            {
+                let mut inner = span("obs.test.inner");
+                inner_id = inner.id();
+                inner.arg("k", 42);
+                inner.note("evaluated");
+                assert_eq!(current_span_id(), inner_id);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            assert_eq!(current_span_id(), outer_id);
+        }
+        assert!(outer_id > 0 && inner_id > outer_id);
+        assert!(ring::global_stats().0 >= events_before + 2);
+
+        let events = ring::events();
+        let inner_ev = events.iter().find(|e| e.id == inner_id).expect("inner recorded");
+        let outer_ev = events.iter().find(|e| e.id == outer_id).expect("outer recorded");
+        assert_eq!(inner_ev.parent, outer_id);
+        assert_eq!(inner_ev.name(), "obs.test.inner");
+        assert_eq!(inner_ev.note(), Some("evaluated"));
+        assert_eq!(super::super::resolve_name(inner_ev.arg0_key), "k");
+        assert_eq!(inner_ev.arg0_val, 42);
+        assert_eq!(outer_ev.note(), None);
+        assert!(outer_ev.dur_ns >= inner_ev.dur_ns);
+        assert!(inner_ev.start_ns >= outer_ev.start_ns);
+
+        // outer's self time excludes inner's duration
+        let summaries = hist::summaries();
+        let outer_sum = summaries.iter().find(|(n, _)| *n == "obs.test.outer").unwrap().1;
+        assert!(outer_sum.self_ns <= outer_sum.total_ns);
+        assert!(
+            outer_sum.total_ns - outer_sum.self_ns >= 1_000_000,
+            "inner's ~2ms must be attributed to outer's children"
+        );
+        super::super::set_enabled(false);
+    }
+
+    #[test]
+    fn explicit_parent_crosses_threads() {
+        let _lock = super::super::test_lock();
+        super::super::set_enabled(true);
+        let root = span("obs.test.xthread_root");
+        let root_id = root.id();
+        let child_id = std::thread::spawn(move || {
+            let g = span_with_parent("obs.test.xthread_child", root_id);
+            g.id()
+        })
+        .join()
+        .unwrap();
+        drop(root);
+        let events = ring::events();
+        let child = events.iter().find(|e| e.id == child_id).expect("child recorded");
+        assert_eq!(child.parent, root_id);
+        let root_ev = events.iter().find(|e| e.id == root_id).expect("root recorded");
+        assert_ne!(child.tid, root_ev.tid);
+        super::super::set_enabled(false);
+    }
+}

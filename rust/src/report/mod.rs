@@ -102,6 +102,38 @@ impl Csv {
     }
 }
 
+/// Render an [`crate::obs::ObsSnapshot`]'s span summaries as a profile
+/// table: top span names by total time, with count / total / self / p50 /
+/// p95 / max columns. Printed by `estimate --profile` and the perf bench.
+pub fn profile(snap: &crate::obs::ObsSnapshot) -> Table {
+    let dur = |ns: u64| crate::bench_harness::fmt_dur(std::time::Duration::from_nanos(ns));
+    let mut spans = snap.spans.clone();
+    spans.sort_by(|a, b| {
+        b.summary.total_ns.cmp(&a.summary.total_ns).then(a.name.cmp(b.name))
+    });
+    let mut t = Table::new(
+        format!(
+            "profile: {} spans, {} events ({} dropped)",
+            spans.len(),
+            snap.events_recorded,
+            snap.events_dropped
+        ),
+        &["span", "count", "total", "self", "p50", "p95", "max"],
+    );
+    for s in &spans {
+        t.row(&[
+            s.name.to_string(),
+            s.summary.count.to_string(),
+            dur(s.summary.total_ns),
+            dur(s.summary.self_ns),
+            dur(s.summary.p50_ns),
+            dur(s.summary.p95_ns),
+            dur(s.summary.max_ns),
+        ]);
+    }
+    t
+}
+
 /// `target/reports/`, created on demand.
 pub fn reports_dir() -> PathBuf {
     let p = Path::new("target").join("reports");
@@ -171,6 +203,38 @@ mod tests {
         assert_eq!(fmt_pct(7.5), "7.50%");
         assert_eq!(fmt_bytes(146 * 1024 * 1024), "146.00 MiB");
         assert_eq!(fmt_bytes(512), "512 B");
+    }
+
+    #[test]
+    fn profile_table_sorts_by_total_time() {
+        use crate::obs::{HistSummary, ObsSnapshot, SpanSummary};
+        let mk = |name, total_ns| SpanSummary {
+            name,
+            summary: HistSummary {
+                count: 2,
+                total_ns,
+                self_ns: total_ns / 2,
+                max_ns: total_ns,
+                p50_ns: total_ns / 2,
+                p95_ns: total_ns,
+            },
+        };
+        let snap = ObsSnapshot {
+            enabled: true,
+            events_recorded: 4,
+            events_dropped: 0,
+            counters: vec![],
+            gauges: vec![],
+            spans: vec![mk("small.span", 1_000), mk("big.span", 2_000_000)],
+        };
+        let t = profile(&snap);
+        assert_eq!(t.headers[0], "span");
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "big.span", "largest total first");
+        assert_eq!(t.rows[1][0], "small.span");
+        assert_eq!(t.rows[0][1], "2");
+        let md = t.to_markdown();
+        assert!(md.contains("4 events"));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! shared fixtures.
 
 pub mod arch_gen;
+pub mod json;
 pub mod net_gen;
 pub mod prop;
 

@@ -8,7 +8,7 @@ use std::path::Path;
 
 /// The documentation set this repo ships. Presence is itself asserted, so
 /// deleting a book chapter without updating this list fails the build.
-const DOC_FILES: [&str; 10] = [
+const DOC_FILES: [&str; 11] = [
     "README.md",
     "arch/README.md",
     "net/README.md",
@@ -18,6 +18,7 @@ const DOC_FILES: [&str; 10] = [
     "docs/serve-protocol.md",
     "docs/performance.md",
     "docs/dse.md",
+    "docs/observability.md",
     "ROADMAP.md",
     // CHANGES.md is a log, not documentation: not checked
 ];
@@ -100,6 +101,7 @@ fn docs_book_is_linked_from_the_readme() {
         "docs/serve-protocol.md",
         "docs/performance.md",
         "docs/dse.md",
+        "docs/observability.md",
     ] {
         assert!(readme.contains(chapter), "README.md must link {chapter}");
     }

@@ -8,6 +8,15 @@
 //! installs a counting global allocator, warms an evaluator past lowering
 //! and capacity growth, then evaluates thousands more iterations and
 //! asserts the allocation counter did not move.
+//!
+//! The audit runs **twice in one test**: once with the `obs` tracing layer
+//! disabled and once enabled (span open/drop, histogram observe, ring
+//! record). Tracing warmup — name interning, histogram registration, the
+//! global ring's one-time construction — happens inside the warmup window,
+//! so the enabled steady state must also be allocation-free. Both phases
+//! share one test function deliberately: the allocation counter is
+//! process-global, and a second parallel test (or even the harness
+//! spawning its thread) would pollute the measurement window.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -96,9 +105,11 @@ fn steady_state_iterations_do_not_allocate() {
     // warmup: lowering, arena/ring/plane capacity growth
     ev.run(&kernel, 0..256).unwrap();
     // pre-reserve the per-iteration stats so their amortized growth can't
-    // masquerade as a hot-path allocation
-    ev.iter_stats.reserve(8192);
+    // masquerade as a hot-path allocation (two measured phases below)
+    ev.iter_stats.reserve(16384);
 
+    // ---- phase 1: tracing disabled (the default) ----
+    acadl_perf::obs::set_enabled(false);
     let before = ALLOCS.load(Ordering::SeqCst);
     ev.run(&kernel, 256..4096).unwrap();
     let after = ALLOCS.load(Ordering::SeqCst);
@@ -112,4 +123,34 @@ fn steady_state_iterations_do_not_allocate() {
     );
     // sanity: the run actually did work
     assert!(ev.dt_aidg() > 4096);
+
+    // ---- phase 2: tracing enabled ----
+    acadl_perf::obs::set_enabled(true);
+    {
+        // tracing warmup: interns every name used below, registers their
+        // histograms, and constructs the global span ring on first drop
+        let mut sp = acadl_perf::obs::span("eval_alloc.traced");
+        sp.arg("iters", 256);
+        sp.note("measure");
+        acadl_perf::obs::record_duration("eval_alloc.raw", 1);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    {
+        let mut sp = acadl_perf::obs::span("eval_alloc.traced");
+        sp.arg("iters", 4096);
+        sp.note("measure");
+        ev.run(&kernel, 4096..8192).unwrap();
+        acadl_perf::obs::record_duration("eval_alloc.raw", 1);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    acadl_perf::obs::set_enabled(false);
+
+    assert_eq!(ev.iter_stats.len(), 8192);
+    assert_eq!(
+        after - before,
+        0,
+        "traced steady-state evaluation must not allocate \
+         ({} allocations in 4096 iterations with tracing on)",
+        after - before
+    );
 }

@@ -1,0 +1,249 @@
+//! Integration coverage for the `obs` tracing layer against the real
+//! estimation stack: span nesting across pool threads, gauge lifecycles,
+//! Chrome-trace schema (checked with the testkit JSON parser), ring
+//! wraparound, and — the load-bearing guarantee — **cycle-identity**:
+//! estimates with tracing enabled are bit-identical to estimates with
+//! tracing disabled on every paper architecture.
+
+use std::sync::Mutex;
+
+use acadl_perf::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailConfig};
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{Arch, Pool};
+use acadl_perf::dnn::zoo;
+use acadl_perf::engine::EstimationEngine;
+use acadl_perf::obs;
+use acadl_perf::testkit::json::Json;
+
+/// Serializes tests that toggle the process-global tracing flag (the test
+/// harness runs this binary's tests in parallel).
+static FLAG_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn paper_archs() -> Vec<Arch> {
+    vec![
+        Arch::Systolic(SystolicConfig::new(2, 2)),
+        Arch::UltraTrail(UltraTrailConfig::default()),
+        Arch::Gemmini(GemminiConfig::default()),
+        Arch::Plasticine(PlasticineConfig::new(2, 3, 8)),
+    ]
+}
+
+/// A pooled estimate produces a span tree that crosses threads: the
+/// request span parents every `pool.job`, each job parents the
+/// `engine.kernel` it ran, and the pool gauges return to zero when the
+/// work drains.
+#[test]
+fn pooled_estimate_nests_spans_across_threads() {
+    let _l = lock();
+    obs::set_enabled(true);
+    let t0 = obs::now_ns();
+    let net = zoo::tc_resnet8();
+    {
+        let engine = EstimationEngine::new(1 << 10);
+        let pool = Pool::new(2);
+        let e = engine
+            .estimate_network_pooled(
+                &Arch::Gemmini(GemminiConfig::default()),
+                &net,
+                &FixedPointConfig::default(),
+                &pool,
+            )
+            .unwrap();
+        assert!(e.total_cycles() > 0);
+        assert!(e.stats.evaluated > 0, "fresh engine must evaluate: {:?}", e.stats);
+        // `pool` drops here and joins its workers, so every job's span and
+        // gauge update is complete before the assertions below
+    }
+    obs::set_enabled(false);
+
+    let events: Vec<obs::SpanEvent> =
+        obs::ring::events().into_iter().filter(|e| e.start_ns >= t0).collect();
+    let request = events
+        .iter()
+        .find(|e| e.name() == "engine.estimate_network_pooled")
+        .expect("request span recorded");
+    let jobs: Vec<&obs::SpanEvent> =
+        events.iter().filter(|e| e.name() == "pool.job").collect();
+    assert!(!jobs.is_empty(), "pooled evaluation must run pool jobs");
+    for j in &jobs {
+        assert_eq!(j.parent, request.id, "pool.job must parent to the request span");
+        assert_ne!(j.tid, request.tid, "pool.job runs on a worker thread");
+        assert_eq!(obs::resolve_name(j.arg0_key), "queued_ns");
+    }
+    let job_ids: Vec<u64> = jobs.iter().map(|j| j.id).collect();
+    let kernels: Vec<&obs::SpanEvent> = events
+        .iter()
+        .filter(|e| e.name() == "engine.kernel" && job_ids.contains(&e.parent))
+        .collect();
+    assert!(!kernels.is_empty(), "worker kernel spans must nest under pool.job");
+    for k in &kernels {
+        assert_eq!(k.note(), Some("evaluated"));
+        assert_eq!(obs::resolve_name(k.arg0_key), "kernel_hi");
+    }
+    // plan spans nest under the request on the calling thread
+    assert!(events
+        .iter()
+        .any(|e| e.name() == "engine.kernel.plan" && e.parent == request.id));
+
+    // pool drained and dropped: both pool gauges are back to zero
+    let snap = obs::snapshot();
+    let gauge = |name: &str| {
+        snap.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+    };
+    assert_eq!(gauge("pool.queue_depth"), 0);
+    assert_eq!(gauge("pool.inflight"), 0);
+}
+
+/// Tracing must never perturb results: estimates with the tracing layer
+/// enabled are cycle-identical to estimates with it disabled, on all four
+/// paper architectures.
+#[test]
+fn tracing_on_is_cycle_identical_to_tracing_off() {
+    let _l = lock();
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+    for arch in paper_archs() {
+        obs::set_enabled(false);
+        let off = EstimationEngine::new(1 << 10).estimate_network(&arch, &net, &fp).unwrap();
+        obs::set_enabled(true);
+        let on = EstimationEngine::new(1 << 10).estimate_network(&arch, &net, &fp).unwrap();
+        obs::set_enabled(false);
+        assert_eq!(off.layer_cycles(), on.layer_cycles(), "{}: per-layer cycles", off.arch);
+        assert_eq!(off.total_cycles(), on.total_cycles(), "{}: total cycles", off.arch);
+        assert_eq!(off.total_iters(), on.total_iters(), "{}: iteration totals", off.arch);
+        assert_eq!(off.total_insts(), on.total_insts(), "{}: instruction totals", off.arch);
+    }
+}
+
+/// The Chrome trace export is valid JSON with the trace-event schema keys
+/// Perfetto requires, and it round-trips through the testkit parser.
+#[test]
+fn chrome_trace_export_round_trips_the_schema() {
+    let _l = lock();
+    obs::set_enabled(true);
+    {
+        let engine = EstimationEngine::new(1 << 10);
+        let mut net = zoo::tc_resnet8();
+        net.layers.truncate(3);
+        engine
+            .estimate_network(
+                &Arch::UltraTrail(UltraTrailConfig::default()),
+                &net,
+                &FixedPointConfig::default(),
+            )
+            .unwrap();
+    }
+    obs::set_enabled(false);
+
+    let doc = Json::parse(&obs::chrome_trace_string()).expect("export must be valid JSON");
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ns"),
+        "displayTimeUnit present"
+    );
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "an estimate must leave events in the ring");
+    for ev in events {
+        assert!(ev.get("name").and_then(Json::as_str).is_some(), "name: {ev:?}");
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"), "ph: {ev:?}");
+        assert!(ev.get("ts").and_then(Json::as_f64).is_some(), "ts: {ev:?}");
+        assert!(ev.get("dur").and_then(Json::as_f64).is_some(), "dur: {ev:?}");
+        assert_eq!(ev.get("pid").and_then(Json::as_f64), Some(1.0), "pid: {ev:?}");
+        assert!(ev.get("tid").and_then(Json::as_f64).is_some(), "tid: {ev:?}");
+        let args = ev.get("args").expect("args object");
+        assert!(args.get("span_id").and_then(Json::as_f64).is_some(), "span_id: {ev:?}");
+        assert!(args.get("parent").and_then(Json::as_f64).is_some(), "parent: {ev:?}");
+    }
+    // the taxonomy's request span made it into the export by name
+    assert!(events.iter().any(|e| {
+        e.get("name").and_then(Json::as_str) == Some("engine.estimate_network")
+    }));
+}
+
+/// Ring wraparound at integration scale: a small private ring keeps the
+/// newest events, oldest-first, and reports the drop count.
+#[test]
+fn private_ring_wraparound_keeps_newest_oldest_first() {
+    let ring = obs::SpanRing::new(8);
+    let name = obs::intern("obs_trace.wrap");
+    for id in 1..=20u64 {
+        ring.record(&acadl_perf::obs::SpanEvent {
+            name_idx: name,
+            tid: 1,
+            id,
+            parent: 0,
+            start_ns: id * 10,
+            dur_ns: 5,
+            arg0_key: obs::NO_NAME,
+            arg0_val: 0,
+            arg1_key: obs::NO_NAME,
+            arg1_val: 0,
+            note_idx: obs::NO_NAME,
+        });
+    }
+    let (events, recorded, dropped) = ring.snapshot();
+    assert_eq!((recorded, dropped), (20, 12));
+    assert_eq!(events.iter().map(|e| e.id).collect::<Vec<_>>(), (13..=20).collect::<Vec<_>>());
+}
+
+/// Histogram bucket edges hold at the public API: 0, 1, powers of two,
+/// and `u64::MAX` all land in buckets whose bounds contain them, and
+/// quantiles never over-report past the recorded max.
+#[test]
+fn histogram_boundaries_hold_at_the_public_api() {
+    use acadl_perf::obs::hist::{bucket_index, bucket_upper_bound};
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(1), 1);
+    assert_eq!(bucket_index(u64::MAX), 64);
+    for ns in [0u64, 1, 2, 3, 4, 1023, 1024, 1 << 40, u64::MAX - 1, u64::MAX] {
+        let i = bucket_index(ns);
+        assert!(ns <= bucket_upper_bound(i), "{ns} above its bucket bound");
+        if i > 0 {
+            assert!(ns > bucket_upper_bound(i - 1), "{ns} fits an earlier bucket");
+        }
+    }
+    let h = obs::Histogram::new();
+    h.observe(0, 0);
+    h.observe(1, 1);
+    h.observe(u64::MAX, u64::MAX);
+    let s = h.summary();
+    assert_eq!(s.count, 3);
+    assert_eq!(s.max_ns, u64::MAX);
+    assert_eq!(s.p50_ns, 1, "median clamps to real observations");
+}
+
+/// The global engine publishes per-shard cache occupancy gauges, and the
+/// aggregate matches the cache's own length.
+#[test]
+fn global_cache_occupancy_is_gauged_per_shard() {
+    let _l = lock();
+    let engine = EstimationEngine::global();
+    engine.clear_cache();
+    let net = zoo::tc_resnet8();
+    engine
+        .estimate_network(
+            &Arch::Systolic(SystolicConfig::new(2, 2)),
+            &net,
+            &FixedPointConfig::default(),
+        )
+        .unwrap();
+    assert!(engine.cache_len() > 0);
+    let snap = obs::snapshot();
+    let total: i64 = snap
+        .gauges
+        .iter()
+        .filter(|(n, _)| n.starts_with("cache.shard"))
+        .map(|(_, v)| *v)
+        .sum();
+    assert_eq!(total, engine.cache_len() as i64, "shard gauges sum to cache length");
+    let agg = snap.gauges.iter().find(|(n, _)| n == "cache.entries").unwrap().1;
+    assert_eq!(agg, total, "aggregate gauge matches shard sum");
+    engine.clear_cache();
+    let snap = obs::snapshot();
+    let agg = snap.gauges.iter().find(|(n, _)| n == "cache.entries").unwrap().1;
+    assert_eq!(agg, 0, "clear resets the gauges");
+}
