@@ -4,8 +4,10 @@
 //! nodes/sec, iterations/sec, and peak frontier bytes per arch × net),
 //! `BENCH_engine.json` (cold/warm wall-times, hit rates) and
 //! `BENCH_dse.json` (points/sec, pre-filter survival, cross-candidate warm
-//! hit rate) so future PRs have a perf trajectory. `--smoke` runs the
-//! evaluator phase only (CI's artifact-shape check).
+//! hit rate, and the lane-batched sweep's `batch_nodes_per_sec` /
+//! `avg_lanes` / `divergence_rate`) so future PRs have a perf trajectory.
+//! `--smoke` runs the evaluator and DSE phases only (CI's artifact-shape
+//! check covers both emitted files).
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -24,6 +26,7 @@ use acadl_perf::engine::{EstimationEngine, DEFAULT_CACHE_CAP};
 use acadl_perf::mapping::{
     gemm_tile::GemmTileMapper, scalar::ScalarMapper, tensor_op::TensorOpMapper, Mapper,
 };
+use acadl_perf::metrics::counters;
 
 /// The `bench_eval` phase: evaluator-level throughput per arch × net
 /// through the iteration-program hot path, emitted as `BENCH_eval.json`
@@ -149,8 +152,11 @@ fn bench_eval(iter_cap: u64, nets: &[&str]) {
 
 fn main() {
     if smoke() {
-        // CI's fast pass: emit + shape-check the evaluator artifact only
+        // CI's fast pass: emit + shape-check the evaluator and DSE
+        // artifacts (the DSE phase is the only producer of the lane-batched
+        // throughput record, so smoke must run it too)
         bench_eval(500, &["tc_resnet8"]);
+        bench_dse();
         return;
     }
     bench_eval(20_000, &["tc_resnet8", "efficientnet_reduced"]);
@@ -260,7 +266,17 @@ fn main() {
     acadl_perf::obs::set_enabled(false);
     print!("{}", acadl_perf::report::profile(&acadl_perf::obs::snapshot()).to_markdown());
 
+    bench_dse();
+}
+
+/// The DSE phase: `[sweep]` throughput with the pre-filter, cross-candidate
+/// kernel reuse under locality scheduling, and the lane-batched evaluator's
+/// throughput over the shipped Fig.-15 space — emitted as `BENCH_dse.json`.
+/// Runs in both smoke and full mode so CI's artifact-shape check always
+/// sees the batch record.
+fn bench_dse() {
     section("perf — DSE: [sweep] throughput, pre-filter survival, kernel reuse");
+    let net = zoo::tc_resnet8();
     let pool = Pool::new(0);
     let backend = RooflineBackend::auto();
     let src = std::fs::read_to_string("arch/systolic_16x16.toml")
@@ -315,7 +331,9 @@ fn main() {
         explore_space(
             &dup_space,
             &net,
-            &SweepOptions::default(),
+            // serial dispatch: this record measures cross-candidate *cache*
+            // reuse; the batched path below carries its own record
+            &SweepOptions { batch: false, ..Default::default() },
             &pool,
             &backend,
             &dup_engine,
@@ -329,16 +347,74 @@ fn main() {
         dup_outcome.stats
     );
 
-    // two sweeps, two labeled records: the shipped-file sweep carries the
-    // throughput/survival numbers, the synthetic duplicate-structure sweep
-    // carries the cross-candidate reuse numbers — mixing them under one
-    // arch label would make the perf trajectory lie about its workload
+    section("perf — DSE: lane-batched evaluation (shipped plasticine sweep)");
+    // `tile` parameterizes the mapper binding, not the datapath, so the
+    // shipped 18-point rows × cols × tile space digests into 9 two-member
+    // groups whose members carry *different* kernels — exactly the shape
+    // the lane-batched evaluator amortizes. Counter deltas around the
+    // sweep turn into the throughput record; avg_lanes > 1 is the proof
+    // that lockstep sharing actually engaged.
+    let psrc = std::fs::read_to_string("arch/plasticine_3x6.toml")
+        .expect("reading arch/plasticine_3x6.toml");
+    let pspace = SweepSpace::from_source(&psrc, "arch/plasticine_3x6.toml", None)
+        .expect("compiling the shipped plasticine sweep");
+    let batch_engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    let groups0 = counters::AIDG_BATCH_GROUPS.get();
+    let lanes0 = counters::AIDG_BATCH_LANES.get();
+    let evict0 = counters::AIDG_BATCH_EVICTIONS.get();
+    let nodes0 = counters::AIDG_NODES.get();
+    let (batch_outcome, batch_dt) =
+        time_once("dse/plasticine [sweep] x tc_resnet8 (lane-batched, keep 1.0)", || {
+            explore_space(
+                &pspace,
+                &net,
+                &SweepOptions { keep_frac: 1.0, ..Default::default() },
+                &pool,
+                &backend,
+                &batch_engine,
+            )
+            .unwrap()
+        });
+    let groups = counters::AIDG_BATCH_GROUPS.get() - groups0;
+    let lanes = counters::AIDG_BATCH_LANES.get() - lanes0;
+    let evictions = counters::AIDG_BATCH_EVICTIONS.get() - evict0;
+    let batch_nodes = counters::AIDG_NODES.get() - nodes0;
+    let batch_secs = batch_dt.as_secs_f64().max(1e-9);
+    let avg_lanes = lanes as f64 / groups.max(1) as f64;
+    let divergence_rate = evictions as f64 / lanes.max(1) as f64;
+    let batch_nodes_per_sec = batch_nodes as f64 / batch_secs;
+    let batch_points_per_sec = batch_outcome.enumerated as f64 / batch_secs;
+    assert!(groups > 0, "the shipped plasticine sweep must drive the batched evaluator");
+    assert!(
+        avg_lanes > 1.0,
+        "lockstep sharing must engage on the shipped space \
+         ({lanes} lanes over {groups} groups)"
+    );
+    println!(
+        "  batch/plasticine_3x6 x tc_resnet8: {:.1} points/s, {:.2} M nodes/s, \
+         {avg_lanes:.2} avg lanes, {:.1}% divergence",
+        batch_points_per_sec,
+        batch_nodes_per_sec / 1e6,
+        divergence_rate * 100.0
+    );
+
+    // three sweeps, three labeled records: the shipped-file sweep carries
+    // the throughput/survival numbers, the synthetic duplicate-structure
+    // sweep carries the cross-candidate reuse numbers, and the batched
+    // plasticine sweep carries the lockstep-sharing numbers — mixing them
+    // under one arch label would make the perf trajectory lie about its
+    // workload
     let dse_json = format!(
         "{{\n  \"bench\": \"dse_sweep\",\n  \"arch\": \"arch/systolic_16x16.toml\",\n  \
          \"network\": \"tc_resnet8\",\n  \"points\": {},\n  \"wall_ms\": {:.3},\n  \
          \"points_per_sec\": {:.2},\n  \"prefilter_survival\": {:.4},\n  \
          \"dup_sweep\": {{\n    \"arch\": \"systolic-dup (rev x cols, locality)\",\n    \
-         \"points\": {},\n    \"warm_hit_rate\": {:.4},\n    \"reuse_rate\": {:.4}\n  }}\n}}\n",
+         \"points\": {},\n    \"warm_hit_rate\": {:.4},\n    \"reuse_rate\": {:.4}\n  }},\n  \
+         \"batch_sweep\": {{\n    \"bench\": \"dse_batch\",\n    \
+         \"arch\": \"arch/plasticine_3x6.toml\",\n    \"points\": {},\n    \
+         \"wall_ms\": {:.3},\n    \"points_per_sec\": {:.2},\n    \
+         \"batch_nodes_per_sec\": {:.1},\n    \"groups\": {},\n    \"lanes\": {},\n    \
+         \"avg_lanes\": {:.4},\n    \"divergence_rate\": {:.4}\n  }}\n}}\n",
         outcome.enumerated,
         dse_dt.as_secs_f64() * 1e3,
         points_per_sec,
@@ -346,11 +422,19 @@ fn main() {
         dup_outcome.enumerated,
         warm_hit_rate,
         dup_outcome.reuse_rate(),
+        batch_outcome.enumerated,
+        batch_secs * 1e3,
+        batch_points_per_sec,
+        batch_nodes_per_sec,
+        groups,
+        lanes,
+        avg_lanes,
+        divergence_rate,
     );
     std::fs::write("BENCH_dse.json", &dse_json).expect("writing BENCH_dse.json");
     println!(
         "  => {points_per_sec:.1} points/s | pre-filter kept {:.0}% | cross-candidate warm \
-         hit rate {:.1}% — wrote BENCH_dse.json",
+         hit rate {:.1}% | batch avg lanes {avg_lanes:.2} — wrote BENCH_dse.json",
         survival * 100.0,
         warm_hit_rate * 100.0
     );

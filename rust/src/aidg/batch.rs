@@ -1,0 +1,720 @@
+//! Lane-batched SoA evaluation: one iteration-program walk, N candidates.
+//!
+//! DSE sweeps spend their time re-interpreting the *same* iteration
+//! program: the locality scheduler already groups candidates by
+//! [`Diagram::content_digest`], and digest-equal diagrams have identical
+//! object tables in identical ID order — so their kernels resolve to the
+//! same routes and lower to the same [`IterProgram`]. This module exploits
+//! that: the program (and its route templates) is lowered **once per digest
+//! group**, and each instruction step advances N *lanes* in
+//! structure-of-arrays layout. What stays per-lane is exactly what §6.3
+//! says may vary between iterations of one kernel — and therefore between
+//! digest-equal candidates: addresses, immediates, and the dynamic
+//! latencies ([`Lat::Dyn`]) re-evaluated against each lane's own `Diagram`.
+//!
+//! Laned frontier state:
+//! - [`SlotRing`]s become a flat `[object × lane]` matrix (`obj * n + lane`),
+//! - the paged address plane becomes a [`LanePlane`]: shared page index and
+//!   one-entry cache in front of word-major per-lane columns,
+//! - `BufferFill`s, register scoreboards, clocks and per-iteration stats
+//!   stay per-lane (they are small and trivially independent).
+//!
+//! Divergence handling: a lane whose digest or `insts_per_iter` differs
+//! from the group's reference, whose route template mismatches at an
+//! offset's first verification, or whose addresses stop obeying the lowered
+//! address→memory partition is **evicted** — its partial batch state is
+//! abandoned and the lane is re-estimated from scratch on the serial path,
+//! which is bit-identical by construction. Surviving lanes are provably
+//! serial-identical: route equality pins the node sequence, and the
+//! per-iteration partition check pins every memory node's operand
+//! positions to what the lane's own lowering would have produced.
+
+use std::ops::Range;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::acadl::{Diagram, Route};
+use crate::ids::{Cycle, ObjId};
+use crate::isa::{EmitBuf, InstrView, LoopKernel};
+use crate::metrics::counters;
+use crate::Result;
+
+use super::eval::IterStat;
+use super::fixed_point::{
+    estimate_layer, k_block, overlap, FixedPointConfig, LayerEstimate, Provenance,
+};
+use super::program::{IterProgram, Lat, NodeKind, NO_LOCK};
+use super::state::{BufferFill, LanePlane, SlotRing};
+
+/// Maximum lanes per batch chunk (re-exported from the laned plane:
+/// per-page residency is a single `u64` bitmask). Larger digest groups are
+/// evaluated in chunks of this size.
+pub use super::state::MAX_LANES;
+
+/// Where a lane stands in the batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneStatus {
+    /// Advancing in lockstep.
+    Active,
+    /// Finished cleanly (its fixed-point plan retired it).
+    Retired,
+    /// Diverged from the group template; must be re-estimated serially.
+    Evicted,
+}
+
+/// Per-lane carried state: everything the serial evaluator keeps in
+/// `EvalState` that is *not* hoisted into a shared laned structure.
+struct Lane<'d> {
+    d: &'d Diagram,
+    kernel: &'d LoopKernel,
+    status: LaneStatus,
+    iter_stats: Vec<IterStat>,
+    reg_last: Vec<Cycle>,
+    b_enter: BufferFill,
+    b_forward: BufferFill,
+    group_slots: Vec<Cycle>,
+    instr_index: u64,
+    next_fetch_start: Cycle,
+    last_ifs_enter: Cycle,
+    horizon: Cycle,
+    cur_min_enter: Cycle,
+    cur_max_leave: Cycle,
+    nodes: u64,
+    peak_bytes: usize,
+    /// Offsets whose route this lane has checked against the template
+    /// (monotone — offsets arrive in order within an iteration).
+    routes_checked: usize,
+}
+
+/// Fetch-path constants (digest-invariant, copied from the reference lane).
+#[derive(Clone, Copy)]
+struct FetchConsts {
+    ifs_lock: u32,
+    p: u64,
+    imem_read_lat: Cycle,
+    ifs_lat: Cycle,
+    issue_buf: u32,
+}
+
+/// N-lane lockstep evaluator over one shared iteration program.
+///
+/// Lane 0's diagram is the group *reference*: lanes whose
+/// [`Diagram::content_digest`] or `insts_per_iter` differ are evicted at
+/// construction. The program is lowered from the first live lane to reach
+/// each offset; every other lane verifies its own route against the
+/// template the first time it steps that offset and is evicted on
+/// mismatch.
+pub struct BatchEvaluator<'d> {
+    lanes: Vec<Lane<'d>>,
+    emits: Vec<EmitBuf>,
+    program: IterProgram,
+    routes: Vec<Arc<Route>>,
+    /// SlotRing matrix, `[owner_obj * n_lanes + lane]`.
+    rings: Vec<SlotRing>,
+    plane: LanePlane,
+    fetch: FetchConsts,
+    next_iter: u64,
+    evictions: u64,
+    pub(crate) obs_run_ns: u64,
+    pub(crate) obs_compile_ns: u64,
+}
+
+impl<'d> BatchEvaluator<'d> {
+    /// A fresh batch over `members` (at most [`MAX_LANES`]); lane 0 is the
+    /// structural reference.
+    pub fn new(members: &[(&'d Diagram, &'d LoopKernel)]) -> Self {
+        assert!(
+            !members.is_empty() && members.len() <= MAX_LANES,
+            "batch must hold 1..={MAX_LANES} lanes (got {})",
+            members.len()
+        );
+        let n = members.len();
+        let (d0, k0) = members[0];
+        let f = d0.fetch_config();
+        let digest0 = d0.content_digest();
+        let mut evictions = 0u64;
+        let lanes: Vec<Lane<'d>> = members
+            .iter()
+            .map(|&(d, kernel)| {
+                let diverged =
+                    d.content_digest() != digest0 || kernel.insts_per_iter != k0.insts_per_iter;
+                if diverged {
+                    evictions += 1;
+                }
+                Lane {
+                    d,
+                    kernel,
+                    status: if diverged { LaneStatus::Evicted } else { LaneStatus::Active },
+                    iter_stats: Vec::new(),
+                    reg_last: vec![0; d.num_regs()],
+                    b_enter: BufferFill::default(),
+                    b_forward: BufferFill::default(),
+                    group_slots: Vec::new(),
+                    instr_index: 0,
+                    next_fetch_start: 0,
+                    last_ifs_enter: 0,
+                    horizon: 0,
+                    cur_min_enter: Cycle::MAX,
+                    cur_max_leave: 0,
+                    nodes: 0,
+                    peak_bytes: 0,
+                    routes_checked: 0,
+                }
+            })
+            .collect();
+        let num_objects = d0.num_objects();
+        let mut rings = Vec::with_capacity(num_objects * n);
+        for obj in 0..num_objects {
+            let cap = d0.lock(ObjId(obj as u32)).capacity;
+            for _ in 0..n {
+                rings.push(SlotRing::new(cap));
+            }
+        }
+        Self {
+            lanes,
+            emits: (0..n).map(|_| EmitBuf::new()).collect(),
+            program: IterProgram::default(),
+            routes: Vec::new(),
+            rings,
+            plane: LanePlane::new(n),
+            fetch: FetchConsts {
+                ifs_lock: d0.lock(f.fetch_stage).owner.idx() as u32,
+                p: f.port_width as u64,
+                imem_read_lat: f.read_latency,
+                ifs_lat: f.ifs_latency,
+                issue_buf: f.issue_buffer_size,
+            },
+            next_iter: 0,
+            evictions,
+            obs_run_ns: 0,
+            obs_compile_ns: 0,
+        }
+    }
+
+    /// Number of lanes in the batch (including evicted ones).
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lanes still advancing.
+    pub fn live_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.status == LaneStatus::Active).count()
+    }
+
+    /// Total evictions so far (construction-time divergence included).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// This lane's status.
+    pub fn status(&self, lane: usize) -> LaneStatus {
+        self.lanes[lane].status
+    }
+
+    /// Retire an active lane (its fixed-point plan is satisfied); it stops
+    /// stepping but keeps its accumulated stats.
+    pub fn retire(&mut self, lane: usize) {
+        debug_assert_eq!(self.lanes[lane].status, LaneStatus::Active);
+        self.lanes[lane].status = LaneStatus::Retired;
+    }
+
+    /// This lane's per-iteration stats so far.
+    pub fn iter_stats(&self, lane: usize) -> &[IterStat] {
+        &self.lanes[lane].iter_stats
+    }
+
+    /// AIDG nodes this lane has evaluated.
+    pub fn nodes(&self, lane: usize) -> u64 {
+        self.lanes[lane].nodes
+    }
+
+    /// This lane's peak tracked frontier bytes (serial-identical
+    /// accounting — see [`LanePlane::lane_bytes`]).
+    pub fn peak_bytes(&self, lane: usize) -> usize {
+        self.lanes[lane].peak_bytes
+    }
+
+    /// Whole-graph end-to-end latency of one lane so far (eq. 1).
+    pub fn dt_aidg(&self, lane: usize) -> Cycle {
+        let stats = &self.lanes[lane].iter_stats;
+        let min = stats.first().map_or(0, |s| s.min_enter);
+        let max = stats.iter().map(|s| s.max_leave).max().unwrap_or(0);
+        max - min
+    }
+
+    /// Pre-size every active lane's stats vector (mirrors the serial
+    /// evaluator's `reserve` so the steady state stays allocation-free).
+    pub fn reserve(&mut self, iters: usize) {
+        for lane in &mut self.lanes {
+            if lane.status == LaneStatus::Active {
+                lane.iter_stats.reserve(iters);
+            }
+        }
+    }
+
+    /// Advance every active lane through iterations `range` in lockstep.
+    /// Ranges must be contiguous across calls (chunked fixed-point
+    /// driving), starting at 0.
+    pub fn run(&mut self, range: Range<u64>) -> Result<()> {
+        assert_eq!(range.start, self.next_iter, "batch iterations must be contiguous");
+        let t_run = if crate::obs::enabled() { crate::obs::now_ns() } else { 0 };
+        self.reserve(range.end.saturating_sub(range.start) as usize);
+        let n_lanes = self.lanes.len();
+        let fetch = self.fetch;
+        let Self { lanes, emits, program, routes, rings, plane, evictions, obs_compile_ns, .. } =
+            self;
+        for it in range.clone() {
+            // Emit phase: each active lane fills its own arena.
+            let mut max_len = 0usize;
+            for (lane, emit) in lanes.iter_mut().zip(emits.iter_mut()) {
+                if lane.status != LaneStatus::Active {
+                    continue;
+                }
+                emit.clear();
+                lane.kernel.emit_into(it, emit);
+                lane.cur_min_enter = Cycle::MAX;
+                lane.cur_max_leave = 0;
+                max_len = max_len.max(emit.len());
+            }
+            // Step phase: offset-major, lane-minor — the shared program and
+            // rings stay hot while lanes stream their own operands.
+            for offset in 0..max_len {
+                for li in 0..n_lanes {
+                    if lanes[li].status != LaneStatus::Active || offset >= emits[li].len() {
+                        continue;
+                    }
+                    let view = emits[li].view(offset);
+                    let ok = step_lane(
+                        program,
+                        routes,
+                        rings,
+                        plane,
+                        &mut lanes[li],
+                        li,
+                        n_lanes,
+                        &fetch,
+                        &view,
+                        offset,
+                        it,
+                        obs_compile_ns,
+                    )?;
+                    if !ok {
+                        lanes[li].status = LaneStatus::Evicted;
+                        *evictions += 1;
+                    }
+                }
+            }
+            // Close the iteration per surviving lane.
+            let num_objects = rings.len() / n_lanes;
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                if lane.status != LaneStatus::Active {
+                    continue;
+                }
+                lane.iter_stats.push(IterStat {
+                    min_enter: lane.cur_min_enter,
+                    max_leave: lane.cur_max_leave,
+                });
+                let mut live = lane.reg_last.len() * std::mem::size_of::<Cycle>()
+                    + plane.lane_bytes(li)
+                    + lane.b_enter.bytes()
+                    + lane.b_forward.bytes();
+                for obj in 0..num_objects {
+                    live += rings[obj * n_lanes + li].bytes();
+                }
+                live += lane.iter_stats.len() * std::mem::size_of::<IterStat>();
+                if live > lane.peak_bytes {
+                    lane.peak_bytes = live;
+                }
+            }
+        }
+        self.next_iter = range.end;
+        if t_run != 0 {
+            self.obs_run_ns += crate::obs::now_ns().saturating_sub(t_run);
+        }
+        Ok(())
+    }
+}
+
+/// Step one lane through one instruction. Returns `Ok(false)` when the lane
+/// diverged from the group template (caller evicts it); errors propagate
+/// (the lane's serial re-run would fail identically).
+///
+/// This is a line-for-line transcription of the serial
+/// `Evaluator::{fetch_leave, step}` with the frontier swapped for its laned
+/// columns: `obj_ring[x]` → `rings[x * n_lanes + li]`, `addr_last` →
+/// `plane.{get,set}(li, ..)`. Any behavioral edit here must be mirrored in
+/// `eval.rs` (and vice versa) — the differential tests will catch drift.
+#[allow(clippy::too_many_arguments)]
+fn step_lane(
+    program: &mut IterProgram,
+    routes: &mut Vec<Arc<Route>>,
+    rings: &mut [SlotRing],
+    plane: &mut LanePlane,
+    lane: &mut Lane<'_>,
+    li: usize,
+    n_lanes: usize,
+    fetch: &FetchConsts,
+    view: &InstrView<'_>,
+    offset: usize,
+    _it: u64,
+    obs_compile_ns: &mut u64,
+) -> Result<bool> {
+    // --- template lowering / verification --------------------------------
+    if offset >= program.len() {
+        debug_assert_eq!(offset, program.len(), "offsets must arrive in order");
+        let t_lower = if crate::obs::enabled() { crate::obs::now_ns() } else { 0 };
+        let instr = view.to_instruction();
+        let route = lane.d.route(&instr)?;
+        program.lower_offset(lane.d, &route, view);
+        routes.push(route);
+        lane.routes_checked = lane.routes_checked.max(offset + 1);
+        if t_lower != 0 {
+            *obs_compile_ns += crate::obs::now_ns().saturating_sub(t_lower);
+        }
+    } else if offset >= lane.routes_checked {
+        // First time this lane steps an offset lowered by another lane:
+        // its own route must match the template or the shared node table
+        // is not its node table.
+        let r = lane.d.route(&view.to_instruction())?;
+        lane.routes_checked = offset + 1;
+        if *routes[offset] != *r {
+            return Ok(false);
+        }
+    }
+    let meta = program.offsets[offset];
+    // The batch has no slow memory path: a lane whose addresses stop
+    // obeying the lowered partition is evicted (the serial re-run performs
+    // the full-scan fallback bit-identically).
+    if !program.partition_holds(lane.d, &meta, view) {
+        return Ok(false);
+    }
+
+    // --- merged fetch node (Algorithm 1 lines 36–42) ---------------------
+    let within = (lane.instr_index % fetch.p) as usize;
+    if within == 0 {
+        let t_enter = lane.next_fetch_start.max(lane.last_ifs_enter);
+        if t_enter < lane.cur_min_enter {
+            lane.cur_min_enter = t_enter;
+        }
+        lane.horizon = t_enter;
+        let t_stop = t_enter + fetch.imem_read_lat;
+        lane.group_slots.clear();
+        for _ in 0..fetch.p {
+            let slot = lane.b_forward.alloc(t_stop, fetch.issue_buf);
+            lane.group_slots.push(slot);
+        }
+        lane.next_fetch_start = t_stop;
+        lane.b_forward.prune_below(t_enter);
+        lane.nodes += 1;
+    }
+    lane.instr_index += 1;
+    let fetch_leave = lane.group_slots[within];
+
+    let ring = |x: u32| x as usize * n_lanes + li;
+
+    // --- IFS node --------------------------------------------------------
+    let mut t_enter = fetch_leave;
+    loop {
+        let tg = rings[ring(fetch.ifs_lock)].gate(t_enter);
+        let tb = lane.b_enter.probe(tg, fetch.issue_buf);
+        if tb == t_enter {
+            break;
+        }
+        t_enter = tb;
+    }
+    lane.b_enter.commit(t_enter);
+    if t_enter < lane.cur_min_enter {
+        lane.cur_min_enter = t_enter;
+    }
+    lane.last_ifs_enter = t_enter;
+    lane.b_enter.prune_below(fetch_leave.saturating_sub(1));
+    let mut t_stop = t_enter + fetch.ifs_lat;
+    lane.nodes += 1;
+
+    let horizon = lane.horizon;
+    let mut t_leave = rings[ring(meta.first_tail_lock)].gate(t_stop);
+    rings[ring(fetch.ifs_lock)].insert(t_enter, t_leave, horizon);
+    let mut prev_leave = t_leave;
+
+    // --- tail nodes ------------------------------------------------------
+    for ni in meta.nodes.0..meta.nodes.1 {
+        let node = program.nodes[ni as usize];
+        t_enter = rings[ring(node.owner)].gate(prev_leave);
+
+        let mut deps: Cycle = 0;
+        let lat: Cycle = match node.kind {
+            NodeKind::Stage { lat } => lat.eval(lane.d, view.imms),
+            NodeKind::Fu { lat, .. } => {
+                for r in view.read_regs.iter().chain(view.write_regs.iter()) {
+                    deps = deps.max(lane.reg_last[r.0 as usize]);
+                }
+                lat.eval(lane.d, view.imms)
+            }
+            NodeKind::Mem { write, per_txn, port, pos, .. } => {
+                let addrs = if write { view.write_addrs } else { view.read_addrs };
+                for &p in program.positions_of(pos) {
+                    deps = deps.max(plane.get(li, addrs[p as usize]));
+                }
+                let n = (pos.1 - pos.0) as usize;
+                let per = match per_txn {
+                    Lat::Fix(c) => c,
+                    Lat::Dyn(m) => lane.d.mem_txn_latency_imms(m, write, view.imms),
+                };
+                per * (n as u64).div_ceil(port as u64).max(1)
+            }
+            NodeKind::WriteBack => 0,
+        };
+
+        t_stop = t_enter.max(deps) + lat;
+        t_leave = if node.next != NO_LOCK { rings[ring(node.next)].gate(t_stop) } else { t_stop };
+        rings[ring(node.owner)].insert(t_enter, t_leave, horizon);
+        lane.nodes += 1;
+
+        match node.kind {
+            NodeKind::Fu { anchors_writes, .. } => {
+                for r in view.read_regs {
+                    lane.reg_last[r.0 as usize] = t_leave;
+                }
+                if anchors_writes {
+                    for r in view.write_regs {
+                        lane.reg_last[r.0 as usize] = t_leave;
+                    }
+                }
+            }
+            NodeKind::Mem { write, pos, .. } => {
+                let addrs = if write { view.write_addrs } else { view.read_addrs };
+                for &p in program.positions_of(pos) {
+                    plane.set(li, addrs[p as usize], t_leave);
+                }
+            }
+            NodeKind::WriteBack => {
+                for r in view.write_regs {
+                    lane.reg_last[r.0 as usize] = t_leave;
+                }
+            }
+            NodeKind::Stage { .. } => {}
+        }
+        prev_leave = t_leave;
+    }
+
+    if prev_leave > lane.cur_max_leave {
+        lane.cur_max_leave = prev_leave;
+    }
+    Ok(true)
+}
+
+/// Result of a batched layer estimation.
+pub struct BatchOutcome {
+    /// One estimate per input lane, in input order — bit-identical to what
+    /// [`estimate_layer`] returns for that lane alone.
+    pub estimates: Vec<LayerEstimate>,
+    /// Lanes that diverged from the batch template and were re-estimated
+    /// serially (construction-time digest mismatches included).
+    pub evicted: u64,
+}
+
+/// How a lane's fixed-point plan concluded (mirrors the serial §6.3
+/// driver's three exits).
+#[derive(Clone, Copy)]
+enum Done {
+    Whole,
+    Fixed { k_prolog: u64 },
+    Fallback,
+}
+
+/// Batched [`estimate_layer`]: one estimate per lane, bit-identical to the
+/// serial path per lane. Digest groups larger than [`MAX_LANES`] are
+/// chunked; evicted lanes fall back to [`estimate_layer`] transparently.
+pub fn estimate_layer_batch(
+    lanes: &[(&Diagram, &LoopKernel)],
+    cfg: &FixedPointConfig,
+) -> Result<BatchOutcome> {
+    let mut estimates = Vec::with_capacity(lanes.len());
+    let mut evicted = 0u64;
+    for chunk in lanes.chunks(MAX_LANES) {
+        let (es, ev) = estimate_chunk(chunk, cfg)?;
+        estimates.extend(es);
+        evicted += ev;
+    }
+    Ok(BatchOutcome { estimates, evicted })
+}
+
+/// One ≤[`MAX_LANES`] chunk: drive every lane's §6.3 plan over a single
+/// lockstep instruction walk, retiring lanes as their plans conclude.
+///
+/// The lockstep driver preserves the serial decision sequence exactly:
+/// per-lane events fire at the same evaluated-iteration counts the serial
+/// chunk loop would reach, with the same precedence (whole-graph beats
+/// stability beats budget — see `fixed_point.rs`).
+fn estimate_chunk(
+    lanes: &[(&Diagram, &LoopKernel)],
+    cfg: &FixedPointConfig,
+) -> Result<(Vec<LayerEstimate>, u64)> {
+    let n = lanes.len();
+    let start = Instant::now();
+    let mut sp = crate::obs::span("aidg.estimate_batch");
+    sp.arg("lanes", n as u64);
+
+    let mut batch = BatchEvaluator::new(lanes);
+    counters::AIDG_BATCH_GROUPS.add(1);
+    counters::AIDG_BATCH_LANES.add(n as u64);
+
+    let d0 = lanes[0].0;
+    let p = d0.fetch_config().port_width as u64;
+    let kb = k_block(lanes[0].1.insts_per_iter as u64, p);
+
+    // Per-lane fixed-point plan (None = chunked evaluation with a fallback
+    // budget; Some(Done::Whole) at construction when the block already
+    // covers the kernel).
+    struct Plan {
+        whole: bool,
+        budget: u64,
+        prev_span: Option<Cycle>,
+    }
+    let mut plans: Vec<Plan> = lanes
+        .iter()
+        .map(|&(_, kernel)| {
+            let k = kernel.k;
+            if kb >= k || 3 * kb > k {
+                Plan { whole: true, budget: u64::MAX, prev_span: None }
+            } else {
+                let budget = ((k as f64 * cfg.fallback_frac) as u64).max(3 * kb);
+                Plan { whole: false, budget, prev_span: None }
+            }
+        })
+        .collect();
+    let mut done: Vec<Option<Done>> = vec![None; n];
+
+    let mut it = 0u64;
+    loop {
+        // Fire the events that land on `it`, in the serial precedence
+        // order: reaching k retires whole-graph; a block boundary checks
+        // stability, then updates the span window, then checks the budget.
+        for li in 0..n {
+            if batch.status(li) != LaneStatus::Active {
+                continue;
+            }
+            let k = lanes[li].1.k;
+            if it >= k {
+                batch.retire(li);
+                done[li] = Some(Done::Whole);
+                continue;
+            }
+            if !plans[li].whole && it > 0 && it % kb == 0 {
+                let span = batch.iter_stats(li).last().expect("ran ≥ kb iterations").span();
+                if it >= 2 * kb && plans[li].prev_span == Some(span) && it >= 3 * kb {
+                    batch.retire(li);
+                    done[li] = Some(Done::Fixed { k_prolog: it });
+                    continue;
+                }
+                plans[li].prev_span = Some(span);
+                if it >= plans[li].budget {
+                    batch.retire(li);
+                    done[li] = Some(Done::Fallback);
+                }
+            }
+        }
+        // Next lockstep target: the earliest pending event of any lane.
+        let mut target: Option<u64> = None;
+        for li in 0..n {
+            if batch.status(li) != LaneStatus::Active {
+                continue;
+            }
+            let k = lanes[li].1.k;
+            let ev = if plans[li].whole { k } else { ((it / kb) + 1) * kb }.min(k);
+            target = Some(target.map_or(ev, |t| t.min(ev)));
+        }
+        let Some(target) = target else { break };
+        debug_assert!(target > it);
+        batch.run(it..target)?;
+        it = target;
+    }
+
+    if crate::obs::enabled() {
+        crate::obs::record_duration("aidg.program.compile", batch.obs_compile_ns);
+        crate::obs::record_duration(
+            "aidg.evaluate",
+            batch.obs_run_ns.saturating_sub(batch.obs_compile_ns),
+        );
+    }
+
+    // Assemble results: retired lanes finish from their own stats exactly
+    // as the serial driver would; evicted lanes re-run serially from
+    // scratch (their partial batch state is discarded).
+    let mut out = Vec::with_capacity(n);
+    let mut evicted = 0u64;
+    for (li, &(d, kernel)) in lanes.iter().enumerate() {
+        match done[li] {
+            Some(dn) if batch.status(li) == LaneStatus::Retired => {
+                out.push(assemble(&batch, li, kernel, dn, kb, cfg, &start));
+            }
+            _ => {
+                evicted += 1;
+                out.push(estimate_layer(d, kernel, cfg)?);
+            }
+        }
+    }
+    counters::AIDG_BATCH_EVICTIONS.add(evicted);
+    sp.arg("evicted", evicted);
+    Ok((out, evicted))
+}
+
+/// Produce one lane's [`LayerEstimate`] from its batch stats — field-level
+/// mirror of the serial driver's `finish` closure.
+fn assemble(
+    batch: &BatchEvaluator<'_>,
+    li: usize,
+    kernel: &LoopKernel,
+    done: Done,
+    kb: u64,
+    cfg: &FixedPointConfig,
+    start: &Instant,
+) -> LayerEstimate {
+    let stats = batch.iter_stats(li);
+    let k = kernel.k;
+    counters::note_aidg(batch.nodes(li), stats.len() as u64);
+    let (cycles, k_prolog, dt_iteration, dt_overlap, used_fallback, whole_graph) = match done {
+        Done::Whole => {
+            let cycles = batch.dt_aidg(li);
+            let dt_it = stats.last().map_or(0, |s| s.span());
+            (cycles, k, dt_it, overlap(stats), false, true)
+        }
+        Done::Fixed { k_prolog } => {
+            let dt_prolog = stats.iter().map(|s| s.max_leave).max().unwrap_or(0);
+            let dt_iteration = stats.last().map_or(0, |s| s.span());
+            let ov = overlap(stats);
+            let stride = dt_iteration as i64 - ov;
+            let cycles = (dt_prolog as i64 + (k - k_prolog) as i64 * stride)
+                .max(dt_prolog as i64) as Cycle;
+            (cycles, k_prolog, dt_iteration, ov, false, false)
+        }
+        Done::Fallback => {
+            let k01 = stats.len() as u64;
+            let k_prolog = (k01 / 4).max(1);
+            let leave_at = |it: u64| stats[(it - 1) as usize].max_leave;
+            let dt_window = leave_at(k01) - leave_at(k_prolog);
+            let dt_iteration = ((dt_window as f64) / ((k01 - k_prolog) as f64)).round() as Cycle;
+            let dt_prolog = leave_at(k_prolog);
+            let cycles = dt_prolog + (k - k_prolog) * dt_iteration;
+            (cycles, k_prolog, dt_iteration, 0, true, false)
+        }
+    };
+    LayerEstimate {
+        label: kernel.label.clone(),
+        k,
+        insts_per_iter: kernel.insts_per_iter,
+        cycles,
+        evaluated_iters: stats.len() as u64,
+        k_block: kb,
+        k_prolog,
+        dt_iteration,
+        dt_overlap,
+        used_fallback,
+        whole_graph,
+        nodes: batch.nodes(li),
+        peak_state_bytes: batch.peak_bytes(li) as u64,
+        runtime: start.elapsed(),
+        provenance: Provenance::Computed,
+        trace: cfg.keep_trace.then(|| stats.to_vec()),
+    }
+}

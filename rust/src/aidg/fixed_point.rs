@@ -119,7 +119,7 @@ pub fn k_block(insts_per_iter: u64, port_width: u64) -> u64 {
 
 /// Δt_overlap between the last two evaluated iterations (Fig. 9 semantics:
 /// how far iteration `j` starts before iteration `j−1` ends).
-fn overlap(stats: &[IterStat]) -> i64 {
+pub(crate) fn overlap(stats: &[IterStat]) -> i64 {
     if stats.len() < 2 {
         return 0;
     }

@@ -12,8 +12,11 @@
 //! steady-state iterations replay
 //! a flat node table with zero heap allocations (the original
 //! re-derive-everything evaluator survives as the differential-test
-//! reference in `reference` under `#[cfg(test)]`).
+//! reference in `reference` under `#[cfg(test)]`). For DSE sweeps,
+//! [`batch`] amortizes one such program walk across up to [`MAX_LANES`]
+//! digest-equal candidates in structure-of-arrays lockstep.
 
+pub mod batch;
 pub mod eval;
 pub mod fixed_point;
 pub(crate) mod program;
@@ -21,6 +24,7 @@ pub(crate) mod program;
 pub(crate) mod reference;
 pub mod state;
 
+pub use batch::{estimate_layer_batch, BatchEvaluator, BatchOutcome, LaneStatus, MAX_LANES};
 pub use eval::{Evaluator, IterStat};
 pub use fixed_point::{
     estimate_layer, evaluate_whole, k_block, FixedPointConfig, LayerEstimate, Provenance,

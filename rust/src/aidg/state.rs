@@ -357,6 +357,123 @@ impl AddrPlane {
     }
 }
 
+/// Maximum lanes of a [`LanePlane`] (and of the batch evaluator built on
+/// it): per-page lane-residency is a single `u64` bitmask.
+pub const MAX_LANES: usize = 64;
+
+/// Laned last-accessor scoreboard: the [`AddrPlane`] layout generalized to
+/// N evaluation lanes sharing one page index. Digest-equal DSE candidates
+/// stride the same address regions, so their pages coincide; keeping one
+/// index (and one one-entry cache) in front of word-major lane columns
+/// amortizes the lookup machinery across the whole batch instead of
+/// duplicating it per lane.
+///
+/// Byte accounting stays per-lane and serial-identical: a lane "owns" a
+/// page only once it has *written* it (tracked in a per-page lane bitmask),
+/// and [`LanePlane::lane_bytes`] charges exactly what a serial
+/// [`AddrPlane`] would retain for that lane — resident pages at full width
+/// plus their index entries. Reads of a page the lane never wrote return 0
+/// without charging it, exactly like a serial miss.
+#[derive(Debug)]
+pub struct LanePlane {
+    lanes: usize,
+    index: FxHashMap<u64, u32>,
+    /// Word-major lane columns: `pages[slot][word * lanes + lane]`.
+    pages: Vec<Box<[Cycle]>>,
+    /// Per-page bitmask of lanes that have written the page.
+    touched: Vec<u64>,
+    /// Per-lane count of pages written (serial-equivalent residency).
+    resident: Vec<u32>,
+    last_key: u64,
+    last_slot: u32,
+}
+
+impl LanePlane {
+    /// An empty plane over `lanes` evaluation lanes.
+    pub fn new(lanes: usize) -> Self {
+        assert!(
+            (1..=MAX_LANES).contains(&lanes),
+            "LanePlane supports 1..={MAX_LANES} lanes (got {lanes})"
+        );
+        Self {
+            lanes,
+            index: FxHashMap::default(),
+            pages: Vec::new(),
+            touched: Vec::new(),
+            resident: vec![0; lanes],
+            last_key: 0,
+            last_slot: 0,
+        }
+    }
+
+    /// Resolve a page key to its slab slot (shared one-entry cache — the
+    /// key→slot map is lane-independent), refreshing the cache on a hit.
+    #[inline]
+    fn lookup(&mut self, key: u64) -> Option<u32> {
+        if !self.pages.is_empty() && self.last_key == key {
+            return Some(self.last_slot);
+        }
+        let s = *self.index.get(&key)?;
+        self.last_key = key;
+        self.last_slot = s;
+        Some(s)
+    }
+
+    /// Last-accessor leave time of `a` in `lane` (0 when never written by
+    /// this lane — pages resident for *other* lanes still read 0 here).
+    #[inline]
+    pub fn get(&mut self, lane: usize, a: Addr) -> Cycle {
+        let lanes = self.lanes;
+        match self.lookup(a >> PAGE_SHIFT) {
+            Some(slot) => {
+                self.pages[slot as usize][((a as usize) & PAGE_MASK) * lanes + lane]
+            }
+            None => 0,
+        }
+    }
+
+    /// Record `t` as the last-accessor leave time of `a` in `lane`.
+    #[inline]
+    pub fn set(&mut self, lane: usize, a: Addr, t: Cycle) {
+        let lanes = self.lanes;
+        let key = a >> PAGE_SHIFT;
+        let slot = match self.lookup(key) {
+            Some(s) => s,
+            None => {
+                let s = self.pages.len() as u32;
+                self.pages.push(vec![0; PAGE_WORDS * lanes].into_boxed_slice());
+                self.touched.push(0);
+                self.index.insert(key, s);
+                self.last_key = key;
+                self.last_slot = s;
+                s
+            }
+        };
+        let bit = 1u64 << lane;
+        if self.touched[slot as usize] & bit == 0 {
+            self.touched[slot as usize] |= bit;
+            self.resident[lane] += 1;
+        }
+        self.pages[slot as usize][((a as usize) & PAGE_MASK) * lanes + lane] = t;
+    }
+
+    /// Pages this lane has written (what a serial plane would have
+    /// resident).
+    pub fn lane_pages(&self, lane: usize) -> usize {
+        self.resident[lane] as usize
+    }
+
+    /// Serial-equivalent tracked bytes of one lane: its resident pages at
+    /// full serial width plus their index entries — bit-identical to what
+    /// [`AddrPlane::bytes`] reports for the same access trace.
+    pub fn lane_bytes(&self, lane: usize) -> usize {
+        self.resident[lane] as usize
+            * (PAGE_WORDS * std::mem::size_of::<Cycle>()
+                + std::mem::size_of::<u64>()
+                + std::mem::size_of::<u32>())
+    }
+}
+
 /// Full carried state of a streaming AIDG evaluation.
 #[derive(Debug)]
 pub struct EvalState {

@@ -122,6 +122,7 @@ pub fn explore(spec: &DseSpec, pool: &Pool, backend: &RooflineBackend) -> Result
         keep_frac: spec.keep_frac,
         fp: spec.fp,
         schedule: Schedule::Locality,
+        batch: true,
     };
     let outcome = explore_candidates(
         spec.candidates(),

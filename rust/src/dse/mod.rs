@@ -46,7 +46,7 @@ use crate::Result;
 
 pub use enumerate::CandidateIter;
 pub use frontier::mark_frontier;
-pub use schedule::{plan_order, Schedule};
+pub use schedule::{plan_groups, plan_order, Schedule};
 pub use space::{Candidate, SweepSpace};
 
 /// Roofline batch source: XLA executable or the native mirror.
@@ -92,6 +92,12 @@ pub struct SweepOptions {
     pub fp: crate::aidg::FixedPointConfig,
     /// Accurate-pass ordering (default: cache-locality grouping).
     pub schedule: Schedule,
+    /// Dispatch multi-candidate digest groups through the lane-batched
+    /// evaluator ([`EstimationEngine::estimate_batch`]); singleton groups
+    /// and trace-carrying sweeps always take the per-candidate path.
+    /// Bit-identical either way — `--no-batch` (or `batch: false`) exists
+    /// for perf comparison and serial-cache experiments.
+    pub batch: bool,
 }
 
 impl Default for SweepOptions {
@@ -100,6 +106,7 @@ impl Default for SweepOptions {
             keep_frac: 1.0,
             fp: crate::aidg::FixedPointConfig::default(),
             schedule: Schedule::Locality,
+            batch: true,
         }
     }
 }
@@ -307,12 +314,13 @@ pub fn explore_candidates(
     let survivors: Vec<usize> = order.into_iter().take(keep).collect();
     let digests: Vec<u64> = survivors.iter().map(|&i| points[i].digest).collect();
     let plan = plan_order(&digests, opts.schedule);
+    let groups = plan_groups(&digests, opts.schedule);
 
     let mut stats = EstimateStats::default();
     let mut estimated = 0u64;
-    for &s in &plan {
-        let i = survivors[s];
-        let e = engine.estimate_network_pooled(&archs[i], net, &opts.fp, pool)?;
+    let mut note = |i: usize,
+                    e: &crate::coordinator::job::NetworkEstimate,
+                    points: &mut Vec<SweepPoint>| {
         points[i].aidg_cycles = Some(e.total_cycles());
         stats.total_kernels += e.stats.total_kernels;
         stats.unique_kernels += e.stats.unique_kernels;
@@ -321,6 +329,25 @@ pub fn explore_candidates(
         stats.evaluated += e.stats.evaluated;
         estimated += 1;
         counters::DSE_POINTS_ESTIMATED.add(1);
+    };
+    for g in groups {
+        let members = &plan[g];
+        if opts.batch && members.len() > 1 && !opts.fp.keep_trace {
+            // whole digest group: one lane-batched dispatch (divergent
+            // lanes are evicted to the serial path inside the engine)
+            let group_archs: Vec<&Arch> = members.iter().map(|&s| &archs[survivors[s]]).collect();
+            let ests = engine.estimate_batch(&group_archs, net, &opts.fp, pool)?;
+            debug_assert_eq!(ests.len(), members.len());
+            for (&s, e) in members.iter().zip(&ests) {
+                note(survivors[s], e, &mut points);
+            }
+        } else {
+            for &s in members {
+                let i = survivors[s];
+                let e = engine.estimate_network_pooled(&archs[i], net, &opts.fp, pool)?;
+                note(i, &e, &mut points);
+            }
+        }
     }
     drop(estimate_sp);
     sp.arg("enumerated", enumerated);

@@ -10,6 +10,13 @@
 //! kernels if unrelated candidates run in between. Grouping same-digest
 //! candidates adjacently therefore maximizes the warm hit rate across
 //! thousands of design points without growing the cache.
+//!
+//! The same digest groups feed the lane-batched evaluator
+//! ([`crate::aidg::batch`]): [`plan_groups`] exposes the contiguous
+//! same-digest runs of a planned order so the dispatcher can hand whole
+//! groups to `estimate_batch` instead of re-scanning the flat order.
+
+use std::ops::Range;
 
 /// How to order phase-2 survivors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,8 +26,11 @@ pub enum Schedule {
     Locality,
     /// Keep the roofline best-first order untouched.
     Enumerated,
-    /// Deterministic pseudo-random permutation of the given seed (the
+    /// Deterministic pseudo-random permutation of the digest *groups* (the
     /// locality baseline `rust/tests/dse_generic.rs` measures against).
+    /// Members within a group keep their order and stay adjacent — point-
+    /// wise shuffling would leave the batch dispatcher with singleton
+    /// groups only and the estimate cache cold (see docs/dse.md).
     Shuffled(u64),
 }
 
@@ -49,8 +59,19 @@ pub fn plan_order(digests: &[u64], schedule: Schedule) -> Vec<usize> {
             order
         }
         Schedule::Shuffled(seed) => {
-            // Fisher–Yates over an xorshift64* stream (no RNG crate in the
-            // offline image; determinism is the point anyway)
+            // Collect digest groups in first-appearance order, then
+            // Fisher–Yates over the *groups* with an xorshift64* stream (no
+            // RNG crate in the offline image; determinism is the point
+            // anyway). All-distinct digests degrade to the classic
+            // point-wise shuffle.
+            let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+            for (i, &d) in digests.iter().enumerate() {
+                if let Some((_, members)) = groups.iter_mut().find(|(g, _)| *g == d) {
+                    members.push(i);
+                } else {
+                    groups.push((d, vec![i]));
+                }
+            }
             let mut state = seed | 1;
             let mut next = move || {
                 state ^= state << 13;
@@ -58,13 +79,32 @@ pub fn plan_order(digests: &[u64], schedule: Schedule) -> Vec<usize> {
                 state ^= state << 17;
                 state.wrapping_mul(0x2545_F491_4F6C_DD1D)
             };
-            for i in (1..n).rev() {
+            for i in (1..groups.len()).rev() {
                 let j = (next() % (i as u64 + 1)) as usize;
-                order.swap(i, j);
+                groups.swap(i, j);
             }
-            order
+            groups.into_iter().flat_map(|(_, members)| members).collect()
         }
     }
+}
+
+/// The contiguous same-digest runs of `plan_order(digests, schedule)`, as
+/// ranges into that order (concatenated they cover `0..digests.len()`).
+/// Under [`Schedule::Locality`] and [`Schedule::Shuffled`] each digest
+/// appears in exactly one run; [`Schedule::Enumerated`] splits a digest
+/// interleaved with others into multiple runs (the order is not
+/// rearranged, so only already-adjacent members batch together).
+pub fn plan_groups(digests: &[u64], schedule: Schedule) -> Vec<Range<usize>> {
+    let order = plan_order(digests, schedule);
+    let mut groups = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=order.len() {
+        if i == order.len() || digests[order[i]] != digests[order[start]] {
+            groups.push(start..i);
+            start = i;
+        }
+    }
+    groups
 }
 
 #[cfg(test)]
@@ -91,6 +131,41 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..7).collect::<Vec<_>>());
         assert_ne!(a, plan_order(&digests, Schedule::Shuffled(43)));
+    }
+
+    #[test]
+    fn shuffle_keeps_digest_groups_adjacent() {
+        // three interleaved groups; any seed must keep each group's members
+        // contiguous and in first-appearance order
+        let digests = [1, 2, 3, 1, 2, 3, 1, 2, 3];
+        for seed in 0..32u64 {
+            let order = plan_order(&digests, Schedule::Shuffled(seed));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..digests.len()).collect::<Vec<_>>());
+            let groups = plan_groups(&digests, Schedule::Shuffled(seed));
+            assert_eq!(groups.len(), 3, "each digest forms exactly one run");
+            for g in groups {
+                let d = digests[order[g.start]];
+                let members: Vec<usize> = order[g].iter().copied().collect();
+                assert!(members.windows(2).all(|w| w[0] < w[1]), "members keep input order");
+                assert!(members.iter().all(|&i| digests[i] == d));
+                assert_eq!(members.len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_groups_covers_the_order_contiguously() {
+        let digests = [7, 9, 7, 9, 7, 3];
+        let groups = plan_groups(&digests, Schedule::Locality);
+        assert_eq!(groups, vec![0..3, 3..5, 5..6]);
+        // enumerated: interleaved digests split into singleton runs
+        let runs = plan_groups(&digests, Schedule::Enumerated);
+        assert_eq!(runs, vec![0..1, 1..2, 2..3, 3..4, 4..5, 5..6]);
+        // adjacent duplicates still merge without reordering
+        assert_eq!(plan_groups(&[4, 4, 8], Schedule::Enumerated), vec![0..2, 2..3]);
+        assert!(plan_groups(&[], Schedule::Locality).is_empty());
     }
 
     #[test]

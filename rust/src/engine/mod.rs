@@ -31,14 +31,16 @@
 pub mod cache;
 pub mod key;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::acadl::Diagram;
-use crate::aidg::{estimate_layer, FixedPointConfig, LayerEstimate, Provenance};
+use crate::aidg::{
+    estimate_layer, estimate_layer_batch, FixedPointConfig, LayerEstimate, Provenance,
+};
 use crate::coordinator::job::{Arch, EstimateStats, LayerOutcome, NetworkEstimate};
 use crate::coordinator::pool::Pool;
 use crate::dnn::Network;
@@ -432,6 +434,221 @@ impl EstimationEngine {
             runtime: t0.elapsed(),
             stats,
         })
+    }
+
+    /// Estimate one network against a whole digest group of candidate
+    /// architectures at once, driving cache misses through the lane-batched
+    /// evaluator ([`crate::aidg::estimate_layer_batch`]): the j-th kernel of
+    /// the j-th layer forms one lane group across candidates, sharing a
+    /// single iteration-program walk. Results are bit-identical to calling
+    /// [`Self::estimate_network_pooled`] per candidate in order (lanes that
+    /// diverge inside a group — e.g. a digest-mismatched candidate — are
+    /// evicted to the serial path transparently), and the per-candidate
+    /// `EstimateStats` match that sequential schedule's accounting.
+    ///
+    /// Trace-carrying and single-candidate requests fall back to the
+    /// per-candidate paths. Like `estimate_network_pooled`, this must be
+    /// called from *outside* `pool`'s own workers.
+    pub fn estimate_batch(
+        &self,
+        archs: &[&Arch],
+        net: &Network,
+        fp: &FixedPointConfig,
+        pool: &Pool,
+    ) -> Result<Vec<NetworkEstimate>> {
+        if archs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if fp.keep_trace || archs.len() == 1 {
+            return archs
+                .iter()
+                .map(|a| self.estimate_network_pooled(a, net, fp, pool))
+                .collect();
+        }
+        let mut sp = crate::obs::span("engine.estimate_batch");
+        sp.arg("lanes", archs.len() as u64);
+        let t0 = Instant::now();
+        let n = archs.len();
+        let mut mappers: Vec<Arc<dyn Mapper + Send + Sync>> = Vec::with_capacity(n);
+        for a in archs {
+            mappers.push(Arc::from(a.mapper()?));
+        }
+        let digests: Vec<ArchDigest> = mappers.iter().map(|m| ArchDigest::of(m.diagram())).collect();
+
+        // ---- plan all lanes, mirroring the sequential-serial accounting ----
+        enum Slot {
+            Cached(Arc<LayerEstimate>),
+            /// Index into the cross-lane pending work-item list.
+            Pending(usize),
+        }
+        struct PlannedLayer {
+            name: String,
+            /// `None` = fused layer.
+            slots: Option<Vec<(String, Slot, Provenance)>>,
+        }
+        struct PendingEntry {
+            key: KernelKey,
+            kern: LoopKernel,
+            lane: usize,
+            /// Mapped-layer position — lanes' j-th kernels of the j-th
+            /// layer batch together.
+            layer: usize,
+            kidx: usize,
+        }
+        let mut per_lane_planned: Vec<Vec<PlannedLayer>> = Vec::with_capacity(n);
+        let mut per_lane_stats: Vec<EstimateStats> = (0..n).map(|_| EstimateStats::default()).collect();
+        let mut pending: Vec<PendingEntry> = Vec::new();
+        // cross-lane maps: a key pending from (or cache-resolved by) an
+        // earlier lane would sit in the cache by the time a sequential
+        // schedule reached this lane — count it as a CacheHit here too.
+        let mut pending_of: HashMap<KernelKey, usize> = HashMap::new();
+        let mut hit_of: HashMap<KernelKey, Arc<LayerEstimate>> = HashMap::new();
+        for (lane, m) in mappers.iter().enumerate() {
+            let mapped = m.map_network(net)?;
+            let mut local_seen: HashSet<KernelKey> = HashSet::new();
+            let mut planned: Vec<PlannedLayer> = Vec::with_capacity(mapped.len());
+            for (layer, ml) in mapped.into_iter().enumerate() {
+                if ml.fused {
+                    planned.push(PlannedLayer { name: ml.layer_name, slots: None });
+                    continue;
+                }
+                let mut slots = Vec::with_capacity(ml.kernels.len());
+                for (kidx, kern) in ml.kernels.into_iter().enumerate() {
+                    let mut psp = crate::obs::span("engine.kernel.plan");
+                    let key = kernel_key(digests[lane], m.diagram(), &kern, fp);
+                    psp.arg("kernel_hi", key.kernel_hi);
+                    let label = kern.label.clone();
+                    let first_in_lane = local_seen.insert(key);
+                    let (slot, provenance) = if !first_in_lane {
+                        let slot = if let Some(&i) = pending_of.get(&key) {
+                            Slot::Pending(i)
+                        } else {
+                            Slot::Cached(Arc::clone(&hit_of[&key]))
+                        };
+                        (slot, Provenance::Deduped)
+                    } else if let Some(&i) = pending_of.get(&key) {
+                        (Slot::Pending(i), Provenance::CacheHit)
+                    } else if let Some(a) = hit_of.get(&key) {
+                        (Slot::Cached(Arc::clone(a)), Provenance::CacheHit)
+                    } else if let Some(a) = self.cache.get(&key) {
+                        hit_of.insert(key, Arc::clone(&a));
+                        (Slot::Cached(a), Provenance::CacheHit)
+                    } else {
+                        let i = pending.len();
+                        pending_of.insert(key, i);
+                        pending.push(PendingEntry { key, kern, lane, layer, kidx });
+                        (Slot::Pending(i), Provenance::Computed)
+                    };
+                    psp.note(match provenance {
+                        Provenance::Computed => "evaluated",
+                        Provenance::CacheHit => "hit",
+                        Provenance::Deduped => "dedup",
+                    });
+                    per_lane_stats[lane].count(provenance);
+                    slots.push((label, slot, provenance));
+                }
+                planned.push(PlannedLayer { name: ml.layer_name, slots: Some(slots) });
+            }
+            per_lane_stats[lane].unique_kernels = local_seen.len() as u64;
+            per_lane_planned.push(planned);
+        }
+
+        // ---- group the misses: lanes' matching kernel slots batch together ----
+        let mut groups: HashMap<(usize, usize), Vec<usize>> = HashMap::new();
+        for (i, pe) in pending.iter().enumerate() {
+            // lanes plan in order, so each group's members are lane-ordered
+            groups.entry((pe.layer, pe.kidx)).or_default().push(i);
+        }
+        let n_jobs = groups.len();
+        let (tx, rx) = channel::<(Vec<usize>, Result<Vec<LayerEstimate>>)>();
+        for (_, idxs) in groups {
+            let members: Vec<(Arc<dyn Mapper + Send + Sync>, LoopKernel)> = idxs
+                .iter()
+                .map(|&i| {
+                    let kern = std::mem::replace(
+                        &mut pending[i].kern,
+                        LoopKernel::new("<taken>", 0, 0, Box::new(|_, _| {})),
+                    );
+                    (Arc::clone(&mappers[pending[i].lane]), kern)
+                })
+                .collect();
+            let tx = tx.clone();
+            let fp = *fp;
+            pool.spawn(move || {
+                let r = if members.len() == 1 {
+                    // singleton group: the plain serial path, no lane setup
+                    let mut ksp = crate::obs::span("engine.kernel");
+                    ksp.note("evaluated");
+                    estimate_layer(members[0].0.diagram(), &members[0].1, &fp).map(|e| vec![e])
+                } else {
+                    let mut ksp = crate::obs::span("engine.kernel.batch");
+                    ksp.arg("lanes", members.len() as u64);
+                    let lanes: Vec<(&Diagram, &LoopKernel)> =
+                        members.iter().map(|(m, k)| (m.diagram(), k)).collect();
+                    estimate_layer_batch(&lanes, &fp).map(|o| o.estimates)
+                };
+                let _ = tx.send((idxs, r));
+            })?;
+        }
+        drop(tx);
+        let mut results: Vec<Option<Arc<LayerEstimate>>> = (0..pending.len()).map(|_| None).collect();
+        let mut received = 0usize;
+        while received < n_jobs {
+            let Ok((idxs, r)) = rx.recv() else { break };
+            let ests = r?;
+            debug_assert_eq!(ests.len(), idxs.len());
+            for (&i, e) in idxs.iter().zip(ests) {
+                let est = Arc::new(e);
+                self.cache.insert(pending[i].key, Arc::clone(&est));
+                results[i] = Some(est);
+            }
+            received += 1;
+        }
+        if received < n_jobs {
+            anyhow::bail!(
+                "worker pool hung up after {received}/{n_jobs} kernel groups \
+                 (a worker died or the pool was shut down)"
+            );
+        }
+
+        // ---- reassemble per-lane network estimates in input order ----
+        let mut out = Vec::with_capacity(n);
+        for (lane, planned) in per_lane_planned.into_iter().enumerate() {
+            let mut layers = Vec::with_capacity(planned.len());
+            for pl in planned {
+                let estimate = match pl.slots {
+                    None => None,
+                    Some(slots) => {
+                        let mut ests = Vec::with_capacity(slots.len());
+                        for (label, slot, provenance) in slots {
+                            let arc = match slot {
+                                Slot::Cached(a) => a,
+                                Slot::Pending(i) => {
+                                    Arc::clone(results[i].as_ref().expect("all results received"))
+                                }
+                            };
+                            let mut e = (*arc).clone();
+                            e.label = label;
+                            e.provenance = provenance;
+                            ests.push(e);
+                        }
+                        Some(ests)
+                    }
+                };
+                layers.push(LayerOutcome { layer_name: pl.name, estimate });
+            }
+            let stats = per_lane_stats[lane];
+            self.note_request(&stats);
+            out.push(NetworkEstimate {
+                network: net.name.clone(),
+                arch: mappers[lane].diagram().name.clone(),
+                layers,
+                runtime: t0.elapsed(),
+                stats,
+            });
+        }
+        sp.arg("evaluated", out.iter().map(|e| e.stats.evaluated).sum::<u64>());
+        Ok(out)
     }
 }
 

@@ -178,7 +178,7 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
             eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
             eprintln!("  networks:      tc_resnet8 | alexnet | ... (acadl-perf info)");
             eprintln!("                 net:<path>  or  --network-file <path>  (textual network description)");
-            eprintln!("  dse:           --arch-file <path> [--network-file <path>] [--keep-frac F] [--sweep-cap N]");
+            eprintln!("  dse:           --arch-file <path> [--network-file <path>] [--keep-frac F] [--sweep-cap N] [--no-batch]");
             eprintln!("                 explores the description's [sweep] space (see docs/dse.md)");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
             eprintln!("                 --profile (span profile table) | --trace-out <path> (Chrome trace JSON)");
@@ -439,7 +439,7 @@ fn compare(args: &[String]) -> Result<()> {
 fn dse(args: &[String], g: &GlobalOpts) -> Result<()> {
     anyhow::ensure!(
         !args.is_empty(),
-        "dse --arch-file <path> --network-file <path> [--keep-frac F] [--sweep-cap N]\n\
+        "dse --arch-file <path> --network-file <path> [--keep-frac F] [--sweep-cap N] [--no-batch]\n\
          dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]"
     );
     if args.iter().any(|a| a == "--arch-file") {
@@ -454,6 +454,7 @@ fn dse_generic(args: &[String], g: &GlobalOpts) -> Result<()> {
     let mut network: Option<String> = None;
     let mut keep = 1.0f64;
     let mut cap: Option<usize> = None;
+    let mut batch = true;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -479,6 +480,12 @@ fn dse_generic(args: &[String], g: &GlobalOpts) -> Result<()> {
                 cap = Some(parse_count_flag("--sweep-cap", &args[i + 1], i64::MAX as u64)?);
                 i += 2;
             }
+            "--no-batch" => {
+                // per-candidate accurate pass (bit-identical; for perf
+                // comparison against the lane-batched dispatch)
+                batch = false;
+                i += 1;
+            }
             other if !other.starts_with("--") && network.is_none() => {
                 network = Some(other.to_string());
                 i += 1;
@@ -495,7 +502,7 @@ fn dse_generic(args: &[String], g: &GlobalOpts) -> Result<()> {
     let net = coordinator::resolve_network(&network)?;
     let pool = Pool::new(g.workers);
     let backend = RooflineBackend::auto();
-    let opts = SweepOptions { keep_frac: keep, ..Default::default() };
+    let opts = SweepOptions { keep_frac: keep, batch, ..Default::default() };
     let outcome =
         explore_space(&space, &net, &opts, &pool, &backend, EstimationEngine::global())?;
 

@@ -61,6 +61,14 @@ pub mod counters {
     pub static AIDG_NODES: Counter = Counter::new("aidg.nodes");
     /// Loop-kernel iterations evaluated by any evaluator.
     pub static AIDG_ITERATIONS: Counter = Counter::new("aidg.iterations");
+    /// Digest-group batches driven by the lane-batched evaluator.
+    pub static AIDG_BATCH_GROUPS: Counter = Counter::new("aidg.batch.groups");
+    /// Lanes submitted to the lane-batched evaluator (avg lanes per batch =
+    /// `aidg.batch.lanes / aidg.batch.groups`).
+    pub static AIDG_BATCH_LANES: Counter = Counter::new("aidg.batch.lanes");
+    /// Lanes evicted from a batch to the serial path (divergence:
+    /// digest/route/partition mismatch).
+    pub static AIDG_BATCH_EVICTIONS: Counter = Counter::new("aidg.batch.evictions");
 
     /// One layer estimation's evaluator accounting, in one call.
     pub fn note_aidg(nodes: u64, iterations: u64) {
@@ -90,6 +98,9 @@ pub mod counters {
             &DSE_POINTS_ESTIMATED,
             &AIDG_NODES,
             &AIDG_ITERATIONS,
+            &AIDG_BATCH_GROUPS,
+            &AIDG_BATCH_LANES,
+            &AIDG_BATCH_EVICTIONS,
         ]
         .iter()
         .map(|c| (c.name(), c.get()))
@@ -282,8 +293,9 @@ mod tests {
         counters::ENGINE_REQUESTS.add(1);
         assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
         let snap = counters::snapshot();
-        assert_eq!(snap.len(), 10);
+        assert_eq!(snap.len(), 13);
         assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
+        assert!(snap.iter().any(|(n, _)| *n == "aidg.batch.lanes"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.enumerated"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.prefiltered"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.estimated"));

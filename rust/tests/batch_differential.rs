@@ -1,0 +1,295 @@
+//! Differential properties of the lane-batched evaluator (ISSUE 7).
+//!
+//! The batch contract is *bit-identity*: for every lane,
+//! `estimate_layer_batch` must produce a [`LayerEstimate`] whose every
+//! numeric field equals what serial `estimate_layer` returns for that lane
+//! alone — including lanes the batch evicts (digest mismatch at
+//! construction, route-template mismatch, address-partition divergence),
+//! which transparently fall back to the serial path. On top of the layer
+//! level, the engine's `estimate_batch` must mirror a sequential
+//! per-candidate schedule (same cycles, same hit/dedup accounting), and a
+//! DSE sweep must produce identical cycles with batching on and off.
+
+use acadl_perf::acadl::text::ast::{Span, Spanned, Sweep, SweepDim, SweepItem};
+use acadl_perf::acadl::text::{parse, PExpr};
+use acadl_perf::acadl::{Diagram, Latency};
+use acadl_perf::accel::SystolicConfig;
+use acadl_perf::aidg::{
+    estimate_layer, estimate_layer_batch, FixedPointConfig, LayerEstimate,
+};
+use acadl_perf::coordinator::{self, Arch, Pool, RooflineBackend};
+use acadl_perf::dse::{explore_space, SweepOptions, SweepSpace};
+use acadl_perf::engine::EstimationEngine;
+use acadl_perf::ids::{OpId, RegId};
+use acadl_perf::isa::LoopKernel;
+
+/// Scalar machine with two address-disjoint memories (so a kernel can make
+/// its addresses migrate between them — the partition-divergence case) and
+/// an expression ALU latency (the dynamic-latency path).
+fn machine(imem_read_lat: u64) -> (Diagram, Ops) {
+    let mut d = Diagram::new("m");
+    let (_im, ifs) = d.add_fetch("imem", imem_read_lat, 2, "ifs", 1, 4);
+    let es = d.add_execute_stage("es");
+    let (rf, regs) = d.add_regfile("rf", "r", 4);
+    let m0 = d.add_memory("dmem0", 4, 4, 1, 2, 0, 4096);
+    let m1 = d.add_memory("dmem1", 4, 4, 1, 1, 4096, 4096);
+    let lsu = d.add_fu(es, "lsu", Latency::Fixed(1), &["load", "store"]);
+    let alu = d.add_fu(es, "alu", Latency::parse("1 + imm0 % 2").unwrap(), &["mac"]);
+    d.forward(ifs, es);
+    d.fu_writes(lsu, rf);
+    d.fu_reads(lsu, rf);
+    d.fu_reads(alu, rf);
+    d.fu_writes(alu, rf);
+    d.mem_reads(lsu, m0);
+    d.mem_writes(lsu, m0);
+    d.mem_reads(lsu, m1);
+    d.mem_writes(lsu, m1);
+    let ops = Ops { load: d.op("load"), mac: d.op("mac"), store: d.op("store"), regs };
+    d.finalize().unwrap();
+    (d, ops)
+}
+
+struct Ops {
+    load: OpId,
+    mac: OpId,
+    store: OpId,
+    regs: Vec<RegId>,
+}
+
+/// A 4-instruction kernel whose addresses stride a window at `base` and
+/// whose ALU immediate cycles mod `imm_mod` (lane-varying operands over the
+/// digest-shared structure).
+fn kernel(ops: &Ops, label: &str, k: u64, base: u64, imm_mod: u64) -> LoopKernel {
+    let (load, mac, store) = (ops.load, ops.mac, ops.store);
+    let (r0, r1, r2) = (ops.regs[0], ops.regs[1], ops.regs[2]);
+    LoopKernel::new(
+        label,
+        k,
+        4,
+        Box::new(move |it, buf| {
+            buf.instr(load).writes(&[r0]).read_mem(&[base + it % 64]).imm((it % 3) as i64);
+            buf.instr(load).writes(&[r1]).read_mem(&[1024 + it % 64]);
+            buf.instr(mac).reads(&[r0, r1]).writes(&[r2]).imm((it % imm_mod) as i64);
+            buf.instr(store).reads(&[r2]).write_mem(&[2048 + it % 64]);
+        }),
+    )
+}
+
+/// Field-by-field bit-identity. `runtime` (wall clock) is the only excluded
+/// field; `trace` is compared because both paths honor `keep_trace`.
+fn assert_bit_identical(batched: &LayerEstimate, serial: &LayerEstimate, ctx: &str) {
+    assert_eq!(batched.label, serial.label, "{ctx}: label");
+    assert_eq!(batched.k, serial.k, "{ctx}: k");
+    assert_eq!(batched.insts_per_iter, serial.insts_per_iter, "{ctx}: insts_per_iter");
+    assert_eq!(batched.cycles, serial.cycles, "{ctx}: cycles");
+    assert_eq!(batched.evaluated_iters, serial.evaluated_iters, "{ctx}: evaluated_iters");
+    assert_eq!(batched.k_block, serial.k_block, "{ctx}: k_block");
+    assert_eq!(batched.k_prolog, serial.k_prolog, "{ctx}: k_prolog");
+    assert_eq!(batched.dt_iteration, serial.dt_iteration, "{ctx}: dt_iteration");
+    assert_eq!(batched.dt_overlap, serial.dt_overlap, "{ctx}: dt_overlap");
+    assert_eq!(batched.used_fallback, serial.used_fallback, "{ctx}: used_fallback");
+    assert_eq!(batched.whole_graph, serial.whole_graph, "{ctx}: whole_graph");
+    assert_eq!(batched.nodes, serial.nodes, "{ctx}: nodes");
+    assert_eq!(
+        batched.peak_state_bytes, serial.peak_state_bytes,
+        "{ctx}: peak_state_bytes"
+    );
+    assert_eq!(batched.trace.is_some(), serial.trace.is_some(), "{ctx}: trace presence");
+}
+
+#[test]
+fn batched_group_is_bit_identical_to_serial() {
+    // every lane gets its *own* identically-built diagram: digest equality,
+    // not pointer equality, is what admits a lane
+    let builds: Vec<(Diagram, Ops)> = (0..5).map(|_| machine(1)).collect();
+    let kernels: Vec<LoopKernel> = vec![
+        // k=2 with kb=1 → whole graph; large k with a constant span →
+        // fixed point; oscillating imm latency → stability is harder
+        kernel(&builds[0].1, "whole", 2, 0, 2),
+        kernel(&builds[1].1, "tiny", 13, 8, 2),
+        kernel(&builds[2].1, "steady", 300, 16, 1),
+        kernel(&builds[3].1, "long", 4000, 128, 2),
+        kernel(&builds[4].1, "steady2", 300, 512, 5),
+    ];
+    let lanes: Vec<(&Diagram, &LoopKernel)> =
+        builds.iter().zip(&kernels).map(|((d, _), k)| (d, k)).collect();
+    let cfg = FixedPointConfig::default();
+    let outcome = estimate_layer_batch(&lanes, &cfg).unwrap();
+    assert_eq!(outcome.estimates.len(), 5);
+    assert_eq!(outcome.evicted, 0, "digest-equal lanes must not evict");
+    for (i, ((d, _), k)) in builds.iter().zip(&kernels).enumerate() {
+        let serial = estimate_layer(d, k, &cfg).unwrap();
+        assert_bit_identical(&outcome.estimates[i], &serial, &k.label);
+    }
+    // the mix covers both estimator exits at least
+    assert!(outcome.estimates[0].whole_graph, "k=2 must evaluate whole");
+    assert!(!outcome.estimates[3].whole_graph, "k=4000 must not evaluate whole");
+}
+
+#[test]
+fn divergent_lanes_are_evicted_and_still_bit_identical() {
+    let builds: Vec<(Diagram, Ops)> = (0..4).map(|_| machine(1)).collect();
+    // a structurally different machine (slower instruction memory):
+    // different content digest → construction-time eviction
+    let (d_odd, ops_odd) = machine(3);
+
+    let (load, store) = (builds[1].1.load, builds[1].1.store);
+    let (r0, r1, r2) = (builds[1].1.regs[0], builds[1].1.regs[1], builds[1].1.regs[2]);
+    // route divergence: instruction 2 is a load (lsu) instead of a mac
+    // (alu) — same insts_per_iter, different route template at offset 2
+    let k_route = LoopKernel::new(
+        "route-mismatch",
+        200,
+        4,
+        Box::new(move |it, buf| {
+            buf.instr(load).writes(&[r0]).read_mem(&[it % 64]).imm(0);
+            buf.instr(load).writes(&[r1]).read_mem(&[1024 + it % 64]);
+            buf.instr(load).writes(&[r2]).read_mem(&[3000 + it % 64]);
+            buf.instr(store).reads(&[r2]).write_mem(&[2048 + it % 64]);
+        }),
+    );
+    // partition divergence: the first load's address migrates from dmem0
+    // into dmem1's range at iteration 32 — after the program lowered its
+    // address→memory partition from iteration 0
+    let (load2, mac2, store2) = (builds[2].1.load, builds[2].1.mac, builds[2].1.store);
+    let (s0, s1, s2) = (builds[2].1.regs[0], builds[2].1.regs[1], builds[2].1.regs[2]);
+    let k_part = LoopKernel::new(
+        "partition-migrates",
+        200,
+        4,
+        Box::new(move |it, buf| {
+            let a = if it < 32 { 100 + it % 8 } else { 5000 + it % 8 };
+            buf.instr(load2).writes(&[s0]).read_mem(&[a]).imm(0);
+            buf.instr(load2).writes(&[s1]).read_mem(&[1024 + it % 64]);
+            buf.instr(mac2).reads(&[s0, s1]).writes(&[s2]).imm((it % 2) as i64);
+            buf.instr(store2).reads(&[s2]).write_mem(&[2048 + it % 64]);
+        }),
+    );
+    let k0 = kernel(&builds[0].1, "conforming", 200, 0, 2);
+    let k_odd = kernel(&ops_odd, "digest-mismatch", 200, 64, 2);
+
+    let lanes: Vec<(&Diagram, &LoopKernel)> = vec![
+        (&builds[0].0, &k0),
+        (&builds[1].0, &k_route),
+        (&builds[2].0, &k_part),
+        (&d_odd, &k_odd),
+    ];
+    let cfg = FixedPointConfig::default();
+    let outcome = estimate_layer_batch(&lanes, &cfg).unwrap();
+    assert_eq!(outcome.estimates.len(), 4);
+    assert_eq!(
+        outcome.evicted, 3,
+        "route mismatch, partition migration and digest mismatch must all evict"
+    );
+    for (i, (d, k)) in lanes.iter().enumerate() {
+        let serial = estimate_layer(d, k, &cfg).unwrap();
+        assert_bit_identical(&outcome.estimates[i], &serial, &k.label);
+    }
+}
+
+#[test]
+fn singleton_batch_and_kept_traces_match_serial() {
+    let (d, ops) = machine(1);
+    let k = kernel(&ops, "solo", 500, 0, 3);
+    let cfg = FixedPointConfig { keep_trace: true, ..Default::default() };
+    let outcome = estimate_layer_batch(&[(&d, &k)], &cfg).unwrap();
+    assert_eq!(outcome.estimates.len(), 1);
+    assert_eq!(outcome.evicted, 0);
+    let serial = estimate_layer(&d, &k, &cfg).unwrap();
+    assert_bit_identical(&outcome.estimates[0], &serial, "solo");
+    assert_eq!(
+        outcome.estimates[0].trace, serial.trace,
+        "kept traces must be identical iteration-for-iteration"
+    );
+}
+
+#[test]
+fn engine_batch_matches_sequential_engine() {
+    // two digest-equal candidates plus one digest-different one: the batch
+    // path must reproduce a *sequential* shared-cache schedule exactly —
+    // cycles and hit/dedup accounting both
+    let archs = [
+        Arch::Systolic(SystolicConfig::new(2, 2)),
+        Arch::Systolic(SystolicConfig::new(2, 2)),
+        Arch::Systolic(SystolicConfig::new(2, 3)),
+    ];
+    let net = coordinator::resolve_network("tc_resnet8").unwrap();
+    let fp = FixedPointConfig::default();
+    let pool = Pool::new(2);
+
+    let batch_engine = EstimationEngine::new(1 << 12);
+    let refs: Vec<&Arch> = archs.iter().collect();
+    let batched = batch_engine.estimate_batch(&refs, &net, &fp, &pool).unwrap();
+
+    let seq_engine = EstimationEngine::new(1 << 12);
+    let sequential: Vec<_> = archs
+        .iter()
+        .map(|a| seq_engine.estimate_network_pooled(a, &net, &fp, &pool).unwrap())
+        .collect();
+
+    assert_eq!(batched.len(), 3);
+    for (lane, (b, s)) in batched.iter().zip(&sequential).enumerate() {
+        assert_eq!(b.arch, s.arch, "lane {lane}: arch label");
+        assert_eq!(b.total_cycles(), s.total_cycles(), "lane {lane}: cycles");
+        assert_eq!(b.layer_cycles(), s.layer_cycles(), "lane {lane}: per-layer cycles");
+        assert_eq!(b.stats.total_kernels, s.stats.total_kernels, "lane {lane}");
+        assert_eq!(b.stats.unique_kernels, s.stats.unique_kernels, "lane {lane}");
+        assert_eq!(b.stats.cache_hits, s.stats.cache_hits, "lane {lane}");
+        assert_eq!(b.stats.deduped, s.stats.deduped, "lane {lane}");
+        assert_eq!(b.stats.evaluated, s.stats.evaluated, "lane {lane}");
+    }
+    // the digest-equal twin must have been served from lane 0's work
+    assert!(batched[1].stats.cache_hits > 0, "{:?}", batched[1].stats);
+    assert_eq!(batched[1].stats.evaluated, 0, "{:?}", batched[1].stats);
+}
+
+/// `arch/plasticine_3x6.toml` with a 4-point sweep: `tile` is
+/// digest-neutral, so rows×cols fixes two digest groups of two lanes each.
+fn small_plasticine_space() -> SweepSpace {
+    let src = std::fs::read_to_string("arch/plasticine_3x6.toml").unwrap();
+    let mut desc = parse(&src).unwrap();
+    let dim = |name: &str, values: &[i64]| SweepDim {
+        name: Spanned::bare(name.to_string()),
+        items: values.iter().map(|&v| SweepItem::Scalar(PExpr::Const(v))).collect(),
+        span: Span::default(),
+    };
+    desc.sweep = Some(Sweep {
+        dims: vec![dim("rows", &[2]), dim("cols", &[2, 4]), dim("tile", &[8, 16])],
+        when: None,
+        cap: None,
+        span: Span::default(),
+    });
+    SweepSpace::from_description(desc, "batch-diff", None).unwrap()
+}
+
+#[test]
+fn dse_sweep_cycles_match_with_and_without_batching() {
+    let space = small_plasticine_space();
+    assert_eq!(space.len_bound(), 4);
+    let net = coordinator::resolve_network("tc_resnet8").unwrap();
+    let pool = Pool::new(2);
+    let run = |batch: bool| {
+        let engine = EstimationEngine::new(1 << 12);
+        explore_space(
+            &space,
+            &net,
+            &SweepOptions { keep_frac: 1.0, batch, ..Default::default() },
+            &pool,
+            &RooflineBackend::Native,
+            &engine,
+        )
+        .unwrap()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.estimated, 4);
+    assert_eq!(off.estimated, 4);
+    let cycles = |o: &acadl_perf::dse::SweepOutcome| -> Vec<(String, Option<u64>)> {
+        let mut v: Vec<_> =
+            o.points.iter().map(|p| (p.label.clone(), p.aidg_cycles)).collect();
+        v.sort();
+        v
+    };
+    assert_eq!(cycles(&on), cycles(&off), "batching must never change results");
+    assert!(on.points.iter().all(|p| p.aidg_cycles.is_some()));
+}

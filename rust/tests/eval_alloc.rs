@@ -9,20 +9,24 @@
 //! and capacity growth, then evaluates thousands more iterations and
 //! asserts the allocation counter did not move.
 //!
-//! The audit runs **twice in one test**: once with the `obs` tracing layer
-//! disabled and once enabled (span open/drop, histogram observe, ring
-//! record). Tracing warmup — name interning, histogram registration, the
-//! global ring's one-time construction — happens inside the warmup window,
-//! so the enabled steady state must also be allocation-free. Both phases
-//! share one test function deliberately: the allocation counter is
-//! process-global, and a second parallel test (or even the harness
-//! spawning its thread) would pollute the measurement window.
+//! The audit runs **three phases in one test**: once with the `obs` tracing
+//! layer disabled, once enabled (span open/drop, histogram observe, ring
+//! record), and once through the lane-batched evaluator
+//! ([`BatchEvaluator`]) — whose SoA hot path (shared program walk, laned
+//! address plane, ring matrix) must be just as allocation-free per
+//! iteration as the serial path it transcribes. Tracing warmup — name
+//! interning, histogram registration, the global ring's one-time
+//! construction — happens inside the warmup window, so the enabled steady
+//! state must also be allocation-free. All phases share one test function
+//! deliberately: the allocation counter is process-global, and a second
+//! parallel test (or even the harness spawning its thread) would pollute
+//! the measurement window.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use acadl_perf::acadl::{Diagram, Latency};
-use acadl_perf::aidg::Evaluator;
+use acadl_perf::aidg::{BatchEvaluator, Evaluator};
 use acadl_perf::isa::LoopKernel;
 
 struct CountingAlloc;
@@ -153,4 +157,61 @@ fn steady_state_iterations_do_not_allocate() {
          ({} allocations in 4096 iterations with tracing on)",
         after - before
     );
+
+    // ---- phase 3: lane-batched evaluator ----
+    // three digest-equal lanes over separately built diagrams, kernels
+    // differing only in their address windows and immediates
+    let lane_kernel = |ops: &Ops, base: u64, imm_mod: u64| -> LoopKernel {
+        let (load, mac, store) = (ops.load, ops.mac, ops.store);
+        let (r0, r1, r2) = (ops.regs[0], ops.regs[1], ops.regs[2]);
+        LoopKernel::new(
+            "b",
+            1 << 20,
+            4,
+            Box::new(move |it, buf| {
+                buf.instr(load)
+                    .writes(&[r0])
+                    .read_mem(&[base + it % 256])
+                    .imm((it % 3) as i64);
+                buf.instr(load).writes(&[r1]).read_mem(&[1024 + it % 256]);
+                buf.instr(mac).reads(&[r0, r1]).writes(&[r2]).imm((it % imm_mod) as i64);
+                buf.instr(store).reads(&[r2]).write_mem(&[2048 + it % 256]);
+            }),
+        )
+    };
+    let builds: Vec<(Diagram, Ops)> = (0..3).map(|_| machine()).collect();
+    let kernels: Vec<LoopKernel> = vec![
+        lane_kernel(&builds[0].1, 0, 2),
+        lane_kernel(&builds[1].1, 256, 3),
+        lane_kernel(&builds[2].1, 512, 2),
+    ];
+    let lanes: Vec<(&Diagram, &LoopKernel)> =
+        builds.iter().zip(&kernels).map(|((d, _), k)| (d, k)).collect();
+    let mut batch = BatchEvaluator::new(&lanes);
+    assert_eq!(batch.live_lanes(), 3, "digest-equal lanes must all be live");
+    // warmup: lowering, route verification, page/ring/arena capacity
+    // growth across every lane; the address windows cycle mod 256, so the
+    // warmup touches every laned page the steady state will ever see
+    batch.run(0..256).unwrap();
+    batch.reserve(16384);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    batch.run(256..4096).unwrap();
+    let after = ALLOCS.load(Ordering::SeqCst);
+
+    for lane in 0..3 {
+        assert_eq!(batch.iter_stats(lane).len(), 4096);
+    }
+    assert_eq!(
+        after - before,
+        0,
+        "batched steady-state evaluation must not allocate \
+         ({} allocations in 3840 iterations across 3 lanes)",
+        after - before
+    );
+    // sanity: every lane actually did work, and no lane diverged
+    assert_eq!(batch.evictions(), 0);
+    for lane in 0..3 {
+        assert!(batch.dt_aidg(lane) > 4096);
+    }
 }
