@@ -5,9 +5,11 @@
 //! `BENCH_engine.json` (cold/warm wall-times, hit rates) and
 //! `BENCH_dse.json` (points/sec, pre-filter survival, cross-candidate warm
 //! hit rate, and the lane-batched sweep's `batch_nodes_per_sec` /
-//! `avg_lanes` / `divergence_rate`) so future PRs have a perf trajectory.
-//! `--smoke` runs the evaluator and DSE phases only (CI's artifact-shape
-//! check covers both emitted files).
+//! `avg_lanes` / `divergence_rate`), and `BENCH_accuracy.json` (raw vs
+//! calibrated MAPE + CI coverage on a seeded train/held-out corpus — the
+//! input to CI's hard accuracy gate) so future PRs have a perf trajectory.
+//! `--smoke` runs the evaluator, DSE, and accuracy phases only (CI's
+//! artifact-shape checks cover all three emitted files).
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -152,11 +154,13 @@ fn bench_eval(iter_cap: u64, nets: &[&str]) {
 
 fn main() {
     if smoke() {
-        // CI's fast pass: emit + shape-check the evaluator and DSE
-        // artifacts (the DSE phase is the only producer of the lane-batched
-        // throughput record, so smoke must run it too)
+        // CI's fast pass: emit + shape-check the evaluator, DSE, and
+        // accuracy artifacts (the DSE phase is the only producer of the
+        // lane-batched throughput record, and the accuracy gate needs
+        // BENCH_accuracy.json, so smoke must run all three)
         bench_eval(500, &["tc_resnet8"]);
         bench_dse();
+        bench_accuracy();
         return;
     }
     bench_eval(20_000, &["tc_resnet8", "efficientnet_reduced"]);
@@ -267,6 +271,86 @@ fn main() {
     print!("{}", acadl_perf::report::profile(&acadl_perf::obs::snapshot()).to_markdown());
 
     bench_dse();
+    bench_accuracy();
+}
+
+/// The accuracy phase: train the stacked calibration model on a seeded
+/// (machine × kernel) corpus, then score raw AIDG vs calibrated estimates
+/// against the DES on a *held-out* corpus — same machines, disjoint kernel
+/// seed — and prove the model threads through the engine. Emitted as
+/// `BENCH_accuracy.json`, which CI gates hard: calibration must not make
+/// estimates worse, and the confidence bounds must actually cover the DES.
+/// Every seed is pinned, so the gate is deterministic.
+fn bench_accuracy() {
+    use acadl_perf::calib::{self, SampleSpec};
+
+    section("perf — accuracy: raw vs calibrated MAPE, train + held-out (BENCH_accuracy.json)");
+    let train_spec = SampleSpec::default();
+    let holdout_spec = SampleSpec { kernel_seed: 0xD0_7E57, ..train_spec };
+    let (model, corpus) = calib::train_from_spec(&train_spec).expect("calibration training");
+    let train_acc = calib::evaluate(&model, &corpus.samples);
+    let holdout =
+        calib::sample_corpus(&holdout_spec).expect("held-out corpus (same machines, new kernels)");
+    let holdout_acc = calib::evaluate(&model, &holdout.samples);
+    println!(
+        "  train:   {} samples, raw MAPE {:.2}% -> calibrated {:.2}%, coverage {:.1}%",
+        train_acc.samples,
+        train_acc.raw_mape,
+        train_acc.calibrated_mape,
+        train_acc.ci_coverage * 100.0
+    );
+    println!(
+        "  holdout: {} samples, raw MAPE {:.2}% -> calibrated {:.2}%, coverage {:.1}%",
+        holdout_acc.samples,
+        holdout_acc.raw_mape,
+        holdout_acc.calibrated_mape,
+        holdout_acc.ci_coverage * 100.0
+    );
+
+    // engine-threading proof: a calibrated engine must stamp whole-network
+    // estimates (the serve/CLI surface reads exactly these accessors)
+    let engine = EstimationEngine::new(DEFAULT_CACHE_CAP);
+    engine.set_calibration(Some(Arc::new(model.clone())));
+    let est = engine
+        .estimate_network(
+            &Arch::Gemmini(GemminiConfig::default()),
+            &zoo::tc_resnet8(),
+            &FixedPointConfig::default(),
+        )
+        .expect("calibrated engine estimate");
+    let engine_total =
+        est.calibrated_cycles().expect("calibrated cycles must thread through the engine");
+    let (ci_lo, ci_hi) = est.ci_bounds().expect("CI bounds must thread through the engine");
+
+    let acc_json = |a: &calib::Accuracy| {
+        format!(
+            "{{\n    \"samples\": {},\n    \"raw_mape\": {:.4},\n    \
+             \"calibrated_mape\": {:.4},\n    \"ci_coverage\": {:.4}\n  }}",
+            a.samples, a.raw_mape, a.calibrated_mape, a.ci_coverage
+        )
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"accuracy\",\n  \"machine_seed\": {},\n  \
+         \"train_kernel_seed\": {},\n  \"holdout_kernel_seed\": {},\n  \
+         \"machines\": {},\n  \"classes\": {},\n  \"train\": {},\n  \"holdout\": {},\n  \
+         \"engine\": {{\n    \"arch\": \"gemmini16\",\n    \"network\": \"tc_resnet8\",\n    \
+         \"calibrated_total\": {engine_total},\n    \"ci_lo\": {ci_lo},\n    \
+         \"ci_hi\": {ci_hi}\n  }}\n}}\n",
+        train_spec.machine_seed,
+        train_spec.kernel_seed,
+        holdout_spec.kernel_seed,
+        corpus.machines,
+        model.class_count(),
+        acc_json(&train_acc),
+        acc_json(&holdout_acc),
+    );
+    std::fs::write("BENCH_accuracy.json", &json).expect("writing BENCH_accuracy.json");
+    println!(
+        "  => holdout raw {:.2}% vs calibrated {:.2}%, coverage {:.1}% — wrote BENCH_accuracy.json",
+        holdout_acc.raw_mape,
+        holdout_acc.calibrated_mape,
+        holdout_acc.ci_coverage * 100.0
+    );
 }
 
 /// The DSE phase: `[sweep]` throughput with the pre-filter, cross-candidate

@@ -716,5 +716,8 @@ fn assemble(
         runtime: start.elapsed(),
         provenance: Provenance::Computed,
         trace: cfg.keep_trace.then(|| stats.to_vec()),
+        calibrated_cycles: None,
+        ci_lo: None,
+        ci_hi: None,
     }
 }

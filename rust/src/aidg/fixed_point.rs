@@ -96,6 +96,17 @@ pub struct LayerEstimate {
     pub provenance: Provenance,
     /// Per-iteration (min_enter, max_leave) when `keep_trace` is set.
     pub trace: Option<Vec<IterStat>>,
+    /// Corrected cycle estimate, stamped by the engine when a
+    /// [`crate::calib::CalibrationModel`] is installed; `None` otherwise
+    /// (estimators themselves never set it — calibration off is
+    /// bit-identical to a build without the subsystem).
+    pub calibrated_cycles: Option<u64>,
+    /// Lower confidence bound on the true (DES) cycles, from the
+    /// calibration class's residual band. Set together with
+    /// [`Self::calibrated_cycles`].
+    pub ci_lo: Option<u64>,
+    /// Upper confidence bound on the true (DES) cycles.
+    pub ci_hi: Option<u64>,
 }
 
 impl LayerEstimate {
@@ -175,6 +186,9 @@ pub fn estimate_layer(
             runtime: start.elapsed(),
             provenance: Provenance::Computed,
             trace: cfg.keep_trace.then_some(ev.iter_stats),
+            calibrated_cycles: None,
+            ci_lo: None,
+            ci_hi: None,
         }
     };
 
@@ -287,6 +301,9 @@ pub fn evaluate_whole(diagram: &Diagram, kernel: &LoopKernel) -> Result<LayerEst
         runtime: start.elapsed(),
         provenance: Provenance::Computed,
         trace: None,
+        calibrated_cycles: None,
+        ci_lo: None,
+        ci_hi: None,
     })
 }
 

@@ -1,0 +1,76 @@
+//! Feature extraction: the kernel/architecture descriptors the correction
+//! model is (piecewise-)linear in.
+//!
+//! Features are log-scaled (`log2(1 + x)`) — instruction counts and memory
+//! footprints span six orders of magnitude across the corpus, and the
+//! residual ratios the model predicts drift with *scale*, not with raw
+//! counts. The leading constant 1 term makes every linear fit affine.
+
+use crate::acadl::Diagram;
+use crate::aidg::LayerEstimate;
+use crate::isa::LoopKernel;
+
+/// Number of terms in the feature vector [`phi`].
+pub const PHI_DIM: usize = 6;
+
+/// Memory words read + written by one loop iteration of `kernel`
+/// (materializes the first iteration; the §6.3 template invariant makes it
+/// representative of every iteration).
+pub fn mem_accesses_per_iter(kernel: &LoopKernel) -> f64 {
+    kernel
+        .materialize(0..1)
+        .iter()
+        .map(|i| (i.read_addrs.len() + i.write_addrs.len()) as f64)
+        .sum()
+}
+
+/// Feature vector of one layer estimate on `d`: constant term, then
+/// log-scaled total instructions, instructions per iteration, memory
+/// accesses, FU count, and memory words.
+pub fn phi(e: &LayerEstimate, d: &Diagram, mem_accesses_per_iter: f64) -> [f64; PHI_DIM] {
+    phi_raw(
+        e.total_insts() as f64,
+        e.insts_per_iter as f64,
+        mem_accesses_per_iter * e.k as f64,
+        d.fu_count() as f64,
+        d.memory_words() as f64,
+    )
+}
+
+/// [`phi`] from raw feature values (the bench path carries features without
+/// keeping diagrams alive).
+pub fn phi_raw(
+    total_insts: f64,
+    insts_per_iter: f64,
+    mem_accesses: f64,
+    fu_count: f64,
+    mem_words: f64,
+) -> [f64; PHI_DIM] {
+    [1.0, lg(total_insts), lg(insts_per_iter), lg(mem_accesses), lg(fu_count), lg(mem_words)]
+}
+
+fn lg(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phi_is_log_scaled_with_affine_term() {
+        let p = phi_raw(0.0, 0.0, 0.0, 0.0, 0.0);
+        assert_eq!(p, [1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        let p = phi_raw(1023.0, 3.0, 7.0, 1.0, 15.0);
+        assert!((p[1] - 10.0).abs() < 1e-12);
+        assert!((p[2] - 2.0).abs() < 1e-12);
+        assert!((p[3] - 3.0).abs() < 1e-12);
+        assert!((p[4] - 1.0).abs() < 1e-12);
+        assert!((p[5] - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_inputs_clamp_to_zero() {
+        assert_eq!(phi_raw(-5.0, -1.0, -1.0, -1.0, -1.0), phi_raw(0.0, 0.0, 0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,93 @@
+//! Calibrated estimates with error bars — an ANNETTE-style stacked
+//! correction on top of the §6.3 AIDG estimator.
+//!
+//! The paper's headline claim is accuracy, and the repo's speed work (the
+//! precompiled-program evaluator, lane batching) keeps rewriting the hot
+//! path underneath it. This module keeps the claim checkable and *improves*
+//! on the raw estimator where it is systematically biased:
+//!
+//! 1. [`sample`] draws a representative corpus of (machine × kernel) pairs
+//!    — the paper architectures mapped over TC-ResNet8 plus seeded random
+//!    scalar machines from the testkit generator family — and prices every
+//!    pair through both the AIDG estimator and the independent
+//!    cycle-accurate DES ([`crate::sim`]), the in-repo stand-in for the
+//!    paper's RTL ground truth.
+//! 2. [`train`] fits a per-class *stacked correction* (ANNETTE's trick,
+//!    see PAPERS.md): samples are grouped by (architecture digest ×
+//!    estimator regime), and each class gets the best of four candidate
+//!    correction shapes — identity, a constant ratio, a piecewise-linear
+//!    function of log-instruction-count, or a ridge least-squares model
+//!    over the full feature vector — selected by 2-fold cross-validation
+//!    with a never-worse-than-identity guard.
+//! 3. [`model`] holds the fitted [`CalibrationModel`]: hierarchical class
+//!    lookup (exact class → estimator regime → global → identity),
+//!    multiplicative correction, and residual-quantile confidence bounds
+//!    `[ci_lo, ci_hi]` stamped onto [`crate::aidg::LayerEstimate`].
+//!
+//! The engine ([`crate::engine::EstimationEngine::set_calibration`])
+//! applies the model as a post-pass on the clones it hands out — cache
+//! entries are never stamped, and with no model installed every estimate is
+//! bit-identical to an uncalibrated build. `benches/perf_aidg.rs`'s
+//! accuracy phase retrains on a fixed seed, evaluates on a held-out kernel
+//! set, and emits `BENCH_accuracy.json`, which CI gates on raw/calibrated
+//! MAPE and interval coverage. `docs/accuracy.md` documents the model and
+//! the gate.
+
+pub mod features;
+pub mod model;
+pub mod sample;
+pub mod train;
+
+pub use model::{CalibrationModel, ClassModel, Correction, Mode};
+pub use sample::{paper_archs, sample_corpus, Corpus, SampleSpec};
+pub use train::{train, Sample};
+
+use crate::Result;
+
+/// Accuracy of a model over a sample set: raw-AIDG vs calibrated MAPE
+/// against the DES, and the fraction of DES cycle counts inside the
+/// reported `[ci_lo, ci_hi]` intervals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accuracy {
+    /// MAPE of the raw AIDG estimates against the DES (percent).
+    pub raw_mape: f64,
+    /// MAPE of the calibrated estimates against the DES (percent).
+    pub calibrated_mape: f64,
+    /// Fraction of DES cycle counts inside `[ci_lo, ci_hi]` (0..=1).
+    pub ci_coverage: f64,
+    /// Samples evaluated.
+    pub samples: usize,
+}
+
+/// Score `model` against a sample set (typically a held-out corpus drawn
+/// with a different kernel seed than the one it was trained on).
+pub fn evaluate(model: &CalibrationModel, samples: &[Sample]) -> Accuracy {
+    let mut des = Vec::with_capacity(samples.len());
+    let mut raw = Vec::with_capacity(samples.len());
+    let mut cal = Vec::with_capacity(samples.len());
+    let mut lo = Vec::with_capacity(samples.len());
+    let mut hi = Vec::with_capacity(samples.len());
+    for s in samples {
+        let cm = model.lookup(s.digest, s.mode);
+        let (c, l, h) = cm.predict(&s.phi, s.aidg.round() as u64);
+        des.push(s.des);
+        raw.push(s.aidg);
+        cal.push(c as f64);
+        lo.push(l as f64);
+        hi.push(h as f64);
+    }
+    Accuracy {
+        raw_mape: crate::metrics::mape(&des, &raw),
+        calibrated_mape: crate::metrics::mape(&des, &cal),
+        ci_coverage: crate::metrics::coverage(&des, &lo, &hi),
+        samples: samples.len(),
+    }
+}
+
+/// Sample a corpus with `spec`, train on it, and return both — the one-call
+/// path behind the CLI's `calibrate` subcommand and `--calibrate` flag.
+pub fn train_from_spec(spec: &SampleSpec) -> Result<(CalibrationModel, Corpus)> {
+    let corpus = sample_corpus(spec)?;
+    let model = train(&corpus.samples);
+    Ok((model, corpus))
+}

@@ -1,0 +1,447 @@
+//! The fitted calibration model: per-class corrections, residual bounds,
+//! hierarchical lookup, and a line-based text persistence format.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Context as _;
+
+use crate::acadl::Diagram;
+use crate::aidg::LayerEstimate;
+use crate::Result;
+
+use super::features::{mem_accesses_per_iter, phi, PHI_DIM};
+use crate::isa::LoopKernel;
+
+/// Estimator regime of a layer estimate — half of the calibration class
+/// key. The three §6.3 regimes have categorically different error shapes:
+/// whole-graph evaluation is exact by construction, fixed-point
+/// extrapolation carries the eq. 2 stride bias, and the fallback heuristic
+/// (eqs. 9–13) averages over oscillation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Mode {
+    /// All iterations evaluated (`whole_graph`).
+    Whole,
+    /// Fixed-point extrapolation (eq. 2).
+    Fixed,
+    /// Fallback heuristic (eqs. 9–13).
+    Fallback,
+}
+
+impl Mode {
+    /// The regime a layer estimate was produced under.
+    pub fn of(e: &LayerEstimate) -> Mode {
+        if e.whole_graph {
+            Mode::Whole
+        } else if e.used_fallback {
+            Mode::Fallback
+        } else {
+            Mode::Fixed
+        }
+    }
+
+    /// Stable serialization name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Whole => "whole",
+            Mode::Fixed => "fixed",
+            Mode::Fallback => "fallback",
+        }
+    }
+
+    /// Inverse of [`Mode::name`].
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s {
+            "whole" => Some(Mode::Whole),
+            "fixed" => Some(Mode::Fixed),
+            "fallback" => Some(Mode::Fallback),
+            _ => None,
+        }
+    }
+}
+
+/// Predicted ratios are clamped to this range — a fit extrapolated far
+/// outside its training support must not produce absurd corrections.
+const RATIO_CLAMP: (f64, f64) = (0.05, 20.0);
+
+/// A correction function mapping a feature vector to a multiplicative
+/// ratio: `calibrated = raw · predict(phi)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Correction {
+    /// No correction (ratio 1) — always a candidate, so calibration can
+    /// never be selected into something worse than the raw estimate on the
+    /// training set.
+    Identity,
+    /// A constant ratio (the class's median `DES / AIDG`).
+    Ratio(f64),
+    /// Piecewise-linear in `x = phi[1]` (log₂ total instructions): segment
+    /// `i` applies while `x ≤ cuts[i]`, the last segment is unbounded.
+    Piecewise {
+        /// Segment upper bounds in `x` (`lines.len() - 1` entries).
+        cuts: Vec<f64>,
+        /// Per-segment `(intercept, slope)`.
+        lines: Vec<(f64, f64)>,
+    },
+    /// Ridge least-squares over the full feature vector.
+    Linear([f64; PHI_DIM]),
+}
+
+impl Correction {
+    /// The multiplicative correction for a feature vector.
+    pub fn predict(&self, phi: &[f64; PHI_DIM]) -> f64 {
+        let r = match self {
+            Correction::Identity => 1.0,
+            Correction::Ratio(r) => *r,
+            Correction::Piecewise { cuts, lines } => {
+                let x = phi[1];
+                let mut i = 0;
+                while i < cuts.len() && x > cuts[i] {
+                    i += 1;
+                }
+                let (a, b) = lines[i];
+                a + b * x
+            }
+            Correction::Linear(w) => w.iter().zip(phi).map(|(w, p)| w * p).sum(),
+        };
+        r.clamp(RATIO_CLAMP.0, RATIO_CLAMP.1)
+    }
+}
+
+/// One class's fitted correction plus its residual band. `lo`/`hi` bound
+/// the ratio `DES / calibrated` observed in training (min/max with a safety
+/// margin, widened to include 1), so on the training set every DES value
+/// falls inside the emitted interval by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassModel {
+    /// The correction function.
+    pub correction: Correction,
+    /// Lower residual bound (`≤ 1`).
+    pub lo: f64,
+    /// Upper residual bound (`≥ 1`).
+    pub hi: f64,
+    /// Training samples behind the fit.
+    pub samples: usize,
+}
+
+/// The do-nothing class model: ratio 1, zero-width band.
+const IDENTITY: ClassModel =
+    ClassModel { correction: Correction::Identity, lo: 1.0, hi: 1.0, samples: 0 };
+
+impl ClassModel {
+    /// Calibrated cycles and `[ci_lo, ci_hi]` bounds for a raw estimate.
+    /// The interval always contains the calibrated point.
+    pub fn predict(&self, phi: &[f64; PHI_DIM], cycles: u64) -> (u64, u64, u64) {
+        let r = self.correction.predict(phi);
+        let cal = ((cycles as f64) * r).round().max(0.0) as u64;
+        let lo = ((cal as f64) * self.lo).floor() as u64;
+        let hi = ((cal as f64) * self.hi).ceil() as u64;
+        (cal, lo.min(cal), hi.max(cal))
+    }
+}
+
+/// The whole stacked correction model. Lookup is hierarchical: an exact
+/// (architecture digest × regime) class if the corpus had enough samples of
+/// it, else the regime-pooled model, else the global model, else identity —
+/// so an architecture the model has never seen degrades gracefully instead
+/// of failing.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationModel {
+    /// Exact (architecture digest, regime) classes.
+    pub classes: BTreeMap<(u64, Mode), ClassModel>,
+    /// Regime-pooled fallbacks for unseen architectures.
+    pub modes: BTreeMap<Mode, ClassModel>,
+    /// Last-resort model pooled over the whole corpus.
+    pub global: Option<ClassModel>,
+}
+
+impl CalibrationModel {
+    /// Number of exact (architecture, regime) classes.
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Hierarchical class lookup (exact → regime → global → identity).
+    pub fn lookup(&self, digest: u64, mode: Mode) -> &ClassModel {
+        self.classes
+            .get(&(digest, mode))
+            .or_else(|| self.modes.get(&mode))
+            .or(self.global.as_ref())
+            .unwrap_or(&IDENTITY)
+    }
+
+    /// Stamp `calibrated_cycles`/`ci_lo`/`ci_hi` onto a layer estimate
+    /// (`ma_per_iter` from [`mem_accesses_per_iter`], computed before the
+    /// kernel is moved into a worker on the pooled paths).
+    pub fn apply(&self, d: &Diagram, ma_per_iter: f64, e: &mut LayerEstimate) {
+        let p = phi(e, d, ma_per_iter);
+        let (cal, lo, hi) = self.lookup(d.content_digest(), Mode::of(e)).predict(&p, e.cycles);
+        e.calibrated_cycles = Some(cal);
+        e.ci_lo = Some(lo);
+        e.ci_hi = Some(hi);
+        crate::metrics::counters::CALIB_LAYERS.add(1);
+    }
+
+    /// [`Self::apply`] computing the per-iteration memory accesses from the
+    /// kernel directly (the serial engine path, where the kernel is still
+    /// at hand).
+    pub fn apply_kernel(&self, d: &Diagram, kern: &LoopKernel, e: &mut LayerEstimate) {
+        self.apply(d, mem_accesses_per_iter(kern), e);
+    }
+
+    /// Serialize to the `acadl-calib v1` line format (deterministic:
+    /// classes in `BTreeMap` order, floats via Rust's shortest round-trip
+    /// `Display`).
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("acadl-calib v1\n");
+        for ((digest, mode), cm) in &self.classes {
+            let _ = write!(out, "class {digest} {} ", mode.name());
+            write_class(&mut out, cm);
+        }
+        for (mode, cm) in &self.modes {
+            let _ = write!(out, "mode {} ", mode.name());
+            write_class(&mut out, cm);
+        }
+        if let Some(cm) = &self.global {
+            out.push_str("global ");
+            write_class(&mut out, cm);
+        }
+        out
+    }
+
+    /// Parse the [`Self::to_text`] format.
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut lines = src.lines().filter(|l| !l.trim().is_empty());
+        let header = lines.next().unwrap_or("");
+        if header.trim() != "acadl-calib v1" {
+            anyhow::bail!("calibration file: expected 'acadl-calib v1' header, got {header:?}");
+        }
+        let mut model = CalibrationModel::default();
+        for line in lines {
+            let mut toks = line.split_whitespace();
+            match toks.next() {
+                Some("class") => {
+                    let digest: u64 = next_num(&mut toks, "class digest")?;
+                    let mode = toks
+                        .next()
+                        .and_then(Mode::parse)
+                        .ok_or_else(|| anyhow::anyhow!("calibration file: bad mode in {line:?}"))?;
+                    model.classes.insert((digest, mode), parse_class(&mut toks, line)?);
+                }
+                Some("mode") => {
+                    let mode = toks
+                        .next()
+                        .and_then(Mode::parse)
+                        .ok_or_else(|| anyhow::anyhow!("calibration file: bad mode in {line:?}"))?;
+                    model.modes.insert(mode, parse_class(&mut toks, line)?);
+                }
+                Some("global") => {
+                    model.global = Some(parse_class(&mut toks, line)?);
+                }
+                Some(other) => {
+                    anyhow::bail!("calibration file: unknown record {other:?} in {line:?}")
+                }
+                None => {}
+            }
+        }
+        Ok(model)
+    }
+
+    /// Write the model to `path` in the text format.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing calibration model {}", path.display()))
+    }
+
+    /// Load a model persisted with [`Self::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calibration model {}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+fn write_class(out: &mut String, cm: &ClassModel) {
+    let _ = write!(out, "{} {} {} ", cm.samples, cm.lo, cm.hi);
+    match &cm.correction {
+        Correction::Identity => out.push_str("identity"),
+        Correction::Ratio(r) => {
+            let _ = write!(out, "ratio {r}");
+        }
+        Correction::Piecewise { cuts, lines } => {
+            let _ = write!(out, "pw {}", lines.len());
+            for c in cuts {
+                let _ = write!(out, " {c}");
+            }
+            for (a, b) in lines {
+                let _ = write!(out, " {a} {b}");
+            }
+        }
+        Correction::Linear(w) => {
+            out.push_str("lin");
+            for wi in w {
+                let _ = write!(out, " {wi}");
+            }
+        }
+    }
+    out.push('\n');
+}
+
+fn next_num<T: std::str::FromStr>(
+    toks: &mut std::str::SplitWhitespace<'_>,
+    what: &str,
+) -> Result<T> {
+    toks.next()
+        .and_then(|t| t.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("calibration file: missing/bad {what}"))
+}
+
+fn parse_class(toks: &mut std::str::SplitWhitespace<'_>, line: &str) -> Result<ClassModel> {
+    let samples: usize = next_num(toks, "sample count")?;
+    let lo: f64 = next_num(toks, "lo bound")?;
+    let hi: f64 = next_num(toks, "hi bound")?;
+    let correction = match toks.next() {
+        Some("identity") => Correction::Identity,
+        Some("ratio") => Correction::Ratio(next_num(toks, "ratio")?),
+        Some("pw") => {
+            let n: usize = next_num(toks, "segment count")?;
+            if n == 0 {
+                anyhow::bail!("calibration file: empty piecewise correction in {line:?}");
+            }
+            let mut cuts = Vec::with_capacity(n - 1);
+            for _ in 0..n - 1 {
+                cuts.push(next_num(toks, "piecewise cut")?);
+            }
+            let mut lines = Vec::with_capacity(n);
+            for _ in 0..n {
+                lines.push((next_num(toks, "intercept")?, next_num(toks, "slope")?));
+            }
+            Correction::Piecewise { cuts, lines }
+        }
+        Some("lin") => {
+            let mut w = [0.0; PHI_DIM];
+            for wi in &mut w {
+                *wi = next_num(toks, "linear weight")?;
+            }
+            Correction::Linear(w)
+        }
+        other => anyhow::bail!("calibration file: unknown correction {other:?} in {line:?}"),
+    };
+    Ok(ClassModel { correction, lo, hi, samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_falls_through_the_hierarchy() {
+        let mut m = CalibrationModel::default();
+        assert_eq!(m.lookup(1, Mode::Fixed), &IDENTITY);
+        m.global = Some(ClassModel {
+            correction: Correction::Ratio(2.0),
+            lo: 0.9,
+            hi: 1.1,
+            samples: 4,
+        });
+        assert_eq!(m.lookup(1, Mode::Fixed).correction, Correction::Ratio(2.0));
+        m.modes.insert(
+            Mode::Fixed,
+            ClassModel { correction: Correction::Ratio(3.0), lo: 0.9, hi: 1.1, samples: 4 },
+        );
+        assert_eq!(m.lookup(1, Mode::Fixed).correction, Correction::Ratio(3.0));
+        assert_eq!(m.lookup(1, Mode::Whole).correction, Correction::Ratio(2.0));
+        m.classes.insert(
+            (1, Mode::Fixed),
+            ClassModel { correction: Correction::Identity, lo: 1.0, hi: 1.0, samples: 4 },
+        );
+        assert_eq!(m.lookup(1, Mode::Fixed).correction, Correction::Identity);
+    }
+
+    #[test]
+    fn predict_interval_contains_the_point() {
+        let cm = ClassModel { correction: Correction::Ratio(1.5), lo: 0.8, hi: 1.3, samples: 9 };
+        let p = [1.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let (cal, lo, hi) = cm.predict(&p, 1000);
+        assert_eq!(cal, 1500);
+        assert!(lo <= cal && cal <= hi, "{lo} <= {cal} <= {hi}");
+        assert_eq!(lo, 1200);
+        assert_eq!(hi, 1950);
+    }
+
+    #[test]
+    fn piecewise_routes_by_log_instructions() {
+        let c = Correction::Piecewise {
+            cuts: vec![2.0, 4.0],
+            lines: vec![(1.0, 0.0), (2.0, 0.0), (0.0, 1.0)],
+        };
+        let at = |x: f64| c.predict(&[1.0, x, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(at(1.0), 1.0);
+        assert_eq!(at(2.0), 1.0); // boundary belongs to the left segment
+        assert_eq!(at(3.0), 2.0);
+        assert_eq!(at(5.0), 5.0);
+    }
+
+    #[test]
+    fn predict_clamps_extrapolated_ratios() {
+        let c = Correction::Linear([1000.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(c.predict(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0]), RATIO_CLAMP.1);
+        let c = Correction::Ratio(1e-9);
+        assert_eq!(c.predict(&[1.0, 0.0, 0.0, 0.0, 0.0, 0.0]), RATIO_CLAMP.0);
+    }
+
+    #[test]
+    fn text_roundtrip_is_exact() {
+        let mut m = CalibrationModel::default();
+        m.classes.insert(
+            (0xDEAD_BEEF, Mode::Fixed),
+            ClassModel {
+                correction: Correction::Piecewise {
+                    cuts: vec![10.25],
+                    lines: vec![(1.0125, -0.003), (0.97, 0.0001)],
+                },
+                lo: 0.8612345,
+                hi: 1.19999,
+                samples: 12,
+            },
+        );
+        m.classes.insert(
+            (1, Mode::Whole),
+            ClassModel { correction: Correction::Identity, lo: 1.0, hi: 1.0, samples: 40 },
+        );
+        m.modes.insert(
+            Mode::Fallback,
+            ClassModel {
+                correction: Correction::Linear([0.9, 0.01, -0.02, 0.0, 0.3, -0.125]),
+                lo: 0.5,
+                hi: 2.0,
+                samples: 33,
+            },
+        );
+        m.global = Some(ClassModel {
+            correction: Correction::Ratio(1.0625),
+            lo: 0.75,
+            hi: 1.25,
+            samples: 85,
+        });
+        let text = m.to_text();
+        let back = CalibrationModel::parse(&text).unwrap();
+        assert_eq!(back, m);
+        // serialization is deterministic
+        assert_eq!(back.to_text(), text);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(CalibrationModel::parse("").is_err());
+        assert!(CalibrationModel::parse("not-a-header\n").is_err());
+        assert!(CalibrationModel::parse("acadl-calib v1\nclass x fixed 1 1 1 identity\n").is_err());
+        assert!(CalibrationModel::parse("acadl-calib v1\nclass 1 bogus 1 1 1 identity\n").is_err());
+        assert!(CalibrationModel::parse("acadl-calib v1\nglobal 1 0.9 1.1 warp 3\n").is_err());
+        assert!(CalibrationModel::parse("acadl-calib v1\nwhat 1\n").is_err());
+        // truncated linear weights
+        assert!(CalibrationModel::parse("acadl-calib v1\nglobal 1 0.9 1.1 lin 1 2 3\n").is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! Representative (machine × kernel) corpus sampling — the Jung et al.
+//! performance-representatives idea (PAPERS.md): a small, seeded subset of
+//! kernels suffices to characterize an architecture's estimator error.
+//!
+//! Two sources feed the corpus:
+//!
+//! - **The paper architectures × TC-ResNet8**: each of the five builder
+//!   configurations is mapped over the zoo network and a seeded subset of
+//!   its DES-affordable kernels is priced through both estimator and DES.
+//! - **Random scalar machines**: the same generator family as the
+//!   `aidg_vs_des` differential property test — random fetch widths, FU
+//!   counts, latencies and memory ports — with random template kernels at
+//!   both whole-graph-sized and extrapolation-sized iteration counts.
+//!
+//! Machines derive from `machine_seed` only, kernels from `kernel_seed` —
+//! so a training corpus and a held-out corpus drawn with different kernel
+//! seeds cover the *same* machine population (same digests, so exact-class
+//! corrections transfer) on *disjoint* kernels.
+
+use crate::acadl::{Diagram, Latency};
+use crate::accel::{GemminiConfig, PlasticineConfig, SystolicConfig, UltraTrailConfig};
+use crate::aidg::{estimate_layer, FixedPointConfig};
+use crate::coordinator::Arch;
+use crate::ids::{OpId, RegId};
+use crate::isa::{Instruction, LoopKernel};
+use crate::sim::simulate;
+use crate::testkit::Rng;
+use crate::Result;
+
+use super::features::{mem_accesses_per_iter, phi};
+use super::model::Mode;
+use super::train::Sample;
+
+/// Corpus shape. The defaults match the CI accuracy gate; anything
+/// seed-like must stay fixed for the gate to be deterministic.
+#[derive(Debug, Clone)]
+pub struct SampleSpec {
+    /// Seed of the random-machine population (shared between a training
+    /// corpus and its held-out counterpart).
+    pub machine_seed: u64,
+    /// Seed of kernel generation/selection (varied to hold kernels out).
+    pub kernel_seed: u64,
+    /// Random scalar machines to generate.
+    pub random_machines: usize,
+    /// Random kernels per random machine (alternating small/large `k`).
+    pub kernels_per_machine: usize,
+    /// Kernels sampled per paper architecture from TC-ResNet8.
+    pub paper_kernels_per_arch: usize,
+    /// DES affordability cap: skip kernels above this instruction total.
+    pub max_kernel_insts: u64,
+}
+
+impl Default for SampleSpec {
+    fn default() -> Self {
+        Self {
+            machine_seed: 0xCA11B,
+            kernel_seed: 0x7EA1,
+            random_machines: 8,
+            kernels_per_machine: 4,
+            paper_kernels_per_arch: 5,
+            max_kernel_insts: 200_000,
+        }
+    }
+}
+
+/// A sampled corpus: paired observations plus provenance counts.
+#[derive(Debug, Clone, Default)]
+pub struct Corpus {
+    /// The paired (AIDG, DES) observations.
+    pub samples: Vec<Sample>,
+    /// Distinct machines observed (paper + random).
+    pub machines: usize,
+}
+
+/// The five paper-architecture configurations the corpus samples from —
+/// the same set the `aidg_vs_des` differential suite pins.
+pub fn paper_archs() -> Vec<Arch> {
+    vec![
+        Arch::Systolic(SystolicConfig::new(2, 2)),
+        Arch::Systolic(SystolicConfig::new(4, 4)),
+        Arch::UltraTrail(UltraTrailConfig::default()),
+        Arch::Gemmini(GemminiConfig::default()),
+        Arch::Plasticine(PlasticineConfig::new(2, 3, 8)),
+    ]
+}
+
+/// Draw a corpus per `spec`: deterministic given the seeds, including
+/// iteration order (sample order only affects cross-validation fold
+/// assignment, which is itself part of the pinned training procedure).
+pub fn sample_corpus(spec: &SampleSpec) -> Result<Corpus> {
+    let fp = FixedPointConfig::default();
+    let mut corpus = Corpus::default();
+
+    // --- paper architectures × TC-ResNet8 ---
+    let net = crate::dnn::zoo::tc_resnet8();
+    for (ai, arch) in paper_archs().iter().enumerate() {
+        let mapper = arch.mapper()?;
+        let d = mapper.diagram();
+        let digest = d.content_digest();
+        let mapped = mapper.map_network(&net)?;
+        let kernels: Vec<&LoopKernel> = mapped
+            .iter()
+            .filter(|ml| !ml.fused)
+            .flat_map(|ml| ml.kernels.iter())
+            .filter(|k| k.total_insts() <= spec.max_kernel_insts)
+            .collect();
+        if kernels.is_empty() {
+            continue;
+        }
+        corpus.machines += 1;
+        let want = spec.paper_kernels_per_arch.min(kernels.len());
+        let mut rng =
+            Rng::new(spec.kernel_seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(ai as u64 + 1));
+        let mut picked = std::collections::BTreeSet::new();
+        // over-draw to collect `want` distinct indices deterministically
+        for _ in 0..kernels.len() * 4 {
+            if picked.len() >= want {
+                break;
+            }
+            picked.insert(rng.range_usize(0, kernels.len() - 1));
+        }
+        for &i in &picked {
+            corpus.samples.push(observe(d, digest, kernels[i], &fp)?);
+        }
+    }
+
+    // --- random scalar machines × random template kernels ---
+    for m in 0..spec.random_machines {
+        let mut mrng = Rng::new(
+            spec.machine_seed.wrapping_add((m as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)),
+        );
+        let (d, ops, regs) = random_machine(&mut mrng);
+        let digest = d.content_digest();
+        corpus.machines += 1;
+        let mut krng = Rng::new(
+            spec.kernel_seed.wrapping_add((m as u64 + 1).wrapping_mul(0xD1B54A32D192ED03)),
+        );
+        for j in 0..spec.kernels_per_machine {
+            // alternate whole-graph-sized and extrapolation-sized kernels so
+            // both the Whole and the Fixed/Fallback regimes get samples
+            let kern = random_kernel(&mut krng, &ops, &regs, j % 2 == 1);
+            corpus.samples.push(observe(&d, digest, &kern, &fp)?);
+        }
+    }
+    Ok(corpus)
+}
+
+/// Price one kernel through the §6.3 estimator and the DES and package the
+/// pair as a training observation.
+fn observe(d: &Diagram, digest: u64, k: &LoopKernel, fp: &FixedPointConfig) -> Result<Sample> {
+    let e = estimate_layer(d, k, fp)?;
+    let des = simulate(d, k, 0..k.k)?.cycles;
+    Ok(Sample {
+        digest,
+        mode: Mode::of(&e),
+        phi: phi(&e, d, mem_accesses_per_iter(k)),
+        aidg: e.cycles as f64,
+        des: des as f64,
+    })
+}
+
+/// A random in-order scalar machine — the `aidg_vs_des` property-test
+/// generator family: random fetch port/buffer widths, 1–3 single-op FUs
+/// with random fixed latencies, one memory with random port widths.
+fn random_machine(rng: &mut Rng) -> (Diagram, Vec<OpId>, Vec<RegId>) {
+    let mut d = Diagram::new("calib-rand");
+    let p = rng.range_u32(1, 3);
+    let ib = rng.range_u32(1, 4).max(p);
+    let (_im, ifs) = d.add_fetch("imem", 1, p, "ifs", 1, ib);
+    let n_fu = rng.range_usize(1, 3);
+    let (rf, regs) = d.add_regfile("rf", "r", 6);
+    let mem = d.add_memory(
+        "m",
+        rng.range_u64(1, 4),
+        rng.range_u64(1, 4),
+        rng.range_u32(1, 2),
+        rng.range_u32(1, 2),
+        0,
+        1 << 20,
+    );
+    for i in 0..n_fu {
+        let es = d.add_execute_stage(&format!("es{i}"));
+        let fu = d.add_fu(
+            es,
+            &format!("fu{i}"),
+            Latency::Fixed(rng.range_u64(1, 3)),
+            &[&format!("op{i}"), &format!("ld{i}"), &format!("st{i}")],
+        );
+        d.forward(ifs, es);
+        d.fu_reads(fu, rf);
+        d.fu_writes(fu, rf);
+        d.mem_reads(fu, mem);
+        d.mem_writes(fu, mem);
+    }
+    let ops: Vec<OpId> = (0..n_fu)
+        .flat_map(|i| {
+            [d.op(&format!("op{i}")), d.op(&format!("ld{i}")), d.op(&format!("st{i}"))]
+        })
+        .collect();
+    d.finalize().unwrap();
+    (d, ops, regs)
+}
+
+/// A random template kernel over `ops`: 2–6 instruction prototypes in
+/// register/load/store modes. `big` kernels run enough iterations for the
+/// fixed-point extrapolation (or its fallback) to engage; small ones stay
+/// in the whole-graph regime.
+fn random_kernel(rng: &mut Rng, ops: &[OpId], regs: &[RegId], big: bool) -> LoopKernel {
+    let n_instr = rng.range_usize(2, 6);
+    let mut protos = Vec::new();
+    for _ in 0..n_instr {
+        let op = *rng.pick(ops);
+        let r1 = regs[rng.range_usize(0, regs.len() - 1)];
+        let r2 = regs[rng.range_usize(0, regs.len() - 1)];
+        let mode = rng.range_u32(0, 2);
+        protos.push((op, r1, r2, mode));
+    }
+    let k = if big { rng.range_u64(80, 400) } else { rng.range_u64(3, 40) };
+    LoopKernel::new(
+        "calib-rand",
+        k,
+        n_instr,
+        Box::new(move |it, buf| {
+            for (i, &(op, r1, r2, mode)) in protos.iter().enumerate() {
+                let mut instr = Instruction::new(op);
+                match mode {
+                    0 => instr = instr.reads(&[r1]).writes(&[r2]),
+                    1 => instr = instr.writes(&[r1]).read_mem(&[it * 8 + i as u64]),
+                    _ => instr = instr.reads(&[r1]).write_mem(&[4096 + it * 8 + i as u64]),
+                }
+                buf.push(instr);
+            }
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(kernel_seed: u64) -> SampleSpec {
+        SampleSpec {
+            kernel_seed,
+            random_machines: 3,
+            kernels_per_machine: 2,
+            paper_kernels_per_arch: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn corpus_is_deterministic_for_a_seed() {
+        let a = sample_corpus(&tiny_spec(0x7EA1)).unwrap();
+        let b = sample_corpus(&tiny_spec(0x7EA1)).unwrap();
+        assert!(!a.samples.is_empty());
+        assert_eq!(a.machines, b.machines);
+        assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn kernel_seed_varies_kernels_but_not_machines() {
+        let a = sample_corpus(&tiny_spec(0x7EA1)).unwrap();
+        let b = sample_corpus(&tiny_spec(0xB0B0)).unwrap();
+        let digests = |c: &Corpus| {
+            let mut ds: Vec<u64> = c.samples.iter().map(|s| s.digest).collect();
+            ds.dedup();
+            ds
+        };
+        // same machine population (class models transfer to the held-out set)
+        assert_eq!(digests(&a), digests(&b));
+        // but not the same observations
+        assert_ne!(a.samples, b.samples);
+    }
+}

@@ -1,0 +1,393 @@
+//! Fitting the stacked correction from paired (AIDG, DES) observations.
+//!
+//! Each class's correction is chosen from four candidate shapes by 2-fold
+//! cross-validation (even/odd sample split), then refit on the full class
+//! with a never-worse-than-identity guard: if the winner's in-sample error
+//! exceeds the raw estimator's, the class keeps the identity correction.
+//! Exact classes (every ratio exactly 1, e.g. the whole-graph regime on
+//! in-order machines) short-circuit to identity with a zero-width residual
+//! band, so calibrating an already-exact architecture changes nothing.
+
+use std::collections::BTreeMap;
+
+use super::features::PHI_DIM;
+use super::model::{CalibrationModel, ClassModel, Correction, Mode};
+
+/// One paired observation: an AIDG estimate and the DES ground truth for
+/// the same (machine, kernel), plus the features the correction may use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Architecture structural digest ([`crate::acadl::Diagram::content_digest`]).
+    pub digest: u64,
+    /// Estimator regime of the AIDG estimate.
+    pub mode: Mode,
+    /// Feature vector ([`super::features::phi`]).
+    pub phi: [f64; PHI_DIM],
+    /// Raw AIDG cycles.
+    pub aidg: f64,
+    /// DES ground-truth cycles.
+    pub des: f64,
+}
+
+impl Sample {
+    /// The correction target `DES / AIDG`.
+    pub fn ratio(&self) -> f64 {
+        self.des / self.aidg.max(1.0)
+    }
+}
+
+/// Exact classes need at least this many samples to get their own model;
+/// smaller groups fall through to the regime-pooled fit.
+const MIN_CLASS_SAMPLES: usize = 3;
+/// Safety margins widening the observed residual band: held-out kernels of
+/// the same class may sit slightly outside the training min/max.
+const LO_MARGIN: f64 = 0.90;
+const HI_MARGIN: f64 = 1.10;
+/// Ridge regularization of the linear candidate.
+const RIDGE_LAMBDA: f64 = 1e-6;
+
+/// Fit a [`CalibrationModel`] from a corpus: one model per exact class with
+/// enough samples, one per estimator regime, and one global fallback.
+pub fn train(samples: &[Sample]) -> CalibrationModel {
+    crate::metrics::counters::CALIB_SAMPLES.add(samples.len() as u64);
+    let mut by_class: BTreeMap<(u64, Mode), Vec<&Sample>> = BTreeMap::new();
+    let mut by_mode: BTreeMap<Mode, Vec<&Sample>> = BTreeMap::new();
+    for s in samples {
+        by_class.entry((s.digest, s.mode)).or_default().push(s);
+        by_mode.entry(s.mode).or_default().push(s);
+    }
+    let mut model = CalibrationModel::default();
+    for (key, group) in &by_class {
+        if group.len() >= MIN_CLASS_SAMPLES {
+            model.classes.insert(*key, fit_class(group));
+        }
+    }
+    for (mode, group) in &by_mode {
+        model.modes.insert(*mode, fit_class(group));
+    }
+    if !samples.is_empty() {
+        let all: Vec<&Sample> = samples.iter().collect();
+        model.global = Some(fit_class(&all));
+    }
+    model
+}
+
+/// Candidate correction shapes, simplest first (ties in cross-validation
+/// prefer the earlier candidate).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Cand {
+    Identity,
+    Ratio,
+    Piecewise,
+    Linear,
+}
+
+const CANDIDATES: [Cand; 4] = [Cand::Identity, Cand::Ratio, Cand::Piecewise, Cand::Linear];
+
+fn fit_class(group: &[&Sample]) -> ClassModel {
+    // exact classes stay exact: identity with a zero-width band, so
+    // calibrated == raw and ci_lo == ci_hi == cycles
+    if group.iter().all(|s| (s.ratio() - 1.0).abs() < 1e-12) {
+        return ClassModel {
+            correction: Correction::Identity,
+            lo: 1.0,
+            hi: 1.0,
+            samples: group.len(),
+        };
+    }
+
+    // 2-fold cross-validation over an even/odd index split
+    let fold_a: Vec<&Sample> = group.iter().step_by(2).copied().collect();
+    let fold_b: Vec<&Sample> = group.iter().skip(1).step_by(2).copied().collect();
+    let mut best = Cand::Identity;
+    let mut best_err = f64::INFINITY;
+    for cand in CANDIDATES {
+        let mut err_sum = 0.0;
+        let mut n = 0usize;
+        let mut feasible = true;
+        for (tr, te) in [(&fold_a, &fold_b), (&fold_b, &fold_a)] {
+            let Some(corr) = fit_candidate(cand, tr) else {
+                feasible = false;
+                break;
+            };
+            for s in te.iter() {
+                err_sum += pct_err(&corr, s);
+                n += 1;
+            }
+        }
+        if !feasible || n == 0 {
+            continue;
+        }
+        let err = err_sum / n as f64;
+        if err + 1e-9 < best_err {
+            best_err = err;
+            best = cand;
+        }
+    }
+
+    // refit the winner on the whole class; guard: never worse than identity
+    // in-sample
+    let corr = fit_candidate(best, group).unwrap_or(Correction::Identity);
+    let corr = if mean_err(&corr, group) <= mean_err(&Correction::Identity, group) {
+        corr
+    } else {
+        Correction::Identity
+    };
+
+    // residual band: min/max of DES / calibrated with safety margins,
+    // widened to include 1 so the interval always contains the point
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in group {
+        let cal = (s.aidg * corr.predict(&s.phi)).max(1.0);
+        let res = s.des / cal;
+        lo = lo.min(res);
+        hi = hi.max(res);
+    }
+    ClassModel {
+        correction: corr,
+        lo: (lo * LO_MARGIN).min(1.0),
+        hi: (hi * HI_MARGIN).max(1.0),
+        samples: group.len(),
+    }
+}
+
+/// Absolute percentage error of a corrected estimate against the DES.
+fn pct_err(corr: &Correction, s: &Sample) -> f64 {
+    let cal = s.aidg * corr.predict(&s.phi);
+    (cal - s.des).abs() / s.des.max(1.0)
+}
+
+fn mean_err(corr: &Correction, group: &[&Sample]) -> f64 {
+    if group.is_empty() {
+        return 0.0;
+    }
+    group.iter().map(|s| pct_err(corr, s)).sum::<f64>() / group.len() as f64
+}
+
+fn fit_candidate(cand: Cand, group: &[&Sample]) -> Option<Correction> {
+    match cand {
+        Cand::Identity => Some(Correction::Identity),
+        Cand::Ratio => {
+            if group.is_empty() {
+                return None;
+            }
+            let mut ratios: Vec<f64> = group.iter().map(|s| s.ratio()).collect();
+            ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let n = ratios.len();
+            let median = if n % 2 == 1 {
+                ratios[n / 2]
+            } else {
+                (ratios[n / 2 - 1] + ratios[n / 2]) / 2.0
+            };
+            Some(Correction::Ratio(median))
+        }
+        Cand::Piecewise => fit_piecewise(group),
+        Cand::Linear => fit_linear(group),
+    }
+}
+
+/// Up to three segments split at the terciles of `x = phi[1]`, each with
+/// its own least-squares line `ratio ≈ a + b·x`.
+fn fit_piecewise(group: &[&Sample]) -> Option<Correction> {
+    if group.len() < 6 {
+        return None;
+    }
+    let mut xs: Vec<(f64, f64)> = group.iter().map(|s| (s.phi[1], s.ratio())).collect();
+    xs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let n = xs.len();
+    let mut cuts = vec![xs[n / 3].0, xs[2 * n / 3].0];
+    cuts.dedup();
+    // route each point through the same rule `predict` uses
+    let seg_of = |x: f64| {
+        let mut i = 0;
+        while i < cuts.len() && x > cuts[i] {
+            i += 1;
+        }
+        i
+    };
+    let mut lines = Vec::with_capacity(cuts.len() + 1);
+    for seg in 0..=cuts.len() {
+        let pts: Vec<(f64, f64)> = xs.iter().copied().filter(|&(x, _)| seg_of(x) == seg).collect();
+        lines.push(line_fit(&pts));
+    }
+    Some(Correction::Piecewise { cuts, lines })
+}
+
+/// Least-squares line through `pts`; degenerate segments (under two points
+/// or zero x-variance) fall back to a flat mean-ratio line.
+fn line_fit(pts: &[(f64, f64)]) -> (f64, f64) {
+    if pts.is_empty() {
+        return (1.0, 0.0);
+    }
+    let n = pts.len() as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let sxx: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    if pts.len() < 2 || sxx < 1e-12 {
+        return (my, 0.0);
+    }
+    let sxy: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let b = sxy / sxx;
+    (my - b * mx, b)
+}
+
+/// Ridge least squares `(AᵀA + λI) w = Aᵀ r` over the full feature vector,
+/// solved by Gaussian elimination with partial pivoting.
+fn fit_linear(group: &[&Sample]) -> Option<Correction> {
+    if group.len() < 8 {
+        return None;
+    }
+    let mut ata = [[0.0f64; PHI_DIM]; PHI_DIM];
+    let mut atr = [0.0f64; PHI_DIM];
+    for s in group {
+        let r = s.ratio();
+        for i in 0..PHI_DIM {
+            atr[i] += s.phi[i] * r;
+            for j in 0..PHI_DIM {
+                ata[i][j] += s.phi[i] * s.phi[j];
+            }
+        }
+    }
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += RIDGE_LAMBDA;
+    }
+    solve(ata, atr).map(Correction::Linear)
+}
+
+fn solve(mut a: [[f64; PHI_DIM]; PHI_DIM], mut b: [f64; PHI_DIM]) -> Option<[f64; PHI_DIM]> {
+    for col in 0..PHI_DIM {
+        // partial pivot
+        let mut piv = col;
+        for row in col + 1..PHI_DIM {
+            if a[row][col].abs() > a[piv][col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for row in col + 1..PHI_DIM {
+            let f = a[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..PHI_DIM {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; PHI_DIM];
+    for col in (0..PHI_DIM).rev() {
+        let mut acc = b[col];
+        for k in col + 1..PHI_DIM {
+            acc -= a[col][k] * x[k];
+        }
+        x[col] = acc / a[col][col];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::features::phi_raw;
+
+    fn sample(digest: u64, mode: Mode, insts: f64, aidg: f64, des: f64) -> Sample {
+        Sample { digest, mode, phi: phi_raw(insts, 4.0, insts, 2.0, 1024.0), aidg, des }
+    }
+
+    #[test]
+    fn exact_class_trains_to_identity_with_zero_band() {
+        let samples: Vec<Sample> =
+            (0..8).map(|i| sample(7, Mode::Whole, 100.0 * (i + 1) as f64, 500.0, 500.0)).collect();
+        let m = train(&samples);
+        let cm = m.lookup(7, Mode::Whole);
+        assert_eq!(cm.correction, Correction::Identity);
+        assert_eq!((cm.lo, cm.hi), (1.0, 1.0));
+        let (cal, lo, hi) = cm.predict(&samples[0].phi, 12345);
+        assert_eq!((cal, lo, hi), (12345, 12345, 12345));
+    }
+
+    #[test]
+    fn constant_bias_is_corrected_by_a_ratio() {
+        // AIDG systematically 20% under: ratio candidate must win and fix it
+        let samples: Vec<Sample> = (0..10)
+            .map(|i| {
+                let a = 1000.0 + 50.0 * i as f64;
+                sample(9, Mode::Fixed, a, a, a * 1.25)
+            })
+            .collect();
+        let m = train(&samples);
+        let cm = m.lookup(9, Mode::Fixed);
+        let (cal, lo, hi) = cm.predict(&samples[0].phi, 1000);
+        assert_eq!(cal, 1250);
+        assert!(lo <= 1250 && 1250 <= hi);
+        // in-sample error must beat raw
+        let acc = crate::calib::evaluate(&m, &samples);
+        assert!(acc.calibrated_mape < acc.raw_mape, "{acc:?}");
+        assert_eq!(acc.ci_coverage, 1.0, "{acc:?}");
+    }
+
+    #[test]
+    fn training_coverage_is_total_by_construction() {
+        // noisy ratios: the residual band must still cover every training point
+        let samples: Vec<Sample> = (0..20)
+            .map(|i| {
+                let a = 500.0 + 100.0 * i as f64;
+                let noise = 1.0 + 0.15 * ((i * 37 % 11) as f64 - 5.0) / 5.0;
+                sample(11, Mode::Fallback, a, a, a * noise)
+            })
+            .collect();
+        let m = train(&samples);
+        let acc = crate::calib::evaluate(&m, &samples);
+        assert_eq!(acc.ci_coverage, 1.0, "{acc:?}");
+        assert!(acc.calibrated_mape <= acc.raw_mape + 1e-9, "{acc:?}");
+    }
+
+    #[test]
+    fn small_classes_fall_through_to_the_mode_model() {
+        let mut samples: Vec<Sample> = (0..6)
+            .map(|i| sample(21, Mode::Fixed, 100.0 * (i + 1) as f64, 1000.0, 1100.0))
+            .collect();
+        // a two-sample class: below MIN_CLASS_SAMPLES
+        samples.push(sample(22, Mode::Fixed, 300.0, 1000.0, 1100.0));
+        samples.push(sample(22, Mode::Fixed, 400.0, 1000.0, 1100.0));
+        let m = train(&samples);
+        assert!(m.classes.contains_key(&(21, Mode::Fixed)));
+        assert!(!m.classes.contains_key(&(22, Mode::Fixed)));
+        // digest 22 still gets corrected via the pooled Fixed model
+        let cm = m.lookup(22, Mode::Fixed);
+        assert!(cm.samples >= 8, "mode model pools everything: {cm:?}");
+    }
+
+    #[test]
+    fn empty_corpus_trains_an_empty_model() {
+        let m = train(&[]);
+        assert_eq!(m.class_count(), 0);
+        assert!(m.global.is_none());
+        // lookup degrades to identity
+        let (cal, lo, hi) = m.lookup(1, Mode::Whole).predict(&[1.0; PHI_DIM], 77);
+        assert_eq!((cal, lo, hi), (77, 77, 77));
+    }
+
+    #[test]
+    fn linear_solver_solves_a_known_system() {
+        // diag(2) w = [2,4,6,8,10,12] -> w = [1,2,3,4,5,6]
+        let mut a = [[0.0; PHI_DIM]; PHI_DIM];
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] = 2.0;
+        }
+        let b = [2.0, 4.0, 6.0, 8.0, 10.0, 12.0];
+        let x = solve(a, b).unwrap();
+        for (i, xi) in x.iter().enumerate() {
+            assert!((xi - (i + 1) as f64).abs() < 1e-12);
+        }
+        // singular matrix is rejected
+        assert!(solve([[0.0; PHI_DIM]; PHI_DIM], b).is_none());
+    }
+}

@@ -268,6 +268,29 @@ impl LayerOutcome {
             .map(|es| es.iter().map(|e| e.peak_state_bytes).max().unwrap_or(0))
             .unwrap_or(0)
     }
+
+    /// Calibrated layer cycles, when a calibration model stamped every
+    /// kernel of this layer (`None` for fused layers and uncalibrated
+    /// estimates). Kernels missing a stamp fall back to their raw cycles.
+    pub fn calibrated_cycles(&self) -> Option<u64> {
+        let es = self.estimate.as_ref()?;
+        if es.iter().all(|e| e.calibrated_cycles.is_none()) {
+            return None;
+        }
+        Some(es.iter().map(|e| e.calibrated_cycles.unwrap_or(e.cycles)).sum())
+    }
+
+    /// Summed `[ci_lo, ci_hi]` confidence bounds across the layer's
+    /// kernels, under the same presence rule as [`Self::calibrated_cycles`].
+    pub fn ci_bounds(&self) -> Option<(u64, u64)> {
+        let es = self.estimate.as_ref()?;
+        if es.iter().all(|e| e.ci_lo.is_none()) {
+            return None;
+        }
+        let lo = es.iter().map(|e| e.ci_lo.unwrap_or(e.cycles)).sum();
+        let hi = es.iter().map(|e| e.ci_hi.unwrap_or(e.cycles)).sum();
+        Some((lo, hi))
+    }
 }
 
 /// Kernel-level accounting of how a network estimate was assembled by the
@@ -339,6 +362,31 @@ impl NetworkEstimate {
     /// Per-layer cycle vector (fused layers are 0), for MAPE computations.
     pub fn layer_cycles(&self) -> Vec<f64> {
         self.layers.iter().map(|l| l.cycles() as f64).collect()
+    }
+
+    /// Calibrated whole-network cycles (`None` when no layer was stamped
+    /// by a calibration model; fused layers contribute their raw 0).
+    pub fn calibrated_cycles(&self) -> Option<u64> {
+        if self.layers.iter().all(|l| l.calibrated_cycles().is_none()) {
+            return None;
+        }
+        Some(self.layers.iter().map(|l| l.calibrated_cycles().unwrap_or(l.cycles())).sum())
+    }
+
+    /// Summed whole-network `[ci_lo, ci_hi]` bounds, under the same
+    /// presence rule as [`Self::calibrated_cycles`].
+    pub fn ci_bounds(&self) -> Option<(u64, u64)> {
+        if self.layers.iter().all(|l| l.ci_bounds().is_none()) {
+            return None;
+        }
+        let mut lo = 0u64;
+        let mut hi = 0u64;
+        for l in &self.layers {
+            let (a, b) = l.ci_bounds().unwrap_or_else(|| (l.cycles(), l.cycles()));
+            lo += a;
+            hi += b;
+        }
+        Some((lo, hi))
     }
 }
 

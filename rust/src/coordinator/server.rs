@@ -36,6 +36,9 @@
 //!                                line
 //! frontier                       the last sweep's Pareto frontier: one
 //!                                header line, then one `point` line each
+//! calibrate <file>|off           install a persisted calibration model
+//!                                (estimates gain calibrated=/ci_lo=/ci_hi=
+//!                                tokens) or remove it
 //! stats                          engine cache/dedup + dse counters, one
 //!                                line
 //! metrics                        full telemetry snapshot: counters, pool/
@@ -278,7 +281,7 @@ fn serve_line(
                 &FixedPointConfig::default(),
                 pool,
             )?;
-            Ok(format!(
+            let mut line = format!(
                 "{} {} cycles={} evaluated_iters={} total_iters={} kernels={} unique={} \
                  cache_hits={} deduped={} runtime_ms={}",
                 e.arch,
@@ -291,8 +294,26 @@ fn serve_line(
                 e.stats.cache_hits,
                 e.stats.deduped,
                 e.runtime.as_millis()
-            ))
+            );
+            if let Some(cal) = e.calibrated_cycles() {
+                let (lo, hi) = e.ci_bounds().unwrap_or((cal, cal));
+                line.push_str(&format!(" calibrated={cal} ci_lo={lo} ci_hi={hi}"));
+            }
+            Ok(line)
         }
+        Some("calibrate") => match it.next() {
+            Some("off") => {
+                EstimationEngine::global().set_calibration(None);
+                Ok("calibration off".to_string())
+            }
+            Some(path) => {
+                let model = crate::calib::CalibrationModel::load(std::path::Path::new(path))?;
+                let classes = model.class_count();
+                EstimationEngine::global().set_calibration(Some(std::sync::Arc::new(model)));
+                Ok(format!("calibration loaded {path} classes={classes}"))
+            }
+            None => bail!("calibrate needs an argument (calibrate <file>|off)"),
+        },
         Some("sweep") => {
             let spec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
             let netspec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
@@ -412,6 +433,10 @@ fn serve_line(
                 crate::acadl::text::ArchRegistry::global().compile_count(),
                 crate::dnn::text::NetRegistry::global().compile_count(),
             );
+            line.push_str(&format!(
+                " calib_classes={}",
+                EstimationEngine::global().calibration().map(|m| m.class_count()).unwrap_or(0)
+            ));
             // process-wide counters cover every engine in the process (the
             // global one above plus any locally constructed ones)
             for (name, value) in crate::metrics::counters::snapshot() {
@@ -459,8 +484,8 @@ fn serve_line(
         },
         Some(cmd) => {
             bail!(
-                "unknown command {cmd:?} \
-                 (estimate|describe|network describe|sweep|frontier|stats|metrics|trace|quit)"
+                "unknown command {cmd:?} (estimate|describe|network describe|sweep|frontier|\
+                 calibrate|stats|metrics|trace|quit)"
             )
         }
         None => bail!("empty command"),
@@ -627,6 +652,20 @@ mod tests {
         assert!(lines[3].contains("trace needs an argument"), "{}", lines[3]);
         // the toggles actually moved the flag: off after `trace off`
         assert!(!crate::obs::enabled());
+    }
+
+    #[test]
+    fn serve_calibrate_command() {
+        let input = "calibrate off\ncalibrate\ncalibrate /no/such/model.txt\nstats\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 4);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "calibration off");
+        assert!(lines[1].contains("calibrate needs an argument"), "{}", lines[1]);
+        assert!(lines[2].starts_with("error:"), "{}", lines[2]);
+        assert!(lines[3].contains("calib_classes="), "{}", lines[3]);
     }
 
     #[test]

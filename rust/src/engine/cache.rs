@@ -224,6 +224,9 @@ mod tests {
             runtime: std::time::Duration::ZERO,
             provenance: Provenance::Computed,
             trace: None,
+            calibrated_cycles: None,
+            ci_lo: None,
+            ci_hi: None,
         })
     }
 

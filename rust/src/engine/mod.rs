@@ -34,13 +34,14 @@ pub mod key;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, OnceLock};
+use std::sync::{Arc, OnceLock, RwLock};
 use std::time::Instant;
 
 use crate::acadl::Diagram;
 use crate::aidg::{
     estimate_layer, estimate_layer_batch, FixedPointConfig, LayerEstimate, Provenance,
 };
+use crate::calib::CalibrationModel;
 use crate::coordinator::job::{Arch, EstimateStats, LayerOutcome, NetworkEstimate};
 use crate::coordinator::pool::Pool;
 use crate::dnn::Network;
@@ -75,6 +76,11 @@ pub struct EngineStats {
 /// safe to call from many threads at once.
 pub struct EstimationEngine {
     cache: EstimateCache,
+    /// Optional calibration model applied as a post-pass on every resolved
+    /// estimate (never on the cached `Arc`s themselves — with calibration
+    /// off, results stay bit-identical to an engine that never saw a
+    /// model).
+    calibration: RwLock<Option<Arc<CalibrationModel>>>,
     requests: AtomicU64,
     kernels_total: AtomicU64,
     kernels_evaluated: AtomicU64,
@@ -86,6 +92,7 @@ impl EstimationEngine {
     pub fn new(cache_capacity: usize) -> Self {
         Self {
             cache: EstimateCache::new(cache_capacity),
+            calibration: RwLock::new(None),
             requests: AtomicU64::new(0),
             kernels_total: AtomicU64::new(0),
             kernels_evaluated: AtomicU64::new(0),
@@ -114,6 +121,19 @@ impl EstimationEngine {
     /// Drop all cached estimates (tests; memory pressure).
     pub fn clear_cache(&self) {
         self.cache.clear();
+    }
+
+    /// Install (or with `None`, remove) the calibration model. While a
+    /// model is installed every estimate leaving the engine carries
+    /// `calibrated_cycles` + `[ci_lo, ci_hi]`; cached entries are never
+    /// stamped, so clearing the model restores bit-identical raw output.
+    pub fn set_calibration(&self, model: Option<Arc<CalibrationModel>>) {
+        *self.calibration.write().unwrap() = model;
+    }
+
+    /// The currently installed calibration model, if any.
+    pub fn calibration(&self) -> Option<Arc<CalibrationModel>> {
+        self.calibration.read().unwrap().clone()
     }
 
     /// Live cached estimates.
@@ -164,11 +184,12 @@ impl EstimationEngine {
         kernels: &[LoopKernel],
         fp: &FixedPointConfig,
     ) -> Result<Vec<LayerEstimate>> {
+        let calib = self.calibration();
         let mut local: HashMap<KernelKey, Arc<LayerEstimate>> = HashMap::new();
         let mut out = Vec::with_capacity(kernels.len());
         let mut stats = EstimateStats::default();
         for kern in kernels {
-            let e = self.resolve_serial(d, arch, kern, fp, &mut local)?;
+            let e = self.resolve_serial(d, arch, kern, fp, calib.as_deref(), &mut local)?;
             stats.count(e.provenance);
             out.push(e);
         }
@@ -184,13 +205,18 @@ impl EstimationEngine {
         arch: ArchDigest,
         kern: &LoopKernel,
         fp: &FixedPointConfig,
+        calib: Option<&CalibrationModel>,
         local: &mut HashMap<KernelKey, Arc<LayerEstimate>>,
     ) -> Result<LayerEstimate> {
         let mut sp = crate::obs::span("engine.kernel");
         if fp.keep_trace {
             // traces are per-request artifacts; never cached or reused
             sp.note("trace");
-            return estimate_layer(d, kern, fp);
+            let mut e = estimate_layer(d, kern, fp)?;
+            if let Some(m) = calib {
+                m.apply_kernel(d, kern, &mut e);
+            }
+            return Ok(e);
         }
         let key = kernel_key(arch, d, kern, fp);
         sp.arg("kernel_hi", key.kernel_hi);
@@ -211,6 +237,10 @@ impl EstimationEngine {
         let mut e = (*est).clone();
         e.label = kern.label.clone();
         e.provenance = provenance;
+        // calibration stamps only this request's clone, never the cached Arc
+        if let Some(m) = calib {
+            m.apply_kernel(d, kern, &mut e);
+        }
         Ok(e)
     }
 
@@ -247,6 +277,7 @@ impl EstimationEngine {
         let d = mapper.diagram();
         let digest = ArchDigest::of(d);
         let mapped = mapper.map_network(net)?;
+        let calib = self.calibration();
         let mut local: HashMap<KernelKey, Arc<LayerEstimate>> = HashMap::new();
         let mut stats = EstimateStats::default();
         let mut layers = Vec::with_capacity(mapped.len());
@@ -257,7 +288,7 @@ impl EstimationEngine {
             }
             let mut ests = Vec::with_capacity(ml.kernels.len());
             for kern in &ml.kernels {
-                let e = self.resolve_serial(d, digest, kern, fp, &mut local)?;
+                let e = self.resolve_serial(d, digest, kern, fp, calib.as_deref(), &mut local)?;
                 stats.count(e.provenance);
                 ests.push(e);
             }
@@ -305,6 +336,7 @@ impl EstimationEngine {
         let mapper: Arc<dyn Mapper + Send + Sync> = Arc::from(arch.mapper()?);
         let digest = ArchDigest::of(mapper.diagram());
         let mapped = mapper.map_network(net)?;
+        let calib = self.calibration();
 
         // ---- plan: dedup kernel slots against the cache and each other ----
         enum Slot {
@@ -314,8 +346,10 @@ impl EstimationEngine {
         }
         struct PlannedLayer {
             name: String,
-            /// `None` = fused layer.
-            slots: Option<Vec<(String, Slot, Provenance)>>,
+            /// `None` = fused layer. Each slot carries the kernel's memory
+            /// accesses per iteration (0.0 with calibration off), captured
+            /// at plan time while the kernel is still in hand.
+            slots: Option<Vec<(String, Slot, Provenance, f64)>>,
         }
         let mut stats = EstimateStats::default();
         let mut planned: Vec<PlannedLayer> = Vec::with_capacity(mapped.len());
@@ -335,6 +369,11 @@ impl EstimationEngine {
                 let key = kernel_key(digest, mapper.diagram(), &kern, fp);
                 psp.arg("kernel_hi", key.kernel_hi);
                 let label = kern.label.clone();
+                let ma = if calib.is_some() {
+                    crate::calib::features::mem_accesses_per_iter(&kern)
+                } else {
+                    0.0
+                };
                 let (slot, provenance) = if let Some(&i) = pending_of.get(&key) {
                     (Slot::Pending(i), Provenance::Deduped)
                 } else if let Some(a) = hit_of.get(&key) {
@@ -354,7 +393,7 @@ impl EstimationEngine {
                     Provenance::Deduped => "dedup",
                 });
                 stats.count(provenance);
-                slots.push((label, slot, provenance));
+                slots.push((label, slot, provenance, ma));
             }
             planned.push(PlannedLayer { name: ml.layer_name, slots: Some(slots) });
         }
@@ -407,7 +446,7 @@ impl EstimationEngine {
                 None => None,
                 Some(slots) => {
                     let mut ests = Vec::with_capacity(slots.len());
-                    for (label, slot, provenance) in slots {
+                    for (label, slot, provenance, ma) in slots {
                         let arc = match slot {
                             Slot::Cached(a) => a,
                             Slot::Pending(i) => {
@@ -417,6 +456,9 @@ impl EstimationEngine {
                         let mut e = (*arc).clone();
                         e.label = label;
                         e.provenance = provenance;
+                        if let Some(m) = &calib {
+                            m.apply(mapper.diagram(), ma, &mut e);
+                        }
                         ests.push(e);
                     }
                     Some(ests)
@@ -474,6 +516,7 @@ impl EstimationEngine {
             mappers.push(Arc::from(a.mapper()?));
         }
         let digests: Vec<ArchDigest> = mappers.iter().map(|m| ArchDigest::of(m.diagram())).collect();
+        let calib = self.calibration();
 
         // ---- plan all lanes, mirroring the sequential-serial accounting ----
         enum Slot {
@@ -483,8 +526,10 @@ impl EstimationEngine {
         }
         struct PlannedLayer {
             name: String,
-            /// `None` = fused layer.
-            slots: Option<Vec<(String, Slot, Provenance)>>,
+            /// `None` = fused layer. Each slot carries the kernel's memory
+            /// accesses per iteration (0.0 with calibration off), captured
+            /// at plan time while the kernel is still in hand.
+            slots: Option<Vec<(String, Slot, Provenance, f64)>>,
         }
         struct PendingEntry {
             key: KernelKey,
@@ -518,6 +563,11 @@ impl EstimationEngine {
                     let key = kernel_key(digests[lane], m.diagram(), &kern, fp);
                     psp.arg("kernel_hi", key.kernel_hi);
                     let label = kern.label.clone();
+                    let ma = if calib.is_some() {
+                        crate::calib::features::mem_accesses_per_iter(&kern)
+                    } else {
+                        0.0
+                    };
                     let first_in_lane = local_seen.insert(key);
                     let (slot, provenance) = if !first_in_lane {
                         let slot = if let Some(&i) = pending_of.get(&key) {
@@ -545,7 +595,7 @@ impl EstimationEngine {
                         Provenance::Deduped => "dedup",
                     });
                     per_lane_stats[lane].count(provenance);
-                    slots.push((label, slot, provenance));
+                    slots.push((label, slot, provenance, ma));
                 }
                 planned.push(PlannedLayer { name: ml.layer_name, slots: Some(slots) });
             }
@@ -620,7 +670,7 @@ impl EstimationEngine {
                     None => None,
                     Some(slots) => {
                         let mut ests = Vec::with_capacity(slots.len());
-                        for (label, slot, provenance) in slots {
+                        for (label, slot, provenance, ma) in slots {
                             let arc = match slot {
                                 Slot::Cached(a) => a,
                                 Slot::Pending(i) => {
@@ -630,6 +680,9 @@ impl EstimationEngine {
                             let mut e = (*arc).clone();
                             e.label = label;
                             e.provenance = provenance;
+                            if let Some(m) = &calib {
+                                m.apply(mappers[lane].diagram(), ma, &mut e);
+                            }
                             ests.push(e);
                         }
                         Some(ests)

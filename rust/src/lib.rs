@@ -29,6 +29,10 @@
 //!   the same ACADL diagrams (the in-repo stand-in for the paper's
 //!   Verilator/Xcelium RTL ground truth).
 //! - [`accel`] — object-diagram builders for the four paper architectures.
+//! - [`calib`] — ANNETTE-style stacked calibration: a per-class correction
+//!   model trained against the DES on a seeded representative corpus,
+//!   attaching `calibrated_cycles` + `[ci_lo, ci_hi]` error bars to every
+//!   estimate, with a CI-gated accuracy harness (`docs/accuracy.md`).
 //! - [`baselines`] — refined roofline (native mirror of the AOT-compiled
 //!   JAX/Pallas estimator) and a Timeloop-like analytical model.
 //! - [`runtime`] — PJRT loader executing the AOT artifacts from Rust.
@@ -63,6 +67,7 @@ pub mod accel;
 pub mod aidg;
 pub mod baselines;
 pub mod bench_harness;
+pub mod calib;
 pub mod coordinator;
 pub mod dnn;
 pub mod dse;

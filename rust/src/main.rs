@@ -9,6 +9,9 @@
 //! acadl-perf dse <network> --rows R,.. --cols C,.. --tiles T,.. [--keep F]
 //! acadl-perf dse plasticine:<R,..>x<C,..>:<T,..> <network> [--keep F]
 //! acadl-perf check <file.toml>                     validate a description
+//! acadl-perf calibrate [--out <path>] [--machines N] [--seed N]
+//!                                                  train a DES-backed
+//!                                                  calibration model
 //! acadl-perf serve                                 line-based request loop
 //! acadl-perf info                                  platform + model zoo
 //! ```
@@ -25,10 +28,14 @@
 //! Global flags (anywhere on the command line):
 //!
 //! ```text
-//! --workers <N>      worker threads for kernel-granular fan-out (0 = auto)
-//! --cache-cap <N>    estimate-cache entry bound (0 disables caching)
-//! --profile          enable tracing; print the span profile table at exit
-//! --trace-out <path> enable tracing; write Chrome trace JSON at exit
+//! --workers <N>        worker threads for kernel-granular fan-out (0 = auto)
+//! --cache-cap <N>      estimate-cache entry bound (0 disables caching)
+//! --calib-file <path>  install a persisted calibration model: estimates
+//!                      gain calibrated cycles + [ci_lo, ci_hi] error bars
+//! --calibrate          train a calibration model in-process (seeded default
+//!                      corpus) and install it for this run
+//! --profile            enable tracing; print the span profile table at exit
+//! --trace-out <path>   enable tracing; write Chrome trace JSON at exit
 //! ```
 //!
 //! `--profile` and `--trace-out` turn the [`acadl_perf::obs`] tracing layer
@@ -137,6 +144,19 @@ fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
                 EstimationEngine::global().set_cache_capacity(cap);
                 args.drain(i..i + 2);
             }
+            "--calib-file" => {
+                anyhow::ensure!(i + 1 < args.len(), "--calib-file needs a path");
+                let model =
+                    acadl_perf::calib::CalibrationModel::load(std::path::Path::new(&args[i + 1]))?;
+                EstimationEngine::global().set_calibration(Some(std::sync::Arc::new(model)));
+                args.drain(i..i + 2);
+            }
+            "--calibrate" => {
+                let (model, _) =
+                    acadl_perf::calib::train_from_spec(&acadl_perf::calib::SampleSpec::default())?;
+                EstimationEngine::global().set_calibration(Some(std::sync::Arc::new(model)));
+                args.remove(i);
+            }
             "--trace-out" => {
                 anyhow::ensure!(i + 1 < args.len(), "--trace-out needs a path");
                 opts.trace_out = Some(args[i + 1].clone());
@@ -161,6 +181,7 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
         Some("compare") => compare(&args[1..]),
         Some("dse") => dse(&args[1..], g),
         Some("check") => check(&args[1..]),
+        Some("calibrate") => calibrate(&args[1..]),
         Some("serve") => {
             let stdin = std::io::stdin();
             let n = coordinator::serve_with(
@@ -173,14 +194,17 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
         }
         Some("info") => info(),
         _ => {
-            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|serve|info> ...");
+            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|calibrate|serve|info> ...");
             eprintln!("  architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
             eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
             eprintln!("  networks:      tc_resnet8 | alexnet | ... (acadl-perf info)");
             eprintln!("                 net:<path>  or  --network-file <path>  (textual network description)");
             eprintln!("  dse:           --arch-file <path> [--network-file <path>] [--keep-frac F] [--sweep-cap N] [--no-batch]");
             eprintln!("                 explores the description's [sweep] space (see docs/dse.md)");
+            eprintln!("  calibrate:     [--out <path>] [--machines N] [--kernels N] [--seed N] [--kernel-seed N]");
+            eprintln!("                 train an error-bar calibration model against the DES (docs/accuracy.md)");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
+            eprintln!("                 --calib-file <path> (install a saved calibration model) | --calibrate");
             eprintln!("                 --profile (span profile table) | --trace-out <path> (Chrome trace JSON)");
             Ok(())
         }
@@ -284,6 +308,68 @@ fn check(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `acadl-perf calibrate`: sample a seeded (machine × kernel) corpus, run
+/// AIDG and DES on every pair, fit the stacked per-class correction, report
+/// training accuracy, and optionally persist the model for `--calib-file`.
+fn calibrate(args: &[String]) -> Result<()> {
+    let mut out: Option<String> = None;
+    let mut spec = acadl_perf::calib::SampleSpec::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--out" => {
+                anyhow::ensure!(i + 1 < args.len(), "--out needs a path");
+                out = Some(args[i + 1].clone());
+                i += 2;
+            }
+            "--machines" => {
+                anyhow::ensure!(i + 1 < args.len(), "--machines needs a value");
+                spec.random_machines = parse_count_flag("--machines", &args[i + 1], 4096)?;
+                i += 2;
+            }
+            "--kernels" => {
+                anyhow::ensure!(i + 1 < args.len(), "--kernels needs a value");
+                spec.kernels_per_machine = parse_count_flag("--kernels", &args[i + 1], 4096)?;
+                i += 2;
+            }
+            "--seed" => {
+                anyhow::ensure!(i + 1 < args.len(), "--seed needs a value");
+                spec.machine_seed = args[i + 1]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--seed value {:?} is not a u64", args[i + 1]))?;
+                i += 2;
+            }
+            "--kernel-seed" => {
+                anyhow::ensure!(i + 1 < args.len(), "--kernel-seed needs a value");
+                spec.kernel_seed = args[i + 1].parse().map_err(|_| {
+                    anyhow::anyhow!("--kernel-seed value {:?} is not a u64", args[i + 1])
+                })?;
+                i += 2;
+            }
+            other => anyhow::bail!("unknown calibrate flag {other:?}"),
+        }
+    }
+    let (model, corpus) = acadl_perf::calib::train_from_spec(&spec)?;
+    let acc = acadl_perf::calib::evaluate(&model, &corpus.samples);
+    println!(
+        "calibration: {} samples over {} machines -> {} exact classes",
+        corpus.samples.len(),
+        corpus.machines,
+        model.class_count(),
+    );
+    println!(
+        "training accuracy: raw MAPE {:.2}% -> calibrated MAPE {:.2}% | CI coverage {:.1}%",
+        acc.raw_mape,
+        acc.calibrated_mape,
+        acc.ci_coverage * 100.0,
+    );
+    if let Some(path) = out {
+        model.save(std::path::Path::new(&path))?;
+        println!("saved: {path} (install with --calib-file {path} or `calibrate {path}` in serve)");
+    }
+    Ok(())
+}
+
 fn estimate(args: &[String], g: &GlobalOpts) -> Result<()> {
     let (arch, network) = arch_and_net(args)?;
     let pool = Pool::new(g.workers);
@@ -325,6 +411,15 @@ fn estimate(args: &[String], g: &GlobalOpts) -> Result<()> {
         e.total_insts(),
         e.runtime.as_secs_f64() * 1e3,
     );
+    if let Some(cal) = e.calibrated_cycles() {
+        let (lo, hi) = e.ci_bounds().unwrap_or((cal, cal));
+        println!(
+            "calibrated: {} cycles | CI [{} – {}]",
+            fmt_cycles(cal),
+            fmt_cycles(lo),
+            fmt_cycles(hi),
+        );
+    }
     println!(
         "engine: {} kernels ({} unique) | {} evaluated | {} cache hits | {} deduped | {} workers",
         e.stats.total_kernels,
@@ -411,6 +506,29 @@ fn compare(args: &[String]) -> Result<()> {
         format!("{:.2}%", pe(aidg.total_cycles() as f64)),
         format!("{:.2}%", acadl_perf::metrics::mape(&des_layers, &aidg_cycles)),
     ]);
+    // with a calibration model installed (--calibrate / --calib-file), add
+    // the corrected estimate as its own comparison row
+    if EstimationEngine::global().calibration().is_some() {
+        let cal_est = EstimationEngine::global().estimate_network(
+            &arch,
+            &net,
+            &FixedPointConfig::default(),
+        )?;
+        if let Some(cal_total) = cal_est.calibrated_cycles() {
+            let cal_layers: Vec<f64> = cal_est
+                .layers
+                .iter()
+                .map(|l| l.calibrated_cycles().unwrap_or(l.cycles()) as f64)
+                .collect();
+            t.row(&[
+                "AIDG calibrated".into(),
+                "-".into(),
+                fmt_cycles(cal_total),
+                format!("{:.2}%", pe(cal_total as f64)),
+                format!("{:.2}%", acadl_perf::metrics::mape(&des_layers, &cal_layers)),
+            ]);
+        }
+    }
     t.row(&[
         "Refined roofline [28]".into(),
         format!("{:.1} ms", roof_rt.as_secs_f64() * 1e3),

@@ -69,6 +69,10 @@ pub mod counters {
     /// Lanes evicted from a batch to the serial path (divergence:
     /// digest/route/partition mismatch).
     pub static AIDG_BATCH_EVICTIONS: Counter = Counter::new("aidg.batch.evictions");
+    /// Paired (AIDG, DES) observations consumed by calibration training.
+    pub static CALIB_SAMPLES: Counter = Counter::new("calib.samples");
+    /// Layer estimates stamped with calibrated cycles + CI bounds.
+    pub static CALIB_LAYERS: Counter = Counter::new("calib.layers");
 
     /// One layer estimation's evaluator accounting, in one call.
     pub fn note_aidg(nodes: u64, iterations: u64) {
@@ -101,6 +105,8 @@ pub mod counters {
             &AIDG_BATCH_GROUPS,
             &AIDG_BATCH_LANES,
             &AIDG_BATCH_EVICTIONS,
+            &CALIB_SAMPLES,
+            &CALIB_LAYERS,
         ]
         .iter()
         .map(|c| (c.name(), c.get()))
@@ -117,6 +123,10 @@ pub fn percentage_error(estimated: f64, measured: f64) -> f64 {
 }
 
 /// Mean absolute percentage error over per-layer latencies (eq. 16).
+/// Zero-valued measured entries (fused layers emit 0 in per-layer cycle
+/// vectors) are skipped rather than dividing by zero; an empty or all-zero
+/// input yields 0. Panics when the slices disagree in length — that is a
+/// caller bug, not a data condition.
 pub fn mape(measured: &[f64], estimated: &[f64]) -> f64 {
     assert_eq!(measured.len(), estimated.len());
     if measured.is_empty() {
@@ -131,6 +141,24 @@ pub fn mape(measured: &[f64], estimated: &[f64]) -> f64 {
         }
     }
     if n == 0 { 0.0 } else { acc / n as f64 * 100.0 }
+}
+
+/// Fraction of measured values inside their `[lo, hi]` interval (1.0 for
+/// empty input — an empty claim set is vacuously covered). The calibration
+/// accuracy gate requires ≥ 0.95 of held-out DES cycle counts inside the
+/// reported confidence bounds.
+pub fn coverage(measured: &[f64], lo: &[f64], hi: &[f64]) -> f64 {
+    assert_eq!(measured.len(), lo.len());
+    assert_eq!(measured.len(), hi.len());
+    if measured.is_empty() {
+        return 1.0;
+    }
+    let inside = measured
+        .iter()
+        .zip(lo.iter().zip(hi))
+        .filter(|&(&m, (&l, &h))| l <= m && m <= h)
+        .count();
+    inside as f64 / measured.len() as f64
 }
 
 /// Sample variance (unbiased, n-1 denominator) — eqs. 17/18 operate on the
@@ -293,12 +321,50 @@ mod tests {
         counters::ENGINE_REQUESTS.add(1);
         assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
         let snap = counters::snapshot();
-        assert_eq!(snap.len(), 13);
+        assert_eq!(snap.len(), 15);
         assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
         assert!(snap.iter().any(|(n, _)| *n == "aidg.batch.lanes"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.enumerated"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.prefiltered"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.estimated"));
+        assert!(snap.iter().any(|(n, _)| *n == "calib.samples"));
+        assert!(snap.iter().any(|(n, _)| *n == "calib.layers"));
+    }
+
+    #[test]
+    fn mape_skips_zero_measured_entries() {
+        // fused layers report 0 measured cycles; they must not divide by
+        // zero or drag the mean toward infinity
+        let m = vec![0.0, 100.0, 0.0, 200.0];
+        let e = vec![50.0, 110.0, 7.0, 180.0];
+        assert!((mape(&m, &e) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mape_all_zero_measured_is_zero() {
+        assert_eq!(mape(&[0.0, 0.0], &[3.0, 4.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mape_rejects_mismatched_lengths() {
+        mape(&[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn coverage_counts_inclusive_bounds() {
+        let m = vec![10.0, 20.0, 30.0, 40.0];
+        let lo = vec![10.0, 25.0, 29.0, 0.0];
+        let hi = vec![10.0, 30.0, 31.0, 39.0];
+        // 10 in [10,10], 20 below [25,30], 30 in [29,31], 40 above [0,39]
+        assert!((coverage(&m, &lo, &hi) - 0.5).abs() < 1e-12);
+        assert_eq!(coverage(&[], &[], &[]), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn coverage_rejects_mismatched_lengths() {
+        coverage(&[1.0], &[0.0, 0.0], &[2.0, 2.0]);
     }
 
     #[test]

@@ -9,7 +9,8 @@ use acadl_perf::accel::{
     UltraTrailConfig,
 };
 use acadl_perf::acadl::{Diagram, Latency};
-use acadl_perf::aidg::{estimate_layer, evaluate_whole, FixedPointConfig};
+use acadl_perf::aidg::{estimate_layer, estimate_layer_batch, evaluate_whole, FixedPointConfig};
+use acadl_perf::coordinator::{Arch, DescribedArch};
 use acadl_perf::dnn::zoo;
 use acadl_perf::isa::{Instruction, LoopKernel};
 use acadl_perf::mapping::{
@@ -140,6 +141,79 @@ fn fixed_point_matches_whole_graph_on_every_arch() {
                     whole.cycles,
                     err * 100.0
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn described_archs_agree_with_des() {
+    // the four shipped arch/*.toml descriptions must satisfy the same
+    // differential as the builder architectures they describe — the textual
+    // frontend is not allowed to drift from the DES
+    let net = zoo::tc_resnet8();
+    for (file, tol) in [
+        ("arch/systolic_16x16.toml", 0.0),
+        ("arch/ultratrail_8x8.toml", 0.0),
+        ("arch/gemmini_16.toml", 0.25),
+        ("arch/plasticine_3x6.toml", 0.06),
+    ] {
+        let mapper = Arch::Described(DescribedArch::file(file))
+            .mapper()
+            .unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        assert_layers_agree(mapper.as_ref(), &net, tol);
+    }
+}
+
+#[test]
+fn batch_evaluator_matches_des_and_serial() {
+    // PR-7's lane-batched evaluator must stay inside the same differential:
+    // every lane of a same-kernel batch is bitwise-identical to the serial
+    // estimate, and whole-graph lanes match the DES exactly
+    let fp = FixedPointConfig::default();
+    let net = zoo::tc_resnet8();
+    let mappers: Vec<Box<dyn Mapper>> = vec![
+        Box::new(ScalarMapper::new(Arc::new(Systolic::new(SystolicConfig::new(2, 2)).unwrap()))),
+        Box::new(TensorOpMapper::new(
+            Arc::new(UltraTrail::new(UltraTrailConfig::default()).unwrap()),
+        )),
+    ];
+    for mapper in &mappers {
+        let d = mapper.diagram();
+        for ml in mapper.map_network(&net).unwrap().iter().filter(|m| !m.fused) {
+            for k in &ml.kernels {
+                if k.total_insts() > 400_000 {
+                    continue;
+                }
+                let serial = estimate_layer(d, k, &fp).unwrap();
+                let lanes = vec![(d, k), (d, k), (d, k)];
+                let batch = estimate_layer_batch(&lanes, &fp).unwrap();
+                assert_eq!(batch.estimates.len(), 3);
+                for (lane, e) in batch.estimates.iter().enumerate() {
+                    assert_eq!(
+                        (e.cycles, e.evaluated_iters, e.k_block, e.dt_iteration, e.dt_overlap),
+                        (
+                            serial.cycles,
+                            serial.evaluated_iters,
+                            serial.k_block,
+                            serial.dt_iteration,
+                            serial.dt_overlap
+                        ),
+                        "{} on {}: batch lane {lane} diverged from serial",
+                        k.label,
+                        d.name
+                    );
+                    assert_eq!((e.whole_graph, e.used_fallback),
+                        (serial.whole_graph, serial.used_fallback));
+                }
+                if serial.whole_graph {
+                    let des = simulate(d, k, 0..k.k).unwrap().cycles;
+                    assert_eq!(
+                        batch.estimates[0].cycles, des,
+                        "{} on {}: whole-graph batch lane vs DES",
+                        k.label, d.name
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,131 @@
+//! Integration tests for the calibration subsystem: off-state bit-identity
+//! (the tentpole's hard requirement), model persistence, and the threading
+//! of calibrated values through every engine path.
+
+use std::sync::Arc;
+
+use acadl_perf::accel::GemminiConfig;
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::calib::{self, CalibrationModel, SampleSpec};
+use acadl_perf::coordinator::{Arch, Pool};
+use acadl_perf::dnn::zoo;
+use acadl_perf::engine::EstimationEngine;
+
+/// A corpus small enough that its DES runs stay test-suite-fast, but still
+/// covering the paper architectures and a couple of random machines.
+fn tiny_spec() -> SampleSpec {
+    SampleSpec {
+        random_machines: 2,
+        kernels_per_machine: 2,
+        paper_kernels_per_arch: 1,
+        max_kernel_insts: 50_000,
+        ..SampleSpec::default()
+    }
+}
+
+#[test]
+fn calibration_off_is_bit_identical() {
+    let arch = Arch::Gemmini(GemminiConfig::default());
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+
+    let plain = EstimationEngine::new(1 << 10);
+    let baseline = plain.estimate_network(&arch, &net, &fp).unwrap();
+    assert!(baseline.calibrated_cycles().is_none());
+    for l in &baseline.layers {
+        assert!(l.calibrated_cycles().is_none());
+        assert!(l.ci_bounds().is_none());
+        for e in l.estimate.iter().flatten() {
+            assert_eq!((e.calibrated_cycles, e.ci_lo, e.ci_hi), (None, None, None));
+        }
+    }
+
+    // install a model, estimate (stamped), remove it, estimate again: the
+    // third run must be bit-identical to the baseline — in particular the
+    // cache entries written under calibration must not leak stamps
+    let (model, _) = calib::train_from_spec(&tiny_spec()).unwrap();
+    let engine = EstimationEngine::new(1 << 10);
+    engine.set_calibration(Some(Arc::new(model)));
+    let stamped = engine.estimate_network(&arch, &net, &fp).unwrap();
+    assert!(stamped.calibrated_cycles().is_some());
+    engine.set_calibration(None);
+    assert!(engine.calibration().is_none());
+    let after = engine.estimate_network(&arch, &net, &fp).unwrap();
+    assert!(after.stats.evaluated < after.stats.total_kernels, "warm run: {:?}", after.stats);
+    assert!(after.calibrated_cycles().is_none());
+    assert_eq!(after.total_cycles(), baseline.total_cycles());
+    for (a, b) in after.layers.iter().zip(&baseline.layers) {
+        assert_eq!(a.cycles(), b.cycles(), "{}", a.layer_name);
+        for e in a.estimate.iter().flatten() {
+            assert_eq!((e.calibrated_cycles, e.ci_lo, e.ci_hi), (None, None, None));
+        }
+    }
+    // raw cycles are untouched even while the model is installed
+    assert_eq!(stamped.total_cycles(), baseline.total_cycles());
+}
+
+#[test]
+fn model_persists_and_reloads_exactly() {
+    let (model, corpus) = calib::train_from_spec(&tiny_spec()).unwrap();
+    assert!(!corpus.samples.is_empty());
+    let path = std::env::temp_dir()
+        .join(format!("acadl_calib_roundtrip_{}.txt", std::process::id()));
+    model.save(&path).unwrap();
+    let reloaded = CalibrationModel::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(model, reloaded);
+    // the reloaded model predicts identically on the training corpus
+    let a = calib::evaluate(&model, &corpus.samples);
+    let b = calib::evaluate(&reloaded, &corpus.samples);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn training_set_is_fully_covered_and_never_worse() {
+    let (model, corpus) = calib::train_from_spec(&tiny_spec()).unwrap();
+    let acc = calib::evaluate(&model, &corpus.samples);
+    assert_eq!(acc.samples, corpus.samples.len());
+    // the residual band is built from training residuals with margin, so
+    // training coverage is total by construction
+    assert_eq!(acc.ci_coverage, 1.0, "{acc:?}");
+    // the identity guard: calibration may not hurt the set it trained on
+    assert!(
+        acc.calibrated_mape <= acc.raw_mape + 1e-9,
+        "calibration made training estimates worse: {acc:?}"
+    );
+}
+
+#[test]
+fn calibrated_values_thread_through_serial_and_pooled_paths() {
+    let (model, _) = calib::train_from_spec(&tiny_spec()).unwrap();
+    let model = Arc::new(model);
+    let arch = Arch::Gemmini(GemminiConfig::default());
+    let net = zoo::tc_resnet8();
+    let fp = FixedPointConfig::default();
+
+    let serial_engine = EstimationEngine::new(1 << 10);
+    serial_engine.set_calibration(Some(Arc::clone(&model)));
+    let serial = serial_engine.estimate_network(&arch, &net, &fp).unwrap();
+
+    let pooled_engine = EstimationEngine::new(1 << 10);
+    pooled_engine.set_calibration(Some(Arc::clone(&model)));
+    let pool = Pool::new(2);
+    let pooled = pooled_engine.estimate_network_pooled(&arch, &net, &fp, &pool).unwrap();
+
+    let cal = serial.calibrated_cycles().expect("serial path must stamp");
+    assert_eq!(Some(cal), pooled.calibrated_cycles(), "pooled path must stamp identically");
+    assert_eq!(serial.ci_bounds(), pooled.ci_bounds());
+    let (lo, hi) = serial.ci_bounds().unwrap();
+    assert!(lo <= cal && cal <= hi, "bounds must bracket the calibrated value");
+    for l in serial.layers.iter().filter(|l| l.estimate.is_some()) {
+        let lc = l.calibrated_cycles().expect("every non-fused layer is stamped");
+        let (llo, lhi) = l.ci_bounds().unwrap();
+        assert!(llo <= lc && lc <= lhi, "{}", l.layer_name);
+    }
+
+    // trace-carrying requests bypass the cache but still get stamped
+    let traced = serial_engine
+        .estimate_network(&arch, &net, &FixedPointConfig { keep_trace: true, ..fp })
+        .unwrap();
+    assert!(traced.calibrated_cycles().is_some());
+}

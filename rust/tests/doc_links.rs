@@ -8,7 +8,7 @@ use std::path::Path;
 
 /// The documentation set this repo ships. Presence is itself asserted, so
 /// deleting a book chapter without updating this list fails the build.
-const DOC_FILES: [&str; 11] = [
+const DOC_FILES: [&str; 12] = [
     "README.md",
     "arch/README.md",
     "net/README.md",
@@ -19,6 +19,7 @@ const DOC_FILES: [&str; 11] = [
     "docs/performance.md",
     "docs/dse.md",
     "docs/observability.md",
+    "docs/accuracy.md",
     "ROADMAP.md",
     // CHANGES.md is a log, not documentation: not checked
 ];
@@ -102,6 +103,7 @@ fn docs_book_is_linked_from_the_readme() {
         "docs/performance.md",
         "docs/dse.md",
         "docs/observability.md",
+        "docs/accuracy.md",
     ] {
         assert!(readme.contains(chapter), "README.md must link {chapter}");
     }

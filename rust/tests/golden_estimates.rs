@@ -1,0 +1,102 @@
+//! Golden snapshot: exact per-layer cycle counts for every shipped
+//! architecture description × every shipped network description, through
+//! the uncached reference path. Any change to the estimator, the mappers,
+//! the latency semantics, or the description frontends that moves a single
+//! cycle shows up as a diff against the checked-in fixture.
+//!
+//! Blessing a new baseline: run with `GOLDEN_UPDATE=1` (or check in a
+//! fixture containing the `UNINITIALIZED` sentinel) and the test rewrites
+//! `rust/tests/golden/estimates.txt` from the current build, then commit
+//! the diff alongside the change that explains it.
+
+use acadl_perf::aidg::FixedPointConfig;
+use acadl_perf::coordinator::{estimate_network, resolve_network, Arch, DescribedArch};
+
+const ARCHS: [&str; 4] = [
+    "arch/gemmini_16.toml",
+    "arch/plasticine_3x6.toml",
+    "arch/systolic_16x16.toml",
+    "arch/ultratrail_8x8.toml",
+];
+
+const NETS: [&str; 5] = [
+    "net/alexnet.toml",
+    "net/alexnet_reduced.toml",
+    "net/efficientnet.toml",
+    "net/efficientnet_reduced.toml",
+    "net/tc_resnet8.toml",
+];
+
+/// Render the full golden text: one `arch × net` block per combination, in
+/// the fixed order above, with per-layer and total cycles. Combinations a
+/// mapper rejects (e.g. 2-D networks on a 1-D accelerator) are recorded as
+/// `unmappable` so a *new* rejection is as loud as a cycle change.
+fn render() -> String {
+    let fp = FixedPointConfig::default();
+    let mut out = String::from(
+        "# Golden per-layer cycle estimates (uncached reference path).\n\
+         # Regenerate with: GOLDEN_UPDATE=1 cargo test --test golden_estimates\n",
+    );
+    for arch_file in ARCHS {
+        let mapper = Arch::Described(DescribedArch::file(arch_file))
+            .mapper()
+            .unwrap_or_else(|e| panic!("{arch_file}: {e:#}"));
+        for net_file in NETS {
+            let net = resolve_network(&format!("net:{net_file}"))
+                .unwrap_or_else(|e| panic!("{net_file}: {e:#}"));
+            out.push_str(&format!("\narch {arch_file} net {net_file}\n"));
+            match estimate_network(mapper.as_ref(), &net, &fp) {
+                Ok(e) => {
+                    for l in &e.layers {
+                        match &l.estimate {
+                            None => out.push_str(&format!("layer {} fused\n", l.layer_name)),
+                            Some(_) => out.push_str(&format!(
+                                "layer {} cycles {}\n",
+                                l.layer_name,
+                                l.cycles()
+                            )),
+                        }
+                    }
+                    out.push_str(&format!("total {}\n", e.total_cycles()));
+                }
+                Err(_) => out.push_str("unmappable\n"),
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_per_layer_estimates_are_pinned() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/estimates.txt");
+    let current = render();
+    let pinned = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading golden fixture {path}: {e}"));
+    if pinned.contains("UNINITIALIZED") || std::env::var_os("GOLDEN_UPDATE").is_some() {
+        std::fs::write(path, &current)
+            .unwrap_or_else(|e| panic!("blessing golden fixture {path}: {e}"));
+        eprintln!("golden fixture blessed: {path}");
+        return;
+    }
+    if pinned != current {
+        // a full diff dump would be unreadable; locate the first divergence
+        let mismatch = pinned
+            .lines()
+            .zip(current.lines())
+            .enumerate()
+            .find(|(_, (a, b))| a != b)
+            .map(|(i, (a, b))| format!("first difference at line {}:\n  pinned:  {a}\n  current: {b}", i + 1))
+            .unwrap_or_else(|| {
+                format!(
+                    "one output is a prefix of the other (pinned {} lines, current {} lines)",
+                    pinned.lines().count(),
+                    current.lines().count()
+                )
+            });
+        panic!(
+            "golden estimates diverged from {path}\n{mismatch}\n\
+             If the change is intentional, bless a new baseline: \
+             GOLDEN_UPDATE=1 cargo test --test golden_estimates"
+        );
+    }
+}
