@@ -1,7 +1,10 @@
 //! §Perf — AIDG evaluator throughput, end-to-end estimation latency,
 //! unified-engine cold/warm microbenchmarks, and the DSE sweep phase (the
 //! EXPERIMENTS.md §Perf numbers). Emits `BENCH_eval.json` (evaluator
-//! nodes/sec, iterations/sec, and peak frontier bytes per arch × net),
+//! nodes/sec, iterations/sec, and peak frontier bytes per arch × net, plus
+//! a `dispatch` section comparing the threaded superinstruction tape
+//! against the node-table walk: nodes/sec under both modes, fusion rate,
+//! and dynamic-latency memo hit rate),
 //! `BENCH_engine.json` (cold/warm wall-times, hit rates) and
 //! `BENCH_dse.json` (points/sec, pre-filter survival, cross-candidate warm
 //! hit rate, and the lane-batched sweep's `batch_nodes_per_sec` /
@@ -18,7 +21,9 @@ use acadl_perf::accel::{
 };
 use acadl_perf::acadl::text::ast::{Param, Span, Spanned, Sweep, SweepDim, SweepItem};
 use acadl_perf::acadl::text::{parse, PExpr};
-use acadl_perf::aidg::{estimate_layer, Evaluator, FixedPointConfig};
+use acadl_perf::aidg::{
+    estimate_layer, DispatchMode, DispatchStats, Evaluator, FixedPointConfig, FusionStats,
+};
 use acadl_perf::bench_harness::{bench, section, smoke, time_once};
 use acadl_perf::coordinator::{Arch, Pool};
 use acadl_perf::dnn::text::NetRegistry;
@@ -138,18 +143,84 @@ fn bench_eval(iter_cap: u64, nets: &[&str]) {
         100.0 * on_nps / off_nps.max(1e-9),
     );
 
+    // ---- dispatch: fused superinstruction tape vs node-table walk ----
+    // Same workload through both dispatch modes (they are pinned
+    // bit-identical by the differential suite, so this is a pure throughput
+    // comparison), plus the tape's static fusion rate and the
+    // dynamic-latency memo's hit rate from the threaded run.
+    let measure_mode = |mode: DispatchMode| {
+        let mut nodes = 0u64;
+        let mut dstats = DispatchStats::default();
+        let mut fusion = FusionStats::default();
+        let t0 = Instant::now();
+        for ml in ov_mapped.iter().filter(|l| !l.fused) {
+            for kernel in &ml.kernels {
+                let insts_budget =
+                    (200 * iter_cap / kernel.insts_per_iter.max(1) as u64).max(1);
+                let range = 0..kernel.k.min(iter_cap).min(insts_budget);
+                let mut ev = Evaluator::new_with_dispatch(ov_mapper.diagram(), mode);
+                ev.run(kernel, range).unwrap();
+                nodes += ev.st.nodes;
+                let s = ev.dispatch_stats();
+                dstats.threaded_instrs += s.threaded_instrs;
+                dstats.fallback_instrs += s.fallback_instrs;
+                dstats.fused_ops += s.fused_ops;
+                dstats.memo_hits += s.memo_hits;
+                dstats.memo_misses += s.memo_misses;
+                let f = ev.fusion_stats();
+                fusion.offsets += f.offsets;
+                fusion.fusible_offsets += f.fusible_offsets;
+                fusion.ops += f.ops;
+                fusion.nodes += f.nodes;
+                fusion.fused_cycles += f.fused_cycles;
+            }
+        }
+        (nodes as f64 / t0.elapsed().as_secs_f64().max(1e-9), dstats, fusion)
+    };
+    let (table_nps, _, _) = measure_mode(DispatchMode::NodeTable);
+    let (threaded_nps, dstats, fusion) = measure_mode(DispatchMode::Threaded);
+    let memo_total = dstats.memo_hits + dstats.memo_misses;
+    let memo_hit_rate = dstats.memo_hits as f64 / memo_total.max(1) as f64;
+    let fusible_frac = fusion.fusible_offsets as f64 / fusion.offsets.max(1) as f64;
+    println!(
+        "  dispatch/{ov_arch} x {}: {:.2} M nodes/s node-table, {:.2} M nodes/s threaded \
+         ({:.2}x) | fusion rate {:.1}%, memo hit rate {:.1}%",
+        nets[0],
+        table_nps / 1e6,
+        threaded_nps / 1e6,
+        threaded_nps / table_nps.max(1e-9),
+        fusion.fusion_rate() * 100.0,
+        memo_hit_rate * 100.0,
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"eval_program\",\n  \"iter_cap\": {iter_cap},\n  \
          \"obs_overhead\": {{\n    \"arch\": \"{ov_arch}\",\n    \"network\": \"{}\",\n    \
          \"nodes_per_sec_tracing_off\": {off_nps:.1},\n    \
          \"nodes_per_sec_tracing_on\": {on_nps:.1},\n    \
-         \"on_off_ratio\": {:.4}\n  }},\n  \"records\": [\n{}\n  ]\n}}\n",
+         \"on_off_ratio\": {:.4}\n  }},\n  \
+         \"dispatch\": {{\n    \"arch\": \"{ov_arch}\",\n    \"network\": \"{}\",\n    \
+         \"nodes_per_sec_node_table\": {table_nps:.1},\n    \
+         \"nodes_per_sec_threaded\": {threaded_nps:.1},\n    \
+         \"speedup\": {:.4},\n    \"fusion_rate\": {:.4},\n    \
+         \"fusible_offset_frac\": {fusible_frac:.4},\n    \
+         \"dyn_memo_hit_rate\": {memo_hit_rate:.4},\n    \
+         \"threaded_instrs\": {},\n    \"fallback_instrs\": {}\n  }},\n  \
+         \"records\": [\n{}\n  ]\n}}\n",
         nets[0],
         on_nps / off_nps.max(1e-9),
+        nets[0],
+        threaded_nps / table_nps.max(1e-9),
+        fusion.fusion_rate(),
+        dstats.threaded_instrs,
+        dstats.fallback_instrs,
         records.join(",\n")
     );
     std::fs::write("BENCH_eval.json", &json).expect("writing BENCH_eval.json");
-    println!("  => wrote BENCH_eval.json ({} records + obs_overhead)", records.len());
+    println!(
+        "  => wrote BENCH_eval.json ({} records + obs_overhead + dispatch)",
+        records.len()
+    );
 }
 
 fn main() {

@@ -321,6 +321,16 @@ impl Diagram {
         )
     }
 
+    /// Add a further address range `[base, base+words)` to an existing
+    /// memory (multi-range memories; overlap against other memories is
+    /// validated at `finalize`). Panics when `mem` is not a Memory object.
+    pub fn add_memory_range(&mut self, mem: ObjId, base: Addr, words: u64) {
+        match &mut self.objects[mem.idx()].kind {
+            ObjectKind::Memory { address_ranges, .. } => address_ranges.push((base, base + words)),
+            other => panic!("add_memory_range on non-memory object: {other:?}"),
+        }
+    }
+
     // ---- associations ----------------------------------------------------
 
     /// Forward association between pipeline stages / execute stages.

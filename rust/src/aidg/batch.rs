@@ -43,6 +43,11 @@ use super::eval::IterStat;
 use super::fixed_point::{
     estimate_layer, k_block, overlap, FixedPointConfig, LayerEstimate, Provenance,
 };
+use super::fuse;
+use super::ops::{
+    self, default_dispatch, DispatchMode, DispatchStats, FusionStats, LaneFrontier, ThreadCtx,
+    ThreadedProgram,
+};
 use super::program::{IterProgram, Lat, NodeKind, NO_LOCK};
 use super::state::{BufferFill, LanePlane, SlotRing};
 
@@ -108,6 +113,14 @@ pub struct BatchEvaluator<'d> {
     lanes: Vec<Lane<'d>>,
     emits: Vec<EmitBuf>,
     program: IterProgram,
+    /// Fused superinstruction tape, grown in lockstep with `program`.
+    threaded: ThreadedProgram,
+    /// How lowered offsets are interpreted (fixed at construction).
+    dispatch: DispatchMode,
+    /// Cumulative threaded-dispatch statistics (all lanes).
+    stats: DispatchStats,
+    /// Watermark of `stats` already flushed to the process counters.
+    flushed: DispatchStats,
     routes: Vec<Arc<Route>>,
     /// SlotRing matrix, `[owner_obj * n_lanes + lane]`.
     rings: Vec<SlotRing>,
@@ -121,8 +134,17 @@ pub struct BatchEvaluator<'d> {
 
 impl<'d> BatchEvaluator<'d> {
     /// A fresh batch over `members` (at most [`MAX_LANES`]); lane 0 is the
-    /// structural reference.
+    /// structural reference. Uses the process-default dispatch mode.
     pub fn new(members: &[(&'d Diagram, &'d LoopKernel)]) -> Self {
+        Self::new_with_dispatch(members, default_dispatch())
+    }
+
+    /// A fresh batch with an explicit dispatch mode (tests and benches
+    /// compare modes without touching the process-global default).
+    pub fn new_with_dispatch(
+        members: &[(&'d Diagram, &'d LoopKernel)],
+        dispatch: DispatchMode,
+    ) -> Self {
         assert!(
             !members.is_empty() && members.len() <= MAX_LANES,
             "batch must hold 1..={MAX_LANES} lanes (got {})",
@@ -174,6 +196,10 @@ impl<'d> BatchEvaluator<'d> {
             lanes,
             emits: (0..n).map(|_| EmitBuf::new()).collect(),
             program: IterProgram::default(),
+            threaded: ThreadedProgram::default(),
+            dispatch,
+            stats: DispatchStats::default(),
+            flushed: DispatchStats::default(),
             routes: Vec::new(),
             rings,
             plane: LanePlane::new(n),
@@ -204,6 +230,21 @@ impl<'d> BatchEvaluator<'d> {
     /// Total evictions so far (construction-time divergence included).
     pub fn evictions(&self) -> u64 {
         self.evictions
+    }
+
+    /// Cumulative threaded-dispatch execution statistics (all lanes).
+    pub fn dispatch_stats(&self) -> DispatchStats {
+        self.stats
+    }
+
+    /// Static composition of the fused tape vs the shared node table.
+    pub fn fusion_stats(&self) -> FusionStats {
+        self.threaded.fusion_stats(self.program.nodes.len())
+    }
+
+    /// The dispatch mode this batch interprets with.
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch
     }
 
     /// This lane's status.
@@ -261,8 +302,20 @@ impl<'d> BatchEvaluator<'d> {
         self.reserve(range.end.saturating_sub(range.start) as usize);
         let n_lanes = self.lanes.len();
         let fetch = self.fetch;
-        let Self { lanes, emits, program, routes, rings, plane, evictions, obs_compile_ns, .. } =
-            self;
+        let dispatch = self.dispatch;
+        let Self {
+            lanes,
+            emits,
+            program,
+            threaded,
+            stats,
+            routes,
+            rings,
+            plane,
+            evictions,
+            obs_compile_ns,
+            ..
+        } = self;
         for it in range.clone() {
             // Emit phase: each active lane fills its own arena.
             let mut max_len = 0usize;
@@ -286,6 +339,9 @@ impl<'d> BatchEvaluator<'d> {
                     let view = emits[li].view(offset);
                     let ok = step_lane(
                         program,
+                        threaded,
+                        dispatch,
+                        stats,
                         routes,
                         rings,
                         plane,
@@ -331,6 +387,7 @@ impl<'d> BatchEvaluator<'d> {
         if t_run != 0 {
             self.obs_run_ns += crate::obs::now_ns().saturating_sub(t_run);
         }
+        self.stats.flush(&mut self.flushed);
         Ok(())
     }
 }
@@ -347,6 +404,9 @@ impl<'d> BatchEvaluator<'d> {
 #[allow(clippy::too_many_arguments)]
 fn step_lane(
     program: &mut IterProgram,
+    threaded: &mut ThreadedProgram,
+    dispatch: DispatchMode,
+    stats: &mut DispatchStats,
     routes: &mut Vec<Arc<Route>>,
     rings: &mut [SlotRing],
     plane: &mut LanePlane,
@@ -366,6 +426,7 @@ fn step_lane(
         let instr = view.to_instruction();
         let route = lane.d.route(&instr)?;
         program.lower_offset(lane.d, &route, view);
+        fuse::fuse_offset(program, offset, fetch.ifs_lock, threaded);
         routes.push(route);
         lane.routes_checked = lane.routes_checked.max(offset + 1);
         if t_lower != 0 {
@@ -382,10 +443,24 @@ fn step_lane(
         }
     }
     let meta = program.offsets[offset];
+    let tmeta = threaded.offsets[offset];
+    let use_tape = dispatch == DispatchMode::Threaded && tmeta.fusible;
     // The batch has no slow memory path: a lane whose addresses stop
     // obeying the lowered partition is evicted (the serial re-run performs
-    // the full-scan fallback bit-identically).
-    if !program.partition_holds(lane.d, &meta, view) {
+    // the full-scan fallback bit-identically). On the tape the folded
+    // address guard *is* the partition check (fusible tapes carry
+    // single-range memberships only), so the eviction policy is identical.
+    let holds = if use_tape {
+        ops::guard_holds(
+            &threaded.ops[tmeta.ops.0 as usize..tmeta.ops.1 as usize],
+            &program.positions,
+            &meta,
+            view,
+        )
+    } else {
+        program.partition_holds(lane.d, &meta, view)
+    };
+    if !holds {
         return Ok(false);
     }
 
@@ -436,7 +511,43 @@ fn step_lane(
     rings[ring(fetch.ifs_lock)].insert(t_enter, t_leave, horizon);
     let mut prev_leave = t_leave;
 
-    // --- tail nodes ------------------------------------------------------
+    // --- tail nodes: threaded tape ---------------------------------------
+    if use_tape {
+        stats.threaded_instrs += 1;
+        let ThreadedProgram { ops: tape, stages, memo, .. } = threaded;
+        let mut f = LaneFrontier {
+            rings,
+            plane,
+            reg_last: &mut lane.reg_last,
+            li,
+            n_lanes,
+        };
+        let mut ctx = ThreadCtx {
+            f: &mut f,
+            d: lane.d,
+            view: *view,
+            positions: &program.positions,
+            stages,
+            memo,
+            horizon,
+            prev_leave,
+            nodes: 0,
+            stats,
+        };
+        ops::execute(&mut ctx, &tape[tmeta.ops.0 as usize..tmeta.ops.1 as usize]);
+        let (nodes, tape_leave) = (ctx.nodes, ctx.prev_leave);
+        lane.nodes += nodes;
+        if tape_leave > lane.cur_max_leave {
+            lane.cur_max_leave = tape_leave;
+        }
+        return Ok(true);
+    }
+    if dispatch == DispatchMode::Threaded {
+        // structural fallback: the offset never compiled to a tape
+        stats.fallback_instrs += 1;
+    }
+
+    // --- tail nodes: node-table walk --------------------------------------
     for ni in meta.nodes.0..meta.nodes.1 {
         let node = program.nodes[ni as usize];
         t_enter = rings[ring(node.owner)].gate(prev_leave);

@@ -41,7 +41,12 @@ use crate::ids::Cycle;
 use crate::isa::{EmitBuf, InstrView, LoopKernel};
 use crate::Result;
 
-use super::program::{IterProgram, Lat, NodeKind, NO_LOCK};
+use super::fuse;
+use super::ops::{
+    self, default_dispatch, DispatchMode, DispatchStats, FusionStats, TapeMeta, ThreadCtx,
+    ThreadedProgram,
+};
+use super::program::{IterProgram, Lat, NodeKind, OffsetMeta, NO_LOCK};
 use super::state::EvalState;
 
 /// Debug tracing flags, resolved once (env lookups are process-global locks
@@ -90,6 +95,14 @@ pub struct Evaluator<'d> {
     /// Lowered iteration program, grown offset-by-offset on the first
     /// iteration (§6.3: the template is iteration-invariant).
     program: IterProgram,
+    /// Fused superinstruction tape, grown in lockstep with `program`.
+    threaded: ThreadedProgram,
+    /// How lowered offsets are interpreted (fixed at construction).
+    dispatch: DispatchMode,
+    /// Cumulative threaded-dispatch statistics.
+    stats: DispatchStats,
+    /// Watermark of `stats` already flushed to the process counters.
+    flushed: DispatchStats,
     /// Route per iteration offset, retained only for the `verify-routes`
     /// check (the lowered program otherwise subsumes the route).
     #[cfg(feature = "verify-routes")]
@@ -112,8 +125,18 @@ pub struct Evaluator<'d> {
 }
 
 impl<'d> Evaluator<'d> {
-    /// A fresh evaluator over `d` with empty carried state.
+    /// A fresh evaluator over `d` with empty carried state, using the
+    /// process-default dispatch mode.
     pub fn new(d: &'d Diagram) -> Self {
+        Self::new_with_dispatch(d, default_dispatch())
+    }
+
+    /// A fresh evaluator with an explicit dispatch mode (tests and benches
+    /// compare modes without touching the process-global default).
+    /// `ACADL_TRACE_NODES` forces the node-table walk — per-node tracing
+    /// only exists there.
+    pub fn new_with_dispatch(d: &'d Diagram, dispatch: DispatchMode) -> Self {
+        let dispatch = if *TRACE_NODES { DispatchMode::NodeTable } else { dispatch };
         let f = d.fetch_config();
         let st = EvalState::new(d.num_objects(), d.num_regs(), |i| {
             d.lock(crate::ids::ObjId(i as u32)).capacity
@@ -124,6 +147,10 @@ impl<'d> Evaluator<'d> {
             iter_stats: Vec::new(),
             emit: EmitBuf::new(),
             program: IterProgram::default(),
+            threaded: ThreadedProgram::default(),
+            dispatch,
+            stats: DispatchStats::default(),
+            flushed: DispatchStats::default(),
             #[cfg(feature = "verify-routes")]
             routes: Vec::new(),
             ifs_lock: d.lock(f.fetch_stage).owner.idx() as u32,
@@ -172,6 +199,7 @@ impl<'d> Evaluator<'d> {
         if t_run != 0 {
             self.obs_run_ns += crate::obs::now_ns().saturating_sub(t_run);
         }
+        self.stats.flush(&mut self.flushed);
         Ok(())
     }
 
@@ -179,6 +207,21 @@ impl<'d> Evaluator<'d> {
     #[cfg(test)]
     pub(crate) fn program_len(&self) -> usize {
         self.program.len()
+    }
+
+    /// Cumulative threaded-dispatch execution statistics.
+    pub fn dispatch_stats(&self) -> DispatchStats {
+        self.stats
+    }
+
+    /// Static composition of the fused tape vs the node table.
+    pub fn fusion_stats(&self) -> FusionStats {
+        self.threaded.fusion_stats(self.program.nodes.len())
+    }
+
+    /// The dispatch mode this evaluator interprets with.
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch
     }
 
     /// `verify-routes` builds: re-derive the instruction's route and assert
@@ -248,6 +291,7 @@ impl<'d> Evaluator<'d> {
             let instr = view.to_instruction();
             let route = self.d.route(&instr)?;
             self.program.lower_offset(self.d, &route, view);
+            fuse::fuse_offset(&self.program, offset, self.ifs_lock, &mut self.threaded);
             #[cfg(feature = "verify-routes")]
             self.routes.push(route);
             if t_lower != 0 {
@@ -281,23 +325,107 @@ impl<'d> Evaluator<'d> {
         }
         self.st.last_ifs_enter = t_enter;
         self.st.b_enter.prune_below(fetch_leave.saturating_sub(1));
-        let mut t_stop = t_enter + self.ifs_lat;
+        let t_stop = t_enter + self.ifs_lat;
         self.st.nodes += 1;
 
         // t_leave of the IFS node: stall until the first tail object frees
         // (worked example n63: the store waits in the IFS for the store
         // unit).
         let horizon = self.st.horizon;
-        let mut t_leave = self.st.obj_ring[meta.first_tail_lock as usize].gate(t_stop);
+        let t_leave = self.st.obj_ring[meta.first_tail_lock as usize].gate(t_stop);
         self.st.obj_ring[self.ifs_lock as usize].insert(t_enter, t_leave, horizon);
-        let mut prev_leave = t_leave;
 
-        // The fast memory path is valid while the iteration's addresses
-        // still obey the lowered address→memory partition; otherwise the
-        // memory nodes of this instruction fall back to full scans.
-        let fast_mem = self.program.partition_holds(self.d, &meta, view);
+        // --- tail nodes: threaded tape or node-table walk -----------------
+        let tmeta = self.threaded.offsets[offset];
+        let prev_leave = if self.dispatch == DispatchMode::Threaded && tmeta.fusible {
+            if ops::guard_holds(
+                &self.threaded.ops[tmeta.ops.0 as usize..tmeta.ops.1 as usize],
+                &self.program.positions,
+                &meta,
+                view,
+            ) {
+                self.stats.threaded_instrs += 1;
+                self.tape_tail(tmeta, view, horizon, t_leave)
+            } else {
+                // Run-time fallback. For a fusible tape the guard *is* the
+                // partition check (single-range memberships only), so the
+                // partition is known broken: walk the node table with full
+                // `memory_of` scans, no recheck.
+                self.stats.fallback_instrs += 1;
+                self.table_tail(&meta, view, horizon, t_leave, false)
+            }
+        } else {
+            if self.dispatch == DispatchMode::Threaded {
+                // structural fallback: the offset never compiled to a tape
+                self.stats.fallback_instrs += 1;
+            }
+            // The fast memory path is valid while the iteration's addresses
+            // still obey the lowered address→memory partition; otherwise the
+            // memory nodes of this instruction fall back to full scans.
+            let fast_mem = self.program.partition_holds(self.d, &meta, view);
+            self.table_tail(&meta, view, horizon, t_leave, fast_mem)
+        };
 
-        // --- tail nodes ----------------------------------------------------
+        if prev_leave > self.cur_max_leave {
+            self.cur_max_leave = prev_leave;
+        }
+        if *TRACE {
+            eprintln!(
+                "AIDG i{} op={} leave={}",
+                self.st.instr_index - 1,
+                self.d.op_name(view.op),
+                prev_leave
+            );
+        }
+        Ok(())
+    }
+
+    /// Interpret one instruction's tail through the fused superinstruction
+    /// tape (the threaded path; the folded address guard already passed).
+    fn tape_tail(
+        &mut self,
+        tmeta: TapeMeta,
+        view: &InstrView<'_>,
+        horizon: Cycle,
+        prev_leave: Cycle,
+    ) -> Cycle {
+        let ThreadedProgram { ops, stages, memo, .. } = &mut self.threaded;
+        let mut ctx = ThreadCtx {
+            f: &mut self.st,
+            d: self.d,
+            view: *view,
+            positions: &self.program.positions,
+            stages,
+            memo,
+            horizon,
+            prev_leave,
+            nodes: 0,
+            stats: &mut self.stats,
+        };
+        ops::execute(&mut ctx, &ops[tmeta.ops.0 as usize..tmeta.ops.1 as usize]);
+        let (nodes, prev_leave) = (ctx.nodes, ctx.prev_leave);
+        self.st.nodes += nodes;
+        prev_leave
+    }
+
+    /// Interpret one instruction's tail through the node-table walk (the
+    /// `NodeTable` mode and the threaded path's fallback target).
+    ///
+    /// NOTE: this loop and the tape handlers in `super::ops` implement the
+    /// same Algorithm-1 semantics; any behavioral edit here must be
+    /// mirrored there (and in `batch::step_lane`) — the differential suites
+    /// pin all of them together.
+    fn table_tail(
+        &mut self,
+        meta: &OffsetMeta,
+        view: &InstrView<'_>,
+        horizon: Cycle,
+        mut prev_leave: Cycle,
+        fast_mem: bool,
+    ) -> Cycle {
+        let mut t_enter;
+        let mut t_stop;
+        let mut t_leave;
         for ni in meta.nodes.0..meta.nodes.1 {
             let node = self.program.nodes[ni as usize];
             t_enter = self.st.obj_ring[node.owner as usize].gate(prev_leave);
@@ -395,19 +523,7 @@ impl<'d> Evaluator<'d> {
             }
             prev_leave = t_leave;
         }
-
-        if prev_leave > self.cur_max_leave {
-            self.cur_max_leave = prev_leave;
-        }
-        if *TRACE {
-            eprintln!(
-                "AIDG i{} op={} leave={}",
-                self.st.instr_index - 1,
-                self.d.op_name(view.op),
-                prev_leave
-            );
-        }
-        Ok(())
+        prev_leave
     }
 }
 

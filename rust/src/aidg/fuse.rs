@@ -1,0 +1,158 @@
+//! Superinstruction fusion: lower one node-table offset into its threaded
+//! tape ([`super::ops`]).
+//!
+//! Runs once per instruction offset, immediately after
+//! `IterProgram::lower_offset`, inside the compile-timing window — the
+//! steady state never fuses. The pass is purely structural: it reads the
+//! just-lowered node slice and emits ops whose replay is bit-identical to
+//! the node-table walk (see the module docs of [`super::ops`] for the
+//! elision proof and the fallback contract).
+//!
+//! Fusion preconditions, checked here:
+//! - the offset has at least one tail node (always true for a routed
+//!   instruction — the FU node — but checked for safety);
+//! - every memory node carries a single-range membership check
+//!   (`end > base`). A multi-range memory would need `memory_of` scans the
+//!   folded guard cannot express, so the offset is marked non-fusible and
+//!   permanently takes the node-table path (a *structural* fallback, with
+//!   the normal partition check intact).
+
+use crate::ids::Cycle;
+
+use super::ops::{
+    LatSlot, MemoKind, Op, StageEntry, TapeMeta, ThreadedProgram, FLAG_ANCHORS_WRITES,
+    FLAG_PRE_GATED, FLAG_WRITE, OP_ADVANCE_CLOCK, OP_LOCKED_STEP, OP_MEM_STEP, OP_STAGE_STEP,
+    OP_WRITE_BACK,
+};
+use super::program::{IterProgram, Lat, NodeKind};
+
+/// True when this node is a fixed-latency pipeline stage (an `AdvanceClock`
+/// run candidate).
+fn fixed_stage(kind: &NodeKind) -> Option<Cycle> {
+    match kind {
+        NodeKind::Stage { lat: Lat::Fix(c) } => Some(*c),
+        _ => None,
+    }
+}
+
+/// Fuse the just-lowered `offset` of `program` onto the tape. Offsets must
+/// be fused in lowering order, exactly once each.
+pub(crate) fn fuse_offset(
+    program: &IterProgram,
+    offset: usize,
+    ifs_lock: u32,
+    tp: &mut ThreadedProgram,
+) {
+    debug_assert_eq!(offset, tp.offsets.len(), "offsets must be fused in order");
+    let meta = program.offsets[offset];
+    let nodes = &program.nodes[meta.nodes.0 as usize..meta.nodes.1 as usize];
+
+    let fusible = !nodes.is_empty()
+        && nodes.iter().all(|n| match n.kind {
+            NodeKind::Mem { base, end, .. } => end > base,
+            _ => true,
+        });
+    if !fusible {
+        let at = tp.ops.len() as u32;
+        tp.offsets.push(TapeMeta { ops: (at, at), fusible: false });
+        return;
+    }
+
+    let op_start = tp.ops.len() as u32;
+    // The gate preceding node 0 is the IFS look-ahead on `first_tail_lock`
+    // (== owner of node 0); the only ring mutated in between is the IFS
+    // lock's. For node i > 0 it is node i-1's look-ahead, with only
+    // owner_{i-1}'s ring mutated in between. Either way the entry gate is
+    // elidable iff the owner differs from the last-mutated ring.
+    let mut prev_owner = ifs_lock;
+    let mut i = 0usize;
+    while i < nodes.len() {
+        let node = nodes[i];
+
+        // Run of >= 2 consecutive fixed-latency stages -> one AdvanceClock.
+        if fixed_stage(&node.kind).is_some() {
+            let mut j = i;
+            while j < nodes.len() && fixed_stage(&nodes[j].kind).is_some() {
+                j += 1;
+            }
+            if j - i >= 2 {
+                let a = tp.stages.len() as u32;
+                let mut total: Cycle = 0;
+                for n in &nodes[i..j] {
+                    let lat = fixed_stage(&n.kind).unwrap();
+                    total += lat;
+                    tp.stages.push(StageEntry {
+                        owner: n.owner,
+                        next: n.next,
+                        lat,
+                        pre_gated: n.owner != prev_owner,
+                    });
+                    prev_owner = n.owner;
+                }
+                tp.ops.push(Op {
+                    code: OP_ADVANCE_CLOCK,
+                    a,
+                    b: tp.stages.len() as u32,
+                    total_lat: total,
+                    ..Op::DEFAULT
+                });
+                i = j;
+                continue;
+            }
+        }
+
+        let pre_gated = if node.owner != prev_owner { FLAG_PRE_GATED } else { 0 };
+        let op = match node.kind {
+            NodeKind::Stage { lat } => Op {
+                code: OP_STAGE_STEP,
+                flags: pre_gated,
+                owner: node.owner,
+                next: node.next,
+                lat: match lat {
+                    Lat::Fix(c) => LatSlot::Fix(c),
+                    Lat::Dyn(obj) => tp.memo_slot(MemoKind::Object(obj)),
+                },
+                ..Op::DEFAULT
+            },
+            NodeKind::Fu { lat, anchors_writes } => Op {
+                code: OP_LOCKED_STEP,
+                flags: pre_gated | if anchors_writes { FLAG_ANCHORS_WRITES } else { 0 },
+                owner: node.owner,
+                next: node.next,
+                lat: match lat {
+                    Lat::Fix(c) => LatSlot::Fix(c),
+                    Lat::Dyn(obj) => tp.memo_slot(MemoKind::Object(obj)),
+                },
+                ..Op::DEFAULT
+            },
+            NodeKind::Mem { write, per_txn, port, pos, base, end } => Op {
+                code: OP_MEM_STEP,
+                flags: pre_gated | if write { FLAG_WRITE } else { 0 },
+                owner: node.owner,
+                next: node.next,
+                a: pos.0,
+                b: pos.1,
+                lat: match per_txn {
+                    Lat::Fix(c) => LatSlot::Fix(c),
+                    Lat::Dyn(m) => tp.memo_slot(MemoKind::MemTxn(m, write)),
+                },
+                port,
+                base,
+                end,
+                ..Op::DEFAULT
+            },
+            NodeKind::WriteBack => Op {
+                code: OP_WRITE_BACK,
+                flags: pre_gated,
+                owner: node.owner,
+                next: node.next,
+                ..Op::DEFAULT
+            },
+        };
+        tp.ops.push(op);
+        prev_owner = node.owner;
+        i += 1;
+    }
+
+    tp.offsets.push(TapeMeta { ops: (op_start, tp.ops.len() as u32), fusible: true });
+}

@@ -12,13 +12,19 @@
 //! steady-state iterations replay
 //! a flat node table with zero heap allocations (the original
 //! re-derive-everything evaluator survives as the differential-test
-//! reference in `reference` under `#[cfg(test)]`). For DSE sweeps,
+//! reference in `reference` under `#[cfg(test)]`). The node table is
+//! further lowered into a fused superinstruction tape dispatched through a
+//! function-pointer table (`ops` + `fuse` — the default
+//! [`DispatchMode::Threaded`] path, with the node-table interpreter as the
+//! bit-identical escape hatch and fallback). For DSE sweeps,
 //! [`batch`] amortizes one such program walk across up to [`MAX_LANES`]
 //! digest-equal candidates in structure-of-arrays lockstep.
 
 pub mod batch;
 pub mod eval;
 pub mod fixed_point;
+pub(crate) mod fuse;
+pub(crate) mod ops;
 pub(crate) mod program;
 #[cfg(test)]
 pub(crate) mod reference;
@@ -28,5 +34,8 @@ pub use batch::{estimate_layer_batch, BatchEvaluator, BatchOutcome, LaneStatus, 
 pub use eval::{Evaluator, IterStat};
 pub use fixed_point::{
     estimate_layer, evaluate_whole, k_block, FixedPointConfig, LayerEstimate, Provenance,
+};
+pub use ops::{
+    default_dispatch, set_default_dispatch, DispatchMode, DispatchStats, FusionStats,
 };
 pub use state::EvalState;

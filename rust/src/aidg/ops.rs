@@ -1,0 +1,697 @@
+//! Threaded-code dispatch: the fused superinstruction tape and its
+//! fn-pointer interpreter.
+//!
+//! The node-table interpreter of [`super::program`] already replays
+//! template-invariant facts, but it still pays a per-node `match` over
+//! [`super::program::NodeKind`], a dynamic-latency expression walk per
+//! iteration, and a ring `gate` per node even when the algebra proves the
+//! gate is a no-op. This module lowers each compiled offset one stage
+//! further into a dense *tape* of superinstruction [`Op`]s dispatched
+//! through a per-opcode function-pointer table ([`Dispatch::TABLE`] — the
+//! computed-goto idiom in safe Rust):
+//!
+//! - `AdvanceClock` collapses a run of ≥ 2 fixed-latency pipeline-stage
+//!   nodes into one op over a [`StageEntry`] slice — one indirect call and
+//!   zero kind matches for the whole run;
+//! - `LockedStep` fuses an FU node's lock-acquire → compute → release
+//!   triple (ring gate, register dependencies + latency, ring insert) into
+//!   one op;
+//! - `MemStep` folds the single-range address membership check into the
+//!   access op itself: the pre-mutation [`guard_holds`] phase replays
+//!   exactly the partition check the node table would have run;
+//! - `Lat::Dyn` expression latencies are memoized per interned immediate
+//!   tuple in a fixed-size [`MemoSite`] cache — once per `(expr, imms)`
+//!   instead of once per iteration.
+//!
+//! ### The `pre_gated` elision
+//!
+//! Ring gates are pure and idempotent (`gate(x, gate(x, t)) == gate(x, t)`
+//! while `x`'s ring is unchanged), and `insert` mutates only its own ring.
+//! In the tail-node walk, node *i*'s leave time is already
+//! `gate(owner_{i+1}, t_stop_i)` (the structural look-ahead), and the only
+//! ring mutated before node *i+1*'s own gate is `owner_i`'s. When
+//! `owner_{i+1} != owner_i` the entry gate is therefore provably the
+//! identity and the tape skips it — computed per node at fuse time
+//! ([`super::fuse`]), never guessed at run time.
+//!
+//! ### Bit-identity contract
+//!
+//! A fused tape executes the **same ring gate/insert, scoreboard read/write
+//! and latency-evaluation sequence** as the node-table walk, minus only the
+//! operations proven to be identities, so both paths (and the
+//! `reference.rs` oracle) stay cycle-identical. Offsets that violate a
+//! fusion precondition (multi-range memory membership) never get a tape;
+//! iterations that break the folded address guard at run time fall back to
+//! the node-table walk for that instruction with the partition already
+//! known broken. Differential tests pin all of this.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::acadl::Diagram;
+use crate::ids::{Addr, Cycle};
+use crate::isa::InstrView;
+use crate::metrics::counters;
+
+use super::program::{OffsetMeta, NO_LOCK};
+use super::state::{EvalState, LanePlane, SlotRing};
+
+// ---------------------------------------------------------------------------
+// Dispatch mode knob
+// ---------------------------------------------------------------------------
+
+/// How an evaluator walks a lowered iteration program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Fused superinstruction tape through the fn-pointer dispatch table
+    /// (the default).
+    #[default]
+    Threaded = 0,
+    /// The per-node `match`-and-index interpreter over the flat node table
+    /// (the escape hatch, and the fallback target of the threaded path).
+    NodeTable = 1,
+}
+
+impl DispatchMode {
+    /// Parse a CLI spelling (`threaded` / `node-table`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "threaded" => Some(Self::Threaded),
+            "node-table" => Some(Self::NodeTable),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling of this mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Threaded => "threaded",
+            Self::NodeTable => "node-table",
+        }
+    }
+}
+
+/// Process-global default dispatch mode, read by evaluator constructors
+/// (`--dispatch` writes it once at startup).
+static DEFAULT_DISPATCH: AtomicU8 = AtomicU8::new(DispatchMode::Threaded as u8);
+
+/// Set the process-global default dispatch mode (the `--dispatch` CLI knob;
+/// tests and benches use the explicit `new_with_dispatch` constructors
+/// instead to stay race-free under the parallel test harness).
+pub fn set_default_dispatch(mode: DispatchMode) {
+    DEFAULT_DISPATCH.store(mode as u8, Ordering::Relaxed);
+}
+
+/// The process-global default dispatch mode.
+pub fn default_dispatch() -> DispatchMode {
+    if DEFAULT_DISPATCH.load(Ordering::Relaxed) == DispatchMode::NodeTable as u8 {
+        DispatchMode::NodeTable
+    } else {
+        DispatchMode::Threaded
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tape representation
+// ---------------------------------------------------------------------------
+
+/// Opcode: a run of fused fixed-latency stage nodes.
+pub(crate) const OP_ADVANCE_CLOCK: u8 = 0;
+/// Opcode: a single pipeline-stage node.
+pub(crate) const OP_STAGE_STEP: u8 = 1;
+/// Opcode: the FU lock-acquire → compute → release triple.
+pub(crate) const OP_LOCKED_STEP: u8 = 2;
+/// Opcode: a memory node with its address check folded into the guard.
+pub(crate) const OP_MEM_STEP: u8 = 3;
+/// Opcode: the writeBack pseudo-node.
+pub(crate) const OP_WRITE_BACK: u8 = 4;
+/// Number of opcodes (dispatch-table length).
+pub(crate) const N_OPCODES: usize = 5;
+
+/// Flag: the entry gate is provably the identity (see module docs).
+pub(crate) const FLAG_PRE_GATED: u8 = 1;
+/// Flag (`MemStep`): write transaction (vs read).
+pub(crate) const FLAG_WRITE: u8 = 2;
+/// Flag (`LockedStep`): write registers anchor here (no writeBack follows).
+pub(crate) const FLAG_ANCHORS_WRITES: u8 = 4;
+
+/// Lowered latency slot of one op: fixed, or memoized dynamic.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum LatSlot {
+    /// Template-invariant latency, folded at fuse time.
+    Fix(Cycle),
+    /// Immediate-dependent latency, served through [`ThreadedProgram::memo`].
+    Memo(u32),
+}
+
+/// One superinstruction on the tape. Dense and uniform: every handler reads
+/// only the fields its opcode defines, so the stream stays branch-predictable.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Op {
+    /// Opcode — index into [`Dispatch::TABLE`].
+    pub code: u8,
+    /// `FLAG_*` bit set.
+    pub flags: u8,
+    /// Lock-owner ring index of this node.
+    pub owner: u32,
+    /// Ring index of the next tail node ([`NO_LOCK`] = last): the
+    /// structural look-ahead gate.
+    pub next: u32,
+    /// `AdvanceClock`: `[a, b)` into [`ThreadedProgram::stages`];
+    /// `MemStep`: `[a, b)` into the program's interned position pool.
+    pub a: u32,
+    /// Exclusive end of the `a` range.
+    pub b: u32,
+    /// Residency latency (`MemStep`: per-transaction latency).
+    pub lat: LatSlot,
+    /// `MemStep`: words per transaction.
+    pub port: u32,
+    /// `MemStep`: folded single-range membership check `[base, end)`.
+    pub base: Addr,
+    /// Exclusive end of the folded membership check.
+    pub end: Addr,
+    /// `AdvanceClock`: precomputed sum of the fused fixed latencies (the
+    /// total clock advance when no ring stalls — reported by
+    /// [`FusionStats::fused_cycles`]).
+    pub total_lat: Cycle,
+}
+
+impl Op {
+    /// All-zero template for struct-update construction in the fuser.
+    pub(crate) const DEFAULT: Op = Op {
+        code: 0,
+        flags: 0,
+        owner: 0,
+        next: NO_LOCK,
+        a: 0,
+        b: 0,
+        lat: LatSlot::Fix(0),
+        port: 1,
+        base: 0,
+        end: 0,
+        total_lat: 0,
+    };
+}
+
+/// One fused stage of an `AdvanceClock` run.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct StageEntry {
+    /// Lock-owner ring index.
+    pub owner: u32,
+    /// Next node's ring ([`NO_LOCK`] = last node of the instruction).
+    pub next: u32,
+    /// Fixed residency latency.
+    pub lat: Cycle,
+    /// Entry gate provably elided (see module docs).
+    pub pre_gated: bool,
+}
+
+/// Per-offset tape metadata.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TapeMeta {
+    /// `[start, end)` into [`ThreadedProgram::ops`].
+    pub ops: (u32, u32),
+    /// False: a fusion precondition failed at fuse time (multi-range
+    /// memory); the offset permanently takes the node-table path.
+    pub fusible: bool,
+}
+
+/// What a dynamic-latency memo site evaluates on a miss.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum MemoKind {
+    /// Stage/FU residency latency of an object.
+    Object(crate::ids::ObjId),
+    /// Per-transaction memory latency (object, write?).
+    MemTxn(crate::ids::ObjId, bool),
+}
+
+/// Immediate words a memo entry can key on inline; longer tuples bypass the
+/// cache (counted as misses).
+const MEMO_IMMS: usize = 6;
+/// Direct-mapped ways per memo site (power of two).
+const MEMO_WAYS: usize = 32;
+
+/// One cached `(imms → latency)` way.
+#[derive(Debug, Clone, Copy)]
+struct MemoEntry {
+    /// Valid immediate count; `u8::MAX` marks an empty way.
+    len: u8,
+    imms: [i64; MEMO_IMMS],
+    lat: Cycle,
+}
+
+/// Direct-mapped memo cache of one `Lat::Dyn` site. Allocated once at fuse
+/// time (the compile phase); steady-state lookups touch fixed storage only,
+/// preserving the zero-allocation contract. Digest-equal batch lanes share
+/// sites safely: equal digests pin equal latency expressions, so equal
+/// immediate tuples yield equal latencies in every lane.
+#[derive(Debug)]
+pub(crate) struct MemoSite {
+    kind: MemoKind,
+    ways: Box<[MemoEntry; MEMO_WAYS]>,
+}
+
+impl MemoSite {
+    pub(crate) fn new(kind: MemoKind) -> Self {
+        Self {
+            kind,
+            ways: Box::new([MemoEntry { len: u8::MAX, imms: [0; MEMO_IMMS], lat: 0 }; MEMO_WAYS]),
+        }
+    }
+
+    /// Evaluate this site's latency expression directly.
+    #[inline]
+    fn eval(&self, d: &Diagram, imms: &[i64]) -> Cycle {
+        match self.kind {
+            MemoKind::Object(obj) => d.object_latency_imms(obj, imms),
+            MemoKind::MemTxn(mem, write) => d.mem_txn_latency_imms(mem, write, imms),
+        }
+    }
+
+    /// Memoized latency for the current immediates.
+    #[inline]
+    fn lookup(&mut self, d: &Diagram, imms: &[i64], stats: &mut DispatchStats) -> Cycle {
+        if imms.len() > MEMO_IMMS {
+            stats.memo_misses += 1;
+            return self.eval(d, imms);
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &v in imms {
+            h = (h ^ v as u64).wrapping_mul(0x0100_0000_01b3);
+        }
+        let e = &mut self.ways[(h as usize) & (MEMO_WAYS - 1)];
+        if e.len as usize == imms.len() && e.imms[..imms.len()] == *imms {
+            stats.memo_hits += 1;
+            return e.lat;
+        }
+        stats.memo_misses += 1;
+        let lat = match self.kind {
+            MemoKind::Object(obj) => d.object_latency_imms(obj, imms),
+            MemoKind::MemTxn(mem, write) => d.mem_txn_latency_imms(mem, write, imms),
+        };
+        e.len = imms.len() as u8;
+        e.imms[..imms.len()].copy_from_slice(imms);
+        e.lat = lat;
+        lat
+    }
+}
+
+/// The threaded-code lowering of one [`super::program::IterProgram`]: one
+/// [`TapeMeta`] per offset, a flat op tape, the fused-stage pool, and the
+/// dynamic-latency memo sites. Grown in lockstep with the node table by
+/// [`super::fuse::fuse_offset`].
+#[derive(Debug, Default)]
+pub(crate) struct ThreadedProgram {
+    /// Per-offset tape ranges.
+    pub offsets: Vec<TapeMeta>,
+    /// Flat superinstruction tape.
+    pub ops: Vec<Op>,
+    /// `AdvanceClock` stage-entry pool.
+    pub stages: Vec<StageEntry>,
+    /// Dynamic-latency memo sites, indexed by [`LatSlot::Memo`].
+    pub memo: Vec<MemoSite>,
+}
+
+impl ThreadedProgram {
+    /// Allocate a memo site and return its latency slot.
+    pub(crate) fn memo_slot(&mut self, kind: MemoKind) -> LatSlot {
+        let idx = self.memo.len() as u32;
+        self.memo.push(MemoSite::new(kind));
+        LatSlot::Memo(idx)
+    }
+
+    /// Static fusion composition vs a node table of `nodes` entries.
+    pub(crate) fn fusion_stats(&self, nodes: usize) -> FusionStats {
+        FusionStats {
+            offsets: self.offsets.len(),
+            fusible_offsets: self.offsets.iter().filter(|m| m.fusible).count(),
+            ops: self.ops.len(),
+            nodes,
+            fused_cycles: self
+                .ops
+                .iter()
+                .filter(|o| o.code == OP_ADVANCE_CLOCK)
+                .map(|o| o.total_lat)
+                .sum(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Statistics
+// ---------------------------------------------------------------------------
+
+/// Cumulative threaded-dispatch execution statistics of one evaluator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DispatchStats {
+    /// Instructions executed through the fused tape.
+    pub threaded_instrs: u64,
+    /// Instructions routed to the node-table walk instead (structural
+    /// non-fusible offsets and run-time guard failures).
+    pub fallback_instrs: u64,
+    /// Superinstruction ops executed on the tape.
+    pub fused_ops: u64,
+    /// Dynamic-latency memo hits.
+    pub memo_hits: u64,
+    /// Dynamic-latency memo misses (cold fills and long-tuple bypasses).
+    pub memo_misses: u64,
+}
+
+impl DispatchStats {
+    /// Flush the delta since `flushed` into the process-global counters and
+    /// advance the watermark (keeps `self` cumulative for introspection).
+    pub(crate) fn flush(&self, flushed: &mut DispatchStats) {
+        counters::note_dispatch(
+            self.threaded_instrs - flushed.threaded_instrs,
+            self.fallback_instrs - flushed.fallback_instrs,
+            self.fused_ops - flushed.fused_ops,
+            self.memo_hits - flushed.memo_hits,
+            self.memo_misses - flushed.memo_misses,
+        );
+        *flushed = *self;
+    }
+}
+
+/// Static composition of one evaluator's fused tape vs its node table.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FusionStats {
+    /// Lowered instruction offsets.
+    pub offsets: usize,
+    /// Offsets that compiled to a fusible tape.
+    pub fusible_offsets: usize,
+    /// Superinstruction ops across all fusible tapes.
+    pub ops: usize,
+    /// Node-table nodes across all offsets (the unfused op count).
+    pub nodes: usize,
+    /// Fixed stage cycles folded into `AdvanceClock` superinstructions.
+    pub fused_cycles: Cycle,
+}
+
+impl FusionStats {
+    /// Fraction of node-table nodes eliminated by fusion on fusible tapes
+    /// (`1 - ops/nodes`; 0 when nothing lowered).
+    pub fn fusion_rate(&self) -> f64 {
+        if self.nodes == 0 {
+            0.0
+        } else {
+            1.0 - self.ops as f64 / self.nodes as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frontier abstraction (serial EvalState vs one batch lane)
+// ---------------------------------------------------------------------------
+
+/// The mutable evaluation frontier a tape executes against — implemented by
+/// the serial [`EvalState`] and by one lane's view of the batched SoA state
+/// ([`LaneFrontier`]). Methods mirror the exact operations of the
+/// node-table walk so the tape stays bit-identical by construction.
+pub(crate) trait Frontier {
+    /// Earliest `t' >= t` with a free slot on ring `x`.
+    fn gate(&self, x: u32, t: Cycle) -> Cycle;
+    /// Record an occupant over `[enter, leave)` on ring `x`.
+    fn insert(&mut self, x: u32, enter: Cycle, leave: Cycle, horizon: Cycle);
+    /// Last-accessor leave time of register `r`.
+    fn reg_last(&self, r: u32) -> Cycle;
+    /// Record `t` as the last-accessor leave time of register `r`.
+    fn set_reg_last(&mut self, r: u32, t: Cycle);
+    /// Last-accessor leave time of address `a`.
+    fn addr_last(&mut self, a: Addr) -> Cycle;
+    /// Record `t` as the last-accessor leave time of address `a`.
+    fn set_addr_last(&mut self, a: Addr, t: Cycle);
+}
+
+impl Frontier for EvalState {
+    #[inline]
+    fn gate(&self, x: u32, t: Cycle) -> Cycle {
+        self.obj_ring[x as usize].gate(t)
+    }
+
+    #[inline]
+    fn insert(&mut self, x: u32, enter: Cycle, leave: Cycle, horizon: Cycle) {
+        self.obj_ring[x as usize].insert(enter, leave, horizon);
+    }
+
+    #[inline]
+    fn reg_last(&self, r: u32) -> Cycle {
+        self.reg_last[r as usize]
+    }
+
+    #[inline]
+    fn set_reg_last(&mut self, r: u32, t: Cycle) {
+        self.reg_last[r as usize] = t;
+    }
+
+    #[inline]
+    fn addr_last(&mut self, a: Addr) -> Cycle {
+        self.addr_last.get(a)
+    }
+
+    #[inline]
+    fn set_addr_last(&mut self, a: Addr, t: Cycle) {
+        self.addr_last.set(a, t);
+    }
+}
+
+/// One batch lane's frontier: the SoA ring matrix and laned address plane
+/// addressed at a fixed lane index (`ring = obj * n_lanes + lane`), exactly
+/// the indexing of `batch::step_lane`'s node-table walk.
+pub(crate) struct LaneFrontier<'a> {
+    /// SlotRing matrix slice, `[owner_obj * n_lanes + lane]`.
+    pub rings: &'a mut [SlotRing],
+    /// Shared laned address plane.
+    pub plane: &'a mut LanePlane,
+    /// This lane's register scoreboard.
+    pub reg_last: &'a mut [Cycle],
+    /// Lane index.
+    pub li: usize,
+    /// Lanes per ring row.
+    pub n_lanes: usize,
+}
+
+impl Frontier for LaneFrontier<'_> {
+    #[inline]
+    fn gate(&self, x: u32, t: Cycle) -> Cycle {
+        self.rings[x as usize * self.n_lanes + self.li].gate(t)
+    }
+
+    #[inline]
+    fn insert(&mut self, x: u32, enter: Cycle, leave: Cycle, horizon: Cycle) {
+        self.rings[x as usize * self.n_lanes + self.li].insert(enter, leave, horizon);
+    }
+
+    #[inline]
+    fn reg_last(&self, r: u32) -> Cycle {
+        self.reg_last[r as usize]
+    }
+
+    #[inline]
+    fn set_reg_last(&mut self, r: u32, t: Cycle) {
+        self.reg_last[r as usize] = t;
+    }
+
+    #[inline]
+    fn addr_last(&mut self, a: Addr) -> Cycle {
+        self.plane.get(self.li, a)
+    }
+
+    #[inline]
+    fn set_addr_last(&mut self, a: Addr, t: Cycle) {
+        self.plane.set(self.li, a, t);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+/// Per-instruction execution context threaded through the handlers.
+pub(crate) struct ThreadCtx<'a, 'v, F: Frontier> {
+    /// The mutable frontier.
+    pub f: &'a mut F,
+    /// The diagram (dynamic-latency miss evaluation).
+    pub d: &'a Diagram,
+    /// The current instruction's operands.
+    pub view: InstrView<'v>,
+    /// The program's interned position pool (`MemStep` operand indices).
+    pub positions: &'a [u32],
+    /// `AdvanceClock` stage-entry pool.
+    pub stages: &'a [StageEntry],
+    /// Dynamic-latency memo sites.
+    pub memo: &'a mut [MemoSite],
+    /// Evaluation horizon (ring pruning bound).
+    pub horizon: Cycle,
+    /// Leave time of the previous node (IFS `t_leave` at tape entry; the
+    /// instruction's final leave time at tape exit).
+    pub prev_leave: Cycle,
+    /// AIDG nodes executed by this tape (the caller folds it into its node
+    /// counter).
+    pub nodes: u64,
+    /// Execution statistics accumulator.
+    pub stats: &'a mut DispatchStats,
+}
+
+/// Handler signature: one opcode against the context.
+pub(crate) type Handler<F> = fn(&mut ThreadCtx<'_, '_, F>, &Op);
+
+/// The computed-goto surface: a frontier type carries its monomorphized
+/// fn-pointer table as an associated const (an inner `const` cannot
+/// reference the enclosing generics, a default associated const can).
+pub(crate) trait Dispatch: Frontier + Sized {
+    /// Per-opcode handler table, indexed by [`Op::code`].
+    const TABLE: [Handler<Self>; N_OPCODES] = [
+        op_advance_clock::<Self>,
+        op_stage_step::<Self>,
+        op_locked_step::<Self>,
+        op_mem_step::<Self>,
+        op_write_back::<Self>,
+    ];
+}
+
+impl<F: Frontier> Dispatch for F {}
+
+/// Execute one instruction's tape: a single indirect call per
+/// superinstruction, no kind matching.
+#[inline]
+pub(crate) fn execute<F: Dispatch>(ctx: &mut ThreadCtx<'_, '_, F>, ops: &[Op]) {
+    ctx.stats.fused_ops += ops.len() as u64;
+    for op in ops {
+        F::TABLE[op.code as usize](ctx, op);
+    }
+}
+
+/// Pre-mutation fusion guard: field lengths plus every `MemStep`'s folded
+/// single-range membership check. For a fusible tape this is exactly
+/// [`super::program::IterProgram::partition_holds`] (fusible tapes contain
+/// single-range memory nodes only), so a guard failure implies the
+/// node-table fallback must run with the partition known broken.
+#[inline]
+pub(crate) fn guard_holds(
+    ops: &[Op],
+    positions: &[u32],
+    meta: &OffsetMeta,
+    view: &InstrView<'_>,
+) -> bool {
+    if view.read_addrs.len() != meta.ra_len as usize
+        || view.write_addrs.len() != meta.wa_len as usize
+    {
+        return false;
+    }
+    for op in ops {
+        if op.code == OP_MEM_STEP {
+            let addrs =
+                if op.flags & FLAG_WRITE != 0 { view.write_addrs } else { view.read_addrs };
+            for &p in &positions[op.a as usize..op.b as usize] {
+                let a = addrs[p as usize];
+                if a < op.base || a >= op.end {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Entry time of an op: the elided or explicit ring gate.
+#[inline]
+fn enter<F: Frontier>(ctx: &ThreadCtx<'_, '_, F>, op: &Op) -> Cycle {
+    if op.flags & FLAG_PRE_GATED != 0 {
+        ctx.prev_leave
+    } else {
+        ctx.f.gate(op.owner, ctx.prev_leave)
+    }
+}
+
+/// Shared op epilogue: structural look-ahead gate, ring insert, node count.
+#[inline]
+fn close<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, op: &Op, t_enter: Cycle, t_stop: Cycle) -> Cycle {
+    let t_leave = if op.next != NO_LOCK { ctx.f.gate(op.next, t_stop) } else { t_stop };
+    ctx.f.insert(op.owner, t_enter, t_leave, ctx.horizon);
+    ctx.nodes += 1;
+    ctx.prev_leave = t_leave;
+    t_leave
+}
+
+/// Resolve an op's latency slot against the current immediates.
+#[inline]
+fn lat_of<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, slot: LatSlot) -> Cycle {
+    match slot {
+        LatSlot::Fix(c) => c,
+        LatSlot::Memo(i) => {
+            let ThreadCtx { memo, stats, d, view, .. } = ctx;
+            memo[i as usize].lookup(d, view.imms, stats)
+        }
+    }
+}
+
+/// `AdvanceClock`: replay a fused run of fixed-latency stage nodes.
+fn op_advance_clock<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, op: &Op) {
+    let horizon = ctx.horizon;
+    let mut prev = ctx.prev_leave;
+    for e in &ctx.stages[op.a as usize..op.b as usize] {
+        let t_enter = if e.pre_gated { prev } else { ctx.f.gate(e.owner, prev) };
+        let t_stop = t_enter + e.lat;
+        let t_leave = if e.next != NO_LOCK { ctx.f.gate(e.next, t_stop) } else { t_stop };
+        ctx.f.insert(e.owner, t_enter, t_leave, horizon);
+        prev = t_leave;
+    }
+    ctx.nodes += (op.b - op.a) as u64;
+    ctx.prev_leave = prev;
+}
+
+/// `StageStep`: one pipeline-stage node (possibly dynamic latency).
+fn op_stage_step<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, op: &Op) {
+    let t_enter = enter(ctx, op);
+    let lat = lat_of(ctx, op.lat);
+    close(ctx, op, t_enter, t_enter + lat);
+}
+
+/// `LockedStep`: the FU acquire → compute → release triple.
+fn op_locked_step<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, op: &Op) {
+    let view = ctx.view;
+    let t_enter = enter(ctx, op);
+    let mut deps: Cycle = 0;
+    for r in view.read_regs.iter().chain(view.write_regs.iter()) {
+        deps = deps.max(ctx.f.reg_last(r.0));
+    }
+    let lat = lat_of(ctx, op.lat);
+    let t_leave = close(ctx, op, t_enter, t_enter.max(deps) + lat);
+    for r in view.read_regs {
+        ctx.f.set_reg_last(r.0, t_leave);
+    }
+    if op.flags & FLAG_ANCHORS_WRITES != 0 {
+        for r in view.write_regs {
+            ctx.f.set_reg_last(r.0, t_leave);
+        }
+    }
+}
+
+/// `MemStep`: one memory node over its interned operand positions (the
+/// membership check already ran in [`guard_holds`]).
+fn op_mem_step<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, op: &Op) {
+    let view = ctx.view;
+    let addrs = if op.flags & FLAG_WRITE != 0 { view.write_addrs } else { view.read_addrs };
+    let (a, b) = (op.a as usize, op.b as usize);
+    let t_enter = enter(ctx, op);
+    let mut deps: Cycle = 0;
+    for &p in &ctx.positions[a..b] {
+        deps = deps.max(ctx.f.addr_last(addrs[p as usize]));
+    }
+    let per = lat_of(ctx, op.lat);
+    let lat = per * ((b - a) as u64).div_ceil(op.port as u64).max(1);
+    let t_leave = close(ctx, op, t_enter, t_enter.max(deps) + lat);
+    for &p in &ctx.positions[a..b] {
+        ctx.f.set_addr_last(addrs[p as usize], t_leave);
+    }
+}
+
+/// `WriteBackStep`: the zero-latency writeBack pseudo-node (unbounded
+/// lock); write registers anchor here.
+fn op_write_back<F: Frontier>(ctx: &mut ThreadCtx<'_, '_, F>, op: &Op) {
+    let view = ctx.view;
+    let t_enter = enter(ctx, op);
+    let t_leave = close(ctx, op, t_enter, t_enter);
+    for r in view.write_regs {
+        ctx.f.set_reg_last(r.0, t_leave);
+    }
+}

@@ -318,207 +318,107 @@ impl IterProgram {
 mod tests {
     use std::sync::Arc;
 
-    use crate::acadl::{Diagram, Latency};
     use crate::aidg::reference::RefEvaluator;
-    use crate::aidg::Evaluator;
+    use crate::aidg::{DispatchMode, Evaluator};
     use crate::dnn::zoo;
-    use crate::ids::{OpId, RegId};
     use crate::isa::LoopKernel;
     use crate::mapping::{
         gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper,
         tensor_op::TensorOpMapper, Mapper,
     };
-    use crate::testkit::{Prop, Rng};
+    use crate::testkit::{
+        migrating_kernel, multirange_machine, random_kernel, random_machine, Prop, Rng,
+    };
 
-    /// A randomized scalar machine: random fetch geometry, an optional
-    /// expression-latency pipeline stage, 1–3 memories with mixed fixed /
-    /// immediate-dependent latencies and port widths, and two FUs.
-    struct RandMachine {
-        d: Diagram,
-        load: OpId,
-        store: OpId,
-        mac: OpId,
-        regs: Vec<RegId>,
-        mem_bases: Vec<u64>,
-    }
-
-    fn random_machine(rng: &mut Rng) -> RandMachine {
-        let mut d = Diagram::new("rand");
-        let pw = rng.range_u32(1, 3);
-        let (_im, ifs) = d.add_fetch(
-            "imem",
-            rng.range_u64(1, 2),
-            pw,
-            "ifs",
-            rng.range_u64(1, 2),
-            rng.range_u32(1, 4),
-        );
-        let es = d.add_execute_stage("es");
-        let stage = rng.bool().then(|| {
-            let lat = if rng.bool() {
-                Latency::Fixed(rng.range_u64(0, 2))
-            } else {
-                Latency::parse("1 + imm0 % 3").unwrap()
-            };
-            d.add_stage("ps", lat)
-        });
-        let (rf, regs) = d.add_regfile("rf", "r", 4);
-        let n_mems = rng.range_usize(1, 3);
-        let mut mems = Vec::new();
-        let mut mem_bases = Vec::new();
-        for i in 0..n_mems {
-            let base = (i as u64) << 20;
-            let rl = if rng.bool() {
-                Latency::Fixed(rng.range_u64(1, 6))
-            } else {
-                Latency::parse("2 + imm1 % 4").unwrap()
-            };
-            let wl = if rng.bool() {
-                Latency::Fixed(rng.range_u64(1, 6))
-            } else {
-                Latency::parse("1 + imm0 % 2").unwrap()
-            };
-            let m = d.add_memory(
-                &format!("mem{i}"),
-                rl,
-                wl,
-                rng.range_u32(1, 4),
-                rng.range_u32(1, 2),
-                base,
-                1 << 20,
-            );
-            mems.push(m);
-            mem_bases.push(base);
-        }
-        let lsu_lat = if rng.bool() {
-            Latency::Fixed(rng.range_u64(1, 2))
-        } else {
-            Latency::parse("1 + imm0 % 2").unwrap()
-        };
-        let lsu = d.add_fu(es, "lsu", lsu_lat, &["load", "store"]);
-        let alu = d.add_fu(es, "alu", Latency::Fixed(rng.range_u64(1, 3)), &["mac"]);
-        match stage {
-            Some(s) => {
-                d.forward(ifs, s);
-                d.forward(s, es);
-            }
-            None => d.forward(ifs, es),
-        }
-        d.fu_reads(lsu, rf);
-        d.fu_writes(lsu, rf);
-        d.fu_reads(alu, rf);
-        d.fu_writes(alu, rf);
-        for &m in &mems {
-            d.mem_reads(lsu, m);
-            d.mem_writes(lsu, m);
-        }
-        let (load, store, mac) = (d.op("load"), d.op("store"), d.op("mac"));
-        d.finalize().unwrap();
-        RandMachine { d, load, store, mac, regs, mem_bases }
-    }
-
-    /// Template slot of a random §6.3 kernel: fixed op/registers/shape,
-    /// addresses strided by the iteration index, immediates varying per
-    /// iteration (exercising the dynamic-latency escape hatch).
-    #[derive(Clone, Copy)]
-    enum Slot {
-        Load { w: usize, mem: usize, mem2: Option<usize>, na: u64, off: u64, stride: u64 },
-        Store { r: usize, mem: usize, off: u64, stride: u64 },
-        Mac { a: usize, b: usize, w: usize },
-    }
-
-    fn random_kernel(rng: &mut Rng, m: &RandMachine, k: u64) -> LoopKernel {
-        let n_slots = rng.range_usize(2, 7);
-        let mut slots = Vec::with_capacity(n_slots);
-        for _ in 0..n_slots {
-            let s = match rng.range_u32(0, 3) {
-                0 | 1 => Slot::Load {
-                    w: rng.range_usize(0, m.regs.len() - 1),
-                    mem: rng.range_usize(0, m.mem_bases.len() - 1),
-                    mem2: (m.mem_bases.len() > 1 && rng.bool())
-                        .then(|| rng.range_usize(0, m.mem_bases.len() - 1)),
-                    na: rng.range_u64(1, 4),
-                    off: rng.range_u64(0, 4096),
-                    stride: rng.range_u64(1, 8),
-                },
-                2 => Slot::Store {
-                    r: rng.range_usize(0, m.regs.len() - 1),
-                    mem: rng.range_usize(0, m.mem_bases.len() - 1),
-                    off: rng.range_u64(0, 4096),
-                    stride: rng.range_u64(1, 8),
-                },
-                _ => Slot::Mac {
-                    a: rng.range_usize(0, m.regs.len() - 1),
-                    b: rng.range_usize(0, m.regs.len() - 1),
-                    w: rng.range_usize(0, m.regs.len() - 1),
-                },
-            };
-            slots.push(s);
-        }
-        let (load, store, mac) = (m.load, m.store, m.mac);
-        let regs = m.regs.clone();
-        let bases = m.mem_bases.clone();
-        let n = slots.len();
-        LoopKernel::new(
-            "rand",
-            k,
-            n,
-            Box::new(move |it, buf| {
-                for s in &slots {
-                    match *s {
-                        Slot::Load { w, mem, mem2, na, off, stride } => {
-                            let mut b = buf
-                                .instr(load)
-                                .writes(&[regs[w]])
-                                .read_mem_iter(
-                                    (0..na).map(|q| bases[mem] + off + stride * it + q),
-                                );
-                            if let Some(m2) = mem2 {
-                                b = b.read_mem(&[bases[m2] + off + stride * it]);
-                            }
-                            b.imm((it % 3) as i64).imm((it % 5) as i64);
-                        }
-                        Slot::Store { r, mem, off, stride } => {
-                            buf.instr(store)
-                                .reads(&[regs[r]])
-                                .write_mem(&[bases[mem] + off + stride * it])
-                                .imm((it % 2) as i64)
-                                .imm((it % 7) as i64);
-                        }
-                        Slot::Mac { a, b, w } => {
-                            buf.instr(mac)
-                                .reads(&[regs[a], regs[b]])
-                                .writes(&[regs[w]])
-                                .imm((it % 4) as i64);
-                        }
-                    }
-                }
-            }),
-        )
-    }
-
-    /// The headline differential property: the iteration-program
-    /// interpreter is bit-identical to the retained reference evaluator
-    /// across random architectures × random template kernels, including
-    /// chunk boundaries (the §6.3 streaming contract) and dynamic
-    /// latencies.
+    /// The headline differential property: both dispatch modes of the
+    /// iteration-program interpreter are bit-identical to the retained
+    /// reference evaluator across random architectures × random template
+    /// kernels, including chunk boundaries (the §6.3 streaming contract)
+    /// and dynamic latencies.
     #[test]
     fn property_program_matches_reference_on_random_machines() {
         Prop::new(0xA1D6).cases(30).run(|rng| {
             let m = random_machine(rng);
             let k = rng.range_u64(8, 48);
             let kernel = random_kernel(rng, &m, k);
-            let mut fast = Evaluator::new(&m.d);
+            let mut threaded = Evaluator::new_with_dispatch(&m.d, DispatchMode::Threaded);
+            let mut table = Evaluator::new_with_dispatch(&m.d, DispatchMode::NodeTable);
             let mut reference = RefEvaluator::new(&m.d);
-            // chunk the fast path so program reuse crosses run() calls
+            // chunk the fast paths so program reuse crosses run() calls
             let cut = rng.range_u64(1, k - 1);
-            fast.run(&kernel, 0..cut).unwrap();
-            fast.run(&kernel, cut..k).unwrap();
+            threaded.run(&kernel, 0..cut).unwrap();
+            threaded.run(&kernel, cut..k).unwrap();
+            table.run(&kernel, 0..cut).unwrap();
+            table.run(&kernel, cut..k).unwrap();
             reference.run(&kernel, 0..k).unwrap();
-            assert_eq!(fast.iter_stats, reference.iter_stats, "k={k}");
-            assert_eq!(fast.st.nodes, reference.nodes, "k={k}");
-            assert_eq!(fast.dt_aidg(), reference.dt_aidg(), "k={k}");
+            assert_eq!(threaded.iter_stats, reference.iter_stats, "threaded k={k}");
+            assert_eq!(threaded.st.nodes, reference.nodes, "threaded k={k}");
+            assert_eq!(threaded.dt_aidg(), reference.dt_aidg(), "threaded k={k}");
+            assert_eq!(table.iter_stats, reference.iter_stats, "node-table k={k}");
+            assert_eq!(table.st.nodes, reference.nodes, "node-table k={k}");
+            assert_eq!(table.dt_aidg(), reference.dt_aidg(), "node-table k={k}");
         });
+    }
+
+    /// Structural fusion fallback: a multi-range memory never compiles to a
+    /// tape, yet the threaded evaluator stays bit-identical to the
+    /// reference (it walks the node table for those offsets) and reports
+    /// the fallback in its dispatch stats.
+    #[test]
+    fn multirange_memory_falls_back_bit_identically() {
+        let m = multirange_machine();
+        // One memory offset (structurally non-fusible: "banked" spans two
+        // ranges) and one compute offset (fusible) per iteration.
+        let (load, mac) = (m.load, m.mac);
+        let (r0, r1, r2) = (m.regs[0], m.regs[1], m.regs[2]);
+        let (b0, b1) = (m.mem_bases[0], m.mem_bases[1]);
+        let kernel = LoopKernel::new(
+            "banked",
+            24,
+            2,
+            Box::new(move |it, buf| {
+                buf.instr(load).writes(&[r0]).read_mem(&[b0 + it, b1 + 2 * it]);
+                buf.instr(mac).reads(&[r0, r1]).writes(&[r2]);
+            }),
+        );
+        let mut threaded = Evaluator::new_with_dispatch(&m.d, DispatchMode::Threaded);
+        let mut reference = RefEvaluator::new(&m.d);
+        threaded.run(&kernel, 0..24).unwrap();
+        reference.run(&kernel, 0..24).unwrap();
+        assert_eq!(threaded.iter_stats, reference.iter_stats);
+        assert_eq!(threaded.st.nodes, reference.nodes);
+        let stats = threaded.dispatch_stats();
+        assert!(stats.threaded_instrs > 0, "the mac offset must fuse: {stats:?}");
+        assert!(stats.fallback_instrs > 0, "memory offsets must fall back: {stats:?}");
+        let fusion = threaded.fusion_stats();
+        assert!(
+            fusion.fusible_offsets < fusion.offsets,
+            "multi-range offsets must be non-fusible: {fusion:?}"
+        );
+    }
+
+    /// Run-time fusion fallback: a partition-migrating kernel trips the
+    /// folded address guard after iteration 0; the threaded evaluator must
+    /// fall back to the full-scan node-table walk bit-identically.
+    #[test]
+    fn migrating_partition_falls_back_bit_identically() {
+        let mut rng = Rng::new(0x917A);
+        let m = loop {
+            let m = random_machine(&mut rng);
+            if m.mem_bases.len() >= 2 {
+                break m;
+            }
+        };
+        let kernel = migrating_kernel(&m, 6);
+        let mut threaded = Evaluator::new_with_dispatch(&m.d, DispatchMode::Threaded);
+        let mut reference = RefEvaluator::new(&m.d);
+        threaded.run(&kernel, 0..6).unwrap();
+        reference.run(&kernel, 0..6).unwrap();
+        assert_eq!(threaded.iter_stats, reference.iter_stats);
+        assert_eq!(threaded.st.nodes, reference.nodes);
+        let stats = threaded.dispatch_stats();
+        assert!(stats.threaded_instrs > 0, "iteration 0 must run on the tape: {stats:?}");
+        assert!(stats.fallback_instrs > 0, "later iterations must fall back: {stats:?}");
     }
 
     /// Every real mapper's kernels (all four architectures × TC-ResNet8)
@@ -561,16 +461,26 @@ mod tests {
             for ml in mapped.iter().filter(|l| !l.fused) {
                 for kernel in &ml.kernels {
                     let iters = kernel.k.min(8);
-                    let mut fast = Evaluator::new(mapper.diagram());
                     let mut reference = RefEvaluator::new(mapper.diagram());
-                    fast.run(kernel, 0..iters).unwrap();
                     reference.run(kernel, 0..iters).unwrap();
-                    assert_eq!(
-                        fast.iter_stats, reference.iter_stats,
-                        "{name}: {}",
-                        kernel.label
-                    );
-                    assert_eq!(fast.st.nodes, reference.nodes, "{name}: {}", kernel.label);
+                    for mode in [DispatchMode::Threaded, DispatchMode::NodeTable] {
+                        let mut fast = Evaluator::new_with_dispatch(mapper.diagram(), mode);
+                        fast.run(kernel, 0..iters).unwrap();
+                        assert_eq!(
+                            fast.iter_stats,
+                            reference.iter_stats,
+                            "{name}/{}: {}",
+                            mode.name(),
+                            kernel.label
+                        );
+                        assert_eq!(
+                            fast.st.nodes,
+                            reference.nodes,
+                            "{name}/{}: {}",
+                            mode.name(),
+                            kernel.label
+                        );
+                    }
                 }
             }
         }

@@ -121,6 +121,11 @@ impl Mix128 {
 }
 
 /// Compute the content-addressed key of one kernel estimate.
+///
+/// The evaluator's dispatch mode ([`crate::aidg::DispatchMode`]) is
+/// deliberately **not** part of the key: the threaded tape and the
+/// node-table walk are pinned bit-identical by the dispatch differential
+/// suite, so an estimate cached under one mode is valid under the other.
 pub fn kernel_key(
     arch: ArchDigest,
     d: &Diagram,

@@ -34,6 +34,8 @@
 //!                      gain calibrated cycles + [ci_lo, ci_hi] error bars
 //! --calibrate          train a calibration model in-process (seeded default
 //!                      corpus) and install it for this run
+//! --dispatch <mode>    AIDG dispatch: threaded (default, fused
+//!                      superinstruction tape) or node-table (escape hatch)
 //! --profile            enable tracing; print the span profile table at exit
 //! --trace-out <path>   enable tracing; write Chrome trace JSON at exit
 //! ```
@@ -124,10 +126,11 @@ fn parse_keep_frac(flag: &str, value: &str) -> Result<f64> {
     Ok(v)
 }
 
-/// Strip the global flags (`--workers N`, `--cache-cap N`, `--trace-out
-/// PATH`, `--profile`) out of `args` — they are valid in any position —
-/// applying the cache bound to the global engine and enabling tracing when
-/// a telemetry flag is present.
+/// Strip the global flags (`--workers N`, `--cache-cap N`, `--dispatch
+/// MODE`, `--trace-out PATH`, `--profile`) out of `args` — they are valid
+/// in any position — applying the cache bound and dispatch mode to the
+/// process-global defaults and enabling tracing when a telemetry flag is
+/// present.
 fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
     let mut opts = GlobalOpts { workers: 0, trace_out: None, profile: false };
     let mut i = 0;
@@ -156,6 +159,17 @@ fn extract_global_flags(args: &mut Vec<String>) -> Result<GlobalOpts> {
                     acadl_perf::calib::train_from_spec(&acadl_perf::calib::SampleSpec::default())?;
                 EstimationEngine::global().set_calibration(Some(std::sync::Arc::new(model)));
                 args.remove(i);
+            }
+            "--dispatch" => {
+                anyhow::ensure!(i + 1 < args.len(), "--dispatch needs a mode");
+                let mode = acadl_perf::aidg::DispatchMode::parse(&args[i + 1]).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--dispatch mode {:?} is not one of threaded | node-table",
+                        args[i + 1]
+                    )
+                })?;
+                acadl_perf::aidg::set_default_dispatch(mode);
+                args.drain(i..i + 2);
             }
             "--trace-out" => {
                 anyhow::ensure!(i + 1 < args.len(), "--trace-out needs a path");
@@ -205,6 +219,7 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
             eprintln!("                 train an error-bar calibration model against the DES (docs/accuracy.md)");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
             eprintln!("                 --calib-file <path> (install a saved calibration model) | --calibrate");
+            eprintln!("                 --dispatch <threaded|node-table> (AIDG evaluator dispatch; default threaded)");
             eprintln!("                 --profile (span profile table) | --trace-out <path> (Chrome trace JSON)");
             Ok(())
         }
@@ -856,6 +871,28 @@ mod tests {
         let mut bad: Vec<String> =
             ["--workers", "1000000"].iter().map(|s| s.to_string()).collect();
         assert!(extract_global_flags(&mut bad).is_err());
+    }
+
+    #[test]
+    fn dispatch_flag_sets_the_process_default() {
+        use acadl_perf::aidg::{default_dispatch, set_default_dispatch, DispatchMode};
+        let mut args: Vec<String> =
+            ["estimate", "--dispatch", "node-table", "ultratrail", "tc_resnet8"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        extract_global_flags(&mut args).unwrap();
+        assert_eq!(args, vec!["estimate", "ultratrail", "tc_resnet8"]);
+        assert_eq!(default_dispatch(), DispatchMode::NodeTable);
+        // restore: the default is process-global
+        set_default_dispatch(DispatchMode::Threaded);
+
+        let mut bad: Vec<String> =
+            ["--dispatch", "goto"].iter().map(|s| s.to_string()).collect();
+        let e = extract_global_flags(&mut bad).unwrap_err();
+        assert!(format!("{e}").contains("--dispatch"));
+        let mut missing: Vec<String> = ["--dispatch"].iter().map(|s| s.to_string()).collect();
+        assert!(extract_global_flags(&mut missing).is_err());
     }
 
     #[test]

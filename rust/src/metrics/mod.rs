@@ -69,6 +69,18 @@ pub mod counters {
     /// Lanes evicted from a batch to the serial path (divergence:
     /// digest/route/partition mismatch).
     pub static AIDG_BATCH_EVICTIONS: Counter = Counter::new("aidg.batch.evictions");
+    /// Instructions executed through the fused threaded tape.
+    pub static AIDG_DISPATCH_THREADED: Counter = Counter::new("aidg.dispatch.threaded");
+    /// Instructions an evaluator in threaded mode routed to the node-table
+    /// walk instead (non-fusible offsets + run-time guard failures).
+    pub static AIDG_DISPATCH_FALLBACK: Counter = Counter::new("aidg.dispatch.fallback");
+    /// Superinstruction ops executed on the threaded tape (fusion quality:
+    /// compare against `aidg.nodes`).
+    pub static AIDG_FUSED_OPS: Counter = Counter::new("aidg.fused.ops");
+    /// Dynamic-latency memo hits on the threaded tape.
+    pub static AIDG_DYN_MEMO_HITS: Counter = Counter::new("aidg.dyn_memo.hits");
+    /// Dynamic-latency memo misses (cold fills + long-tuple bypasses).
+    pub static AIDG_DYN_MEMO_MISSES: Counter = Counter::new("aidg.dyn_memo.misses");
     /// Paired (AIDG, DES) observations consumed by calibration training.
     pub static CALIB_SAMPLES: Counter = Counter::new("calib.samples");
     /// Layer estimates stamped with calibrated cycles + CI bounds.
@@ -78,6 +90,16 @@ pub mod counters {
     pub fn note_aidg(nodes: u64, iterations: u64) {
         AIDG_NODES.add(nodes);
         AIDG_ITERATIONS.add(iterations);
+    }
+
+    /// One evaluator run's threaded-dispatch accounting, in one call
+    /// (deltas — evaluators flush at the end of each `run`).
+    pub fn note_dispatch(threaded: u64, fallback: u64, fused_ops: u64, hits: u64, misses: u64) {
+        AIDG_DISPATCH_THREADED.add(threaded);
+        AIDG_DISPATCH_FALLBACK.add(fallback);
+        AIDG_FUSED_OPS.add(fused_ops);
+        AIDG_DYN_MEMO_HITS.add(hits);
+        AIDG_DYN_MEMO_MISSES.add(misses);
     }
 
     /// One kernel batch's accounting, in one call (the request counter is
@@ -105,6 +127,11 @@ pub mod counters {
             &AIDG_BATCH_GROUPS,
             &AIDG_BATCH_LANES,
             &AIDG_BATCH_EVICTIONS,
+            &AIDG_DISPATCH_THREADED,
+            &AIDG_DISPATCH_FALLBACK,
+            &AIDG_FUSED_OPS,
+            &AIDG_DYN_MEMO_HITS,
+            &AIDG_DYN_MEMO_MISSES,
             &CALIB_SAMPLES,
             &CALIB_LAYERS,
         ]
@@ -321,9 +348,14 @@ mod tests {
         counters::ENGINE_REQUESTS.add(1);
         assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
         let snap = counters::snapshot();
-        assert_eq!(snap.len(), 15);
+        assert_eq!(snap.len(), 20);
         assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
         assert!(snap.iter().any(|(n, _)| *n == "aidg.batch.lanes"));
+        assert!(snap.iter().any(|(n, _)| *n == "aidg.dispatch.threaded"));
+        assert!(snap.iter().any(|(n, _)| *n == "aidg.dispatch.fallback"));
+        assert!(snap.iter().any(|(n, _)| *n == "aidg.fused.ops"));
+        assert!(snap.iter().any(|(n, _)| *n == "aidg.dyn_memo.hits"));
+        assert!(snap.iter().any(|(n, _)| *n == "aidg.dyn_memo.misses"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.enumerated"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.prefiltered"));
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.estimated"));
@@ -375,15 +407,20 @@ mod tests {
                 "counter {name:?} must use the dotted naming convention (e.g. engine.requests)"
             );
             assert!(
-                !name.contains('_') && !name.contains(' ') && !name.contains('='),
+                !name.contains(' ') && !name.contains('='),
                 "counter {name:?} must be machine-line safe: dot-separated lowercase segments"
             );
             assert!(
                 name.split('.').all(|seg| {
                     !seg.is_empty()
-                        && seg.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit())
+                        && !seg.starts_with('_')
+                        && !seg.ends_with('_')
+                        && seg
+                            .chars()
+                            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
                 }),
-                "counter {name:?} has an empty or non-lowercase dotted segment"
+                "counter {name:?} has an empty or non-lowercase dotted segment \
+                 (underscores may join words *within* a segment, e.g. dyn_memo)"
             );
         }
     }

@@ -1,0 +1,251 @@
+//! Randomized machine/kernel generators for differential testing.
+//!
+//! Moved out of `aidg::program`'s unit tests so integration suites (the
+//! dispatch differential fuzz) and unit tests share one generator set — and
+//! one seeded draw sequence: [`random_machine`] and [`random_kernel`]
+//! consume the [`Rng`] in the exact order the original in-module versions
+//! did, preserving historical test vectors.
+//!
+//! On top of the original pair, this module adds the fusion-fallback
+//! forcers: [`multirange_machine`] (a memory claiming two address ranges —
+//! offsets touching it never compile to a threaded tape) and
+//! [`migrating_kernel`] (addresses that abandon the first iteration's
+//! address→memory partition — tripping the run-time guard / partition
+//! fallback).
+
+use crate::acadl::{Diagram, Latency};
+use crate::ids::{OpId, RegId};
+use crate::isa::LoopKernel;
+
+use super::prop::Rng;
+
+/// A randomized scalar machine: random fetch geometry, an optional
+/// expression-latency pipeline stage, 1–3 memories with mixed fixed /
+/// immediate-dependent latencies and port widths, and two FUs.
+pub struct RandMachine {
+    /// The finalized diagram.
+    pub d: Diagram,
+    /// `load` opcode (reads memory, writes a register).
+    pub load: OpId,
+    /// `store` opcode (reads a register, writes memory).
+    pub store: OpId,
+    /// `mac` opcode (register-only compute).
+    pub mac: OpId,
+    /// The register file's registers.
+    pub regs: Vec<RegId>,
+    /// Base address of each kernel-addressable region, in declaration
+    /// order (for [`multirange_machine`] these are two ranges of *one*
+    /// memory).
+    pub mem_bases: Vec<u64>,
+}
+
+/// Draw a [`RandMachine`] (draw sequence is part of the seeded contract —
+/// do not reorder).
+pub fn random_machine(rng: &mut Rng) -> RandMachine {
+    let mut d = Diagram::new("rand");
+    let pw = rng.range_u32(1, 3);
+    let (_im, ifs) = d.add_fetch(
+        "imem",
+        rng.range_u64(1, 2),
+        pw,
+        "ifs",
+        rng.range_u64(1, 2),
+        rng.range_u32(1, 4),
+    );
+    let es = d.add_execute_stage("es");
+    let stage = rng.bool().then(|| {
+        let lat = if rng.bool() {
+            Latency::Fixed(rng.range_u64(0, 2))
+        } else {
+            Latency::parse("1 + imm0 % 3").unwrap()
+        };
+        d.add_stage("ps", lat)
+    });
+    let (rf, regs) = d.add_regfile("rf", "r", 4);
+    let n_mems = rng.range_usize(1, 3);
+    let mut mems = Vec::new();
+    let mut mem_bases = Vec::new();
+    for i in 0..n_mems {
+        let base = (i as u64) << 20;
+        let rl = if rng.bool() {
+            Latency::Fixed(rng.range_u64(1, 6))
+        } else {
+            Latency::parse("2 + imm1 % 4").unwrap()
+        };
+        let wl = if rng.bool() {
+            Latency::Fixed(rng.range_u64(1, 6))
+        } else {
+            Latency::parse("1 + imm0 % 2").unwrap()
+        };
+        let m = d.add_memory(
+            &format!("mem{i}"),
+            rl,
+            wl,
+            rng.range_u32(1, 4),
+            rng.range_u32(1, 2),
+            base,
+            1 << 20,
+        );
+        mems.push(m);
+        mem_bases.push(base);
+    }
+    let lsu_lat = if rng.bool() {
+        Latency::Fixed(rng.range_u64(1, 2))
+    } else {
+        Latency::parse("1 + imm0 % 2").unwrap()
+    };
+    let lsu = d.add_fu(es, "lsu", lsu_lat, &["load", "store"]);
+    let alu = d.add_fu(es, "alu", Latency::Fixed(rng.range_u64(1, 3)), &["mac"]);
+    match stage {
+        Some(s) => {
+            d.forward(ifs, s);
+            d.forward(s, es);
+        }
+        None => d.forward(ifs, es),
+    }
+    d.fu_reads(lsu, rf);
+    d.fu_writes(lsu, rf);
+    d.fu_reads(alu, rf);
+    d.fu_writes(alu, rf);
+    for &m in &mems {
+        d.mem_reads(lsu, m);
+        d.mem_writes(lsu, m);
+    }
+    let (load, store, mac) = (d.op("load"), d.op("store"), d.op("mac"));
+    d.finalize().unwrap();
+    RandMachine { d, load, store, mac, regs, mem_bases }
+}
+
+/// Template slot of a random §6.3 kernel: fixed op/registers/shape,
+/// addresses strided by the iteration index, immediates varying per
+/// iteration (exercising the dynamic-latency escape hatch).
+#[derive(Clone, Copy)]
+enum Slot {
+    Load { w: usize, mem: usize, mem2: Option<usize>, na: u64, off: u64, stride: u64 },
+    Store { r: usize, mem: usize, off: u64, stride: u64 },
+    Mac { a: usize, b: usize, w: usize },
+}
+
+/// Draw a random template kernel of `k` iterations against `m` (draw
+/// sequence is part of the seeded contract — do not reorder).
+pub fn random_kernel(rng: &mut Rng, m: &RandMachine, k: u64) -> LoopKernel {
+    let n_slots = rng.range_usize(2, 7);
+    let mut slots = Vec::with_capacity(n_slots);
+    for _ in 0..n_slots {
+        let s = match rng.range_u32(0, 3) {
+            0 | 1 => Slot::Load {
+                w: rng.range_usize(0, m.regs.len() - 1),
+                mem: rng.range_usize(0, m.mem_bases.len() - 1),
+                mem2: (m.mem_bases.len() > 1 && rng.bool())
+                    .then(|| rng.range_usize(0, m.mem_bases.len() - 1)),
+                na: rng.range_u64(1, 4),
+                off: rng.range_u64(0, 4096),
+                stride: rng.range_u64(1, 8),
+            },
+            2 => Slot::Store {
+                r: rng.range_usize(0, m.regs.len() - 1),
+                mem: rng.range_usize(0, m.mem_bases.len() - 1),
+                off: rng.range_u64(0, 4096),
+                stride: rng.range_u64(1, 8),
+            },
+            _ => Slot::Mac {
+                a: rng.range_usize(0, m.regs.len() - 1),
+                b: rng.range_usize(0, m.regs.len() - 1),
+                w: rng.range_usize(0, m.regs.len() - 1),
+            },
+        };
+        slots.push(s);
+    }
+    let (load, store, mac) = (m.load, m.store, m.mac);
+    let regs = m.regs.clone();
+    let bases = m.mem_bases.clone();
+    let n = slots.len();
+    LoopKernel::new(
+        "rand",
+        k,
+        n,
+        Box::new(move |it, buf| {
+            for s in &slots {
+                match *s {
+                    Slot::Load { w, mem, mem2, na, off, stride } => {
+                        let mut b = buf
+                            .instr(load)
+                            .writes(&[regs[w]])
+                            .read_mem_iter((0..na).map(|q| bases[mem] + off + stride * it + q));
+                        if let Some(m2) = mem2 {
+                            b = b.read_mem(&[bases[m2] + off + stride * it]);
+                        }
+                        b.imm((it % 3) as i64).imm((it % 5) as i64);
+                    }
+                    Slot::Store { r, mem, off, stride } => {
+                        buf.instr(store)
+                            .reads(&[regs[r]])
+                            .write_mem(&[bases[mem] + off + stride * it])
+                            .imm((it % 2) as i64)
+                            .imm((it % 7) as i64);
+                    }
+                    Slot::Mac { a, b, w } => {
+                        buf.instr(mac)
+                            .reads(&[regs[a], regs[b]])
+                            .writes(&[regs[w]])
+                            .imm((it % 4) as i64);
+                    }
+                }
+            }
+        }),
+    )
+}
+
+/// A deterministic machine whose single data memory claims **two** address
+/// ranges (`[0, 2^20)` and `[2^20, 2^21)`). Memory nodes on it carry the
+/// multi-range sentinel, so every offset with a memory access is
+/// structurally non-fusible — the threaded evaluator must take the
+/// node-table fallback there (compute-only offsets still fuse). Compatible
+/// with [`random_kernel`]: `mem_bases` exposes both ranges as addressable
+/// regions.
+pub fn multirange_machine() -> RandMachine {
+    let mut d = Diagram::new("multi");
+    let (_im, ifs) = d.add_fetch("imem", 1, 2, "ifs", 1, 4);
+    let es = d.add_execute_stage("es");
+    let (rf, regs) = d.add_regfile("rf", "r", 4);
+    let mem = d.add_memory("banked", 3, 2, 1, 1, 0, 1 << 20);
+    d.add_memory_range(mem, 1 << 20, 1 << 20);
+    let lsu = d.add_fu(es, "lsu", Latency::Fixed(1), &["load", "store"]);
+    let alu = d.add_fu(es, "alu", Latency::Fixed(2), &["mac"]);
+    d.forward(ifs, es);
+    d.fu_reads(lsu, rf);
+    d.fu_writes(lsu, rf);
+    d.fu_reads(alu, rf);
+    d.fu_writes(alu, rf);
+    d.mem_reads(lsu, mem);
+    d.mem_writes(lsu, mem);
+    let (load, store, mac) = (d.op("load"), d.op("store"), d.op("mac"));
+    d.finalize().unwrap();
+    RandMachine { d, load, store, mac, regs, mem_bases: vec![0, 1 << 20] }
+}
+
+/// A kernel that violates the §6.3 address→memory partition: iteration 0
+/// reads `[mem0, mem1]`, later iterations read two `mem1` addresses. The
+/// lowered partition (and the threaded tape's folded guard, which is the
+/// same check) fails from iteration 1 on — the serial evaluator falls back
+/// to the full-scan node-table walk, the batch evaluator evicts the lane.
+/// Requires a machine with at least two memories.
+pub fn migrating_kernel(m: &RandMachine, k: u64) -> LoopKernel {
+    assert!(m.mem_bases.len() >= 2, "migrating kernel needs two addressable regions");
+    let load = m.load;
+    let r0 = m.regs[0];
+    let (b0, b1) = (m.mem_bases[0], m.mem_bases[1]);
+    LoopKernel::new(
+        "migrate",
+        k,
+        1,
+        Box::new(move |it, buf| {
+            let a0 = if it == 0 { b0 } else { b1 + 100 + it };
+            buf.instr(load)
+                .writes(&[r0])
+                .read_mem(&[a0, b1 + it])
+                .imm((it % 3) as i64)
+                .imm((it % 5) as i64);
+        }),
+    )
+}

@@ -4,10 +4,12 @@
 //! shared fixtures.
 
 pub mod arch_gen;
+pub mod gen;
 pub mod json;
 pub mod net_gen;
 pub mod prop;
 
 pub use arch_gen::{arbitrary_description, arbitrary_pexpr, arbitrary_template};
+pub use gen::{migrating_kernel, multirange_machine, random_kernel, random_machine, RandMachine};
 pub use net_gen::{arbitrary_layer, arbitrary_net_description};
 pub use prop::{Prop, Rng};

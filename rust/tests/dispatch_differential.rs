@@ -1,0 +1,221 @@
+//! Differential fuzz for the threaded-code dispatch path: the fused
+//! superinstruction tape must be **bit-identical** to the node-table walk
+//! it lowers from — across random architectures × random template kernels
+//! (chunked across `run()` calls), across the lane-batched evaluator, on
+//! every paper architecture × TC-ResNet8, and through both fusion
+//! fallbacks (the structural multi-range sentinel and the run-time folded
+//! address guard). The node-table walk itself is pinned against the
+//! retained reference evaluator by `aidg::program`'s unit tests, closing
+//! the chain threaded == node-table == reference.
+
+use std::sync::Arc;
+
+use acadl_perf::accel::{
+    Gemmini, GemminiConfig, Plasticine, PlasticineConfig, Systolic, SystolicConfig, UltraTrail,
+    UltraTrailConfig,
+};
+use acadl_perf::acadl::Diagram;
+use acadl_perf::aidg::{default_dispatch, BatchEvaluator, DispatchMode, Evaluator, LaneStatus};
+use acadl_perf::dnn::zoo;
+use acadl_perf::isa::LoopKernel;
+use acadl_perf::mapping::{
+    gemm_tile::GemmTileMapper, plasticine_map::PlasticineMapper, scalar::ScalarMapper,
+    tensor_op::TensorOpMapper, Mapper,
+};
+use acadl_perf::testkit::{
+    migrating_kernel, multirange_machine, random_kernel, random_machine, Prop, RandMachine, Rng,
+};
+
+/// Run `kernel` through both dispatch modes (chunked at `cut`) and assert
+/// they agree observation-for-observation.
+fn assert_modes_agree(d: &Diagram, kernel: &LoopKernel, k: u64, cut: u64, tag: &str) {
+    let mut threaded = Evaluator::new_with_dispatch(d, DispatchMode::Threaded);
+    let mut table = Evaluator::new_with_dispatch(d, DispatchMode::NodeTable);
+    threaded.run(kernel, 0..cut).unwrap();
+    threaded.run(kernel, cut..k).unwrap();
+    table.run(kernel, 0..cut).unwrap();
+    table.run(kernel, cut..k).unwrap();
+    assert_eq!(threaded.iter_stats, table.iter_stats, "{tag}: iter_stats");
+    assert_eq!(threaded.st.nodes, table.st.nodes, "{tag}: nodes");
+    assert_eq!(threaded.dt_aidg(), table.dt_aidg(), "{tag}: dt");
+}
+
+/// The headline fuzz: threaded == node-table on random machines × random
+/// kernels, chunked so tape reuse crosses `run()` boundaries. Also checks
+/// the fleet-wide dispatch accounting: across the whole corpus the tape
+/// must actually run, and the dynamic-latency memo must actually hit.
+#[test]
+fn threaded_matches_node_table_on_random_machines() {
+    let mut total_threaded = 0u64;
+    let mut total_memo_hits = 0u64;
+    Prop::new(0xD15B).cases(40).run(|rng| {
+        let m = random_machine(rng);
+        let k = rng.range_u64(8, 48);
+        let kernel = random_kernel(rng, &m, k);
+        let cut = rng.range_u64(1, k - 1);
+        let mut threaded = Evaluator::new_with_dispatch(&m.d, DispatchMode::Threaded);
+        let mut table = Evaluator::new_with_dispatch(&m.d, DispatchMode::NodeTable);
+        threaded.run(&kernel, 0..cut).unwrap();
+        threaded.run(&kernel, cut..k).unwrap();
+        table.run(&kernel, 0..cut).unwrap();
+        table.run(&kernel, cut..k).unwrap();
+        assert_eq!(threaded.iter_stats, table.iter_stats, "k={k} cut={cut}");
+        assert_eq!(threaded.st.nodes, table.st.nodes, "k={k} cut={cut}");
+        assert_eq!(threaded.dt_aidg(), table.dt_aidg(), "k={k} cut={cut}");
+        let stats = threaded.dispatch_stats();
+        total_threaded += stats.threaded_instrs;
+        total_memo_hits += stats.memo_hits;
+    });
+    assert!(total_threaded > 0, "the corpus must exercise the tape");
+    assert!(total_memo_hits > 0, "the corpus must exercise the dyn-latency memo");
+}
+
+/// Every paper architecture × TC-ResNet8: the default (threaded) dispatch
+/// is pinned against the node-table walk kernel-for-kernel.
+#[test]
+fn threaded_matches_node_table_on_paper_architectures() {
+    let mappers: Vec<(&str, Box<dyn Mapper>)> = vec![
+        (
+            "systolic4x4",
+            Box::new(ScalarMapper::new(Arc::new(
+                Systolic::new(SystolicConfig::new(4, 4)).unwrap(),
+            ))),
+        ),
+        (
+            "gemmini",
+            Box::new(GemmTileMapper::new(Arc::new(
+                Gemmini::new(GemminiConfig::default()).unwrap(),
+            ))),
+        ),
+        (
+            "ultratrail",
+            Box::new(TensorOpMapper::new(Arc::new(
+                UltraTrail::new(UltraTrailConfig::default()).unwrap(),
+            ))),
+        ),
+        (
+            "plasticine",
+            Box::new(PlasticineMapper::new(Arc::new(
+                Plasticine::new(PlasticineConfig::new(2, 3, 8)).unwrap(),
+            ))),
+        ),
+    ];
+    let net = zoo::tc_resnet8();
+    for (name, mapper) in &mappers {
+        let mapped = mapper.map_network(&net).unwrap();
+        for ml in mapped.iter().filter(|l| !l.fused) {
+            for kernel in &ml.kernels {
+                let iters = kernel.k.min(12);
+                let cut = (iters / 2).max(1);
+                let tag = format!("{name}: {}", kernel.label);
+                assert_modes_agree(mapper.diagram(), kernel, iters, cut, &tag);
+            }
+        }
+    }
+}
+
+/// Structural fallback: offsets touching a multi-range memory never fuse,
+/// and the threaded evaluator's node-table detour stays bit-identical.
+#[test]
+fn structural_fallback_matches_node_table() {
+    let m = multirange_machine();
+    let mut rng = Rng::new(0x5EED);
+    let kernel = random_kernel(&mut rng, &m, 32);
+    assert_modes_agree(&m.d, &kernel, 32, 9, "multirange");
+    let mut threaded = Evaluator::new_with_dispatch(&m.d, DispatchMode::Threaded);
+    threaded.run(&kernel, 0..32).unwrap();
+    let fusion = threaded.fusion_stats();
+    assert!(
+        fusion.fusible_offsets < fusion.offsets,
+        "multi-range offsets must be structurally non-fusible: {fusion:?}"
+    );
+}
+
+/// Run-time fallback: a kernel that abandons iteration 0's address→memory
+/// partition trips the folded guard; the fallback is bit-identical and the
+/// dispatch stats record both the fused iterations and the detour.
+#[test]
+fn runtime_guard_fallback_matches_node_table() {
+    let mut rng = Rng::new(0xFA11);
+    let m = two_memory_machine(&mut rng);
+    let kernel = migrating_kernel(&m, 8);
+    assert_modes_agree(&m.d, &kernel, 8, 3, "migrating");
+    let mut threaded = Evaluator::new_with_dispatch(&m.d, DispatchMode::Threaded);
+    threaded.run(&kernel, 0..8).unwrap();
+    let stats = threaded.dispatch_stats();
+    assert!(stats.threaded_instrs > 0, "iteration 0 must run fused: {stats:?}");
+    assert!(stats.fallback_instrs > 0, "later iterations must fall back: {stats:?}");
+}
+
+/// Batched lanes: digest-equal candidates evaluated in SoA lockstep must
+/// agree between dispatch modes lane-for-lane, and a partition-migrating
+/// lane must be evicted identically under both modes (the folded guard is
+/// the same predicate as the partition check).
+#[test]
+fn batch_modes_agree_and_evict_identically() {
+    // three digest-equal builds (same seed → same structure), kernels
+    // differing per lane only in iteration count handling below
+    let builds: Vec<RandMachine> =
+        (0..3).map(|_| random_machine(&mut Rng::new(0xBA7C))).collect();
+    let kernels: Vec<LoopKernel> = builds
+        .iter()
+        .map(|m| random_kernel(&mut Rng::new(0x6E0), m, 24))
+        .collect();
+    let lanes: Vec<(&Diagram, &LoopKernel)> =
+        builds.iter().zip(&kernels).map(|(m, k)| (&m.d, k)).collect();
+
+    let mut threaded = BatchEvaluator::new_with_dispatch(&lanes, DispatchMode::Threaded);
+    let mut table = BatchEvaluator::new_with_dispatch(&lanes, DispatchMode::NodeTable);
+    assert_eq!(threaded.live_lanes(), 3);
+    assert_eq!(table.live_lanes(), 3);
+    threaded.run(0..11).unwrap();
+    threaded.run(11..24).unwrap();
+    table.run(0..11).unwrap();
+    table.run(11..24).unwrap();
+    assert_eq!(threaded.evictions(), table.evictions(), "evictions must match");
+    for lane in 0..3 {
+        assert_eq!(threaded.iter_stats(lane), table.iter_stats(lane), "lane {lane}");
+        assert_eq!(threaded.nodes(lane), table.nodes(lane), "lane {lane}");
+        assert_eq!(threaded.dt_aidg(lane), table.dt_aidg(lane), "lane {lane}");
+    }
+
+    // a migrating lane diverges from the shared partition after iteration
+    // 0 — both modes must evict it (guard fail == partition fail) and the
+    // surviving serial evaluation must still be bit-identical
+    let mut rng = Rng::new(0xFA12);
+    let m2 = two_memory_machine(&mut rng);
+    let mk = migrating_kernel(&m2, 16);
+    let solo: Vec<(&Diagram, &LoopKernel)> = vec![(&m2.d, &mk)];
+    for mode in [DispatchMode::Threaded, DispatchMode::NodeTable] {
+        let mut b = BatchEvaluator::new_with_dispatch(&solo, mode);
+        b.run(0..16).unwrap();
+        assert_eq!(b.evictions(), 1, "{}: the migrating lane must evict", mode.name());
+        assert_eq!(b.status(0), LaneStatus::Evicted, "{}: status must record it", mode.name());
+    }
+}
+
+/// The CLI knob's domain: mode names round-trip through parse, unknown
+/// names are rejected, and the process default is the threaded tape.
+#[test]
+fn dispatch_mode_parse_round_trips() {
+    for mode in [DispatchMode::Threaded, DispatchMode::NodeTable] {
+        assert_eq!(DispatchMode::parse(mode.name()), Some(mode));
+    }
+    assert_eq!(DispatchMode::parse("threaded"), Some(DispatchMode::Threaded));
+    assert_eq!(DispatchMode::parse("node-table"), Some(DispatchMode::NodeTable));
+    assert_eq!(DispatchMode::parse("goto"), None);
+    assert_eq!(default_dispatch(), DispatchMode::Threaded);
+    let d = multirange_machine();
+    assert_eq!(Evaluator::new(&d.d).dispatch_mode(), DispatchMode::Threaded);
+}
+
+/// Draw random machines until one has two memories (the migrating kernel
+/// needs two addressable regions backed by distinct objects).
+fn two_memory_machine(rng: &mut Rng) -> RandMachine {
+    loop {
+        let m = random_machine(rng);
+        if m.mem_bases.len() >= 2 {
+            return m;
+        }
+    }
+}

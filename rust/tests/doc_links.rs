@@ -110,6 +110,20 @@ fn docs_book_is_linked_from_the_readme() {
 }
 
 #[test]
+fn performance_doc_covers_threaded_dispatch() {
+    // the dispatch rework's operator guide: the chapter heading, the CLI
+    // knob, and the fallback contract must stay documented
+    let doc = std::fs::read_to_string("docs/performance.md").unwrap();
+    assert!(
+        doc.contains("## Threaded dispatch & superinstruction fusion"),
+        "docs/performance.md must keep the threaded-dispatch chapter"
+    );
+    for needle in ["--dispatch", "node-table", "AdvanceClock", "dyn_memo_hit_rate"] {
+        assert!(doc.contains(needle), "docs/performance.md must mention {needle}");
+    }
+}
+
+#[test]
 fn every_docs_markdown_file_is_checked() {
     // a chapter added to docs/ must also be added to DOC_FILES above
     for entry in std::fs::read_dir("docs").expect("docs/ directory must exist") {

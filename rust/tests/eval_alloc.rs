@@ -9,9 +9,12 @@
 //! and capacity growth, then evaluates thousands more iterations and
 //! asserts the allocation counter did not move.
 //!
-//! The audit runs **three phases in one test**: once with the `obs` tracing
-//! layer disabled, once enabled (span open/drop, histogram observe, ring
-//! record), and once through the lane-batched evaluator
+//! The audit runs **five phases in one test**: the node-table serial walk
+//! with the `obs` tracing layer disabled, the same walk with tracing
+//! enabled (span open/drop, histogram observe, ring record), the threaded
+//! superinstruction tape (whose fused dispatch, folded address guard, and
+//! dynamic-latency memo — all allocated at fuse time — must be just as
+//! allocation-free), and both dispatch modes of the lane-batched evaluator
 //! ([`BatchEvaluator`]) — whose SoA hot path (shared program walk, laned
 //! address plane, ring matrix) must be just as allocation-free per
 //! iteration as the serial path it transcribes. Tracing warmup — name
@@ -26,7 +29,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use acadl_perf::acadl::{Diagram, Latency};
-use acadl_perf::aidg::{BatchEvaluator, Evaluator};
+use acadl_perf::aidg::{BatchEvaluator, DispatchMode, Evaluator};
 use acadl_perf::isa::LoopKernel;
 
 struct CountingAlloc;
@@ -105,14 +108,14 @@ fn steady_state_iterations_do_not_allocate() {
             buf.instr(store).reads(&[r2]).write_mem(&[2048 + it % 256]);
         }),
     );
-    let mut ev = Evaluator::new(&d);
+    let mut ev = Evaluator::new_with_dispatch(&d, DispatchMode::NodeTable);
     // warmup: lowering, arena/ring/plane capacity growth
     ev.run(&kernel, 0..256).unwrap();
     // pre-reserve the per-iteration stats so their amortized growth can't
     // masquerade as a hot-path allocation (two measured phases below)
     ev.iter_stats.reserve(16384);
 
-    // ---- phase 1: tracing disabled (the default) ----
+    // ---- phase 1: node-table walk, tracing disabled ----
     acadl_perf::obs::set_enabled(false);
     let before = ALLOCS.load(Ordering::SeqCst);
     ev.run(&kernel, 256..4096).unwrap();
@@ -128,7 +131,7 @@ fn steady_state_iterations_do_not_allocate() {
     // sanity: the run actually did work
     assert!(ev.dt_aidg() > 4096);
 
-    // ---- phase 2: tracing enabled ----
+    // ---- phase 2: node-table walk, tracing enabled ----
     acadl_perf::obs::set_enabled(true);
     {
         // tracing warmup: interns every name used below, registers their
@@ -158,7 +161,35 @@ fn steady_state_iterations_do_not_allocate() {
         after - before
     );
 
-    // ---- phase 3: lane-batched evaluator ----
+    // ---- phase 3: threaded superinstruction tape ----
+    // the warmup window covers fusion (which happens alongside lowering)
+    // and the fuse-time memo-table allocation; the measured window must hit
+    // the memo (the mac immediate cycles mod 2) without allocating
+    let mut tev = Evaluator::new_with_dispatch(&d, DispatchMode::Threaded);
+    tev.run(&kernel, 0..256).unwrap();
+    tev.iter_stats.reserve(16384);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    tev.run(&kernel, 256..4096).unwrap();
+    let after = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(tev.iter_stats.len(), 4096);
+    assert_eq!(
+        after - before,
+        0,
+        "threaded steady-state evaluation must not allocate \
+         ({} allocations in 3840 iterations)",
+        after - before
+    );
+    // sanity: the tape actually ran (no silent node-table fallback) and
+    // the dynamic-latency memo absorbed the immediate tuples
+    let tstats = tev.dispatch_stats();
+    assert!(tstats.threaded_instrs > 0, "tape must dispatch: {tstats:?}");
+    assert_eq!(tstats.fallback_instrs, 0, "no fallback expected: {tstats:?}");
+    assert!(tstats.memo_hits > 0, "dyn-latency memo must hit: {tstats:?}");
+    assert_eq!(tev.iter_stats, ev.iter_stats[..4096], "modes must agree");
+
+    // ---- phase 4: lane-batched evaluator, node-table walk ----
     // three digest-equal lanes over separately built diagrams, kernels
     // differing only in their address windows and immediates
     let lane_kernel = |ops: &Ops, base: u64, imm_mod: u64| -> LoopKernel {
@@ -187,7 +218,7 @@ fn steady_state_iterations_do_not_allocate() {
     ];
     let lanes: Vec<(&Diagram, &LoopKernel)> =
         builds.iter().zip(&kernels).map(|((d, _), k)| (d, k)).collect();
-    let mut batch = BatchEvaluator::new(&lanes);
+    let mut batch = BatchEvaluator::new_with_dispatch(&lanes, DispatchMode::NodeTable);
     assert_eq!(batch.live_lanes(), 3, "digest-equal lanes must all be live");
     // warmup: lowering, route verification, page/ring/arena capacity
     // growth across every lane; the address windows cycle mod 256, so the
@@ -213,5 +244,34 @@ fn steady_state_iterations_do_not_allocate() {
     assert_eq!(batch.evictions(), 0);
     for lane in 0..3 {
         assert!(batch.dt_aidg(lane) > 4096);
+    }
+
+    // ---- phase 5: lane-batched evaluator, threaded tape ----
+    let mut tbatch = BatchEvaluator::new_with_dispatch(&lanes, DispatchMode::Threaded);
+    assert_eq!(tbatch.live_lanes(), 3);
+    tbatch.run(0..256).unwrap();
+    tbatch.reserve(16384);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    tbatch.run(256..4096).unwrap();
+    let after = ALLOCS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        after - before,
+        0,
+        "threaded batched steady-state evaluation must not allocate \
+         ({} allocations in 3840 iterations across 3 lanes)",
+        after - before
+    );
+    assert_eq!(tbatch.evictions(), 0, "no lane may trip the folded guard");
+    let tbstats = tbatch.dispatch_stats();
+    assert!(tbstats.threaded_instrs > 0, "tape must dispatch: {tbstats:?}");
+    assert_eq!(tbstats.fallback_instrs, 0, "no fallback expected: {tbstats:?}");
+    assert!(tbstats.memo_hits > 0, "dyn-latency memo must hit: {tbstats:?}");
+    // the threaded batch must agree with the node-table batch lane-for-lane
+    for lane in 0..3 {
+        assert_eq!(tbatch.iter_stats(lane), batch.iter_stats(lane), "lane {lane}");
+        assert_eq!(tbatch.nodes(lane), batch.nodes(lane), "lane {lane}");
+        assert_eq!(tbatch.dt_aidg(lane), batch.dt_aidg(lane), "lane {lane}");
     }
 }
