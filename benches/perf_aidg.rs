@@ -8,11 +8,14 @@
 //! `BENCH_engine.json` (cold/warm wall-times, hit rates) and
 //! `BENCH_dse.json` (points/sec, pre-filter survival, cross-candidate warm
 //! hit rate, and the lane-batched sweep's `batch_nodes_per_sec` /
-//! `avg_lanes` / `divergence_rate`), and `BENCH_accuracy.json` (raw vs
+//! `avg_lanes` / `divergence_rate`), `BENCH_accuracy.json` (raw vs
 //! calibrated MAPE + CI coverage on a seeded train/held-out corpus — the
-//! input to CI's hard accuracy gate) so future PRs have a perf trajectory.
-//! `--smoke` runs the evaluator, DSE, and accuracy phases only (CI's
-//! artifact-shape checks cover all three emitted files).
+//! input to CI's hard accuracy gate), and `BENCH_serve.json` (loopback TCP
+//! requests/sec at 1/4/16 concurrent clients, the persistent store's
+//! warm-hit rate after a simulated restart, and p95 request latency from
+//! the `obs` histograms) so future PRs have a perf trajectory.
+//! `--smoke` runs the evaluator, DSE, accuracy, and serve phases (CI's
+//! artifact-shape checks cover all four emitted files).
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -232,6 +235,7 @@ fn main() {
         bench_eval(500, &["tc_resnet8"]);
         bench_dse();
         bench_accuracy();
+        bench_serve(4);
         return;
     }
     bench_eval(20_000, &["tc_resnet8", "efficientnet_reduced"]);
@@ -343,6 +347,7 @@ fn main() {
 
     bench_dse();
     bench_accuracy();
+    bench_serve(12);
 }
 
 /// The accuracy phase: train the stacked calibration model on a seeded
@@ -592,5 +597,110 @@ fn bench_dse() {
          hit rate {:.1}% | batch avg lanes {avg_lanes:.2} — wrote BENCH_dse.json",
         survival * 100.0,
         warm_hit_rate * 100.0
+    );
+}
+
+/// One bench client: drive `estimates` round-trip requests over one TCP
+/// connection, asserting every reply, then quit. Returns requests served.
+fn drive_serve_client(addr: std::net::SocketAddr, estimates: usize) -> usize {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    let conn = std::net::TcpStream::connect(addr).expect("connecting bench client");
+    let mut writer = conn.try_clone().expect("cloning bench stream");
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    for i in 0..estimates {
+        let spec = ["ultratrail", "gemmini", "systolic:4x4"][i % 3];
+        writeln!(writer, "estimate {spec} tc_resnet8").expect("bench request");
+        line.clear();
+        reader.read_line(&mut line).expect("bench reply");
+        assert!(line.contains("cycles="), "bench reply: {line:?}");
+    }
+    writer.write_all(b"quit\n").expect("bench quit");
+    estimates
+}
+
+/// The serve phase: loopback TCP round-trip throughput at 1/4/16
+/// concurrent clients against a warmed engine, the persistent store's
+/// warm-hit rate after a simulated restart (cache cleared, store kept),
+/// and p95 request latency from the `serve.request` span histogram —
+/// emitted as `BENCH_serve.json`. Runs last: it attaches (and detaches) a
+/// store on the process-global engine.
+fn bench_serve(reqs_per_client: usize) {
+    use acadl_perf::coordinator::{NetServer, ServeOptions};
+
+    section("perf — serve: loopback TCP throughput + store warm hits (BENCH_serve.json)");
+    let store_dir =
+        std::env::temp_dir().join(format!("acadl-bench-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let opts = ServeOptions { store: Some(store_dir.clone()), ..Default::default() };
+    // p95 comes from the serve.request span histogram
+    acadl_perf::obs::set_enabled(true);
+    let srv = NetServer::bind("127.0.0.1:0", opts).expect("binding loopback bench server");
+    let addr = srv.local_addr();
+    let handle = srv.shutdown_handle();
+    let server = std::thread::spawn(move || srv.run().expect("bench serve run"));
+
+    // warm the engine and the store so the measured rounds are steady-state
+    drive_serve_client(addr, reqs_per_client);
+
+    let mut round_records = Vec::new();
+    for &clients in &[1usize, 4, 16] {
+        let t0 = Instant::now();
+        let threads: Vec<_> = (0..clients)
+            .map(|_| std::thread::spawn(move || drive_serve_client(addr, reqs_per_client)))
+            .collect();
+        let requests: usize = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        let wall = t0.elapsed();
+        let rps = requests as f64 / wall.as_secs_f64().max(1e-9);
+        println!(
+            "  serve/{clients:>2} clients: {requests} requests in {:.1} ms ({rps:.0} req/s)",
+            wall.as_secs_f64() * 1e3
+        );
+        round_records.push(format!(
+            "    {{\n      \"clients\": {clients},\n      \"requests\": {requests},\n      \
+             \"wall_ms\": {:.3},\n      \"requests_per_sec\": {rps:.1}\n    }}",
+            wall.as_secs_f64() * 1e3
+        ));
+    }
+
+    // simulated restart: the in-memory cache dies, the store survives —
+    // one more round must be served from store promotions, not evaluations
+    EstimationEngine::global().clear_cache();
+    let h0 = counters::STORE_HITS.get();
+    let m0 = counters::STORE_MISSES.get();
+    drive_serve_client(addr, reqs_per_client.max(3));
+    let store_hits = counters::STORE_HITS.get() - h0;
+    let store_misses = counters::STORE_MISSES.get() - m0;
+    let store_warm_hit_rate =
+        store_hits as f64 / (store_hits + store_misses).max(1) as f64;
+    assert!(
+        store_hits > 0,
+        "the cold-cache round must hit the persistent store \
+         ({store_hits} hits / {store_misses} misses)"
+    );
+
+    handle.shutdown();
+    server.join().expect("bench server thread");
+    let p95_request_ns = acadl_perf::obs::snapshot()
+        .spans
+        .iter()
+        .find(|s| s.name == "serve.request")
+        .map_or(0, |s| s.summary.p95_ns);
+    acadl_perf::obs::set_enabled(false);
+    EstimationEngine::global().attach_store(None);
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"requests_per_client\": {reqs_per_client},\n  \
+         \"clients\": [\n{}\n  ],\n  \
+         \"store_warm_hit_rate\": {store_warm_hit_rate:.4},\n  \
+         \"p95_request_ns\": {p95_request_ns}\n}}\n",
+        round_records.join(",\n")
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("writing BENCH_serve.json");
+    println!(
+        "  => store warm hit rate {:.1}% | p95 request {:.2} ms — wrote BENCH_serve.json",
+        store_warm_hit_rate * 100.0,
+        p95_request_ns as f64 / 1e6
     );
 }

@@ -12,6 +12,7 @@
 
 pub mod dse;
 pub mod job;
+pub mod net;
 pub mod pool;
 pub mod server;
 
@@ -20,5 +21,6 @@ pub use job::{
     estimate_network, resolve_network, run_request, run_request_pooled, Arch, ArchSource,
     DescribedArch, DescribedNet, EstimateRequest, EstimateStats, NetSource, NetworkEstimate,
 };
+pub use net::{NetServeOutcome, NetServer, ShutdownHandle};
 pub use pool::Pool;
 pub use server::{parse_arch, serve, serve_with, ServeOptions};

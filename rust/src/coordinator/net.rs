@@ -1,0 +1,243 @@
+//! Concurrent TCP front end for the serve protocol.
+//!
+//! [`NetServer`] wraps a [`std::net::TcpListener`] accept loop around the
+//! same line protocol the stdio loop speaks (see [`super::server`] and
+//! `docs/serve-protocol.md`): one thread per connection up to
+//! [`ServeOptions::max_clients`], each running its own [`Session`] —
+//! per-connection inline descriptions and last sweep, over the
+//! process-shared [`EstimationEngine`](crate::engine::EstimationEngine),
+//! estimate cache, persistent store, and worker [`Pool`]. Kernel
+//! evaluations from every connection fan out over the one pool, and
+//! identical in-flight kernels collapse to a single evaluation through
+//! the engine's single-flight map.
+//!
+//! Overload and lifecycle semantics:
+//!
+//! - past the client cap a connection is refused with a single `busy`
+//!   line and closed (counted by `serve.busy_rejects`);
+//! - a read idle past [`ServeOptions::read_timeout`] ends the session
+//!   with a `timeout` line;
+//! - `shutdown` from any client (or [`ShutdownHandle::shutdown`]) raises
+//!   the server-wide flag: the accept loop stops, live sessions finish
+//!   their current request and drain, and the store is flushed before
+//!   [`NetServer::run`] returns.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Context;
+
+use crate::engine::EstimationEngine;
+use crate::metrics::counters::{SERVE_BUSY_REJECTS, SERVE_SESSIONS};
+use crate::Result;
+
+use super::pool::Pool;
+use super::server::{attach_store_if_configured, ServeOptions, Session, SessionEnd};
+
+/// A bound-but-not-yet-serving TCP server. [`NetServer::run`] consumes it
+/// and blocks until shutdown.
+pub struct NetServer {
+    listener: TcpListener,
+    local: SocketAddr,
+    opts: ServeOptions,
+    shutdown: Arc<AtomicBool>,
+}
+
+/// Raises the server-wide shutdown flag from another thread and wakes the
+/// accept loop with a throwaway connection.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ShutdownHandle {
+    /// Request a graceful drain: stop accepting, let live sessions finish.
+    pub fn shutdown(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+        // the accept loop only re-checks the flag when `accept` returns —
+        // poke it with a connection it will immediately discard
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// What one server run handled, returned by [`NetServer::run`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetServeOutcome {
+    /// Connections accepted into a session (refused ones excluded).
+    pub sessions: usize,
+    /// Protocol commands served across all sessions.
+    pub requests: usize,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7474`; port 0 picks a free port) and
+    /// attach the persistent store if `opts.store` is set. The listener
+    /// is live after this returns — clients can connect before
+    /// [`run`](Self::run) starts accepting, they just queue in the OS
+    /// backlog.
+    pub fn bind(addr: &str, opts: ServeOptions) -> Result<Self> {
+        attach_store_if_configured(&opts)?;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding listener on {addr}"))?;
+        let local = listener.local_addr()?;
+        Ok(Self { listener, local, opts, shutdown: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// A handle that can stop this server from another thread.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { flag: Arc::clone(&self.shutdown), addr: self.local }
+    }
+
+    /// Accept and serve connections until shutdown, then drain: join every
+    /// session thread and flush the store. Returns run-level accounting.
+    pub fn run(self) -> Result<NetServeOutcome> {
+        let pool = Arc::new(Pool::new(self.opts.workers));
+        let requests = Arc::new(AtomicUsize::new(0));
+        let mut handles: Vec<JoinHandle<()>> = Vec::new();
+        let mut sessions = 0usize;
+        for conn in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                // transient accept failures (e.g. a client that reset
+                // between accept and handshake) don't stop the server
+                Err(_) => continue,
+            };
+            handles.retain(|h| !h.is_finished());
+            if handles.len() >= self.opts.max_clients {
+                SERVE_BUSY_REJECTS.add(1);
+                let mut stream = stream;
+                let _ = stream.write_all(b"busy\n");
+                continue;
+            }
+            sessions += 1;
+            SERVE_SESSIONS.add(1);
+            let pool = Arc::clone(&pool);
+            let flag = Arc::clone(&self.shutdown);
+            let requests = Arc::clone(&requests);
+            let opts = self.opts.clone();
+            let local = self.local;
+            handles.push(std::thread::spawn(move || {
+                let _g = crate::obs::gauge::SERVE_ACTIVE_SESSIONS.raii();
+                let served = handle_connection(stream, &pool, &flag, &opts);
+                requests.fetch_add(served, Ordering::Relaxed);
+                // a session-initiated `shutdown` must wake the accept loop
+                if flag.load(Ordering::Relaxed) {
+                    let _ = TcpStream::connect(local);
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        if let Some(store) = EstimationEngine::global().store() {
+            store.flush()?;
+        }
+        Ok(NetServeOutcome { sessions, requests: requests.load(Ordering::Relaxed) })
+    }
+}
+
+/// Drive one connection's session to completion. Returns the commands it
+/// served; client-side I/O failures end the session quietly (there is no
+/// one left to report them to).
+fn handle_connection(
+    stream: TcpStream,
+    pool: &Pool,
+    flag: &Arc<AtomicBool>,
+    opts: &ServeOptions,
+) -> usize {
+    if stream.set_read_timeout(opts.read_timeout).is_err() {
+        return 0;
+    }
+    // request/response over short lines: latency beats batching
+    let _ = stream.set_nodelay(true);
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return 0,
+    };
+    let mut writer = BufWriter::new(stream);
+    let mut session = Session::new(pool, Some(Arc::clone(flag)));
+    match session.run(reader, &mut writer) {
+        Ok(SessionEnd::Timeout) => {
+            let _ = writeln!(writer, "timeout");
+            let _ = writer.flush();
+        }
+        Ok(SessionEnd::Eof | SessionEnd::Quit | SessionEnd::Shutdown) => {}
+        Err(_) => {}
+    }
+    session.served
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufRead;
+
+    #[test]
+    fn tcp_session_serves_estimates_and_drains_on_shutdown() {
+        let srv = NetServer::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = srv.local_addr();
+        let handle = srv.shutdown_handle();
+        let t = std::thread::spawn(move || srv.run().unwrap());
+        let client = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(client.try_clone().unwrap());
+        let mut writer = client;
+        writer.write_all(b"estimate ultratrail tc_resnet8\nquit\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("cycles="), "{line}");
+        // `quit` closes only this connection
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+        handle.shutdown();
+        let out = t.join().unwrap();
+        assert_eq!(out.sessions, 1);
+        assert!(out.requests >= 1, "{out:?}");
+    }
+
+    #[test]
+    fn connections_past_the_cap_get_a_busy_line() {
+        let opts = ServeOptions { max_clients: 0, ..Default::default() };
+        let srv = NetServer::bind("127.0.0.1:0", opts).unwrap();
+        let addr = srv.local_addr();
+        let handle = srv.shutdown_handle();
+        let t = std::thread::spawn(move || srv.run().unwrap());
+        let client = TcpStream::connect(addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(client).read_line(&mut line).unwrap();
+        assert_eq!(line, "busy\n");
+        handle.shutdown();
+        let out = t.join().unwrap();
+        assert_eq!(out, NetServeOutcome { sessions: 0, requests: 0 });
+    }
+
+    #[test]
+    fn idle_connections_time_out_with_a_line() {
+        let opts = ServeOptions {
+            read_timeout: Some(std::time::Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let srv = NetServer::bind("127.0.0.1:0", opts).unwrap();
+        let addr = srv.local_addr();
+        let handle = srv.shutdown_handle();
+        let t = std::thread::spawn(move || srv.run().unwrap());
+        let client = TcpStream::connect(addr).unwrap();
+        let mut line = String::new();
+        // send nothing: the read deadline must end the session for us
+        BufReader::new(client).read_line(&mut line).unwrap();
+        assert_eq!(line, "timeout\n");
+        handle.shutdown();
+        t.join().unwrap();
+    }
+}

@@ -39,14 +39,23 @@
 //! calibrate <file>|off           install a persisted calibration model
 //!                                (estimates gain calibrated=/ci_lo=/ci_hi=
 //!                                tokens) or remove it
+//! store stats|flush|gc           persistent estimate store: one stats
+//!                                line, flush pending records, or drop
+//!                                unreferenced entries (needs --store)
 //! stats                          engine cache/dedup + dse counters, one
 //!                                line
 //! metrics                        full telemetry snapshot: counters, pool/
 //!                                cache gauges, per-span latency summaries,
 //!                                one machine-readable line
 //! trace on|off                   toggle span tracing for this process
-//! quit                           stop serving
+//! shutdown                       stop serving; over TCP, also drain and
+//!                                stop the whole listener
+//! quit                           stop serving (this session only)
 //! ```
+//!
+//! The same protocol runs per-connection over TCP (`serve --listen`, see
+//! [`super::net`]): sessions are isolated (inline descriptions, last
+//! sweep) but share the global engine, cache, store, and worker pool.
 //!
 //! Estimates run through the global
 //! [`EstimationEngine`](crate::engine::EstimationEngine) with cache misses
@@ -58,6 +67,10 @@
 
 use std::collections::HashMap;
 use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context};
 
@@ -139,12 +152,30 @@ fn parse_dims(s: &str) -> Result<(u32, u32)> {
     Ok((r, c))
 }
 
-/// Serving knobs (the CLI's `--workers`/`--cache-cap` surface).
-#[derive(Debug, Clone, Copy, Default)]
+/// Serving knobs (the CLI's `--workers`/`--listen`/`--store` surface).
+#[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// Worker threads for kernel-granular fan-out (0 = available
     /// parallelism).
     pub workers: usize,
+    /// Concurrent TCP sessions accepted before further connections are
+    /// refused with a `busy` line (TCP mode only).
+    pub max_clients: usize,
+    /// Per-connection read deadline (TCP mode only; `None` waits forever).
+    pub read_timeout: Option<Duration>,
+    /// Attach the persistent estimate store at this directory.
+    pub store: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            max_clients: 64,
+            read_timeout: Some(Duration::from_secs(60)),
+            store: None,
+        }
+    }
 }
 
 /// Serve requests from `input`, writing one result line per request to
@@ -154,61 +185,170 @@ pub fn serve(input: impl BufRead, output: impl Write) -> Result<usize> {
     serve_with(input, output, &ServeOptions::default())
 }
 
-/// [`serve`] with explicit [`ServeOptions`].
+/// [`serve`] with explicit [`ServeOptions`] — the stdio (single-session)
+/// entry point. For the concurrent TCP front end see
+/// [`super::net::NetServer`].
 pub fn serve_with(
     input: impl BufRead,
     mut output: impl Write,
     opts: &ServeOptions,
 ) -> Result<usize> {
     let pool = Pool::new(opts.workers);
-    let mut served = 0;
-    let mut inline_archs: HashMap<String, DescribedArch> = HashMap::new();
-    let mut inline_nets: HashMap<String, DescribedNet> = HashMap::new();
-    let mut last_sweep: Option<crate::dse::SweepOutcome> = None;
+    attach_store_if_configured(opts)?;
+    let mut session = Session::new(&pool, None);
+    session.run(input, &mut output)?;
+    if let Some(store) = EstimationEngine::global().store() {
+        store.flush()?;
+    }
+    Ok(session.served)
+}
+
+/// Open `opts.store` (if set) and attach it to the global engine. Shared
+/// by the stdio and TCP entry points.
+pub(crate) fn attach_store_if_configured(opts: &ServeOptions) -> Result<()> {
+    if let Some(dir) = &opts.store {
+        let store = crate::engine::EstimateStore::open(dir)
+            .with_context(|| format!("opening estimate store {}", dir.display()))?;
+        EstimationEngine::global().attach_store(Some(store));
+    }
+    Ok(())
+}
+
+/// How one serve session ended — the TCP front end uses this to decide
+/// between closing one connection and draining the whole listener.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SessionEnd {
+    /// Input exhausted (client closed the connection / EOF on stdin).
+    Eof,
+    /// The client sent `quit`.
+    Quit,
+    /// The client sent `shutdown`, or the server-wide flag was raised.
+    Shutdown,
+    /// A read hit the per-connection deadline.
+    Timeout,
+}
+
+/// One protocol session: per-session state (inline descriptions, last
+/// sweep, lazily probed roofline backend) over the process-shared engine,
+/// cache, store, and worker pool.
+pub(crate) struct Session<'p> {
+    pool: &'p Pool,
+    /// Server-wide shutdown flag (TCP mode); `None` for stdio sessions.
+    shutdown: Option<Arc<AtomicBool>>,
+    inline_archs: HashMap<String, DescribedArch>,
+    inline_nets: HashMap<String, DescribedNet>,
+    last_sweep: Option<crate::dse::SweepOutcome>,
     // loaded on the first `sweep` command, then shared by the session —
     // re-probing the XLA artifacts per request would be pure waste
-    let mut roofline: Option<crate::dse::RooflineBackend> = None;
-    let mut lines = input.lines();
-    while let Some(line) = lines.next() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+    roofline: Option<crate::dse::RooflineBackend>,
+    /// Commands served (including failed ones and `describe` acks).
+    pub(crate) served: usize,
+}
+
+impl<'p> Session<'p> {
+    pub(crate) fn new(pool: &'p Pool, shutdown: Option<Arc<AtomicBool>>) -> Self {
+        Self {
+            pool,
+            shutdown,
+            inline_archs: HashMap::new(),
+            inline_nets: HashMap::new(),
+            last_sweep: None,
+            roofline: None,
+            served: 0,
         }
-        if line == "quit" {
-            break;
-        }
-        if let Some(name) = line.strip_prefix("network describe ") {
-            match read_body("network describe", name.trim(), &mut lines) {
-                Ok((name, body)) => {
-                    writeln!(output, "described network @{name}")?;
-                    inline_nets.insert(name.clone(), DescribedNet::inline(format!("@{name}"), body));
-                }
-                Err(e) => writeln!(output, "error: {e:#}")?,
-            }
-            served += 1;
-            continue;
-        }
-        if let Some(name) = line.strip_prefix("describe ") {
-            match read_body("describe", name.trim(), &mut lines) {
-                Ok((name, body)) => {
-                    writeln!(output, "described @{name}")?;
-                    inline_archs
-                        .insert(name.clone(), DescribedArch::inline(format!("@{name}"), body));
-                }
-                Err(e) => writeln!(output, "error: {e:#}")?,
-            }
-            served += 1;
-            continue;
-        }
-        match serve_line(line, &inline_archs, &inline_nets, &pool, &mut last_sweep, &mut roofline)
-        {
-            Ok(msg) => writeln!(output, "{msg}")?,
-            Err(e) => writeln!(output, "error: {e:#}")?,
-        }
-        served += 1;
     }
-    Ok(served)
+
+    /// Whether the server-wide shutdown flag has been raised.
+    fn draining(&self) -> bool {
+        self.shutdown.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// Drive the session until its input ends, the client quits, a read
+    /// times out, or shutdown is requested. Every response line is
+    /// flushed before the next read — buffered transports (TCP) would
+    /// otherwise deadlock a request/response client.
+    pub(crate) fn run(
+        &mut self,
+        input: impl BufRead,
+        output: &mut impl Write,
+    ) -> Result<SessionEnd> {
+        let mut lines = input.lines();
+        loop {
+            if self.draining() {
+                return Ok(SessionEnd::Shutdown);
+            }
+            let Some(line) = lines.next() else {
+                return Ok(SessionEnd::Eof);
+            };
+            let line = match line {
+                Ok(l) => l,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                    ) =>
+                {
+                    return Ok(SessionEnd::Timeout);
+                }
+                Err(e) => return Err(e.into()),
+            };
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line == "quit" {
+                return Ok(SessionEnd::Quit);
+            }
+            if line == "shutdown" {
+                writeln!(output, "shutting down")?;
+                output.flush()?;
+                self.served += 1;
+                if let Some(flag) = &self.shutdown {
+                    flag.store(true, Ordering::Relaxed);
+                }
+                return Ok(SessionEnd::Shutdown);
+            }
+            if let Some(name) = line.strip_prefix("network describe ") {
+                match read_body("network describe", name.trim(), &mut lines) {
+                    Ok((name, body)) => {
+                        writeln!(output, "described network @{name}")?;
+                        self.inline_nets
+                            .insert(name.clone(), DescribedNet::inline(format!("@{name}"), body));
+                    }
+                    Err(e) => writeln!(output, "error: {e:#}")?,
+                }
+                output.flush()?;
+                self.served += 1;
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("describe ") {
+                match read_body("describe", name.trim(), &mut lines) {
+                    Ok((name, body)) => {
+                        writeln!(output, "described @{name}")?;
+                        self.inline_archs
+                            .insert(name.clone(), DescribedArch::inline(format!("@{name}"), body));
+                    }
+                    Err(e) => writeln!(output, "error: {e:#}")?,
+                }
+                output.flush()?;
+                self.served += 1;
+                continue;
+            }
+            let sp = crate::obs::span("serve.request");
+            let outcome = self.command(line);
+            drop(sp);
+            match outcome {
+                Ok(msg) => writeln!(output, "{msg}")?,
+                Err(e) => writeln!(output, "error: {e:#}")?,
+            }
+            output.flush()?;
+            self.served += 1;
+            // periodic persistence: a cheap no-op below the threshold
+            if let Some(store) = EstimationEngine::global().store() {
+                let _ = store.flush_if_dirty(64);
+            }
+        }
+    }
 }
 
 /// Read a `describe`/`network describe` body: raw description lines until
@@ -240,255 +380,303 @@ fn read_body(
     Ok((name.to_string(), body))
 }
 
-fn serve_line(
-    line: &str,
-    inline_archs: &HashMap<String, DescribedArch>,
-    inline_nets: &HashMap<String, DescribedNet>,
-    pool: &Pool,
-    last_sweep: &mut Option<crate::dse::SweepOutcome>,
-    roofline: &mut Option<crate::dse::RooflineBackend>,
-) -> Result<String> {
-    let mut it = line.split_whitespace();
-    match it.next() {
-        Some("estimate") => {
-            let spec = it.next().context("estimate <arch> <network>")?;
-            let arch = match spec.strip_prefix('@') {
-                Some(name) => Arch::Described(
-                    inline_archs
+impl Session<'_> {
+    /// Execute one single-line command, returning the (possibly
+    /// multi-line) response text.
+    fn command(&mut self, line: &str) -> Result<String> {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("estimate") => {
+                let spec = it.next().context("estimate <arch> <network>")?;
+                let arch = match spec.strip_prefix('@') {
+                    Some(name) => Arch::Described(
+                        self.inline_archs
+                            .get(name)
+                            .with_context(|| {
+                                format!("no described architecture @{name} (use `describe {name}`)")
+                            })?
+                            .clone(),
+                    ),
+                    None => parse_arch(spec)?,
+                };
+                let netspec = it.next().context("estimate <arch> <network>")?;
+                let net = match netspec.strip_prefix('@') {
+                    Some(name) => self
+                        .inline_nets
                         .get(name)
                         .with_context(|| {
-                            format!("no described architecture @{name} (use `describe {name}`)")
+                            format!(
+                                "no described network @{name} (use `network describe {name}`)"
+                            )
                         })?
-                        .clone(),
-                ),
-                None => parse_arch(spec)?,
-            };
-            let netspec = it.next().context("estimate <arch> <network>")?;
-            let net = match netspec.strip_prefix('@') {
-                Some(name) => inline_nets
-                    .get(name)
-                    .with_context(|| {
-                        format!(
-                            "no described network @{name} (use `network describe {name}`)"
-                        )
-                    })?
-                    .network()?,
-                None => resolve_network(netspec)?,
-            };
-            let e = EstimationEngine::global().estimate_network_pooled(
-                &arch,
-                &net,
-                &FixedPointConfig::default(),
-                pool,
-            )?;
-            let mut line = format!(
-                "{} {} cycles={} evaluated_iters={} total_iters={} kernels={} unique={} \
-                 cache_hits={} deduped={} runtime_ms={}",
-                e.arch,
-                e.network,
-                e.total_cycles(),
-                e.evaluated_iters(),
-                e.total_iters(),
-                e.stats.total_kernels,
-                e.stats.unique_kernels,
-                e.stats.cache_hits,
-                e.stats.deduped,
-                e.runtime.as_millis()
-            );
-            if let Some(cal) = e.calibrated_cycles() {
-                let (lo, hi) = e.ci_bounds().unwrap_or((cal, cal));
-                line.push_str(&format!(" calibrated={cal} ci_lo={lo} ci_hi={hi}"));
-            }
-            Ok(line)
-        }
-        Some("calibrate") => match it.next() {
-            Some("off") => {
-                EstimationEngine::global().set_calibration(None);
-                Ok("calibration off".to_string())
-            }
-            Some(path) => {
-                let model = crate::calib::CalibrationModel::load(std::path::Path::new(path))?;
-                let classes = model.class_count();
-                EstimationEngine::global().set_calibration(Some(std::sync::Arc::new(model)));
-                Ok(format!("calibration loaded {path} classes={classes}"))
-            }
-            None => bail!("calibrate needs an argument (calibrate <file>|off)"),
-        },
-        Some("sweep") => {
-            let spec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
-            let netspec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
-            let mut keep = 1.0f64;
-            let mut cap: Option<usize> = None;
-            for extra in it {
-                if let Some(v) = extra.strip_prefix("keep=") {
-                    keep = v.parse().with_context(|| format!("bad keep= value {v:?}"))?;
-                } else if let Some(v) = extra.strip_prefix("cap=") {
-                    cap =
-                        Some(v.parse().with_context(|| format!("bad cap= value {v:?}"))?);
-                } else {
-                    bail!("unknown sweep option {extra:?} (keep=F | cap=N)");
+                        .network()?,
+                    None => resolve_network(netspec)?,
+                };
+                let e = EstimationEngine::global().estimate_network_pooled(
+                    &arch,
+                    &net,
+                    &FixedPointConfig::default(),
+                    self.pool,
+                )?;
+                let mut line = format!(
+                    "{} {} cycles={} evaluated_iters={} total_iters={} kernels={} unique={} \
+                     cache_hits={} deduped={} runtime_ms={}",
+                    e.arch,
+                    e.network,
+                    e.total_cycles(),
+                    e.evaluated_iters(),
+                    e.total_iters(),
+                    e.stats.total_kernels,
+                    e.stats.unique_kernels,
+                    e.stats.cache_hits,
+                    e.stats.deduped,
+                    e.runtime.as_millis()
+                );
+                if let Some(cal) = e.calibrated_cycles() {
+                    let (lo, hi) = e.ci_bounds().unwrap_or((cal, cal));
+                    line.push_str(&format!(" calibrated={cal} ci_lo={lo} ci_hi={hi}"));
                 }
+                Ok(line)
             }
-            let (src, origin) = match spec.strip_prefix('@') {
-                Some(name) => {
-                    let d = inline_archs.get(name).with_context(|| {
-                        format!("no described architecture @{name} (use `describe {name}`)")
-                    })?;
-                    match &d.source {
-                        super::job::ArchSource::Inline { text, .. } => {
-                            (text.to_string(), format!("@{name}"))
-                        }
-                        super::job::ArchSource::File(p) => (
-                            std::fs::read_to_string(p).with_context(|| {
-                                format!("reading architecture description {}", p.display())
-                            })?,
-                            p.display().to_string(),
-                        ),
+            Some("calibrate") => match it.next() {
+                Some("off") => {
+                    EstimationEngine::global().set_calibration(None);
+                    Ok("calibration off".to_string())
+                }
+                Some(path) => {
+                    let model = crate::calib::CalibrationModel::load(std::path::Path::new(path))?;
+                    let classes = model.class_count();
+                    EstimationEngine::global().set_calibration(Some(std::sync::Arc::new(model)));
+                    Ok(format!("calibration loaded {path} classes={classes}"))
+                }
+                None => bail!("calibrate needs an argument (calibrate <file>|off)"),
+            },
+            Some("sweep") => {
+                let spec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
+                let netspec = it.next().context("sweep <arch> <network> [keep=F] [cap=N]")?;
+                let mut keep = 1.0f64;
+                let mut cap: Option<usize> = None;
+                for extra in it {
+                    if let Some(v) = extra.strip_prefix("keep=") {
+                        keep = v.parse().with_context(|| format!("bad keep= value {v:?}"))?;
+                    } else if let Some(v) = extra.strip_prefix("cap=") {
+                        cap =
+                            Some(v.parse().with_context(|| format!("bad cap= value {v:?}"))?);
+                    } else {
+                        bail!("unknown sweep option {extra:?} (keep=F | cap=N)");
                     }
                 }
-                None => match spec.strip_prefix("file:") {
-                    Some(path) if !path.is_empty() => (
-                        std::fs::read_to_string(path).with_context(|| {
-                            format!("reading architecture description {path}")
-                        })?,
-                        path.to_string(),
-                    ),
-                    _ => bail!(
-                        "sweep needs a described architecture (file:<path> or @name) — \
-                         builder specs have no [sweep] section"
-                    ),
-                },
-            };
-            let space = crate::dse::SweepSpace::from_source(&src, &origin, cap)?;
-            let net = match netspec.strip_prefix('@') {
-                Some(name) => inline_nets
-                    .get(name)
-                    .with_context(|| {
-                        format!("no described network @{name} (use `network describe {name}`)")
-                    })?
-                    .network()?,
-                None => resolve_network(netspec)?,
-            };
-            let opts = crate::dse::SweepOptions { keep_frac: keep, ..Default::default() };
-            let backend = roofline.get_or_insert_with(crate::dse::RooflineBackend::auto);
-            let outcome = crate::dse::explore_space(
-                &space,
-                &net,
-                &opts,
-                pool,
-                backend,
-                EstimationEngine::global(),
-            )?;
-            let best = outcome.points.first();
-            let line = format!(
-                "sweep {origin} {} enumerated={} skipped={} estimated={} frontier={} \
-                 best={} best_cycles={} hit_rate={:.4} wall_ms={}",
-                net.name,
-                outcome.enumerated,
-                outcome.skipped,
-                outcome.estimated,
-                outcome.frontier().len(),
-                best.map(|p| p.label.clone()).unwrap_or_else(|| "-".into()),
-                best.and_then(|p| p.aidg_cycles).unwrap_or(0),
-                outcome.warm_hit_rate(),
-                outcome.wall.as_millis(),
-            );
-            *last_sweep = Some(outcome);
-            Ok(line)
-        }
-        Some("frontier") => {
-            let outcome = last_sweep
-                .as_ref()
-                .context("no sweep has run yet (run `sweep <arch> <network>` first)")?;
-            let frontier = outcome.frontier();
-            let mut out = format!("frontier points={}", frontier.len());
-            for p in frontier {
-                out.push_str(&format!(
-                    "\npoint {} arch={} cycles={} pe={} mem_words={}",
-                    p.label,
-                    p.arch_name,
-                    p.aidg_cycles.unwrap_or(0),
-                    p.pe_count,
-                    p.mem_words
-                ));
+                let (src, origin) = match spec.strip_prefix('@') {
+                    Some(name) => {
+                        let d = self.inline_archs.get(name).with_context(|| {
+                            format!("no described architecture @{name} (use `describe {name}`)")
+                        })?;
+                        match &d.source {
+                            super::job::ArchSource::Inline { text, .. } => {
+                                (text.to_string(), format!("@{name}"))
+                            }
+                            super::job::ArchSource::File(p) => (
+                                std::fs::read_to_string(p).with_context(|| {
+                                    format!("reading architecture description {}", p.display())
+                                })?,
+                                p.display().to_string(),
+                            ),
+                        }
+                    }
+                    None => match spec.strip_prefix("file:") {
+                        Some(path) if !path.is_empty() => (
+                            std::fs::read_to_string(path).with_context(|| {
+                                format!("reading architecture description {path}")
+                            })?,
+                            path.to_string(),
+                        ),
+                        _ => bail!(
+                            "sweep needs a described architecture (file:<path> or @name) — \
+                             builder specs have no [sweep] section"
+                        ),
+                    },
+                };
+                let space = crate::dse::SweepSpace::from_source(&src, &origin, cap)?;
+                let net = match netspec.strip_prefix('@') {
+                    Some(name) => self
+                        .inline_nets
+                        .get(name)
+                        .with_context(|| {
+                            format!("no described network @{name} (use `network describe {name}`)")
+                        })?
+                        .network()?,
+                    None => resolve_network(netspec)?,
+                };
+                let opts = crate::dse::SweepOptions { keep_frac: keep, ..Default::default() };
+                let backend = self.roofline.get_or_insert_with(crate::dse::RooflineBackend::auto);
+                let mut outcome = crate::dse::explore_space(
+                    &space,
+                    &net,
+                    &opts,
+                    self.pool,
+                    backend,
+                    EstimationEngine::global(),
+                )?;
+                // frontier persistence: with a store attached, fold the prior
+                // frontier for this (sweep space × network) into the fresh
+                // outcome, then persist the merged frontier back
+                let mut resumed_note = String::new();
+                if let Some(store) = EstimationEngine::global().store() {
+                    let sd = crate::engine::store::fnv64(src.as_bytes());
+                    let nd = crate::engine::store::net_digest(&net);
+                    let prior = store.frontier_get(sd, nd);
+                    let resumed = prior.as_ref().map_or(0, Vec::len);
+                    if let Some(prior) = prior {
+                        crate::dse::merge_frontier(prior, &mut outcome);
+                    }
+                    store.frontier_put(
+                        sd,
+                        nd,
+                        outcome.frontier().into_iter().cloned().collect(),
+                    );
+                    resumed_note = format!(" resumed={resumed}");
+                }
+                let best = outcome.points.first();
+                let line = format!(
+                    "sweep {origin} {} enumerated={} skipped={} estimated={} frontier={} \
+                     best={} best_cycles={} hit_rate={:.4} wall_ms={}{resumed_note}",
+                    net.name,
+                    outcome.enumerated,
+                    outcome.skipped,
+                    outcome.estimated,
+                    outcome.frontier().len(),
+                    best.map(|p| p.label.clone()).unwrap_or_else(|| "-".into()),
+                    best.and_then(|p| p.aidg_cycles).unwrap_or(0),
+                    outcome.warm_hit_rate(),
+                    outcome.wall.as_millis(),
+                );
+                self.last_sweep = Some(outcome);
+                Ok(line)
             }
-            Ok(out)
-        }
-        Some("stats") => {
-            let s = EstimationEngine::global().stats();
-            let mut line = format!(
-                "stats workers={} requests={} kernels={} evaluated={} deduped={} \
-                 cache_entries={} cache_cap={} cache_hits={} cache_misses={} evictions={} \
-                 arch_compiles={} net_compiles={}",
-                pool.workers(),
-                s.requests,
-                s.kernels_total,
-                s.kernels_evaluated,
-                s.kernels_deduped,
-                s.cache.entries,
-                s.cache.capacity,
-                s.cache.hits,
-                s.cache.misses,
-                s.cache.evictions,
-                crate::acadl::text::ArchRegistry::global().compile_count(),
-                crate::dnn::text::NetRegistry::global().compile_count(),
-            );
-            line.push_str(&format!(
-                " calib_classes={}",
-                EstimationEngine::global().calibration().map(|m| m.class_count()).unwrap_or(0)
-            ));
-            // process-wide counters cover every engine in the process (the
-            // global one above plus any locally constructed ones)
-            for (name, value) in crate::metrics::counters::snapshot() {
-                line.push_str(&format!(" {name}={value}"));
+            Some("frontier") => {
+                let outcome = self
+                    .last_sweep
+                    .as_ref()
+                    .context("no sweep has run yet (run `sweep <arch> <network>` first)")?;
+                let frontier = outcome.frontier();
+                let mut out = format!("frontier points={}", frontier.len());
+                for p in frontier {
+                    out.push_str(&format!(
+                        "\npoint {} arch={} cycles={} pe={} mem_words={}",
+                        p.label,
+                        p.arch_name,
+                        p.aidg_cycles.unwrap_or(0),
+                        p.pe_count,
+                        p.mem_words
+                    ));
+                }
+                Ok(out)
             }
-            Ok(line)
-        }
-        Some("metrics") => {
-            // one stable machine-readable line: flag + ring accounting,
-            // then counters, gauges, and per-span latency summaries (spans
-            // name-sorted by the snapshot)
-            let snap = crate::obs::snapshot();
-            let mut line = format!(
-                "metrics enabled={} events={} dropped={}",
-                u8::from(snap.enabled),
-                snap.events_recorded,
-                snap.events_dropped
-            );
-            for (name, value) in &snap.counters {
-                line.push_str(&format!(" {name}={value}"));
+            Some("store") => {
+                let sub = it.next().context("store needs an argument (store stats|flush|gc)")?;
+                let store = EstimationEngine::global()
+                    .store()
+                    .context("no store attached (start serve with --store <dir>)")?;
+                match sub {
+                    "stats" => {
+                        let s = store.stats();
+                        Ok(format!(
+                            "store dir={} entries={} frontiers={} dirty={} segments={} gen={}",
+                            store.dir().display(),
+                            s.entries,
+                            s.frontiers,
+                            s.dirty,
+                            s.segments,
+                            s.open_gen,
+                        ))
+                    }
+                    "flush" => {
+                        let n = store.flush()?;
+                        Ok(format!("store flushed records={n}"))
+                    }
+                    "gc" => {
+                        let o = store.gc()?;
+                        Ok(format!("store gc kept={} dropped={}", o.kept, o.dropped))
+                    }
+                    other => bail!("unknown store subcommand {other:?} (store stats|flush|gc)"),
+                }
             }
-            for (name, value) in &snap.gauges {
-                line.push_str(&format!(" {name}={value}"));
-            }
-            for s in &snap.spans {
-                let h = s.summary;
+            Some("stats") => {
+                let s = EstimationEngine::global().stats();
+                let mut line = format!(
+                    "stats workers={} requests={} kernels={} evaluated={} deduped={} \
+                     cache_entries={} cache_cap={} cache_hits={} cache_misses={} evictions={} \
+                     arch_compiles={} net_compiles={}",
+                    self.pool.workers(),
+                    s.requests,
+                    s.kernels_total,
+                    s.kernels_evaluated,
+                    s.kernels_deduped,
+                    s.cache.entries,
+                    s.cache.capacity,
+                    s.cache.hits,
+                    s.cache.misses,
+                    s.cache.evictions,
+                    crate::acadl::text::ArchRegistry::global().compile_count(),
+                    crate::dnn::text::NetRegistry::global().compile_count(),
+                );
                 line.push_str(&format!(
-                    " span.{0}.count={1} span.{0}.total_ns={2} span.{0}.self_ns={3} \
-                     span.{0}.p50_ns={4} span.{0}.p95_ns={5} span.{0}.max_ns={6}",
-                    s.name, h.count, h.total_ns, h.self_ns, h.p50_ns, h.p95_ns, h.max_ns
+                    " calib_classes={}",
+                    EstimationEngine::global().calibration().map(|m| m.class_count()).unwrap_or(0)
                 ));
+                // process-wide counters cover every engine in the process (the
+                // global one above plus any locally constructed ones)
+                for (name, value) in crate::metrics::counters::snapshot() {
+                    line.push_str(&format!(" {name}={value}"));
+                }
+                Ok(line)
             }
-            Ok(line)
+            Some("metrics") => {
+                // one stable machine-readable line: flag + ring accounting,
+                // then counters, gauges, and per-span latency summaries (spans
+                // name-sorted by the snapshot)
+                let snap = crate::obs::snapshot();
+                let mut line = format!(
+                    "metrics enabled={} events={} dropped={}",
+                    u8::from(snap.enabled),
+                    snap.events_recorded,
+                    snap.events_dropped
+                );
+                for (name, value) in &snap.counters {
+                    line.push_str(&format!(" {name}={value}"));
+                }
+                for (name, value) in &snap.gauges {
+                    line.push_str(&format!(" {name}={value}"));
+                }
+                for s in &snap.spans {
+                    let h = s.summary;
+                    line.push_str(&format!(
+                        " span.{0}.count={1} span.{0}.total_ns={2} span.{0}.self_ns={3} \
+                         span.{0}.p50_ns={4} span.{0}.p95_ns={5} span.{0}.max_ns={6}",
+                        s.name, h.count, h.total_ns, h.self_ns, h.p50_ns, h.p95_ns, h.max_ns
+                    ));
+                }
+                Ok(line)
+            }
+            Some("trace") => match it.next() {
+                Some("on") => {
+                    crate::obs::set_enabled(true);
+                    Ok("trace on".to_string())
+                }
+                Some("off") => {
+                    crate::obs::set_enabled(false);
+                    Ok("trace off".to_string())
+                }
+                _ => bail!("trace needs an argument (trace on|off)"),
+            },
+            Some(cmd) => {
+                bail!(
+                    "unknown command {cmd:?} (estimate|describe|network describe|sweep|frontier|\
+                     calibrate|store|stats|metrics|trace|shutdown|quit)"
+                )
+            }
+            None => bail!("empty command"),
         }
-        Some("trace") => match it.next() {
-            Some("on") => {
-                crate::obs::set_enabled(true);
-                Ok("trace on".to_string())
-            }
-            Some("off") => {
-                crate::obs::set_enabled(false);
-                Ok("trace off".to_string())
-            }
-            _ => bail!("trace needs an argument (trace on|off)"),
-        },
-        Some(cmd) => {
-            bail!(
-                "unknown command {cmd:?} (estimate|describe|network describe|sweep|frontier|\
-                 calibrate|stats|metrics|trace|quit)"
-            )
-        }
-        None => bail!("empty command"),
     }
 }
 
@@ -703,6 +891,64 @@ mod tests {
         let mut out = Vec::new();
         serve(std::io::Cursor::new("network describe x\n[net]\n"), &mut out).unwrap();
         assert!(String::from_utf8(out).unwrap().contains("not terminated"));
+    }
+
+    /// A writer that counts flushes — pins the invariant that every
+    /// response line reaches the transport before the next read.
+    struct FlushCounter {
+        buf: Vec<u8>,
+        flushes: usize,
+    }
+
+    impl Write for FlushCounter {
+        fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+            self.buf.write(data)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            self.flushes += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn serve_flushes_after_every_response() {
+        // three responses (estimate error, describe ack, stats) — a
+        // buffered transport must see each before the client's next write
+        let input = "estimate bogus tc_resnet8\ndescribe d\n[arch]\nend\nstats\nquit\n";
+        let mut out = FlushCounter { buf: Vec::new(), flushes: 0 };
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 3);
+        assert!(
+            out.flushes >= served,
+            "{} responses but only {} flushes",
+            served,
+            out.flushes
+        );
+    }
+
+    #[test]
+    fn serve_shutdown_acks_and_ends_the_session() {
+        let input = "shutdown\nestimate ultratrail tc_resnet8\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        // the command after shutdown is never served
+        assert_eq!(served, 1);
+        assert_eq!(String::from_utf8(out).unwrap(), "shutting down\n");
+    }
+
+    #[test]
+    fn serve_store_commands_without_a_store_are_clean_errors() {
+        let input = "store stats\nstore\nstore polish\nquit\n";
+        let mut out = Vec::new();
+        let served = serve(std::io::Cursor::new(input), &mut out).unwrap();
+        assert_eq!(served, 3);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines[0].contains("no store attached"), "{}", lines[0]);
+        assert!(lines[1].contains("store needs an argument"), "{}", lines[1]);
+        // subcommand validation happens after the attachment check, so an
+        // unattached store reports the missing store first
+        assert!(lines[2].contains("no store attached"), "{}", lines[2]);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! Only points that received an accurate (AIDG) estimate participate —
 //! pre-filtered points are never reported as winners.
 
-use super::SweepPoint;
+use super::{SweepOutcome, SweepPoint};
 
 /// Mark `on_frontier` on every point: true iff the point has an accurate
 /// estimate and no other estimated point dominates it on
@@ -33,6 +33,28 @@ pub fn mark_frontier(points: &mut [SweepPoint]) {
 /// other, so ties stay on the frontier together.
 fn dominates(a: (u64, u64, u64), b: (u64, u64, u64)) -> bool {
     a.0 <= b.0 && a.1 <= b.1 && a.2 <= b.2 && (a.0 < b.0 || a.1 < b.1 || a.2 < b.2)
+}
+
+/// Fold a prior run's persisted frontier into a fresh [`SweepOutcome`]:
+/// points the fresh sweep did not re-enumerate (shrunk `keep=`/`cap=`, a
+/// cheaper pre-filter) stay eligible, duplicates prefer the fresh copy,
+/// and the merged set is re-ranked and re-marked. Sorting matches
+/// [`super::explore_space`]'s final order (accurate estimates first,
+/// ascending; roofline-only points after, by projected cycles) so the
+/// reply's `best=` token and the `frontier` listing stay consistent with
+/// an unmerged sweep.
+pub fn merge_frontier(prior: Vec<SweepPoint>, outcome: &mut SweepOutcome) {
+    use std::cmp::Ordering::{Greater, Less};
+    let fresh: std::collections::HashSet<u64> =
+        outcome.points.iter().map(|p| p.digest).collect();
+    outcome.points.extend(prior.into_iter().filter(|p| !fresh.contains(&p.digest)));
+    outcome.points.sort_by(|a, b| match (a.aidg_cycles, b.aidg_cycles) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => Less,
+        (None, Some(_)) => Greater,
+        (None, None) => a.roofline_cycles.total_cmp(&b.roofline_cycles),
+    });
+    mark_frontier(&mut outcome.points);
 }
 
 #[cfg(test)]
@@ -72,5 +94,39 @@ mod tests {
         let mut pts = vec![point(Some(5), 1, 1)];
         mark_frontier(&mut pts);
         assert!(pts[0].on_frontier);
+    }
+
+    #[test]
+    fn merge_frontier_resumes_prior_points_and_prefers_fresh() {
+        let tag = |mut p: SweepPoint, digest: u64, label: &str| {
+            p.digest = digest;
+            p.label = label.to_string();
+            p
+        };
+        let mut outcome = SweepOutcome {
+            points: vec![
+                tag(point(Some(300), 4, 10), 1, "fresh-slow"),
+                tag(point(Some(100), 8, 20), 2, "fresh-fast"),
+            ],
+            enumerated: 2,
+            skipped: 0,
+            estimated: 2,
+            stats: Default::default(),
+            wall: std::time::Duration::ZERO,
+        };
+        let prior = vec![
+            // same digest as a fresh point but stale cycles: dropped
+            tag(point(Some(999), 4, 10), 1, "stale-dup"),
+            // only the prior run saw this trade-off: resumed, on frontier
+            tag(point(Some(200), 2, 5), 3, "prior-small"),
+        ];
+        merge_frontier(prior, &mut outcome);
+        let labels: Vec<&str> = outcome.points.iter().map(|p| p.label.as_str()).collect();
+        // explore_space order: accurate estimates ascending by cycles
+        assert_eq!(labels, vec!["fresh-fast", "prior-small", "fresh-slow"]);
+        let frontier: Vec<&str> =
+            outcome.frontier().into_iter().map(|p| p.label.as_str()).collect();
+        // fresh-slow (300 cy, 4 PE, 10 words) is dominated by prior-small
+        assert_eq!(frontier, vec!["fresh-fast", "prior-small"]);
     }
 }

@@ -45,7 +45,7 @@ use crate::metrics::counters;
 use crate::Result;
 
 pub use enumerate::CandidateIter;
-pub use frontier::mark_frontier;
+pub use frontier::{mark_frontier, merge_frontier};
 pub use schedule::{plan_groups, plan_order, Schedule};
 pub use space::{Candidate, SweepSpace};
 

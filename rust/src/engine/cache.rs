@@ -184,6 +184,18 @@ impl EstimateCache {
         }
     }
 
+    /// Every live entry, in no particular order. Used to backfill a
+    /// newly attached [`super::store::EstimateStore`] with the warm state
+    /// already in memory; not a hot-path operation.
+    pub fn snapshot_entries(&self) -> Vec<(KernelKey, Arc<LayerEstimate>)> {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            out.extend(shard.iter().map(|(k, e)| (*k, Arc::clone(&e.est))));
+        }
+        out
+    }
+
     /// Point-in-time statistics snapshot.
     pub fn stats(&self) -> CacheStats {
         CacheStats {

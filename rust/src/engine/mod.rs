@@ -30,11 +30,12 @@
 
 pub mod cache;
 pub mod key;
+pub mod store;
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use crate::acadl::Diagram;
@@ -51,6 +52,7 @@ use crate::Result;
 
 pub use cache::{CacheStats, EstimateCache};
 pub use key::{decision_prefix, kernel_key, ArchDigest, KernelKey};
+pub use store::{EstimateStore, GcOutcome, StoreStats};
 
 /// Default entry bound of the global engine's cache (`--cache-cap`
 /// overrides; entries are a few hundred bytes each).
@@ -76,6 +78,14 @@ pub struct EngineStats {
 /// safe to call from many threads at once.
 pub struct EstimationEngine {
     cache: EstimateCache,
+    /// Optional persistent store layered *under* the cache: a cache miss
+    /// probes the store and promotes hits back into memory; evaluated
+    /// kernels are written through. `None` (the default) keeps the engine
+    /// purely in-memory.
+    store: RwLock<Option<Arc<EstimateStore>>>,
+    /// In-flight single-flight table: one entry per kernel currently being
+    /// evaluated on behalf of concurrent identical requests.
+    inflight: Mutex<HashMap<KernelKey, Arc<Flight>>>,
     /// Optional calibration model applied as a post-pass on every resolved
     /// estimate (never on the cached `Arc`s themselves — with calibration
     /// off, results stay bit-identical to an engine that never saw a
@@ -87,11 +97,24 @@ pub struct EstimationEngine {
     kernels_deduped: AtomicU64,
 }
 
+/// One in-flight kernel evaluation that concurrent identical requests
+/// park on. `done` transitions once: `None` → `Some(outcome)`, where a
+/// `Some(est)` outcome is the leader's result and `None` means the leader
+/// failed (waiters then evaluate for themselves — errors are per-request,
+/// not broadcast).
+#[derive(Default)]
+struct Flight {
+    done: Mutex<Option<Option<Arc<LayerEstimate>>>>,
+    cv: Condvar,
+}
+
 impl EstimationEngine {
     /// An engine with its own cache bounded at `cache_capacity` entries.
     pub fn new(cache_capacity: usize) -> Self {
         Self {
             cache: EstimateCache::new(cache_capacity),
+            store: RwLock::new(None),
+            inflight: Mutex::new(HashMap::new()),
             calibration: RwLock::new(None),
             requests: AtomicU64::new(0),
             kernels_total: AtomicU64::new(0),
@@ -121,6 +144,105 @@ impl EstimationEngine {
     /// Drop all cached estimates (tests; memory pressure).
     pub fn clear_cache(&self) {
         self.cache.clear();
+    }
+
+    /// Attach (or with `None`, detach) a persistent estimate store. The
+    /// store layers *under* the in-memory cache: lookups that miss the
+    /// cache probe the store and promote hits, and every evaluated kernel
+    /// is written through. On attach, warm in-memory state is backfilled
+    /// into the store so a `serve` session's pre-store work is not lost.
+    /// Flushing to disk stays the caller's responsibility
+    /// ([`EstimateStore::flush`] / [`EstimateStore::flush_if_dirty`]).
+    pub fn attach_store(&self, store: Option<Arc<EstimateStore>>) {
+        if let Some(s) = &store {
+            for (key, est) in self.cache.snapshot_entries() {
+                s.put(key, est);
+            }
+        }
+        *self.store.write().unwrap() = store;
+    }
+
+    /// The currently attached persistent store, if any.
+    pub fn store(&self) -> Option<Arc<EstimateStore>> {
+        self.store.read().unwrap().clone()
+    }
+
+    /// Cache lookup with store fallback: a cache miss probes the attached
+    /// store (if any) and promotes the hit back into memory.
+    fn probe(&self, key: &KernelKey) -> Option<Arc<LayerEstimate>> {
+        if let Some(a) = self.cache.get(key) {
+            return Some(a);
+        }
+        let store = self.store.read().unwrap().clone()?;
+        let a = store.get(key)?;
+        self.cache.insert(*key, Arc::clone(&a));
+        Some(a)
+    }
+
+    /// Record one freshly evaluated kernel in the cache and write it
+    /// through to the attached store (if any).
+    fn fill(&self, key: KernelKey, est: &Arc<LayerEstimate>) {
+        self.cache.insert(key, Arc::clone(est));
+        if let Some(s) = self.store.read().unwrap().as_ref() {
+            s.put(key, Arc::clone(est));
+        }
+    }
+
+    /// Evaluate `key` exactly once across concurrent identical requests:
+    /// the first caller (the leader) runs `eval` while later callers park
+    /// on the in-flight entry and receive the leader's `Arc`. If the
+    /// leader fails, its error stays its own — each waiter retries
+    /// locally so errors are attributed to the request that hit them.
+    fn single_flight<F>(&self, key: KernelKey, eval: F) -> Result<Arc<LayerEstimate>>
+    where
+        F: FnOnce() -> Result<LayerEstimate>,
+    {
+        // a racing leader may have landed the result since our caller's
+        // cache miss — re-probe before enqueueing any work
+        if let Some(a) = self.probe(&key) {
+            return Ok(a);
+        }
+        let existing = {
+            let mut map = self.inflight.lock().unwrap();
+            match map.get(&key) {
+                Some(f) => Some(Arc::clone(f)),
+                None => {
+                    map.insert(key, Arc::new(Flight::default()));
+                    None
+                }
+            }
+        };
+        match existing {
+            None => {
+                // leader: evaluate, publish to cache/store, wake waiters
+                let result = eval().map(Arc::new);
+                if let Ok(a) = &result {
+                    self.fill(key, a);
+                }
+                let flight = self.inflight.lock().unwrap().remove(&key);
+                if let Some(f) = flight {
+                    *f.done.lock().unwrap() = Some(result.as_ref().ok().map(Arc::clone));
+                    f.cv.notify_all();
+                }
+                result
+            }
+            Some(f) => {
+                crate::metrics::counters::SERVE_INFLIGHT_WAITS.add(1);
+                let mut done = f.done.lock().unwrap();
+                while done.is_none() {
+                    done = f.cv.wait(done).unwrap();
+                }
+                match done.as_ref().unwrap() {
+                    Some(a) => Ok(Arc::clone(a)),
+                    None => {
+                        drop(done);
+                        let a = Arc::new(eval()?);
+                        self.fill(key, &a);
+                        Ok(a)
+                    }
+                }
+            }
+        }
     }
 
     /// Install (or with `None`, remove) the calibration model. While a
@@ -223,14 +345,13 @@ impl EstimationEngine {
         let (est, provenance) = if let Some(a) = local.get(&key) {
             sp.note("dedup");
             (Arc::clone(a), Provenance::Deduped)
-        } else if let Some(a) = self.cache.get(&key) {
+        } else if let Some(a) = self.probe(&key) {
             sp.note("hit");
             local.insert(key, Arc::clone(&a));
             (a, Provenance::CacheHit)
         } else {
             sp.note("evaluated");
-            let a = Arc::new(estimate_layer(d, kern, fp)?);
-            self.cache.insert(key, Arc::clone(&a));
+            let a = self.single_flight(key, || estimate_layer(d, kern, fp))?;
             local.insert(key, Arc::clone(&a));
             (a, Provenance::Computed)
         };
@@ -378,7 +499,7 @@ impl EstimationEngine {
                     (Slot::Pending(i), Provenance::Deduped)
                 } else if let Some(a) = hit_of.get(&key) {
                     (Slot::Cached(Arc::clone(a)), Provenance::Deduped)
-                } else if let Some(a) = self.cache.get(&key) {
+                } else if let Some(a) = self.probe(&key) {
                     hit_of.insert(key, Arc::clone(&a));
                     (Slot::Cached(a), Provenance::CacheHit)
                 } else {
@@ -400,24 +521,34 @@ impl EstimationEngine {
         stats.unique_kernels = (pending_of.len() + hit_of.len()) as u64;
 
         // ---- evaluate the misses: one pool work item per unique kernel ----
+        // Jobs on the *global* engine route through `single_flight`, so N
+        // concurrent sessions estimating the same kernel share one
+        // evaluation; a closure can only reach an engine from inside a
+        // `'static` pool job when the engine itself is `'static`.
+        let global: Option<&'static EstimationEngine> =
+            std::ptr::eq(self, Self::global()).then(Self::global);
         let n_pending = pending.len();
-        let (tx, rx) = channel::<(usize, Result<LayerEstimate>)>();
+        let (tx, rx) = channel::<(usize, Result<Arc<LayerEstimate>>)>();
         for (i, (key, kern)) in pending.iter_mut().enumerate() {
             // move the kernel into the worker; the key stays for cache fill
             let kern = std::mem::replace(
                 kern,
                 LoopKernel::new("<taken>", 0, 0, Box::new(|_, _| {})),
             );
-            let kernel_hi = key.kernel_hi;
+            let key = *key;
             let tx = tx.clone();
             let m = Arc::clone(&mapper);
             let fp = *fp;
             pool.spawn(move || {
-                let r = {
+                let eval = || {
                     let mut ksp = crate::obs::span("engine.kernel");
-                    ksp.arg("kernel_hi", kernel_hi);
+                    ksp.arg("kernel_hi", key.kernel_hi);
                     ksp.note("evaluated");
                     estimate_layer(m.diagram(), &kern, &fp)
+                };
+                let r = match global {
+                    Some(engine) => engine.single_flight(key, eval),
+                    None => eval().map(Arc::new),
                 };
                 let _ = tx.send((i, r));
             })?;
@@ -427,8 +558,8 @@ impl EstimationEngine {
         let mut received = 0usize;
         while received < n_pending {
             let Ok((i, r)) = rx.recv() else { break };
-            let est = Arc::new(r?);
-            self.cache.insert(pending[i].0, Arc::clone(&est));
+            let est = r?;
+            self.fill(pending[i].0, &est);
             results[i] = Some(est);
             received += 1;
         }
@@ -580,7 +711,7 @@ impl EstimationEngine {
                         (Slot::Pending(i), Provenance::CacheHit)
                     } else if let Some(a) = hit_of.get(&key) {
                         (Slot::Cached(Arc::clone(a)), Provenance::CacheHit)
-                    } else if let Some(a) = self.cache.get(&key) {
+                    } else if let Some(a) = self.probe(&key) {
                         hit_of.insert(key, Arc::clone(&a));
                         (Slot::Cached(a), Provenance::CacheHit)
                     } else {
@@ -649,7 +780,11 @@ impl EstimationEngine {
             debug_assert_eq!(ests.len(), idxs.len());
             for (&i, e) in idxs.iter().zip(ests) {
                 let est = Arc::new(e);
-                self.cache.insert(pending[i].key, Arc::clone(&est));
+                // no single-flight here: grouped lane evaluation does not
+                // decompose into per-kernel closures, and DSE sweeps run
+                // on private engines anyway — probe/fill still give the
+                // batch path full store read/write-through
+                self.fill(pending[i].key, &est);
                 results[i] = Some(est);
             }
             received += 1;
@@ -733,6 +868,127 @@ mod tests {
         assert_eq!(warm.stats.evaluated, 0, "{:?}", warm.stats);
         assert_eq!(warm.total_cycles(), e.total_cycles());
         assert_eq!(engine.stats().requests, 2);
+    }
+
+    #[test]
+    fn single_flight_runs_one_evaluation_for_racing_identical_requests() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+
+        let engine = EstimationEngine::new(1 << 10);
+        let key = KernelKey { arch: 1, kernel_hi: 2, kernel_lo: 3, fp_bits: 4 };
+        let evals = AtomicUsize::new(0);
+        let barrier = Barrier::new(8);
+        let mut cycles = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        barrier.wait();
+                        engine
+                            .single_flight(key, || {
+                                evals.fetch_add(1, Ordering::SeqCst);
+                                // slow evaluation: give every racer time
+                                // to park on the in-flight entry
+                                std::thread::sleep(std::time::Duration::from_millis(20));
+                                Ok(probe_est(4242))
+                            })
+                            .unwrap()
+                            .cycles
+                    })
+                })
+                .collect();
+            for h in handles {
+                cycles.push(h.join().unwrap());
+            }
+        });
+        assert_eq!(evals.load(Ordering::SeqCst), 1, "exactly one evaluation for 8 racers");
+        assert!(cycles.iter().all(|&c| c == 4242));
+        assert_eq!(engine.cache_len(), 1);
+    }
+
+    #[test]
+    fn single_flight_leader_failure_lets_waiters_retry() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+
+        let engine = EstimationEngine::new(1 << 10);
+        let key = KernelKey { arch: 9, kernel_hi: 9, kernel_lo: 9, fp_bits: 9 };
+        let attempts = AtomicUsize::new(0);
+        let barrier = Barrier::new(2);
+        std::thread::scope(|s| {
+            let results: Vec<_> = (0..2)
+                .map(|_| {
+                    s.spawn(|| {
+                        barrier.wait();
+                        engine.single_flight(key, || {
+                            let n = attempts.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            if n == 0 {
+                                anyhow::bail!("transient failure");
+                            }
+                            Ok(probe_est(7))
+                        })
+                    })
+                })
+                .collect();
+            let outcomes: Vec<_> = results.into_iter().map(|h| h.join().unwrap()).collect();
+            // whichever thread lost the leader race (or retried after the
+            // leader's failure) must still land a correct estimate
+            assert!(outcomes.iter().any(|r| r.is_ok()), "{outcomes:?}");
+            for r in outcomes.into_iter().flatten() {
+                assert_eq!(r.cycles, 7);
+            }
+        });
+    }
+
+    fn probe_est(cycles: u64) -> LayerEstimate {
+        LayerEstimate {
+            label: "t".into(),
+            k: 1,
+            insts_per_iter: 1,
+            cycles,
+            evaluated_iters: 1,
+            k_block: 1,
+            k_prolog: 1,
+            dt_iteration: 0,
+            dt_overlap: 0,
+            used_fallback: false,
+            whole_graph: true,
+            nodes: 1,
+            peak_state_bytes: 0,
+            runtime: std::time::Duration::ZERO,
+            provenance: Provenance::Computed,
+            trace: None,
+            calibrated_cycles: None,
+            ci_lo: None,
+            ci_hi: None,
+        }
+    }
+
+    #[test]
+    fn store_layers_under_the_cache_with_promote_and_write_through() {
+        let dir = std::env::temp_dir()
+            .join(format!("acadl-engine-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let arch = Arch::Systolic(SystolicConfig::new(2, 2));
+        let net = crate::dnn::zoo::tc_resnet8();
+        let fp = FixedPointConfig::default();
+
+        // first engine evaluates everything and writes through
+        let e1 = EstimationEngine::new(1 << 10);
+        e1.attach_store(Some(EstimateStore::open(&dir).unwrap()));
+        let cold = e1.estimate_network(&arch, &net, &fp).unwrap();
+        assert!(cold.stats.evaluated > 0);
+        e1.store().unwrap().flush().unwrap();
+
+        // second engine (cold cache, same store dir) must evaluate nothing
+        let e2 = EstimationEngine::new(1 << 10);
+        e2.attach_store(Some(EstimateStore::open(&dir).unwrap()));
+        let warm = e2.estimate_network(&arch, &net, &fp).unwrap();
+        assert_eq!(warm.stats.evaluated, 0, "store must serve every kernel: {:?}", warm.stats);
+        assert_eq!(warm.total_cycles(), cold.total_cycles(), "store path must be bit-identical");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

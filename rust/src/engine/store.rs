@@ -1,0 +1,850 @@
+//! §Store — a persistent, content-addressed estimate store.
+//!
+//! The in-memory [`EstimateCache`](super::EstimateCache) dies with the
+//! process; this module gives warm state a disk form that survives
+//! restarts and can be shipped between replicas. The layout is a
+//! directory of **append-only segment files** (`seg-NNNNNN.est`), each
+//!
+//! ```text
+//! [8-byte magic "ACPSTOR1"]
+//! [record]*      where record = [len: u32 LE][crc64: u64 LE][payload]
+//! ```
+//!
+//! and every payload starts with a kind byte: `1` is one
+//! [`LayerEstimate`] keyed by its [`KernelKey`] (all fields are exact
+//! integers — cached estimates never carry traces or calibration stamps,
+//! so the round-trip is bit-identical by construction), `2` is a DSE
+//! Pareto frontier keyed by *sweep-space digest × network digest* so a
+//! repeated `sweep` resumes from the prior frontier. Records are
+//! checksummed (FNV-1a 64 over the payload); a corrupt or short tail —
+//! the signature of a crash mid-append — is truncated away on open and
+//! everything before it is served normally. New entries accumulate in
+//! memory and are flushed as a *new* segment via write-temp-then-rename,
+//! so readers of the directory never observe a half-written file. Later
+//! records shadow earlier ones on load, which is what makes `gc`
+//! (rewrite live entries into one compacted segment, drop the rest)
+//! safe: an interrupted gc leaves the old segments behind, and the next
+//! open simply reads both generations.
+//!
+//! Reference management is generational: `open` stamps
+//! `open_gen = max(stored last_ref) + 1`, and every `get`/`put` touches
+//! the entry's `last_ref` to the current generation. [`EstimateStore::gc`]
+//! drops entries whose `last_ref` predates the current generation —
+//! i.e. everything loaded from disk but never referenced since.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::key::KernelKey;
+use crate::aidg::{LayerEstimate, Provenance};
+use crate::dse::SweepPoint;
+use crate::metrics::counters;
+
+/// Segment-file magic: "ACadl Perf STORe" v1.
+const MAGIC: [u8; 8] = *b"ACPSTOR1";
+/// Records larger than this are treated as corruption, not data.
+const MAX_RECORD: u32 = 16 * 1024 * 1024;
+/// Payload kind byte for a keyed [`LayerEstimate`].
+const KIND_ESTIMATE: u8 = 1;
+/// Payload kind byte for a DSE frontier snapshot.
+const KIND_FRONTIER: u8 = 2;
+
+/// FNV-1a 64 — the record checksum (and the digest helper for frontier
+/// keys). Not cryptographic; it only needs to catch torn writes.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of a network's identity for frontier keying: name plus the
+/// ordered layer-name list (layer hyper-parameters are already captured
+/// by the sweep outcome's kernel keys; the frontier key only needs to
+/// tell *workloads* apart).
+pub fn net_digest(net: &crate::dnn::Network) -> u64 {
+    let mut text = String::with_capacity(64);
+    text.push_str(&net.name);
+    for l in &net.layers {
+        text.push('\n');
+        text.push_str(&l.name);
+    }
+    fnv64(text.as_bytes())
+}
+
+/// One stored estimate plus its generational reference stamp.
+struct StoredEntry {
+    est: Arc<LayerEstimate>,
+    last_ref: u64,
+}
+
+/// One stored frontier plus its generational reference stamp.
+struct FrontierEntry {
+    points: Vec<SweepPoint>,
+    last_ref: u64,
+}
+
+/// Mutable store state behind one mutex (lookups are a hash probe; the
+/// hot path through the engine only reaches here on a cache *miss*).
+struct Inner {
+    entries: HashMap<KernelKey, StoredEntry>,
+    frontiers: HashMap<(u64, u64), FrontierEntry>,
+    /// Generation stamp of this open; entries touched this run carry it.
+    open_gen: u64,
+    /// Keys inserted since the last flush (always present in `entries`).
+    dirty: Vec<KernelKey>,
+    /// Frontier keys written since the last flush.
+    dirty_frontiers: Vec<(u64, u64)>,
+    /// Next segment file number.
+    next_seg: u64,
+}
+
+/// Aggregate store counters for `store stats` and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Estimates resident (loaded + inserted).
+    pub entries: usize,
+    /// Frontier snapshots resident.
+    pub frontiers: usize,
+    /// Records not yet flushed to a segment.
+    pub dirty: usize,
+    /// Segment files currently in the directory.
+    pub segments: usize,
+    /// Generation stamp of this open.
+    pub open_gen: u64,
+}
+
+/// Result of one [`EstimateStore::gc`] pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcOutcome {
+    /// Records kept (referenced since the current generation).
+    pub kept: usize,
+    /// Records dropped as unreferenced.
+    pub dropped: usize,
+}
+
+/// A content-addressed on-disk estimate store. See the module docs for
+/// the format; see [`EstimationEngine::attach_store`]
+/// (super::EstimationEngine::attach_store) for how it layers *under* the
+/// in-memory cache (miss → store probe → promote).
+pub struct EstimateStore {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl EstimateStore {
+    /// Open (creating if needed) the store at `dir`, loading every
+    /// segment in file order. Corrupt tails are truncated; a segment
+    /// with a foreign magic is skipped whole.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store directory {}", dir.display()))?;
+        let mut segs: Vec<(u64, PathBuf)> = Vec::new();
+        for entry in
+            fs::read_dir(&dir).with_context(|| format!("listing store {}", dir.display()))?
+        {
+            let path = entry?.path();
+            if let Some(n) = segment_number(&path) {
+                segs.push((n, path));
+            }
+        }
+        segs.sort();
+        let mut inner = Inner {
+            entries: HashMap::new(),
+            frontiers: HashMap::new(),
+            open_gen: 1,
+            dirty: Vec::new(),
+            dirty_frontiers: Vec::new(),
+            next_seg: 0,
+        };
+        let mut max_ref = 0u64;
+        for (n, path) in &segs {
+            load_segment(path, &mut inner, &mut max_ref)
+                .with_context(|| format!("loading segment {}", path.display()))?;
+            inner.next_seg = inner.next_seg.max(n + 1);
+        }
+        inner.open_gen = max_ref + 1;
+        Ok(Arc::new(Self { dir, inner: Mutex::new(inner) }))
+    }
+
+    /// The directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Look up one estimate; a hit refreshes the entry's generation
+    /// stamp (it is "referenced" for gc purposes).
+    pub fn get(&self, key: &KernelKey) -> Option<Arc<LayerEstimate>> {
+        let mut inner = self.inner.lock().unwrap();
+        let gen = inner.open_gen;
+        match inner.entries.get_mut(key) {
+            Some(e) => {
+                e.last_ref = gen;
+                counters::STORE_HITS.add(1);
+                Some(Arc::clone(&e.est))
+            }
+            None => {
+                counters::STORE_MISSES.add(1);
+                None
+            }
+        }
+    }
+
+    /// Insert one estimate. Content addressing makes overwrites
+    /// meaningless (same key ⇒ same cycles), so an existing entry is
+    /// only touched, not re-written. Returns whether the entry was new.
+    pub fn put(&self, key: KernelKey, est: Arc<LayerEstimate>) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let gen = inner.open_gen;
+        if let Some(e) = inner.entries.get_mut(&key) {
+            e.last_ref = gen;
+            return false;
+        }
+        inner.entries.insert(key, StoredEntry { est, last_ref: gen });
+        inner.dirty.push(key);
+        counters::STORE_WRITES.add(1);
+        true
+    }
+
+    /// Look up the persisted frontier for one sweep-space × network
+    /// digest pair.
+    pub fn frontier_get(&self, space_digest: u64, net_digest: u64) -> Option<Vec<SweepPoint>> {
+        let mut inner = self.inner.lock().unwrap();
+        let gen = inner.open_gen;
+        match inner.frontiers.get_mut(&(space_digest, net_digest)) {
+            Some(f) => {
+                f.last_ref = gen;
+                counters::STORE_HITS.add(1);
+                Some(f.points.clone())
+            }
+            None => {
+                counters::STORE_MISSES.add(1);
+                None
+            }
+        }
+    }
+
+    /// Replace the persisted frontier for one sweep-space × network
+    /// digest pair (frontiers evolve, unlike estimates, so this *does*
+    /// overwrite — the newest record shadows older ones on load).
+    pub fn frontier_put(&self, space_digest: u64, net_digest: u64, points: Vec<SweepPoint>) {
+        let mut inner = self.inner.lock().unwrap();
+        let gen = inner.open_gen;
+        inner
+            .frontiers
+            .insert((space_digest, net_digest), FrontierEntry { points, last_ref: gen });
+        if !inner.dirty_frontiers.contains(&(space_digest, net_digest)) {
+            inner.dirty_frontiers.push((space_digest, net_digest));
+        }
+        counters::STORE_WRITES.add(1);
+    }
+
+    /// Number of resident estimates.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Whether the store holds no estimates.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Aggregate counters for `store stats`.
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().unwrap();
+        StoreStats {
+            entries: inner.entries.len(),
+            frontiers: inner.frontiers.len(),
+            dirty: inner.dirty.len() + inner.dirty_frontiers.len(),
+            segments: self.segment_count(),
+            open_gen: inner.open_gen,
+        }
+    }
+
+    /// Segment files currently on disk.
+    fn segment_count(&self) -> usize {
+        fs::read_dir(&self.dir)
+            .map(|rd| rd.flatten().filter(|e| segment_number(&e.path()).is_some()).count())
+            .unwrap_or(0)
+    }
+
+    /// Flush unwritten records as one new segment (write-temp-then-
+    /// rename, so a crash never leaves a half-visible segment). Returns
+    /// the number of records written; a clean store is a no-op.
+    pub fn flush(&self) -> Result<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.dirty.is_empty() && inner.dirty_frontiers.is_empty() {
+            return Ok(0);
+        }
+        let mut buf = MAGIC.to_vec();
+        let mut written = 0usize;
+        for key in &inner.dirty {
+            let e = &inner.entries[key];
+            write_record(&mut buf, &encode_estimate(key, e.last_ref, &e.est));
+            written += 1;
+        }
+        for fk in &inner.dirty_frontiers {
+            let f = &inner.frontiers[fk];
+            write_record(&mut buf, &encode_frontier(*fk, f.last_ref, &f.points));
+            written += 1;
+        }
+        self.swap_in_segment(&mut inner, &buf)?;
+        inner.dirty.clear();
+        inner.dirty_frontiers.clear();
+        Ok(written)
+    }
+
+    /// Flush when at least `threshold` records are pending — the serve
+    /// loop's cheap periodic persistence hook.
+    pub fn flush_if_dirty(&self, threshold: usize) -> Result<usize> {
+        let pending = {
+            let inner = self.inner.lock().unwrap();
+            inner.dirty.len() + inner.dirty_frontiers.len()
+        };
+        if pending >= threshold.max(1) {
+            self.flush()
+        } else {
+            Ok(0)
+        }
+    }
+
+    /// Drop every record not referenced since this open's generation
+    /// stamp and compact the survivors into a single fresh segment,
+    /// deleting the old ones. Unreferenced means: loaded from disk and
+    /// never hit by `get`/`put`/`frontier_get` in this process.
+    pub fn gc(&self) -> Result<GcOutcome> {
+        let mut inner = self.inner.lock().unwrap();
+        let gen = inner.open_gen;
+        let before = inner.entries.len() + inner.frontiers.len();
+        inner.entries.retain(|_, e| e.last_ref >= gen);
+        inner.frontiers.retain(|_, f| f.last_ref >= gen);
+        let kept = inner.entries.len() + inner.frontiers.len();
+        let dropped = before - kept;
+
+        let mut buf = MAGIC.to_vec();
+        for (key, e) in &inner.entries {
+            write_record(&mut buf, &encode_estimate(key, e.last_ref, &e.est));
+        }
+        for (fk, f) in &inner.frontiers {
+            write_record(&mut buf, &encode_frontier(*fk, f.last_ref, &f.points));
+        }
+        let new_seg = self.swap_in_segment(&mut inner, &buf)?;
+        // compaction persisted everything live; nothing is pending
+        inner.dirty.clear();
+        inner.dirty_frontiers.clear();
+        // drop every segment but the compacted one
+        for entry in fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if let Some(n) = segment_number(&path) {
+                if n != new_seg {
+                    let _ = fs::remove_file(&path);
+                }
+            }
+        }
+        counters::STORE_GC_DROPPED.add(dropped as u64);
+        Ok(GcOutcome { kept, dropped })
+    }
+
+    /// Write `buf` as the next segment via temp + atomic rename; returns
+    /// the new segment number.
+    fn swap_in_segment(&self, inner: &mut Inner, buf: &[u8]) -> Result<u64> {
+        let seg = inner.next_seg;
+        let tmp = self.dir.join(format!("seg-{seg:06}.tmp"));
+        let dst = self.dir.join(format!("seg-{seg:06}.est"));
+        fs::write(&tmp, buf).with_context(|| format!("writing {}", tmp.display()))?;
+        fs::rename(&tmp, &dst)
+            .with_context(|| format!("renaming {} -> {}", tmp.display(), dst.display()))?;
+        inner.next_seg += 1;
+        Ok(seg)
+    }
+}
+
+/// Parse `seg-NNNNNN.est` into its segment number.
+fn segment_number(path: &Path) -> Option<u64> {
+    let name = path.file_name()?.to_str()?;
+    let digits = name.strip_prefix("seg-")?.strip_suffix(".est")?;
+    digits.parse().ok()
+}
+
+/// Load one segment into `inner`, truncating any corrupt tail in place.
+fn load_segment(path: &Path, inner: &mut Inner, max_ref: &mut u64) -> Result<()> {
+    let bytes = fs::read(path)?;
+    if bytes.len() < MAGIC.len() || bytes[..MAGIC.len()] != MAGIC {
+        // foreign or hopeless file: leave it alone, serve nothing from it
+        return Ok(());
+    }
+    let mut off = MAGIC.len();
+    loop {
+        let Some(rec_end) = record_bounds(&bytes, off) else {
+            // short header, oversized length, bad checksum, or a payload
+            // that fails to decode: crash-torn tail — truncate to the
+            // last good record so the next append starts clean
+            if off < bytes.len() {
+                truncate_file(path, off as u64);
+            }
+            return Ok(());
+        };
+        let payload = &bytes[off + 12..rec_end];
+        match payload.first() {
+            Some(&KIND_ESTIMATE) => match decode_estimate(&payload[1..]) {
+                Ok((key, last_ref, est)) => {
+                    *max_ref = (*max_ref).max(last_ref);
+                    inner.entries.insert(key, StoredEntry { est: Arc::new(est), last_ref });
+                }
+                Err(_) => {
+                    truncate_file(path, off as u64);
+                    return Ok(());
+                }
+            },
+            Some(&KIND_FRONTIER) => match decode_frontier(&payload[1..]) {
+                Ok((fk, last_ref, points)) => {
+                    *max_ref = (*max_ref).max(last_ref);
+                    inner.frontiers.insert(fk, FrontierEntry { points, last_ref });
+                }
+                Err(_) => {
+                    truncate_file(path, off as u64);
+                    return Ok(());
+                }
+            },
+            // unknown kind: a future format extension — skip the record
+            // (it passed its checksum, so the frame is trustworthy)
+            _ => {}
+        }
+        off = rec_end;
+        if off == bytes.len() {
+            return Ok(());
+        }
+    }
+}
+
+/// If the record at `off` is whole and checksums clean, return its end
+/// offset; `None` marks the corrupt-tail boundary.
+fn record_bounds(bytes: &[u8], off: usize) -> Option<usize> {
+    let header = bytes.get(off..off + 12)?;
+    let len = u32::from_le_bytes(header[..4].try_into().unwrap());
+    if len == 0 || len > MAX_RECORD {
+        return None;
+    }
+    let crc = u64::from_le_bytes(header[4..12].try_into().unwrap());
+    let payload = bytes.get(off + 12..off + 12 + len as usize)?;
+    (fnv64(payload) == crc).then_some(off + 12 + len as usize)
+}
+
+/// Best-effort physical truncation of a segment's corrupt tail.
+fn truncate_file(path: &Path, len: u64) {
+    if let Ok(f) = fs::OpenOptions::new().write(true).open(path) {
+        let _ = f.set_len(len);
+    }
+}
+
+/// Frame one payload as `[len][crc][payload]`.
+fn write_record(out: &mut Vec<u8>, payload: &[u8]) {
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Little-endian payload writer.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(kind: u8) -> Self {
+        Self { buf: vec![kind] }
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Little-endian payload reader (every getter fails cleanly on a short
+/// or malformed buffer — the caller treats that as a corrupt tail).
+struct Dec<'a> {
+    b: &'a [u8],
+}
+
+impl Dec<'_> {
+    fn u64(&mut self) -> Result<u64> {
+        if self.b.len() < 8 {
+            bail!("record truncated");
+        }
+        let (head, rest) = self.b.split_at(8);
+        self.b = rest;
+        Ok(u64::from_le_bytes(head.try_into().unwrap()))
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        if self.b.len() < n {
+            bail!("record truncated");
+        }
+        let (head, rest) = self.b.split_at(n);
+        self.b = rest;
+        Ok(std::str::from_utf8(head).context("stored string not UTF-8")?.to_string())
+    }
+    fn done(&self) -> Result<()> {
+        if !self.b.is_empty() {
+            bail!("{} trailing bytes in record", self.b.len());
+        }
+        Ok(())
+    }
+}
+
+/// Encode one estimate record. Only exact fields are persisted: cached
+/// estimates never carry traces, and calibration is stamped at read
+/// time by the engine, never stored — that is what keeps
+/// calibration-off bit-identical through the store path.
+fn encode_estimate(key: &KernelKey, last_ref: u64, est: &LayerEstimate) -> Vec<u8> {
+    let mut e = Enc::new(KIND_ESTIMATE);
+    e.u64(key.arch);
+    e.u64(key.kernel_hi);
+    e.u64(key.kernel_lo);
+    e.u64(key.fp_bits);
+    e.u64(last_ref);
+    e.str(&est.label);
+    e.u64(est.k);
+    e.u64(est.insts_per_iter as u64);
+    e.u64(est.cycles);
+    e.u64(est.evaluated_iters);
+    e.u64(est.k_block);
+    e.u64(est.k_prolog);
+    e.u64(est.dt_iteration);
+    e.u64(est.dt_overlap as u64);
+    e.u64(est.used_fallback as u64 | (est.whole_graph as u64) << 1);
+    e.u64(est.nodes);
+    e.u64(est.peak_state_bytes);
+    e.u64(est.runtime.as_nanos() as u64);
+    e.buf
+}
+
+/// Decode one estimate payload (after the kind byte).
+fn decode_estimate(payload: &[u8]) -> Result<(KernelKey, u64, LayerEstimate)> {
+    let mut d = Dec { b: payload };
+    let key = KernelKey {
+        arch: d.u64()?,
+        kernel_hi: d.u64()?,
+        kernel_lo: d.u64()?,
+        fp_bits: d.u64()?,
+    };
+    let last_ref = d.u64()?;
+    let label = d.str()?;
+    let k = d.u64()?;
+    let insts_per_iter = d.u64()? as usize;
+    let cycles = d.u64()?;
+    let evaluated_iters = d.u64()?;
+    let k_block = d.u64()?;
+    let k_prolog = d.u64()?;
+    let dt_iteration = d.u64()?;
+    let dt_overlap = d.u64()? as i64;
+    let flags = d.u64()?;
+    let nodes = d.u64()?;
+    let peak_state_bytes = d.u64()?;
+    let runtime = Duration::from_nanos(d.u64()?);
+    d.done()?;
+    Ok((
+        key,
+        last_ref,
+        LayerEstimate {
+            label,
+            k,
+            insts_per_iter,
+            cycles,
+            evaluated_iters,
+            k_block,
+            k_prolog,
+            dt_iteration,
+            dt_overlap,
+            used_fallback: flags & 1 != 0,
+            whole_graph: flags & 2 != 0,
+            nodes,
+            peak_state_bytes,
+            runtime,
+            provenance: Provenance::Computed,
+            trace: None,
+            calibrated_cycles: None,
+            ci_lo: None,
+            ci_hi: None,
+        },
+    ))
+}
+
+/// Encode one frontier record.
+fn encode_frontier(fk: (u64, u64), last_ref: u64, points: &[SweepPoint]) -> Vec<u8> {
+    let mut e = Enc::new(KIND_FRONTIER);
+    e.u64(fk.0);
+    e.u64(fk.1);
+    e.u64(last_ref);
+    e.u64(points.len() as u64);
+    for p in points {
+        e.str(&p.label);
+        e.str(&p.arch_name);
+        e.u64(p.assignment.len() as u64);
+        for (name, v) in &p.assignment {
+            e.str(name);
+            e.u64(*v as u64);
+        }
+        e.u64(p.digest);
+        e.u64(p.pe_count);
+        e.u64(p.mem_words);
+        e.u64(p.roofline_cycles.to_bits());
+        match p.aidg_cycles {
+            Some(c) => {
+                e.u64(1);
+                e.u64(c);
+            }
+            None => e.u64(0),
+        }
+        e.u64(p.on_frontier as u64);
+    }
+    e.buf
+}
+
+/// Decode one frontier payload (after the kind byte).
+fn decode_frontier(payload: &[u8]) -> Result<((u64, u64), u64, Vec<SweepPoint>)> {
+    let mut d = Dec { b: payload };
+    let fk = (d.u64()?, d.u64()?);
+    let last_ref = d.u64()?;
+    let count = d.u64()? as usize;
+    if count > 1_000_000 {
+        bail!("implausible frontier size {count}");
+    }
+    let mut points = Vec::with_capacity(count);
+    for _ in 0..count {
+        let label = d.str()?;
+        let arch_name = d.str()?;
+        let n_assign = d.u64()? as usize;
+        if n_assign > 10_000 {
+            bail!("implausible assignment size {n_assign}");
+        }
+        let mut assignment = Vec::with_capacity(n_assign);
+        for _ in 0..n_assign {
+            let name = d.str()?;
+            let v = d.u64()? as i64;
+            assignment.push((name, v));
+        }
+        let digest = d.u64()?;
+        let pe_count = d.u64()?;
+        let mem_words = d.u64()?;
+        let roofline_cycles = f64::from_bits(d.u64()?);
+        let aidg_cycles = if d.u64()? != 0 { Some(d.u64()?) } else { None };
+        let on_frontier = d.u64()? != 0;
+        points.push(SweepPoint {
+            label,
+            assignment,
+            arch_name,
+            digest,
+            pe_count,
+            mem_words,
+            roofline_cycles,
+            aidg_cycles,
+            on_frontier,
+        });
+    }
+    d.done()?;
+    Ok((fk, last_ref, points))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "acadl-store-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn key(n: u64) -> KernelKey {
+        KernelKey { arch: n, kernel_hi: n.wrapping_mul(3), kernel_lo: n ^ 0xFF, fp_bits: 7 }
+    }
+
+    fn est(label: &str, cycles: u64) -> LayerEstimate {
+        LayerEstimate {
+            label: label.into(),
+            k: 64,
+            insts_per_iter: 7,
+            cycles,
+            evaluated_iters: 9,
+            k_block: 2,
+            k_prolog: 3,
+            dt_iteration: 11,
+            dt_overlap: -4,
+            used_fallback: false,
+            whole_graph: true,
+            nodes: 123,
+            peak_state_bytes: 456,
+            runtime: Duration::from_micros(5),
+            provenance: Provenance::Computed,
+            trace: None,
+            calibrated_cycles: None,
+            ci_lo: None,
+            ci_hi: None,
+        }
+    }
+
+    fn point(label: &str, cycles: u64) -> SweepPoint {
+        SweepPoint {
+            label: label.into(),
+            assignment: vec![("rows".into(), 4), ("cols".into(), -2)],
+            arch_name: "systolic".into(),
+            digest: 0xABCD,
+            pe_count: 16,
+            mem_words: 1024,
+            roofline_cycles: 123.5,
+            aidg_cycles: Some(cycles),
+            on_frontier: true,
+        }
+    }
+
+    #[test]
+    fn estimate_record_round_trips_bit_identically() {
+        let k = key(42);
+        let e0 = est("conv1/k0", 98765);
+        let payload = encode_estimate(&k, 3, &e0);
+        assert_eq!(payload[0], KIND_ESTIMATE);
+        let (k1, last_ref, e1) = decode_estimate(&payload[1..]).unwrap();
+        assert_eq!(k1, k);
+        assert_eq!(last_ref, 3);
+        assert_eq!(e1.label, e0.label);
+        assert_eq!(e1.cycles, e0.cycles);
+        assert_eq!(e1.dt_overlap, e0.dt_overlap);
+        assert_eq!(e1.whole_graph, e0.whole_graph);
+        assert_eq!(e1.used_fallback, e0.used_fallback);
+        assert_eq!(e1.runtime, e0.runtime);
+        assert!(e1.trace.is_none() && e1.calibrated_cycles.is_none());
+    }
+
+    #[test]
+    fn save_reopen_serves_identical_estimates() {
+        let dir = scratch_dir("roundtrip");
+        {
+            let store = EstimateStore::open(&dir).unwrap();
+            assert!(store.put(key(1), Arc::new(est("a", 100))));
+            assert!(store.put(key(2), Arc::new(est("b", 200))));
+            // duplicate put is a touch, not a rewrite
+            assert!(!store.put(key(1), Arc::new(est("a", 100))));
+            assert_eq!(store.flush().unwrap(), 2);
+            assert_eq!(store.flush().unwrap(), 0, "clean store must not grow segments");
+        }
+        let store = EstimateStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(&key(1)).unwrap().cycles, 100);
+        assert_eq!(store.get(&key(2)).unwrap().label, "b");
+        assert!(store.get(&key(3)).is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_tail_is_truncated_and_prefix_served() {
+        let dir = scratch_dir("corrupt");
+        {
+            let store = EstimateStore::open(&dir).unwrap();
+            store.put(key(1), Arc::new(est("good", 100)));
+            store.flush().unwrap();
+        }
+        // simulate a crash mid-append: garbage after the good record
+        let seg = dir.join("seg-000000.est");
+        let clean_len = fs::metadata(&seg).unwrap().len();
+        let mut bytes = fs::read(&seg).unwrap();
+        bytes.extend_from_slice(&[0xDE, 0xAD, 0xBE, 0xEF, 0x01, 0x02, 0x03]);
+        fs::write(&seg, &bytes).unwrap();
+
+        let store = EstimateStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 1, "clean prefix must survive");
+        assert_eq!(store.get(&key(1)).unwrap().cycles, 100);
+        assert_eq!(
+            fs::metadata(&seg).unwrap().len(),
+            clean_len,
+            "corrupt tail must be physically truncated"
+        );
+
+        // flipping a byte inside the record kills its checksum: the
+        // whole record is the tail now
+        let mut bytes = fs::read(&seg).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&seg, &bytes).unwrap();
+        let store = EstimateStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 0, "checksum-failing record must be dropped");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_keeps_referenced_and_drops_unreferenced() {
+        let dir = scratch_dir("gc");
+        {
+            let store = EstimateStore::open(&dir).unwrap();
+            store.put(key(1), Arc::new(est("kept", 100)));
+            store.put(key(2), Arc::new(est("dropped", 200)));
+            store.flush().unwrap();
+        }
+        {
+            let store = EstimateStore::open(&dir).unwrap();
+            // reference only key(1) in this generation
+            assert!(store.get(&key(1)).is_some());
+            let out = store.gc().unwrap();
+            assert_eq!(out, GcOutcome { kept: 1, dropped: 1 });
+            assert_eq!(store.stats().segments, 1, "gc must compact to one segment");
+        }
+        let store = EstimateStore::open(&dir).unwrap();
+        assert!(store.get(&key(1)).is_some(), "referenced entry survives gc + reopen");
+        assert!(store.get(&key(2)).is_none(), "unreferenced entry is gone");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn frontier_round_trips_through_reopen() {
+        let dir = scratch_dir("frontier");
+        let pts = vec![point("rows=4,cols=2", 1000), point("rows=2,cols=4", 1200)];
+        {
+            let store = EstimateStore::open(&dir).unwrap();
+            store.frontier_put(0x51, 0x52, pts.clone());
+            store.flush().unwrap();
+        }
+        let store = EstimateStore::open(&dir).unwrap();
+        let got = store.frontier_get(0x51, 0x52).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].label, pts[0].label);
+        assert_eq!(got[0].assignment, pts[0].assignment);
+        assert_eq!(got[0].roofline_cycles, pts[0].roofline_cycles);
+        assert_eq!(got[1].aidg_cycles, pts[1].aidg_cycles);
+        assert!(store.frontier_get(0x51, 0x53).is_none());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn new_records_land_in_fresh_segments_and_later_shadow_earlier() {
+        let dir = scratch_dir("shadow");
+        {
+            let store = EstimateStore::open(&dir).unwrap();
+            store.frontier_put(9, 9, vec![point("old", 1)]);
+            store.flush().unwrap();
+            store.frontier_put(9, 9, vec![point("new", 2), point("new2", 3)]);
+            store.flush().unwrap();
+            assert_eq!(store.stats().segments, 2);
+        }
+        let store = EstimateStore::open(&dir).unwrap();
+        let got = store.frontier_get(9, 9).unwrap();
+        assert_eq!(got.len(), 2, "newest frontier record must shadow the older one");
+        assert_eq!(got[0].label, "new");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -12,7 +12,12 @@
 //! acadl-perf calibrate [--out <path>] [--machines N] [--seed N]
 //!                                                  train a DES-backed
 //!                                                  calibration model
-//! acadl-perf serve                                 line-based request loop
+//! acadl-perf serve [--listen <addr>] [--max-clients N]
+//!                  [--read-timeout-ms N] [--store <dir>]
+//!                                                  line-based request loop:
+//!                                                  stdio, or concurrent TCP
+//!                                                  with --listen
+//! acadl-perf store <stats|gc|flush> --store <dir>  offline store maintenance
 //! acadl-perf info                                  platform + model zoo
 //! ```
 //!
@@ -196,19 +201,11 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
         Some("dse") => dse(&args[1..], g),
         Some("check") => check(&args[1..]),
         Some("calibrate") => calibrate(&args[1..]),
-        Some("serve") => {
-            let stdin = std::io::stdin();
-            let n = coordinator::serve_with(
-                stdin.lock(),
-                std::io::stdout(),
-                &ServeOptions { workers: g.workers },
-            )?;
-            eprintln!("served {n} requests");
-            Ok(())
-        }
+        Some("serve") => serve_cmd(&args[1..], g),
+        Some("store") => store_cmd(&args[1..]),
         Some("info") => info(),
         _ => {
-            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|calibrate|serve|info> ...");
+            eprintln!("usage: acadl-perf <estimate|simulate|compare|dse|check|calibrate|serve|store|info> ...");
             eprintln!("  architectures: systolic:<R>x<C>[:pw<W>] | ultratrail[:N] | gemmini[:DIM] | plasticine:<R>x<C>:<T>");
             eprintln!("                 file:<path>  or  --arch-file <path>  (textual ACADL description)");
             eprintln!("  networks:      tc_resnet8 | alexnet | ... (acadl-perf info)");
@@ -217,6 +214,9 @@ fn dispatch(args: &[String], g: &GlobalOpts) -> Result<()> {
             eprintln!("                 explores the description's [sweep] space (see docs/dse.md)");
             eprintln!("  calibrate:     [--out <path>] [--machines N] [--kernels N] [--seed N] [--kernel-seed N]");
             eprintln!("                 train an error-bar calibration model against the DES (docs/accuracy.md)");
+            eprintln!("  serve:         [--listen <addr>] [--max-clients N] [--read-timeout-ms N] [--store <dir>]");
+            eprintln!("                 stdio request loop by default; --listen starts the concurrent TCP front end");
+            eprintln!("  store:         <stats|gc|flush> --store <dir>   offline persistent-store maintenance");
             eprintln!("  global flags:  --workers <N> (0 = auto) | --cache-cap <N> (estimate-cache entries)");
             eprintln!("                 --calib-file <path> (install a saved calibration model) | --calibrate");
             eprintln!("                 --dispatch <threaded|node-table> (AIDG evaluator dispatch; default threaded)");
@@ -800,6 +800,105 @@ fn dse_plasticine(args: &[String], g: &GlobalOpts) -> Result<()> {
         ]);
     }
     println!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// `acadl-perf serve [--listen <addr>] [--max-clients N]
+/// [--read-timeout-ms N] [--store <dir>]`: the stdio request loop by
+/// default, or the concurrent TCP front end with `--listen` (port 0 picks
+/// a free port; the resolved address is printed to stderr as
+/// `serving on <addr>`).
+fn serve_cmd(args: &[String], g: &GlobalOpts) -> Result<()> {
+    let mut opts = ServeOptions { workers: g.workers, ..Default::default() };
+    let mut listen: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--listen" => {
+                anyhow::ensure!(i + 1 < args.len(), "--listen needs an address (host:port)");
+                listen = Some(args[i + 1].clone());
+                i += 2;
+            }
+            "--max-clients" => {
+                anyhow::ensure!(i + 1 < args.len(), "--max-clients needs a value");
+                opts.max_clients = parse_count_flag("--max-clients", &args[i + 1], 100_000)?;
+                i += 2;
+            }
+            "--read-timeout-ms" => {
+                anyhow::ensure!(i + 1 < args.len(), "--read-timeout-ms needs a value");
+                let ms =
+                    parse_count_flag("--read-timeout-ms", &args[i + 1], u64::from(u32::MAX))?;
+                opts.read_timeout =
+                    (ms > 0).then(|| std::time::Duration::from_millis(ms as u64));
+                i += 2;
+            }
+            "--store" => {
+                anyhow::ensure!(i + 1 < args.len(), "--store needs a directory");
+                opts.store = Some(std::path::PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            other => anyhow::bail!("unknown serve flag {other:?}"),
+        }
+    }
+    match listen {
+        Some(addr) => {
+            let srv = coordinator::NetServer::bind(&addr, opts)?;
+            eprintln!("serving on {}", srv.local_addr());
+            let out = srv.run()?;
+            eprintln!("served {} sessions ({} requests)", out.sessions, out.requests);
+            Ok(())
+        }
+        None => {
+            let stdin = std::io::stdin();
+            let n = coordinator::serve_with(stdin.lock(), std::io::stdout(), &opts)?;
+            eprintln!("served {n} requests");
+            Ok(())
+        }
+    }
+}
+
+/// `acadl-perf store <stats|gc|flush> --store <dir>`: inspect or maintain
+/// a persistent estimate store without starting a server.
+fn store_cmd(args: &[String]) -> Result<()> {
+    anyhow::ensure!(!args.is_empty(), "store <stats|gc|flush> --store <dir>");
+    let sub = args[0].as_str();
+    let mut dir: Option<String> = None;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--store" => {
+                anyhow::ensure!(i + 1 < args.len(), "--store needs a directory");
+                dir = Some(args[i + 1].clone());
+                i += 2;
+            }
+            other => anyhow::bail!("unknown store flag {other:?}"),
+        }
+    }
+    let dir = dir.context("store needs --store <dir>")?;
+    let store = acadl_perf::engine::EstimateStore::open(std::path::Path::new(&dir))?;
+    match sub {
+        "stats" => {
+            let s = store.stats();
+            println!(
+                "store dir={} entries={} frontiers={} dirty={} segments={} gen={}",
+                store.dir().display(),
+                s.entries,
+                s.frontiers,
+                s.dirty,
+                s.segments,
+                s.open_gen,
+            );
+        }
+        "gc" => {
+            let o = store.gc()?;
+            println!("store gc kept={} dropped={}", o.kept, o.dropped);
+        }
+        "flush" => {
+            let n = store.flush()?;
+            println!("store flushed records={n}");
+        }
+        other => anyhow::bail!("unknown store subcommand {other:?} (stats|gc|flush)"),
+    }
     Ok(())
 }
 

@@ -85,6 +85,21 @@ pub mod counters {
     pub static CALIB_SAMPLES: Counter = Counter::new("calib.samples");
     /// Layer estimates stamped with calibrated cycles + CI bounds.
     pub static CALIB_LAYERS: Counter = Counter::new("calib.layers");
+    /// Persistent-store lookups that found a record on disk.
+    pub static STORE_HITS: Counter = Counter::new("store.hits");
+    /// Persistent-store lookups that missed.
+    pub static STORE_MISSES: Counter = Counter::new("store.misses");
+    /// New records accepted by the persistent store (pending until flush).
+    pub static STORE_WRITES: Counter = Counter::new("store.writes");
+    /// Records dropped by `store gc` as unreferenced this generation.
+    pub static STORE_GC_DROPPED: Counter = Counter::new("store.gc_dropped");
+    /// Serve sessions accepted (stdio runs and TCP connections).
+    pub static SERVE_SESSIONS: Counter = Counter::new("serve.sessions");
+    /// TCP connections refused with a `busy` line at the client cap.
+    pub static SERVE_BUSY_REJECTS: Counter = Counter::new("serve.busy_rejects");
+    /// Requests that parked on another thread's in-flight evaluation of
+    /// the same kernel instead of evaluating it themselves.
+    pub static SERVE_INFLIGHT_WAITS: Counter = Counter::new("serve.inflight_waits");
 
     /// One layer estimation's evaluator accounting, in one call.
     pub fn note_aidg(nodes: u64, iterations: u64) {
@@ -134,6 +149,13 @@ pub mod counters {
             &AIDG_DYN_MEMO_MISSES,
             &CALIB_SAMPLES,
             &CALIB_LAYERS,
+            &STORE_HITS,
+            &STORE_MISSES,
+            &STORE_WRITES,
+            &STORE_GC_DROPPED,
+            &SERVE_SESSIONS,
+            &SERVE_BUSY_REJECTS,
+            &SERVE_INFLIGHT_WAITS,
         ]
         .iter()
         .map(|c| (c.name(), c.get()))
@@ -348,7 +370,7 @@ mod tests {
         counters::ENGINE_REQUESTS.add(1);
         assert_eq!(counters::ENGINE_KERNELS_TOTAL.get(), before + 10);
         let snap = counters::snapshot();
-        assert_eq!(snap.len(), 20);
+        assert_eq!(snap.len(), 27);
         assert!(snap.iter().any(|(n, _)| *n == "engine.kernels.total"));
         assert!(snap.iter().any(|(n, _)| *n == "aidg.batch.lanes"));
         assert!(snap.iter().any(|(n, _)| *n == "aidg.dispatch.threaded"));
@@ -361,6 +383,13 @@ mod tests {
         assert!(snap.iter().any(|(n, _)| *n == "dse.points.estimated"));
         assert!(snap.iter().any(|(n, _)| *n == "calib.samples"));
         assert!(snap.iter().any(|(n, _)| *n == "calib.layers"));
+        assert!(snap.iter().any(|(n, _)| *n == "store.hits"));
+        assert!(snap.iter().any(|(n, _)| *n == "store.misses"));
+        assert!(snap.iter().any(|(n, _)| *n == "store.writes"));
+        assert!(snap.iter().any(|(n, _)| *n == "store.gc_dropped"));
+        assert!(snap.iter().any(|(n, _)| *n == "serve.sessions"));
+        assert!(snap.iter().any(|(n, _)| *n == "serve.busy_rejects"));
+        assert!(snap.iter().any(|(n, _)| *n == "serve.inflight_waits"));
     }
 
     #[test]

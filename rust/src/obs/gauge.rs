@@ -70,6 +70,10 @@ pub static POOL_QUEUE_DEPTH: Gauge = Gauge::new("pool.queue_depth");
 /// Jobs currently executing on pool workers.
 pub static POOL_INFLIGHT: Gauge = Gauge::new("pool.inflight");
 
+/// TCP serve sessions currently connected (see
+/// [`crate::coordinator::net`]).
+pub static SERVE_ACTIVE_SESSIONS: Gauge = Gauge::new("serve.active_sessions");
+
 /// Shard count mirrored from the engine's `EstimateCache`.
 pub const CACHE_SHARDS: usize = 16;
 

@@ -167,6 +167,10 @@ pub fn snapshot() -> ObsSnapshot {
     let mut gauges: Vec<(String, i64)> = vec![
         (gauge::POOL_QUEUE_DEPTH.name().to_string(), gauge::POOL_QUEUE_DEPTH.get()),
         (gauge::POOL_INFLIGHT.name().to_string(), gauge::POOL_INFLIGHT.get()),
+        (
+            gauge::SERVE_ACTIVE_SESSIONS.name().to_string(),
+            gauge::SERVE_ACTIVE_SESSIONS.get(),
+        ),
     ];
     let shards = gauge::cache_shards_snapshot();
     gauges.push(("cache.entries".to_string(), shards.iter().sum()));

@@ -124,6 +124,43 @@ fn performance_doc_covers_threaded_dispatch() {
 }
 
 #[test]
+fn performance_doc_covers_the_store_and_single_flight() {
+    // the persistence layer's operator guide: the chapter heading, the
+    // on-disk format anchor, and the dedup contract must stay documented
+    let doc = std::fs::read_to_string("docs/performance.md").unwrap();
+    assert!(
+        doc.contains("## The persistent store & single-flight dedup"),
+        "docs/performance.md must keep the store chapter"
+    );
+    for needle in ["ACPSTOR1", "--store", "store gc", "single-flight", "serve.inflight_waits"] {
+        assert!(doc.contains(needle), "docs/performance.md must mention {needle}");
+    }
+}
+
+#[test]
+fn serve_doc_covers_the_network_front_end() {
+    // the TCP mode's protocol additions: flags, overload/idle replies,
+    // the store commands, and the sweep resume token
+    let doc = std::fs::read_to_string("docs/serve-protocol.md").unwrap();
+    assert!(
+        doc.contains("## Network serve"),
+        "docs/serve-protocol.md must keep the network-serve chapter"
+    );
+    for needle in [
+        "--listen",
+        "--max-clients",
+        "--read-timeout-ms",
+        "`busy`",
+        "`timeout`",
+        "store stats",
+        "resumed=",
+        "shutdown",
+    ] {
+        assert!(doc.contains(needle), "docs/serve-protocol.md must mention {needle}");
+    }
+}
+
+#[test]
 fn every_docs_markdown_file_is_checked() {
     // a chapter added to docs/ must also be added to DOC_FILES above
     for entry in std::fs::read_dir("docs").expect("docs/ directory must exist") {

@@ -1,0 +1,229 @@
+//! End-to-end coverage for the concurrent TCP front end and the
+//! persistent estimate store (ISSUE 10 acceptance):
+//!
+//! - N concurrent loopback clients get per-session transcripts
+//!   byte-identical to the serial stdio loop (runtimes masked);
+//! - a cold engine with a warm store serves TC-ResNet8 against every
+//!   shipped `arch/*.toml` with zero kernel evaluations and identical
+//!   cycles (calibration off stays bit-identical through the store path);
+//! - a repeated `sweep` resumes from the persisted Pareto frontier;
+//! - `shutdown` from a client drains the whole listener.
+//!
+//! Everything here shares the process-global engine, so tests serialize
+//! on a file-local lock and detach the store before returning.
+
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use acadl_perf::coordinator::{serve, serve_with, NetServer, ServeOptions};
+use acadl_perf::engine::EstimationEngine;
+
+/// The four shipped paper-architecture descriptions.
+const ARCH_FILES: [&str; 4] = [
+    "arch/systolic_16x16.toml",
+    "arch/ultratrail_8x8.toml",
+    "arch/gemmini_16.toml",
+    "arch/plasticine_3x6.toml",
+];
+
+/// Serializes tests in this binary: they all mutate the global engine's
+/// store attachment and cache.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fresh per-test scratch directory (removed first in case a previous
+/// run of the same test leaked one).
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("acadl-serve-store-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Mask the only nondeterministic tokens in protocol replies (wall-clock
+/// runtimes) so transcripts compare byte-identically.
+fn mask(line: &str) -> String {
+    line.split_whitespace()
+        .map(|t| {
+            if t.starts_with("runtime_ms=") {
+                "runtime_ms=X"
+            } else if t.starts_with("wall_ms=") {
+                "wall_ms=X"
+            } else {
+                t
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// The value of a `key=`-prefixed token in a reply line.
+fn token<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .find_map(|t| t.strip_prefix(key))
+        .unwrap_or_else(|| panic!("no {key} in {line:?}"))
+}
+
+#[test]
+fn concurrent_tcp_clients_match_the_serial_stdio_loop() {
+    let _lock = lock();
+    // estimates, a per-session inline-arch error (isolation), a protocol
+    // error — everything deterministic once runtimes are masked
+    const TRANSCRIPT: &str = "estimate ultratrail tc_resnet8\n\
+                              estimate systolic:2x2 tc_resnet8\n\
+                              estimate gemmini tc_resnet8\n\
+                              estimate @nope tc_resnet8\n\
+                              bogus\n\
+                              quit\n";
+    // warm the global cache with the same requests first: the reference
+    // serial run and every TCP client then see identical cache_hits= /
+    // deduped= accounting (a cold reference would differ from the
+    // clients, which run after it warmed the cache)
+    serve(Cursor::new(TRANSCRIPT), &mut Vec::new()).unwrap();
+    let mut serial = Vec::new();
+    serve(Cursor::new(TRANSCRIPT), &mut serial).unwrap();
+    let serial: Vec<String> =
+        String::from_utf8(serial).unwrap().lines().map(mask).collect();
+    assert_eq!(serial.len(), 5, "{serial:?}");
+
+    let srv = NetServer::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = srv.local_addr();
+    let handle = srv.shutdown_handle();
+    let server = std::thread::spawn(move || srv.run().unwrap());
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let conn = TcpStream::connect(addr).unwrap();
+                let mut writer = conn.try_clone().unwrap();
+                let reader = BufReader::new(conn);
+                writer.write_all(TRANSCRIPT.as_bytes()).unwrap();
+                reader.lines().map(|l| mask(&l.unwrap())).collect::<Vec<String>>()
+            })
+        })
+        .collect();
+    for client in clients {
+        assert_eq!(client.join().unwrap(), serial, "TCP transcript diverged from stdio");
+    }
+    handle.shutdown();
+    let out = server.join().unwrap();
+    assert_eq!(out.sessions, 4);
+    assert_eq!(out.requests, 4 * serial.len());
+}
+
+#[test]
+fn warm_store_serves_every_described_arch_with_zero_evaluations() {
+    let _lock = lock();
+    let dir = scratch("warm");
+    let opts = ServeOptions { store: Some(dir.clone()), ..Default::default() };
+    let transcript: String = ARCH_FILES
+        .iter()
+        .map(|a| format!("estimate file:{a} tc_resnet8\n"))
+        .chain(["quit\n".to_string()])
+        .collect();
+
+    let mut cold = Vec::new();
+    serve_with(Cursor::new(&transcript), &mut cold, &opts).unwrap();
+    let cold = String::from_utf8(cold).unwrap();
+
+    // a process restart in miniature: drop the store handle and every
+    // in-memory cache entry, then reopen the same directory
+    EstimationEngine::global().attach_store(None);
+    EstimationEngine::global().clear_cache();
+    let mut warm = Vec::new();
+    serve_with(Cursor::new(&transcript), &mut warm, &opts).unwrap();
+    EstimationEngine::global().attach_store(None);
+    let warm = String::from_utf8(warm).unwrap();
+
+    for (c, w) in cold.lines().zip(warm.lines()) {
+        assert!(c.contains("cycles="), "cold reply {c:?}");
+        // bit-identical through the store path (calibration off)
+        assert_eq!(token(c, "cycles="), token(w, "cycles="), "{c} vs {w}");
+        assert_eq!(token(c, "evaluated_iters="), token(w, "evaluated_iters="));
+        // zero kernel evaluations: every slot a (store-promoted) cache hit
+        // or an intra-request dedup
+        let kernels: u64 = token(w, "kernels=").parse().unwrap();
+        let hits: u64 = token(w, "cache_hits=").parse().unwrap();
+        let deduped: u64 = token(w, "deduped=").parse().unwrap();
+        assert_eq!(hits + deduped, kernels, "warm run evaluated kernels: {w}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn repeated_sweep_resumes_the_frontier_from_the_store() {
+    let _lock = lock();
+    let dir = scratch("frontier");
+    let opts = ServeOptions { store: Some(dir.clone()), ..Default::default() };
+    let transcript = "sweep file:arch/ultratrail_8x8.toml tc_resnet8\nquit\n";
+
+    let mut first = Vec::new();
+    serve_with(Cursor::new(transcript), &mut first, &opts).unwrap();
+    EstimationEngine::global().attach_store(None);
+    let first = String::from_utf8(first).unwrap();
+    let first_line = first.lines().next().unwrap();
+    assert_eq!(token(first_line, "resumed="), "0", "{first_line}");
+    let frontier: u64 = token(first_line, "frontier=").parse().unwrap();
+    assert!(frontier >= 1, "{first_line}");
+
+    let mut second = Vec::new();
+    serve_with(Cursor::new(transcript), &mut second, &opts).unwrap();
+    EstimationEngine::global().attach_store(None);
+    let second = String::from_utf8(second).unwrap();
+    let second_line = second.lines().next().unwrap();
+    let resumed: u64 = token(second_line, "resumed=").parse().unwrap();
+    assert!(resumed >= 1, "prior frontier not resumed: {second_line}");
+    // the same sweep merged with its own persisted frontier must agree
+    assert_eq!(token(first_line, "frontier="), token(second_line, "frontier="));
+    assert_eq!(token(first_line, "best="), token(second_line, "best="));
+    assert_eq!(token(first_line, "best_cycles="), token(second_line, "best_cycles="));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_commands_work_over_an_attached_session() {
+    let _lock = lock();
+    let dir = scratch("cmds");
+    let opts = ServeOptions { store: Some(dir.clone()), ..Default::default() };
+    let transcript = "estimate ultratrail tc_resnet8\nstore stats\nstore flush\nstore gc\nquit\n";
+    let mut out = Vec::new();
+    serve_with(Cursor::new(transcript), &mut out, &opts).unwrap();
+    EstimationEngine::global().attach_store(None);
+    let out = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = out.lines().collect();
+    assert!(lines[0].contains("cycles="), "{}", lines[0]);
+    assert!(lines[1].starts_with("store dir="), "{}", lines[1]);
+    let entries: u64 = token(lines[1], "entries=").parse().unwrap();
+    assert!(entries >= 1, "{}", lines[1]);
+    assert!(lines[2].starts_with("store flushed records="), "{}", lines[2]);
+    // everything was referenced this generation: gc must keep it all
+    let kept: u64 = token(lines[3], "kept=").parse().unwrap();
+    assert_eq!(token(lines[3], "dropped="), "0", "{}", lines[3]);
+    assert_eq!(kept, entries, "{}", lines[3]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn client_shutdown_drains_the_whole_listener() {
+    let _lock = lock();
+    let srv = NetServer::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = srv.local_addr();
+    let server = std::thread::spawn(move || srv.run().unwrap());
+    let conn = TcpStream::connect(addr).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    let mut reader = BufReader::new(conn);
+    writer.write_all(b"estimate ultratrail tc_resnet8\nshutdown\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("cycles="), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line, "shutting down\n");
+    // no ShutdownHandle needed: the client's own `shutdown` stops run()
+    let out = server.join().unwrap();
+    assert_eq!(out.sessions, 1);
+    assert_eq!(out.requests, 2);
+}
